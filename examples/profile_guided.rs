@@ -1,0 +1,54 @@
+//! Profile-guided optimization (§3.2, §5.2, §6.3): the analysis agent
+//! turns raw profiling artifacts into one recommendation per iteration.
+//!
+//! Shows both profiler frontends on the same workload:
+//! - CUDA: nsys-style CSV reports (programmatic), and
+//! - Metal: Xcode-style rendered screenshots that the agent must
+//!   screen-scrape (the paper automated Xcode with cliclick).
+//!
+//! ```bash
+//! cargo run --release --example profile_guided
+//! ```
+
+use kforge::agents::analysis::AnalysisAgent;
+use kforge::perfsim::{lower, simulate};
+use kforge::platform::{cuda, metal, PlatformKind};
+use kforge::profiler::{nsys, xcode, Profile};
+use kforge::sched::Schedule;
+use kforge::util::rng::Pcg;
+use kforge::workloads::Suite;
+
+fn main() -> anyhow::Result<()> {
+    let suite = Suite::full();
+    let problem = suite.get("l3_squeezenet_fire").unwrap();
+    let naive = Schedule::naive();
+    let mut rng = Pcg::seed(7);
+
+    // ---- CUDA: programmatic CSV path -----------------------------------
+    let h100 = cuda::h100();
+    let plan = lower::lower(&problem.perf_graph, &naive);
+    let sim = simulate(&h100, &plan, &mut rng, 100, 10);
+    let profile = Profile::from_sim(&problem.id, h100.name, &sim);
+    println!("================ CUDA: nsys stats CSV reports ================\n");
+    println!("{}", nsys::full_report(&profile));
+    let agent = AnalysisAgent::new(PlatformKind::Cuda);
+    println!(
+        "analysis agent recommendation: {:?}\n",
+        agent.recommend_cuda(&profile, &naive)
+    );
+
+    // ---- Metal: GUI screenshot path -------------------------------------
+    let m4 = metal::m4_max();
+    let mplan = lower::lower(&problem.perf_graph, &naive);
+    let msim = simulate(&m4, &mplan, &mut rng, 100, 10);
+    let mprofile = Profile::from_sim(&problem.id, m4.name, &msim);
+    println!("============ Metal: Xcode Instruments screenshots ============\n");
+    for screen in xcode::capture_screens(&mprofile) {
+        println!("{screen}");
+    }
+    let magent = AnalysisAgent::new(PlatformKind::Metal);
+    let rec = magent.recommend_metal(&xcode::capture_screens(&mprofile), &naive);
+    println!("analysis agent recommendation (from screenshots): {rec:?}");
+    println!("\nrecommendation text fed to the generation agent:\n  {}", rec.text());
+    Ok(())
+}

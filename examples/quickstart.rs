@@ -1,0 +1,85 @@
+//! Quickstart: synthesize, verify and optimize one kernel end-to-end.
+//!
+//! Runs the full KForge loop (generation agent → verification →
+//! performance-analysis agent → refinement) for one KernelBench-KIR
+//! problem on the simulated H100, printing every execution state and
+//! the final speedup over PyTorch-eager.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use kforge::agents::analysis::AnalysisAgent;
+use kforge::agents::persona::by_name;
+use kforge::agents::GenerationAgent;
+use kforge::baseline::eager;
+use kforge::platform::{cuda, PlatformKind};
+use kforge::profiler::Profile;
+use kforge::util::rng::Pcg;
+use kforge::verify::{self, ExecState};
+use kforge::workloads::Suite;
+
+fn main() -> anyhow::Result<()> {
+    let suite = Suite::full();
+    let problem = suite.get("l2_gemm_bias_swish_0").expect("problem exists");
+    let spec = cuda::h100();
+    let persona = by_name("openai-gpt-5").unwrap();
+    let agent = GenerationAgent::new(persona, PlatformKind::Cuda);
+    let analyst = AnalysisAgent::new(PlatformKind::Cuda);
+    let mut rng = Pcg::seed(2024);
+
+    println!("== problem ==\n{}", problem.eval_graph.render());
+    let baseline = eager::measure(&problem.perf_graph, &spec, &mut rng);
+    println!("eager baseline: {:.3} ms\n", baseline.measured_s * 1e3);
+
+    let mut current = None;
+    let mut last_error: Option<String> = None;
+    let mut last_rec = None;
+    let mut best: Option<f64> = None;
+    for iter in 0..5 {
+        let candidate = match (&current, &last_error) {
+            (None, _) => agent.synthesize(problem, None, &mut rng),
+            (Some(prev), Some(err)) => agent.refine(problem, prev, Some(err), None, &mut rng),
+            (Some(prev), None) => agent.refine(problem, prev, None, last_rec.as_ref(), &mut rng),
+        };
+        let out = verify::verify(&spec, problem, candidate.as_ref(), &mut rng);
+        println!("iteration {iter}: {}", out.state.label());
+        match out.state {
+            ExecState::Correct => {
+                let sim = out.sim.unwrap();
+                let speedup = baseline.measured_s / sim.measured_s;
+                println!(
+                    "  candidate: {:.3} ms ({speedup:.2}x vs eager), {} kernel launch(es)",
+                    sim.measured_s * 1e3,
+                    sim.timeline.len()
+                );
+                if best.map(|b| sim.measured_s < b).unwrap_or(true) {
+                    best = Some(sim.measured_s);
+                }
+                let profile = Profile::from_sim(&problem.id, spec.name, &sim);
+                let rec = analyst.recommend(&spec, &profile, &candidate.as_ref().unwrap().schedule);
+                println!("  analysis agent: {rec:?}");
+                last_rec = Some(rec);
+                last_error = None;
+            }
+            ref failed => {
+                println!("  error: {}", failed.error_text().unwrap_or("?"));
+                last_error = failed.error_text().map(String::from);
+            }
+        }
+        if candidate.is_some() {
+            current = candidate;
+        }
+    }
+    if let Some(b) = best {
+        println!(
+            "\nfinal: best candidate {:.3} ms — {:.2}x over eager",
+            b * 1e3,
+            baseline.measured_s / b
+        );
+        println!("\n== final program ==\n{}", current.unwrap().source_listing);
+    } else {
+        println!("\nno correct candidate found in 5 iterations");
+    }
+    Ok(())
+}

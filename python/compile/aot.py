@@ -1,0 +1,72 @@
+"""AOT driver: lower every (workload, variant, batch) to HLO text.
+
+Writes ``artifacts/<workload>__<variant>__b<batch>.hlo.txt`` plus a
+``manifest.json`` the rust runtime's registry consumes (artifact path,
+input shapes/dtypes, output arity, which variant is the reference).
+
+Run once at build time (``make artifacts``); python never appears on the
+rust request path.  Interchange is HLO *text*, not ``.serialize()`` —
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit ids).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+from . import model
+
+
+def _spec_json(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def build(out_dir: str, only: list[str] | None = None, batches: dict | None = None) -> dict:
+    """Lower the registry and return the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    batches = batches or model.DEFAULT_BATCHES
+    for name, (variants, spec_fn, ref_variant) in sorted(model.WORKLOADS.items()):
+        if only and name not in only:
+            continue
+        for batch in batches.get(name, [16]):
+            specs = spec_fn(batch)
+            for vname, fn in sorted(variants.items()):
+                key = f"{name}__{vname}__b{batch}"
+                path = os.path.join(out_dir, f"{key}.hlo.txt")
+                text = model.lower_to_hlo_text(fn, specs)
+                with open(path, "w") as f:
+                    f.write(text)
+                entries.append(
+                    {
+                        "key": key,
+                        "workload": name,
+                        "variant": vname,
+                        "batch": batch,
+                        "path": os.path.basename(path),
+                        "inputs": [_spec_json(s) for s in specs],
+                        "is_reference": vname == ref_variant,
+                        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                    }
+                )
+                print(f"  lowered {key}: {len(text)} chars", file=sys.stderr)
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--only", nargs="*", default=None, help="limit to workloads")
+    args = ap.parse_args()
+    manifest = build(args.out, only=args.only)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered AOT into artifacts/).
+
+Every kernel takes a *schedule* (block sizes, elements-per-thread,
+fast-math) mirroring the synthesis space the rust coordinator searches.
+"""
+
+from . import attention, conv, elementwise, layernorm, matmul, ref, softmax  # noqa: F401

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: FlashAttention-style fused attention.
+
+The §1 motivation of the paper: online softmax + tiled attention, with
+the KV sequence streamed through VMEM in chunks while a block of query
+rows stays resident.  Running max ``m``, denominator ``l`` and output
+accumulator ``acc`` are rescaled per chunk — the logits matrix is never
+materialized in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, nk: int, scale: float):
+    bq = q_ref.shape[0]
+    d = q_ref.shape[1]       # may include the +1 masking dim
+    dv = v_ref.shape[1]      # plain head dim
+    q = q_ref[...] * scale
+
+    def body(c, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[...], (c * bk, 0), (bk, d))
+        v = jax.lax.dynamic_slice(v_ref[...], (c * bk, 0), (bk, dv))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((bq, 1), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
+    a0 = jnp.zeros((bq, dv), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    bq: int = 16,
+    bk: int = 64,
+) -> jax.Array:
+    """Fused attention over [s, d] q/k/v.  bq query rows per grid step,
+    KV streamed in bk chunks.  Ragged s padded with -inf-masked keys."""
+    s, d = q.shape
+    if k.shape != (s, d) or v.shape != (s, d):
+        raise ValueError("q, k, v must share [s, d]")
+    scale = 1.0 / float(d) ** 0.5
+    bq_ = min(bq, s)
+    bk_ = min(bk, s)
+    pq = (-s) % bq_
+    pk = (-s) % bk_
+    qp = jnp.pad(q, ((0, pq), (0, 0)))
+    # Pad keys so padded logits are -inf -> zero weight.  Padding K with a
+    # huge negative constant on a fresh row only works via the logits, so
+    # instead pad K/V with zeros and mask by padding Q rows only; for keys
+    # we append rows whose dot with any q is 0 and then subtract inf mask:
+    kp = jnp.pad(k, ((0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, pk), (0, 0)))
+    if pk:
+        # Mask padded keys by forcing their logits to -inf: append a bias
+        # column trick is unavailable in the simple kernel, so instead we
+        # fold the mask into K by scaling Q against a sentinel: simplest
+        # exact approach — compute with padded keys then renormalize is
+        # wrong; we instead require the caller shape or do mask via V=0
+        # and logit = 0 which *does* perturb softmax.  So: pad keys with
+        # -1e30 in an extra feature dim paired with +1 in q.
+        ones = jnp.concatenate([jnp.ones((s, 1), q.dtype), jnp.zeros((pq, 1), q.dtype)])
+        neg = jnp.concatenate(
+            [jnp.zeros((s, 1), q.dtype), jnp.full((pk, 1), -1e30 * float(d) ** 0.5, q.dtype)]
+        )
+        qp = jnp.concatenate([qp, ones], axis=1)
+        kp = jnp.concatenate([kp, neg], axis=1)
+        scale_adj = scale  # extra dim contributes 0 or -1e30 pre-scale
+    else:
+        scale_adj = scale
+    sp = qp.shape[0]
+    dp = qp.shape[1]
+    nk = kp.shape[0] // bk_
+    kern = functools.partial(_flash_kernel, bk=bk_, nk=nk, scale=scale_adj)
+    out = pl.pallas_call(
+        kern,
+        grid=(sp // bq_,),
+        in_specs=[
+            pl.BlockSpec((bq_, dp), lambda i: (i, 0)),
+            pl.BlockSpec((kp.shape[0], dp), lambda i: (0, 0)),
+            pl.BlockSpec((vp.shape[0], v.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq_, v.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, v.shape[1]), q.dtype),
+        interpret=True,
+    )(qp, kp, vp)
+    return out[:s]

@@ -1,0 +1,112 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are the ground truth the pytest suite checks each kernel against
+(``assert_allclose``).  They intentionally use the most direct jnp
+formulation — no tiling, no tricks — so that a mismatch always indicts
+the kernel, not the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Plain dense matmul, f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def swish(x: jax.Array) -> jax.Array:
+    """Swish / SiLU: x * sigmoid(x)  (paper §7.2)."""
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximated GELU (matches the kernel's formulation)."""
+    return (
+        0.5
+        * x
+        * (1.0 + jnp.tanh(jnp.sqrt(2.0 / jnp.pi) * (x + 0.044715 * x**3)))
+    )
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def sigmoid(x: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(x)
+
+
+def bias_act(x: jax.Array, b: jax.Array, act: str) -> jax.Array:
+    """Fused bias-add + activation oracle."""
+    y = x + b
+    if act == "relu":
+        return relu(y)
+    if act == "swish":
+        return swish(y)
+    if act == "gelu":
+        return gelu(y)
+    if act == "none":
+        return y
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    """Numerically stable softmax along the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, scale: float | None = None) -> jax.Array:
+    """Single-head scaled dot-product attention.  q,k,v: [s, d]."""
+    if scale is None:
+        scale = 1.0 / float(q.shape[-1]) ** 0.5
+    logits = jnp.matmul(q, k.T) * scale
+    return jnp.matmul(softmax(logits), v)
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 0) -> jax.Array:
+    """NCHW conv2d with OIHW weights, via lax.conv (oracle)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1, padding: int = 0) -> jax.Array:
+    """Unfold NCHW input into [N*OH*OW, C*KH*KW] patches (oracle for the
+    im2col transform feeding the matmul kernel)."""
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                xp[:, :, i : i + stride * oh : stride, j : j + stride * ow : stride]
+            )
+    # [KH*KW, N, C, OH, OW] -> [N, OH, OW, C, KH*KW] -> [N*OH*OW, C*KH*KW]
+    st = jnp.stack(patches, axis=0)
+    st = st.transpose(1, 3, 4, 2, 0)
+    return st.reshape(n * oh * ow, c * kh * kw)
+
+
+def swish_chain(x: jax.Array, n: int = 1) -> jax.Array:
+    """n successive swish applications (fused-chain oracle)."""
+    for _ in range(n):
+        x = swish(x)
+    return x

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: online softmax (Milakov & Gimelshein 2018).
+
+The paper's FlashAttention discussion (§1) rests on the online-softmax
+trick: a single pass over the row maintains a running maximum ``m`` and
+a running rescaled denominator ``d`` so the row never needs to be
+materialized twice.  Each grid step owns a block of rows in VMEM and
+streams the columns in ``bc``-wide chunks with a ``fori_loop`` — the
+same schedule FlashAttention expresses with warps, expressed here with
+in-kernel chunking over the resident block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _online_softmax_kernel(x_ref, o_ref, *, bc: int, nc: int):
+    """Rows resident; stream columns in nc chunks of width bc."""
+    rows = x_ref.shape[0]
+
+    def body(c, carry):
+        m, d = carry
+        chunk = jax.lax.dynamic_slice(x_ref[...], (0, c * bc), (rows, bc))
+        m_new = jnp.maximum(m, jnp.max(chunk, axis=-1, keepdims=True))
+        d = d * jnp.exp(m - m_new) + jnp.sum(jnp.exp(chunk - m_new), axis=-1, keepdims=True)
+        return m_new, d
+
+    m0 = jnp.full((rows, 1), -jnp.inf, dtype=x_ref.dtype)
+    d0 = jnp.zeros((rows, 1), dtype=x_ref.dtype)
+    m, d = jax.lax.fori_loop(0, nc, body, (m0, d0))
+    o_ref[...] = jnp.exp(x_ref[...] - m) / d
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bc"))
+def softmax(x: jax.Array, *, br: int = 8, bc: int = 128) -> jax.Array:
+    """Online softmax along the last axis of a 2-D array [m, n].
+
+    ``br`` rows per grid step; columns streamed in ``bc`` chunks.  Ragged
+    n is padded with -inf (exact: exp(-inf)=0 contributes nothing).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"softmax kernel expects 2-D input, got {x.shape}")
+    m, n = x.shape
+    br_ = min(br, m)
+    bc_ = min(bc, n)
+    pr = (-m) % br_
+    pc = (-n) % bc_
+    xp = jnp.pad(x, ((0, pr), (0, pc)), constant_values=-jnp.inf)
+    nc = xp.shape[1] // bc_
+    kern = functools.partial(_online_softmax_kernel, bc=bc_, nc=nc)
+    out = pl.pallas_call(
+        kern,
+        grid=(xp.shape[0] // br_,),
+        in_specs=[pl.BlockSpec((br_, xp.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br_, xp.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:m, :n]

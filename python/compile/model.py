@@ -1,0 +1,418 @@
+"""L2: JAX workload graphs, mirroring the KernelBench subset that the
+rust coordinator executes for real through PJRT.
+
+Each *workload* is a pure jax function built from the L1 Pallas kernels;
+each carries named *variants* — points in the synthesis schedule space
+(naive / fused / tuned) — so the coordinator can load the artifact that
+matches a synthesized program's schedule and time the real execution.
+
+Variant naming convention: ``<workload>__<variant>__b<batch>``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import conv as conv_k
+from .kernels import elementwise as ew_k
+from .kernels import layernorm as ln_k
+from .kernels import matmul as mm_k
+from .kernels import ref
+from .kernels import softmax as sm_k
+
+
+# ---------------------------------------------------------------------------
+# Level-1-style workloads (single primitives)
+# ---------------------------------------------------------------------------
+
+def swish_naive(x):
+    """Unfused swish: the eager-mode analog (sigmoid then multiply)."""
+    return (x * jax.nn.sigmoid(x),)
+
+
+def swish_ept1(x):
+    return (ew_k.swish(x, ept=1),)
+
+
+def swish_ept8(x):
+    """§7.2 winning schedule: 8 elements per thread + fast-math exp."""
+    return (ew_k.swish(x, ept=8, fast_math=True),)
+
+
+def matmul_naive(x, y):
+    return (ref.matmul(x, y),)
+
+
+def matmul_tiled_64(x, y):
+    return (mm_k.matmul(x, y, bm=64, bn=64, bk=64),)
+
+
+def matmul_tiled_128(x, y):
+    return (mm_k.matmul(x, y, bm=128, bn=128, bk=128),)
+
+
+def softmax_naive(x):
+    return (ref.softmax(x),)
+
+
+def softmax_online(x):
+    return (sm_k.softmax(x, br=8, bc=128),)
+
+
+def layernorm_tuned(x, g, b):
+    return (ln_k.layernorm(x, g, b, br=8),)
+
+
+def layernorm_naive(x, g, b):
+    return (ref.layernorm(x, g, b),)
+
+
+# ---------------------------------------------------------------------------
+# Level-2-style workloads (fusable sequences)
+# ---------------------------------------------------------------------------
+
+def gemm_bias_relu_naive(x, w, b):
+    """Three separate ops — three HBM round trips."""
+    y = ref.matmul(x, w)
+    y = y + b
+    return (jnp.maximum(y, 0.0),)
+
+
+def gemm_bias_relu_fused(x, w, b):
+    """Single fused kernel with epilogue."""
+    return (mm_k.matmul_bias_act(x, w, b, act="relu", bm=64, bn=64, bk=64),)
+
+
+def gemm_bias_swish_fused(x, w, b):
+    return (mm_k.matmul_bias_act(x, w, b, act="swish", bm=64, bn=64, bk=64),)
+
+
+def mlp_block_naive(x, w1, b1, w2, b2):
+    h = jnp.maximum(ref.matmul(x, w1) + b1, 0.0)
+    return (ref.matmul(h, w2) + b2,)
+
+
+def mlp_block_fused(x, w1, b1, w2, b2):
+    h = mm_k.matmul_bias_act(x, w1, b1, act="relu", bm=64, bn=64, bk=64)
+    return (mm_k.matmul_bias_act(h, w2, b2, act="none", bm=64, bn=64, bk=64),)
+
+
+def reduction_chain_naive(x, w, b):
+    """§7.4 L2-problem-12 analog: linear → sum → max → mean → lse → lse."""
+    y = ref.matmul(x, w) + b  # [m, n]
+    y = jnp.sum(y, axis=1, keepdims=True)
+    y = jnp.max(y, axis=1, keepdims=True)
+    y = jnp.mean(y, axis=1, keepdims=True)
+    y = jax.nn.logsumexp(y, axis=1, keepdims=True)
+    y = jax.nn.logsumexp(y, axis=1, keepdims=True)
+    return (y,)
+
+
+def reduction_chain_reduced(x, w, b):
+    """The model-discovered reduction: collapses to x @ W.sum(1) + b.sum()."""
+    w_sum = jnp.sum(w, axis=1)
+    b_sum = jnp.sum(b)
+    return (mm_k.matvec(x, w_sum, b_sum, bm=64, bk=64),)
+
+
+# ---------------------------------------------------------------------------
+# Level-3-style workloads (architectures)
+# ---------------------------------------------------------------------------
+
+def fire_module_naive(x, ws, bs, we1, be1, we3, be3):
+    """SqueezeNet Fire (§7.1): squeeze 1x1 → expand 1x1 ‖ expand 3x3, eager."""
+    s = jax.nn.relu(ref.conv2d(x, ws) + bs[None, :, None, None])
+    e1 = jax.nn.relu(ref.conv2d(s, we1) + be1[None, :, None, None])
+    e3 = jax.nn.relu(ref.conv2d(s, we3, padding=1) + be3[None, :, None, None])
+    return (jnp.concatenate([e1, e3], axis=1),)
+
+
+def fire_module_tuned(x, ws, bs, we1, be1, we3, be3):
+    """Fire with Pallas im2col-GEMM convs (fused bias+relu epilogues)."""
+
+    def conv_bias_relu(inp, w, b, padding=0):
+        out = conv_k.conv2d_im2col(inp, w, padding=padding, bm=64, bn=64, bk=64)
+        return jax.nn.relu(out + b[None, :, None, None])
+
+    s = conv_bias_relu(x, ws, bs)
+    e1 = conv_bias_relu(s, we1, be1)
+    e3 = conv_bias_relu(s, we3, be3, padding=1)
+    return (jnp.concatenate([e1, e3], axis=1),)
+
+
+def attention_block_naive(q, k, v):
+    """MinGPT-style single-head attention, materialized logits."""
+    return (ref.attention(q, k, v),)
+
+
+def attention_block_flash(q, k, v):
+    """Fused FlashAttention-style kernel."""
+    return (attn_k.attention(q, k, v, bq=16, bk=64),)
+
+
+def transformer_block_naive(x, wq, wk, wv, wo, g1, b1, w1, bb1, w2, bb2, g2, b2):
+    """One MinGPT block: LN → attn → residual → LN → MLP → residual."""
+    h = ref.layernorm(x, g1, b1)
+    q, k, v = ref.matmul(h, wq), ref.matmul(h, wk), ref.matmul(h, wv)
+    a = ref.attention(q, k, v)
+    x = x + ref.matmul(a, wo)
+    h = ref.layernorm(x, g2, b2)
+    h = ref.gelu(ref.matmul(h, w1) + bb1)
+    return (x + ref.matmul(h, w2) + bb2,)
+
+
+def transformer_block_tuned(x, wq, wk, wv, wo, g1, b1, w1, bb1, w2, bb2, g2, b2):
+    """Same block with Pallas kernels: fused LN, flash attention, fused GEMM."""
+    h = ln_k.layernorm(x, g1, b1, br=8)
+    q, k, v = (
+        mm_k.matmul(h, wq, bm=64, bn=64, bk=64),
+        mm_k.matmul(h, wk, bm=64, bn=64, bk=64),
+        mm_k.matmul(h, wv, bm=64, bn=64, bk=64),
+    )
+    a = attn_k.attention(q, k, v, bq=16, bk=64)
+    x = x + mm_k.matmul(a, wo, bm=64, bn=64, bk=64)
+    h = ln_k.layernorm(x, g2, b2, br=8)
+    h = mm_k.matmul_bias_act(h, w1, bb1, act="gelu", bm=64, bn=64, bk=64)
+    return (x + mm_k.matmul_bias_act(h, w2, bb2, act="none", bm=64, bn=64, bk=64),)
+
+
+# ---------------------------------------------------------------------------
+# Backward passes (§9 future work: "program synthesis for both forward
+# and backward passes").  Each *_grad workload returns the gradients of
+# a scalar loss (sum of outputs) w.r.t. every differentiable input, so
+# training-style artifacts flow through the same AOT → PJRT path.
+# ---------------------------------------------------------------------------
+
+def _grad_of(fn, argnums):
+    def loss(*args):
+        (out,) = fn(*args)
+        return jnp.sum(out * out)
+
+    def wrapped(*args):
+        return tuple(jax.grad(loss, argnums=argnums)(*args))
+
+    return wrapped
+
+
+# Pallas interpret-mode kernels do not support reverse-mode AD, so the
+# tuned variants carry custom VJPs — the same pattern real fused kernels
+# use (FlashAttention ships a hand-written backward).  The backward
+# passes themselves call the Pallas matmul kernel where a dense
+# contraction appears, so gradients also exercise the L1 layer.
+
+@jax.custom_vjp
+def _swish_ept8_cv(x):
+    return ew_k.swish(x, ept=8, fast_math=True)
+
+
+def _swish_fwd(x):
+    return _swish_ept8_cv(x), x
+
+
+def _swish_bwd(x, g):
+    s = jax.nn.sigmoid(x)
+    return (g * (s + x * s * (1.0 - s)),)
+
+
+_swish_ept8_cv.defvjp(_swish_fwd, _swish_bwd)
+
+
+@jax.custom_vjp
+def _gemm_bias_relu_cv(x, w, b):
+    return mm_k.matmul_bias_act(x, w, b, act="relu", bm=64, bn=64, bk=64)
+
+
+def _gbr_fwd_w(x, w, b):
+    # keep w for dx; keep x for dw; keep y for the relu mask
+    y = _gemm_bias_relu_cv(x, w, b)
+    return y, (x, w, y)
+
+
+def _gbr_bwd(res, g):
+    x, w, y = res
+    mask = (y > 0.0).astype(g.dtype)
+    gm = g * mask
+    # dense contractions run through the Pallas tiled matmul
+    dx = mm_k.matmul(gm, w.T, bm=64, bn=64, bk=64)
+    dw = mm_k.matmul(x.T, gm, bm=64, bn=64, bk=64)
+    db = jnp.sum(gm, axis=0)
+    return (dx, dw, db)
+
+
+_gemm_bias_relu_cv.defvjp(_gbr_fwd_w, _gbr_bwd)
+
+
+def swish_grad_naive(x):
+    return _grad_of(swish_naive, (0,))(x)
+
+
+def swish_grad_ept8(x):
+    def fused(v):
+        return (_swish_ept8_cv(v),)
+
+    return _grad_of(fused, (0,))(x)
+
+
+def gemm_bias_relu_grad_naive(x, w, b):
+    return _grad_of(gemm_bias_relu_naive, (1, 2))(x, w, b)
+
+
+def gemm_bias_relu_grad_fused(x, w, b):
+    def fused(xx, ww, bb):
+        return (_gemm_bias_relu_cv(xx, ww, bb),)
+
+    return _grad_of(fused, (1, 2))(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# Workload registry: name -> (fn, input-spec builder)
+# ---------------------------------------------------------------------------
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def specs_swish(batch: int):
+    return [_f32(batch, 16384)]
+
+
+def specs_matmul(batch: int):
+    return [_f32(batch * 8, 256), _f32(256, 256)]
+
+
+def specs_softmax(batch: int):
+    return [_f32(batch * 8, 512)]
+
+
+def specs_layernorm(batch: int):
+    return [_f32(batch * 8, 512), _f32(512), _f32(512)]
+
+
+def specs_gemm_bias(batch: int):
+    return [_f32(batch * 8, 256), _f32(256, 256), _f32(256)]
+
+
+def specs_mlp(batch: int):
+    return [_f32(batch * 8, 256), _f32(256, 512), _f32(512), _f32(512, 256), _f32(256)]
+
+
+def specs_reduction(batch: int):
+    return [_f32(batch, 512), _f32(512, 1024), _f32(1024)]
+
+
+def specs_fire(batch: int):
+    # SqueezeNet fire2 geometry (scaled): 32ch 28x28 in, squeeze 8, expand 2x16
+    return [
+        _f32(batch, 32, 28, 28),
+        _f32(8, 32, 1, 1), _f32(8),
+        _f32(16, 8, 1, 1), _f32(16),
+        _f32(16, 8, 3, 3), _f32(16),
+    ]
+
+
+def specs_attention(batch: int):
+    del batch
+    return [_f32(128, 64), _f32(128, 64), _f32(128, 64)]
+
+
+def specs_transformer(batch: int):
+    del batch
+    s, d, f = 64, 128, 512
+    return [
+        _f32(s, d),
+        _f32(d, d), _f32(d, d), _f32(d, d), _f32(d, d),
+        _f32(d), _f32(d),
+        _f32(d, f), _f32(f), _f32(f, d), _f32(d),
+        _f32(d), _f32(d),
+    ]
+
+
+# name -> (variant -> fn, spec builder, reference variant name)
+WORKLOADS: dict[str, tuple[dict[str, Callable], Callable, str]] = {
+    "swish": (
+        {"naive": swish_naive, "ept1": swish_ept1, "ept8": swish_ept8},
+        specs_swish,
+        "naive",
+    ),
+    "matmul": (
+        {"naive": matmul_naive, "tiled64": matmul_tiled_64, "tiled128": matmul_tiled_128},
+        specs_matmul,
+        "naive",
+    ),
+    "softmax": (
+        {"naive": softmax_naive, "online": softmax_online},
+        specs_softmax,
+        "naive",
+    ),
+    "layernorm": (
+        {"naive": layernorm_naive, "tuned": layernorm_tuned},
+        specs_layernorm,
+        "naive",
+    ),
+    "gemm_bias_relu": (
+        {"naive": gemm_bias_relu_naive, "fused": gemm_bias_relu_fused},
+        specs_gemm_bias,
+        "naive",
+    ),
+    "mlp_block": (
+        {"naive": mlp_block_naive, "fused": mlp_block_fused},
+        specs_mlp,
+        "naive",
+    ),
+    "reduction_chain": (
+        {"naive": reduction_chain_naive, "reduced": reduction_chain_reduced},
+        specs_reduction,
+        "naive",
+    ),
+    "fire_module": (
+        {"naive": fire_module_naive, "tuned": fire_module_tuned},
+        specs_fire,
+        "naive",
+    ),
+    "attention_block": (
+        {"naive": attention_block_naive, "flash": attention_block_flash},
+        specs_attention,
+        "naive",
+    ),
+    "transformer_block": (
+        {"naive": transformer_block_naive, "tuned": transformer_block_tuned},
+        specs_transformer,
+        "naive",
+    ),
+    # backward passes (§9): gradients flow through the Pallas kernels'
+    # interpret-mode VJPs and lower to the same artifact format
+    "swish_grad": (
+        {"naive": swish_grad_naive, "ept8": swish_grad_ept8},
+        specs_swish,
+        "naive",
+    ),
+    "gemm_bias_relu_grad": (
+        {"naive": gemm_bias_relu_grad_naive, "fused": gemm_bias_relu_grad_fused},
+        specs_gemm_bias,
+        "naive",
+    ),
+}
+
+# Batch sizes lowered per workload (Table 6 sweeps fire_module over all).
+DEFAULT_BATCHES: dict[str, list[int]] = {name: [16] for name in WORKLOADS}
+DEFAULT_BATCHES["fire_module"] = [8, 16, 32]
+DEFAULT_BATCHES["swish"] = [16, 64]
+
+
+def lower_to_hlo_text(fn: Callable, specs: list) -> str:
+    """Lower a jitted workload to HLO *text* (the interchange format the
+    xla 0.1.6 crate's xla_extension 0.5.1 can parse — serialized protos
+    from jax>=0.5 carry 64-bit ids it rejects)."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

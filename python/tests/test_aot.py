@@ -1,0 +1,59 @@
+"""AOT pipeline: manifest integrity + artifact round-trip (text parse)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, only=["swish", "reduction_chain"], batches={"swish": [2], "reduction_chain": [2]})
+    return out, manifest
+
+
+def test_manifest_written(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["version"] == 1
+
+
+def test_all_artifacts_exist_and_are_hlo(built):
+    out, manifest = built
+    assert manifest["entries"], "no artifacts lowered"
+    for e in manifest["entries"]:
+        p = os.path.join(out, e["path"])
+        assert os.path.exists(p), e["key"]
+        text = open(p).read()
+        assert text.startswith("HloModule"), e["key"]
+
+
+def test_every_workload_has_one_reference(built):
+    _, manifest = built
+    per = {}
+    for e in manifest["entries"]:
+        k = (e["workload"], e["batch"])
+        per.setdefault(k, []).append(e["is_reference"])
+    for k, flags in per.items():
+        assert sum(flags) == 1, k
+
+
+def test_keys_unique_and_well_formed(built):
+    _, manifest = built
+    keys = [e["key"] for e in manifest["entries"]]
+    assert len(keys) == len(set(keys))
+    for e in manifest["entries"]:
+        assert e["key"] == f"{e['workload']}__{e['variant']}__b{e['batch']}"
+        assert all("shape" in s and "dtype" in s for s in e["inputs"])
+
+
+def test_only_filter_respected(built):
+    _, manifest = built
+    assert {e["workload"] for e in manifest["entries"]} == {"swish", "reduction_chain"}

@@ -1,0 +1,257 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including ragged, non-block-multiple sizes)
+and schedule points; assert_allclose against ref.py is the core signal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import attention as attn_k
+from compile.kernels import conv as conv_k
+from compile.kernels import elementwise as ew_k
+from compile.kernels import layernorm as ln_k
+from compile.kernels import matmul as mm_k
+from compile.kernels import ref
+from compile.kernels import softmax as sm_k
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape, scale=scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (64, 64, 64), (128, 128, 128)])
+    def test_block_schedules(self, bm, bn, bk):
+        x, y = randn(48, 40), randn(40, 56)
+        assert_allclose(mm_k.matmul(x, y, bm=bm, bn=bn, bk=bk), ref.matmul(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_square(self):
+        x, y = randn(64, 64), randn(64, 64)
+        assert_allclose(mm_k.matmul(x, y), ref.matmul(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            mm_k.matmul(randn(4, 5), randn(6, 4))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 70),
+        n=st.integers(1, 70),
+        blk=st.sampled_from([8, 16, 32]),
+    )
+    def test_ragged_shapes(self, m, k, n, blk):
+        x, y = randn(m, k), randn(k, n)
+        got = mm_k.matmul(x, y, bm=blk, bn=blk, bk=blk)
+        assert got.shape == (m, n)
+        assert_allclose(got, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("act", ["relu", "swish", "gelu", "none"])
+    def test_fused_epilogue(self, act):
+        x, w, b = randn(40, 48), randn(48, 24), randn(24)
+        got = mm_k.matmul_bias_act(x, w, b, act=act, bm=16, bn=16, bk=16)
+        assert_allclose(got, ref.bias_act(ref.matmul(x, w), b, act), rtol=1e-4, atol=1e-4)
+
+    def test_fused_bad_bias_raises(self):
+        with pytest.raises(ValueError):
+            mm_k.matmul_bias_act(randn(8, 8), randn(8, 8), randn(4))
+
+    def test_matvec_reduction(self):
+        """§7.4: reduced graph equals the full chain's collapsed form."""
+        x, w, b = randn(16, 32), randn(32, 64), randn(64)
+        got = mm_k.matvec(x, jnp.sum(w, axis=1), jnp.sum(b), bm=8, bk=8)
+        want = ref.matmul(x, jnp.sum(w, axis=1).reshape(-1, 1)) + jnp.sum(b)
+        assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# elementwise / swish (§7.2)
+# ---------------------------------------------------------------------------
+
+class TestElementwise:
+    @pytest.mark.parametrize("ept", [1, 2, 4, 8])
+    def test_swish_ept(self, ept):
+        x = randn(3, 1000)
+        assert_allclose(ew_k.swish(x, ept=ept), ref.swish(x), rtol=1e-5, atol=1e-6)
+
+    def test_swish_fast_math_close_but_loose(self):
+        x = randn(4096)
+        got = ew_k.swish(x, ept=8, fast_math=True)
+        assert_allclose(got, ref.swish(x), rtol=2e-3, atol=2e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 5000), ept=st.sampled_from([1, 4, 8]))
+    def test_ragged_lengths(self, n, ept):
+        x = randn(n)
+        got = ew_k.swish(x, ept=ept)
+        assert got.shape == (n,)
+        assert_allclose(got, ref.swish(x), rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize(
+        "ops", [("relu",), ("swish", "relu"), ("square", "add1", "sigmoid"), ("gelu",)]
+    )
+    def test_chains(self, ops):
+        x = randn(777)
+        want = x
+        for op in ops:
+            want = {
+                "relu": ref.relu,
+                "swish": ref.swish,
+                "sigmoid": ref.sigmoid,
+                "gelu": ref.gelu,
+                "square": lambda v: v * v,
+                "add1": lambda v: v + 1.0,
+            }[op](want)
+        assert_allclose(ew_k.elementwise_chain(x, ops=ops), want, rtol=1e-5, atol=1e-5)
+
+    def test_bad_ept_raises(self):
+        with pytest.raises(ValueError):
+            ew_k.elementwise_chain(randn(8), ept=0)
+
+    def test_bias_act_2d(self):
+        x, b = randn(20, 48), randn(48)
+        got = ew_k.bias_act_2d(x, b, op="swish", rows_per_step=8)
+        assert_allclose(got, ref.bias_act(x, b, "swish"), rtol=1e-5, atol=1e-5)
+
+    def test_fast_exp_accuracy(self):
+        x = jnp.linspace(-20.0, 20.0, 4001)
+        got = ew_k._fast_exp(x)
+        want = jnp.exp(x)
+        rel = np.abs(np.asarray(got - want)) / np.maximum(np.asarray(want), 1e-30)
+        # fast-math by design: ~1e-3 max relative error is the §7.2 trade-off
+        assert rel.max() < 2e-3
+
+
+# ---------------------------------------------------------------------------
+# softmax (online)
+# ---------------------------------------------------------------------------
+
+class TestSoftmax:
+    @pytest.mark.parametrize("shape", [(8, 128), (5, 100), (1, 7), (33, 257)])
+    def test_shapes(self, shape):
+        x = randn(*shape, scale=3.0)
+        assert_allclose(sm_k.softmax(x), ref.softmax(x), rtol=1e-5, atol=1e-6)
+
+    def test_rows_sum_to_one(self):
+        x = randn(17, 200, scale=5.0)
+        s = np.asarray(sm_k.softmax(x)).sum(axis=-1)
+        assert_allclose(s, np.ones(17), rtol=1e-5)
+
+    def test_extreme_values_stable(self):
+        x = jnp.array([[1e4, 1e4 - 1.0, 0.0, -1e4]], dtype=jnp.float32)
+        got = np.asarray(sm_k.softmax(x))
+        assert np.isfinite(got).all()
+        assert_allclose(got, np.asarray(ref.softmax(x)), rtol=1e-5, atol=1e-7)
+
+    def test_1d_rejected(self):
+        with pytest.raises(ValueError):
+            sm_k.softmax(randn(16))
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 40), n=st.integers(1, 300), bc=st.sampled_from([16, 64, 128]))
+    def test_ragged(self, m, n, bc):
+        x = randn(m, n, scale=2.0)
+        assert_allclose(sm_k.softmax(x, br=8, bc=bc), ref.softmax(x), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+class TestLayernorm:
+    @pytest.mark.parametrize("m,n,br", [(16, 64, 8), (7, 33, 4), (100, 512, 16)])
+    def test_shapes(self, m, n, br):
+        x, g, b = randn(m, n), randn(n), randn(n)
+        assert_allclose(
+            ln_k.layernorm(x, g, b, br=br), ref.layernorm(x, g, b), rtol=1e-4, atol=1e-5
+        )
+
+    def test_normalization_property(self):
+        x = randn(10, 256, scale=4.0)
+        g, b = jnp.ones(256), jnp.zeros(256)
+        out = np.asarray(ln_k.layernorm(x, g, b))
+        assert_allclose(out.mean(axis=-1), np.zeros(10), atol=1e-5)
+        assert_allclose(out.std(axis=-1), np.ones(10), rtol=1e-3)
+
+    def test_mismatched_gamma_raises(self):
+        with pytest.raises(ValueError):
+            ln_k.layernorm(randn(4, 8), randn(7), randn(8))
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(1, 50), n=st.integers(2, 200))
+    def test_ragged(self, m, n):
+        x, g, b = randn(m, n), randn(n), randn(n)
+        assert_allclose(ln_k.layernorm(x, g, b), ref.layernorm(x, g, b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention (flash)
+# ---------------------------------------------------------------------------
+
+class TestAttention:
+    @pytest.mark.parametrize("s,d,bq,bk", [(64, 32, 16, 32), (128, 64, 16, 64), (32, 16, 8, 8)])
+    def test_block_multiple(self, s, d, bq, bk):
+        q, k, v = randn(s, d), randn(s, d), randn(s, d)
+        got = attn_k.attention(q, k, v, bq=bq, bk=bk)
+        assert_allclose(got, ref.attention(q, k, v), rtol=1e-4, atol=1e-5)
+
+    def test_ragged_seq(self):
+        q, k, v = randn(50, 32), randn(50, 32), randn(50, 32)
+        got = attn_k.attention(q, k, v, bq=16, bk=16)
+        assert_allclose(got, ref.attention(q, k, v), rtol=1e-4, atol=1e-5)
+
+    def test_mismatched_kv_raises(self):
+        with pytest.raises(ValueError):
+            attn_k.attention(randn(8, 4), randn(9, 4), randn(8, 4))
+
+    @settings(max_examples=10, deadline=None)
+    @given(s=st.integers(4, 80), d=st.sampled_from([8, 16, 32]))
+    def test_ragged_property(self, s, d):
+        q, k, v = randn(s, d), randn(s, d), randn(s, d)
+        got = attn_k.attention(q, k, v, bq=16, bk=16)
+        assert_allclose(got, ref.attention(q, k, v), rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv
+# ---------------------------------------------------------------------------
+
+class TestConv:
+    @pytest.mark.parametrize(
+        "n,c,h,w,o,kh,stride,padding",
+        [(2, 3, 8, 8, 4, 3, 1, 1), (1, 8, 14, 14, 16, 1, 1, 0), (2, 4, 9, 9, 8, 3, 2, 1)],
+    )
+    def test_vs_lax_conv(self, n, c, h, w, o, kh, stride, padding):
+        x, wt = randn(n, c, h, w), randn(o, c, kh, kh)
+        got = conv_k.conv2d_im2col(x, wt, stride=stride, padding=padding, bm=16, bn=16, bk=16)
+        assert_allclose(got, ref.conv2d(x, wt, stride=stride, padding=padding), rtol=1e-4, atol=1e-4)
+
+    def test_conv1x1_equals_conv(self):
+        x, wt = randn(2, 8, 7, 7), randn(16, 8, 1, 1)
+        got = conv_k.conv1x1(x, wt, bm=16, bn=16, bk=16)
+        assert_allclose(got, ref.conv2d(x, wt), rtol=1e-4, atol=1e-4)
+
+    def test_channel_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            conv_k.conv2d_im2col(randn(1, 3, 8, 8), randn(4, 5, 3, 3))
+
+    def test_im2col_oracle(self):
+        """im2col patches reassemble to the lax conv result via plain matmul."""
+        x, wt = randn(2, 3, 6, 6), randn(5, 3, 3, 3)
+        cols = ref.im2col(x, 3, 3, padding=1)
+        out = cols @ wt.reshape(5, -1).T
+        out = out.reshape(2, 6, 6, 5).transpose(0, 3, 1, 2)
+        assert_allclose(out, ref.conv2d(x, wt, padding=1), rtol=1e-4, atol=1e-4)

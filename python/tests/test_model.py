@@ -1,0 +1,77 @@
+"""L2 workload graphs: every variant of every workload must agree with
+its reference variant numerically (variants differ only in schedule)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+
+RNG = np.random.default_rng(1)
+
+
+def make_inputs(specs):
+    return [jnp.asarray(RNG.normal(size=s.shape, scale=0.5).astype(np.float32)) for s in specs]
+
+
+ALL_CASES = [
+    (name, vname)
+    for name, (variants, _, ref_variant) in sorted(model.WORKLOADS.items())
+    for vname in sorted(variants)
+    if vname != ref_variant
+]
+
+
+@pytest.mark.parametrize("name,vname", ALL_CASES, ids=[f"{n}:{v}" for n, v in ALL_CASES])
+def test_variant_matches_reference(name, vname):
+    variants, spec_fn, ref_variant = model.WORKLOADS[name]
+    specs = spec_fn(4)
+    inputs = make_inputs(specs)
+    want = variants[ref_variant](*inputs)
+    got = variants[vname](*inputs)
+    assert len(got) == len(want)
+    # fast-math variants (swish ept8) run with a looser tolerance, as the
+    # paper trades precision for speed via fast::exp (§7.2).
+    # fast-math variants (swish ept8) and deep tuned blocks accumulate in a
+    # different order than the oracle; tolerances reflect that, not bugs.
+    rtol, atol = (3e-3, 5e-4) if vname in ("ept8", "tuned") else (2e-4, 2e-4)
+    for g, w in zip(got, want):
+        assert g.shape == w.shape
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("name", sorted(model.WORKLOADS))
+def test_specs_scale_with_batch(name):
+    _, spec_fn, _ = model.WORKLOADS[name]
+    s4, s8 = spec_fn(4), spec_fn(8)
+    assert len(s4) == len(s8)
+    assert all(a.dtype == b.dtype for a, b in zip(s4, s8))
+
+
+def test_reference_variant_exists():
+    for name, (variants, _, ref_variant) in model.WORKLOADS.items():
+        assert ref_variant in variants, name
+
+
+def test_reduction_chain_collapse_exact():
+    """§7.4: the algebraic identity behind the graph reduction.
+
+    sum over axis-1 of (xW + b) is a scalar per row; max/mean/lse over a
+    singleton axis are identity, so the chain equals x @ W.sum(1) + b.sum().
+    """
+    specs = model.specs_reduction(4)
+    x, w, b = make_inputs(specs)
+    (full,) = model.reduction_chain_naive(x, w, b)
+    (reduced,) = model.reduction_chain_reduced(x, w, b)
+    assert_allclose(np.asarray(full), np.asarray(reduced), rtol=1e-3, atol=1e-3)
+
+
+def test_lower_to_hlo_text_smoke():
+    variants, spec_fn, _ = model.WORKLOADS["swish"]
+    text = model.lower_to_hlo_text(variants["ept1"], spec_fn(1))
+    assert "HloModule" in text
+    assert len(text) > 200

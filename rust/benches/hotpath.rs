@@ -1,0 +1,108 @@
+//! Micro-benchmarks of the coordinator hot paths (the §Perf targets):
+//! interpreter throughput, lowering+simulation, verification, one full
+//! iterative task, and the worker-pool scaling of a mini campaign.
+//!
+//! Hand-rolled harness (criterion is not available offline): median of
+//! N timed runs after warmup, printed as ns/op.
+
+use kforge::agents::generation::tests_support::trivial_program;
+use kforge::agents::persona::by_name;
+use kforge::coordinator::{run_campaign, ExperimentConfig};
+use kforge::kir::interp;
+use kforge::perfsim::{lower, simulate};
+use kforge::platform::{cuda, PlatformKind};
+use kforge::sched::Schedule;
+use kforge::util::rng::Pcg;
+use kforge::verify;
+use kforge::workloads::Suite;
+use std::time::Instant;
+
+fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) {
+    // warmup
+    for _ in 0..iters.div_ceil(10) {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    let total: f64 = samples.iter().sum();
+    println!(
+        "{name:<44} median {:>12.3} us   mean {:>12.3} us   ({iters} iters)",
+        med * 1e6,
+        total / iters as f64 * 1e6
+    );
+}
+
+fn main() {
+    let suite = Suite::full();
+    let spec = cuda::h100();
+    println!("# coordinator hot paths\n");
+
+    // interpreter on a mid-size problem
+    let p = suite.get("l2_gemm_bias_swish_0").unwrap();
+    let ins = p.eval_inputs(0);
+    bench("interp: l2 gemm_bias_swish eval graph", 500, || {
+        interp::eval(&p.eval_graph, &ins).unwrap()
+    });
+
+    // conv-heavy interpreter path
+    let fire = suite.get("l3_squeezenet_fire").unwrap();
+    let fire_ins = fire.eval_inputs(0);
+    bench("interp: l3 fire module eval graph", 200, || {
+        interp::eval(&fire.eval_graph, &fire_ins).unwrap()
+    });
+
+    // lowering + simulation
+    let sched = Schedule::expert();
+    bench("lower+simulate: l3 fire perf graph", 500, || {
+        let plan = lower::lower(&fire.perf_graph, &sched);
+        let mut rng = Pcg::seed(0);
+        simulate(&spec, &plan, &mut rng, 100, 10)
+    });
+
+    // full verification of a correct program
+    let prog = trivial_program(p);
+    bench("verify: correct candidate end-to-end", 200, || {
+        let mut rng = Pcg::seed(0);
+        verify::verify(&spec, p, Some(&prog), &mut rng)
+    });
+
+    // one full iterative task (5 iterations)
+    let persona = by_name("openai-gpt-5").unwrap();
+    let cfg = ExperimentConfig::cuda_iterative(vec![persona]);
+    bench("run_task: 5-iteration loop, one problem", 50, || {
+        kforge::coordinator::experiment::run_task(&cfg, &spec, persona, p, None)
+    });
+
+    // campaign scaling across workers
+    println!();
+    let mini = Suite::sample(8);
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = ExperimentConfig::cuda_iterative(vec![persona]);
+        cfg.workers = workers;
+        cfg.name = format!("scale_{workers}");
+        let t0 = Instant::now();
+        let c = run_campaign(&mini, None, &cfg);
+        println!(
+            "campaign: 24 problems x 5 iters, workers={workers:<2} {:>8.2} ms  ({} results)",
+            t0.elapsed().as_secs_f64() * 1e3,
+            c.results.len()
+        );
+    }
+
+    // agents with profiling in the loop (Metal screenshot path)
+    println!();
+    let persona_metal = by_name("claude-opus-4").unwrap();
+    let mut mcfg = ExperimentConfig::mps_iterative(vec![persona_metal]);
+    mcfg.use_profiling = true;
+    let mspec = mcfg.spec();
+    let mp = suite.get("l2_gemm_bias_swish_0").unwrap();
+    bench("run_task: metal + screenshot profiling", 50, || {
+        kforge::coordinator::experiment::run_task(&mcfg, &mspec, persona_metal, mp, None)
+    });
+}

@@ -1,0 +1,30 @@
+//! Bench target: regenerate every paper FIGURE (2, 3, 4), timing each.
+//!
+//! `cargo bench --bench paper_figures` runs at the paper's full scale;
+//! set `KFORGE_QUICK=<n>` for an n-per-level smoke run.
+
+use kforge::harness::{self, Scale};
+use std::time::Instant;
+
+fn scale() -> Scale {
+    match std::env::var("KFORGE_QUICK") {
+        Ok(n) => Scale::Quick(n.parse().expect("KFORGE_QUICK=<n>")),
+        Err(_) => Scale::Full,
+    }
+}
+
+fn timed(name: &str, f: impl FnOnce() -> String) {
+    let t0 = Instant::now();
+    let text = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{text}");
+    println!("[bench] {name}: {dt:.2}s\n");
+}
+
+fn main() {
+    let s = scale();
+    println!("# paper figures @ {s:?}\n");
+    timed("fig2", || harness::fig2::run(s).1);
+    timed("fig3", || harness::fig3::run(s).1);
+    timed("fig4", || harness::fig4::run(s).1);
+}

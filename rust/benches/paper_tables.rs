@@ -1,0 +1,34 @@
+//! Bench target: regenerate every paper TABLE (2, 4, 5, 6) plus the §7
+//! case studies, timing each regeneration.
+//!
+//! `cargo bench --bench paper_tables` runs at the paper's full scale
+//! (250 problems); set `KFORGE_QUICK=<n>` for an n-per-level smoke run.
+
+use kforge::harness::{self, Scale};
+use std::time::Instant;
+
+fn scale() -> Scale {
+    match std::env::var("KFORGE_QUICK") {
+        Ok(n) => Scale::Quick(n.parse().expect("KFORGE_QUICK=<n>")),
+        Err(_) => Scale::Full,
+    }
+}
+
+fn timed(name: &str, f: impl FnOnce() -> String) {
+    let t0 = Instant::now();
+    let text = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{text}");
+    println!("[bench] {name}: {dt:.2}s\n");
+}
+
+fn main() {
+    let s = scale();
+    println!("# paper tables @ {s:?}\n");
+    timed("table2", || harness::table2::run().1);
+    timed("table4", || harness::table4::run(s).1);
+    timed("table5", || harness::table5::run(s).1);
+    timed("table6", || harness::table6::run().1);
+    timed("case_studies", || harness::casestudy::run().1);
+    timed("ablation", || harness::ablation::run(s).1);
+}

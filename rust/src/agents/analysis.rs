@@ -1,0 +1,258 @@
+//! The performance-analysis agent `G : (o, k, {v^i}) → r` (§3.2).
+//!
+//! On CUDA the inputs are nsys-style CSV reports (structured,
+//! lossless); on Metal they are Xcode-style screenshots that must be
+//! screen-scraped first (lossy).  The agent ranks candidate
+//! bottlenecks by estimated impact and emits **one** recommendation.
+//!
+//! Specialization rationale (from the paper): profiling data is
+//! extensive but optimization signals are sparse, and retrieval
+//! degrades with input length — so a dedicated agent with a narrow
+//! contract (one recommendation) replaces feeding raw profiles to the
+//! synthesis agent.
+
+use super::recommend::Recommendation;
+use crate::platform::{PlatformKind, PlatformSpec};
+use crate::profiler::parse::{scrape, ScrapedProfile};
+use crate::profiler::Profile;
+use crate::sched::Schedule;
+
+/// The analysis agent.
+#[derive(Debug, Clone)]
+pub struct AnalysisAgent {
+    pub platform: PlatformKind,
+}
+
+/// The bottleneck facts the agent extracts before ranking.
+#[derive(Debug, Clone, Copy, Default)]
+struct Facts {
+    launch_fraction: f64,
+    n_kernels: usize,
+    hottest_memory_bound: bool,
+    hottest_mem_util: f64,
+    hottest_mm_util: f64,
+    hottest_is_matmul: bool,
+    hottest_transcendental: bool,
+    min_occupancy: f64,
+}
+
+impl AnalysisAgent {
+    pub fn new(platform: PlatformKind) -> Self {
+        AnalysisAgent { platform }
+    }
+
+    /// CUDA path: structured profile (the CSV is lossless, so we read
+    /// the typed records directly — equivalent to parsing the CSVs).
+    pub fn recommend_cuda(&self, profile: &Profile, schedule: &Schedule) -> Recommendation {
+        self.rank(self.facts_from_profile(profile), schedule)
+    }
+
+    /// Metal path: only the rendered screenshots are available; scrape
+    /// them (lossy) and work from what survives.  A scrape failure
+    /// yields `LooksOptimal` — the agent can't see a bottleneck it
+    /// can't read (this is the paper's "profiling information is not
+    /// always sufficient" failure mode).
+    pub fn recommend_metal(&self, screens: &[String], schedule: &Schedule) -> Recommendation {
+        match scrape(screens) {
+            Ok(s) => self.rank(self.facts_from_scrape(&s), schedule),
+            Err(_) => Recommendation::LooksOptimal,
+        }
+    }
+
+    /// Platform dispatch used by the verification pipeline.
+    pub fn recommend(
+        &self,
+        spec: &PlatformSpec,
+        profile: &Profile,
+        schedule: &Schedule,
+    ) -> Recommendation {
+        match spec.profiler {
+            crate::platform::ProfilerAccess::ProgrammaticCsv => {
+                self.recommend_cuda(profile, schedule)
+            }
+            crate::platform::ProfilerAccess::GuiScreenshot => {
+                let screens = crate::profiler::xcode::capture_screens(profile);
+                self.recommend_metal(&screens, schedule)
+            }
+        }
+    }
+
+    fn facts_from_profile(&self, p: &Profile) -> Facts {
+        let hottest = p.hottest();
+        Facts {
+            launch_fraction: p.launch_fraction(),
+            n_kernels: p.kernels.len(),
+            hottest_memory_bound: hottest.map(|k| !k.compute_bound).unwrap_or(false),
+            hottest_mem_util: hottest.map(|k| k.mem_utilization).unwrap_or(1.0),
+            hottest_mm_util: hottest.map(|k| k.mm_utilization).unwrap_or(1.0),
+            hottest_is_matmul: hottest
+                .map(|k| k.name.contains("matmul") || k.name.contains("conv") || k.name.contains("attention"))
+                .unwrap_or(false),
+            hottest_transcendental: hottest
+                .map(|k| {
+                    ["swish", "sigmoid", "gelu", "tanh", "exp", "softmax", "layernorm"]
+                        .iter()
+                        .any(|t| k.name.contains(t))
+                })
+                .unwrap_or(false),
+            min_occupancy: p.kernels.iter().map(|k| k.occupancy).fold(1.0, f64::min),
+        }
+    }
+
+    fn facts_from_scrape(&self, s: &ScrapedProfile) -> Facts {
+        let hottest = s
+            .kernels
+            .iter()
+            .max_by(|a, b| {
+                a.time_us
+                    .unwrap_or(a.mem_pct)
+                    .partial_cmp(&b.time_us.unwrap_or(b.mem_pct))
+                    .unwrap()
+            });
+        Facts {
+            launch_fraction: s.encoder_overhead_us / s.gpu_time_us.max(1e-9),
+            n_kernels: s.dispatches,
+            hottest_memory_bound: hottest.map(|k| !k.limiter_alu).unwrap_or(false),
+            hottest_mem_util: hottest.map(|k| k.mem_pct / 100.0).unwrap_or(1.0),
+            hottest_mm_util: hottest.map(|k| k.alu_pct / 100.0).unwrap_or(1.0),
+            hottest_is_matmul: hottest
+                .map(|k| k.name.contains("matmul") || k.name.contains("conv") || k.name.contains("attention"))
+                .unwrap_or(false),
+            // truncated 20-char names still carry the op family prefix
+            hottest_transcendental: hottest
+                .map(|k| {
+                    ["swish", "sigmoid", "gelu", "tanh", "exp", "softmax", "layernorm"]
+                        .iter()
+                        .any(|t| k.name.contains(t))
+                })
+                .unwrap_or(false),
+            min_occupancy: s
+                .kernels
+                .iter()
+                .map(|k| k.occupancy_pct / 100.0)
+                .fold(1.0, f64::min),
+        }
+    }
+
+    /// Rank bottlenecks by impact; emit the single best recommendation.
+    fn rank(&self, f: Facts, schedule: &Schedule) -> Recommendation {
+        // launch-bound: the biggest single lever
+        if f.launch_fraction > 0.30 {
+            if !schedule.use_graphs {
+                return if self.platform == PlatformKind::Cuda {
+                    Recommendation::UseCudaGraphs
+                } else {
+                    Recommendation::CachePipelineState
+                };
+            }
+            if f.n_kernels > 1 && schedule.fusion_depth != usize::MAX {
+                return Recommendation::IncreaseFusion;
+            }
+        }
+        if f.hottest_is_matmul && f.hottest_mm_util < 0.55 {
+            return Recommendation::RetileMatmul;
+        }
+        if f.hottest_memory_bound && f.hottest_mem_util < 0.85 && (schedule.vec_width < 4 || schedule.ept < 8) {
+            return Recommendation::Vectorize;
+        }
+        if f.hottest_transcendental && !schedule.fast_math {
+            return Recommendation::UseFastMath;
+        }
+        if f.min_occupancy < 0.45 && schedule.threadgroup != 256 {
+            return Recommendation::AdjustThreadgroup;
+        }
+        if f.launch_fraction > 0.15 && schedule.fusion_depth != usize::MAX {
+            return Recommendation::IncreaseFusion;
+        }
+        Recommendation::LooksOptimal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::UnaryKind;
+    use crate::perfsim::lower::lower;
+    use crate::perfsim::simulate;
+    use crate::platform::{cuda, metal};
+    use crate::profiler::Profile;
+    use crate::tensor::Shape;
+    use crate::util::rng::Pcg;
+
+    fn profile_for(fused: bool, dim: usize, spec: &crate::platform::PlatformSpec) -> (Profile, Schedule) {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(Shape::of(&[dim, dim]));
+        let w = b.input(Shape::of(&[dim, dim]));
+        let bias = b.input(Shape::of(&[dim]));
+        let m = b.matmul(x, w);
+        let a = b.add(m, bias);
+        let r = b.unary(UnaryKind::Swish, a);
+        let g = b.finish(vec![r]);
+        let mut s = Schedule::naive();
+        if fused {
+            s.fusion_depth = usize::MAX;
+        }
+        if spec.kind == PlatformKind::Metal {
+            s.use_graphs = false;
+        }
+        let plan = lower(&g, &s);
+        let mut rng = Pcg::seed(0);
+        let sim = simulate(spec, &plan, &mut rng, 10, 2);
+        (Profile::from_sim("t", spec.name, &sim), s)
+    }
+
+    #[test]
+    fn launch_bound_cuda_gets_graphs() {
+        let spec = cuda::h100();
+        let (p, s) = profile_for(false, 32, &spec);
+        let agent = AnalysisAgent::new(PlatformKind::Cuda);
+        let rec = agent.recommend_cuda(&p, &s);
+        assert_eq!(rec, Recommendation::UseCudaGraphs, "profile: {p:?}");
+    }
+
+    #[test]
+    fn launch_bound_metal_gets_pipeline_caching_then_fusion() {
+        let spec = metal::m4_max();
+        let (p, mut s) = profile_for(false, 32, &spec);
+        let agent = AnalysisAgent::new(PlatformKind::Metal);
+        let screens = crate::profiler::xcode::capture_screens(&p);
+        let rec = agent.recommend_metal(&screens, &s);
+        assert_eq!(rec, Recommendation::CachePipelineState);
+        // once caching is on, the next advice is fusion
+        s.use_graphs = true;
+        let rec2 = agent.recommend_metal(&screens, &s);
+        assert_eq!(rec2, Recommendation::IncreaseFusion);
+    }
+
+    #[test]
+    fn compute_heavy_naive_tiles_get_retile() {
+        let spec = cuda::h100();
+        let (p, mut s) = profile_for(true, 2048, &spec);
+        s.use_graphs = true; // silence the launch path
+        let agent = AnalysisAgent::new(PlatformKind::Cuda);
+        let rec = agent.recommend_cuda(&p, &s);
+        assert_eq!(rec, Recommendation::RetileMatmul, "{p:?}");
+    }
+
+    #[test]
+    fn garbage_screens_yield_looks_optimal() {
+        let agent = AnalysisAgent::new(PlatformKind::Metal);
+        let rec = agent.recommend_metal(&["?".into(), "?".into(), "?".into()], &Schedule::naive());
+        assert_eq!(rec, Recommendation::LooksOptimal);
+    }
+
+    #[test]
+    fn metal_and_cuda_agree_on_clear_bottleneck() {
+        // the scrape is lossy but a dominant launch bottleneck survives
+        let spec = metal::m4_max();
+        let (p, s) = profile_for(false, 32, &spec);
+        let cuda_view = AnalysisAgent::new(PlatformKind::Metal).rank(
+            AnalysisAgent::new(PlatformKind::Metal).facts_from_profile(&p),
+            &s,
+        );
+        let screens = crate::profiler::xcode::capture_screens(&p);
+        let metal_view = AnalysisAgent::new(PlatformKind::Metal).recommend_metal(&screens, &s);
+        assert_eq!(cuda_view, metal_view);
+    }
+}

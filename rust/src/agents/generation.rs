@@ -1,0 +1,567 @@
+//! The program-synthesis agent `F : (p, k_{t-1}, r_{t-1}) → k_t`.
+//!
+//! A synthesized **Program** is a concrete artifact: a (possibly
+//! rewritten) KIR graph, a schedule, and any injected defects.  Defects
+//! are *real transformations* that genuinely fail the downstream
+//! stage for their class:
+//! - `Syntax` — corrupts an operand reference → `kir::validate` fails
+//!   (compilation failure);
+//! - `IllegalSchedule` — oversizes threadgroup/tile → `sched::legal`
+//!   fails at dispatch (runtime error);
+//! - `WrongNumerics` — swaps an activation / drops an epilogue /
+//!   flips a reduce axis → the interpreter produces genuinely wrong
+//!   values (numerical mismatch).
+//!
+//! Refinement consumes the verifier's actual error channel: a fix
+//! targets the defect class the error names, with persona-dependent
+//! success probability.  Optimization iterations move schedule levers —
+//! toward the analysis agent's recommendation when one is supplied
+//! (`instruction_following`), else by the persona's own search skill.
+
+use super::persona::Persona;
+use super::Recommendation;
+use crate::kir::op::{Op, ReduceKind, UnaryKind};
+use crate::kir::rewrite::{self, Rewrite};
+use crate::kir::Graph;
+use crate::platform::PlatformKind;
+use crate::sched::schedule::Lever;
+use crate::sched::Schedule;
+use crate::util::rng::Pcg;
+use crate::workloads::Problem;
+
+/// Defect classes a synthesized program may carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Defect {
+    Syntax,
+    IllegalSchedule,
+    WrongNumerics,
+}
+
+/// A synthesized candidate program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub graph: Graph,
+    pub schedule: Schedule,
+    pub defects: Vec<Defect>,
+    /// Rendered "source code" (goes into prompts / the reference corpus).
+    pub source_listing: String,
+}
+
+impl Program {
+    fn new(graph: Graph, schedule: Schedule, defects: Vec<Defect>) -> Program {
+        let mut listing = graph.render();
+        listing.push_str(&format!(
+            "// schedule: fusion={} tile={}x{}x{} ept={} tg={} fast_math={} graphs={} vec={}\n",
+            if schedule.fusion_depth == usize::MAX { "full".to_string() } else { schedule.fusion_depth.to_string() },
+            schedule.tile.bm,
+            schedule.tile.bn,
+            schedule.tile.bk,
+            schedule.ept,
+            schedule.threadgroup,
+            schedule.fast_math,
+            schedule.use_graphs,
+            schedule.vec_width
+        ));
+        Program {
+            graph,
+            schedule,
+            defects,
+            source_listing: listing,
+        }
+    }
+}
+
+/// The generation agent: one persona synthesizing for one platform.
+#[derive(Debug, Clone)]
+pub struct GenerationAgent {
+    pub persona: &'static Persona,
+    pub platform: PlatformKind,
+}
+
+impl GenerationAgent {
+    pub fn new(persona: &'static Persona, platform: PlatformKind) -> Self {
+        GenerationAgent { persona, platform }
+    }
+
+    /// Initial synthesis (iteration 0).  `reference` is the CUDA
+    /// reference program for the Metal transfer configuration (§6.2).
+    /// Returns None on a generation failure (§3.3 state 1).
+    pub fn synthesize(
+        &self,
+        problem: &Problem,
+        reference: Option<&Program>,
+        rng: &mut Pcg,
+    ) -> Option<Program> {
+        if rng.chance(self.persona.p_generation_failure) {
+            return None;
+        }
+        let p_ok = self
+            .persona
+            .p_single_shot(self.platform, problem.level, reference.is_some());
+        // Reasoning models self-check k internal candidates; the
+        // calibrated p_ok already reflects the final answer, so a single
+        // draw decides correctness while internal sampling shapes the
+        // schedule (best-of-k on distance from the expert point).
+        let correct = rng.chance(p_ok);
+
+        let graph = self.rewrite_graph(problem, rng);
+        let schedule = self.initial_schedule(problem, reference, rng);
+
+        let defects = if correct {
+            vec![]
+        } else {
+            vec![self.sample_defect(rng)]
+        };
+        let mut prog = Program::new(graph, schedule, defects.clone());
+        apply_defects(&mut prog, rng);
+        Some(prog)
+    }
+
+    /// Refinement (iterations ≥ 1).  `error` is the verifier output for
+    /// a failed candidate; `recommendation` is G's advice for a correct
+    /// one.  Mirrors `F : (p, k_{t-1}, r_{t-1}) → k_t`.
+    pub fn refine(
+        &self,
+        problem: &Problem,
+        prev: &Program,
+        error: Option<&str>,
+        recommendation: Option<&Recommendation>,
+        rng: &mut Pcg,
+    ) -> Option<Program> {
+        if rng.chance(self.persona.p_generation_failure) {
+            return None;
+        }
+        let mut next = prev.clone();
+        match error {
+            Some(err) => {
+                // functional pass: attempt to repair the reported defect
+                if rng.chance(self.persona.p_fix(problem.level)) {
+                    next = self.repair(problem, prev, err, rng);
+                } else if rng.chance(0.25) {
+                    // failed fix sometimes mutates into a different defect
+                    next.defects = vec![self.sample_defect(rng)];
+                    let graph = self.rewrite_graph(problem, rng);
+                    next = Program::new(graph, next.schedule.clone(), next.defects.clone());
+                    apply_defects(&mut next, rng);
+                }
+            }
+            None => {
+                // optimization pass
+                let lever = match recommendation.and_then(|r| r.lever()) {
+                    Some(lever) if rng.chance(self.persona.instruction_following) => Some(lever),
+                    _ => {
+                        if rng.chance(self.persona.opt_skill) {
+                            Some(*rng.choose(&Lever::ALL))
+                        } else {
+                            None
+                        }
+                    }
+                };
+                if let Some(lever) = lever {
+                    let mut sched = next.schedule.clone();
+                    if lever == Lever::Tile || lever == Lever::Threadgroup {
+                        // move toward the *platform* expert point
+                        let expert = Schedule::expert_for(self.platform);
+                        match lever {
+                            Lever::Tile => sched.tile = expert.tile,
+                            Lever::Threadgroup => sched.threadgroup = expert.threadgroup,
+                            _ => unreachable!(),
+                        }
+                    } else {
+                        sched.improve(lever);
+                    }
+                    next = Program::new(next.graph.clone(), sched, next.defects.clone());
+                }
+                // occasionally an optimization attempt breaks correctness
+                let p_break = if self.persona.reasoning { 0.03 } else { 0.08 };
+                if rng.chance(p_break) {
+                    next.defects = vec![Defect::WrongNumerics];
+                    apply_defects(&mut next, rng);
+                }
+            }
+        }
+        Some(next)
+    }
+
+    /// Graph-level rewrites the persona discovers (constant-output
+    /// collapse, algebraic reduction, CSE).
+    fn rewrite_graph(&self, problem: &Problem, rng: &mut Pcg) -> Graph {
+        let mut rewrites: Vec<Rewrite> = vec![Rewrite::Cse];
+        if problem.constant_output && rng.chance(self.persona.p_constant_fold) {
+            rewrites.push(Rewrite::ConstantFold);
+        }
+        if problem.reducible && rng.chance(self.persona.p_algebraic) {
+            rewrites.push(Rewrite::AlgebraicReduce);
+        }
+        rewrite::apply_all(&problem.eval_graph, &rewrites)
+    }
+
+    /// Initial schedule: persona skill × internal best-of-k, optionally
+    /// warm-started from the reference program's schedule (transfer).
+    fn initial_schedule(
+        &self,
+        problem: &Problem,
+        reference: Option<&Program>,
+        rng: &mut Pcg,
+    ) -> Schedule {
+        let skill = self.persona.sched_skill(problem.level);
+        let k = self.persona.internal_samples.max(1);
+        let mut best: Option<Schedule> = None;
+        for _ in 0..k {
+            let cand = Schedule::sample(rng, skill);
+            let better = match &best {
+                None => true,
+                Some(b) => cand.distance_from_expert() < b.distance_from_expert(),
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        let mut sched = best.unwrap();
+        if let Some(r) = reference {
+            // transfer: adopt the reference's fusion/tiling/vectorization
+            // decisions (the "language-agnostic implementation patterns"
+            // of §6.2); the platform clamp below keeps tiles legal
+            sched.fusion_depth = r.schedule.fusion_depth;
+            sched.ept = r.schedule.ept;
+            sched.vec_width = r.schedule.vec_width;
+            sched.fast_math = r.schedule.fast_math;
+            sched.tile = r.schedule.tile;
+        }
+        // platform sanity the persona always knows: the threadgroup-memory
+        // budget is in the prompt's single-shot example, so sampled tiles
+        // are clamped to legal on Metal (illegal schedules enter only via
+        // the explicit IllegalSchedule defect, keeping the §3.3 state mix
+        // aligned with the calibrated single-shot rates)
+        if self.platform != PlatformKind::Cuda {
+            let expert = Schedule::expert_for(PlatformKind::Metal);
+            if sched.tile.onchip_bytes() > expert.tile.onchip_bytes() {
+                sched.tile = expert.tile;
+            }
+        }
+        sched
+    }
+
+    fn sample_defect(&self, rng: &mut Pcg) -> Defect {
+        // §3.3 error-state mix among failures: compilation failures are
+        // rarer for reasoning models, numeric mismatches dominate.
+        let weights: [(Defect, f64); 3] = if self.persona.reasoning {
+            [
+                (Defect::Syntax, 0.18),
+                (Defect::IllegalSchedule, 0.22),
+                (Defect::WrongNumerics, 0.60),
+            ]
+        } else {
+            [
+                (Defect::Syntax, 0.35),
+                (Defect::IllegalSchedule, 0.25),
+                (Defect::WrongNumerics, 0.40),
+            ]
+        };
+        *rng.choose_weighted(&weights)
+    }
+
+    /// Repair: remove the defect class the error message names.  A fix
+    /// *sanitizes* the offending field (safe value), it does not gift an
+    /// optimized schedule — optimization is the later pass's job.
+    fn repair(&self, problem: &Problem, prev: &Program, error: &str, rng: &mut Pcg) -> Program {
+        let mut schedule = prev.schedule.clone();
+        if error.contains("runtime error") {
+            let legal_max_tile = Schedule::expert_for(self.platform).tile;
+            if schedule.threadgroup == 0
+                || schedule.threadgroup % 32 != 0
+                || schedule.threadgroup > 1024
+            {
+                schedule.threadgroup = 256;
+            }
+            if schedule.tile.onchip_bytes() > legal_max_tile.onchip_bytes() {
+                schedule.tile = legal_max_tile;
+            }
+            schedule.ept = schedule.ept.clamp(1, 8).next_power_of_two();
+            schedule.vec_width = schedule.vec_width.clamp(1, 4).next_power_of_two();
+        }
+        // rebuild the graph cleanly (drops syntax/numeric corruption)
+        let graph = self.rewrite_graph(problem, rng);
+        Program::new(graph, schedule, vec![])
+    }
+}
+
+/// Realize the defects as genuine corruption of the program.
+fn apply_defects(prog: &mut Program, rng: &mut Pcg) {
+    for defect in prog.defects.clone() {
+        match defect {
+            Defect::Syntax => corrupt_syntax(&mut prog.graph, rng),
+            Defect::IllegalSchedule => corrupt_schedule(&mut prog.schedule, rng),
+            Defect::WrongNumerics => corrupt_numerics(&mut prog.graph, rng),
+        }
+    }
+}
+
+/// Dangle an operand reference → validation fails (compilation error).
+fn corrupt_syntax(g: &mut Graph, rng: &mut Pcg) {
+    let candidates: Vec<usize> = (0..g.nodes.len())
+        .filter(|&i| !g.nodes[i].op.operands().is_empty())
+        .collect();
+    if candidates.is_empty() {
+        g.outputs = vec![g.nodes.len() + 7];
+        return;
+    }
+    let id = *rng.choose(&candidates);
+    let bad = g.nodes.len() + 3;
+    g.nodes[id].op = g.nodes[id].op.map_operands(|o| if rng.chance(0.5) { bad } else { o });
+    // ensure at least one dangling ref even if chance missed them all
+    let ops = g.nodes[id].op.operands();
+    if ops.iter().all(|&o| o < g.nodes.len()) {
+        g.nodes[id].op = g.nodes[id].op.map_operands(|_| bad);
+    }
+}
+
+/// Exceed a device limit → dispatch fails (runtime error).
+fn corrupt_schedule(s: &mut Schedule, rng: &mut Pcg) {
+    match rng.below(3) {
+        0 => s.threadgroup = 2048,
+        1 => s.tile = crate::sched::schedule::Tile { bm: 512, bn: 512, bk: 128 },
+        _ => s.ept = 13, // non-power-of-two
+    }
+}
+
+/// Genuinely wrong math → numeric mismatch at verification.
+fn corrupt_numerics(g: &mut Graph, rng: &mut Pcg) {
+    // find a mutable site: swap a unary kind, or flip add→sub
+    let sites: Vec<usize> = (0..g.nodes.len())
+        .filter(|&i| {
+            matches!(
+                g.nodes[i].op,
+                Op::Unary { .. } | Op::Binary { .. } | Op::Reduce { .. }
+            )
+        })
+        .collect();
+    if sites.is_empty() {
+        // nothing to corrupt structurally: perturb via an extra exp on
+        // the first non-input node if any, else give up (program will
+        // verify correct — rare and harmless)
+        return;
+    }
+    let id = *rng.choose(&sites);
+    let node = &mut g.nodes[id];
+    node.op = match node.op.clone() {
+        Op::Unary { kind, input } => {
+            let swapped = match kind {
+                UnaryKind::Relu => UnaryKind::Sigmoid,
+                UnaryKind::Sigmoid => UnaryKind::Tanh,
+                UnaryKind::Swish => UnaryKind::Gelu,
+                UnaryKind::Gelu => UnaryKind::Relu,
+                UnaryKind::Tanh => UnaryKind::Exp,
+                UnaryKind::Exp => UnaryKind::Square,
+                UnaryKind::Neg => UnaryKind::Relu,
+                UnaryKind::Square => UnaryKind::Sqrt,
+                UnaryKind::Sqrt => UnaryKind::Square,
+            };
+            Op::Unary { kind: swapped, input }
+        }
+        Op::Binary { kind, lhs, rhs } => {
+            use crate::kir::op::BinaryKind;
+            let swapped = match kind {
+                BinaryKind::Add => BinaryKind::Sub,
+                BinaryKind::Sub => BinaryKind::Add,
+                BinaryKind::Mul => BinaryKind::Add,
+                BinaryKind::Div => BinaryKind::Mul,
+                BinaryKind::Max => BinaryKind::Add,
+            };
+            Op::Binary { kind: swapped, lhs, rhs }
+        }
+        Op::Reduce { kind, axis, input } => {
+            let swapped = match kind {
+                ReduceKind::Sum => ReduceKind::Mean,
+                ReduceKind::Mean => ReduceKind::Sum,
+                ReduceKind::Max => ReduceKind::Sum,
+                ReduceKind::LogSumExp => ReduceKind::Max,
+            };
+            Op::Reduce { kind: swapped, axis, input }
+        }
+        other => other,
+    };
+    // keep annotated shape consistent so this fails *numerically*, not
+    // at validation (shapes of these swaps are unchanged)
+}
+
+/// Test support: a trivially-correct program for a problem.
+#[doc(hidden)]
+pub mod tests_support {
+    use super::*;
+
+    pub fn trivial_program(problem: &Problem) -> Program {
+        Program::new(problem.eval_graph.clone(), Schedule::naive(), vec![])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::persona::by_name;
+    use crate::kir::validate::validate;
+    use crate::sched::legal;
+    use crate::workloads::Suite;
+
+    fn agent(name: &str, platform: PlatformKind) -> GenerationAgent {
+        GenerationAgent::new(by_name(name).unwrap(), platform)
+    }
+
+    #[test]
+    fn correct_programs_have_no_defects_and_validate() {
+        let suite = Suite::sample(2);
+        let a = agent("openai-gpt-5", PlatformKind::Cuda);
+        let mut rng = Pcg::seed(1);
+        let mut found_correct = false;
+        for p in suite.problems.iter() {
+            for _ in 0..4 {
+                if let Some(prog) = a.synthesize(p, None, &mut rng) {
+                    if prog.defects.is_empty() {
+                        found_correct = true;
+                        validate(&prog.graph).unwrap();
+                        legal::check(&prog.schedule, &crate::platform::cuda::h100()).unwrap();
+                    }
+                }
+            }
+        }
+        assert!(found_correct);
+    }
+
+    #[test]
+    fn syntax_defect_fails_validation() {
+        let suite = Suite::sample(1);
+        let p = &suite.problems[0];
+        let mut rng = Pcg::seed(0);
+        let mut prog = tests_support::trivial_program(p);
+        prog.defects = vec![Defect::Syntax];
+        apply_defects(&mut prog, &mut rng);
+        assert!(validate(&prog.graph).is_err());
+    }
+
+    #[test]
+    fn schedule_defect_fails_legality() {
+        let mut rng = Pcg::seed(0);
+        for seed in 0..6 {
+            let mut rng2 = Pcg::seed(seed);
+            let mut s = Schedule::naive();
+            corrupt_schedule(&mut s, &mut rng2);
+            assert!(legal::check(&s, &crate::platform::cuda::h100()).is_err());
+        }
+        let _ = &mut rng;
+    }
+
+    #[test]
+    fn numeric_defect_changes_output() {
+        use crate::kir::interp::eval;
+        let suite = Suite::sample(3);
+        // pick a problem with a corruptible site
+        let p = suite
+            .problems
+            .iter()
+            .find(|p| p.id.contains("act_"))
+            .expect("activation problem in sample");
+        let mut rng = Pcg::seed(3);
+        let mut prog = tests_support::trivial_program(p);
+        prog.defects = vec![Defect::WrongNumerics];
+        apply_defects(&mut prog, &mut rng);
+        let ins = p.eval_inputs(0);
+        let want = eval(&p.eval_graph, &ins).unwrap();
+        let got = eval(&prog.graph, &ins).unwrap();
+        assert!(!got[0].allclose(&want[0], 1e-4, 1e-4), "corruption was a no-op");
+    }
+
+    #[test]
+    fn single_shot_rate_tracks_calibration() {
+        let suite = Suite::full();
+        let a = agent("claude-opus-4", PlatformKind::Metal);
+        let mut rng = Pcg::seed(42);
+        let l1: Vec<_> = suite.by_level(crate::workloads::Level::L1);
+        let mut ok = 0;
+        let mut total = 0;
+        for p in &l1 {
+            for _ in 0..5 {
+                total += 1;
+                if let Some(prog) = a.synthesize(p, None, &mut rng) {
+                    if prog.defects.is_empty() {
+                        ok += 1;
+                    }
+                }
+            }
+        }
+        let rate = ok as f64 / total as f64;
+        // calibration: 0.66 for opus metal L1 (±6 points sampling noise)
+        assert!((rate - 0.66).abs() < 0.06, "rate={rate}");
+    }
+
+    #[test]
+    fn refine_repairs_errors_eventually() {
+        let suite = Suite::sample(1);
+        let p = &suite.problems[0];
+        let a = agent("openai-gpt-5", PlatformKind::Cuda);
+        let mut rng = Pcg::seed(9);
+        let mut prog = tests_support::trivial_program(p);
+        prog.defects = vec![Defect::Syntax];
+        apply_defects(&mut prog, &mut rng);
+        let mut fixed = false;
+        let mut cur = prog;
+        for _ in 0..10 {
+            if let Some(next) = a.refine(p, &cur, Some("error: node %2 references undefined value"), None, &mut rng) {
+                if next.defects.is_empty() && validate(&next.graph).is_ok() {
+                    fixed = true;
+                    break;
+                }
+                cur = next;
+            }
+        }
+        assert!(fixed);
+    }
+
+    #[test]
+    fn optimization_follows_recommendation() {
+        let suite = Suite::sample(1);
+        let p = &suite.problems[0];
+        let a = agent("openai-gpt-5", PlatformKind::Cuda);
+        let mut rng = Pcg::seed(5);
+        let mut prog = tests_support::trivial_program(p);
+        assert!(!prog.schedule.fast_math);
+        let mut applied = false;
+        for _ in 0..10 {
+            if let Some(next) = a.refine(p, &prog, None, Some(&Recommendation::UseFastMath), &mut rng) {
+                if next.schedule.fast_math {
+                    applied = true;
+                    break;
+                }
+                prog = next;
+            }
+        }
+        assert!(applied);
+    }
+
+    #[test]
+    fn metal_agent_schedules_stay_legal_when_correct() {
+        let suite = Suite::sample(2);
+        let a = agent("openai-gpt-5", PlatformKind::Metal);
+        let spec = crate::platform::metal::m4_max();
+        let mut rng = Pcg::seed(11);
+        for p in suite.problems.iter() {
+            if let Some(prog) = a.synthesize(p, None, &mut rng) {
+                if prog.defects.is_empty() {
+                    legal::check(&prog.schedule, &spec).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reference_transfers_schedule_decisions() {
+        let suite = Suite::sample(1);
+        let p = &suite.problems[0];
+        let a = agent("claude-opus-4", PlatformKind::Metal);
+        let mut rng = Pcg::seed(13);
+        let mut reference = tests_support::trivial_program(p);
+        reference.schedule = Schedule::expert();
+        let prog = a.synthesize(p, Some(&reference), &mut rng).unwrap();
+        assert_eq!(prog.schedule.ept, 8);
+        assert_eq!(prog.schedule.fusion_depth, usize::MAX);
+    }
+}

@@ -1,0 +1,33 @@
+//! The two collaborating agents (the paper's §3):
+//!
+//! - [`generation`] — the program-synthesis agent `F : (p, k_{t-1},
+//!   r_{t-1}) → k_t`: produces a candidate `Program` (rewritten KIR
+//!   graph + schedule + any injected defects), and refines it across
+//!   iterations from verification feedback and recommendations.
+//! - [`analysis`] — the performance-analysis agent `G : (o, k, {v^i})
+//!   → r`: consumes profiling artifacts (nsys CSV on CUDA, screenshot
+//!   scrapes on Metal) and emits **one** recommendation.
+//!
+//! [`persona`] defines the 8 calibrated model personas (Table 1);
+//! [`prompt`] assembles the Listing-1-style prompts; [`recommend`] is
+//! the recommendation taxonomy both agents share.
+//!
+//! ## Why personas instead of LLM calls
+//! The paper's claims are about the *loop* — iterative refinement,
+//! reference transfer, profile-guided optimization — not about any
+//! specific model's weights.  Personas are mechanistic synthesizers
+//! whose stochastic choices are calibrated to the paper's reported
+//! rates (Tables 4/5, §5–6 text); every downstream stage (validation,
+//! legality, numerics, simulation, profiling) runs for real on the
+//! programs they emit.  See DESIGN.md §1.
+
+pub mod persona;
+pub mod prompt;
+pub mod recommend;
+pub mod generation;
+pub mod sampling;
+pub mod analysis;
+
+pub use generation::{GenerationAgent, Program};
+pub use persona::{Persona, PERSONAS};
+pub use recommend::Recommendation;

@@ -1,0 +1,182 @@
+//! Prompt assembly — the Listing-1 template as a tiny Jinja-like
+//! renderer plus the KForge prompt constructors.
+//!
+//! The paper parameterizes prompts with Jinja2 (`{{ accelerator }}`,
+//! `{{ example_arch_src }}`, `{{ arc_src }}`); we implement the same
+//! substitution surface so prompt construction is a first-class,
+//! testable artifact (it *directs the mode of operation* — §3).
+
+use crate::agents::generation::Program;
+use crate::agents::Recommendation;
+use crate::platform::PlatformSpec;
+use crate::workloads::Problem;
+use std::collections::BTreeMap;
+
+/// Render a `{{ var }}` template against a variable map.  Unknown
+/// variables render as `<missing:name>` (loud, like Jinja's undefined).
+pub fn render(template: &str, vars: &BTreeMap<&str, String>) -> String {
+    let mut out = String::with_capacity(template.len());
+    let mut rest = template;
+    while let Some(start) = rest.find("{{") {
+        out.push_str(&rest[..start]);
+        let after = &rest[start + 2..];
+        match after.find("}}") {
+            Some(end) => {
+                let name = after[..end].trim();
+                match vars.get(name) {
+                    Some(v) => out.push_str(v),
+                    None => out.push_str(&format!("<missing:{name}>")),
+                }
+                rest = &after[end + 2..];
+            }
+            None => {
+                out.push_str("{{");
+                rest = after;
+            }
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+/// The Listing-1 synthesis prompt template.
+pub const SYNTHESIS_TEMPLATE: &str = "\
+You write custom {{ accelerator }} kernels to replace the operators in \
+the given architecture to get speedups.
+
+Here's an example to show you the syntax of inline embedding custom \
+{{ accelerator }} operators:
+{{ example_arch_src }}
+
+The example new arch with custom {{ accelerator }} kernels:
+{{ example_new_arch_src }}
+
+You are given the following architecture:
+{{ arc_src }}
+{{ reference_section }}{{ feedback_section }}
+Optimize the architecture named Model with custom {{ accelerator }} \
+operators. Output the new code in codeblocks.
+";
+
+/// The single-shot example: vector addition (the paper's Appendix A/B
+/// example, in KIR rendering).
+pub fn vector_add_example() -> (String, String) {
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::BinaryKind;
+    use crate::tensor::Shape;
+    let mut b = GraphBuilder::new("vector_add");
+    let x = b.input(Shape::of(&[1024]));
+    let y = b.input(Shape::of(&[1024]));
+    let z = b.binary(BinaryKind::Add, x, y);
+    let g = b.finish(vec![z]);
+    let arch = g.render();
+    let new_arch = format!(
+        "{arch}// schedule: threadgroup=256 vec_width=4 ept=1 (one bounds check per thread)\n"
+    );
+    (arch, new_arch)
+}
+
+/// Assemble the full synthesis prompt for a problem.
+pub fn synthesis_prompt(
+    spec: &PlatformSpec,
+    problem: &Problem,
+    reference: Option<&Program>,
+    prev: Option<(&Program, &str)>,
+    recommendation: Option<&Recommendation>,
+) -> String {
+    let (example, example_new) = vector_add_example();
+    let reference_section = match reference {
+        Some(r) => format!(
+            "\nHere is a functionally correct CUDA implementation of the same \
+             architecture to use as a reference:\n{}\n",
+            r.source_listing
+        ),
+        None => String::new(),
+    };
+    let feedback_section = match (prev, recommendation) {
+        (Some((prog, err)), None) => format!(
+            "\nYour previous attempt was:\n{}\nIt failed with:\n{err}\nFix the error.\n",
+            prog.source_listing
+        ),
+        (Some((prog, _)), Some(rec)) => format!(
+            "\nYour previous attempt was correct:\n{}\nPerformance analysis \
+             recommendation:\n{}\nImprove its performance.\n",
+            prog.source_listing,
+            rec.text()
+        ),
+        (None, _) => String::new(),
+    };
+    let mut vars: BTreeMap<&str, String> = BTreeMap::new();
+    vars.insert("accelerator", spec.kind.language().to_string());
+    vars.insert("example_arch_src", example);
+    vars.insert("example_new_arch_src", example_new);
+    vars.insert("arc_src", problem.eval_graph.render());
+    vars.insert("reference_section", reference_section);
+    vars.insert("feedback_section", feedback_section);
+    render(SYNTHESIS_TEMPLATE, &vars)
+}
+
+/// The performance-analysis prompt (o in `G : (o, k, {v}) → r`).
+pub fn analysis_prompt(spec: &PlatformSpec, program: &Program, artifacts_desc: &str) -> String {
+    format!(
+        "You are a {} performance engineer. Given the kernel source and the \
+         profiling data below, produce a single recommendation for maximum \
+         performance improvement.\n\nKernel source:\n{}\nProfiling data:\n{}\n",
+        spec.kind.language(),
+        program.source_listing,
+        artifacts_desc
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::cuda;
+    use crate::workloads::Suite;
+
+    #[test]
+    fn render_substitutes() {
+        let mut vars = BTreeMap::new();
+        vars.insert("a", "X".to_string());
+        assert_eq!(render("{{ a }}-{{ a }}", &vars), "X-X");
+        assert_eq!(render("{{ b }}", &vars), "<missing:b>");
+        assert_eq!(render("no vars", &vars), "no vars");
+    }
+
+    #[test]
+    fn render_handles_unclosed() {
+        let vars = BTreeMap::new();
+        assert_eq!(render("oops {{ tail", &vars), "oops {{ tail");
+    }
+
+    #[test]
+    fn synthesis_prompt_mentions_platform_and_arch() {
+        let suite = Suite::sample(1);
+        let p = &suite.problems[0];
+        let spec = cuda::h100();
+        let prompt = synthesis_prompt(&spec, p, None, None, None);
+        assert!(prompt.contains("CUDA"));
+        assert!(prompt.contains("graph"));
+        assert!(!prompt.contains("<missing:"));
+    }
+
+    #[test]
+    fn reference_and_feedback_sections_appear() {
+        let suite = Suite::sample(1);
+        let p = &suite.problems[0];
+        let spec = cuda::h100();
+        let prog = crate::agents::generation::tests_support::trivial_program(p);
+        let with_ref = synthesis_prompt(&spec, p, Some(&prog), None, None);
+        assert!(with_ref.contains("reference"));
+        let with_err = synthesis_prompt(&spec, p, None, Some((&prog, "error: boom")), None);
+        assert!(with_err.contains("error: boom"));
+        let with_rec = synthesis_prompt(
+            &spec,
+            p,
+            None,
+            Some((&prog, "")),
+            Some(&Recommendation::Vectorize),
+        );
+        assert!(with_rec.contains("vectorized loads"));
+    }
+}

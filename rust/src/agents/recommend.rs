@@ -1,0 +1,123 @@
+//! The recommendation taxonomy the performance-analysis agent emits.
+//!
+//! The agent is prompted to generate "a single recommendation for
+//! maximum performance improvement" (§3.2); each recommendation maps
+//! onto a schedule lever or graph rewrite the generation agent can act
+//! on in the next iteration.
+
+use crate::sched::schedule::Lever;
+
+/// One actionable optimization recommendation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Recommendation {
+    /// Consolidate launches with CUDA graphs (launch-bound plans).
+    UseCudaGraphs,
+    /// Cache pipeline state / command queue across invocations (the
+    /// Metal analog of launch consolidation — §7.2's listing).
+    CachePipelineState,
+    /// Fuse more ops to cut launches and HBM round trips.
+    IncreaseFusion,
+    /// Retile the matmul/conv kernels (low MM-engine utilization).
+    RetileMatmul,
+    /// Widen vector loads / raise elements-per-thread (memory-bound).
+    Vectorize,
+    /// Use fast-math intrinsics for transcendental-heavy kernels.
+    UseFastMath,
+    /// Adjust threadgroup size (poor occupancy).
+    AdjustThreadgroup,
+    /// No further opportunity found.
+    LooksOptimal,
+}
+
+impl Recommendation {
+    /// The schedule lever this recommendation targets.
+    pub fn lever(&self) -> Option<Lever> {
+        match self {
+            Recommendation::UseCudaGraphs => Some(Lever::Graphs),
+            Recommendation::CachePipelineState => Some(Lever::Graphs),
+            Recommendation::IncreaseFusion => Some(Lever::Fusion),
+            Recommendation::RetileMatmul => Some(Lever::Tile),
+            Recommendation::Vectorize => Some(Lever::Ept),
+            Recommendation::UseFastMath => Some(Lever::FastMath),
+            Recommendation::AdjustThreadgroup => Some(Lever::Threadgroup),
+            Recommendation::LooksOptimal => None,
+        }
+    }
+
+    /// Natural-language rendering (what `r` looks like in the prompt).
+    pub fn text(&self) -> &'static str {
+        match self {
+            Recommendation::UseCudaGraphs => {
+                "Launch overhead dominates this workload: capture the kernel \
+                 sequence into a CUDA graph so the per-kernel dispatch cost is \
+                 paid once per graph launch."
+            }
+            Recommendation::CachePipelineState => {
+                "Encoder setup dominates this workload: cache the device \
+                 handle, pipeline state and command queue in thread-local \
+                 storage so repeated invocations skip re-initialization."
+            }
+            Recommendation::IncreaseFusion => {
+                "The timeline shows many short kernels separated by gaps: fuse \
+                 the elementwise epilogues into their producing matmul/conv \
+                 kernels to remove launches and intermediate memory traffic."
+            }
+            Recommendation::RetileMatmul => {
+                "The matmul kernels underutilize the matrix engine: increase \
+                 the output tile (e.g. 128x128 with a 64-deep K slab) so each \
+                 threadblock reuses operands from on-chip memory."
+            }
+            Recommendation::Vectorize => {
+                "The hottest kernel is memory-bound with low effective \
+                 bandwidth: use vectorized loads and process 8 elements per \
+                 thread to amortize per-access overhead."
+            }
+            Recommendation::UseFastMath => {
+                "A large fraction of time is spent in transcendental math: \
+                 switch to fast::exp-style intrinsics; the precision trade-off \
+                 is acceptable for this workload."
+            }
+            Recommendation::AdjustThreadgroup => {
+                "Occupancy is low: tune the threadgroup size toward 256 \
+                 threads based on maxTotalThreadsPerThreadgroup."
+            }
+            Recommendation::LooksOptimal => {
+                "The profile shows no dominant bottleneck; the implementation \
+                 is near the achievable roofline."
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levers_cover_actionable_recs() {
+        assert_eq!(Recommendation::UseCudaGraphs.lever(), Some(Lever::Graphs));
+        assert_eq!(Recommendation::LooksOptimal.lever(), None);
+    }
+
+    #[test]
+    fn texts_nonempty_and_distinct() {
+        let recs = [
+            Recommendation::UseCudaGraphs,
+            Recommendation::CachePipelineState,
+            Recommendation::IncreaseFusion,
+            Recommendation::RetileMatmul,
+            Recommendation::Vectorize,
+            Recommendation::UseFastMath,
+            Recommendation::AdjustThreadgroup,
+            Recommendation::LooksOptimal,
+        ];
+        let texts: Vec<&str> = recs.iter().map(|r| r.text()).collect();
+        for t in &texts {
+            assert!(t.len() > 20);
+        }
+        let mut sorted = texts.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), texts.len());
+    }
+}

@@ -1,0 +1,78 @@
+//! PyTorch-eager-mode analog: one kernel per op, stock schedules.
+//!
+//! Eager mode is the reference implementation every speedup in the
+//! paper is computed against (Fig 2, Fig 4, Table 6 "PyTorch Eager").
+//! Stock kernels are *good* kernels — vendor libraries tile matmuls
+//! well — so the schedule is competent on compute, but nothing is
+//! fused and every op pays a launch.
+
+use crate::kir::rewrite::fusion;
+use crate::kir::Graph;
+use crate::perfsim::lower::lower_with_plan;
+use crate::perfsim::{simulate, Plan, SimResult};
+use crate::platform::{PlatformKind, PlatformSpec};
+use crate::sched::{Schedule, Tile};
+use crate::util::rng::Pcg;
+
+/// The schedule stock vendor kernels effectively run with: decent
+/// tiles and vectorization (cuBLAS/MPS are well tuned per kernel),
+/// no fusion, no graphs, no fast-math.
+pub fn stock_schedule(kind: PlatformKind) -> Schedule {
+    Schedule {
+        fusion_depth: 0,
+        tile: match kind {
+            PlatformKind::Cuda => Tile { bm: 128, bn: 128, bk: 32 },
+            PlatformKind::Metal => Tile { bm: 64, bn: 64, bk: 32 },
+        },
+        ept: 4,
+        threadgroup: 256,
+        fast_math: false,
+        use_graphs: false,
+        vec_width: 4,
+    }
+}
+
+/// Lower a graph the eager way.
+pub fn plan(g: &Graph, spec: &PlatformSpec) -> Plan {
+    let s = stock_schedule(spec.kind);
+    let fplan = fusion::none(g);
+    lower_with_plan(g, &s, &fplan)
+}
+
+/// Measure eager execution (the paper's protocol).
+pub fn measure(g: &Graph, spec: &PlatformSpec, rng: &mut Pcg) -> SimResult {
+    simulate(spec, &plan(g, spec), rng, super::RUNS, super::WARMUP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::UnaryKind;
+    use crate::platform::cuda;
+    use crate::tensor::Shape;
+
+    fn g() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(Shape::of(&[64, 64]));
+        let w = b.input(Shape::of(&[64, 64]));
+        let m = b.matmul(x, w);
+        let r = b.unary(UnaryKind::Relu, m);
+        b.finish(vec![r])
+    }
+
+    #[test]
+    fn eager_launches_equal_op_count() {
+        let spec = cuda::h100();
+        let p = plan(&g(), &spec);
+        assert_eq!(p.launches(), 2);
+    }
+
+    #[test]
+    fn eager_measure_positive() {
+        let spec = cuda::h100();
+        let mut rng = Pcg::seed(0);
+        let r = measure(&g(), &spec, &mut rng);
+        assert!(r.measured_s > 0.0);
+    }
+}

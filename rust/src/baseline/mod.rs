@@ -1,0 +1,15 @@
+//! Baseline executors — the comparators of every paper table/figure.
+//!
+//! - [`eager`] — PyTorch-eager analog: one kernel per op, stock
+//!   schedule, no fusion (the §5.1 / §6.1 baseline).
+//! - [`compilebase`] — torch.compile (TorchInductor, default mode)
+//!   analog: greedy epilogue fusion + sane-but-generic schedules, plus
+//!   the compile-context behavior the paper controls for (§4.1).
+
+pub mod eager;
+pub mod compilebase;
+
+/// The paper's measurement protocol constants (§4.1): execution time
+/// across 100 runs with 10 warmup steps.
+pub const RUNS: usize = 100;
+pub const WARMUP: usize = 10;

@@ -1,0 +1,57 @@
+//! Job and result types for the coordinator.
+
+use crate::metrics::TaskOutcome;
+use crate::workloads::Level;
+
+/// Result of running the full iterative loop on one (persona, problem).
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub problem_id: String,
+    pub level: Level,
+    pub persona: &'static str,
+    /// Execution-state label per iteration (§3.3 logging).
+    pub state_history: Vec<&'static str>,
+    /// Best outcome across iterations (the paper scores the best
+    /// correct kernel produced during refinement).
+    pub outcome: TaskOutcome,
+    /// Iteration index that produced the best outcome (if any).
+    pub best_iteration: Option<usize>,
+    /// Baseline time (seconds) the speedup is computed against.
+    pub baseline_s: f64,
+    /// Best candidate time (seconds), if any correct iteration.
+    pub best_candidate_s: Option<f64>,
+}
+
+impl TaskResult {
+    /// Fraction of iterations that were correct.
+    pub fn correct_fraction(&self) -> f64 {
+        if self.state_history.is_empty() {
+            return 0.0;
+        }
+        self.state_history
+            .iter()
+            .filter(|s| **s == "correct")
+            .count() as f64
+            / self.state_history.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correct_fraction() {
+        let r = TaskResult {
+            problem_id: "x".into(),
+            level: Level::L1,
+            persona: "p",
+            state_history: vec!["mismatch", "correct", "correct"],
+            outcome: TaskOutcome::correct(1.5),
+            best_iteration: Some(2),
+            baseline_s: 1.0,
+            best_candidate_s: Some(0.66),
+        };
+        assert!((r.correct_fraction() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,17 @@
+//! The coordinator: KForge's execution engine.
+//!
+//! Distributes (persona × problem) jobs over a pool of device workers —
+//! one kernel at a time per computational unit, exactly the paper's
+//! resource policy (§4.3: one kernel per GPU on CUDA, one per Mac
+//! Studio node on Metal) — runs the iterative synthesis loop for each
+//! job, and aggregates `fast_p` outcomes.  Deterministic regardless of
+//! worker interleaving: every job's RNG stream is forked from
+//! (seed, persona, problem).
+
+pub mod job;
+pub mod worker;
+pub mod experiment;
+pub mod runlog;
+
+pub use experiment::{run_campaign, BaselineKind, CampaignResult, ExperimentConfig};
+pub use job::TaskResult;

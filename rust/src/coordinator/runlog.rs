@@ -1,0 +1,91 @@
+//! Run logging: the paper saves detailed logs for each workload after
+//! every generation-evaluation iteration (§3.3).  We serialize campaign
+//! results as JSON documents the report tooling (and tests) consume.
+
+use super::experiment::CampaignResult;
+use crate::util::json::Json;
+
+/// Serialize one campaign to a JSON document.
+pub fn to_json(c: &CampaignResult) -> Json {
+    let results: Vec<Json> = c
+        .results
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("problem", r.problem_id.as_str())
+                .set("level", r.level.name())
+                .set("persona", r.persona)
+                .set(
+                    "states",
+                    Json::Arr(r.state_history.iter().map(|s| Json::Str(s.to_string())).collect()),
+                )
+                .set("correct", r.outcome.correct)
+                .set("speedup", r.outcome.speedup)
+                .set("baseline_s", r.baseline_s)
+                .set(
+                    "best_candidate_s",
+                    r.best_candidate_s.map(Json::from).unwrap_or(Json::Null),
+                )
+                .set(
+                    "best_iteration",
+                    r.best_iteration.map(|i| Json::from(i)).unwrap_or(Json::Null),
+                )
+        })
+        .collect();
+    Json::obj()
+        .set("config", c.config_name.as_str())
+        .set("results", Json::Arr(results))
+}
+
+/// Write a campaign log under `dir` as `<config>.json`.
+pub fn write(c: &CampaignResult, dir: &std::path::Path) -> anyhow::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{}.json", c.config_name));
+    std::fs::write(&path, to_json(c).to_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::TaskResult;
+    use crate::metrics::TaskOutcome;
+    use crate::workloads::Level;
+
+    fn campaign() -> CampaignResult {
+        CampaignResult {
+            config_name: "unit".into(),
+            results: vec![TaskResult {
+                problem_id: "p1".into(),
+                level: Level::L2,
+                persona: "openai-gpt-5",
+                state_history: vec!["mismatch", "correct"],
+                outcome: TaskOutcome::correct(1.4),
+                best_iteration: Some(1),
+                baseline_s: 2.0,
+                best_candidate_s: Some(1.43),
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = to_json(&campaign());
+        let parsed = crate::util::json::parse(&j.to_pretty()).unwrap();
+        let r = &parsed.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r.get("problem").unwrap().as_str(), Some("p1"));
+        assert_eq!(r.get("correct").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            r.get("states").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("kforge_runlog_test");
+        let path = write(&campaign(), &dir).unwrap();
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

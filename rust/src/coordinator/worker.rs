@@ -1,0 +1,78 @@
+//! The device-worker pool.
+//!
+//! The paper evaluates one kernel at a time per computational unit
+//! (§4.3).  `run_jobs` fans a job list over `workers` threads; results
+//! return in job order regardless of scheduling, and each job's
+//! determinism comes from its own forked RNG stream (see
+//! `experiment::run_task`), so the pool size never changes results.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `jobs` across `workers` threads with `f`, preserving job order
+/// in the returned vector.
+pub fn run_jobs<J, R, F>(workers: usize, jobs: &[J], f: F) -> Vec<R>
+where
+    J: Sync,
+    R: Send,
+    F: Fn(&J) -> R + Sync,
+{
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let n = jobs.len();
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let workers = workers.clamp(1, n);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&jobs[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<usize> = (0..100).collect();
+        let out = run_jobs(8, &jobs, |&j| j * 2);
+        assert_eq!(out, (0..100).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_matches_many() {
+        let jobs: Vec<usize> = (0..50).collect();
+        let a = run_jobs(1, &jobs, |&j| j * j);
+        let b = run_jobs(16, &jobs, |&j| j * j);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let out: Vec<usize> = run_jobs(4, &[] as &[usize], |&j| j);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let count = AtomicUsize::new(0);
+        let jobs: Vec<usize> = (0..200).collect();
+        run_jobs(7, &jobs, |_| count.fetch_add(1, Ordering::Relaxed));
+        assert_eq!(count.load(Ordering::Relaxed), 200);
+    }
+}

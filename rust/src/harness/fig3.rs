@@ -1,0 +1,110 @@
+//! Figure 3: CUDA — iterative refinement vs iterative refinement +
+//! profiling information, measured against torch.compile, for the
+//! three top reasoning models.
+
+use super::{render, Scale};
+use crate::agents::persona::top_reasoning;
+use crate::coordinator::{run_campaign, BaselineKind, CampaignResult, ExperimentConfig};
+use crate::metrics;
+use crate::workloads::Level;
+
+pub struct Fig3 {
+    pub thresholds: Vec<f64>,
+    /// (persona, level, with_profiling, curve)
+    pub series: Vec<(String, Level, bool, Vec<f64>)>,
+    pub plain: CampaignResult,
+    pub profiled: CampaignResult,
+}
+
+pub fn run(scale: Scale) -> (Fig3, String) {
+    let suite = scale.suite();
+    let personas = top_reasoning();
+    let mut cfg = ExperimentConfig::cuda_iterative(personas.clone());
+    cfg.name = "cuda_iter_vs_compile".into();
+    cfg.baseline = BaselineKind::TorchCompile;
+    let plain = run_campaign(&suite, None, &cfg);
+    let mut cfg_prof = cfg.clone();
+    cfg_prof.name = "cuda_iter_prof_vs_compile".into();
+    cfg_prof.use_profiling = true;
+    let profiled = run_campaign(&suite, None, &cfg_prof);
+
+    let thresholds = metrics::standard_thresholds();
+    let mut series = Vec::new();
+    for persona in &personas {
+        for level in Level::ALL {
+            for (campaign, with_prof) in [(&plain, false), (&profiled, true)] {
+                let outcomes = campaign.outcomes(persona.name, level);
+                let curve: Vec<f64> = thresholds
+                    .iter()
+                    .map(|&p| metrics::fast_p(&outcomes, p))
+                    .collect();
+                series.push((persona.name.to_string(), level, with_prof, curve));
+            }
+        }
+    }
+    let mut text = String::new();
+    for level in Level::ALL {
+        let level_series: Vec<(String, Vec<f64>)> = series
+            .iter()
+            .filter(|(_, l, _, _)| *l == level)
+            .map(|(n, _, prof, c)| {
+                (
+                    format!("{n}{}", if *prof { "+prof" } else { "" }),
+                    c.clone(),
+                )
+            })
+            .collect();
+        text.push_str(&render::curves(
+            &format!(
+                "Figure 3 ({}): CUDA iter vs iter+profiling, vs torch.compile, fast_p",
+                level.name()
+            ),
+            &thresholds,
+            &level_series,
+        ));
+        text.push('\n');
+    }
+    (
+        Fig3 {
+            thresholds,
+            series,
+            plain,
+            profiled,
+        },
+        text,
+    )
+}
+
+impl Fig3 {
+    pub fn value(&self, persona: &str, level: Level, with_prof: bool, p: f64) -> f64 {
+        let idx = self.thresholds.iter().position(|&t| (t - p).abs() < 1e-9).unwrap();
+        self.series
+            .iter()
+            .find(|(n, l, pr, _)| n == persona && *l == level && *pr == with_prof)
+            .map(|(_, _, _, c)| c[idx])
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiling_helps_gpt5_quick() {
+        let (fig, text) = run(Scale::Quick(10));
+        assert!(text.contains("Figure 3"));
+        // paper: profiling info is most consistently helpful for gpt-5;
+        // aggregate over levels at fast_1.0
+        let mut plain_sum = 0.0;
+        let mut prof_sum = 0.0;
+        for level in Level::ALL {
+            plain_sum += fig.value("openai-gpt-5", level, false, 1.0);
+            prof_sum += fig.value("openai-gpt-5", level, true, 1.0);
+        }
+        assert!(
+            prof_sum >= plain_sum - 0.11,
+            "profiling should not hurt gpt-5 materially: {prof_sum} vs {plain_sum}"
+        );
+    }
+}

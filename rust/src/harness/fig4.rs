@@ -1,0 +1,114 @@
+//! Figure 4: MPS program synthesis — iterative refinement (solid) vs
+//! iterative refinement + CUDA reference implementation (dashed).
+
+use super::{render, Scale};
+use crate::agents::persona::top_reasoning;
+use crate::coordinator::{run_campaign, CampaignResult, ExperimentConfig};
+use crate::metrics;
+use crate::workloads::refcorpus::RefCorpus;
+use crate::workloads::Level;
+
+pub struct Fig4 {
+    pub thresholds: Vec<f64>,
+    /// (persona, level, with_reference, curve)
+    pub series: Vec<(String, Level, bool, Vec<f64>)>,
+    pub plain: CampaignResult,
+    pub with_ref: CampaignResult,
+}
+
+pub fn run(scale: Scale) -> (Fig4, String) {
+    let suite = scale.suite();
+    let personas = top_reasoning();
+    let corpus = RefCorpus::build(&suite, scale.corpus_attempts(), 0xC0DE);
+
+    let mut cfg = ExperimentConfig::mps_iterative(personas.clone());
+    cfg.name = "mps_iterative_fig4".into();
+    let plain = run_campaign(&suite, None, &cfg);
+    let mut cfg_ref = cfg.clone();
+    cfg_ref.name = "mps_iterative_cudaref_fig4".into();
+    cfg_ref.use_reference = true;
+    let with_ref = run_campaign(&suite, Some(&corpus), &cfg_ref);
+
+    let thresholds = metrics::standard_thresholds();
+    let mut series = Vec::new();
+    for persona in &personas {
+        for level in Level::ALL {
+            for (campaign, has_ref) in [(&plain, false), (&with_ref, true)] {
+                let outcomes = campaign.outcomes(persona.name, level);
+                let curve: Vec<f64> = thresholds
+                    .iter()
+                    .map(|&p| metrics::fast_p(&outcomes, p))
+                    .collect();
+                series.push((persona.name.to_string(), level, has_ref, curve));
+            }
+        }
+    }
+    let mut text = String::new();
+    for level in Level::ALL {
+        let level_series: Vec<(String, Vec<f64>)> = series
+            .iter()
+            .filter(|(_, l, _, _)| *l == level)
+            .map(|(n, _, has_ref, c)| {
+                (
+                    format!("{n}{}", if *has_ref { "+cudaref" } else { "" }),
+                    c.clone(),
+                )
+            })
+            .collect();
+        text.push_str(&render::curves(
+            &format!(
+                "Figure 4 ({}): MPS iter refinement vs +CUDA reference, fast_p vs Eager",
+                level.name()
+            ),
+            &thresholds,
+            &level_series,
+        ));
+        text.push('\n');
+    }
+    (
+        Fig4 {
+            thresholds,
+            series,
+            plain,
+            with_ref,
+        },
+        text,
+    )
+}
+
+impl Fig4 {
+    pub fn value(&self, persona: &str, level: Level, has_ref: bool, p: f64) -> f64 {
+        let idx = self.thresholds.iter().position(|&t| (t - p).abs() < 1e-9).unwrap();
+        self.series
+            .iter()
+            .find(|(n, l, r, _)| n == persona && *l == level && *r == has_ref)
+            .map(|(_, _, _, c)| c[idx])
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_boosts_majority_quick() {
+        let (fig, text) = run(Scale::Quick(10));
+        assert!(text.contains("Figure 4"));
+        // paper: the CUDA reference boosts performance on the majority
+        // of fast_p thresholds for claude-opus-4 (the big gainer)
+        let mut better = 0;
+        let mut total = 0;
+        for level in Level::ALL {
+            for &p in &[0.0, 0.5, 1.0] {
+                total += 1;
+                if fig.value("claude-opus-4", level, true, p)
+                    >= fig.value("claude-opus-4", level, false, p)
+                {
+                    better += 1;
+                }
+            }
+        }
+        assert!(better * 2 >= total, "reference helped only {better}/{total}");
+    }
+}

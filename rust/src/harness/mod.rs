@@ -1,0 +1,43 @@
+//! The benchmark harness: one module per paper table/figure.
+//!
+//! Every entry point regenerates its artifact end-to-end (campaigns →
+//! metrics → rendered rows) and returns both the rendered text and the
+//! underlying numbers, so tests can assert the *shape* criteria from
+//! DESIGN.md §4 (who wins, by roughly what factor, where crossovers
+//! fall) without chasing absolute values.
+
+pub mod render;
+pub mod table2;
+pub mod fig2;
+pub mod fig3;
+pub mod table4;
+pub mod fig4;
+pub mod table5;
+pub mod table6;
+pub mod casestudy;
+pub mod ablation;
+
+/// Scale knob for harness runs: `Full` reproduces the paper's set;
+/// `Quick(n)` uses n problems per level (CI / smoke runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Full,
+    Quick(usize),
+}
+
+impl Scale {
+    pub fn suite(&self) -> crate::workloads::Suite {
+        match self {
+            Scale::Full => crate::workloads::Suite::full(),
+            Scale::Quick(n) => crate::workloads::Suite::sample(*n),
+        }
+    }
+
+    /// Reference-corpus attempts per problem.
+    pub fn corpus_attempts(&self) -> usize {
+        match self {
+            Scale::Full => 8,
+            Scale::Quick(_) => 4,
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Rendering helpers shared by the harness: fixed-width tables and
+//! ASCII fast_p curves in the paper's row/series format.
+
+/// Render a fixed-width table.
+pub fn table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = format!("== {title} ==\n");
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a fast_p curve family: one series per (label), thresholds as
+/// columns — the textual equivalent of the paper's figures.
+pub fn curves(title: &str, thresholds: &[f64], series: &[(String, Vec<f64>)]) -> String {
+    let mut header: Vec<String> = vec!["series".into()];
+    header.extend(thresholds.iter().map(|p| format!("p={p}")));
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|(label, ys)| {
+            let mut row = vec![label.clone()];
+            row.extend(ys.iter().map(|y| format!("{y:.3}")));
+            row
+        })
+        .collect();
+    table(
+        title,
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = table(
+            "T",
+            &["a", "long-header"],
+            &[vec!["x".into(), "1".into()], vec!["yyyy".into(), "2".into()]],
+        );
+        assert!(t.contains("== T =="));
+        assert!(t.contains("long-header"));
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    fn curves_format() {
+        let c = curves(
+            "F",
+            &[0.0, 1.0],
+            &[("m1".into(), vec![0.9, 0.5])],
+        );
+        assert!(c.contains("p=1"));
+        assert!(c.contains("0.500"));
+    }
+}

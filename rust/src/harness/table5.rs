@@ -1,0 +1,90 @@
+//! Table 5: MPS — impact of profiling information.  fast_1.0 and
+//! fast_1.5 for CUDA-Reference vs CUDA-Reference + Prof-Info.
+
+use super::{render, Scale};
+use crate::agents::persona::top_reasoning;
+use crate::coordinator::{run_campaign, ExperimentConfig};
+use crate::metrics;
+use crate::workloads::refcorpus::RefCorpus;
+use crate::workloads::Level;
+
+pub struct Table5 {
+    /// (persona, threshold, [ref L1,L2,L3], [ref+prof L1,L2,L3])
+    pub rows: Vec<(String, f64, [f64; 3], [f64; 3])>,
+}
+
+pub fn run(scale: Scale) -> (Table5, String) {
+    let suite = scale.suite();
+    let personas = top_reasoning();
+    let corpus = RefCorpus::build(&suite, scale.corpus_attempts(), 0xC0DE);
+
+    let mut cfg = ExperimentConfig::mps_iterative(personas.clone());
+    cfg.name = "mps_cudaref_table5".into();
+    cfg.use_reference = true;
+    let with_ref = run_campaign(&suite, Some(&corpus), &cfg);
+
+    let mut cfg_prof = cfg.clone();
+    cfg_prof.name = "mps_cudaref_prof_table5".into();
+    cfg_prof.use_profiling = true;
+    let with_prof = run_campaign(&suite, Some(&corpus), &cfg_prof);
+
+    let mut rows = Vec::new();
+    for &threshold in &[1.0, 1.5] {
+        for persona in &personas {
+            let mut r = [0.0; 3];
+            let mut pr = [0.0; 3];
+            for (i, level) in Level::ALL.iter().enumerate() {
+                r[i] = metrics::fast_p(&with_ref.outcomes(persona.name, *level), threshold);
+                pr[i] = metrics::fast_p(&with_prof.outcomes(persona.name, *level), threshold);
+            }
+            rows.push((persona.name.to_string(), threshold, r, pr));
+        }
+    }
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(n, t, r, p)| {
+            vec![
+                format!("fast_{t}"),
+                n.clone(),
+                format!("{:.3}", r[0]),
+                format!("{:.3}", r[1]),
+                format!("{:.3}", r[2]),
+                format!("{:.3}", p[0]),
+                format!("{:.3}", p[1]),
+                format!("{:.3}", p[2]),
+            ]
+        })
+        .collect();
+    let text = render::table(
+        "Table 5: MPS — impact of profiling information (CUDA-ref vs CUDA-ref+prof)",
+        &["metric", "Model", "ref L1", "ref L2", "ref L3", "prof L1", "prof L2", "prof L3"],
+        &table_rows,
+    );
+    (Table5 { rows }, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiling_helps_at_fast1_on_l2_l3_quick() {
+        let (t, text) = run(Scale::Quick(10));
+        assert!(text.contains("Table 5"));
+        // paper shape: at fast_1.0, prof info helps on L2/L3 (sum over
+        // the three models); at fast_1.5 trends are inconsistent — we
+        // only assert the fast_1.0 direction with slack.
+        let mut ref_sum = 0.0;
+        let mut prof_sum = 0.0;
+        for (_, thr, r, p) in &t.rows {
+            if (*thr - 1.0).abs() < 1e-9 {
+                ref_sum += r[1] + r[2];
+                prof_sum += p[1] + p[2];
+            }
+        }
+        assert!(
+            prof_sum >= ref_sum - 0.12,
+            "prof {prof_sum} should not trail ref {ref_sum} materially"
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Table 6: execution time (ms) across batch sizes for the three
+//! Table-6 architectures — PyTorch Eager vs torch.compile vs KForge.
+//!
+//! The §7.1 case study: at small batch KForge's launch-lean programs
+//! win; at large batch torch.compile's graph planning wins.
+
+use super::render;
+use crate::agents::persona::by_name;
+use crate::agents::GenerationAgent;
+use crate::baseline::{compilebase, eager};
+use crate::platform::{cuda, PlatformKind};
+use crate::util::rng::Pcg;
+use crate::verify;
+use crate::workloads::level3;
+use crate::workloads::spec::{Level, Problem};
+
+pub const BATCHES: [usize; 5] = [8, 16, 32, 64, 128];
+
+pub struct Table6 {
+    /// (method, workload, [ms per batch])
+    pub rows: Vec<(String, String, [f64; 5])>,
+}
+
+fn problem_for(name: &str, ctor: fn(usize) -> crate::kir::Graph, batch: usize) -> Problem {
+    Problem {
+        id: format!("table6_{name}_b{batch}"),
+        level: Level::L3,
+        // table 6 uses perf-scale pricing only; eval graph small
+        eval_graph: ctor(1),
+        perf_graph: ctor(batch),
+        op_families: vec![],
+        constant_output: false,
+        reducible: false,
+    }
+}
+
+/// The batch size the programs are synthesized at (the paper evaluates
+/// whether programs "generalize beyond their training shapes" — §7.1).
+pub const GEN_BATCH: usize = 16;
+
+/// Synthesize the best KForge program at GEN_BATCH with the gpt-5
+/// persona (the §7.1 case study uses gpt-5-synthesized programs) and
+/// return its schedule.
+fn synthesize_best(name: &str, ctor: fn(usize) -> crate::kir::Graph, rng: &mut Pcg) -> crate::sched::Schedule {
+    let spec = cuda::h100();
+    let persona = by_name("openai-gpt-5").unwrap();
+    let agent = GenerationAgent::new(persona, PlatformKind::Cuda);
+    let problem = problem_for(name, ctor, GEN_BATCH);
+    let mut best: Option<(f64, crate::sched::Schedule)> = None;
+    let mut current = None;
+    let mut last_error: Option<String> = None;
+    for _ in 0..5 {
+        let cand = match (&current, &last_error) {
+            (None, _) => agent.synthesize(&problem, None, rng),
+            (Some(prev), Some(err)) => agent.refine(&problem, prev, Some(err.as_str()), None, rng),
+            (Some(prev), None) => agent.refine(&problem, prev, None, None, rng),
+        };
+        let out = verify::verify(&spec, &problem, cand.as_ref(), rng);
+        match out.state {
+            crate::verify::ExecState::Correct => {
+                let t = out.sim.unwrap().measured_s;
+                if best.as_ref().map(|(b, _)| t < *b).unwrap_or(true) {
+                    best = Some((t, cand.as_ref().unwrap().schedule.clone()));
+                }
+                last_error = None;
+                current = cand;
+            }
+            ref f => {
+                last_error = f.error_text().map(String::from);
+                if cand.is_some() {
+                    current = cand;
+                }
+            }
+        }
+    }
+    best.map(|(_, s)| s).unwrap_or_else(crate::sched::Schedule::naive)
+}
+
+/// Price the synthesized program at a different batch size.  The
+/// generated kernels carry a *fixed grid* sized for GEN_BATCH (the
+/// paper's "robust to shape variation" question): at larger batches
+/// each thread loops over proportionally more elements, drifting the
+/// schedule off its sweet spot — the mechanism behind the paper's
+/// large-batch degradation where torch.compile's shape-generic
+/// planning wins (Table 6).
+fn kforge_time_at(schedule: &crate::sched::Schedule, name: &str, ctor: fn(usize) -> crate::kir::Graph, batch: usize, rng: &mut Pcg) -> f64 {
+    let spec = cuda::h100();
+    let problem = problem_for(name, ctor, batch);
+    let mut sched = schedule.clone();
+    if batch > GEN_BATCH {
+        sched.ept = (sched.ept * batch / GEN_BATCH).next_power_of_two().min(128);
+    }
+    let plan = crate::perfsim::lower::lower(&problem.perf_graph, &sched);
+    crate::perfsim::simulate(&spec, &plan, rng, crate::baseline::RUNS, crate::baseline::WARMUP)
+        .measured_s
+}
+
+pub fn run() -> (Table6, String) {
+    let spec = cuda::h100();
+    let workloads: [(&str, fn(usize) -> crate::kir::Graph); 3] = [
+        ("SqueezeNetFire", level3::squeezenet_fire),
+        ("MobileNetV2", level3::mobilenetv2_block),
+        ("MinGPT", level3::mingpt_block),
+    ];
+    let mut rows = Vec::new();
+    for method in ["PyTorch Eager", "Torch Compile", "KForge (ours)"] {
+        for (wname, ctor) in workloads {
+            // one synthesized program per workload, generated at GEN_BATCH
+            // the paper reports the best synthesized implementation; run a
+            // few independent synthesis campaigns and keep the fastest
+            let kforge_sched = if method == "KForge (ours)" {
+                let spec6 = cuda::h100();
+                let gen_problem = problem_for(wname, ctor, GEN_BATCH);
+                let mut best: Option<(f64, crate::sched::Schedule)> = None;
+                for restart in 0..3u64 {
+                    let mut rng = Pcg::new(
+                        0x7AB1E6 ^ restart,
+                        crate::util::rng::fnv1a(wname.as_bytes()),
+                    );
+                    let sched = synthesize_best(wname, ctor, &mut rng);
+                    let plan = crate::perfsim::lower::lower(&gen_problem.perf_graph, &sched);
+                    let t = crate::perfsim::simulate(&spec6, &plan, &mut rng, 100, 10).measured_s;
+                    if best.as_ref().map(|(b, _)| t < *b).unwrap_or(true) {
+                        best = Some((t, sched));
+                    }
+                }
+                Some(best.unwrap().1)
+            } else {
+                None
+            };
+            let mut ms = [0.0f64; 5];
+            for (bi, &batch) in BATCHES.iter().enumerate() {
+                let problem = problem_for(wname, ctor, batch);
+                let mut rng = Pcg::new(
+                    0x7AB1E6,
+                    crate::util::rng::fnv1a(problem.id.as_bytes()),
+                );
+                let secs = match method {
+                    "PyTorch Eager" => eager::measure(&problem.perf_graph, &spec, &mut rng).measured_s,
+                    "Torch Compile" => {
+                        compilebase::measure(&problem.perf_graph, &spec, &mut rng).measured_s
+                    }
+                    _ => kforge_time_at(kforge_sched.as_ref().unwrap(), wname, ctor, batch, &mut rng),
+                };
+                ms[bi] = secs * 1e3;
+            }
+            rows.push((method.to_string(), wname.to_string(), ms));
+        }
+    }
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(m, w, ms)| {
+            let mut row = vec![m.clone(), w.clone()];
+            row.extend(ms.iter().map(|v| format!("{v:.3}")));
+            row
+        })
+        .collect();
+    let text = render::table(
+        "Table 6: execution time (ms) across batch sizes, H100-sim",
+        &["Method", "Workload", "b=8", "b=16", "b=32", "b=64", "b=128"],
+        &table_rows,
+    );
+    (Table6 { rows }, text)
+}
+
+impl Table6 {
+    pub fn time(&self, method: &str, workload: &str, batch: usize) -> f64 {
+        let bi = BATCHES.iter().position(|&b| b == batch).unwrap();
+        self.rows
+            .iter()
+            .find(|(m, w, _)| m == method && w == workload)
+            .map(|(_, _, ms)| ms[bi])
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_batch_kforge_wins_large_batch_compile_wins() {
+        let (t, text) = run();
+        assert!(text.contains("Table 6"));
+        // DESIGN.md shape criterion (v): small-batch crossover.
+        // aggregate across the three workloads at batch 8 vs 128
+        let works = ["SqueezeNetFire", "MobileNetV2", "MinGPT"];
+        let mut kforge_wins_small = 0;
+        let mut compile_wins_large = 0;
+        for w in works {
+            if t.time("KForge (ours)", w, 8) < t.time("Torch Compile", w, 8) {
+                kforge_wins_small += 1;
+            }
+            if t.time("Torch Compile", w, 128) < t.time("KForge (ours)", w, 128) {
+                compile_wins_large += 1;
+            }
+        }
+        assert!(kforge_wins_small >= 2, "KForge won only {kforge_wins_small}/3 at batch 8");
+        // paper: at large batch torch.compile's graph-level planning wins
+        // over the shape-overfitted synthesized programs
+        assert!(compile_wins_large >= 2, "compile won only {compile_wins_large}/3 at batch 128");
+        // KForge beats eager at its generation batch (it subsumes eager)
+        for w in works {
+            assert!(
+                t.time("KForge (ours)", w, GEN_BATCH) < t.time("PyTorch Eager", w, GEN_BATCH) * 1.2,
+                "{w} at generation batch"
+            );
+        }
+        // times grow with batch
+        for (_, _, ms) in &t.rows {
+            assert!(ms[4] > ms[0]);
+        }
+    }
+}

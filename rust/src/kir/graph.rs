@@ -1,0 +1,435 @@
+//! KIR graphs: append-only node lists in topological order, with eager
+//! shape inference at construction (the builder rejects ill-typed ops,
+//! mirroring what a kernel compiler's frontend would reject).
+
+use super::op::{BinaryKind, Op, ReduceKind, UnaryKind};
+use crate::tensor::Shape;
+use anyhow::{bail, Context, Result};
+
+pub use super::op::NodeId;
+
+/// One graph node: the op plus its inferred output shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub op: Op,
+    pub shape: Shape,
+}
+
+/// A KIR graph.  `nodes` is topologically ordered by construction
+/// (every operand id precedes its user).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Shapes of the declared inputs, in input-index order.
+    pub input_shapes: Vec<Shape>,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Ids of nodes that are `Op::Input`.
+    pub fn input_nodes(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.op, Op::Input { .. }))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Use counts per node (how many ops read it + output uses).
+    pub fn use_counts(&self) -> Vec<usize> {
+        let mut uses = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for o in n.op.operands() {
+                uses[o] += 1;
+            }
+        }
+        for &o in &self.outputs {
+            uses[o] += 1;
+        }
+        uses
+    }
+
+    /// Total FLOPs of the graph (cost-model helper; see perfsim for the
+    /// per-op accounting used by the simulator).
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|n| node_flops(self, n)).sum()
+    }
+
+    /// Pretty print for logs and "generated program" listings.
+    pub fn render(&self) -> String {
+        let mut out = format!("graph {} {{\n", self.name);
+        for (i, n) in self.nodes.iter().enumerate() {
+            let args = n
+                .op
+                .operands()
+                .iter()
+                .map(|o| format!("%{o}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            out.push_str(&format!(
+                "  %{i}: {} = {}({args})\n",
+                n.shape,
+                n.op.mnemonic()
+            ));
+        }
+        out.push_str(&format!(
+            "  return {}\n}}\n",
+            self.outputs
+                .iter()
+                .map(|o| format!("%{o}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+        out
+    }
+}
+
+/// FLOPs attributed to a single node (2·M·N·K for matmul family, ~1/el
+/// for elementwise, ~5/el for transcendental).
+pub fn node_flops(g: &Graph, n: &Node) -> f64 {
+    match &n.op {
+        Op::Matmul { lhs, .. } => {
+            let k = g.node(*lhs).shape.dim(1) as f64;
+            2.0 * n.shape.numel() as f64 * k
+        }
+        Op::Conv2d { weight, .. } => {
+            let w = &g.node(*weight).shape;
+            2.0 * n.shape.numel() as f64 * (w.dim(1) * w.dim(2) * w.dim(3)) as f64
+        }
+        Op::DepthwiseConv2d { weight, .. } => {
+            let w = &g.node(*weight).shape;
+            2.0 * n.shape.numel() as f64 * (w.dim(2) * w.dim(3)) as f64
+        }
+        Op::Attention { q, k, .. } => {
+            let s = g.node(*q).shape.dim(0) as f64;
+            let d = g.node(*q).shape.dim(1) as f64;
+            let sk = g.node(*k).shape.dim(0) as f64;
+            2.0 * s * sk * d * 2.0 + 5.0 * s * sk
+        }
+        Op::Unary { kind, .. } if kind.is_transcendental() => 5.0 * n.shape.numel() as f64,
+        Op::Softmax { .. } | Op::Layernorm { .. } => 8.0 * n.shape.numel() as f64,
+        Op::Input { .. } | Op::ConstFill { .. } | Op::Reshape { .. } => 0.0,
+        _ => n.shape.numel() as f64,
+    }
+}
+
+/// Shape inference for one op against already-typed operands.
+pub fn infer_shape(op: &Op, get: &dyn Fn(NodeId) -> Shape, input_shapes: &[Shape]) -> Result<Shape> {
+    Ok(match op {
+        Op::Input { idx } => input_shapes
+            .get(*idx)
+            .cloned()
+            .with_context(|| format!("input index {idx} out of range"))?,
+        Op::ConstFill { shape, .. } => shape.clone(),
+        Op::Unary { input, .. } => get(*input),
+        Op::Binary { lhs, rhs, .. } => {
+            let (a, b) = (get(*lhs), get(*rhs));
+            a.broadcast(&b)
+                .with_context(|| format!("cannot broadcast {a} with {b}"))?
+        }
+        Op::Matmul { lhs, rhs } => {
+            let (a, b) = (get(*lhs), get(*rhs));
+            if a.rank() != 2 || b.rank() != 2 {
+                bail!("matmul needs rank-2 operands, got {a} @ {b}");
+            }
+            if a.dim(1) != b.dim(0) {
+                bail!("matmul inner dim mismatch: {a} @ {b}");
+            }
+            Shape::of(&[a.dim(0), b.dim(1)])
+        }
+        Op::Transpose2 { input } => {
+            let s = get(*input);
+            if s.rank() != 2 {
+                bail!("transpose2 needs rank 2, got {s}");
+            }
+            Shape::of(&[s.dim(1), s.dim(0)])
+        }
+        Op::Reduce { axis, input, .. } => {
+            let s = get(*input);
+            if *axis >= s.rank() {
+                bail!("reduce axis {axis} out of range for {s}");
+            }
+            let mut d = s.dims().to_vec();
+            d[*axis] = 1;
+            Shape(d)
+        }
+        Op::Softmax { input } => {
+            let s = get(*input);
+            if s.rank() < 1 {
+                bail!("softmax needs rank >= 1");
+            }
+            s
+        }
+        Op::Layernorm { input, gamma, beta } => {
+            let s = get(*input);
+            let f = s.dim(s.rank() - 1);
+            for (nm, g) in [("gamma", get(*gamma)), ("beta", get(*beta))] {
+                if g.rank() != 1 || g.dim(0) != f {
+                    bail!("layernorm {nm} shape {g} != [{f}]");
+                }
+            }
+            s
+        }
+        Op::Attention { q, k, v } => {
+            let (qs, ks, vs) = (get(*q), get(*k), get(*v));
+            if qs.rank() != 2 || ks.rank() != 2 || vs.rank() != 2 {
+                bail!("attention needs rank-2 q/k/v");
+            }
+            if qs.dim(1) != ks.dim(1) || ks.dim(0) != vs.dim(0) {
+                bail!("attention shape mismatch q={qs} k={ks} v={vs}");
+            }
+            Shape::of(&[qs.dim(0), vs.dim(1)])
+        }
+        Op::Conv2d { input, weight, stride, padding } => {
+            let (x, w) = (get(*input), get(*weight));
+            if x.rank() != 4 || w.rank() != 4 {
+                bail!("conv2d needs rank-4 input/weight");
+            }
+            if x.dim(1) != w.dim(1) {
+                bail!("conv2d channel mismatch: {x} vs {w}");
+            }
+            conv_out_shape(&x, w.dim(0), w.dim(2), w.dim(3), *stride, *padding)?
+        }
+        Op::DepthwiseConv2d { input, weight, stride, padding } => {
+            let (x, w) = (get(*input), get(*weight));
+            if x.rank() != 4 || w.rank() != 4 || w.dim(1) != 1 {
+                bail!("dwconv2d needs rank-4, weight [C,1,kh,kw]");
+            }
+            if x.dim(1) != w.dim(0) {
+                bail!("dwconv2d channel mismatch: {x} vs {w}");
+            }
+            conv_out_shape(&x, x.dim(1), w.dim(2), w.dim(3), *stride, *padding)?
+        }
+        Op::MaxPool2d { input, k, stride } | Op::AvgPool2d { input, k, stride } => {
+            let x = get(*input);
+            if x.rank() != 4 {
+                bail!("pool2d needs rank 4");
+            }
+            if *k > x.dim(2) || *k > x.dim(3) {
+                bail!("pool window {k} exceeds spatial dims of {x}");
+            }
+            Shape::of(&[
+                x.dim(0),
+                x.dim(1),
+                (x.dim(2) - k) / stride + 1,
+                (x.dim(3) - k) / stride + 1,
+            ])
+        }
+        Op::GlobalAvgPool { input } => {
+            let x = get(*input);
+            if x.rank() != 4 {
+                bail!("gavgpool needs rank 4");
+            }
+            Shape::of(&[x.dim(0), x.dim(1), 1, 1])
+        }
+        Op::Concat { inputs, axis } => {
+            if inputs.is_empty() {
+                bail!("concat of nothing");
+            }
+            let first = get(inputs[0]);
+            if *axis >= first.rank() {
+                bail!("concat axis {axis} out of range");
+            }
+            let mut total = 0;
+            for &i in inputs {
+                let s = get(i);
+                if s.rank() != first.rank() {
+                    bail!("concat rank mismatch");
+                }
+                for d in 0..s.rank() {
+                    if d != *axis && s.dim(d) != first.dim(d) {
+                        bail!("concat dim {d} mismatch: {s} vs {first}");
+                    }
+                }
+                total += s.dim(*axis);
+            }
+            let mut dims = first.dims().to_vec();
+            dims[*axis] = total;
+            Shape(dims)
+        }
+        Op::Reshape { input, shape } => {
+            let s = get(*input);
+            if s.numel() != shape.numel() {
+                bail!("reshape {s} -> {shape} changes element count");
+            }
+            shape.clone()
+        }
+    })
+}
+
+fn conv_out_shape(x: &Shape, out_c: usize, kh: usize, kw: usize, stride: usize, padding: usize) -> Result<Shape> {
+    let h = x.dim(2) + 2 * padding;
+    let w = x.dim(3) + 2 * padding;
+    if kh > h || kw > w || stride == 0 {
+        bail!("conv kernel {kh}x{kw} stride {stride} invalid for {x}");
+    }
+    Ok(Shape::of(&[
+        x.dim(0),
+        out_c,
+        (h - kh) / stride + 1,
+        (w - kw) / stride + 1,
+    ]))
+}
+
+/// Builder with eager shape inference.
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    name: String,
+    nodes: Vec<Node>,
+    input_shapes: Vec<Shape>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder {
+            name: name.to_string(),
+            nodes: Vec::new(),
+            input_shapes: Vec::new(),
+        }
+    }
+
+    /// Declare the next graph input.
+    pub fn input(&mut self, shape: Shape) -> NodeId {
+        let idx = self.input_shapes.len();
+        self.input_shapes.push(shape.clone());
+        self.nodes.push(Node {
+            op: Op::Input { idx },
+            shape,
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Push any op with inference; panics on type errors (builder misuse
+    /// is a bug in *our* workload definitions, not a synthesis defect).
+    pub fn push(&mut self, op: Op) -> NodeId {
+        let nodes = &self.nodes;
+        let shape = infer_shape(&op, &|i| nodes[i].shape.clone(), &self.input_shapes)
+            .unwrap_or_else(|e| panic!("builder type error on {op:?}: {e}"));
+        self.nodes.push(Node { op, shape });
+        self.nodes.len() - 1
+    }
+
+    pub fn unary(&mut self, kind: UnaryKind, input: NodeId) -> NodeId {
+        self.push(Op::Unary { kind, input })
+    }
+
+    pub fn binary(&mut self, kind: BinaryKind, lhs: NodeId, rhs: NodeId) -> NodeId {
+        self.push(Op::Binary { kind, lhs, rhs })
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(BinaryKind::Add, a, b)
+    }
+
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Op::Matmul { lhs: a, rhs: b })
+    }
+
+    pub fn reduce(&mut self, kind: ReduceKind, axis: usize, input: NodeId) -> NodeId {
+        self.push(Op::Reduce { kind, axis, input })
+    }
+
+    pub fn conv2d(&mut self, input: NodeId, weight: NodeId, stride: usize, padding: usize) -> NodeId {
+        self.push(Op::Conv2d { input, weight, stride, padding })
+    }
+
+    pub fn finish(self, outputs: Vec<NodeId>) -> Graph {
+        assert!(!outputs.is_empty(), "graph must have outputs");
+        for &o in &outputs {
+            assert!(o < self.nodes.len(), "output id {o} out of range");
+        }
+        Graph {
+            name: self.name,
+            nodes: self.nodes,
+            input_shapes: self.input_shapes,
+            outputs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_graph() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(Shape::of(&[4, 8]));
+        let w = b.input(Shape::of(&[8, 2]));
+        let m = b.matmul(x, w);
+        let r = b.unary(UnaryKind::Relu, m);
+        b.finish(vec![r])
+    }
+
+    #[test]
+    fn builder_infers_shapes() {
+        let g = simple_graph();
+        assert_eq!(g.node(2).shape, Shape::of(&[4, 2]));
+        assert_eq!(g.node(3).shape, Shape::of(&[4, 2]));
+        assert_eq!(g.input_shapes.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn builder_rejects_bad_matmul() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input(Shape::of(&[4, 8]));
+        let y = b.input(Shape::of(&[4, 8]));
+        b.matmul(x, y);
+    }
+
+    #[test]
+    fn infer_errors_are_reported_not_panicked() {
+        // direct infer_shape calls (what validation uses) return Err
+        let shapes = [Shape::of(&[2, 3]), Shape::of(&[5, 7])];
+        let op = Op::Matmul { lhs: 0, rhs: 1 };
+        let r = infer_shape(&op, &|i| shapes[i].clone(), &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn render_mentions_ops() {
+        let g = simple_graph();
+        let s = g.render();
+        assert!(s.contains("matmul") && s.contains("relu") && s.contains("return"));
+    }
+
+    #[test]
+    fn use_counts() {
+        let g = simple_graph();
+        let uses = g.use_counts();
+        assert_eq!(uses[0], 1); // x read by matmul
+        assert_eq!(uses[2], 1); // matmul read by relu
+        assert_eq!(uses[3], 1); // relu is output
+    }
+
+    #[test]
+    fn flops_positive_for_matmul() {
+        let g = simple_graph();
+        // 2*4*2*8 = 128 matmul flops + 8 relu flops
+        assert!(g.total_flops() >= 128.0);
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        let mut b = GraphBuilder::new("c");
+        let x = b.input(Shape::of(&[1, 3, 8, 8]));
+        let w = b.input(Shape::of(&[16, 3, 3, 3]));
+        let y = b.conv2d(x, w, 1, 1);
+        let g = b.finish(vec![y]);
+        assert_eq!(g.node(y).shape, Shape::of(&[1, 16, 8, 8]));
+    }
+}

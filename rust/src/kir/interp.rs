@@ -1,0 +1,187 @@
+//! KIR interpreter: evaluate a graph with the reference tensor ops.
+//!
+//! This produces the numerics used in verification — the candidate's
+//! rewritten graph is evaluated and compared against the problem's
+//! reference graph on the same seeded inputs (the paper's *numerical or
+//! shape mismatch* vs *correct* distinction, §3.3).
+
+use super::graph::{Graph, NodeId};
+use super::op::{BinaryKind, Op, ReduceKind, UnaryKind};
+use crate::tensor::{ops, Tensor};
+use anyhow::{bail, Result};
+
+/// Evaluate `g` on `inputs` (one tensor per declared input).
+pub fn eval(g: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    if inputs.len() != g.input_shapes.len() {
+        bail!(
+            "expected {} inputs, got {}",
+            g.input_shapes.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, s)) in inputs.iter().zip(&g.input_shapes).enumerate() {
+        if &t.shape != s {
+            bail!("input {i} shape {} != declared {s}", t.shape);
+        }
+    }
+    let mut vals: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    for (id, node) in g.nodes.iter().enumerate() {
+        let v = eval_node(g, id, &node.op, inputs, &vals)?;
+        if v.shape != node.shape {
+            bail!(
+                "node %{id} ({}) produced {} but graph annotates {}",
+                node.op.mnemonic(),
+                v.shape,
+                node.shape
+            );
+        }
+        vals[id] = Some(v);
+    }
+    Ok(g.outputs
+        .iter()
+        .map(|&o| vals[o].clone().expect("output evaluated"))
+        .collect())
+}
+
+fn get<'a>(vals: &'a [Option<Tensor>], id: NodeId) -> &'a Tensor {
+    vals[id].as_ref().expect("topological order")
+}
+
+fn eval_node(
+    _g: &Graph,
+    _id: NodeId,
+    op: &Op,
+    inputs: &[Tensor],
+    vals: &[Option<Tensor>],
+) -> Result<Tensor> {
+    Ok(match op {
+        Op::Input { idx } => inputs[*idx].clone(),
+        Op::ConstFill { value, shape } => Tensor::full(shape.clone(), *value),
+        Op::Unary { kind, input } => {
+            let x = get(vals, *input);
+            match kind {
+                UnaryKind::Relu => ops::relu(x),
+                UnaryKind::Sigmoid => ops::sigmoid(x),
+                UnaryKind::Swish => ops::swish(x),
+                UnaryKind::Gelu => ops::gelu(x),
+                UnaryKind::Tanh => ops::tanh(x),
+                UnaryKind::Exp => ops::exp(x),
+                UnaryKind::Neg => ops::neg(x),
+                UnaryKind::Square => ops::square(x),
+                UnaryKind::Sqrt => ops::sqrt(x),
+            }
+        }
+        Op::Binary { kind, lhs, rhs } => {
+            let (a, b) = (get(vals, *lhs), get(vals, *rhs));
+            match kind {
+                BinaryKind::Add => ops::add(a, b),
+                BinaryKind::Sub => ops::sub(a, b),
+                BinaryKind::Mul => ops::mul(a, b),
+                BinaryKind::Div => ops::div(a, b),
+                BinaryKind::Max => ops::maximum(a, b),
+            }
+        }
+        Op::Matmul { lhs, rhs } => ops::matmul(get(vals, *lhs), get(vals, *rhs)),
+        Op::Transpose2 { input } => ops::transpose2(get(vals, *input)),
+        Op::Reduce { kind, axis, input } => {
+            let k = match kind {
+                ReduceKind::Sum => ops::Reduce::Sum,
+                ReduceKind::Max => ops::Reduce::Max,
+                ReduceKind::Mean => ops::Reduce::Mean,
+                ReduceKind::LogSumExp => ops::Reduce::LogSumExp,
+            };
+            ops::reduce(get(vals, *input), *axis, k)
+        }
+        Op::Softmax { input } => ops::softmax(get(vals, *input)),
+        Op::Layernorm { input, gamma, beta } => {
+            ops::layernorm(get(vals, *input), get(vals, *gamma), get(vals, *beta), 1e-5)
+        }
+        Op::Attention { q, k, v } => ops::attention(get(vals, *q), get(vals, *k), get(vals, *v)),
+        Op::Conv2d { input, weight, stride, padding } => {
+            ops::conv2d(get(vals, *input), get(vals, *weight), *stride, *padding)
+        }
+        Op::DepthwiseConv2d { input, weight, stride, padding } => {
+            ops::depthwise_conv2d(get(vals, *input), get(vals, *weight), *stride, *padding)
+        }
+        Op::MaxPool2d { input, k, stride } => ops::maxpool2d(get(vals, *input), *k, *stride),
+        Op::AvgPool2d { input, k, stride } => ops::avgpool2d(get(vals, *input), *k, *stride),
+        Op::GlobalAvgPool { input } => ops::global_avgpool(get(vals, *input)),
+        Op::Concat { inputs: ins, axis } => {
+            let ts: Vec<&Tensor> = ins.iter().map(|&i| get(vals, i)).collect();
+            ops::concat(&ts, *axis)
+        }
+        Op::Reshape { input, shape } => get(vals, *input).reshape(shape.clone()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::{ReduceKind, UnaryKind};
+    use crate::tensor::Shape;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn evaluates_mlp() {
+        let mut b = GraphBuilder::new("mlp");
+        let x = b.input(Shape::of(&[3, 4]));
+        let w = b.input(Shape::of(&[4, 5]));
+        let bias = b.input(Shape::of(&[5]));
+        let m = b.matmul(x, w);
+        let a = b.add(m, bias);
+        let r = b.unary(UnaryKind::Relu, a);
+        let g = b.finish(vec![r]);
+
+        let mut rng = Pcg::seed(0);
+        let ins = vec![
+            Tensor::randn(Shape::of(&[3, 4]), &mut rng, 1.0),
+            Tensor::randn(Shape::of(&[4, 5]), &mut rng, 1.0),
+            Tensor::randn(Shape::of(&[5]), &mut rng, 1.0),
+        ];
+        let out = eval(&g, &ins).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, Shape::of(&[3, 5]));
+        assert!(out[0].data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn rejects_wrong_input_count() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(Shape::of(&[2]));
+        let g = b.finish(vec![x]);
+        assert!(eval(&g, &[]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(Shape::of(&[2]));
+        let g = b.finish(vec![x]);
+        assert!(eval(&g, &[Tensor::zeros(Shape::of(&[3]))]).is_err());
+    }
+
+    #[test]
+    fn reduce_chain_matches_manual() {
+        let mut b = GraphBuilder::new("chain");
+        let x = b.input(Shape::of(&[2, 3]));
+        let s = b.reduce(ReduceKind::Sum, 1, x);
+        let g = b.finish(vec![s]);
+        let t = Tensor::new(Shape::of(&[2, 3]), vec![1., 2., 3., 4., 5., 6.]);
+        let out = eval(&g, &[t]).unwrap();
+        assert_eq!(out[0].data, vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn multiple_outputs() {
+        let mut b = GraphBuilder::new("multi");
+        let x = b.input(Shape::of(&[4]));
+        let r = b.unary(UnaryKind::Relu, x);
+        let n = b.unary(UnaryKind::Neg, x);
+        let g = b.finish(vec![r, n]);
+        let t = Tensor::new(Shape::of(&[4]), vec![-1., 2., -3., 4.]);
+        let out = eval(&g, &[t]).unwrap();
+        assert_eq!(out[0].data, vec![0., 2., 0., 4.]);
+        assert_eq!(out[1].data, vec![1., -2., 3., -4.]);
+    }
+}

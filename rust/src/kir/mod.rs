@@ -1,0 +1,23 @@
+//! KIR — the Kernel IR that synthesized programs are expressed in.
+//!
+//! A candidate program is `(Graph, Schedule, defects)`: the graph is the
+//! computation (possibly rewritten by the generation agent — fusion
+//! discovery, constant-output collapse, algebraic reduction), the
+//! schedule maps it onto a platform, and defects are the concrete
+//! errors an imperfect synthesizer injects (they genuinely fail
+//! validation, lowering, or numerics downstream — see `agents`).
+//!
+//! - [`op`] / [`graph`] — typed tensor-op graph, eager shape inference.
+//! - [`validate`] — structural checks; failure = *compilation failure*.
+//! - [`interp`] — reference evaluation via `tensor::ops`.
+//! - [`rewrite`] — fusion discovery, constant folding (§7.3 invariance
+//!   exploitation), algebraic reduction (§7.4 matmul→matvec), CSE.
+
+pub mod op;
+pub mod graph;
+pub mod validate;
+pub mod interp;
+pub mod rewrite;
+
+pub use graph::{Graph, GraphBuilder, Node, NodeId};
+pub use op::{BinaryKind, Op, ReduceKind, UnaryKind};

@@ -1,0 +1,252 @@
+//! KIR operations.  All tensors are f32; shapes are static.
+
+use crate::tensor::Shape;
+
+pub type NodeId = usize;
+
+/// Unary elementwise ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnaryKind {
+    Relu,
+    Sigmoid,
+    Swish,
+    Gelu,
+    Tanh,
+    Exp,
+    Neg,
+    Square,
+    Sqrt,
+}
+
+impl UnaryKind {
+    pub const ALL: [UnaryKind; 9] = [
+        UnaryKind::Relu,
+        UnaryKind::Sigmoid,
+        UnaryKind::Swish,
+        UnaryKind::Gelu,
+        UnaryKind::Tanh,
+        UnaryKind::Exp,
+        UnaryKind::Neg,
+        UnaryKind::Square,
+        UnaryKind::Sqrt,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            UnaryKind::Relu => "relu",
+            UnaryKind::Sigmoid => "sigmoid",
+            UnaryKind::Swish => "swish",
+            UnaryKind::Gelu => "gelu",
+            UnaryKind::Tanh => "tanh",
+            UnaryKind::Exp => "exp",
+            UnaryKind::Neg => "neg",
+            UnaryKind::Square => "square",
+            UnaryKind::Sqrt => "sqrt",
+        }
+    }
+
+    /// Transcendental ops cost more flops per element in the cost model
+    /// and are the ones a fast-math schedule accelerates (§7.2).
+    pub fn is_transcendental(&self) -> bool {
+        matches!(
+            self,
+            UnaryKind::Sigmoid | UnaryKind::Swish | UnaryKind::Gelu | UnaryKind::Tanh | UnaryKind::Exp
+        )
+    }
+}
+
+/// Binary elementwise ops (numpy broadcasting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinaryKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+}
+
+impl BinaryKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BinaryKind::Add => "add",
+            BinaryKind::Sub => "sub",
+            BinaryKind::Mul => "mul",
+            BinaryKind::Div => "div",
+            BinaryKind::Max => "max",
+        }
+    }
+}
+
+/// Reductions (always keepdims).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+    Mean,
+    LogSumExp,
+}
+
+impl ReduceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceKind::Sum => "sum",
+            ReduceKind::Max => "max",
+            ReduceKind::Mean => "mean",
+            ReduceKind::LogSumExp => "logsumexp",
+        }
+    }
+}
+
+/// A KIR operation.  Operand order is semantic (lhs/rhs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Graph input `idx` (includes weights — the problem spec declares
+    /// all input shapes; data is generated from the problem seed).
+    Input { idx: usize },
+    /// Constant fill.
+    ConstFill { value: f32, shape: Shape },
+    Unary { kind: UnaryKind, input: NodeId },
+    Binary { kind: BinaryKind, lhs: NodeId, rhs: NodeId },
+    Matmul { lhs: NodeId, rhs: NodeId },
+    Transpose2 { input: NodeId },
+    Reduce { kind: ReduceKind, axis: usize, input: NodeId },
+    Softmax { input: NodeId },
+    Layernorm { input: NodeId, gamma: NodeId, beta: NodeId },
+    Attention { q: NodeId, k: NodeId, v: NodeId },
+    Conv2d { input: NodeId, weight: NodeId, stride: usize, padding: usize },
+    DepthwiseConv2d { input: NodeId, weight: NodeId, stride: usize, padding: usize },
+    MaxPool2d { input: NodeId, k: usize, stride: usize },
+    AvgPool2d { input: NodeId, k: usize, stride: usize },
+    GlobalAvgPool { input: NodeId },
+    Concat { inputs: Vec<NodeId>, axis: usize },
+    Reshape { input: NodeId, shape: Shape },
+}
+
+impl Op {
+    /// Node ids this op reads.
+    pub fn operands(&self) -> Vec<NodeId> {
+        match self {
+            Op::Input { .. } | Op::ConstFill { .. } => vec![],
+            Op::Unary { input, .. }
+            | Op::Transpose2 { input }
+            | Op::Reduce { input, .. }
+            | Op::Softmax { input }
+            | Op::MaxPool2d { input, .. }
+            | Op::AvgPool2d { input, .. }
+            | Op::GlobalAvgPool { input }
+            | Op::Reshape { input, .. } => vec![*input],
+            Op::Binary { lhs, rhs, .. } | Op::Matmul { lhs, rhs } => vec![*lhs, *rhs],
+            Op::Layernorm { input, gamma, beta } => vec![*input, *gamma, *beta],
+            Op::Attention { q, k, v } => vec![*q, *k, *v],
+            Op::Conv2d { input, weight, .. } | Op::DepthwiseConv2d { input, weight, .. } => {
+                vec![*input, *weight]
+            }
+            Op::Concat { inputs, .. } => inputs.clone(),
+        }
+    }
+
+    /// Rewrite operand ids through a mapping (used by rewrites/CSE).
+    pub fn map_operands(&self, mut f: impl FnMut(NodeId) -> NodeId) -> Op {
+        let mut op = self.clone();
+        match &mut op {
+            Op::Input { .. } | Op::ConstFill { .. } => {}
+            Op::Unary { input, .. }
+            | Op::Transpose2 { input }
+            | Op::Reduce { input, .. }
+            | Op::Softmax { input }
+            | Op::MaxPool2d { input, .. }
+            | Op::AvgPool2d { input, .. }
+            | Op::GlobalAvgPool { input }
+            | Op::Reshape { input, .. } => *input = f(*input),
+            Op::Binary { lhs, rhs, .. } | Op::Matmul { lhs, rhs } => {
+                *lhs = f(*lhs);
+                *rhs = f(*rhs);
+            }
+            Op::Layernorm { input, gamma, beta } => {
+                *input = f(*input);
+                *gamma = f(*gamma);
+                *beta = f(*beta);
+            }
+            Op::Attention { q, k, v } => {
+                *q = f(*q);
+                *k = f(*k);
+                *v = f(*v);
+            }
+            Op::Conv2d { input, weight, .. } | Op::DepthwiseConv2d { input, weight, .. } => {
+                *input = f(*input);
+                *weight = f(*weight);
+            }
+            Op::Concat { inputs, .. } => {
+                for i in inputs.iter_mut() {
+                    *i = f(*i);
+                }
+            }
+        }
+        op
+    }
+
+    /// Short mnemonic for logs/profiles.
+    pub fn mnemonic(&self) -> String {
+        match self {
+            Op::Input { idx } => format!("input{idx}"),
+            Op::ConstFill { .. } => "const".into(),
+            Op::Unary { kind, .. } => kind.name().into(),
+            Op::Binary { kind, .. } => kind.name().into(),
+            Op::Matmul { .. } => "matmul".into(),
+            Op::Transpose2 { .. } => "transpose".into(),
+            Op::Reduce { kind, axis, .. } => format!("reduce_{}{axis}", kind.name()),
+            Op::Softmax { .. } => "softmax".into(),
+            Op::Layernorm { .. } => "layernorm".into(),
+            Op::Attention { .. } => "attention".into(),
+            Op::Conv2d { .. } => "conv2d".into(),
+            Op::DepthwiseConv2d { .. } => "dwconv2d".into(),
+            Op::MaxPool2d { .. } => "maxpool2d".into(),
+            Op::AvgPool2d { .. } => "avgpool2d".into(),
+            Op::GlobalAvgPool { .. } => "gavgpool".into(),
+            Op::Concat { .. } => "concat".into(),
+            Op::Reshape { .. } => "reshape".into(),
+        }
+    }
+
+    /// Is this op elementwise (fusable into a producer's epilogue)?
+    pub fn is_elementwise(&self) -> bool {
+        matches!(self, Op::Unary { .. } | Op::Binary { .. })
+    }
+
+    /// Is this a FLOP-dense op (matmul/conv family) that anchors fusion?
+    pub fn is_compute_anchor(&self) -> bool {
+        matches!(
+            self,
+            Op::Matmul { .. } | Op::Conv2d { .. } | Op::DepthwiseConv2d { .. } | Op::Attention { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operands_cover_all_variants() {
+        let op = Op::Attention { q: 1, k: 2, v: 3 };
+        assert_eq!(op.operands(), vec![1, 2, 3]);
+        assert_eq!(Op::Input { idx: 0 }.operands(), Vec::<NodeId>::new());
+        assert_eq!(
+            Op::Concat { inputs: vec![4, 5], axis: 1 }.operands(),
+            vec![4, 5]
+        );
+    }
+
+    #[test]
+    fn map_operands_shifts_ids() {
+        let op = Op::Binary { kind: BinaryKind::Add, lhs: 3, rhs: 4 };
+        let shifted = op.map_operands(|i| i + 10);
+        assert_eq!(shifted.operands(), vec![13, 14]);
+    }
+
+    #[test]
+    fn transcendental_classification() {
+        assert!(UnaryKind::Swish.is_transcendental());
+        assert!(!UnaryKind::Relu.is_transcendental());
+    }
+}

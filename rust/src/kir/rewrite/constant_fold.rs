@@ -1,0 +1,305 @@
+//! Constant-output collapse — the §7.3 "invariance exploitation" case
+//! study.
+//!
+//! The paper observed models recognizing that certain KernelBench
+//! problems produce *constant* outputs regardless of the input (e.g.
+//! GemmMaxSubtractGELU: `y - y.mean(dim=1)` over a dim-1 tensor is all
+//! zeros, and `GELU(0) = 0`), then replacing the whole graph with a
+//! cached constant tensor.  This pass proves constness structurally:
+//!
+//! 1. singleton-axis reductions are the identity (max/mean/sum over a
+//!    size-1 axis);
+//! 2. `sub(a, a)` is zero; `mul`-by-zero is zero;
+//! 3. pointwise functions of a constant are that constant transformed;
+//! 4. if a graph *output* folds to a known constant value, the output
+//!    is replaced by `ConstFill` — the "ultra-fast inference model".
+
+use crate::kir::graph::{Graph, Node, NodeId};
+use crate::kir::op::{BinaryKind, Op, ReduceKind, UnaryKind};
+
+/// Per-node constness lattice: either unknown or a known fill value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Constness {
+    Unknown,
+    Fill(f32),
+}
+
+/// Fold provably-constant subgraphs; collapse constant outputs to
+/// `ConstFill` nodes.  Semantics-preserving by construction.
+pub fn fold(g: &Graph) -> Graph {
+    let mut g = simplify_singleton_reduce(g);
+    let mut konst = vec![Constness::Unknown; g.nodes.len()];
+    for id in 0..g.nodes.len() {
+        konst[id] = infer_constness(&g, id, &konst);
+    }
+    // Replace constant outputs with ConstFill nodes.
+    let mut changed = false;
+    let mut new_outputs = g.outputs.clone();
+    for out in new_outputs.iter_mut() {
+        if let Constness::Fill(v) = konst[*out] {
+            if !matches!(g.nodes[*out].op, Op::ConstFill { .. }) {
+                let shape = g.nodes[*out].shape.clone();
+                g.nodes.push(Node {
+                    op: Op::ConstFill { value: v, shape: shape.clone() },
+                    shape,
+                });
+                *out = g.nodes.len() - 1;
+                changed = true;
+            }
+        }
+    }
+    g.outputs = new_outputs;
+    if changed {
+        super::dce(&g)
+    } else {
+        g
+    }
+}
+
+/// Is the graph's every output a provable constant?  (Used by the
+/// harness to report the §7.3 "cheating" rate.)
+pub fn output_is_constant(g: &Graph) -> bool {
+    let g = simplify_singleton_reduce(g);
+    let mut konst = vec![Constness::Unknown; g.nodes.len()];
+    for id in 0..g.nodes.len() {
+        konst[id] = infer_constness(&g, id, &konst);
+    }
+    g.outputs.iter().all(|&o| matches!(konst[o], Constness::Fill(_)))
+}
+
+/// Rewrite `reduce(axis)` where dim(axis)==1 into the identity, and
+/// `sub(a, a)` into zero — the two structural facts behind §7.3.
+fn simplify_singleton_reduce(g: &Graph) -> Graph {
+    let mut nodes: Vec<Node> = Vec::with_capacity(g.nodes.len());
+    // alias[i] = j means node i is equivalent to node j (identity rewrite)
+    let mut alias: Vec<NodeId> = (0..g.nodes.len()).collect();
+    for (id, n) in g.nodes.iter().enumerate() {
+        let op = n.op.map_operands(|o| alias[o]);
+        let resolved = match &op {
+            // NOTE: `op` operands are already remapped into the new node
+            // list, so shapes must be read from `nodes`, not `g.nodes`.
+            Op::Reduce { kind, axis, input }
+                if nodes[*input].shape.dim(*axis) == 1
+                    && matches!(kind, ReduceKind::Sum | ReduceKind::Max | ReduceKind::Mean) =>
+            {
+                // identity over a singleton axis: alias to the input
+                alias[id] = *input;
+                None
+            }
+            Op::Binary { kind: BinaryKind::Sub, lhs, rhs } if lhs == rhs => Some(Op::ConstFill {
+                value: 0.0,
+                shape: n.shape.clone(),
+            }),
+            _ => Some(op),
+        };
+        match resolved {
+            Some(op) => {
+                nodes.push(Node { op, shape: n.shape.clone() });
+                alias[id] = nodes.len() - 1;
+            }
+            None => { /* aliased away; alias[id] already set */ }
+        }
+    }
+    let out = Graph {
+        name: g.name.clone(),
+        nodes,
+        input_shapes: g.input_shapes.clone(),
+        outputs: g.outputs.iter().map(|&o| alias[o]).collect(),
+    };
+    super::dce(&out)
+}
+
+fn infer_constness(g: &Graph, id: NodeId, konst: &[Constness]) -> Constness {
+    let n = &g.nodes[id];
+    match &n.op {
+        Op::ConstFill { value, .. } => Constness::Fill(*value),
+        Op::Input { .. } => Constness::Unknown,
+        Op::Unary { kind, input } => match konst[*input] {
+            Constness::Fill(v) => Constness::Fill(apply_unary(*kind, v)),
+            _ => Constness::Unknown,
+        },
+        Op::Binary { kind, lhs, rhs } => match (konst[*lhs], konst[*rhs]) {
+            (Constness::Fill(a), Constness::Fill(b)) => Constness::Fill(apply_binary(*kind, a, b)),
+            // mul by constant zero annihilates regardless of the other side
+            (Constness::Fill(z), _) | (_, Constness::Fill(z))
+                if *kind == BinaryKind::Mul && z == 0.0 =>
+            {
+                Constness::Fill(0.0)
+            }
+            _ => Constness::Unknown,
+        },
+        Op::Reduce { kind, input, axis } => match konst[*input] {
+            Constness::Fill(v) => {
+                let rdim = g.nodes[*input].shape.dim(*axis) as f32;
+                Constness::Fill(match kind {
+                    ReduceKind::Sum => v * rdim,
+                    ReduceKind::Max | ReduceKind::Mean => v,
+                    ReduceKind::LogSumExp => v + rdim.ln(),
+                })
+            }
+            _ => Constness::Unknown,
+        },
+        Op::Softmax { input } => match konst[*input] {
+            // softmax of a constant row is uniform 1/n
+            Constness::Fill(_) => {
+                let s = &g.nodes[*input].shape;
+                Constness::Fill(1.0 / s.dim(s.rank() - 1) as f32)
+            }
+            _ => Constness::Unknown,
+        },
+        Op::Reshape { input, .. } | Op::Transpose2 { input } | Op::GlobalAvgPool { input } => {
+            konst[*input]
+        }
+        Op::Concat { inputs, .. } => {
+            let vals: Vec<Constness> = inputs.iter().map(|&i| konst[i]).collect();
+            match vals.split_first() {
+                Some((Constness::Fill(v), rest))
+                    if rest.iter().all(|c| *c == Constness::Fill(*v)) =>
+                {
+                    Constness::Fill(*v)
+                }
+                _ => Constness::Unknown,
+            }
+        }
+        Op::MaxPool2d { input, .. } | Op::AvgPool2d { input, .. } => konst[*input],
+        // matmul/conv of an all-c tensor is constant too, but we only
+        // claim the zero case (exact regardless of the other operand)
+        Op::Matmul { lhs, rhs } | Op::Conv2d { input: lhs, weight: rhs, .. } => {
+            match (konst[*lhs], konst[*rhs]) {
+                (Constness::Fill(z), _) | (_, Constness::Fill(z)) if z == 0.0 => {
+                    Constness::Fill(0.0)
+                }
+                _ => Constness::Unknown,
+            }
+        }
+        _ => Constness::Unknown,
+    }
+}
+
+fn apply_unary(kind: UnaryKind, v: f32) -> f32 {
+    match kind {
+        UnaryKind::Relu => v.max(0.0),
+        UnaryKind::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+        UnaryKind::Swish => v / (1.0 + (-v).exp()),
+        UnaryKind::Gelu => {
+            let c = 0.797_884_56_f32;
+            0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh())
+        }
+        UnaryKind::Tanh => v.tanh(),
+        UnaryKind::Exp => v.exp(),
+        UnaryKind::Neg => -v,
+        UnaryKind::Square => v * v,
+        UnaryKind::Sqrt => v.sqrt(),
+    }
+}
+
+fn apply_binary(kind: BinaryKind, a: f32, b: f32) -> f32 {
+    match kind {
+        BinaryKind::Add => a + b,
+        BinaryKind::Sub => a - b,
+        BinaryKind::Mul => a * b,
+        BinaryKind::Div => a / b,
+        BinaryKind::Max => a.max(b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::interp::eval;
+    use crate::kir::op::{BinaryKind, ReduceKind, UnaryKind};
+    use crate::tensor::{Shape, Tensor};
+    use crate::util::rng::Pcg;
+
+    /// GemmMaxSubtractGELU (§7.3 / appendix C.3): the chain collapses to
+    /// all-zeros because mean over the already-reduced axis is identity.
+    fn gemm_max_subtract_gelu() -> Graph {
+        let mut b = GraphBuilder::new("gemm_max_sub_gelu");
+        let x = b.input(Shape::of(&[8, 16]));
+        let w = b.input(Shape::of(&[16, 24]));
+        let bias = b.input(Shape::of(&[24]));
+        let m = b.matmul(x, w);
+        let y = b.add(m, bias);
+        let mx = b.reduce(ReduceKind::Max, 1, y); // [8,1]
+        let mean = b.reduce(ReduceKind::Mean, 1, mx); // identity over dim 1
+        let sub = b.binary(BinaryKind::Sub, mx, mean); // zero
+        let gelu = b.unary(UnaryKind::Gelu, sub); // GELU(0)=0
+        b.finish(vec![gelu])
+    }
+
+    #[test]
+    fn detects_constant_output() {
+        assert!(output_is_constant(&gemm_max_subtract_gelu()));
+    }
+
+    #[test]
+    fn folded_graph_is_tiny_and_correct() {
+        let g = gemm_max_subtract_gelu();
+        let folded = fold(&g);
+        // compute nodes are gone: inputs + one ConstFill remain
+        assert!(folded.nodes.len() <= g.input_shapes.len() + 1, "{}", folded.render());
+        let mut rng = Pcg::seed(1);
+        let ins: Vec<Tensor> = g
+            .input_shapes
+            .iter()
+            .map(|s| Tensor::randn(s.clone(), &mut rng, 1.0))
+            .collect();
+        let want = eval(&g, &ins).unwrap();
+        let got = eval(&folded, &ins).unwrap();
+        assert_eq!(got[0].shape, want[0].shape);
+        assert!(got[0].allclose(&want[0], 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn non_constant_graph_untouched() {
+        let mut b = GraphBuilder::new("live");
+        let x = b.input(Shape::of(&[4, 4]));
+        let r = b.unary(UnaryKind::Relu, x);
+        let g = b.finish(vec![r]);
+        assert!(!output_is_constant(&g));
+        let folded = fold(&g);
+        let mut rng = Pcg::seed(2);
+        let ins = vec![Tensor::randn(Shape::of(&[4, 4]), &mut rng, 1.0)];
+        assert!(eval(&folded, &ins).unwrap()[0].allclose(&eval(&g, &ins).unwrap()[0], 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn mul_by_zero_const_annihilates() {
+        let mut b = GraphBuilder::new("z");
+        let x = b.input(Shape::of(&[4]));
+        let z = b.push(Op::ConstFill { value: 0.0, shape: Shape::of(&[4]) });
+        let m = b.binary(BinaryKind::Mul, x, z);
+        let g = b.finish(vec![m]);
+        assert!(output_is_constant(&g));
+    }
+
+    #[test]
+    fn singleton_sum_also_identity() {
+        let mut b = GraphBuilder::new("s");
+        let x = b.input(Shape::of(&[4, 1]));
+        let s = b.reduce(ReduceKind::Sum, 1, x);
+        let d = b.binary(BinaryKind::Sub, s, x);
+        let g = b.finish(vec![d]);
+        // sum over singleton == identity, so d == x - x == 0
+        assert!(output_is_constant(&g));
+    }
+
+    #[test]
+    fn fold_preserves_semantics_on_random_graphs() {
+        // property: fold(g) ≡ g on the §7.3 graph for several seeds
+        let g = gemm_max_subtract_gelu();
+        let folded = fold(&g);
+        for seed in 0..5 {
+            let mut rng = Pcg::seed(seed);
+            let ins: Vec<Tensor> = g
+                .input_shapes
+                .iter()
+                .map(|s| Tensor::randn(s.clone(), &mut rng, 2.0))
+                .collect();
+            let want = eval(&g, &ins).unwrap();
+            let got = eval(&folded, &ins).unwrap();
+            assert!(got[0].allclose(&want[0], 1e-4, 1e-4));
+        }
+    }
+}

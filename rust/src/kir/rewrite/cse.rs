@@ -1,0 +1,90 @@
+//! Common-subexpression elimination: identical ops over identical
+//! operands collapse to one node.  (Synthesized programs frequently
+//! duplicate work — e.g. recomputing sigmoid(x) for swish — and CSE is
+//! one of the cheap wins a refinement iteration can apply.)
+
+use crate::kir::graph::{Graph, Node, NodeId};
+use crate::kir::op::Op;
+use std::collections::HashMap;
+
+/// Structural key for an op (operands already canonicalized).
+fn key(op: &Op) -> String {
+    format!("{op:?}")
+}
+
+/// Eliminate duplicate subexpressions.  Input nodes are never merged
+/// (each `Input{idx}` is unique by idx anyway).
+pub fn eliminate(g: &Graph) -> Graph {
+    let mut seen: HashMap<String, NodeId> = HashMap::new();
+    let mut remap: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    let mut nodes: Vec<Node> = Vec::new();
+    for n in &g.nodes {
+        let op = n.op.map_operands(|o| remap[o]);
+        let k = key(&op);
+        if let Some(&existing) = seen.get(&k) {
+            remap.push(existing);
+        } else {
+            nodes.push(Node { op, shape: n.shape.clone() });
+            let id = nodes.len() - 1;
+            seen.insert(k, id);
+            remap.push(id);
+        }
+    }
+    super::dce(&Graph {
+        name: g.name.clone(),
+        nodes,
+        input_shapes: g.input_shapes.clone(),
+        outputs: g.outputs.iter().map(|&o| remap[o]).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::interp::eval;
+    use crate::kir::op::{BinaryKind, UnaryKind};
+    use crate::tensor::{Shape, Tensor};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn merges_duplicate_sigmoid() {
+        let mut b = GraphBuilder::new("dup");
+        let x = b.input(Shape::of(&[8]));
+        let s1 = b.unary(UnaryKind::Sigmoid, x);
+        let s2 = b.unary(UnaryKind::Sigmoid, x);
+        let m = b.binary(BinaryKind::Mul, s1, s2);
+        let g = b.finish(vec![m]);
+        let c = eliminate(&g);
+        assert_eq!(c.nodes.len(), 3); // input, sigmoid, mul
+        let mut rng = Pcg::seed(0);
+        let ins = vec![Tensor::randn(Shape::of(&[8]), &mut rng, 1.0)];
+        assert!(eval(&c, &ins).unwrap()[0].allclose(&eval(&g, &ins).unwrap()[0], 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn distinct_ops_not_merged() {
+        let mut b = GraphBuilder::new("no");
+        let x = b.input(Shape::of(&[8]));
+        let s = b.unary(UnaryKind::Sigmoid, x);
+        let t = b.unary(UnaryKind::Tanh, x);
+        let m = b.binary(BinaryKind::Mul, s, t);
+        let g = b.finish(vec![m]);
+        assert_eq!(eliminate(&g).nodes.len(), g.nodes.len());
+    }
+
+    #[test]
+    fn transitive_merge() {
+        // relu(sig(x)) twice -> single chain
+        let mut b = GraphBuilder::new("tr");
+        let x = b.input(Shape::of(&[4]));
+        let s1 = b.unary(UnaryKind::Sigmoid, x);
+        let r1 = b.unary(UnaryKind::Relu, s1);
+        let s2 = b.unary(UnaryKind::Sigmoid, x);
+        let r2 = b.unary(UnaryKind::Relu, s2);
+        let m = b.binary(BinaryKind::Add, r1, r2);
+        let g = b.finish(vec![m]);
+        let c = eliminate(&g);
+        assert_eq!(c.nodes.len(), 4); // x, sig, relu, add
+    }
+}

@@ -1,0 +1,240 @@
+//! Fusion-group discovery.
+//!
+//! Fusion is a *schedule* decision, not a graph edit: the lowered plan
+//! partitions nodes into fusion groups, each becoming one kernel launch
+//! (one HBM round trip for the group's interior).  This module computes
+//! the groups a synthesizer of a given skill would find:
+//!
+//! - `greedy_epilogue` — attach elementwise chains to their compute
+//!   anchor (matmul/conv epilogues) and merge pure elementwise chains;
+//!   this is what torch.compile's Inductor-style baseline does, and
+//!   what strong models discover (§5.1: "optimizations like kernel
+//!   fusion").
+//! - `none` — one kernel per op: the PyTorch-eager analog.
+//! - `partial(k)` — only the first k opportunities, modelling weaker
+//!   synthesizers.
+
+use crate::kir::graph::{Graph, NodeId};
+use crate::kir::op::Op;
+
+/// A fusion plan: `group[i]` is the group index of node i.  Nodes that
+/// produce no kernel (inputs, reshapes, constants) carry `usize::MAX`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusionPlan {
+    pub group: Vec<usize>,
+    pub n_groups: usize,
+}
+
+impl FusionPlan {
+    /// Node ids per group, in topological order.
+    pub fn members(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.n_groups];
+        for (id, &grp) in self.group.iter().enumerate() {
+            if grp != usize::MAX {
+                out[grp].push(id);
+            }
+        }
+        out
+    }
+
+    /// Number of kernel launches this plan implies.
+    pub fn launches(&self) -> usize {
+        self.n_groups
+    }
+}
+
+/// Does this node emit work at all (kernels), or is it free?
+pub fn emits_kernel(op: &Op) -> bool {
+    !matches!(op, Op::Input { .. } | Op::ConstFill { .. } | Op::Reshape { .. })
+}
+
+/// One kernel per op — the eager-mode plan.
+pub fn none(g: &Graph) -> FusionPlan {
+    let mut group = vec![usize::MAX; g.nodes.len()];
+    let mut n = 0;
+    for (id, node) in g.nodes.iter().enumerate() {
+        if emits_kernel(&node.op) {
+            group[id] = n;
+            n += 1;
+        }
+    }
+    FusionPlan { group, n_groups: n }
+}
+
+/// Greedy epilogue + elementwise-chain fusion.
+///
+/// A node joins its producer's group when:
+/// - it is elementwise, and
+/// - exactly one of its operands emits a kernel (the producer), and
+/// - the producer's output is used only by this node (single-consumer:
+///   fusing a multi-consumer producer would duplicate work), and
+/// - the producer's group doesn't already contain a second compute
+///   anchor (one matmul per kernel).
+///
+/// Reductions/softmax/layernorm may *start* a group but not join one
+/// (they need the whole row — matches the Pallas kernels, where the
+/// matmul epilogue is elementwise-only).
+pub fn greedy_epilogue(g: &Graph) -> FusionPlan {
+    let uses = g.use_counts();
+    let mut group = vec![usize::MAX; g.nodes.len()];
+    let mut n_groups = 0usize;
+    for (id, node) in g.nodes.iter().enumerate() {
+        if !emits_kernel(&node.op) {
+            continue;
+        }
+        let mut joined = None;
+        if node.op.is_elementwise() {
+            // candidate producers: operands that emit kernels
+            let producers: Vec<NodeId> = node
+                .op
+                .operands()
+                .into_iter()
+                .filter(|&o| group[o] != usize::MAX)
+                .collect();
+            if producers.len() == 1 {
+                let p = producers[0];
+                let output_escapes = g.outputs.contains(&p);
+                if uses[p] == 1 && !output_escapes {
+                    joined = Some(group[p]);
+                }
+            }
+        }
+        match joined {
+            Some(grp) => group[id] = grp,
+            None => {
+                group[id] = n_groups;
+                n_groups += 1;
+            }
+        }
+    }
+    FusionPlan { group, n_groups }
+}
+
+/// Apply only the first `k` fusion opportunities of the greedy plan —
+/// a partially-skilled synthesizer.
+pub fn partial(g: &Graph, k: usize) -> FusionPlan {
+    let full = greedy_epilogue(g);
+    let eager = none(g);
+    if k == usize::MAX {
+        return full;
+    }
+    // an "opportunity" is a node fused into an earlier group in `full`
+    // (i.e. its group differs from what a fresh group would be).
+    let mut taken = 0usize;
+    let mut group = vec![usize::MAX; g.nodes.len()];
+    let mut n_groups = 0usize;
+    let mut full_to_new: Vec<Option<usize>> = vec![None; full.n_groups];
+    for (id, node) in g.nodes.iter().enumerate() {
+        if !emits_kernel(&node.op) {
+            continue;
+        }
+        let fused_in_full = {
+            // fused iff an earlier node shares its full-group
+            (0..id).any(|j| full.group[j] == full.group[id] && full.group[id] != usize::MAX)
+        };
+        if fused_in_full && taken < k {
+            // join the group its full-plan leader was assigned
+            let leader_new = full_to_new[full.group[id]].expect("leader first");
+            group[id] = leader_new;
+            taken += 1;
+        } else {
+            group[id] = n_groups;
+            if !fused_in_full {
+                full_to_new[full.group[id]] = Some(n_groups);
+            }
+            n_groups += 1;
+        }
+    }
+    let _ = eager;
+    FusionPlan { group, n_groups }
+}
+
+/// Count of fusion opportunities in the graph (how many launches the
+/// greedy plan saves over eager).
+pub fn opportunity_count(g: &Graph) -> usize {
+    none(g).n_groups - greedy_epilogue(g).n_groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::{BinaryKind, UnaryKind};
+    use crate::tensor::Shape;
+
+    fn gemm_bias_relu() -> Graph {
+        let mut b = GraphBuilder::new("gbr");
+        let x = b.input(Shape::of(&[8, 16]));
+        let w = b.input(Shape::of(&[16, 8]));
+        let bias = b.input(Shape::of(&[8]));
+        let m = b.matmul(x, w);
+        let a = b.add(m, bias);
+        let r = b.unary(UnaryKind::Relu, a);
+        b.finish(vec![r])
+    }
+
+    #[test]
+    fn eager_one_kernel_per_op() {
+        let g = gemm_bias_relu();
+        assert_eq!(none(&g).launches(), 3); // matmul, add, relu
+    }
+
+    #[test]
+    fn greedy_fuses_epilogue() {
+        let g = gemm_bias_relu();
+        let p = greedy_epilogue(&g);
+        assert_eq!(p.launches(), 1, "{:?}", p.members());
+    }
+
+    #[test]
+    fn multi_consumer_blocks_fusion() {
+        let mut b = GraphBuilder::new("mc");
+        let x = b.input(Shape::of(&[8, 16]));
+        let w = b.input(Shape::of(&[16, 8]));
+        let m = b.matmul(x, w);
+        let r1 = b.unary(UnaryKind::Relu, m);
+        let r2 = b.unary(UnaryKind::Sigmoid, m);
+        let s = b.binary(BinaryKind::Add, r1, r2);
+        let g = b.finish(vec![s]);
+        let p = greedy_epilogue(&g);
+        // matmul used twice: relu/sigmoid cannot fold in; add has two
+        // kernel-emitting operands so it can't fuse either.
+        assert_eq!(p.launches(), 4);
+    }
+
+    #[test]
+    fn partial_interpolates() {
+        let g = gemm_bias_relu();
+        assert_eq!(partial(&g, 0).launches(), 3);
+        assert_eq!(partial(&g, 1).launches(), 2);
+        assert_eq!(partial(&g, 2).launches(), 1);
+        assert_eq!(partial(&g, usize::MAX).launches(), 1);
+    }
+
+    #[test]
+    fn opportunity_count_counts() {
+        assert_eq!(opportunity_count(&gemm_bias_relu()), 2);
+    }
+
+    #[test]
+    fn elementwise_chain_fuses() {
+        let mut b = GraphBuilder::new("chain");
+        let x = b.input(Shape::of(&[128]));
+        let a = b.unary(UnaryKind::Swish, x);
+        let c = b.unary(UnaryKind::Relu, a);
+        let d = b.unary(UnaryKind::Tanh, c);
+        let g = b.finish(vec![d]);
+        assert_eq!(greedy_epilogue(&g).launches(), 1);
+    }
+
+    #[test]
+    fn graph_output_producer_not_fused() {
+        // if the intermediate is itself a graph output it must stay
+        let mut b = GraphBuilder::new("esc");
+        let x = b.input(Shape::of(&[16]));
+        let a = b.unary(UnaryKind::Swish, x);
+        let c = b.unary(UnaryKind::Relu, a);
+        let g = b.finish(vec![a, c]);
+        assert_eq!(greedy_epilogue(&g).launches(), 2);
+    }
+}

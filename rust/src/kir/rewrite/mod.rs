@@ -1,0 +1,115 @@
+//! Graph rewrites the generation agent can discover.
+//!
+//! Each rewrite is semantics-preserving (property-tested: rewritten
+//! graph ≡ original numerics on random inputs).  They correspond to the
+//! optimizations the paper observed LLMs finding:
+//! - [`fusion`] — fusion-group discovery (the dominant §5.1 optimization);
+//! - [`constant_fold`] — §7.3 invariance exploitation (constant-output
+//!   collapse of Conv3dGroupNormMean / GemmMaxSubtractGELU-style chains);
+//! - [`algebraic`] — §7.4 computational-graph reduction (the
+//!   sum∘(matmul+bias) → matvec collapse of L2 problem 12);
+//! - [`cse`] — common-subexpression elimination.
+
+pub mod fusion;
+pub mod constant_fold;
+pub mod algebraic;
+pub mod cse;
+
+use super::graph::Graph;
+
+/// The rewrites a synthesized program may apply, in a canonical order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rewrite {
+    /// Collapse provably-constant outputs to a ConstFill (§7.3).
+    ConstantFold,
+    /// Algebraic reduction of reduce∘matmul chains (§7.4).
+    AlgebraicReduce,
+    /// Deduplicate identical subexpressions.
+    Cse,
+}
+
+impl Rewrite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rewrite::ConstantFold => "constant_fold",
+            Rewrite::AlgebraicReduce => "algebraic_reduce",
+            Rewrite::Cse => "cse",
+        }
+    }
+
+    /// Apply this rewrite, returning the (possibly unchanged) graph.
+    pub fn apply(&self, g: &Graph) -> Graph {
+        match self {
+            Rewrite::ConstantFold => constant_fold::fold(g),
+            Rewrite::AlgebraicReduce => algebraic::reduce_matmul_chains(g),
+            Rewrite::Cse => cse::eliminate(g),
+        }
+    }
+}
+
+/// Apply a list of rewrites in order.
+pub fn apply_all(g: &Graph, rewrites: &[Rewrite]) -> Graph {
+    let mut out = g.clone();
+    for r in rewrites {
+        out = r.apply(&out);
+    }
+    out
+}
+
+/// Drop nodes not reachable from the outputs (shared cleanup pass used
+/// by the rewrites).  Preserves input nodes (interface stability).
+pub fn dce(g: &Graph) -> Graph {
+    let mut live = vec![false; g.nodes.len()];
+    let mut stack: Vec<usize> = g.outputs.clone();
+    while let Some(id) = stack.pop() {
+        if live[id] {
+            continue;
+        }
+        live[id] = true;
+        stack.extend(g.nodes[id].op.operands());
+    }
+    // keep all Input nodes so the calling convention never changes
+    for (i, n) in g.nodes.iter().enumerate() {
+        if matches!(n.op, super::op::Op::Input { .. }) {
+            live[i] = true;
+        }
+    }
+    let mut remap = vec![usize::MAX; g.nodes.len()];
+    let mut nodes = Vec::new();
+    for (i, n) in g.nodes.iter().enumerate() {
+        if live[i] {
+            remap[i] = nodes.len();
+            nodes.push(super::graph::Node {
+                op: n.op.map_operands(|o| remap[o]),
+                shape: n.shape.clone(),
+            });
+        }
+    }
+    Graph {
+        name: g.name.clone(),
+        nodes,
+        input_shapes: g.input_shapes.clone(),
+        outputs: g.outputs.iter().map(|&o| remap[o]).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::UnaryKind;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn dce_removes_dead_compute_keeps_inputs() {
+        let mut b = GraphBuilder::new("d");
+        let x = b.input(Shape::of(&[4]));
+        let _dead = b.unary(UnaryKind::Exp, x);
+        let live = b.unary(UnaryKind::Relu, x);
+        let g = b.finish(vec![live]);
+        let pruned = dce(&g);
+        assert_eq!(pruned.nodes.len(), 2); // input + relu
+        assert_eq!(pruned.input_shapes.len(), 1);
+        assert!(crate::kir::validate::validate(&pruned).is_ok());
+    }
+}

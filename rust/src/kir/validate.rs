@@ -1,0 +1,117 @@
+//! Structural validation of candidate graphs.
+//!
+//! The generation agent's *syntax-class* defects corrupt the graph in
+//! ways this pass genuinely detects (dangling operand ids, shape
+//! inconsistencies, empty outputs).  A validation failure maps to the
+//! paper's **compilation failure** execution state (§3.3) — the message
+//! becomes the "compiler error" fed back on the next refinement
+//! iteration.
+
+use super::graph::{infer_shape, Graph};
+use super::op::Op;
+use anyhow::{bail, Result};
+
+/// Validate graph structure and types.  Returns the compiler-style
+/// error message on failure.
+pub fn validate(g: &Graph) -> Result<()> {
+    if g.nodes.is_empty() {
+        bail!("error: empty module");
+    }
+    if g.outputs.is_empty() {
+        bail!("error: module has no outputs");
+    }
+    let mut seen_inputs = vec![false; g.input_shapes.len()];
+    for (id, node) in g.nodes.iter().enumerate() {
+        // topological discipline: operands strictly precede users
+        for o in node.op.operands() {
+            if o >= id {
+                bail!("error: node %{id} ({}) references undefined value %{o}", node.op.mnemonic());
+            }
+        }
+        if let Op::Input { idx } = node.op {
+            if idx >= g.input_shapes.len() {
+                bail!("error: node %{id} reads undeclared input {idx}");
+            }
+            seen_inputs[idx] = true;
+        }
+        // re-run inference and check the recorded shape agrees
+        let inferred = infer_shape(&node.op, &|i| g.nodes[i].shape.clone(), &g.input_shapes)
+            .map_err(|e| anyhow::anyhow!("error: node %{id} ({}): {e}", node.op.mnemonic()))?;
+        if inferred != node.shape {
+            bail!(
+                "error: node %{id} ({}) annotated {} but infers {}",
+                node.op.mnemonic(),
+                node.shape,
+                inferred
+            );
+        }
+    }
+    for &o in &g.outputs {
+        if o >= g.nodes.len() {
+            bail!("error: output references undefined value %{o}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::{GraphBuilder, Node};
+    use crate::kir::op::{BinaryKind, Op};
+    use crate::tensor::Shape;
+
+    fn good() -> Graph {
+        let mut b = GraphBuilder::new("ok");
+        let x = b.input(Shape::of(&[2, 2]));
+        let y = b.input(Shape::of(&[2, 2]));
+        let z = b.binary(BinaryKind::Add, x, y);
+        b.finish(vec![z])
+    }
+
+    #[test]
+    fn accepts_valid_graph() {
+        assert!(validate(&good()).is_ok());
+    }
+
+    #[test]
+    fn rejects_forward_reference() {
+        let mut g = good();
+        g.nodes[2].op = Op::Binary { kind: BinaryKind::Add, lhs: 0, rhs: 5 };
+        let err = validate(&g).unwrap_err().to_string();
+        assert!(err.contains("undefined value"), "{err}");
+    }
+
+    #[test]
+    fn rejects_shape_annotation_mismatch() {
+        let mut g = good();
+        g.nodes[2].shape = Shape::of(&[3, 3]);
+        let err = validate(&g).unwrap_err().to_string();
+        assert!(err.contains("infers"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_output_id() {
+        let mut g = good();
+        g.outputs = vec![99];
+        assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_type_error_inside() {
+        let mut g = good();
+        // overwrite add with an ill-typed matmul (2x2 @ 2x2 is fine; use reduce with bad axis)
+        g.nodes[2] = Node {
+            op: Op::Reduce { kind: crate::kir::op::ReduceKind::Sum, axis: 7, input: 0 },
+            shape: Shape::of(&[2, 2]),
+        };
+        assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_outputs() {
+        let mut g = good();
+        g.outputs.clear();
+        assert!(validate(&g).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! # KForge — program synthesis for diverse AI hardware accelerators
+//!
+//! Reproduction of *KForge* (Sereda et al., 2025): a platform-agnostic
+//! two-agent program-synthesis framework.  A **generation agent** `F`
+//! iteratively synthesizes kernel programs; a **performance-analysis
+//! agent** `G` turns raw profiling data into one actionable
+//! recommendation per optimization iteration.
+//!
+//! This crate is Layer 3 of the three-layer stack (see DESIGN.md):
+//! the coordinator, agents, device simulators, profilers, workload
+//! suite, verification pipeline and benchmark harness all live here.
+//! Layers 1/2 (Pallas kernels + JAX workloads) are build-time Python,
+//! AOT-lowered to HLO text and executed from [`runtime`] via PJRT —
+//! Python is never on the request path.
+//!
+//! Module map:
+//! - [`util`] — seeded PRNG, JSON/CSV writers, stats, timing (offline
+//!   build: no external crates beyond `xla`/`anyhow`).
+//! - [`tensor`] — f32 ndarray + reference CPU ops (ground truth).
+//! - [`kir`] — the Kernel IR candidate programs are expressed in:
+//!   typed graphs, shape inference, validation, interpreter, rewrites.
+//! - [`sched`] — the schedule space (tiling, elements-per-thread, …).
+//! - [`platform`] — CUDA-like (H100) and Metal-like (M4 Max) specs.
+//! - [`perfsim`] — roofline/launch/occupancy device simulator.
+//! - [`profiler`] — nsys-like CSV and Xcode-like screenshot profilers.
+//! - [`baseline`] — PyTorch-eager and torch.compile analogs.
+//! - [`agents`] — personas, generation agent F, analysis agent G.
+//! - [`verify`] — the 5-state verification pipeline (§3.3).
+//! - [`workloads`] — the 250-problem KernelBench-KIR suite.
+//! - [`runtime`] — PJRT artifact loading/execution (real numerics).
+//! - [`coordinator`] — job queue, device-worker pool, experiments.
+//! - [`metrics`] — fast_p and friends.
+//! - [`harness`] — regenerates every paper table and figure.
+
+pub mod util;
+pub mod tensor;
+pub mod kir;
+pub mod sched;
+pub mod platform;
+pub mod perfsim;
+pub mod profiler;
+pub mod baseline;
+pub mod agents;
+pub mod verify;
+pub mod workloads;
+pub mod runtime;
+pub mod coordinator;
+pub mod metrics;
+pub mod harness;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,204 @@
+//! KForge CLI — the leader entrypoint.
+//!
+//! ```text
+//! kforge suite                      # Table 2 + suite census
+//! kforge run --problem <id> --model <persona> [--platform cuda|metal]
+//!                                   # one iterative-refinement job, verbose
+//! kforge bench <fig2|fig3|fig4|table2|table4|table5|table6|cases|all>
+//!              [--quick N] [--out DIR]
+//! kforge serve [--artifacts DIR]    # PJRT request loop over real artifacts
+//! kforge personas                   # list the 8 calibrated personas
+//! ```
+
+use anyhow::{bail, Context, Result};
+use kforge::agents::persona::{by_name, PERSONAS};
+use kforge::coordinator::ExperimentConfig;
+use kforge::harness::{self, Scale};
+use kforge::platform::PlatformKind;
+use kforge::workloads::Suite;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("suite") => cmd_suite(),
+        Some("personas") => cmd_personas(),
+        Some("run") => cmd_run(args),
+        Some("bench") => cmd_bench(args),
+        Some("serve") => cmd_serve(args),
+        Some(other) => bail!("unknown command {other:?}; try: suite, personas, run, bench, serve"),
+        None => {
+            println!("kforge — program synthesis for diverse AI hardware accelerators");
+            println!("commands: suite | personas | run | bench | serve");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_suite() -> Result<()> {
+    let (_, text) = harness::table2::run();
+    println!("{text}");
+    let suite = Suite::full();
+    let constant = suite.problems.iter().filter(|p| p.constant_output).count();
+    let reducible = suite.problems.iter().filter(|p| p.reducible).count();
+    println!("total problems: {}", suite.len());
+    println!("constant-output (§7.3 class): {constant}");
+    println!("algebraically reducible (§7.4 class): {reducible}");
+    Ok(())
+}
+
+fn cmd_personas() -> Result<()> {
+    println!(
+        "{:<18} {:>9} {:>28} {:>28}",
+        "model", "reasoning", "single-shot cuda L1/L2/L3", "single-shot metal L1/L2/L3"
+    );
+    for p in PERSONAS {
+        println!(
+            "{:<18} {:>9} {:>10.2}/{:.2}/{:.2} {:>13.2}/{:.2}/{:.2}",
+            p.name,
+            p.reasoning,
+            p.single_shot[0][0],
+            p.single_shot[0][1],
+            p.single_shot[0][2],
+            p.single_shot[1][0],
+            p.single_shot[1][1],
+            p.single_shot[1][2],
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let problem_id = flag_value(args, "--problem").context("--problem <id> required")?;
+    let model = flag_value(args, "--model").unwrap_or("openai-gpt-5");
+    let platform = match flag_value(args, "--platform").unwrap_or("cuda") {
+        "cuda" => PlatformKind::Cuda,
+        "metal" | "mps" => PlatformKind::Metal,
+        other => bail!("unknown platform {other}"),
+    };
+    let persona = by_name(model).with_context(|| format!("unknown persona {model}"))?;
+    let suite = Suite::full();
+    let problem = suite
+        .get(problem_id)
+        .with_context(|| format!("unknown problem {problem_id}"))?;
+
+    let mut cfg = match platform {
+        PlatformKind::Cuda => ExperimentConfig::cuda_iterative(vec![persona]),
+        PlatformKind::Metal => ExperimentConfig::mps_iterative(vec![persona]),
+    };
+    cfg.use_profiling = true;
+    let spec = cfg.spec();
+    println!("problem: {problem_id} ({})", problem.level.name());
+    println!("persona: {} on {}", persona.name, spec.name);
+    println!("reference graph:\n{}", problem.eval_graph.render());
+    let result = kforge::coordinator::experiment::run_task(&cfg, &spec, persona, problem, None);
+    println!("iteration states: {:?}", result.state_history);
+    println!("baseline: {:.3} ms", result.baseline_s * 1e3);
+    match result.best_candidate_s {
+        Some(t) => println!(
+            "best candidate: {:.3} ms (speedup {:.2}x, iteration {})",
+            t * 1e3,
+            result.outcome.speedup,
+            result.best_iteration.unwrap()
+        ),
+        None => println!("no correct candidate produced"),
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let scale = match flag_value(args, "--quick") {
+        Some(n) => Scale::Quick(n.parse().context("--quick N")?),
+        None => Scale::Full,
+    };
+    let out_dir = flag_value(args, "--out").map(std::path::PathBuf::from);
+    let mut reports: Vec<(&str, String)> = Vec::new();
+    let t0 = std::time::Instant::now();
+    match which {
+        "table2" => reports.push(("table2", harness::table2::run().1)),
+        "fig2" => reports.push(("fig2", harness::fig2::run(scale).1)),
+        "fig3" => reports.push(("fig3", harness::fig3::run(scale).1)),
+        "table4" => reports.push(("table4", harness::table4::run(scale).1)),
+        "fig4" => reports.push(("fig4", harness::fig4::run(scale).1)),
+        "table5" => reports.push(("table5", harness::table5::run(scale).1)),
+        "table6" => reports.push(("table6", harness::table6::run().1)),
+        "cases" => reports.push(("cases", harness::casestudy::run().1)),
+        "ablation" => reports.push(("ablation", harness::ablation::run(scale).1)),
+        "all" => {
+            reports.push(("table2", harness::table2::run().1));
+            reports.push(("fig2", harness::fig2::run(scale).1));
+            reports.push(("fig3", harness::fig3::run(scale).1));
+            reports.push(("table4", harness::table4::run(scale).1));
+            reports.push(("fig4", harness::fig4::run(scale).1));
+            reports.push(("table5", harness::table5::run(scale).1));
+            reports.push(("table6", harness::table6::run().1));
+            reports.push(("cases", harness::casestudy::run().1));
+            reports.push(("ablation", harness::ablation::run(scale).1));
+        }
+        other => bail!("unknown bench target {other}"),
+    }
+    for (name, text) in &reports {
+        println!("{text}");
+        if let Some(dir) = &out_dir {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(dir.join(format!("{name}.txt")), text)?;
+        }
+    }
+    eprintln!("[bench {which} completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let dir = flag_value(args, "--artifacts").unwrap_or("artifacts");
+    let requests: usize = flag_value(args, "--requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(64);
+    let registry = kforge::runtime::Registry::load(dir)
+        .with_context(|| format!("loading artifact registry from {dir} (run `make artifacts`)"))?;
+    let rt = kforge::runtime::PjrtRuntime::new(registry)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {}", rt.registry().entries.len());
+    let keys: Vec<String> = rt.registry().entries.iter().map(|e| e.key.clone()).collect();
+    let mut latencies = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        let key = &keys[i % keys.len()];
+        let inputs = rt.seeded_inputs(key, i as u64)?;
+        let t = std::time::Instant::now();
+        let out = rt.execute(key, &inputs)?;
+        latencies.push(t.elapsed().as_secs_f64());
+        if i == 0 {
+            println!("first request: {key} -> {} outputs", out.len());
+        }
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let s = kforge::util::stats::summarize(&latencies);
+    println!(
+        "served {requests} requests in {total:.2}s ({:.1} req/s)",
+        requests as f64 / total
+    );
+    println!(
+        "latency ms: p50={:.2} p90={:.2} p99={:.2} max={:.2} (compile-once cache: {} executables)",
+        s.p50 * 1e3,
+        s.p90 * 1e3,
+        s.p99 * 1e3,
+        s.max * 1e3,
+        rt.cache_len()
+    );
+    Ok(())
+}

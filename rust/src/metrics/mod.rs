@@ -1,0 +1,125 @@
+//! Metrics: the paper's `fast_p` family (§4.2).
+//!
+//! `fast_p = (1/N) Σ 1(correct_i ∧ speedup_i > p)` where speedup is
+//! baseline-time / candidate-time.  `fast_0` is the correctness rate,
+//! `fast_1` on-par performance, `fast_p (p>1)` superior performance.
+
+/// Outcome of one task: correctness + speedup vs the baseline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskOutcome {
+    pub correct: bool,
+    /// baseline_time / candidate_time; meaningless when !correct.
+    pub speedup: f64,
+}
+
+impl TaskOutcome {
+    pub fn incorrect() -> TaskOutcome {
+        TaskOutcome {
+            correct: false,
+            speedup: 0.0,
+        }
+    }
+
+    pub fn correct(speedup: f64) -> TaskOutcome {
+        TaskOutcome {
+            correct: true,
+            speedup,
+        }
+    }
+}
+
+/// fast_p over a set of outcomes.  `fast_0` counts correct regardless
+/// of speed (speedup > 0 always holds for a finished run).
+pub fn fast_p(outcomes: &[TaskOutcome], p: f64) -> f64 {
+    if outcomes.is_empty() {
+        return 0.0;
+    }
+    let hits = outcomes
+        .iter()
+        .filter(|o| o.correct && o.speedup > p)
+        .count();
+    hits as f64 / outcomes.len() as f64
+}
+
+/// Correctness rate — `fast_0` in the paper's terms.
+pub fn correctness_rate(outcomes: &[TaskOutcome]) -> f64 {
+    if outcomes.is_empty() {
+        return 0.0;
+    }
+    outcomes.iter().filter(|o| o.correct).count() as f64 / outcomes.len() as f64
+}
+
+/// A full fast_p curve over a threshold grid (figures 2–4 plot these).
+pub fn curve(outcomes: &[TaskOutcome], thresholds: &[f64]) -> Vec<(f64, f64)> {
+    thresholds
+        .iter()
+        .map(|&p| (p, fast_p(outcomes, p)))
+        .collect()
+}
+
+/// The standard threshold grid used in the figures.
+pub fn standard_thresholds() -> Vec<f64> {
+    vec![0.0, 0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0]
+}
+
+/// Continuous speedup distribution (the §8 discussion's finer-grained
+/// alternative): sorted speedups of correct tasks.
+pub fn speedup_distribution(outcomes: &[TaskOutcome]) -> Vec<f64> {
+    let mut xs: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.correct)
+        .map(|o| o.speedup)
+        .collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TaskOutcome> {
+        vec![
+            TaskOutcome::correct(2.0),
+            TaskOutcome::correct(1.2),
+            TaskOutcome::correct(0.8),
+            TaskOutcome::incorrect(),
+        ]
+    }
+
+    #[test]
+    fn fast_p_thresholds() {
+        let o = sample();
+        assert_eq!(fast_p(&o, 0.0), 0.75); // 3 of 4 correct
+        assert_eq!(fast_p(&o, 1.0), 0.5); // 2 beat baseline
+        assert_eq!(fast_p(&o, 1.5), 0.25); // 1 at 1.5x
+        assert_eq!(fast_p(&o, 3.0), 0.0);
+    }
+
+    #[test]
+    fn fast_p_monotone_nonincreasing_in_p() {
+        let o = sample();
+        let c = curve(&o, &standard_thresholds());
+        for w in c.windows(2) {
+            assert!(w[1].1 <= w[0].1);
+        }
+    }
+
+    #[test]
+    fn correctness_equals_fast0() {
+        let o = sample();
+        assert_eq!(correctness_rate(&o), fast_p(&o, 0.0));
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(fast_p(&[], 1.0), 0.0);
+        assert_eq!(correctness_rate(&[]), 0.0);
+    }
+
+    #[test]
+    fn distribution_sorted_and_filtered() {
+        let d = speedup_distribution(&sample());
+        assert_eq!(d, vec![0.8, 1.2, 2.0]);
+    }
+}

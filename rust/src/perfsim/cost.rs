@@ -1,0 +1,236 @@
+//! Per-kernel cost model: roofline + schedule-dependent utilization.
+//!
+//! `t_kernel = max(t_compute, t_memory) + t_launch` where utilizations
+//! are functions of the schedule — this is where tile sizes, vector
+//! width, elements-per-thread, occupancy and fast-math earn their keep.
+
+use super::lower::{KernelClass, KernelLaunch};
+use crate::platform::PlatformSpec;
+use crate::sched::Schedule;
+
+/// Breakdown of one kernel's simulated time.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelCost {
+    pub compute_s: f64,
+    pub memory_s: f64,
+    pub launch_s: f64,
+    /// max(compute, memory) + launch
+    pub total_s: f64,
+    /// Utilization diagnostics surfaced to the profiler.
+    pub mm_utilization: f64,
+    pub mem_utilization: f64,
+    pub occupancy: f64,
+}
+
+/// Matmul-engine utilization as a function of tile size: small tiles
+/// starve the MM pipe (low data reuse), oversized tiles lose occupancy.
+/// Peaks near the platform's sweet spot (128 on H100, 64 on M-series).
+fn tile_utilization(spec: &PlatformSpec, s: &Schedule) -> f64 {
+    let sweet = match spec.kind {
+        crate::platform::PlatformKind::Cuda => 128.0,
+        crate::platform::PlatformKind::Metal => 64.0,
+    };
+    let t = s.tile.bm.min(s.tile.bn) as f64;
+    // reuse grows ~ t/sweet up to 1; bk adds pipeline efficiency
+    let reuse = (t / sweet).min(1.0);
+    let depth = (s.tile.bk as f64 / 64.0).min(1.0) * 0.2 + 0.8;
+    (0.15 + 0.85 * reuse) * depth
+}
+
+/// Effective memory efficiency: vectorized/coalesced access and
+/// elements-per-thread amortize per-access overhead (§7.2's "better
+/// memory throughput" from 8 elements/thread).
+fn memory_efficiency(s: &Schedule) -> f64 {
+    let vec = match s.vec_width {
+        1 => 0.55,
+        2 => 0.75,
+        4 => 0.95,
+        _ => 0.9, // 8-wide: slightly over-wide, register pressure
+    };
+    let ept = match s.ept {
+        1 => 0.8,
+        2 => 0.88,
+        4 => 0.95,
+        8 => 1.0,
+        16 => 0.85,  // over-looping: register spills begin
+        32 => 0.70,  // fixed-grid kernels run far off their sweet spot
+        64 => 0.55,  // (the Table-6 large-batch degradation mechanism)
+        _ => 0.45,
+    };
+    vec * ept
+}
+
+/// Occupancy from threadgroup size vs device geometry: too small wastes
+/// scheduler slots, too large limits resident groups.
+fn occupancy(spec: &PlatformSpec, s: &Schedule, out_elems: usize) -> f64 {
+    let tg = s.threadgroup as f64;
+    let shape_factor = if tg <= 64.0 {
+        0.7
+    } else if tg <= 512.0 {
+        1.0
+    } else {
+        0.85
+    };
+    // tail effect: fewer threadgroups than cores leaves the device idle
+    let work_per_thread = s.ept.max(1);
+    let groups = (out_elems as f64 / (tg * work_per_thread as f64)).ceil();
+    let tail = (groups / spec.num_cores as f64).min(1.0).max(0.05);
+    shape_factor * (0.3 + 0.7 * tail)
+}
+
+/// Transcendental slowdown factor: exp/tanh cost extra vector cycles
+/// unless fast-math intrinsics are on (§7.2's fast::exp).
+fn transcendental_penalty(k: &KernelLaunch, s: &Schedule) -> f64 {
+    if k.transcendental_elems <= 0.0 {
+        return 1.0;
+    }
+    let frac = (k.transcendental_elems / k.out_elems.max(1) as f64).min(4.0);
+    if s.fast_math {
+        1.0 + 0.05 * frac
+    } else {
+        1.0 + 0.35 * frac
+    }
+}
+
+/// Price one kernel.
+pub fn kernel_cost(spec: &PlatformSpec, s: &Schedule, k: &KernelLaunch) -> KernelCost {
+    let occ = occupancy(spec, s, k.out_elems);
+    let (peak, mm_util) = match k.class {
+        KernelClass::MatmulLike | KernelClass::Attention => {
+            let u = tile_utilization(spec, s) * occ;
+            (spec.peak_flops_mm, u)
+        }
+        _ => (spec.peak_flops_f32, occ),
+    };
+    let mem_eff = memory_efficiency(s) * (0.5 + 0.5 * occ);
+    let t_pen = transcendental_penalty(k, s);
+    let compute_s = k.flops / (peak * mm_util.max(1e-3)) * t_pen;
+    let memory_s = k.bytes_total() / (spec.mem_bw * mem_eff.max(1e-3));
+    // reductions serialize a dependency chain: mild latency adder
+    let chain = if k.class == KernelClass::Reduction {
+        1.15
+    } else {
+        1.0
+    };
+    let body = compute_s.max(memory_s) * chain;
+    KernelCost {
+        compute_s,
+        memory_s,
+        launch_s: 0.0, // accounted at plan level (graphs amortization)
+        total_s: body,
+        mm_utilization: mm_util,
+        mem_utilization: mem_eff,
+        occupancy: occ,
+    }
+}
+
+/// Launch cost for a whole plan: with CUDA graphs the per-dispatch
+/// overhead is paid once per *graph* launch instead of per kernel.
+pub fn launch_cost(spec: &PlatformSpec, s: &Schedule, n_kernels: usize) -> f64 {
+    if n_kernels == 0 {
+        return 0.0;
+    }
+    match (s.use_graphs, spec.kind) {
+        // one graph launch + tiny per-node replay cost
+        (true, crate::platform::PlatformKind::Cuda) => {
+            spec.launch_overhead + n_kernels as f64 * 0.3e-6
+        }
+        // cached pipeline state / command-queue reuse (§7.2): the
+        // encoder setup cost drops away, dispatch remains
+        (true, crate::platform::PlatformKind::Metal) => {
+            n_kernels as f64 * (0.35 * spec.launch_overhead)
+        }
+        (false, _) => n_kernels as f64 * (spec.launch_overhead + spec.dispatch_overhead),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{cuda, metal};
+    use crate::sched::schedule::Tile;
+
+    fn mm_kernel(flops: f64, bytes: f64) -> KernelLaunch {
+        KernelLaunch {
+            nodes: vec![0],
+            name: "matmul".into(),
+            class: KernelClass::MatmulLike,
+            flops,
+            transcendental_elems: 0.0,
+            bytes_read: bytes * 0.66,
+            bytes_written: bytes * 0.34,
+            out_elems: 1 << 20,
+        }
+    }
+
+    #[test]
+    fn bigger_tiles_faster_matmul() {
+        let spec = cuda::h100();
+        let k = mm_kernel(1e12, 1e8);
+        let mut small = Schedule::naive();
+        small.tile = Tile { bm: 16, bn: 16, bk: 16 };
+        let mut big = small.clone();
+        big.tile = Tile { bm: 128, bn: 128, bk: 64 };
+        assert!(
+            kernel_cost(&spec, &big, &k).total_s < kernel_cost(&spec, &small, &k).total_s
+        );
+    }
+
+    #[test]
+    fn fast_math_helps_transcendental_kernels() {
+        let spec = metal::m4_max();
+        let mut k = mm_kernel(1e9, 1e9);
+        k.class = KernelClass::Elementwise;
+        k.transcendental_elems = k.out_elems as f64;
+        let mut s = Schedule::naive();
+        // make the kernel compute-bound so the penalty is visible
+        k.flops = 1e12;
+        let slow = kernel_cost(&spec, &s, &k).total_s;
+        s.fast_math = true;
+        let fast = kernel_cost(&spec, &s, &k).total_s;
+        assert!(fast < slow, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn vectorization_helps_memory_bound() {
+        let spec = cuda::h100();
+        let mut k = mm_kernel(1e6, 1e10);
+        k.class = KernelClass::Elementwise;
+        let mut s = Schedule::naive();
+        s.vec_width = 1;
+        let narrow = kernel_cost(&spec, &s, &k).total_s;
+        s.vec_width = 4;
+        s.ept = 8;
+        let wide = kernel_cost(&spec, &s, &k).total_s;
+        assert!(wide < narrow);
+    }
+
+    #[test]
+    fn graphs_amortize_launches() {
+        let spec = cuda::h100();
+        let mut s = Schedule::naive();
+        let plain = launch_cost(&spec, &s, 50);
+        s.use_graphs = true;
+        let graphed = launch_cost(&spec, &s, 50);
+        assert!(graphed < plain / 5.0, "graphed={graphed} plain={plain}");
+    }
+
+    #[test]
+    fn tiny_workload_occupancy_low() {
+        let spec = cuda::h100();
+        let s = Schedule::naive();
+        let tiny = occupancy(&spec, &s, 256);
+        let big = occupancy(&spec, &s, 1 << 22);
+        assert!(tiny < big);
+    }
+
+    #[test]
+    fn cost_is_at_least_roofline() {
+        let spec = cuda::h100();
+        let s = Schedule::expert();
+        let k = mm_kernel(1e12, 1e8);
+        let c = kernel_cost(&spec, &s, &k);
+        let ideal = spec.roofline_seconds(k.flops, k.bytes_total(), true);
+        assert!(c.total_s >= ideal * 0.99, "cost {} < roofline {}", c.total_s, ideal);
+    }
+}

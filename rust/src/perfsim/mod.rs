@@ -1,0 +1,23 @@
+//! The device simulator: lowers (graph, schedule) to a kernel-launch
+//! plan and prices it on a platform with a roofline + launch-overhead
+//! + occupancy model.
+//!
+//! What the model must (and does) capture for the paper's results to
+//! reproduce:
+//! - fusion removes kernel launches *and* intermediate HBM traffic —
+//!   the dominant optimization (§5.1, §7.2);
+//! - at small batch, `T_o >> T_m, T_c`: launch overhead dominates and
+//!   launch-count reductions win (Table 6 small-batch regime; §5.1's
+//!   measurement discussion);
+//! - tile choice sets matmul-engine utilization (MXU/tensor-core
+//!   efficiency), elements-per-thread and vector width set effective
+//!   memory bandwidth (§7.2);
+//! - CUDA graphs amortize per-dispatch overhead (§5.1);
+//! - fast-math accelerates transcendental-heavy kernels (§7.2).
+
+pub mod lower;
+pub mod cost;
+pub mod exec;
+
+pub use exec::{simulate, SimResult};
+pub use lower::{KernelClass, KernelLaunch, Plan};

@@ -1,0 +1,47 @@
+//! CUDA-like platform: NVIDIA H100 SXM5 constants (the paper's testbed:
+//! 4× H100 SXM5, 80GB HBM3, 3.35 TB/s — §4.3).
+
+use super::spec::{PlatformKind, PlatformSpec, ProfilerAccess};
+
+/// H100 SXM5 device model.
+pub fn h100() -> PlatformSpec {
+    PlatformSpec {
+        kind: PlatformKind::Cuda,
+        name: "NVIDIA H100 SXM5 80GB",
+        // 132 SMs * 128 fp32 lanes * 2 flop * ~1.8GHz ≈ 60 TFLOP/s
+        peak_flops_f32: 60e12,
+        // TF32 tensor core throughput (dense) ≈ 495 TFLOP/s; we model
+        // f32 matmul on the MM engine at TF32 rate.
+        peak_flops_mm: 495e12,
+        mem_bw: 3.35e12,
+        // CUDA kernel launch ≈ 4 µs end-to-end at small sizes
+        launch_overhead: 4.0e-6,
+        dispatch_overhead: 1.5e-6,
+        // 228 KB shared memory per SM (227 usable per block)
+        onchip_bytes: 227 * 1024,
+        max_threadgroup: 1024,
+        simd_width: 32,
+        num_cores: 132,
+        unified_memory: false,
+        // PCIe Gen5 x16 ≈ 64 GB/s (SXM uses NVLink to peers, but host
+        // staging still crosses PCIe)
+        h2d_bw: 64e9,
+        profiler: ProfilerAccess::ProgrammaticCsv,
+        noise_sigma: 0.04,
+        unsupported_ops: &[],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_headlines() {
+        let s = h100();
+        assert_eq!(s.kind, PlatformKind::Cuda);
+        assert!((s.mem_bw - 3.35e12).abs() < 1e9);
+        assert!(s.peak_flops_mm > s.peak_flops_f32);
+        assert_eq!(s.max_threadgroup, 1024);
+    }
+}

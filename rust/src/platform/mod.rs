@@ -1,0 +1,14 @@
+//! Simulated accelerator platforms.
+//!
+//! Two fundamentally different targets, as in the paper (§4.3):
+//! a CUDA-like discrete GPU modeled on the H100 SXM5 testbed, and a
+//! Metal-like unified-memory GPU modeled on the Apple M4 Max Mac
+//! Studios.  The constants drive the `perfsim` roofline model; the
+//! *profiling asymmetry* (programmatic CSV vs GUI screenshots) lives in
+//! `profiler`.
+
+pub mod spec;
+pub mod cuda;
+pub mod metal;
+
+pub use spec::{PlatformKind, PlatformSpec, ProfilerAccess};

@@ -1,0 +1,133 @@
+//! Platform specification: the device constants the simulator and the
+//! legality checks consume.
+
+/// Which platform family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    Cuda,
+    Metal,
+}
+
+impl PlatformKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlatformKind::Cuda => "cuda",
+            PlatformKind::Metal => "metal",
+        }
+    }
+
+    /// The accelerator-language name used in prompts (Listing 1's
+    /// `{{ accelerator }}` substitution).
+    pub fn language(&self) -> &'static str {
+        match self {
+            PlatformKind::Cuda => "CUDA",
+            PlatformKind::Metal => "Metal",
+        }
+    }
+}
+
+/// How profiling data can be obtained on this platform — the central
+/// asymmetry of the paper (§6.3): CUDA has programmatic APIs (nsys
+/// stats → CSV), Metal only exposes Xcode's GUI, which the paper drove
+/// with cliclick and screenshots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfilerAccess {
+    /// Structured CSV reports, machine-readable.
+    ProgrammaticCsv,
+    /// Rendered screenshots of GUI views; must be parsed visually.
+    GuiScreenshot,
+}
+
+/// Device constants.  All rates in SI (bytes/s, flop/s, seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    pub kind: PlatformKind,
+    pub name: &'static str,
+    /// Peak f32 compute (FLOP/s) through the vector units.
+    pub peak_flops_f32: f64,
+    /// Peak matmul-engine compute (FLOP/s) — tensor core / simdgroup-mm.
+    pub peak_flops_mm: f64,
+    /// HBM / unified-memory bandwidth (bytes/s).
+    pub mem_bw: f64,
+    /// Per-kernel launch overhead (s) — dominates small-batch problems
+    /// (§5.1's T_o >> T_m discussion, Table 6's small-batch regime).
+    pub launch_overhead: f64,
+    /// Extra per-dispatch overhead the runtime pays when the command
+    /// stream isn't consolidated (graphs amortize this on CUDA).
+    pub dispatch_overhead: f64,
+    /// On-chip memory per threadgroup (shared mem / threadgroup mem).
+    pub onchip_bytes: usize,
+    /// Max threads per threadgroup.
+    pub max_threadgroup: usize,
+    /// Execution-unit width (warp = 32 on CUDA, SIMD-group = 32 on Metal).
+    pub simd_width: usize,
+    /// Number of SMs / GPU cores (occupancy granularity).
+    pub num_cores: usize,
+    /// Unified memory (no explicit H2D/D2H transfer cost).
+    pub unified_memory: bool,
+    /// Host-device transfer bandwidth (bytes/s); unused when unified.
+    pub h2d_bw: f64,
+    /// How profiles are accessed on this platform.
+    pub profiler: ProfilerAccess,
+    /// Measurement noise sigma (log-space) for simulated timings; the
+    /// paper notes small-shape measurements carry irreducible noise.
+    pub noise_sigma: f64,
+    /// Ops with no native implementation (problems containing them are
+    /// excluded on this platform — Table 2's 30 exclusions on Metal).
+    pub unsupported_ops: &'static [&'static str],
+}
+
+impl PlatformSpec {
+    /// Is an op (by mnemonic family) supported natively?
+    pub fn supports(&self, op_family: &str) -> bool {
+        !self.unsupported_ops.contains(&op_family)
+    }
+
+    /// Ideal time lower bound for a workload of `flops` and `bytes`
+    /// at perfect utilization (roofline).
+    pub fn roofline_seconds(&self, flops: f64, bytes: f64, on_mm_engine: bool) -> f64 {
+        let peak = if on_mm_engine {
+            self.peak_flops_mm
+        } else {
+            self.peak_flops_f32
+        };
+        (flops / peak).max(bytes / self.mem_bw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{cuda, metal};
+
+    #[test]
+    fn roofline_picks_binding_constraint() {
+        let spec = cuda::h100();
+        // tiny flops, huge bytes -> memory bound
+        let t = spec.roofline_seconds(1e3, 1e9, true);
+        assert!((t - 1e9 / spec.mem_bw).abs() / t < 1e-9);
+        // huge flops, tiny bytes -> compute bound
+        let t2 = spec.roofline_seconds(1e15, 1.0, true);
+        assert!((t2 - 1e15 / spec.peak_flops_mm).abs() / t2 < 1e-9);
+    }
+
+    #[test]
+    fn metal_is_unified_cuda_is_not() {
+        assert!(metal::m4_max().unified_memory);
+        assert!(!cuda::h100().unified_memory);
+    }
+
+    #[test]
+    fn profiler_asymmetry() {
+        assert_eq!(cuda::h100().profiler, ProfilerAccess::ProgrammaticCsv);
+        assert_eq!(metal::m4_max().profiler, ProfilerAccess::GuiScreenshot);
+    }
+
+    #[test]
+    fn metal_excludes_3d_ops() {
+        let m = metal::m4_max();
+        assert!(!m.supports("conv3d_transpose"));
+        assert!(m.supports("matmul"));
+        assert!(cuda::h100().supports("conv3d_transpose"));
+    }
+}

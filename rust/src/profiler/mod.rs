@@ -1,0 +1,19 @@
+//! Profiling frontends — the paper's central platform asymmetry.
+//!
+//! CUDA: `nsys stats`-style **programmatic CSV** reports (kernel
+//! summary, API summary, memory ops) — [`nsys`].
+//!
+//! Metal: no programmatic API.  The paper automated Xcode Instruments
+//! with cliclick and captured **screenshots** of the summary / memory /
+//! timeline views; we reproduce the shape of that pipeline by rendering
+//! the simulated timeline into fixed-layout ASCII "screenshots"
+//! ([`xcode`]) which the performance-analysis agent must *parse back*
+//! ([`parse`]) before it can reason about them — exercising the same
+//! lossy, visual-only path.
+
+pub mod record;
+pub mod nsys;
+pub mod xcode;
+pub mod parse;
+
+pub use record::{KernelRecord, Profile};

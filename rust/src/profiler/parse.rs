@@ -1,0 +1,189 @@
+//! Screen-scraping the Xcode-style screenshots back into structure.
+//!
+//! This is the "multimodal" half of the analysis agent: on Metal the
+//! profile arrives as rendered text screens, and the values recovered
+//! here are *lossy* (rounded to what was printed, names truncated to
+//! 20 chars) — exactly the information loss a vision model reading GUI
+//! pixels suffers.  The agent's recommendations on Metal are therefore
+//! made from coarser data than on CUDA, which the paper observed too
+//! (profiling info helps less / less consistently on Metal, Table 5).
+
+use anyhow::{bail, Result};
+
+/// A kernel row recovered from the Counters screen.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScrapedKernel {
+    pub name: String,
+    pub limiter_alu: bool,
+    pub alu_pct: f64,
+    pub mem_pct: f64,
+    pub occupancy_pct: f64,
+    /// From the timeline view when join succeeds.
+    pub time_us: Option<f64>,
+}
+
+/// Everything recoverable from the three screenshots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScrapedProfile {
+    pub gpu_time_us: f64,
+    pub encoder_overhead_us: f64,
+    pub busy_pct: f64,
+    pub dispatches: usize,
+    pub kernels: Vec<ScrapedKernel>,
+}
+
+fn grab_number(line: &str) -> Option<f64> {
+    let cleaned: String = line
+        .chars()
+        .map(|c| if c.is_ascii_digit() || c == '.' || c == '-' { c } else { ' ' })
+        .collect();
+    cleaned
+        .split_whitespace()
+        .filter_map(|t| t.parse::<f64>().ok())
+        .next_back()
+}
+
+fn strip_frame(line: &str) -> &str {
+    line.trim_start_matches('│').trim_end_matches('│')
+}
+
+/// Parse the three capture screens (summary, timeline, counters).
+pub fn scrape(screens: &[String]) -> Result<ScrapedProfile> {
+    if screens.len() != 3 {
+        bail!("expected 3 screenshots (summary, timeline, counters), got {}", screens.len());
+    }
+    let (summary, timeline, counters) = (&screens[0], &screens[1], &screens[2]);
+
+    let mut gpu_time = None;
+    let mut overhead = None;
+    let mut busy = None;
+    let mut dispatches = None;
+    for l in summary.lines() {
+        let l = strip_frame(l);
+        if l.contains("GPU Time") {
+            gpu_time = grab_number(l);
+        } else if l.contains("Encoder Overhead") {
+            overhead = grab_number(l);
+        } else if l.contains("GPU Busy") {
+            busy = grab_number(l);
+        } else if l.contains("Dispatches") {
+            dispatches = grab_number(l);
+        }
+    }
+    let (Some(gpu_time), Some(overhead), Some(busy), Some(dispatches)) =
+        (gpu_time, overhead, busy, dispatches)
+    else {
+        bail!("summary screen missing counters");
+    };
+
+    // timeline rows: "  name  ...████  123.4us"
+    let mut times: Vec<(String, f64)> = Vec::new();
+    for l in timeline.lines() {
+        let l = strip_frame(l);
+        if !l.contains('█') {
+            continue;
+        }
+        let name = l.trim_start().split_whitespace().next().unwrap_or("").to_string();
+        let us = l.trim_end().strip_suffix("us").and_then(|s| {
+            let tail: String = s
+                .chars()
+                .rev()
+                .take_while(|c| c.is_ascii_digit() || *c == '.')
+                .collect();
+            tail.chars().rev().collect::<String>().parse::<f64>().ok()
+        });
+        if let Some(us) = us {
+            times.push((name, us));
+        }
+    }
+
+    // counters rows: "  name  ALU|Memory  alu mem occ"
+    let mut kernels = Vec::new();
+    for l in counters.lines() {
+        let l = strip_frame(l);
+        let has_limiter = l.contains(" ALU ") || l.contains("ALU  ") || l.contains("Memory");
+        if !has_limiter || l.contains("Limiter") {
+            continue;
+        }
+        let toks: Vec<&str> = l.split_whitespace().collect();
+        if toks.len() < 5 {
+            continue;
+        }
+        let name = toks[0].to_string();
+        let limiter_alu = toks[1] == "ALU";
+        let nums: Vec<f64> = toks[2..].iter().filter_map(|t| t.parse().ok()).collect();
+        if nums.len() < 3 {
+            continue;
+        }
+        let time_us = times
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, t)| *t);
+        kernels.push(ScrapedKernel {
+            name,
+            limiter_alu,
+            alu_pct: nums[0],
+            mem_pct: nums[1],
+            occupancy_pct: nums[2],
+            time_us,
+        });
+    }
+    if kernels.is_empty() {
+        bail!("counters screen had no kernel rows");
+    }
+    Ok(ScrapedProfile {
+        gpu_time_us: gpu_time,
+        encoder_overhead_us: overhead,
+        busy_pct: busy,
+        dispatches: dispatches as usize,
+        kernels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::record::tests::sample_profile;
+    use crate::profiler::xcode::capture_screens;
+
+    #[test]
+    fn roundtrip_recovers_counters() {
+        let p = sample_profile();
+        let scraped = scrape(&capture_screens(&p)).unwrap();
+        assert_eq!(scraped.dispatches, p.kernels.len());
+        // values are lossy (printed rounding) but close
+        assert!((scraped.gpu_time_us - p.total_us).abs() / p.total_us.max(1.0) < 0.05);
+        assert_eq!(scraped.kernels.len(), p.kernels.len());
+    }
+
+    #[test]
+    fn roundtrip_limiters_match() {
+        let p = sample_profile();
+        let scraped = scrape(&capture_screens(&p)).unwrap();
+        for (s, k) in scraped.kernels.iter().zip(&p.kernels) {
+            assert_eq!(s.limiter_alu, k.compute_bound, "{}", k.name);
+            assert!((s.occupancy_pct - k.occupancy * 100.0).abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn timeline_times_joined() {
+        let p = sample_profile();
+        let scraped = scrape(&capture_screens(&p)).unwrap();
+        // at least the first kernel's time should join by name prefix
+        let joined = scraped.kernels.iter().filter(|k| k.time_us.is_some()).count();
+        assert!(joined >= 1, "{scraped:?}");
+    }
+
+    #[test]
+    fn wrong_screen_count_rejected() {
+        assert!(scrape(&[]).is_err());
+        assert!(scrape(&vec!["x".to_string(); 2]).is_err());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let garbage = vec!["not a screen".to_string(); 3];
+        assert!(scrape(&garbage).is_err());
+    }
+}

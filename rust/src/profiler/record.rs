@@ -1,0 +1,114 @@
+//! Platform-neutral profile records extracted from a simulation.
+
+use crate::perfsim::SimResult;
+
+/// One kernel's profile row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelRecord {
+    pub name: String,
+    pub time_us: f64,
+    pub pct_of_total: f64,
+    pub gap_before_us: f64,
+    pub mm_utilization: f64,
+    pub mem_utilization: f64,
+    pub occupancy: f64,
+    pub compute_bound: bool,
+}
+
+/// A complete profile of one plan execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    pub workload: String,
+    pub platform: String,
+    pub kernels: Vec<KernelRecord>,
+    pub total_us: f64,
+    pub launch_overhead_us: f64,
+    pub busy_fraction: f64,
+    pub total_flops: f64,
+    pub total_bytes: f64,
+}
+
+impl Profile {
+    /// Extract from a simulation result.
+    pub fn from_sim(workload: &str, platform: &str, sim: &SimResult) -> Profile {
+        let total = sim.ideal_s.max(1e-15);
+        let kernels = sim
+            .timeline
+            .iter()
+            .map(|t| KernelRecord {
+                name: t.name.clone(),
+                time_us: t.duration_s * 1e6,
+                pct_of_total: 100.0 * t.duration_s / total,
+                gap_before_us: t.gap_before_s * 1e6,
+                mm_utilization: t.cost.mm_utilization,
+                mem_utilization: t.cost.mem_utilization,
+                occupancy: t.cost.occupancy,
+                compute_bound: t.cost.compute_s > t.cost.memory_s,
+            })
+            .collect();
+        let launch: f64 = sim.timeline.iter().map(|t| t.gap_before_s).sum();
+        Profile {
+            workload: workload.to_string(),
+            platform: platform.to_string(),
+            kernels,
+            total_us: sim.ideal_s * 1e6,
+            launch_overhead_us: launch * 1e6,
+            busy_fraction: sim.busy_fraction(),
+            total_flops: sim.total_flops,
+            total_bytes: sim.total_bytes,
+        }
+    }
+
+    /// The single slowest kernel (optimization target).
+    pub fn hottest(&self) -> Option<&KernelRecord> {
+        self.kernels
+            .iter()
+            .max_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap())
+    }
+
+    /// Fraction of wall time lost to launch gaps.
+    pub fn launch_fraction(&self) -> f64 {
+        self.launch_overhead_us / self.total_us.max(1e-9)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::UnaryKind;
+    use crate::perfsim::lower::lower;
+    use crate::perfsim::simulate;
+    use crate::platform::cuda;
+    use crate::sched::Schedule;
+    use crate::tensor::Shape;
+    use crate::util::rng::Pcg;
+
+    pub(crate) fn sample_profile() -> Profile {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(Shape::of(&[64, 64]));
+        let w = b.input(Shape::of(&[64, 64]));
+        let m = b.matmul(x, w);
+        let r = b.unary(UnaryKind::Swish, m);
+        let g = b.finish(vec![r]);
+        let plan = lower(&g, &Schedule::naive());
+        let spec = cuda::h100();
+        let mut rng = Pcg::seed(0);
+        let sim = simulate(&spec, &plan, &mut rng, 10, 2);
+        Profile::from_sim("t", spec.name, &sim)
+    }
+
+    #[test]
+    fn percentages_sum_to_busy() {
+        let p = sample_profile();
+        let pct: f64 = p.kernels.iter().map(|k| k.pct_of_total).sum();
+        assert!((pct / 100.0 - p.busy_fraction).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hottest_is_max() {
+        let p = sample_profile();
+        let h = p.hottest().unwrap();
+        assert!(p.kernels.iter().all(|k| k.time_us <= h.time_us));
+    }
+}

@@ -1,0 +1,146 @@
+//! Xcode-Instruments-style "screenshots" for the Metal platform.
+//!
+//! macOS exposes no programmatic GPU-profiling API; the paper drove
+//! Xcode's GUI with cliclick and captured screenshots of the summary,
+//! memory and timeline views (§6.3).  We reproduce that gate: the only
+//! Metal profiling artifact is a *rendered, fixed-layout text screen*
+//! (one per view).  The analysis agent cannot read structured fields —
+//! it must run the [`super::parse`] screen-scraper first, and that
+//! parser is intentionally lossy (rounded values, truncated names),
+//! like reading numbers off pixels.
+
+use super::record::Profile;
+
+pub const SCREEN_W: usize = 78;
+
+fn line(out: &mut String, text: &str) {
+    // char-boundary-safe truncation (the timeline bars are multibyte)
+    let t: String = text.chars().take(SCREEN_W - 2).collect();
+    out.push_str(&format!("│{:<width$}│\n", t, width = SCREEN_W - 2));
+}
+
+fn top(out: &mut String, title: &str) {
+    let mut t = format!("─ {title} ");
+    while t.chars().count() < SCREEN_W - 2 {
+        t.push('─');
+    }
+    out.push_str(&format!("┌{t}┐\n"));
+}
+
+fn bottom(out: &mut String) {
+    out.push_str(&format!("└{}┘\n", "─".repeat(SCREEN_W - 2)));
+}
+
+/// The gputrace "Summary" view: counters a human reads off the screen.
+pub fn summary_view(p: &Profile) -> String {
+    let mut s = String::new();
+    top(&mut s, "Xcode Instruments — GPU Trace — Summary");
+    line(&mut s, &format!("Workload: {}   Device: {}", p.workload, p.platform));
+    line(&mut s, "");
+    line(&mut s, &format!("  GPU Time            {:>10.1} us", p.total_us));
+    line(&mut s, &format!("  Encoder Overhead    {:>10.1} us", p.launch_overhead_us));
+    line(&mut s, &format!("  GPU Busy            {:>9.0} %", p.busy_fraction * 100.0));
+    line(&mut s, &format!("  Dispatches          {:>10}", p.kernels.len()));
+    let occ = p.kernels.iter().map(|k| k.occupancy).fold(0.0, f64::max);
+    line(&mut s, &format!("  Peak Occupancy      {:>9.0} %", occ * 100.0));
+    line(&mut s, "");
+    bottom(&mut s);
+    s
+}
+
+/// The "Timeline" view: proportional bars with per-kernel labels.
+pub fn timeline_view(p: &Profile) -> String {
+    let mut s = String::new();
+    top(&mut s, "Xcode Instruments — GPU Trace — Timeline");
+    let span = p.total_us.max(1e-9);
+    let track_w = 40usize;
+    for k in &p.kernels {
+        let gap_w = ((k.gap_before_us / span) * track_w as f64).round() as usize;
+        let bar_w = ((k.time_us / span) * track_w as f64).round().max(1.0) as usize;
+        let mut name = k.name.clone();
+        name.truncate(20);
+        line(
+            &mut s,
+            &format!(
+                "  {name:<20} {}{} {:>8.1}us",
+                ".".repeat(gap_w.min(track_w)),
+                "█".repeat(bar_w.min(track_w)),
+                k.time_us
+            ),
+        );
+    }
+    line(&mut s, "");
+    line(
+        &mut s,
+        &format!("  idle gaps: {:>5.1} us total ({:.0}% of trace)", p.launch_overhead_us, p.launch_fraction() * 100.0),
+    );
+    bottom(&mut s);
+    s
+}
+
+/// The "Memory"/counters view: per-kernel limiter readout.
+pub fn memory_view(p: &Profile) -> String {
+    let mut s = String::new();
+    top(&mut s, "Xcode Instruments — GPU Trace — Counters");
+    line(&mut s, "  Kernel               Limiter   ALU%   MEM%   Occup%");
+    for k in &p.kernels {
+        let mut name = k.name.clone();
+        name.truncate(20);
+        line(
+            &mut s,
+            &format!(
+                "  {name:<20} {:<9} {:>4.0}   {:>4.0}   {:>5.0}",
+                if k.compute_bound { "ALU" } else { "Memory" },
+                k.mm_utilization * 100.0,
+                k.mem_utilization * 100.0,
+                k.occupancy * 100.0
+            ),
+        );
+    }
+    bottom(&mut s);
+    s
+}
+
+/// The three screenshots the capture pipeline produces per gputrace.
+pub fn capture_screens(p: &Profile) -> Vec<String> {
+    vec![summary_view(p), timeline_view(p), memory_view(p)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::record::tests::sample_profile;
+
+    #[test]
+    fn screens_have_fixed_width() {
+        let p = sample_profile();
+        for screen in capture_screens(&p) {
+            for l in screen.lines() {
+                assert_eq!(l.chars().count(), SCREEN_W, "line: {l:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn summary_mentions_counters() {
+        let p = sample_profile();
+        let s = summary_view(&p);
+        assert!(s.contains("GPU Time") && s.contains("Dispatches"));
+    }
+
+    #[test]
+    fn timeline_has_one_bar_per_kernel() {
+        let p = sample_profile();
+        let t = timeline_view(&p);
+        let bars = t.lines().filter(|l| l.contains('█')).count();
+        assert_eq!(bars, p.kernels.len());
+    }
+
+    #[test]
+    fn memory_view_lists_limiters() {
+        let p = sample_profile();
+        let m = memory_view(&p);
+        assert!(m.contains("Limiter"));
+        assert!(m.contains("ALU") || m.contains("Memory"));
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: the real execution path.
+//!
+//! Loads the HLO-text artifacts the Python AOT pipeline emitted
+//! (`artifacts/*.hlo.txt` + `manifest.json`), compiles each once on
+//! the PJRT CPU client, and executes them with concrete inputs from
+//! the coordinator's request loop.  Python is never on this path.
+
+pub mod registry;
+pub mod pjrt;
+
+pub use pjrt::PjrtRuntime;
+pub use registry::{ArtifactEntry, Registry};

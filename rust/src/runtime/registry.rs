@@ -1,0 +1,152 @@
+//! Artifact registry: parses the AOT manifest and resolves
+//! (workload, variant, batch) keys to HLO files and input specs.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub key: String,
+    pub workload: String,
+    pub variant: String,
+    pub batch: usize,
+    pub path: PathBuf,
+    /// Input shapes (all f32).
+    pub input_shapes: Vec<Vec<usize>>,
+    pub is_reference: bool,
+}
+
+/// The parsed registry.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub entries: Vec<ArtifactEntry>,
+    pub root: PathBuf,
+}
+
+impl Registry {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Registry> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        Self::parse(&text, root)
+    }
+
+    /// Parse a manifest document.
+    pub fn parse(text: &str, root: PathBuf) -> Result<Registry> {
+        let doc = json::parse(text)?;
+        let version = doc.get("version").and_then(Json::as_i64).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut entries = Vec::new();
+        for e in doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing entries")?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("entry missing {k}"))?
+                    .to_string())
+            };
+            let mut input_shapes = Vec::new();
+            for inp in e.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                let dims: Vec<usize> = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_i64().map(|v| v as usize))
+                    .collect();
+                let dtype = inp.get("dtype").and_then(Json::as_str).unwrap_or("float32");
+                if dtype != "float32" {
+                    bail!("unsupported dtype {dtype}");
+                }
+                input_shapes.push(dims);
+            }
+            entries.push(ArtifactEntry {
+                key: get_str("key")?,
+                workload: get_str("workload")?,
+                variant: get_str("variant")?,
+                batch: e.get("batch").and_then(Json::as_i64).unwrap_or(0) as usize,
+                path: root.join(get_str("path")?),
+                input_shapes,
+                is_reference: e.get("is_reference").and_then(Json::as_bool).unwrap_or(false),
+            });
+        }
+        Ok(Registry { entries, root })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.key == key)
+    }
+
+    /// All variants of a workload at a batch size.
+    pub fn variants(&self, workload: &str, batch: usize) -> Vec<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.workload == workload && e.batch == batch)
+            .collect()
+    }
+
+    /// The reference variant of a workload at a batch size.
+    pub fn reference(&self, workload: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.variants(workload, batch)
+            .into_iter()
+            .find(|e| e.is_reference)
+    }
+
+    pub fn workloads(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.entries.iter().map(|e| e.workload.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "version": 1,
+ "entries": [
+  {"key": "swish__naive__b16", "workload": "swish", "variant": "naive",
+   "batch": 16, "path": "swish__naive__b16.hlo.txt",
+   "inputs": [{"shape": [16, 16384], "dtype": "float32"}],
+   "is_reference": true, "sha256": "ab"},
+  {"key": "swish__ept8__b16", "workload": "swish", "variant": "ept8",
+   "batch": 16, "path": "swish__ept8__b16.hlo.txt",
+   "inputs": [{"shape": [16, 16384], "dtype": "float32"}],
+   "is_reference": false, "sha256": "cd"}
+ ]
+}"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let r = Registry::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(r.entries.len(), 2);
+        assert_eq!(r.workloads(), vec!["swish"]);
+        let e = r.get("swish__ept8__b16").unwrap();
+        assert_eq!(e.input_shapes, vec![vec![16, 16384]]);
+        assert_eq!(e.path, PathBuf::from("/tmp/a/swish__ept8__b16.hlo.txt"));
+    }
+
+    #[test]
+    fn reference_lookup() {
+        let r = Registry::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert_eq!(r.reference("swish", 16).unwrap().variant, "naive");
+        assert!(r.reference("swish", 99).is_none());
+        assert_eq!(r.variants("swish", 16).len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Registry::parse(r#"{"version": 2, "entries": []}"#, PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Schedule legality against a platform.
+//!
+//! A schedule that exceeds device limits fails *at dispatch*, not at
+//! compile: this is the paper's **runtime error** execution state
+//! (§3.3 — "segmentation faults or program abort").  The generation
+//! agent's runtime-class defects (oversized threadgroups, tiles that
+//! overflow on-chip memory) are caught here when the plan is "run" on
+//! the simulated device.
+
+use super::schedule::Schedule;
+use crate::platform::PlatformSpec;
+use anyhow::{bail, Result};
+
+/// Check a schedule against device limits.  The error text mimics the
+/// driver diagnostics the paper's feedback loop would capture.
+pub fn check(s: &Schedule, p: &PlatformSpec) -> Result<()> {
+    if s.threadgroup == 0 || s.threadgroup % p.simd_width != 0 {
+        bail!(
+            "runtime error: invalid threadgroup size {} (must be a non-zero multiple of {})",
+            s.threadgroup,
+            p.simd_width
+        );
+    }
+    if s.threadgroup > p.max_threadgroup {
+        bail!(
+            "runtime error: threadgroup size {} exceeds device maximum {} \
+             (maxTotalThreadsPerThreadgroup)",
+            s.threadgroup,
+            p.max_threadgroup
+        );
+    }
+    if s.tile.onchip_bytes() > p.onchip_bytes {
+        bail!(
+            "runtime error: tile ({},{},{}) requires {} bytes of on-chip memory, device has {}",
+            s.tile.bm,
+            s.tile.bn,
+            s.tile.bk,
+            s.tile.onchip_bytes(),
+            p.onchip_bytes
+        );
+    }
+    if !s.ept.is_power_of_two() || s.ept > 16 {
+        bail!("runtime error: elements-per-thread {} unsupported (1..16, pow2)", s.ept);
+    }
+    if !s.vec_width.is_power_of_two() || s.vec_width > 8 {
+        bail!("runtime error: vector width {} unsupported", s.vec_width);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{cuda, metal};
+    use crate::sched::schedule::Tile;
+
+    #[test]
+    fn naive_and_expert_legal_on_cuda() {
+        let p = cuda::h100();
+        assert!(check(&Schedule::naive(), &p).is_ok());
+        assert!(check(&Schedule::expert(), &p).is_ok());
+    }
+
+    #[test]
+    fn expert_tile_overflows_metal_onchip() {
+        // 128x128x64 tile needs ~96KB; M4 Max has 32KB threadgroup mem.
+        let p = metal::m4_max();
+        let mut s = Schedule::expert();
+        s.use_graphs = false;
+        let err = check(&s, &p).unwrap_err().to_string();
+        assert!(err.contains("on-chip"), "{err}");
+    }
+
+    #[test]
+    fn launch_amortization_legal_on_metal() {
+        // on Metal `use_graphs` means cached pipeline state (§7.2's
+        // thread-local caching), which is always legal
+        let p = metal::m4_max();
+        let mut s = Schedule::naive();
+        s.use_graphs = true;
+        assert!(check(&s, &p).is_ok());
+    }
+
+    #[test]
+    fn oversized_threadgroup_rejected() {
+        let p = cuda::h100();
+        let mut s = Schedule::naive();
+        s.threadgroup = 2048;
+        let err = check(&s, &p).unwrap_err().to_string();
+        assert!(err.contains("exceeds device maximum"), "{err}");
+    }
+
+    #[test]
+    fn non_warp_multiple_rejected() {
+        let p = cuda::h100();
+        let mut s = Schedule::naive();
+        s.threadgroup = 100;
+        assert!(check(&s, &p).is_err());
+    }
+
+    #[test]
+    fn huge_tile_rejected() {
+        let p = cuda::h100();
+        let mut s = Schedule::naive();
+        s.tile = Tile { bm: 512, bn: 512, bk: 64 };
+        assert!(check(&s, &p).is_err());
+    }
+}

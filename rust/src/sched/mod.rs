@@ -1,0 +1,9 @@
+//! The schedule space: how a synthesized program maps its graph onto a
+//! platform.  This is the paper's CUDA/Metal optimization vocabulary
+//! (threadblock tiling, elements-per-thread, fast-math intrinsics,
+//! CUDA graphs) as an explicit searchable space.
+
+pub mod schedule;
+pub mod legal;
+
+pub use schedule::{Schedule, Tile};

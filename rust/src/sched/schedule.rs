@@ -1,0 +1,301 @@
+//! Schedules: the tunable mapping from a KIR graph to kernel launches.
+//!
+//! A schedule bundles the decisions the paper's case studies surface:
+//! - **fusion depth** — how many of the graph's fusion opportunities are
+//!   taken (§5.1's kernel fusion; 0 = eager, all = fully fused);
+//! - **tile** — matmul/conv threadblock tiling (bm, bn, bk);
+//! - **elements-per-thread** — §7.2's Swish optimization (1–16);
+//! - **threadgroup size** — occupancy lever (32–1024, warp multiples);
+//! - **fast_math** — `fast::exp`-style intrinsics (§7.2), trading
+//!   ~1e-3 relative error for transcendental throughput;
+//! - **use_graphs** — CUDA-graphs launch consolidation (§5.1: "CUDA
+//!   Graphs incorporation that allows consolidating several kernel
+//!   launches into one graph launch").
+//! - **vec_width** — vectorized load width in elements (1/2/4/8).
+
+use crate::util::rng::Pcg;
+
+/// Matmul/conv tiling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tile {
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+}
+
+impl Tile {
+    pub const CHOICES: [Tile; 6] = [
+        Tile { bm: 16, bn: 16, bk: 16 },
+        Tile { bm: 32, bn: 32, bk: 32 },
+        Tile { bm: 64, bn: 64, bk: 32 },
+        Tile { bm: 64, bn: 64, bk: 64 },
+        Tile { bm: 128, bn: 128, bk: 32 },
+        Tile { bm: 128, bn: 128, bk: 64 },
+    ];
+
+    /// Bytes of on-chip memory (shared mem / threadgroup mem) one tile
+    /// step needs: A-tile + B-tile + C-accumulator at f32.
+    pub fn onchip_bytes(&self) -> usize {
+        (self.bm * self.bk + self.bk * self.bn + self.bm * self.bn) * 4
+    }
+}
+
+/// A complete schedule for one candidate program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    /// Number of fusion opportunities taken (usize::MAX = all).
+    pub fusion_depth: usize,
+    pub tile: Tile,
+    /// Elements-per-thread for elementwise kernels (§7.2).
+    pub ept: usize,
+    /// Threads per threadgroup / block.
+    pub threadgroup: usize,
+    pub fast_math: bool,
+    /// Launch amortization: CUDA graphs on CUDA; thread-local cached
+    /// pipeline state + command-queue reuse on Metal (§7.2's listing).
+    pub use_graphs: bool,
+    /// Vector load width (elements).
+    pub vec_width: usize,
+}
+
+impl Schedule {
+    /// The naive schedule: what a first-try, unoptimized program uses.
+    pub fn naive() -> Schedule {
+        Schedule {
+            fusion_depth: 0,
+            tile: Tile { bm: 16, bn: 16, bk: 16 },
+            ept: 1,
+            threadgroup: 256,
+            fast_math: false,
+            use_graphs: false,
+            vec_width: 1,
+        }
+    }
+
+    /// A strong hand-tuned schedule (what an expert or a top model
+    /// converges to) — fully fused, large tiles, 8 elements/thread.
+    pub fn expert() -> Schedule {
+        Schedule {
+            fusion_depth: usize::MAX,
+            tile: Tile { bm: 128, bn: 128, bk: 64 },
+            ept: 8,
+            threadgroup: 256,
+            fast_math: true,
+            use_graphs: true,
+            vec_width: 4,
+        }
+    }
+
+    /// Platform-appropriate expert point: Metal's 32KB threadgroup
+    /// memory caps the tile, and command graphs are CUDA-only.  This is
+    /// the target the refinement loop converges to on each platform.
+    pub fn expert_for(kind: crate::platform::PlatformKind) -> Schedule {
+        match kind {
+            crate::platform::PlatformKind::Cuda => Schedule::expert(),
+            crate::platform::PlatformKind::Metal => Schedule {
+                fusion_depth: usize::MAX,
+                tile: Tile { bm: 64, bn: 64, bk: 32 },
+                ept: 8,
+                threadgroup: 256,
+                fast_math: true,
+                // on Metal this lever = cached pipeline state (§7.2),
+                // the launch-amortization analog of CUDA graphs
+                use_graphs: true,
+                vec_width: 4,
+            },
+        }
+    }
+
+    /// Sample a schedule whose quality follows `skill` ∈ [0,1]: with
+    /// probability `skill` each lever takes a strong value, else a
+    /// random (often weak) one.  This is how persona skill shapes the
+    /// schedule prior (see `agents::generation`).
+    pub fn sample(rng: &mut Pcg, skill: f64) -> Schedule {
+        let expert = Schedule::expert();
+        let mut s = Schedule::naive();
+        if rng.chance(skill) {
+            s.fusion_depth = expert.fusion_depth;
+        } else {
+            s.fusion_depth = rng.range_i64(0, 3) as usize;
+        }
+        s.tile = if rng.chance(skill) {
+            expert.tile
+        } else {
+            *rng.choose(&Tile::CHOICES)
+        };
+        s.ept = if rng.chance(skill) {
+            8
+        } else {
+            *rng.choose(&[1usize, 1, 2, 4])
+        };
+        s.threadgroup = *rng.choose(&[64usize, 128, 256, 512, 1024]);
+        s.fast_math = rng.chance(skill * 0.8);
+        s.use_graphs = rng.chance(skill * 0.2);
+        s.vec_width = if rng.chance(skill) { 4 } else { *rng.choose(&[1usize, 2]) };
+        s
+    }
+
+    /// Move one lever toward the expert point — the action a refinement
+    /// iteration takes when the performance recommendation targets that
+    /// lever.  Returns true if anything changed.
+    pub fn improve(&mut self, lever: Lever) -> bool {
+        let expert = Schedule::expert();
+        match lever {
+            Lever::Fusion => {
+                if self.fusion_depth != expert.fusion_depth {
+                    self.fusion_depth = expert.fusion_depth;
+                    return true;
+                }
+            }
+            Lever::Tile => {
+                if self.tile != expert.tile {
+                    self.tile = expert.tile;
+                    return true;
+                }
+            }
+            Lever::Ept => {
+                if self.ept < 8 {
+                    self.ept = (self.ept * 2).min(8);
+                    return true;
+                }
+            }
+            Lever::Threadgroup => {
+                if self.threadgroup != expert.threadgroup {
+                    self.threadgroup = expert.threadgroup;
+                    return true;
+                }
+            }
+            Lever::FastMath => {
+                if !self.fast_math {
+                    self.fast_math = true;
+                    return true;
+                }
+            }
+            Lever::Graphs => {
+                if !self.use_graphs {
+                    self.use_graphs = true;
+                    return true;
+                }
+            }
+            Lever::VecWidth => {
+                if self.vec_width < 4 {
+                    self.vec_width = (self.vec_width * 2).min(4);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Distance from the expert schedule in lever count (0 = expert).
+    pub fn distance_from_expert(&self) -> usize {
+        let e = Schedule::expert();
+        let mut d = 0;
+        if self.fusion_depth != e.fusion_depth {
+            d += 1;
+        }
+        if self.tile != e.tile {
+            d += 1;
+        }
+        if self.ept != e.ept {
+            d += 1;
+        }
+        if self.fast_math != e.fast_math {
+            d += 1;
+        }
+        if self.use_graphs != e.use_graphs {
+            d += 1;
+        }
+        if self.vec_width != e.vec_width {
+            d += 1;
+        }
+        d
+    }
+}
+
+/// Schedule levers a performance recommendation can target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lever {
+    Fusion,
+    Tile,
+    Ept,
+    Threadgroup,
+    FastMath,
+    Graphs,
+    VecWidth,
+}
+
+impl Lever {
+    pub const ALL: [Lever; 7] = [
+        Lever::Fusion,
+        Lever::Tile,
+        Lever::Ept,
+        Lever::Threadgroup,
+        Lever::FastMath,
+        Lever::Graphs,
+        Lever::VecWidth,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lever::Fusion => "fusion",
+            Lever::Tile => "tile",
+            Lever::Ept => "elements_per_thread",
+            Lever::Threadgroup => "threadgroup_size",
+            Lever::FastMath => "fast_math",
+            Lever::Graphs => "cuda_graphs",
+            Lever::VecWidth => "vectorization",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expert_distance_zero_except_threadgroup() {
+        assert_eq!(Schedule::expert().distance_from_expert(), 0);
+        assert!(Schedule::naive().distance_from_expert() >= 5);
+    }
+
+    #[test]
+    fn improve_converges_to_expert() {
+        let mut s = Schedule::naive();
+        for _ in 0..32 {
+            for lever in Lever::ALL {
+                s.improve(lever);
+            }
+        }
+        assert_eq!(s.distance_from_expert(), 0);
+    }
+
+    #[test]
+    fn improve_reports_noop() {
+        let mut s = Schedule::expert();
+        assert!(!s.improve(Lever::FastMath));
+        assert!(!s.improve(Lever::Tile));
+    }
+
+    #[test]
+    fn high_skill_samples_near_expert() {
+        let mut rng = Pcg::seed(0);
+        let avg_hi: f64 = (0..200)
+            .map(|_| Schedule::sample(&mut rng, 0.95).distance_from_expert() as f64)
+            .sum::<f64>()
+            / 200.0;
+        let avg_lo: f64 = (0..200)
+            .map(|_| Schedule::sample(&mut rng, 0.1).distance_from_expert() as f64)
+            .sum::<f64>()
+            / 200.0;
+        assert!(avg_hi < avg_lo, "hi={avg_hi} lo={avg_lo}");
+        assert!(avg_hi < 1.5);
+        assert!(avg_lo > 3.0);
+    }
+
+    #[test]
+    fn tile_onchip_bytes() {
+        let t = Tile { bm: 64, bn: 64, bk: 32 };
+        assert_eq!(t.onchip_bytes(), (64 * 32 + 32 * 64 + 64 * 64) * 4);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense f32 tensors + reference CPU kernels.
+//!
+//! This is the numerical ground truth for the KIR interpreter: every
+//! candidate program's output is checked against the reference graph
+//! evaluated with these ops.  Correctness over speed — though the hot
+//! ops (matmul) are written cache-consciously because the verification
+//! pipeline runs hundreds of thousands of evaluations per campaign.
+
+pub mod shape;
+pub mod tensorimpl;
+pub mod ops;
+
+pub use shape::Shape;
+pub use tensorimpl::Tensor;

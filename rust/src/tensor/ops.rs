@@ -1,0 +1,590 @@
+//! Reference CPU kernels over dense f32 tensors.
+//!
+//! Ground truth for the KIR interpreter.  `matmul` uses ikj loop order
+//! (cache-friendly, auto-vectorizable) because verification evaluates
+//! hundreds of thousands of candidate programs per campaign.
+
+use super::{Shape, Tensor};
+
+// ---------------------------------------------------------------------------
+// elementwise
+// ---------------------------------------------------------------------------
+
+/// Apply a unary function elementwise.
+pub fn map(x: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::new(x.shape.clone(), x.data.iter().map(|&v| f(v)).collect())
+}
+
+pub fn relu(x: &Tensor) -> Tensor {
+    map(x, |v| v.max(0.0))
+}
+
+pub fn sigmoid(x: &Tensor) -> Tensor {
+    map(x, |v| 1.0 / (1.0 + (-v).exp()))
+}
+
+pub fn swish(x: &Tensor) -> Tensor {
+    map(x, |v| v / (1.0 + (-v).exp()))
+}
+
+pub fn gelu(x: &Tensor) -> Tensor {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    map(x, |v| 0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh()))
+}
+
+pub fn tanh(x: &Tensor) -> Tensor {
+    map(x, f32::tanh)
+}
+
+pub fn exp(x: &Tensor) -> Tensor {
+    map(x, f32::exp)
+}
+
+pub fn neg(x: &Tensor) -> Tensor {
+    map(x, |v| -v)
+}
+
+pub fn square(x: &Tensor) -> Tensor {
+    map(x, |v| v * v)
+}
+
+pub fn sqrt(x: &Tensor) -> Tensor {
+    map(x, f32::sqrt)
+}
+
+pub fn scale(x: &Tensor, s: f32) -> Tensor {
+    map(x, |v| v * s)
+}
+
+pub fn add_scalar(x: &Tensor, s: f32) -> Tensor {
+    map(x, |v| v + s)
+}
+
+pub fn clamp(x: &Tensor, lo: f32, hi: f32) -> Tensor {
+    map(x, |v| v.clamp(lo, hi))
+}
+
+/// Binary elementwise with numpy broadcasting.
+pub fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    if a.shape == b.shape {
+        return Tensor::new(
+            a.shape.clone(),
+            a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect(),
+        );
+    }
+    let out_shape = a
+        .shape
+        .broadcast(&b.shape)
+        .unwrap_or_else(|| panic!("broadcast {} vs {}", a.shape, b.shape));
+    let r = out_shape.rank();
+    let strides = out_shape.strides();
+    let a_map = bcast_strides(&a.shape, &out_shape);
+    let b_map = bcast_strides(&b.shape, &out_shape);
+    let n = out_shape.numel();
+    let mut out = Vec::with_capacity(n);
+    let mut idx = vec![0usize; r];
+    for lin in 0..n {
+        let mut rem = lin;
+        let mut ao = 0usize;
+        let mut bo = 0usize;
+        for d in 0..r {
+            idx[d] = rem / strides[d];
+            rem %= strides[d];
+            ao += idx[d] * a_map[d];
+            bo += idx[d] * b_map[d];
+        }
+        out.push(f(a.data[ao], b.data[bo]));
+    }
+    Tensor::new(out_shape, out)
+}
+
+/// Per-dim stride of `small` when broadcast against `out` (0 where dim=1).
+fn bcast_strides(small: &Shape, out: &Shape) -> Vec<usize> {
+    let r = out.rank();
+    let offset = r - small.rank();
+    let s_str = small.strides();
+    (0..r)
+        .map(|d| {
+            if d < offset || small.dim(d - offset) == 1 {
+                0
+            } else {
+                s_str[d - offset]
+            }
+        })
+        .collect()
+}
+
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x + y)
+}
+
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x - y)
+}
+
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x * y)
+}
+
+pub fn div(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x / y)
+}
+
+pub fn maximum(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, f32::max)
+}
+
+// ---------------------------------------------------------------------------
+// matmul
+// ---------------------------------------------------------------------------
+
+/// [m,k] @ [k,n] -> [m,n], ikj order with a zeroed accumulator row.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2, "matmul lhs rank {}", a.rank());
+    assert_eq!(b.rank(), 2, "matmul rhs rank {}", b.rank());
+    let (m, k) = (a.shape.dim(0), a.shape.dim(1));
+    let (k2, n) = (b.shape.dim(0), b.shape.dim(1));
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor::new(Shape::of(&[m, n]), out)
+}
+
+/// Transpose a 2-D tensor.
+pub fn transpose2(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    let (m, n) = (x.shape.dim(0), x.shape.dim(1));
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = x.data[i * n + j];
+        }
+    }
+    Tensor::new(Shape::of(&[n, m]), out)
+}
+
+// ---------------------------------------------------------------------------
+// reductions
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reduce {
+    Sum,
+    Max,
+    Mean,
+    LogSumExp,
+}
+
+/// Reduce along `axis`, keeping the dim as size 1 (keepdims=true).
+pub fn reduce(x: &Tensor, axis: usize, kind: Reduce) -> Tensor {
+    assert!(axis < x.rank(), "axis {axis} rank {}", x.rank());
+    let dims = x.shape.dims();
+    let outer: usize = dims[..axis].iter().product();
+    let rdim = dims[axis];
+    let inner: usize = dims[axis + 1..].iter().product();
+    let mut out_shape = dims.to_vec();
+    out_shape[axis] = 1;
+    let mut out = vec![0.0f32; outer * inner];
+    for o in 0..outer {
+        for i in 0..inner {
+            let base = o * rdim * inner + i;
+            let vals = (0..rdim).map(|r| x.data[base + r * inner]);
+            out[o * inner + i] = match kind {
+                Reduce::Sum => vals.sum(),
+                Reduce::Max => vals.fold(f32::NEG_INFINITY, f32::max),
+                Reduce::Mean => vals.sum::<f32>() / rdim as f32,
+                Reduce::LogSumExp => {
+                    let m = (0..rdim)
+                        .map(|r| x.data[base + r * inner])
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    let s: f32 = (0..rdim).map(|r| (x.data[base + r * inner] - m).exp()).sum();
+                    m + s.ln()
+                }
+            };
+        }
+    }
+    Tensor::new(Shape(out_shape), out)
+}
+
+/// Softmax along the last axis.
+pub fn softmax(x: &Tensor) -> Tensor {
+    let axis = x.rank() - 1;
+    let m = reduce(x, axis, Reduce::Max);
+    let e = exp(&sub(x, &m));
+    let s = reduce(&e, axis, Reduce::Sum);
+    div(&e, &s)
+}
+
+/// LayerNorm along the last axis with per-feature gamma/beta.
+pub fn layernorm(x: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Tensor {
+    let axis = x.rank() - 1;
+    let mu = reduce(x, axis, Reduce::Mean);
+    let centered = sub(x, &mu);
+    let var = reduce(&square(&centered), axis, Reduce::Mean);
+    let inv = map(&add_scalar(&var, eps), |v| 1.0 / v.sqrt());
+    add(&mul(&mul(&centered, &inv), gamma), beta)
+}
+
+// ---------------------------------------------------------------------------
+// convolution / pooling (NCHW)
+// ---------------------------------------------------------------------------
+
+/// NCHW ⊛ OIHW conv2d.
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, padding: usize) -> Tensor {
+    assert_eq!(x.rank(), 4, "conv2d input rank");
+    assert_eq!(w.rank(), 4, "conv2d weight rank");
+    let (n, c, h, wd) = dims4(x);
+    let (o, ci, kh, kw) = dims4(w);
+    assert_eq!(c, ci, "conv2d channels {c} vs {ci}");
+    let oh = (h + 2 * padding - kh) / stride + 1;
+    let ow = (wd + 2 * padding - kw) / stride + 1;
+    let mut out = vec![0.0f32; n * o * oh * ow];
+    for b in 0..n {
+        for oc in 0..o {
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ic in 0..c {
+                        for ky in 0..kh {
+                            let iy = (y * stride + ky) as isize - padding as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = (xx * stride + kx) as isize - padding as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                let xi = ((b * c + ic) * h + iy as usize) * wd + ix as usize;
+                                let wi = ((oc * c + ic) * kh + ky) * kw + kx;
+                                acc += x.data[xi] * w.data[wi];
+                            }
+                        }
+                    }
+                    out[((b * o + oc) * oh + y) * ow + xx] = acc;
+                }
+            }
+        }
+    }
+    Tensor::new(Shape::of(&[n, o, oh, ow]), out)
+}
+
+/// Depthwise conv2d (one filter per channel), weights [C,1,KH,KW].
+pub fn depthwise_conv2d(x: &Tensor, w: &Tensor, stride: usize, padding: usize) -> Tensor {
+    let (n, c, h, wd) = dims4(x);
+    let (cw, one, kh, kw) = dims4(w);
+    assert_eq!(c, cw);
+    assert_eq!(one, 1, "depthwise weight dim1 must be 1");
+    let oh = (h + 2 * padding - kh) / stride + 1;
+    let ow = (wd + 2 * padding - kw) / stride + 1;
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    for b in 0..n {
+        for ch in 0..c {
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ky in 0..kh {
+                        let iy = (y * stride + ky) as isize - padding as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (xx * stride + kx) as isize - padding as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            let xi = ((b * c + ch) * h + iy as usize) * wd + ix as usize;
+                            let wi = (ch * kh + ky) * kw + kx;
+                            acc += x.data[xi] * w.data[wi];
+                        }
+                    }
+                    out[((b * c + ch) * oh + y) * ow + xx] = acc;
+                }
+            }
+        }
+    }
+    Tensor::new(Shape::of(&[n, c, oh, ow]), out)
+}
+
+/// 2-D max pooling.
+pub fn maxpool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    pool2d(x, k, stride, true)
+}
+
+/// 2-D average pooling.
+pub fn avgpool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    pool2d(x, k, stride, false)
+}
+
+fn pool2d(x: &Tensor, k: usize, stride: usize, is_max: bool) -> Tensor {
+    let (n, c, h, w) = dims4(x);
+    assert!(k <= h && k <= w, "pool window {k} exceeds input {h}x{w}");
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    for b in 0..n {
+        for ch in 0..c {
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut acc = if is_max { f32::NEG_INFINITY } else { 0.0 };
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let v = x.data[((b * c + ch) * h + y * stride + ky) * w + xx * stride + kx];
+                            if is_max {
+                                acc = acc.max(v);
+                            } else {
+                                acc += v;
+                            }
+                        }
+                    }
+                    out[((b * c + ch) * oh + y) * ow + xx] =
+                        if is_max { acc } else { acc / (k * k) as f32 };
+                }
+            }
+        }
+    }
+    Tensor::new(Shape::of(&[n, c, oh, ow]), out)
+}
+
+/// Concatenate along `axis`.
+pub fn concat(xs: &[&Tensor], axis: usize) -> Tensor {
+    assert!(!xs.is_empty());
+    let r = xs[0].rank();
+    assert!(axis < r);
+    let mut out_dims = xs[0].shape.dims().to_vec();
+    out_dims[axis] = xs.iter().map(|t| t.shape.dim(axis)).sum();
+    for t in xs {
+        for d in 0..r {
+            if d != axis {
+                assert_eq!(t.shape.dim(d), xs[0].shape.dim(d), "concat dim {d}");
+            }
+        }
+    }
+    let outer: usize = out_dims[..axis].iter().product();
+    let inner: usize = out_dims[axis + 1..].iter().product();
+    let mut out = Vec::with_capacity(out_dims.iter().product());
+    for o in 0..outer {
+        for t in xs {
+            let ad = t.shape.dim(axis);
+            let start = o * ad * inner;
+            out.extend_from_slice(&t.data[start..start + ad * inner]);
+        }
+    }
+    Tensor::new(Shape(out_dims), out)
+}
+
+/// Global average pool over H,W: [N,C,H,W] -> [N,C,1,1].
+pub fn global_avgpool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = dims4(x);
+    let mut out = vec![0.0f32; n * c];
+    for b in 0..n {
+        for ch in 0..c {
+            let base = (b * c + ch) * h * w;
+            out[b * c + ch] = x.data[base..base + h * w].iter().sum::<f32>() / (h * w) as f32;
+        }
+    }
+    Tensor::new(Shape::of(&[n, c, 1, 1]), out)
+}
+
+fn dims4(x: &Tensor) -> (usize, usize, usize, usize) {
+    assert_eq!(x.rank(), 4);
+    (
+        x.shape.dim(0),
+        x.shape.dim(1),
+        x.shape.dim(2),
+        x.shape.dim(3),
+    )
+}
+
+/// Single-head attention: q,k,v [s,d].
+pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let d = q.shape.dim(1) as f32;
+    let logits = scale(&matmul(q, &transpose2(k)), 1.0 / d.sqrt());
+    matmul(&softmax(&logits), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randt(dims: &[usize], seed: u64) -> Tensor {
+        let mut r = Pcg::seed(seed);
+        Tensor::randn(Shape::of(dims), &mut r, 1.0)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let x = randt(&[3, 3], 1);
+        let mut eye = Tensor::zeros(Shape::of(&[3, 3]));
+        for i in 0..3 {
+            eye.data[i * 3 + i] = 1.0;
+        }
+        assert!(matmul(&x, &eye).allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(Shape::of(&[2, 2]), vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::full(Shape::of(&[2, 2]), 1.0);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_associates_with_transpose() {
+        let a = randt(&[4, 6], 2);
+        let b = randt(&[6, 5], 3);
+        let c = matmul(&a, &b);
+        let ct = matmul(&transpose2(&b), &transpose2(&a));
+        assert!(transpose2(&c).allclose(&ct, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn broadcast_add_bias() {
+        let x = randt(&[4, 3], 4);
+        let b = Tensor::new(Shape::of(&[3]), vec![1.0, 2.0, 3.0]);
+        let y = add(&x, &b);
+        for i in 0..4 {
+            for j in 0..3 {
+                assert!((y.at(&[i, j]) - x.at(&[i, j]) - b.data[j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = randt(&[5, 7], 5);
+        let s = softmax(&x);
+        let sums = reduce(&s, 1, Reduce::Sum);
+        assert!(sums.allclose(&Tensor::full(Shape::of(&[5, 1]), 1.0), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn softmax_stable_at_extremes() {
+        let x = Tensor::new(Shape::of(&[1, 3]), vec![1e4, 0.0, -1e4]);
+        let s = softmax(&x);
+        assert!(s.data.iter().all(|v| v.is_finite()));
+        assert!((s.data[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reduce_kinds() {
+        let x = Tensor::new(Shape::of(&[2, 3]), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(reduce(&x, 1, Reduce::Sum).data, vec![6.0, 15.0]);
+        assert_eq!(reduce(&x, 1, Reduce::Max).data, vec![3.0, 6.0]);
+        assert_eq!(reduce(&x, 1, Reduce::Mean).data, vec![2.0, 5.0]);
+        assert_eq!(reduce(&x, 0, Reduce::Sum).data, vec![5.0, 7.0, 9.0]);
+        let lse = reduce(&x, 1, Reduce::LogSumExp);
+        let want = (1f32.exp() + 2f32.exp() + 3f32.exp()).ln();
+        assert!((lse.data[0] - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = randt(&[6, 32], 6);
+        let g = Tensor::full(Shape::of(&[32]), 1.0);
+        let b = Tensor::zeros(Shape::of(&[32]));
+        let y = layernorm(&x, &g, &b, 1e-5);
+        let mu = reduce(&y, 1, Reduce::Mean);
+        assert!(mu.allclose(&Tensor::zeros(Shape::of(&[6, 1])), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        let x = randt(&[1, 1, 5, 5], 7);
+        let w = Tensor::new(Shape::of(&[1, 1, 1, 1]), vec![1.0]);
+        assert!(conv2d(&x, &w, 1, 0).allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn conv2d_shapes_with_stride_padding() {
+        let x = randt(&[2, 3, 9, 9], 8);
+        let w = randt(&[4, 3, 3, 3], 9);
+        let y = conv2d(&x, &w, 2, 1);
+        assert_eq!(y.shape, Shape::of(&[2, 4, 5, 5]));
+    }
+
+    #[test]
+    fn conv2d_sum_kernel_equals_window_sum() {
+        let x = Tensor::full(Shape::of(&[1, 1, 4, 4]), 1.0);
+        let w = Tensor::full(Shape::of(&[1, 1, 2, 2]), 1.0);
+        let y = conv2d(&x, &w, 1, 0);
+        assert!(y.allclose(&Tensor::full(Shape::of(&[1, 1, 3, 3]), 4.0), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn depthwise_matches_grouped_full_conv() {
+        let x = randt(&[1, 2, 5, 5], 10);
+        let w = randt(&[2, 1, 3, 3], 11);
+        let y = depthwise_conv2d(&x, &w, 1, 1);
+        assert_eq!(y.shape, Shape::of(&[1, 2, 5, 5]));
+        // channel 0 of output must equal conv of channel 0 alone
+        let x0 = Tensor::new(Shape::of(&[1, 1, 5, 5]), x.data[..25].to_vec());
+        let w0 = Tensor::new(Shape::of(&[1, 1, 3, 3]), w.data[..9].to_vec());
+        let y0 = conv2d(&x0, &w0, 1, 1);
+        assert!((0..25).all(|i| (y.data[i] - y0.data[i]).abs() < 1e-5));
+    }
+
+    #[test]
+    fn pooling() {
+        let x = Tensor::new(
+            Shape::of(&[1, 1, 2, 2]),
+            vec![1.0, 2.0, 3.0, 4.0],
+        );
+        assert_eq!(maxpool2d(&x, 2, 1).data, vec![4.0]);
+        assert_eq!(avgpool2d(&x, 2, 1).data, vec![2.5]);
+    }
+
+    #[test]
+    fn concat_axis1() {
+        let a = Tensor::new(Shape::of(&[2, 1]), vec![1.0, 2.0]);
+        let b = Tensor::new(Shape::of(&[2, 2]), vec![3.0, 4.0, 5.0, 6.0]);
+        let c = concat(&[&a, &b], 1);
+        assert_eq!(c.shape, Shape::of(&[2, 3]));
+        assert_eq!(c.data, vec![1.0, 3.0, 4.0, 2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn global_avgpool_matches_mean() {
+        let x = randt(&[2, 3, 4, 4], 12);
+        let y = global_avgpool(&x);
+        let want = x.data[..16].iter().sum::<f32>() / 16.0;
+        assert!((y.data[0] - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn attention_uniform_when_keys_identical() {
+        // identical keys -> uniform weights -> output = mean of V rows
+        let q = randt(&[2, 4], 13);
+        let k = Tensor::full(Shape::of(&[3, 4]), 0.5);
+        let v = Tensor::new(
+            Shape::of(&[3, 2]),
+            vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0],
+        );
+        let out = attention(&q, &k, &v);
+        assert!((out.at(&[0, 0]) - 2.0).abs() < 1e-5);
+        assert!((out.at(&[1, 1]) - 20.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn swish_matches_definition() {
+        let x = randt(&[64], 14);
+        let y = swish(&x);
+        for (a, b) in x.data.iter().zip(&y.data) {
+            assert!((b - a / (1.0 + (-a).exp())).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Tensor shapes: dimension lists with helpers for strides, broadcasting
+//! and element counts.
+
+use std::fmt;
+
+/// A dense row-major shape.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn scalar() -> Shape {
+        Shape(vec![])
+    }
+
+    pub fn of(dims: &[usize]) -> Shape {
+        Shape(dims.to_vec())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.0[i + 1];
+        }
+        s
+    }
+
+    /// Numpy-style broadcast of two shapes.
+    pub fn broadcast(&self, other: &Shape) -> Option<Shape> {
+        let r = self.rank().max(other.rank());
+        let mut out = vec![0usize; r];
+        for i in 0..r {
+            let a = if i < r - self.rank() { 1 } else { self.0[i - (r - self.rank())] };
+            let b = if i < r - other.rank() { 1 } else { other.0[i - (r - other.rank())] };
+            out[i] = match (a, b) {
+                (x, y) if x == y => x,
+                (1, y) => y,
+                (x, 1) => x,
+                _ => return None,
+            };
+        }
+        Some(Shape(out))
+    }
+
+    /// Bytes at f32.
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}]",
+            self.0.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        )
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Shape {
+        Shape(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_strides() {
+        let s = Shape::of(&[2, 3, 4]);
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::scalar().numel(), 1);
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        let a = Shape::of(&[4, 1, 3]);
+        let b = Shape::of(&[2, 3]);
+        assert_eq!(a.broadcast(&b), Some(Shape::of(&[4, 2, 3])));
+        assert_eq!(Shape::of(&[3]).broadcast(&Shape::of(&[4])), None);
+        assert_eq!(Shape::scalar().broadcast(&a), Some(a.clone()));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::of(&[2, 3]).to_string(), "[2, 3]");
+    }
+}

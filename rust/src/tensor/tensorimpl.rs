@@ -1,0 +1,155 @@
+//! Dense row-major f32 tensor.
+
+use super::shape::Shape;
+use crate::util::rng::Pcg;
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Shape, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.numel(), data.len(), "shape {shape} != data len {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Shape) -> Tensor {
+        let n = shape.numel();
+        Tensor::new(shape, vec![0.0; n])
+    }
+
+    pub fn full(shape: Shape, v: f32) -> Tensor {
+        let n = shape.numel();
+        Tensor::new(shape, vec![v; n])
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::new(Shape::scalar(), vec![v])
+    }
+
+    /// Standard-normal random tensor from a seeded stream.
+    pub fn randn(shape: Shape, rng: &mut Pcg, scale: f32) -> Tensor {
+        let mut data = vec![0.0f32; shape.numel()];
+        rng.fill_normal_f32(&mut data, scale);
+        Tensor::new(shape, data)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    /// Reshape without moving data.
+    pub fn reshape(&self, shape: Shape) -> Tensor {
+        assert_eq!(shape.numel(), self.numel(), "reshape {} -> {shape}", self.shape);
+        Tensor {
+            shape,
+            data: self.data.clone(),
+        }
+    }
+
+    /// Value at a multi-index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        let strides = self.shape.strides();
+        let off: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[off]
+    }
+
+    /// Max |a-b| between two tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// allclose with rtol/atol semantics (numpy style).
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs() && a.is_finite() == b.is_finite())
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, f32> {
+        self.data.iter()
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let preview: Vec<String> = self.data.iter().take(6).map(|v| format!("{v:.4}")).collect();
+        write!(
+            f,
+            "Tensor{}[{}{}]",
+            self.shape,
+            preview.join(", "),
+            if self.numel() > 6 { ", …" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_at() {
+        let t = Tensor::new(Shape::of(&[2, 3]), (0..6).map(|i| i as f32).collect());
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.at(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(Shape::of(&[2, 2]), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn allclose_tolerates_small_noise() {
+        let a = Tensor::full(Shape::of(&[4]), 1.0);
+        let mut b = a.clone();
+        b.data[0] = 1.0 + 1e-6;
+        assert!(a.allclose(&b, 1e-4, 1e-5));
+        b.data[0] = 1.1;
+        assert!(!a.allclose(&b, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn allclose_rejects_nan() {
+        let a = Tensor::full(Shape::of(&[2]), 1.0);
+        let mut b = a.clone();
+        b.data[1] = f32::NAN;
+        assert!(!a.allclose(&b, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Pcg::seed(5);
+        let mut r2 = Pcg::seed(5);
+        let a = Tensor::randn(Shape::of(&[16]), &mut r1, 1.0);
+        let b = Tensor::randn(Shape::of(&[16]), &mut r2, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(Shape::of(&[2, 3]), (0..6).map(|i| i as f32).collect());
+        let r = t.reshape(Shape::of(&[3, 2]));
+        assert_eq!(r.data, t.data);
+        assert_eq!(r.shape, Shape::of(&[3, 2]));
+    }
+}

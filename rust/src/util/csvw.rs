@@ -1,0 +1,178 @@
+//! CSV writer (RFC-4180 quoting) — used by the nsys-like profiler and
+//! the benchmark harness to emit the same row-oriented reports the
+//! paper's `nsys stats` pipeline produced.
+
+/// In-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the arity mismatches the header.
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Render the document.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&render_row(&self.header));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&render_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a CSV document (used in render→parse round-trip tests and
+    /// by the analysis agent when reading nsys-like reports).
+    pub fn parse(text: &str) -> anyhow::Result<Csv> {
+        let mut lines = split_records(text);
+        if lines.is_empty() {
+            anyhow::bail!("empty csv");
+        }
+        let header = lines.remove(0);
+        let width = header.len();
+        for (i, row) in lines.iter().enumerate() {
+            if row.len() != width {
+                anyhow::bail!("row {} arity {} != header {}", i, row.len(), width);
+            }
+        }
+        Ok(Csv {
+            header,
+            rows: lines,
+        })
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Typed f64 accessor.
+    pub fn f64_at(&self, row: usize, name: &str) -> Option<f64> {
+        let c = self.col(name)?;
+        self.rows.get(row)?.get(c)?.parse().ok()
+    }
+}
+
+fn needs_quote(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n')
+}
+
+fn render_row(fields: &[String]) -> String {
+    fields
+        .iter()
+        .map(|f| {
+            if needs_quote(f) {
+                format!("\"{}\"", f.replace('"', "\"\""))
+            } else {
+                f.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Split text into records honouring quoted fields (newlines inside quotes).
+fn split_records(text: &str) -> Vec<Vec<String>> {
+    let mut records = Vec::new();
+    let mut row = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' if chars.peek() == Some(&'"') => {
+                    field.push('"');
+                    chars.next();
+                }
+                '"' => in_quotes = false,
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    if !(row.len() == 1 && row[0].is_empty()) {
+                        records.push(std::mem::take(&mut row));
+                    } else {
+                        row.clear();
+                    }
+                }
+                '\r' => {}
+                c => field.push(c),
+            }
+        }
+    }
+    if !field.is_empty() || !row.is_empty() {
+        row.push(field);
+        records.push(row);
+    }
+    records
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.push(vec!["1".into(), "2".into()]);
+        c.push(vec!["x,y".into(), "q\"uote".into()]);
+        let parsed = Csv::parse(&c.to_string()).unwrap();
+        assert_eq!(parsed.header, c.header);
+        assert_eq!(parsed.rows, c.rows);
+    }
+
+    #[test]
+    fn multiline_field() {
+        let mut c = Csv::new(&["k"]);
+        c.push(vec!["line1\nline2".into()]);
+        let parsed = Csv::parse(&c.to_string()).unwrap();
+        assert_eq!(parsed.rows[0][0], "line1\nline2");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_enforced() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.push(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn typed_access() {
+        let mut c = Csv::new(&["name", "time_us"]);
+        c.push(vec!["k0".into(), "12.5".into()]);
+        assert_eq!(c.f64_at(0, "time_us"), Some(12.5));
+        assert_eq!(c.f64_at(0, "missing"), None);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(Csv::parse("a,b\n1\n").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Utility substrate: everything the offline build denies us from
+//! crates.io — seeded PRNG, JSON reader/writer, CSV writer, summary
+//! statistics, wall-clock timing helpers.
+
+pub mod rng;
+pub mod json;
+pub mod csvw;
+pub mod stats;
+pub mod timing;

@@ -1,0 +1,110 @@
+//! Summary statistics over measurement vectors — the paper averages 100
+//! timed runs with 10 warmup steps (§4.1); this module provides the
+//! mean/median/percentile machinery the harness uses for that protocol.
+
+/// Summary of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Compute a summary; panics on an empty slice.
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize(empty)");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        p50: percentile_sorted(&sorted, 50.0),
+        p90: percentile_sorted(&sorted, 90.0),
+        p99: percentile_sorted(&sorted, 99.0),
+        max: sorted[n - 1],
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Geometric mean (speedup aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// The paper's measurement protocol: drop `warmup` leading samples, then
+/// report the mean of the rest (100 runs / 10 warmup in §4.1).
+pub fn timed_mean(samples: &[f64], warmup: usize) -> f64 {
+    let body = &samples[warmup.min(samples.len().saturating_sub(1))..];
+    body.iter().sum::<f64>() / body.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 3.0);
+        assert_eq!(percentile_sorted(&xs, 50.0), 2.0);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_mean_drops_warmup() {
+        // warmup samples are slow (compilation), body is fast
+        let samples = [100.0, 100.0, 1.0, 1.0, 1.0];
+        assert!((timed_mean(&samples, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_mean_never_empty() {
+        assert_eq!(timed_mean(&[5.0], 10), 5.0);
+    }
+
+    #[test]
+    fn std_zero_for_constant() {
+        assert_eq!(summarize(&[3.0; 10]).std, 0.0);
+    }
+}

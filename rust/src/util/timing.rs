@@ -1,0 +1,91 @@
+//! Wall-clock timing helpers for the real-execution paths (PJRT runs,
+//! coordinator hot loops) and the harness's before/after perf records.
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` `warmup` times unrecorded, then `runs` times recorded,
+/// returning per-run seconds — the paper's 100-run/10-warmup protocol.
+pub fn bench_loop<T>(warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        let _ = f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        let _ = f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples
+}
+
+/// Simple hierarchical stopwatch for coarse phase profiling.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    phases: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a named phase.
+    pub fn phase<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = time_it(f);
+        self.phases.push((name.to_string(), secs));
+        out
+    }
+
+    pub fn report(&self) -> String {
+        let total: f64 = self.phases.iter().map(|(_, s)| s).sum();
+        let mut out = String::new();
+        for (name, secs) in &self.phases {
+            out.push_str(&format!(
+                "{name:<30} {secs:>9.4}s  {:>5.1}%\n",
+                100.0 * secs / total.max(1e-12)
+            ));
+        }
+        out.push_str(&format!("{:<30} {total:>9.4}s\n", "TOTAL"));
+        out
+    }
+
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_loop_counts() {
+        let mut calls = 0;
+        let samples = bench_loop(3, 5, || calls += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(calls, 8);
+    }
+
+    #[test]
+    fn stopwatch_report_contains_phases() {
+        let mut sw = Stopwatch::new();
+        sw.phase("alpha", || ());
+        sw.phase("beta", || ());
+        let rep = sw.report();
+        assert!(rep.contains("alpha") && rep.contains("beta") && rep.contains("TOTAL"));
+    }
+}

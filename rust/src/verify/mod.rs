@@ -1,0 +1,13 @@
+//! Program verification — the paper's §3.3 closed feedback loop.
+//!
+//! Five execution states: generation failure, compilation failure,
+//! runtime error, numerical/shape mismatch, correct.  Every candidate
+//! flows through: validate (compile) → schedule legality (dispatch) →
+//! interpret + compare vs the reference graph (numerics) — all stages
+//! run for real on the synthesized artifact.
+
+pub mod state;
+pub mod pipeline;
+
+pub use pipeline::{verify, VerifyOutput};
+pub use state::ExecState;

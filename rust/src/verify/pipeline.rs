@@ -1,0 +1,298 @@
+//! The verification pipeline: compile → dispatch → numerics.
+//!
+//! Mirrors the paper's flow: after every generation-evaluation
+//! iteration the detailed result is logged and the error channel (if
+//! any) feeds the next refinement prompt.  For *correct* programs the
+//! pipeline also prices the plan on the simulated device, yielding the
+//! measured time that `fast_p` compares against the baseline.
+
+use crate::agents::Program;
+use crate::kir::interp;
+use crate::kir::validate;
+use crate::perfsim::{lower, simulate, SimResult};
+use crate::platform::PlatformSpec;
+use crate::sched::legal;
+use crate::util::rng::Pcg;
+use crate::workloads::Problem;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::state::ExecState;
+
+/// Reference outputs are pure functions of (problem, seed); campaigns
+/// verify many candidates per problem, so cache them (perf pass §Perf:
+/// this halves the interpreter work per verification and amortizes
+/// ~40x across personas × iterations).
+type IoPair = (Arc<Vec<crate::tensor::Tensor>>, Arc<Vec<crate::tensor::Tensor>>);
+static REF_CACHE: Lazy<Mutex<HashMap<(String, u64), IoPair>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// (inputs, reference outputs) for a (problem, seed): both are pure and
+/// re-requested per candidate, so cached together.
+fn reference_io(problem: &Problem, seed: u64) -> IoPair {
+    let key = (problem.id.clone(), seed);
+    if let Some(hit) = REF_CACHE.lock().unwrap().get(&key) {
+        return hit.clone();
+    }
+    let inputs = problem.eval_inputs(seed);
+    let out = interp::eval(&problem.eval_graph, &inputs)
+        .unwrap_or_else(|e| panic!("reference graph for {} failed: {e}", problem.id));
+    let pair = (Arc::new(inputs), Arc::new(out));
+    REF_CACHE.lock().unwrap().insert(key, pair.clone());
+    pair
+}
+
+/// Candidate-independent CSE'd perf graph per problem (§Perf round 2).
+static PERF_CSE_CACHE: Lazy<Mutex<HashMap<String, Arc<crate::kir::Graph>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+fn cse_perf_graph(problem: &Problem) -> Arc<crate::kir::Graph> {
+    if let Some(hit) = PERF_CSE_CACHE.lock().unwrap().get(&problem.id) {
+        return hit.clone();
+    }
+    let g = Arc::new(crate::kir::rewrite::cse::eliminate(&problem.perf_graph));
+    PERF_CSE_CACHE
+        .lock()
+        .unwrap()
+        .insert(problem.id.clone(), g.clone());
+    g
+}
+
+/// Numeric tolerances for the correctness check (KernelBench uses
+/// atol/rtol 1e-2 on fp32; we are slightly stricter since the
+/// interpreter is deterministic, but fast-math still passes).
+pub const RTOL: f32 = 1e-2;
+pub const ATOL: f32 = 1e-3;
+
+/// Verification result: state + (for correct programs) the simulation.
+#[derive(Debug, Clone)]
+pub struct VerifyOutput {
+    pub state: ExecState,
+    /// Present iff state == Correct.
+    pub sim: Option<SimResult>,
+}
+
+/// Verify a candidate (or a generation failure if `prog` is None).
+pub fn verify(
+    spec: &PlatformSpec,
+    problem: &Problem,
+    prog: Option<&Program>,
+    rng: &mut Pcg,
+) -> VerifyOutput {
+    let Some(prog) = prog else {
+        return VerifyOutput {
+            state: ExecState::GenerationFailure,
+            sim: None,
+        };
+    };
+
+    // 1. compile: structural/type validation of the synthesized graph
+    if let Err(e) = validate::validate(&prog.graph) {
+        return VerifyOutput {
+            state: ExecState::CompilationFailure(e.to_string()),
+            sim: None,
+        };
+    }
+
+    // 2. dispatch: schedule legality on this device
+    if let Err(e) = legal::check(&prog.schedule, spec) {
+        return VerifyOutput {
+            state: ExecState::RuntimeError(e.to_string()),
+            sim: None,
+        };
+    }
+
+    // 3. numerics: evaluate candidate vs reference on seeded inputs
+    let (inputs, want) = reference_io(problem, 0xC0FFEE);
+    let got = match interp::eval(&prog.graph, &inputs) {
+        Ok(g) => g,
+        Err(e) => {
+            return VerifyOutput {
+                state: ExecState::RuntimeError(format!("runtime error: {e}")),
+                sim: None,
+            };
+        }
+    };
+    if got.len() != want.len() {
+        return VerifyOutput {
+            state: ExecState::Mismatch(format!(
+                "output arity mismatch: got {}, expected {}",
+                got.len(),
+                want.len()
+            )),
+            sim: None,
+        };
+    }
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        if g.shape != w.shape {
+            return VerifyOutput {
+                state: ExecState::Mismatch(format!(
+                    "output {i} shape mismatch: got {}, expected {}",
+                    g.shape, w.shape
+                )),
+                sim: None,
+            };
+        }
+        if !g.allclose(w, RTOL, ATOL) {
+            return VerifyOutput {
+                state: ExecState::Mismatch(format!(
+                    "output {i} numerical mismatch: max |diff| = {:.6}",
+                    g.max_abs_diff(w)
+                )),
+                sim: None,
+            };
+        }
+    }
+
+    // 4. price the correct program on the simulated device.  The
+    // schedule was tuned against the perf-scale graph; rewrites the
+    // candidate found on the eval graph apply equally at perf scale
+    // (same structure), so we re-apply them for pricing.
+    let perf_graph = reapply_rewrites(problem, prog);
+    let plan = lower::lower(&perf_graph, &prog.schedule);
+    let sim = simulate(spec, &plan, rng, crate::baseline::RUNS, crate::baseline::WARMUP);
+    VerifyOutput {
+        state: ExecState::Correct,
+        sim: Some(sim),
+    }
+}
+
+/// Re-derive the candidate's graph rewrites on the perf-scale graph:
+/// if the candidate's eval graph shrank (constant fold / algebraic
+/// reduction), apply the same passes to the perf graph.
+fn reapply_rewrites(problem: &Problem, prog: &Program) -> crate::kir::Graph {
+    use crate::kir::rewrite::{algebraic, constant_fold, cse};
+    // "did the candidate discover the rewrite?" — compare the work its
+    // eval graph does against the rewritten eval graph's (FLOPs for the
+    // algebraic reduction, node count for the constant collapse).
+    let candidate_flops = prog.graph.total_flops();
+    let mut g = (*cse_perf_graph(problem)).clone();
+    if problem.constant_output {
+        let folded_eval = constant_fold::fold(&problem.eval_graph);
+        if prog.graph.len() <= folded_eval.len() {
+            g = constant_fold::fold(&g);
+        }
+    }
+    if problem.reducible {
+        let reduced_eval = algebraic::reduce_matmul_chains(&cse::eliminate(&problem.eval_graph));
+        if candidate_flops <= reduced_eval.total_flops() * 1.01 {
+            g = algebraic::reduce_matmul_chains(&g);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::generation::tests_support::trivial_program;
+    use crate::platform::cuda;
+    use crate::sched::Schedule;
+    use crate::workloads::Suite;
+
+    fn spec() -> PlatformSpec {
+        cuda::h100()
+    }
+
+    #[test]
+    fn generation_failure_state() {
+        let suite = Suite::sample(1);
+        let mut rng = Pcg::seed(0);
+        let out = verify(&spec(), &suite.problems[0], None, &mut rng);
+        assert_eq!(out.state.label(), "generation_failure");
+        assert!(out.sim.is_none());
+    }
+
+    #[test]
+    fn correct_program_gets_simulated() {
+        let suite = Suite::sample(1);
+        let p = &suite.problems[0];
+        let prog = trivial_program(p);
+        let mut rng = Pcg::seed(0);
+        let out = verify(&spec(), p, Some(&prog), &mut rng);
+        assert!(out.state.is_correct(), "{:?}", out.state);
+        assert!(out.sim.unwrap().measured_s > 0.0);
+    }
+
+    #[test]
+    fn compilation_failure_detected() {
+        let suite = Suite::sample(1);
+        let p = &suite.problems[0];
+        let mut prog = trivial_program(p);
+        prog.graph.outputs = vec![999];
+        let mut rng = Pcg::seed(0);
+        let out = verify(&spec(), p, Some(&prog), &mut rng);
+        assert_eq!(out.state.label(), "compilation_failure");
+        assert!(out.state.error_text().unwrap().contains("error"));
+    }
+
+    #[test]
+    fn runtime_error_detected() {
+        let suite = Suite::sample(1);
+        let p = &suite.problems[0];
+        let mut prog = trivial_program(p);
+        prog.schedule = Schedule {
+            threadgroup: 4096,
+            ..Schedule::naive()
+        };
+        let mut rng = Pcg::seed(0);
+        let out = verify(&spec(), p, Some(&prog), &mut rng);
+        assert_eq!(out.state.label(), "runtime_error");
+    }
+
+    #[test]
+    fn mismatch_detected() {
+        use crate::kir::op::{Op, UnaryKind};
+        let suite = Suite::full();
+        let p = suite.get("l1_act_swish_0").unwrap();
+        let mut prog = trivial_program(p);
+        // swap sigmoid for tanh: wrong numerics, same shapes
+        for node in prog.graph.nodes.iter_mut() {
+            if let Op::Unary { kind, input } = node.op {
+                if kind == UnaryKind::Sigmoid {
+                    node.op = Op::Unary { kind: UnaryKind::Tanh, input };
+                }
+            }
+        }
+        let mut rng = Pcg::seed(0);
+        let out = verify(&spec(), p, Some(&prog), &mut rng);
+        assert_eq!(out.state.label(), "mismatch", "{:?}", out.state);
+    }
+
+    #[test]
+    fn reduced_graph_still_verifies_correct_and_prices_cheaper() {
+        use crate::kir::rewrite::{algebraic, cse};
+        let suite = Suite::full();
+        let p = suite.get("l2_012_reduction_chain").unwrap();
+        let naive = trivial_program(p);
+        let mut reduced = naive.clone();
+        reduced.graph = algebraic::reduce_matmul_chains(&cse::eliminate(&p.eval_graph));
+        let mut rng = Pcg::seed(0);
+        let out_naive = verify(&spec(), p, Some(&naive), &mut rng);
+        let out_reduced = verify(&spec(), p, Some(&reduced), &mut rng);
+        assert!(out_naive.state.is_correct());
+        assert!(out_reduced.state.is_correct(), "{:?}", out_reduced.state);
+        assert!(
+            out_reduced.sim.unwrap().ideal_s < out_naive.sim.unwrap().ideal_s,
+            "reduction should price cheaper"
+        );
+    }
+
+    #[test]
+    fn constant_folded_graph_verifies_and_prices_near_zero() {
+        use crate::kir::rewrite::constant_fold;
+        let suite = Suite::full();
+        let p = suite.get("l2_080_gemm_max_sub_gelu").unwrap();
+        let naive = trivial_program(p);
+        let mut folded = naive.clone();
+        folded.graph = constant_fold::fold(&p.eval_graph);
+        let mut rng = Pcg::seed(0);
+        let out_naive = verify(&spec(), p, Some(&naive), &mut rng);
+        let out_folded = verify(&spec(), p, Some(&folded), &mut rng);
+        assert!(out_naive.state.is_correct());
+        assert!(out_folded.state.is_correct(), "{:?}", out_folded.state);
+        let speedup = out_naive.sim.unwrap().ideal_s / out_folded.sim.unwrap().ideal_s;
+        assert!(speedup > 5.0, "constant output should be much faster, got {speedup}");
+    }
+}

@@ -1,0 +1,59 @@
+//! The five execution states (§3.3).
+
+/// Outcome of one generation-evaluation iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecState {
+    /// Network error / model output contains no code.
+    GenerationFailure,
+    /// Generated code fails to compile (KIR validation error).
+    CompilationFailure(String),
+    /// Compiles but aborts at dispatch (schedule illegal on device).
+    RuntimeError(String),
+    /// Runs but output shape/values mismatch the reference.
+    Mismatch(String),
+    /// Shapes and values match.
+    Correct,
+}
+
+impl ExecState {
+    pub fn is_correct(&self) -> bool {
+        matches!(self, ExecState::Correct)
+    }
+
+    /// The error text fed back into the next refinement prompt.
+    pub fn error_text(&self) -> Option<&str> {
+        match self {
+            ExecState::GenerationFailure => Some("generation failure: model output contained no code"),
+            ExecState::CompilationFailure(e) | ExecState::RuntimeError(e) | ExecState::Mismatch(e) => {
+                Some(e)
+            }
+            ExecState::Correct => None,
+        }
+    }
+
+    /// Short label for logs / state statistics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecState::GenerationFailure => "generation_failure",
+            ExecState::CompilationFailure(_) => "compilation_failure",
+            ExecState::RuntimeError(_) => "runtime_error",
+            ExecState::Mismatch(_) => "mismatch",
+            ExecState::Correct => "correct",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_and_errors() {
+        assert!(ExecState::Correct.is_correct());
+        assert_eq!(ExecState::Correct.error_text(), None);
+        let e = ExecState::RuntimeError("boom".into());
+        assert_eq!(e.error_text(), Some("boom"));
+        assert_eq!(e.label(), "runtime_error");
+        assert!(!e.is_correct());
+    }
+}

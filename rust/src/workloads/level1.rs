@@ -1,0 +1,379 @@
+//! Level 1: 100 single-primitive problems (KernelBench L1 analog).
+//!
+//! Families: activations, matmuls, 2-D convolutions, depthwise convs,
+//! reductions, softmax, layernorm, pooling, transpose, binary ops.
+//! Nine problems carry op families absent from the MPS backend
+//! (conv3d-transpose / 3-D pooling analogs) and are excluded on Metal
+//! (Table 2: 91 of 100 remain).
+
+use super::spec::{Level, Problem};
+use crate::kir::graph::{Graph, GraphBuilder};
+use crate::kir::op::{BinaryKind, Op, ReduceKind, UnaryKind};
+use crate::tensor::Shape;
+
+fn act_graph(name: &str, kind: UnaryKind, rows: usize, cols: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[rows, cols]));
+    // KernelBench's Swish problem is written as `x * torch.sigmoid(x)`
+    // — two eager kernels (this is what the §7.2 fused kernel beats).
+    let r = if kind == UnaryKind::Swish {
+        let s = b.unary(UnaryKind::Sigmoid, x);
+        b.binary(BinaryKind::Mul, x, s)
+    } else {
+        b.unary(kind, x)
+    };
+    b.finish(vec![r])
+}
+
+fn matmul_graph(name: &str, m: usize, k: usize, n: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, k]));
+    let w = b.input(Shape::of(&[k, n]));
+    let y = b.matmul(x, w);
+    b.finish(vec![y])
+}
+
+fn conv_graph(name: &str, n: usize, c: usize, hw: usize, o: usize, k: usize, stride: usize, pad: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[n, c, hw, hw]));
+    let w = b.input(Shape::of(&[o, c, k, k]));
+    let y = b.conv2d(x, w, stride, pad);
+    b.finish(vec![y])
+}
+
+fn dwconv_graph(name: &str, n: usize, c: usize, hw: usize, k: usize, stride: usize, pad: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[n, c, hw, hw]));
+    let w = b.input(Shape::of(&[c, 1, k, k]));
+    let y = b.push(Op::DepthwiseConv2d { input: x, weight: w, stride, padding: pad });
+    b.finish(vec![y])
+}
+
+fn reduce_graph(name: &str, m: usize, n: usize, kind: ReduceKind, axis: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, n]));
+    let y = b.reduce(kind, axis, x);
+    b.finish(vec![y])
+}
+
+fn softmax_graph(name: &str, m: usize, n: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, n]));
+    let y = b.push(Op::Softmax { input: x });
+    b.finish(vec![y])
+}
+
+fn layernorm_graph(name: &str, m: usize, n: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, n]));
+    let g = b.input(Shape::of(&[n]));
+    let be = b.input(Shape::of(&[n]));
+    let y = b.push(Op::Layernorm { input: x, gamma: g, beta: be });
+    b.finish(vec![y])
+}
+
+fn pool_graph(name: &str, n: usize, c: usize, hw: usize, k: usize, stride: usize, is_max: bool) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[n, c, hw, hw]));
+    let y = if is_max {
+        b.push(Op::MaxPool2d { input: x, k, stride })
+    } else {
+        b.push(Op::AvgPool2d { input: x, k, stride })
+    };
+    b.finish(vec![y])
+}
+
+fn binary_graph(name: &str, kind: BinaryKind, m: usize, n: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, n]));
+    let y = b.input(Shape::of(&[m, n]));
+    let z = b.binary(kind, x, y);
+    b.finish(vec![z])
+}
+
+fn transpose_graph(name: &str, m: usize, n: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, n]));
+    let y = b.push(Op::Transpose2 { input: x });
+    b.finish(vec![y])
+}
+
+struct Def {
+    id: &'static str,
+    eval: Graph,
+    perf: Graph,
+    families: Vec<&'static str>,
+}
+
+/// All 100 Level-1 problems.
+pub fn problems() -> Vec<Problem> {
+    let mut defs: Vec<Def> = Vec::with_capacity(100);
+
+    // -- activations: 5 kinds × 4 shapes = 20 ----------------------------
+    let acts = [
+        (UnaryKind::Relu, "relu"),
+        (UnaryKind::Sigmoid, "sigmoid"),
+        (UnaryKind::Swish, "swish"),
+        (UnaryKind::Gelu, "gelu"),
+        (UnaryKind::Tanh, "tanh"),
+    ];
+    // (rows, cols) perf shapes: the paper's L1 problems use modest batch
+    let act_shapes = [(16usize, 16384usize), (128, 4096), (16, 256), (1024, 1024)];
+    for (kind, kname) in acts {
+        for (si, (r, c)) in act_shapes.iter().enumerate() {
+            let id = Box::leak(format!("l1_act_{kname}_{si}").into_boxed_str());
+            defs.push(Def {
+                id,
+                eval: act_graph(id, kind, 4, 64),
+                perf: act_graph(id, kind, *r, *c),
+                families: vec![kname],
+            });
+        }
+    }
+
+    // -- matmuls: 15 ------------------------------------------------------
+    let mm_shapes = [
+        (256usize, 256usize, 256usize),
+        (1024, 1024, 1024),
+        (16, 4096, 4096),
+        (4096, 16, 4096),
+        (4096, 4096, 16),
+        (128, 512, 256),
+        (64, 64, 64),
+        (2048, 128, 2048),
+        (512, 2048, 512),
+        (32, 32, 8192),
+        (8192, 32, 32),
+        (1, 4096, 4096),
+        (4096, 4096, 1),
+        (768, 768, 768),
+        (16, 16, 16),
+    ];
+    for (i, (m, k, n)) in mm_shapes.iter().enumerate() {
+        let id = Box::leak(format!("l1_matmul_{i:02}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: matmul_graph(id, (m / 64).clamp(1, 8) * 8, (k / 64).clamp(1, 8) * 8, (n / 64).clamp(1, 8) * 8),
+            perf: matmul_graph(id, *m, *k, *n),
+            families: vec!["matmul"],
+        });
+    }
+
+    // -- conv2d: 17 + 3 "conv3d_transpose" analogs (metal-unsupported) ----
+    let conv_shapes: [(usize, usize, usize, usize, usize, usize, usize); 17] = [
+        (16, 3, 224, 64, 7, 2, 3),
+        (16, 64, 56, 64, 3, 1, 1),
+        (16, 64, 56, 128, 3, 2, 1),
+        (16, 128, 28, 128, 3, 1, 1),
+        (16, 128, 28, 256, 3, 2, 1),
+        (16, 256, 14, 256, 3, 1, 1),
+        (16, 16, 32, 32, 5, 1, 2),
+        (16, 32, 64, 32, 1, 1, 0),
+        (16, 3, 32, 16, 3, 1, 1),
+        (8, 96, 28, 96, 3, 1, 1),
+        (8, 16, 128, 16, 3, 1, 1),
+        (32, 8, 28, 8, 3, 1, 1),
+        (16, 64, 14, 64, 1, 1, 0),
+        (16, 32, 28, 64, 5, 2, 2),
+        (4, 3, 96, 12, 7, 2, 3),
+        (16, 48, 28, 48, 3, 1, 1),
+        (16, 24, 56, 24, 3, 1, 1),
+    ];
+    for (i, (n, c, hw, o, k, s, p)) in conv_shapes.iter().enumerate() {
+        let id = Box::leak(format!("l1_conv2d_{i:02}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: conv_graph(id, 1, (*c).min(4), 10, (*o).min(4), (*k).min(3), *s, (*p).min(1)),
+            perf: conv_graph(id, *n, *c, *hw, *o, *k, *s, *p),
+            families: vec!["conv2d"],
+        });
+    }
+    // 3-D conv-transpose analogs: graphs are 2-D stand-ins, but the op
+    // family marks them unsupported on MPS (the paper excluded 9 L1).
+    for i in 0..3 {
+        let id = Box::leak(format!("l1_conv3dT_{i:02}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: conv_graph(id, 1, 3, 8, 4, 3, 1, 1),
+            perf: conv_graph(id, 8, 16, 32, 16, 3, 1, 1),
+            families: vec!["conv3d_transpose"],
+        });
+    }
+
+    // -- depthwise conv: 5 -------------------------------------------------
+    let dw_shapes = [
+        (16usize, 32usize, 56usize, 3usize, 1usize, 1usize),
+        (16, 64, 28, 3, 1, 1),
+        (16, 128, 14, 3, 2, 1),
+        (16, 96, 28, 5, 1, 2),
+        (8, 256, 14, 3, 1, 1),
+    ];
+    for (i, (n, c, hw, k, s, p)) in dw_shapes.iter().enumerate() {
+        let id = Box::leak(format!("l1_dwconv_{i:02}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: dwconv_graph(id, 1, 4, 10, 3, 1, 1),
+            perf: dwconv_graph(id, *n, *c, *hw, *k, *s, *p),
+            families: vec!["dwconv2d"],
+        });
+    }
+
+    // -- reductions: 12 -----------------------------------------------------
+    let rkinds = [
+        (ReduceKind::Sum, "sum"),
+        (ReduceKind::Max, "max"),
+        (ReduceKind::Mean, "mean"),
+        (ReduceKind::LogSumExp, "lse"),
+    ];
+    for (kind, kn) in rkinds {
+        for (si, (m, n, ax)) in [(16usize, 16384usize, 1usize), (4096, 256, 0), (256, 4096, 1)]
+            .iter()
+            .enumerate()
+        {
+            let id = Box::leak(format!("l1_reduce_{kn}_{si}").into_boxed_str());
+            defs.push(Def {
+                id,
+                eval: reduce_graph(id, 6, 32, kind, *ax),
+                perf: reduce_graph(id, *m, *n, kind, *ax),
+                families: vec!["reduce"],
+            });
+        }
+    }
+
+    // -- softmax: 6 ----------------------------------------------------------
+    for (i, (m, n)) in [(16usize, 16384usize), (128, 4096), (4096, 128), (16, 512), (1024, 1024), (64, 50257)]
+        .iter()
+        .enumerate()
+    {
+        let id = Box::leak(format!("l1_softmax_{i:02}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: softmax_graph(id, 5, 40),
+            perf: softmax_graph(id, *m, *n),
+            families: vec!["softmax"],
+        });
+    }
+
+    // -- layernorm: 6 ---------------------------------------------------------
+    for (i, (m, n)) in [(16usize, 1024usize), (128, 768), (512, 512), (16, 8192), (2048, 256), (64, 64)]
+        .iter()
+        .enumerate()
+    {
+        let id = Box::leak(format!("l1_layernorm_{i:02}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: layernorm_graph(id, 4, 32),
+            perf: layernorm_graph(id, *m, *n),
+            families: vec!["layernorm"],
+        });
+    }
+
+    // -- pooling: 2 + 6 "3-D pooling" analogs (metal-unsupported) -------------
+    for (i, (is_max, k)) in [(true, 2usize), (false, 2)].iter().enumerate() {
+        let id = Box::leak(format!("l1_pool2d_{i:02}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: pool_graph(id, 1, 4, 8, *k, *k, *is_max),
+            perf: pool_graph(id, 16, 64, 56, *k, *k, *is_max),
+            families: vec![if *is_max { "maxpool2d" } else { "avgpool2d" }],
+        });
+    }
+    for i in 0..6 {
+        let is_max = i % 2 == 0;
+        let id = Box::leak(format!("l1_pool3d_{i:02}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: pool_graph(id, 1, 4, 8, 2, 2, is_max),
+            perf: pool_graph(id, 16, 32, 28, 2, 2, is_max),
+            families: vec![if is_max { "maxpool3d" } else { "avgpool3d" }],
+        });
+    }
+
+    // -- binary + transpose: 8 --------------------------------------------------
+    let bins = [
+        (BinaryKind::Add, "add"),
+        (BinaryKind::Mul, "mul"),
+        (BinaryKind::Sub, "sub"),
+        (BinaryKind::Div, "div"),
+        (BinaryKind::Max, "max"),
+    ];
+    for (kind, kn) in bins {
+        let id = Box::leak(format!("l1_binary_{kn}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: binary_graph(id, kind, 4, 64),
+            perf: binary_graph(id, kind, 128, 16384),
+            families: vec!["binary"],
+        });
+    }
+    for (i, (m, n)) in [(4096usize, 4096usize), (16, 65536), (65536, 16)].iter().enumerate() {
+        let id = Box::leak(format!("l1_transpose_{i:02}").into_boxed_str());
+        defs.push(Def {
+            id,
+            eval: transpose_graph(id, 8, 16),
+            perf: transpose_graph(id, *m, *n),
+            families: vec!["transpose"],
+        });
+    }
+
+    assert_eq!(defs.len(), 100, "level 1 must have exactly 100 problems, got {}", defs.len());
+    defs.into_iter()
+        .map(|d| Problem {
+            id: d.id.to_string(),
+            level: Level::L1,
+            eval_graph: d.eval,
+            perf_graph: d.perf,
+            op_families: d.families,
+            constant_output: false,
+            reducible: false,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::interp::eval;
+    use crate::kir::validate::validate;
+    use crate::platform::{cuda, metal};
+
+    #[test]
+    fn exactly_100_problems() {
+        assert_eq!(problems().len(), 100);
+    }
+
+    #[test]
+    fn nine_metal_exclusions() {
+        let m = metal::m4_max();
+        let c = cuda::h100();
+        let ps = problems();
+        let excluded = ps.iter().filter(|p| !p.supported_on(&m)).count();
+        assert_eq!(excluded, 9);
+        assert!(ps.iter().all(|p| p.supported_on(&c)));
+    }
+
+    #[test]
+    fn all_graphs_validate() {
+        for p in problems() {
+            validate(&p.eval_graph).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+            validate(&p.perf_graph).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+        }
+    }
+
+    #[test]
+    fn eval_graphs_run() {
+        for p in problems() {
+            let ins = p.eval_inputs(0);
+            eval(&p.eval_graph, &ins).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+        }
+    }
+
+    #[test]
+    fn ids_unique() {
+        let ps = problems();
+        let mut ids: Vec<&str> = ps.iter().map(|p| p.id.as_str()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), ps.len());
+    }
+}

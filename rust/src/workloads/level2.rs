@@ -1,0 +1,460 @@
+//! Level 2: 100 operator-sequence problems with fusion potential
+//! (KernelBench L2 analog).
+//!
+//! Includes the two case-study classes:
+//! - `l2_012_reduction_chain` — the §7.4 reducible linear→sum→max→mean→
+//!   lse→lse problem (matmul collapses to matvec);
+//! - `l2_023_convnorm_mean` / `l2_080_gemm_max_sub_gelu` — the §7.3
+//!   constant-output problems (~1% of L1+L2, as the paper reports).
+//!
+//! 21 problems carry 3-D pooling analogs excluded on Metal (Table 2:
+//! 79 of 100 remain).
+
+use super::spec::{Level, Problem};
+use crate::kir::graph::{Graph, GraphBuilder};
+use crate::kir::op::{BinaryKind, Op, ReduceKind, UnaryKind};
+use crate::tensor::Shape;
+
+fn gemm_bias_act(name: &str, m: usize, k: usize, n: usize, act: UnaryKind) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, k]));
+    let w = b.input(Shape::of(&[k, n]));
+    let bias = b.input(Shape::of(&[n]));
+    let mm = b.matmul(x, w);
+    let a = b.add(mm, bias);
+    let r = b.unary(act, a);
+    b.finish(vec![r])
+}
+
+fn gemm_bias_act_scale(name: &str, m: usize, k: usize, n: usize, act: UnaryKind) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, k]));
+    let w = b.input(Shape::of(&[k, n]));
+    let bias = b.input(Shape::of(&[n]));
+    let scale = b.input(Shape::of(&[n]));
+    let mm = b.matmul(x, w);
+    let a = b.add(mm, bias);
+    let r = b.unary(act, a);
+    let s = b.binary(BinaryKind::Mul, r, scale);
+    b.finish(vec![s])
+}
+
+fn conv_bias_act(name: &str, n: usize, c: usize, hw: usize, o: usize, k: usize, act: UnaryKind, pool3d: bool) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[n, c, hw, hw]));
+    let w = b.input(Shape::of(&[o, c, k, k]));
+    let bias = b.input(Shape::of(&[1, o, 1, 1]));
+    let cv = b.conv2d(x, w, 1, k / 2);
+    let a = b.add(cv, bias);
+    let r = b.unary(act, a);
+    let out = if pool3d {
+        // the 3-D pooling analog (2-D stand-in, metal-unsupported family)
+        b.push(Op::MaxPool2d { input: r, k: 2, stride: 2 })
+    } else {
+        r
+    };
+    b.finish(vec![out])
+}
+
+fn elementwise_chain(name: &str, m: usize, n: usize, kinds: &[UnaryKind]) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let mut x = b.input(Shape::of(&[m, n]));
+    for &k in kinds {
+        x = b.unary(k, x);
+    }
+    b.finish(vec![x])
+}
+
+fn gemm_layernorm_act(name: &str, m: usize, k: usize, n: usize, act: UnaryKind) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, k]));
+    let w = b.input(Shape::of(&[k, n]));
+    let g = b.input(Shape::of(&[n]));
+    let be = b.input(Shape::of(&[n]));
+    let mm = b.matmul(x, w);
+    let ln = b.push(Op::Layernorm { input: mm, gamma: g, beta: be });
+    let r = b.unary(act, ln);
+    b.finish(vec![r])
+}
+
+fn gemm_softmax(name: &str, m: usize, k: usize, n: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, k]));
+    let w = b.input(Shape::of(&[k, n]));
+    let mm = b.matmul(x, w);
+    let sm = b.push(Op::Softmax { input: mm });
+    b.finish(vec![sm])
+}
+
+/// §7.4: linear → sum(1) → max(1) → mean(1) → lse(1) → lse(1).
+fn reduction_chain(name: &str, m: usize, k: usize, n: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, k]));
+    let w = b.input(Shape::of(&[k, n]));
+    let bias = b.input(Shape::of(&[n]));
+    let mm = b.matmul(x, w);
+    let lin = b.add(mm, bias);
+    let s = b.reduce(ReduceKind::Sum, 1, lin);
+    let mx = b.reduce(ReduceKind::Max, 1, s);
+    let mean = b.reduce(ReduceKind::Mean, 1, mx);
+    let l1 = b.reduce(ReduceKind::LogSumExp, 1, mean);
+    let l2 = b.reduce(ReduceKind::LogSumExp, 1, l1);
+    b.finish(vec![l2])
+}
+
+/// §7.3 / C.3: linear → max(1) → subtract mean(1) → gelu ≡ zeros.
+fn gemm_max_sub_gelu(name: &str, m: usize, k: usize, n: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, k]));
+    let w = b.input(Shape::of(&[k, n]));
+    let bias = b.input(Shape::of(&[n]));
+    let mm = b.matmul(x, w);
+    let y = b.add(mm, bias);
+    let mx = b.reduce(ReduceKind::Max, 1, y);
+    let mean = b.reduce(ReduceKind::Mean, 1, mx);
+    let sub = b.binary(BinaryKind::Sub, mx, mean);
+    let out = b.unary(UnaryKind::Gelu, sub);
+    b.finish(vec![out])
+}
+
+/// §7.3 / C.2 analog: conv → groupnorm-bias-mean ≡ constant.  Modeled
+/// as conv → (x - mean over singleton) → mul-by-zero epilogue whose
+/// output provably constant-folds.
+fn convnorm_mean_const(name: &str, n: usize, c: usize, hw: usize, o: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[n, c, hw, hw]));
+    let w = b.input(Shape::of(&[o, c, 3, 3]));
+    let cv = b.conv2d(x, w, 1, 1);
+    let gp = b.push(Op::GlobalAvgPool { input: cv }); // [n,o,1,1]
+    let m1 = b.reduce(ReduceKind::Mean, 2, gp); // singleton -> identity
+    let sub = b.binary(BinaryKind::Sub, gp, m1); // != 0 in general...
+    // ...but the chain multiplies by (mean-over-singleton - itself) = 0:
+    let zero = b.binary(BinaryKind::Sub, m1, gp);
+    let add = b.add(sub, zero); // sub + (-sub) == 0 elementwise? no — keep explicit:
+    let out = b.binary(BinaryKind::Mul, add, zero);
+    b.finish(vec![out])
+}
+
+fn gemm_chain(name: &str, m: usize, k: usize, depth: usize, act: UnaryKind) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let mut x = b.input(Shape::of(&[m, k]));
+    for _ in 0..depth {
+        let w = b.input(Shape::of(&[k, k]));
+        let mm = b.matmul(x, w);
+        x = b.unary(act, mm);
+    }
+    b.finish(vec![x])
+}
+
+fn scale_residual(name: &str, m: usize, n: usize, act: UnaryKind) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[m, n]));
+    let s = b.input(Shape::of(&[n]));
+    let h = b.binary(BinaryKind::Mul, x, s);
+    let a = b.unary(act, h);
+    let r = b.add(a, x);
+    b.finish(vec![r])
+}
+
+struct Def {
+    id: String,
+    eval: Graph,
+    perf: Graph,
+    families: Vec<&'static str>,
+    constant_output: bool,
+    reducible: bool,
+}
+
+/// All 100 Level-2 problems.
+pub fn problems() -> Vec<Problem> {
+    let mut defs: Vec<Def> = Vec::with_capacity(100);
+    let acts = [
+        (UnaryKind::Relu, "relu"),
+        (UnaryKind::Swish, "swish"),
+        (UnaryKind::Gelu, "gelu"),
+        (UnaryKind::Sigmoid, "sigmoid"),
+        (UnaryKind::Tanh, "tanh"),
+    ];
+
+    // -- gemm+bias+act: 5 acts × 3 shapes = 15 ---------------------------
+    let gemm_shapes = [(16usize, 1024usize, 1024usize), (128, 512, 512), (16, 4096, 256)];
+    for (act, an) in acts {
+        for (si, (m, k, n)) in gemm_shapes.iter().enumerate() {
+            let id = format!("l2_gemm_bias_{an}_{si}");
+            defs.push(Def {
+                eval: gemm_bias_act(&id, 8, 32, 24, act),
+                perf: gemm_bias_act(&id, *m, *k, *n, act),
+                id,
+                families: vec!["matmul", an],
+                constant_output: false,
+                reducible: false,
+            });
+        }
+    }
+
+    // -- gemm+bias+act+scale: 5 -------------------------------------------
+    for (act, an) in acts {
+        let id = format!("l2_gemm_scale_{an}");
+        defs.push(Def {
+            eval: gemm_bias_act_scale(&id, 8, 32, 24, act),
+            perf: gemm_bias_act_scale(&id, 64, 512, 512, act),
+            id,
+            families: vec!["matmul", an],
+            constant_output: false,
+            reducible: false,
+        });
+    }
+
+    // -- conv+bias+act (plain): 14 ------------------------------------------
+    let conv_defs: [(usize, usize, usize, usize, usize); 7] = [
+        (16, 16, 32, 32, 3),
+        (16, 32, 28, 64, 3),
+        (8, 64, 14, 64, 3),
+        (16, 3, 64, 16, 5),
+        (16, 8, 56, 16, 1),
+        (8, 48, 28, 48, 3),
+        (16, 24, 32, 24, 3),
+    ];
+    for (ci, (n, c, hw, o, k)) in conv_defs.iter().enumerate() {
+        for (act, an) in [(UnaryKind::Relu, "relu"), (UnaryKind::Swish, "swish")] {
+            let id = format!("l2_conv_bias_{an}_{ci}");
+            defs.push(Def {
+                eval: conv_bias_act(&id, 1, 4, 10, 4, 3, act, false),
+                perf: conv_bias_act(&id, *n, *c, *hw, *o, *k, act, false),
+                id,
+                families: vec!["conv2d", an],
+                constant_output: false,
+                reducible: false,
+            });
+        }
+    }
+
+    // -- conv+act+3dpool analogs: 21 (metal-unsupported) ---------------------
+    for i in 0..21 {
+        let (act, an) = acts[i % 5];
+        let id = format!("l2_conv_pool3d_{i:02}");
+        defs.push(Def {
+            eval: conv_bias_act(&id, 1, 4, 12, 4, 3, act, true),
+            perf: conv_bias_act(&id, 16, 16 + (i % 4) * 16, 32, 32, 3, act, true),
+            id,
+            families: vec!["conv2d", an, if i % 2 == 0 { "maxpool3d" } else { "avgpool3d" }],
+            constant_output: false,
+            reducible: false,
+        });
+    }
+
+    // -- elementwise chains: 10 ----------------------------------------------
+    let chains: [&[UnaryKind]; 5] = [
+        &[UnaryKind::Swish, UnaryKind::Relu],
+        &[UnaryKind::Sigmoid, UnaryKind::Square, UnaryKind::Neg],
+        &[UnaryKind::Gelu, UnaryKind::Tanh],
+        &[UnaryKind::Relu, UnaryKind::Sqrt, UnaryKind::Sigmoid],
+        &[UnaryKind::Swish, UnaryKind::Swish, UnaryKind::Swish],
+    ];
+    for (i, ch) in chains.iter().enumerate() {
+        for (si, (m, n)) in [(16usize, 16384usize), (256, 2048)].iter().enumerate() {
+            let id = format!("l2_ewchain_{i}_{si}");
+            defs.push(Def {
+                eval: elementwise_chain(&id, 4, 64, ch),
+                perf: elementwise_chain(&id, *m, *n, ch),
+                id,
+                families: vec!["elementwise"],
+                constant_output: false,
+                reducible: false,
+            });
+        }
+    }
+
+    // -- gemm+layernorm+act: 10 ------------------------------------------------
+    for (act, an) in acts {
+        for (si, (m, k, n)) in [(16usize, 512usize, 512usize), (128, 768, 768)].iter().enumerate() {
+            let id = format!("l2_gemm_ln_{an}_{si}");
+            defs.push(Def {
+                eval: gemm_layernorm_act(&id, 8, 32, 24, act),
+                perf: gemm_layernorm_act(&id, *m, *k, *n, act),
+                id,
+                families: vec!["matmul", "layernorm", an],
+                constant_output: false,
+                reducible: false,
+            });
+        }
+    }
+
+    // -- gemm+softmax: 6 ----------------------------------------------------------
+    for (i, (m, k, n)) in [
+        (16usize, 512usize, 512usize),
+        (64, 64, 4096),
+        (128, 256, 1024),
+        (16, 1024, 128),
+        (256, 128, 256),
+        (32, 2048, 512),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let id = format!("l2_gemm_softmax_{i}");
+        defs.push(Def {
+            eval: gemm_softmax(&id, 6, 24, 20),
+            perf: gemm_softmax(&id, *m, *k, *n),
+            id,
+            families: vec!["matmul", "softmax"],
+            constant_output: false,
+            reducible: false,
+        });
+    }
+
+    // -- reduction chains (§7.4 class): 5, all reducible ---------------------------
+    for (i, (m, k, n)) in [
+        (128usize, 8192usize, 1024usize), // the paper's problem-12 geometry
+        (64, 4096, 512),
+        (16, 2048, 2048),
+        (256, 1024, 256),
+        (32, 512, 4096),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let id = if i == 0 { "l2_012_reduction_chain".to_string() } else { format!("l2_redchain_{i}") };
+        defs.push(Def {
+            eval: reduction_chain(&id, 8, 32, 24),
+            perf: reduction_chain(&id, *m, *k, *n),
+            id,
+            families: vec!["matmul", "reduce"],
+            constant_output: false,
+            reducible: true,
+        });
+    }
+
+    // -- constant-output problems (§7.3 class): 2 (~1% of L1+L2) --------------------
+    {
+        let id = "l2_080_gemm_max_sub_gelu".to_string();
+        defs.push(Def {
+            eval: gemm_max_sub_gelu(&id, 8, 32, 24),
+            perf: gemm_max_sub_gelu(&id, 128, 512, 1024),
+            id,
+            families: vec!["matmul", "reduce", "gelu"],
+            constant_output: true,
+            reducible: false,
+        });
+        let id = "l2_023_convnorm_mean".to_string();
+        defs.push(Def {
+            eval: convnorm_mean_const(&id, 1, 3, 8, 4),
+            perf: convnorm_mean_const(&id, 128, 3, 16, 16),
+            id,
+            families: vec!["conv2d", "reduce"],
+            constant_output: true,
+            reducible: false,
+        });
+    }
+
+    // -- gemm chains: 7 ---------------------------------------------------------------
+    for (i, (m, k, depth)) in [
+        (16usize, 256usize, 3usize),
+        (64, 512, 2),
+        (16, 128, 4),
+        (128, 256, 2),
+        (32, 1024, 2),
+        (16, 64, 6),
+        (8, 512, 3),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let (act, an) = acts[i % 5];
+        let id = format!("l2_gemmchain_{i}");
+        defs.push(Def {
+            eval: gemm_chain(&id, 8, 24, (*depth).min(3), act),
+            perf: gemm_chain(&id, *m, *k, *depth, act),
+            id,
+            families: vec!["matmul", an],
+            constant_output: false,
+            reducible: false,
+        });
+    }
+
+    // -- scale+residual: 5 --------------------------------------------------------------
+    for (act, an) in acts {
+        let id = format!("l2_scaleres_{an}");
+        defs.push(Def {
+            eval: scale_residual(&id, 4, 64, act),
+            perf: scale_residual(&id, 16, 8192, act),
+            id,
+            families: vec!["elementwise", an],
+            constant_output: false,
+            reducible: false,
+        });
+    }
+
+    assert_eq!(defs.len(), 100, "level 2 must have exactly 100 problems, got {}", defs.len());
+    defs.into_iter()
+        .map(|d| Problem {
+            id: d.id,
+            level: Level::L2,
+            eval_graph: d.eval,
+            perf_graph: d.perf,
+            op_families: d.families,
+            constant_output: d.constant_output,
+            reducible: d.reducible,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::interp::eval;
+    use crate::kir::rewrite::constant_fold;
+    use crate::kir::validate::validate;
+    use crate::platform::metal;
+
+    #[test]
+    fn exactly_100_problems() {
+        assert_eq!(problems().len(), 100);
+    }
+
+    #[test]
+    fn twenty_one_metal_exclusions() {
+        let m = metal::m4_max();
+        let excluded = problems().iter().filter(|p| !p.supported_on(&m)).count();
+        assert_eq!(excluded, 21);
+    }
+
+    #[test]
+    fn all_graphs_validate_and_run() {
+        for p in problems() {
+            validate(&p.eval_graph).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+            validate(&p.perf_graph).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+            let ins = p.eval_inputs(0);
+            eval(&p.eval_graph, &ins).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+        }
+    }
+
+    #[test]
+    fn constant_output_problems_detected_by_folding() {
+        for p in problems().iter().filter(|p| p.constant_output) {
+            assert!(
+                constant_fold::output_is_constant(&p.eval_graph),
+                "{} should constant-fold",
+                p.id
+            );
+        }
+    }
+
+    #[test]
+    fn constant_flags_are_one_percent_class() {
+        let n = problems().iter().filter(|p| p.constant_output).count();
+        assert_eq!(n, 2); // ~1% of L1+L2, as §7.3 reports
+    }
+
+    #[test]
+    fn reducible_problems_actually_reduce() {
+        use crate::kir::rewrite::algebraic;
+        for p in problems().iter().filter(|p| p.reducible) {
+            assert!(
+                algebraic::count_opportunities(&p.eval_graph) > 0,
+                "{} should be reducible",
+                p.id
+            );
+        }
+    }
+}

@@ -1,0 +1,413 @@
+//! Level 3: 50 architecture problems (KernelBench L3 analog).
+//!
+//! Includes the three Table-6 case-study architectures as
+//! batch-parameterized constructors so the harness can sweep batch
+//! sizes 8–128: `squeezenet_fire`, `mobilenetv2_block`, `mingpt_block`.
+
+use super::spec::{Level, Problem};
+use crate::kir::graph::{Graph, GraphBuilder, NodeId};
+use crate::kir::op::{BinaryKind, Op, UnaryKind};
+use crate::tensor::Shape;
+
+fn conv_bias_relu(b: &mut GraphBuilder, x: NodeId, c_in: usize, c_out: usize, k: usize, stride: usize, pad: usize) -> NodeId {
+    let w = b.input(Shape::of(&[c_out, c_in, k, k]));
+    let bias = b.input(Shape::of(&[1, c_out, 1, 1]));
+    let cv = b.conv2d(x, w, stride, pad);
+    let a = b.add(cv, bias);
+    b.unary(UnaryKind::Relu, a)
+}
+
+/// SqueezeNet Fire module (§7.1 / Table 6): squeeze 1×1 → expand 1×1 ‖ 3×3.
+pub fn squeezenet_fire(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("squeezenet_fire");
+    let (c, hw, sq, ex) = (96usize, 55usize, 16usize, 64usize);
+    let x = b.input(Shape::of(&[batch, c, hw, hw]));
+    let s = conv_bias_relu(&mut b, x, c, sq, 1, 1, 0);
+    let e1 = conv_bias_relu(&mut b, s, sq, ex, 1, 1, 0);
+    let e3 = conv_bias_relu(&mut b, s, sq, ex, 3, 1, 1);
+    let out = b.push(Op::Concat { inputs: vec![e1, e3], axis: 1 });
+    b.finish(vec![out])
+}
+
+fn fire_small(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("fire_small");
+    let x = b.input(Shape::of(&[batch, 4, 8, 8]));
+    let s = conv_bias_relu(&mut b, x, 4, 2, 1, 1, 0);
+    let e1 = conv_bias_relu(&mut b, s, 2, 4, 1, 1, 0);
+    let e3 = conv_bias_relu(&mut b, s, 2, 4, 3, 1, 1);
+    let out = b.push(Op::Concat { inputs: vec![e1, e3], axis: 1 });
+    b.finish(vec![out])
+}
+
+/// MobileNetV2 inverted residual (Table 6): expand 1×1 → depthwise 3×3
+/// → project 1×1 → residual add.
+pub fn mobilenetv2_block(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("mobilenetv2_block");
+    let (c, hw, t) = (32usize, 28usize, 6usize);
+    let x = b.input(Shape::of(&[batch, c, hw, hw]));
+    let h = conv_bias_relu(&mut b, x, c, c * t, 1, 1, 0);
+    let dw_w = b.input(Shape::of(&[c * t, 1, 3, 3]));
+    let dw = b.push(Op::DepthwiseConv2d { input: h, weight: dw_w, stride: 1, padding: 1 });
+    let dwr = b.unary(UnaryKind::Relu, dw);
+    let pw = b.input(Shape::of(&[c, c * t, 1, 1]));
+    let proj = b.conv2d(dwr, pw, 1, 0);
+    let out = b.add(proj, x);
+    b.finish(vec![out])
+}
+
+fn mbv2_small(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("mbv2_small");
+    let (c, hw, t) = (4usize, 8usize, 2usize);
+    let x = b.input(Shape::of(&[batch, c, hw, hw]));
+    let h = conv_bias_relu(&mut b, x, c, c * t, 1, 1, 0);
+    let dw_w = b.input(Shape::of(&[c * t, 1, 3, 3]));
+    let dw = b.push(Op::DepthwiseConv2d { input: h, weight: dw_w, stride: 1, padding: 1 });
+    let dwr = b.unary(UnaryKind::Relu, dw);
+    let pw = b.input(Shape::of(&[c, c * t, 1, 1]));
+    let proj = b.conv2d(dwr, pw, 1, 0);
+    let out = b.add(proj, x);
+    b.finish(vec![out])
+}
+
+fn transformer_block_inner(b: &mut GraphBuilder, x0: NodeId, s: usize, d: usize, f: usize) -> NodeId {
+    let g1 = b.input(Shape::of(&[d]));
+    let be1 = b.input(Shape::of(&[d]));
+    let h = b.push(Op::Layernorm { input: x0, gamma: g1, beta: be1 });
+    let wq = b.input(Shape::of(&[d, d]));
+    let wk = b.input(Shape::of(&[d, d]));
+    let wv = b.input(Shape::of(&[d, d]));
+    let wo = b.input(Shape::of(&[d, d]));
+    let q = b.matmul(h, wq);
+    let k = b.matmul(h, wk);
+    let v = b.matmul(h, wv);
+    let at = b.push(Op::Attention { q, k, v });
+    let o = b.matmul(at, wo);
+    let x1 = b.add(x0, o);
+    let g2 = b.input(Shape::of(&[d]));
+    let be2 = b.input(Shape::of(&[d]));
+    let h2 = b.push(Op::Layernorm { input: x1, gamma: g2, beta: be2 });
+    let w1 = b.input(Shape::of(&[d, f]));
+    let bb1 = b.input(Shape::of(&[f]));
+    let m1 = b.matmul(h2, w1);
+    let a1 = b.add(m1, bb1);
+    let gl = b.unary(UnaryKind::Gelu, a1);
+    let w2 = b.input(Shape::of(&[f, d]));
+    let bb2 = b.input(Shape::of(&[d]));
+    let m2 = b.matmul(gl, w2);
+    let a2 = b.add(m2, bb2);
+    let _ = s;
+    b.add(x1, a2)
+}
+
+/// MinGPT block (Table 6): LN → attention → residual → LN → MLP →
+/// residual.  `batch` scales the sequence length (tokens processed).
+pub fn mingpt_block(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("mingpt_block");
+    let (s, d, f) = (8 * batch, 384usize, 1536usize);
+    let x = b.input(Shape::of(&[s, d]));
+    let out = transformer_block_inner(&mut b, x, s, d, f);
+    b.finish(vec![out])
+}
+
+fn mingpt_small(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("mingpt_small");
+    let (s, d, f) = (4 * batch.max(1), 16usize, 32usize);
+    let x = b.input(Shape::of(&[s, d]));
+    let out = transformer_block_inner(&mut b, x, s, d, f);
+    b.finish(vec![out])
+}
+
+fn mlp_stack(name: &str, m: usize, dims: &[usize], act: UnaryKind) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let mut x = b.input(Shape::of(&[m, dims[0]]));
+    for w in dims.windows(2) {
+        let wt = b.input(Shape::of(&[w[0], w[1]]));
+        let bias = b.input(Shape::of(&[w[1]]));
+        let mm = b.matmul(x, wt);
+        let a = b.add(mm, bias);
+        x = b.unary(act, a);
+    }
+    b.finish(vec![x])
+}
+
+fn vgg_stage(name: &str, batch: usize, c_in: usize, c_out: usize, hw: usize, convs: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let mut x = b.input(Shape::of(&[batch, c_in, hw, hw]));
+    let mut c = c_in;
+    for _ in 0..convs {
+        x = conv_bias_relu(&mut b, x, c, c_out, 3, 1, 1);
+        c = c_out;
+    }
+    let p = b.push(Op::MaxPool2d { input: x, k: 2, stride: 2 });
+    b.finish(vec![p])
+}
+
+fn attention_stack(name: &str, s: usize, d: usize, layers: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let mut x = b.input(Shape::of(&[s, d]));
+    for _ in 0..layers {
+        let wq = b.input(Shape::of(&[d, d]));
+        let wk = b.input(Shape::of(&[d, d]));
+        let wv = b.input(Shape::of(&[d, d]));
+        let q = b.matmul(x, wq);
+        let k = b.matmul(x, wk);
+        let v = b.matmul(x, wv);
+        let at = b.push(Op::Attention { q, k, v });
+        x = b.add(at, x);
+    }
+    b.finish(vec![x])
+}
+
+fn alexnet_head(name: &str, batch: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(Shape::of(&[batch, 3, 64, 64]));
+    let c1 = conv_bias_relu(&mut b, x, 3, 16, 5, 2, 2);
+    let p1 = b.push(Op::MaxPool2d { input: c1, k: 2, stride: 2 });
+    let c2 = conv_bias_relu(&mut b, p1, 16, 32, 3, 1, 1);
+    let p2 = b.push(Op::MaxPool2d { input: c2, k: 2, stride: 2 });
+    let g = b.push(Op::GlobalAvgPool { input: p2 });
+    let r = b.push(Op::Reshape { input: g, shape: Shape::of(&[batch, 32]) });
+    let w = b.input(Shape::of(&[32, 10]));
+    let out = b.matmul(r, w);
+    b.finish(vec![out])
+}
+
+fn residual_mlp(name: &str, m: usize, d: usize, layers: usize) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    let mut x = b.input(Shape::of(&[m, d]));
+    for _ in 0..layers {
+        let w = b.input(Shape::of(&[d, d]));
+        let bias = b.input(Shape::of(&[d]));
+        let mm = b.matmul(x, w);
+        let a = b.add(mm, bias);
+        let g = b.unary(UnaryKind::Gelu, a);
+        x = b.binary(BinaryKind::Add, g, x);
+    }
+    b.finish(vec![x])
+}
+
+struct Def {
+    id: String,
+    eval: Graph,
+    perf: Graph,
+    families: Vec<&'static str>,
+}
+
+/// All 50 Level-3 problems.
+pub fn problems() -> Vec<Problem> {
+    let mut defs: Vec<Def> = Vec::with_capacity(50);
+
+    // -- the three Table-6 architectures (ids match the case study) -----
+    defs.push(Def {
+        id: "l3_020_mobilenetv2".into(),
+        eval: mbv2_small(1),
+        perf: mobilenetv2_block(16),
+        families: vec!["conv2d", "dwconv2d"],
+    });
+    defs.push(Def {
+        id: "l3_043_mingpt".into(),
+        eval: mingpt_small(1),
+        perf: mingpt_block(16),
+        families: vec!["matmul", "attention", "layernorm", "gelu"],
+    });
+    defs.push(Def {
+        id: "l3_squeezenet_fire".into(),
+        eval: fire_small(1),
+        perf: squeezenet_fire(16),
+        families: vec!["conv2d", "concat"],
+    });
+
+    // -- fire variants: 4 more ------------------------------------------
+    for (i, batch) in [8usize, 32, 64, 128].iter().enumerate() {
+        let id = format!("l3_fire_b{batch}");
+        let _ = i;
+        defs.push(Def {
+            eval: fire_small(1),
+            perf: squeezenet_fire(*batch),
+            id,
+            families: vec!["conv2d", "concat"],
+        });
+    }
+
+    // -- mobilenet variants: 4 more ----------------------------------------
+    for batch in [8usize, 32, 64, 128] {
+        let id = format!("l3_mbv2_b{batch}");
+        defs.push(Def {
+            eval: mbv2_small(1),
+            perf: mobilenetv2_block(batch),
+            id,
+            families: vec!["conv2d", "dwconv2d"],
+        });
+    }
+
+    // -- mingpt variants: 4 more ---------------------------------------------
+    for batch in [8usize, 32, 64, 128] {
+        let id = format!("l3_mingpt_b{batch}");
+        defs.push(Def {
+            eval: mingpt_small(1),
+            perf: mingpt_block(batch),
+            id,
+            families: vec!["matmul", "attention", "layernorm", "gelu"],
+        });
+    }
+
+    // -- MLP stacks: 8 ----------------------------------------------------------
+    let mlp_cfgs: [(&[usize], UnaryKind, &'static str); 8] = [
+        (&[784, 512, 256, 10], UnaryKind::Relu, "relu"),
+        (&[784, 1024, 1024, 10], UnaryKind::Gelu, "gelu"),
+        (&[256, 256, 256, 256, 256], UnaryKind::Swish, "swish"),
+        (&[512, 2048, 512], UnaryKind::Relu, "relu"),
+        (&[1024, 4096, 1024], UnaryKind::Gelu, "gelu"),
+        (&[128, 128, 128, 128, 128, 128], UnaryKind::Tanh, "tanh"),
+        (&[2048, 512, 128, 32], UnaryKind::Relu, "relu"),
+        (&[64, 1024, 64], UnaryKind::Sigmoid, "sigmoid"),
+    ];
+    for (i, (dims, act, an)) in mlp_cfgs.iter().enumerate() {
+        let id = format!("l3_mlp_{i:02}");
+        let small: Vec<usize> = dims.iter().map(|d| (*d / 32).clamp(4, 16)).collect();
+        defs.push(Def {
+            eval: mlp_stack(&id, 4, &small, *act),
+            perf: mlp_stack(&id, 16, dims, *act),
+            id,
+            families: vec!["matmul", an],
+        });
+    }
+
+    // -- VGG-ish conv stages: 10 ---------------------------------------------------
+    let vgg_cfgs = [
+        (16usize, 3usize, 32usize, 32usize, 2usize),
+        (16, 32, 64, 16, 2),
+        (16, 64, 128, 8, 3),
+        (8, 3, 64, 64, 2),
+        (8, 64, 128, 32, 2),
+        (8, 128, 256, 16, 3),
+        (32, 3, 16, 32, 2),
+        (32, 16, 32, 16, 2),
+        (4, 128, 256, 28, 3),
+        (4, 256, 512, 14, 3),
+    ];
+    for (i, (n, ci, co, hw, convs)) in vgg_cfgs.iter().enumerate() {
+        let id = format!("l3_vgg_{i:02}");
+        defs.push(Def {
+            eval: vgg_stage(&id, 1, 3, 4, 8, 2),
+            perf: vgg_stage(&id, *n, *ci, *co, *hw, *convs),
+            id,
+            families: vec!["conv2d", "maxpool2d"],
+        });
+    }
+
+    // -- attention stacks: 5 -----------------------------------------------------------
+    for (i, (s, d, layers)) in [
+        (128usize, 256usize, 2usize),
+        (256, 384, 2),
+        (512, 256, 3),
+        (64, 512, 4),
+        (1024, 128, 2),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let id = format!("l3_attnstack_{i:02}");
+        defs.push(Def {
+            eval: attention_stack(&id, 8, 16, 2),
+            perf: attention_stack(&id, *s, *d, *layers),
+            id,
+            families: vec!["matmul", "attention"],
+        });
+    }
+
+    // -- AlexNet-ish heads: 4 -------------------------------------------------------------
+    for batch in [4usize, 16, 32, 64] {
+        let id = format!("l3_alexnet_b{batch}");
+        defs.push(Def {
+            eval: alexnet_head(&id, 1),
+            perf: alexnet_head(&id, batch),
+            id,
+            families: vec!["conv2d", "maxpool2d", "matmul"],
+        });
+    }
+
+    // -- residual MLPs: 8 -------------------------------------------------------------------
+    for (i, (m, d, layers)) in [
+        (16usize, 512usize, 4usize),
+        (64, 256, 6),
+        (16, 1024, 3),
+        (128, 128, 8),
+        (32, 768, 4),
+        (16, 256, 12),
+        (8, 2048, 2),
+        (256, 64, 10),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let id = format!("l3_resmlp_{i:02}");
+        defs.push(Def {
+            eval: residual_mlp(&id, 4, 16, 2),
+            perf: residual_mlp(&id, *m, *d, *layers),
+            id,
+            families: vec!["matmul", "gelu"],
+        });
+    }
+
+    assert_eq!(defs.len(), 50, "level 3 must have exactly 50 problems, got {}", defs.len());
+    defs.into_iter()
+        .map(|d| Problem {
+            id: d.id,
+            level: Level::L3,
+            eval_graph: d.eval,
+            perf_graph: d.perf,
+            op_families: d.families,
+            constant_output: false,
+            reducible: false,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::interp::eval;
+    use crate::kir::validate::validate;
+    use crate::platform::metal;
+
+    #[test]
+    fn exactly_50_problems() {
+        assert_eq!(problems().len(), 50);
+    }
+
+    #[test]
+    fn all_supported_on_metal() {
+        // Table 2: all 50 L3 problems remain in KernelBench-Metal
+        let m = metal::m4_max();
+        assert!(problems().iter().all(|p| p.supported_on(&m)));
+    }
+
+    #[test]
+    fn all_graphs_validate_and_run() {
+        for p in problems() {
+            validate(&p.eval_graph).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+            validate(&p.perf_graph).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+            let ins = p.eval_inputs(0);
+            eval(&p.eval_graph, &ins).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+        }
+    }
+
+    #[test]
+    fn table6_ctors_scale_with_batch() {
+        let f8 = squeezenet_fire(8);
+        let f128 = squeezenet_fire(128);
+        assert!(f128.total_flops() > 10.0 * f8.total_flops());
+        let m8 = mingpt_block(8);
+        let m128 = mingpt_block(128);
+        assert!(m128.total_flops() > 10.0 * m8.total_flops());
+    }
+
+    #[test]
+    fn deep_graphs_have_many_ops() {
+        // L3 problems must be architecture-scale (many launches eager)
+        for p in problems() {
+            assert!(p.perf_graph.len() >= 8, "{} too small", p.id);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! The KernelBench-KIR workload suite.
+//!
+//! 250 problems mirroring the KernelBench distribution (Table 2):
+//! - **Level 1** (100): single primitives — activations, matmuls,
+//!   convolutions, reductions, normalizations;
+//! - **Level 2** (100): operator sequences with fusion potential —
+//!   GEMM+epilogue chains, conv+norm+act blocks, reduction chains
+//!   (including the §7.3 constant-output and §7.4 reducible problems);
+//! - **Level 3** (50): architectures — Fire modules, MobileNetV2-style
+//!   inverted residuals, MinGPT-style transformer blocks, MLP stacks,
+//!   VGG/AlexNet-style stages.
+//!
+//! Each problem carries two shape sets: `eval` (small; ground-truth
+//! numerics run on the CPU reference executor) and `perf` (paper-scale;
+//! priced by the device simulator).  30 problems contain ops missing on
+//! Metal (9 L1 + 21 L2) and are excluded there, leaving 220
+//! (KernelBench-Metal, Table 2).
+
+pub mod spec;
+pub mod level1;
+pub mod level2;
+pub mod level3;
+pub mod suite;
+pub mod refcorpus;
+
+pub use spec::{Level, Problem};
+pub use suite::Suite;

@@ -1,0 +1,96 @@
+//! The CUDA reference corpus (§6.2).
+//!
+//! The paper reuses correct CUDA programs from KernelBench-samples
+//! (12,600 programs over 245 tasks) and, for reproducibility, picks the
+//! *first correct implementation per task* as the Metal-transfer
+//! reference.  Our corpus has the same provenance: it is built by
+//! running a CUDA synthesis campaign and retaining, per problem, the
+//! first correct program.
+
+use crate::agents::{GenerationAgent, Program};
+use crate::platform::{cuda, PlatformKind};
+use crate::util::rng::Pcg;
+use crate::verify;
+use crate::workloads::Suite;
+use std::collections::HashMap;
+
+/// The reference corpus: problem id → first correct CUDA program.
+#[derive(Debug, Clone, Default)]
+pub struct RefCorpus {
+    pub programs: HashMap<String, Program>,
+}
+
+impl RefCorpus {
+    /// Build by running `attempts_per_problem` CUDA generations per
+    /// problem with a strong persona and keeping the first correct one.
+    pub fn build(suite: &Suite, attempts_per_problem: usize, seed: u64) -> RefCorpus {
+        let spec = cuda::h100();
+        let persona = crate::agents::persona::by_name("openai-gpt-5").unwrap();
+        let agent = GenerationAgent::new(persona, PlatformKind::Cuda);
+        let mut programs = HashMap::new();
+        for problem in suite.problems.iter() {
+            let mut rng = Pcg::new(seed, crate::util::rng::fnv1a(problem.id.as_bytes()));
+            for _ in 0..attempts_per_problem {
+                let Some(prog) = agent.synthesize(problem, None, &mut rng) else {
+                    continue;
+                };
+                let out = verify::verify(&spec, problem, Some(&prog), &mut rng);
+                if out.state.is_correct() {
+                    programs.insert(problem.id.clone(), prog);
+                    break;
+                }
+            }
+        }
+        RefCorpus { programs }
+    }
+
+    pub fn get(&self, problem_id: &str) -> Option<&Program> {
+        self.programs.get(problem_id)
+    }
+
+    pub fn coverage(&self, suite: &Suite) -> f64 {
+        let covered = suite
+            .problems
+            .iter()
+            .filter(|p| self.programs.contains_key(&p.id))
+            .count();
+        covered as f64 / suite.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_builds_with_good_coverage() {
+        let suite = Suite::sample(4);
+        let corpus = RefCorpus::build(&suite, 6, 7);
+        // gpt-5 with 6 attempts covers most problems
+        assert!(corpus.coverage(&suite) > 0.7, "coverage {}", corpus.coverage(&suite));
+    }
+
+    #[test]
+    fn corpus_programs_are_cuda_correct() {
+        let suite = Suite::sample(2);
+        let corpus = RefCorpus::build(&suite, 6, 7);
+        let spec = cuda::h100();
+        let mut rng = Pcg::seed(0);
+        for (id, prog) in &corpus.programs {
+            let p = suite.problems.iter().find(|p| &p.id == id).unwrap();
+            let out = verify::verify(&spec, p, Some(prog), &mut rng);
+            assert!(out.state.is_correct(), "{id}: {:?}", out.state);
+        }
+    }
+
+    #[test]
+    fn corpus_deterministic() {
+        let suite = Suite::sample(2);
+        let a = RefCorpus::build(&suite, 3, 9);
+        let b = RefCorpus::build(&suite, 3, 9);
+        assert_eq!(a.programs.len(), b.programs.len());
+        for (k, v) in &a.programs {
+            assert_eq!(b.programs[k].schedule, v.schedule);
+        }
+    }
+}

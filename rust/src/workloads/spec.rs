@@ -1,0 +1,108 @@
+//! Problem specification.
+
+use crate::kir::Graph;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+/// KernelBench difficulty level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Level {
+    L1,
+    L2,
+    L3,
+}
+
+impl Level {
+    pub const ALL: [Level; 3] = [Level::L1, Level::L2, Level::L3];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::L1 => "Level 1",
+            Level::L2 => "Level 2",
+            Level::L3 => "Level 3",
+        }
+    }
+}
+
+/// One benchmark problem.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    /// Stable id, e.g. "l1_025_swish".
+    pub id: String,
+    pub level: Level,
+    /// Reference graph at evaluation (small) shapes — numerics ground
+    /// truth runs here.
+    pub eval_graph: Graph,
+    /// Reference graph at paper-scale shapes — the simulator prices
+    /// this one (batch sizes etc. match the paper's regime).
+    pub perf_graph: Graph,
+    /// Op families used (Metal-support filtering).
+    pub op_families: Vec<&'static str>,
+    /// True if the problem's output is input-independent (§7.3 class).
+    pub constant_output: bool,
+    /// True if the §7.4 algebraic reduction applies.
+    pub reducible: bool,
+}
+
+impl Problem {
+    /// Seeded evaluation inputs for the numerics check.
+    pub fn eval_inputs(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Pcg::new(seed, crate::util::rng::fnv1a(self.id.as_bytes()));
+        self.eval_graph
+            .input_shapes
+            .iter()
+            .map(|s| Tensor::randn(s.clone(), &mut rng, 0.5))
+            .collect()
+    }
+
+    /// Is this problem runnable on a platform (all op families present)?
+    pub fn supported_on(&self, spec: &crate::platform::PlatformSpec) -> bool {
+        self.op_families.iter().all(|f| spec.supports(f))
+    }
+}
+
+/// Helper: batch-parameterized problem constructor used by the levels.
+pub type ProblemCtor = fn(batch: usize) -> Graph;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::tensor::Shape;
+
+    fn trivial(name: &str) -> Graph {
+        let mut b = GraphBuilder::new(name);
+        let x = b.input(Shape::of(&[4]));
+        let r = b.unary(crate::kir::op::UnaryKind::Relu, x);
+        b.finish(vec![r])
+    }
+
+    #[test]
+    fn eval_inputs_deterministic_per_problem() {
+        let p = Problem {
+            id: "t".into(),
+            level: Level::L1,
+            eval_graph: trivial("t"),
+            perf_graph: trivial("t"),
+            op_families: vec!["relu"],
+            constant_output: false,
+            reducible: false,
+        };
+        assert_eq!(p.eval_inputs(1), p.eval_inputs(1));
+        assert_ne!(p.eval_inputs(1)[0].data, p.eval_inputs(2)[0].data);
+    }
+
+    #[test]
+    fn different_problems_different_inputs() {
+        let mk = |id: &str| Problem {
+            id: id.into(),
+            level: Level::L1,
+            eval_graph: trivial(id),
+            perf_graph: trivial(id),
+            op_families: vec![],
+            constant_output: false,
+            reducible: false,
+        };
+        assert_ne!(mk("a").eval_inputs(1)[0].data, mk("b").eval_inputs(1)[0].data);
+    }
+}

@@ -1,0 +1,121 @@
+//! The assembled suite: 250 problems, Metal filtering, Table-2 counts.
+
+use super::spec::{Level, Problem};
+use super::{level1, level2, level3};
+use crate::platform::PlatformSpec;
+use once_cell::sync::Lazy;
+use std::sync::Arc;
+
+/// The full suite (constructed once; problems are immutable).
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub problems: Arc<Vec<Problem>>,
+}
+
+static SUITE: Lazy<Arc<Vec<Problem>>> = Lazy::new(|| {
+    let mut ps = level1::problems();
+    ps.extend(level2::problems());
+    ps.extend(level3::problems());
+    Arc::new(ps)
+});
+
+impl Suite {
+    /// The full 250-problem KernelBench-KIR suite (cached).
+    pub fn full() -> Suite {
+        Suite {
+            problems: SUITE.clone(),
+        }
+    }
+
+    /// A deterministic subset (first `n` of each level) for fast tests.
+    pub fn sample(per_level: usize) -> Suite {
+        let full = Suite::full();
+        let mut out = Vec::new();
+        for level in Level::ALL {
+            out.extend(
+                full.problems
+                    .iter()
+                    .filter(|p| p.level == level)
+                    .take(per_level)
+                    .cloned(),
+            );
+        }
+        Suite {
+            problems: Arc::new(out),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.problems.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.problems.is_empty()
+    }
+
+    pub fn by_level(&self, level: Level) -> Vec<&Problem> {
+        self.problems.iter().filter(|p| p.level == level).collect()
+    }
+
+    /// Problems runnable on a platform (Metal drops 30 → 220).
+    pub fn supported_on(&self, spec: &PlatformSpec) -> Suite {
+        Suite {
+            problems: Arc::new(
+                self.problems
+                    .iter()
+                    .filter(|p| p.supported_on(spec))
+                    .cloned()
+                    .collect(),
+            ),
+        }
+    }
+
+    /// (L1, L2, L3) counts — the Table 2 row.
+    pub fn distribution(&self) -> (usize, usize, usize) {
+        (
+            self.by_level(Level::L1).len(),
+            self.by_level(Level::L2).len(),
+            self.by_level(Level::L3).len(),
+        )
+    }
+
+    pub fn get(&self, id: &str) -> Option<&Problem> {
+        self.problems.iter().find(|p| p.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{cuda, metal};
+
+    #[test]
+    fn table2_distribution() {
+        let full = Suite::full();
+        assert_eq!(full.distribution(), (100, 100, 50));
+        let metal_suite = full.supported_on(&metal::m4_max());
+        assert_eq!(metal_suite.distribution(), (91, 79, 50));
+        assert_eq!(metal_suite.len(), 220);
+        assert_eq!(full.supported_on(&cuda::h100()).len(), 250);
+    }
+
+    #[test]
+    fn sample_subsets() {
+        let s = Suite::sample(3);
+        assert_eq!(s.len(), 9);
+    }
+
+    #[test]
+    fn lookup_by_id() {
+        let s = Suite::full();
+        assert!(s.get("l3_043_mingpt").is_some());
+        assert!(s.get("nonexistent").is_none());
+    }
+
+    #[test]
+    fn full_is_cached() {
+        let a = Suite::full();
+        let b = Suite::full();
+        assert!(Arc::ptr_eq(&a.problems, &b.problems));
+    }
+}

@@ -1,0 +1,159 @@
+//! Integration tests: the full KForge loop across modules, at Quick
+//! scale (simulation only — PJRT integration lives in
+//! pjrt_integration.rs and needs `make artifacts`).
+
+use kforge::agents::persona::{by_name, PERSONAS};
+use kforge::coordinator::{run_campaign, BaselineKind, ExperimentConfig};
+use kforge::harness::{self, Scale};
+use kforge::metrics;
+use kforge::platform::PlatformKind;
+use kforge::workloads::refcorpus::RefCorpus;
+use kforge::workloads::{Level, Suite};
+
+fn cfg(platform: PlatformKind, personas: Vec<&'static kforge::agents::Persona>) -> ExperimentConfig {
+    let mut c = match platform {
+        PlatformKind::Cuda => ExperimentConfig::cuda_iterative(personas),
+        PlatformKind::Metal => ExperimentConfig::mps_iterative(personas),
+    };
+    c.name = "integration".into();
+    c
+}
+
+#[test]
+fn full_loop_produces_all_five_states_somewhere() {
+    // across a weak persona and enough problems, every §3.3 state shows up
+    let suite = Suite::sample(25);
+    let mut c = cfg(PlatformKind::Cuda, vec![by_name("deepseek-v3").unwrap()]);
+    c.iterations = 3;
+    let campaign = run_campaign(&suite, None, &c);
+    let census = campaign.state_census();
+    assert!(census.contains_key("correct"), "{census:?}");
+    assert!(census.contains_key("mismatch"), "{census:?}");
+    assert!(
+        census.contains_key("compilation_failure") || census.contains_key("runtime_error"),
+        "{census:?}"
+    );
+}
+
+#[test]
+fn reasoning_gap_grows_with_level() {
+    // paper §5.1: the reasoning-vs-chat gap is maximal on Level 3
+    let suite = Suite::sample(20);
+    let personas = vec![by_name("openai-gpt-5").unwrap(), by_name("openai-gpt-4o").unwrap()];
+    let campaign = run_campaign(&suite, None, &cfg(PlatformKind::Cuda, personas));
+    let gap = |level: Level| {
+        metrics::correctness_rate(&campaign.outcomes("openai-gpt-5", level))
+            - metrics::correctness_rate(&campaign.outcomes("openai-gpt-4o", level))
+    };
+    assert!(
+        gap(Level::L3) > gap(Level::L1) - 0.15,
+        "L3 gap {} should exceed L1 gap {}",
+        gap(Level::L3),
+        gap(Level::L1)
+    );
+    assert!(gap(Level::L3) > 0.15, "L3 gap too small: {}", gap(Level::L3));
+}
+
+#[test]
+fn fast1_much_lower_than_fast0() {
+    // paper: performance at fast_1 decreases significantly for all models
+    let suite = Suite::sample(15);
+    let campaign = run_campaign(
+        &suite,
+        None,
+        &cfg(PlatformKind::Cuda, vec![by_name("openai-gpt-5").unwrap()]),
+    );
+    let all: Vec<_> = campaign.results.iter().map(|r| r.outcome).collect();
+    let f0 = metrics::fast_p(&all, 0.0);
+    let f15 = metrics::fast_p(&all, 1.5);
+    assert!(f0 > f15, "fast_0 {f0} should exceed fast_1.5 {f15}");
+}
+
+#[test]
+fn profiling_loop_runs_on_both_platforms() {
+    let suite = Suite::sample(5);
+    for platform in [PlatformKind::Cuda, PlatformKind::Metal] {
+        let mut c = cfg(platform, vec![by_name("openai-gpt-5").unwrap()]);
+        c.use_profiling = true;
+        c.name = format!("prof_{:?}", platform);
+        let campaign = run_campaign(&suite, None, &c);
+        assert!(!campaign.results.is_empty());
+        let correct = campaign.results.iter().filter(|r| r.outcome.correct).count();
+        assert!(correct > 0, "{platform:?} produced no correct programs");
+    }
+}
+
+#[test]
+fn reference_corpus_pipeline_end_to_end() {
+    let suite = Suite::sample(6);
+    let corpus = RefCorpus::build(&suite, 5, 1);
+    assert!(corpus.coverage(&suite) > 0.5);
+    let mut c = cfg(PlatformKind::Metal, vec![by_name("claude-opus-4").unwrap()]);
+    c.use_reference = true;
+    let campaign = run_campaign(&suite, Some(&corpus), &c);
+    assert!(!campaign.results.is_empty());
+}
+
+#[test]
+fn compile_baseline_vs_eager_baseline_ordering() {
+    // same persona, same problems: speedups against compile ≠ eager
+    let suite = Suite::sample(8);
+    let mut eager_cfg = cfg(PlatformKind::Cuda, vec![by_name("openai-gpt-5").unwrap()]);
+    eager_cfg.name = "base_eager".into();
+    let mut compile_cfg = eager_cfg.clone();
+    compile_cfg.name = "base_compile".into();
+    compile_cfg.baseline = BaselineKind::TorchCompile;
+    let a = run_campaign(&suite, None, &eager_cfg);
+    let b = run_campaign(&suite, None, &compile_cfg);
+    // both complete with same problem sets
+    assert_eq!(a.results.len(), b.results.len());
+    // baselines must differ (different executors)
+    let diff = a
+        .results
+        .iter()
+        .zip(&b.results)
+        .filter(|(x, y)| (x.baseline_s - y.baseline_s).abs() / x.baseline_s > 0.01)
+        .count();
+    assert!(diff > a.results.len() / 3, "baselines suspiciously identical");
+}
+
+#[test]
+fn runlog_roundtrip_through_json() {
+    let suite = Suite::sample(3);
+    let campaign = run_campaign(
+        &suite,
+        None,
+        &cfg(PlatformKind::Cuda, vec![by_name("deepseek-r1").unwrap()]),
+    );
+    let doc = kforge::coordinator::runlog::to_json(&campaign);
+    let parsed = kforge::util::json::parse(&doc.to_pretty()).unwrap();
+    assert_eq!(
+        parsed.get("results").unwrap().as_arr().unwrap().len(),
+        campaign.results.len()
+    );
+}
+
+#[test]
+fn harness_table2_exact() {
+    let (t2, _) = harness::table2::run();
+    assert_eq!(t2.rows[0].1 + t2.rows[0].2 + t2.rows[0].3, 220);
+    assert_eq!(t2.rows[1].1 + t2.rows[1].2 + t2.rows[1].3, 250);
+}
+
+#[test]
+fn harness_quick_smoke_all_figures() {
+    // every figure harness completes at tiny scale and emits its title
+    let (_, f2) = harness::fig2::run(Scale::Quick(2));
+    assert!(f2.contains("Figure 2"));
+    let (_, f3) = harness::fig3::run(Scale::Quick(2));
+    assert!(f3.contains("Figure 3"));
+    let (_, f4) = harness::fig4::run(Scale::Quick(2));
+    assert!(f4.contains("Figure 4"));
+}
+
+#[test]
+fn all_personas_complete_one_problem() {
+    let suite = Suite::sample(1);
+    let campaign = run_campaign(&suite, None, &cfg(PlatformKind::Cuda, PERSONAS.iter().collect()));
+    assert_eq!(campaign.results.len(), 3 * PERSONAS.len());
+}

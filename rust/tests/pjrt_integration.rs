@@ -1,0 +1,121 @@
+//! PJRT integration: load the real AOT artifacts and execute them.
+//!
+//! These tests require `make artifacts` to have produced `artifacts/`;
+//! they are skipped (with a loud message) when the directory is absent
+//! so `cargo test` stays green on a fresh checkout.
+
+use kforge::runtime::{PjrtRuntime, Registry};
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return None;
+    }
+    let registry = Registry::load(&dir).expect("manifest parses");
+    Some(PjrtRuntime::new(registry).expect("PJRT CPU client"))
+}
+
+#[test]
+fn registry_loads_and_has_references() {
+    let Some(rt) = runtime() else { return };
+    let workloads = rt.registry().workloads();
+    assert!(workloads.len() >= 8, "expected >=8 workloads, got {workloads:?}");
+    for w in &workloads {
+        let batches: Vec<usize> = rt
+            .registry()
+            .entries
+            .iter()
+            .filter(|e| &e.workload == w)
+            .map(|e| e.batch)
+            .collect();
+        for b in batches {
+            assert!(rt.registry().reference(w, b).is_some(), "{w} b{b} missing reference");
+        }
+    }
+}
+
+#[test]
+fn swish_variants_match_reference_numerically() {
+    let Some(rt) = runtime() else { return };
+    let Some(reference) = rt.registry().reference("swish", 16) else {
+        eprintln!("SKIP: swish b16 not lowered");
+        return;
+    };
+    let key = reference.key.clone();
+    let inputs = rt.seeded_inputs(&key, 0).unwrap();
+    let want = rt.execute(&key, &inputs).unwrap();
+    for variant in rt.registry().variants("swish", 16) {
+        if variant.is_reference {
+            continue;
+        }
+        let got = rt.execute(&variant.key, &inputs).unwrap();
+        assert_eq!(got[0].shape, want[0].shape, "{}", variant.key);
+        // ept8 uses fast-math: looser tolerance (§7.2 trade-off)
+        let (rtol, atol) = if variant.variant == "ept8" { (5e-3, 5e-4) } else { (1e-4, 1e-5) };
+        assert!(
+            got[0].allclose(&want[0], rtol, atol),
+            "{}: max |diff| = {}",
+            variant.key,
+            got[0].max_abs_diff(&want[0])
+        );
+    }
+}
+
+#[test]
+fn reduction_chain_reduced_variant_matches() {
+    let Some(rt) = runtime() else { return };
+    let Some(reference) = rt.registry().reference("reduction_chain", 16) else {
+        eprintln!("SKIP: reduction_chain b16 not lowered");
+        return;
+    };
+    let key = reference.key.clone();
+    let inputs = rt.seeded_inputs(&key, 3).unwrap();
+    let want = rt.execute(&key, &inputs).unwrap();
+    let reduced_key = key.replace("naive", "reduced");
+    if rt.registry().get(&reduced_key).is_none() {
+        return;
+    }
+    let got = rt.execute(&reduced_key, &inputs).unwrap();
+    // §7.4: the algebraically reduced graph is numerically equivalent
+    assert!(
+        got[0].allclose(&want[0], 5e-3, 5e-3),
+        "max |diff| = {}",
+        got[0].max_abs_diff(&want[0])
+    );
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    let key = rt.registry().entries[0].key.clone();
+    let inputs = rt.seeded_inputs(&key, 0).unwrap();
+    rt.execute(&key, &inputs).unwrap();
+    let after_first = rt.cache_len();
+    rt.execute(&key, &inputs).unwrap();
+    rt.execute(&key, &inputs).unwrap();
+    assert_eq!(rt.cache_len(), after_first);
+}
+
+#[test]
+fn execute_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    let key = rt.registry().entries[0].key.clone();
+    assert!(rt.execute(&key, &[]).is_err());
+    assert!(rt.execute("nonexistent__x__b0", &[]).is_err());
+}
+
+#[test]
+fn all_artifacts_execute() {
+    let Some(rt) = runtime() else { return };
+    for entry in rt.registry().entries.clone() {
+        let inputs = rt.seeded_inputs(&entry.key, 9).unwrap();
+        let out = rt
+            .execute(&entry.key, &inputs)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", entry.key));
+        assert!(!out.is_empty(), "{}", entry.key);
+        for t in &out {
+            assert!(t.data.iter().all(|v| v.is_finite()), "{}", entry.key);
+        }
+    }
+}
