@@ -12,7 +12,7 @@
 
 use kforge::agents::analysis::AnalysisAgent;
 use kforge::perfsim::{lower, simulate};
-use kforge::platform::{cuda, metal, PlatformKind};
+use kforge::platform::ProfilerAccess;
 use kforge::profiler::{nsys, xcode, Profile};
 use kforge::sched::Schedule;
 use kforge::util::rng::Pcg;
@@ -24,31 +24,38 @@ fn main() -> anyhow::Result<()> {
     let naive = Schedule::naive();
     let mut rng = Pcg::seed(7);
 
-    // ---- CUDA: programmatic CSV path -----------------------------------
-    let h100 = cuda::h100();
-    let plan = lower::lower(&problem.perf_graph, &naive);
-    let sim = simulate(&h100, &plan, &mut rng, 100, 10);
-    let profile = Profile::from_sim(&problem.id, h100.name, &sim);
-    println!("================ CUDA: nsys stats CSV reports ================\n");
-    println!("{}", nsys::full_report(&profile));
-    let agent = AnalysisAgent::new(PlatformKind::Cuda);
-    println!(
-        "analysis agent recommendation: {:?}\n",
-        agent.recommend_cuda(&profile, &naive)
-    );
-
-    // ---- Metal: GUI screenshot path -------------------------------------
-    let m4 = metal::m4_max();
-    let mplan = lower::lower(&problem.perf_graph, &naive);
-    let msim = simulate(&m4, &mplan, &mut rng, 100, 10);
-    let mprofile = Profile::from_sim(&problem.id, m4.name, &msim);
-    println!("============ Metal: Xcode Instruments screenshots ============\n");
-    for screen in xcode::capture_screens(&mprofile) {
-        println!("{screen}");
+    // every registered platform, through whichever profiler frontend it
+    // actually exposes (programmatic CSV vs GUI screenshots)
+    for platform in kforge::platform::registry().platforms() {
+        let spec = platform.spec();
+        let plan = lower::lower(&problem.perf_graph, &naive);
+        let sim = simulate(spec, &plan, &mut rng, 100, 10);
+        let profile = Profile::from_sim(&problem.id, spec.name, &sim);
+        let agent = AnalysisAgent::new(platform.clone());
+        let rec = match spec.profiler {
+            ProfilerAccess::ProgrammaticCsv => {
+                println!(
+                    "========= {}: programmatic CSV reports ({} path) =========\n",
+                    spec.name,
+                    platform.language()
+                );
+                println!("{}", nsys::full_report(&profile));
+                agent.recommend_from_profile(&profile, &naive)
+            }
+            ProfilerAccess::GuiScreenshot => {
+                println!(
+                    "========= {}: GUI screenshots (screen-scraped) =========\n",
+                    spec.name
+                );
+                let screens = xcode::capture_screens(&profile);
+                for screen in &screens {
+                    println!("{screen}");
+                }
+                agent.recommend_from_screens(&screens, &naive)
+            }
+        };
+        println!("analysis agent recommendation: {rec:?}");
+        println!("recommendation text fed to the generation agent:\n  {}\n", rec.text());
     }
-    let magent = AnalysisAgent::new(PlatformKind::Metal);
-    let rec = magent.recommend_metal(&xcode::capture_screens(&mprofile), &naive);
-    println!("analysis agent recommendation (from screenshots): {rec:?}");
-    println!("\nrecommendation text fed to the generation agent:\n  {}", rec.text());
     Ok(())
 }

@@ -13,7 +13,6 @@ use kforge::agents::analysis::AnalysisAgent;
 use kforge::agents::persona::by_name;
 use kforge::agents::GenerationAgent;
 use kforge::baseline::eager;
-use kforge::platform::{cuda, PlatformKind};
 use kforge::profiler::Profile;
 use kforge::util::rng::Pcg;
 use kforge::verify::{self, ExecState};
@@ -22,10 +21,11 @@ use kforge::workloads::Suite;
 fn main() -> anyhow::Result<()> {
     let suite = Suite::full();
     let problem = suite.get("l2_gemm_bias_swish_0").expect("problem exists");
-    let spec = cuda::h100();
+    let platform = kforge::platform::by_name("cuda")?;
+    let spec = platform.spec().clone();
     let persona = by_name("openai-gpt-5").unwrap();
-    let agent = GenerationAgent::new(persona, PlatformKind::Cuda);
-    let analyst = AnalysisAgent::new(PlatformKind::Cuda);
+    let agent = GenerationAgent::new(persona, platform.clone());
+    let analyst = AnalysisAgent::new(platform);
     let mut rng = Pcg::seed(2024);
 
     println!("== problem ==\n{}", problem.eval_graph.render());
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
                     best = Some(sim.measured_s);
                 }
                 let profile = Profile::from_sim(&problem.id, spec.name, &sim);
-                let rec = analyst.recommend(&spec, &profile, &candidate.as_ref().unwrap().schedule);
+                let rec = analyst.recommend(&profile, &candidate.as_ref().unwrap().schedule);
                 println!("  analysis agent: {rec:?}");
                 last_rec = Some(rec);
                 last_error = None;

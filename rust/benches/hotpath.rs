@@ -10,7 +10,7 @@ use kforge::agents::persona::by_name;
 use kforge::coordinator::{run_campaign, ExperimentConfig};
 use kforge::kir::interp;
 use kforge::perfsim::{lower, simulate};
-use kforge::platform::{cuda, PlatformKind};
+use kforge::platform::cuda;
 use kforge::sched::Schedule;
 use kforge::util::rng::Pcg;
 use kforge::verify;

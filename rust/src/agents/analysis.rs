@@ -1,9 +1,10 @@
 //! The performance-analysis agent `G : (o, k, {v^i}) → r` (§3.2).
 //!
-//! On CUDA the inputs are nsys-style CSV reports (structured,
-//! lossless); on Metal they are Xcode-style screenshots that must be
-//! screen-scraped first (lossy).  The agent ranks candidate
-//! bottlenecks by estimated impact and emits **one** recommendation.
+//! On programmatic-CSV platforms (CUDA's nsys, ROCm's rocprof) the
+//! inputs are structured, lossless reports; on GUI-only platforms
+//! (Metal's Xcode) they are screenshots that must be screen-scraped
+//! first (lossy).  The agent ranks candidate bottlenecks by estimated
+//! impact and emits **one** recommendation.
 //!
 //! Specialization rationale (from the paper): profiling data is
 //! extensive but optimization signals are sparse, and retrieval
@@ -12,7 +13,7 @@
 //! synthesis agent.
 
 use super::recommend::Recommendation;
-use crate::platform::{PlatformKind, PlatformSpec};
+use crate::platform::{LaunchAmortization, PlatformRef, ProfilerAccess};
 use crate::profiler::parse::{scrape, ScrapedProfile};
 use crate::profiler::Profile;
 use crate::sched::Schedule;
@@ -20,7 +21,7 @@ use crate::sched::Schedule;
 /// The analysis agent.
 #[derive(Debug, Clone)]
 pub struct AnalysisAgent {
-    pub platform: PlatformKind,
+    pub platform: PlatformRef,
 }
 
 /// The bottleneck facts the agent extracts before ranking.
@@ -37,42 +38,37 @@ struct Facts {
 }
 
 impl AnalysisAgent {
-    pub fn new(platform: PlatformKind) -> Self {
+    pub fn new(platform: PlatformRef) -> Self {
         AnalysisAgent { platform }
     }
 
-    /// CUDA path: structured profile (the CSV is lossless, so we read
-    /// the typed records directly — equivalent to parsing the CSVs).
-    pub fn recommend_cuda(&self, profile: &Profile, schedule: &Schedule) -> Recommendation {
+    /// Programmatic path (nsys / rocprof): the CSV is lossless, so we
+    /// read the typed records directly — equivalent to parsing the
+    /// CSVs.
+    pub fn recommend_from_profile(&self, profile: &Profile, schedule: &Schedule) -> Recommendation {
         self.rank(self.facts_from_profile(profile), schedule)
     }
 
-    /// Metal path: only the rendered screenshots are available; scrape
-    /// them (lossy) and work from what survives.  A scrape failure
-    /// yields `LooksOptimal` — the agent can't see a bottleneck it
-    /// can't read (this is the paper's "profiling information is not
+    /// GUI path (Xcode): only the rendered screenshots are available;
+    /// scrape them (lossy) and work from what survives.  A scrape
+    /// failure yields `LooksOptimal` — the agent can't see a bottleneck
+    /// it can't read (this is the paper's "profiling information is not
     /// always sufficient" failure mode).
-    pub fn recommend_metal(&self, screens: &[String], schedule: &Schedule) -> Recommendation {
+    pub fn recommend_from_screens(&self, screens: &[String], schedule: &Schedule) -> Recommendation {
         match scrape(screens) {
             Ok(s) => self.rank(self.facts_from_scrape(&s), schedule),
             Err(_) => Recommendation::LooksOptimal,
         }
     }
 
-    /// Platform dispatch used by the verification pipeline.
-    pub fn recommend(
-        &self,
-        spec: &PlatformSpec,
-        profile: &Profile,
-        schedule: &Schedule,
-    ) -> Recommendation {
-        match spec.profiler {
-            crate::platform::ProfilerAccess::ProgrammaticCsv => {
-                self.recommend_cuda(profile, schedule)
-            }
-            crate::platform::ProfilerAccess::GuiScreenshot => {
+    /// Platform dispatch used by the verification pipeline: pick the
+    /// profiler frontend this agent's platform actually exposes.
+    pub fn recommend(&self, profile: &Profile, schedule: &Schedule) -> Recommendation {
+        match self.platform.spec().profiler {
+            ProfilerAccess::ProgrammaticCsv => self.recommend_from_profile(profile, schedule),
+            ProfilerAccess::GuiScreenshot => {
                 let screens = crate::profiler::xcode::capture_screens(profile);
-                self.recommend_metal(&screens, schedule)
+                self.recommend_from_screens(&screens, schedule)
             }
         }
     }
@@ -134,16 +130,21 @@ impl AnalysisAgent {
         }
     }
 
+    /// The launch-consolidation advice appropriate to this platform's
+    /// amortization mechanism (device graphs vs pipeline-state caching).
+    fn launch_recommendation(&self) -> Recommendation {
+        match self.platform.spec().launch_amortization {
+            LaunchAmortization::DeviceGraphs { .. } => Recommendation::UseCudaGraphs,
+            LaunchAmortization::PipelineCache { .. } => Recommendation::CachePipelineState,
+        }
+    }
+
     /// Rank bottlenecks by impact; emit the single best recommendation.
     fn rank(&self, f: Facts, schedule: &Schedule) -> Recommendation {
         // launch-bound: the biggest single lever
         if f.launch_fraction > 0.30 {
             if !schedule.use_graphs {
-                return if self.platform == PlatformKind::Cuda {
-                    Recommendation::UseCudaGraphs
-                } else {
-                    Recommendation::CachePipelineState
-                };
+                return self.launch_recommendation();
             }
             if f.n_kernels > 1 && schedule.fusion_depth != usize::MAX {
                 return Recommendation::IncreaseFusion;
@@ -175,7 +176,7 @@ mod tests {
     use crate::kir::op::UnaryKind;
     use crate::perfsim::lower::lower;
     use crate::perfsim::simulate;
-    use crate::platform::{cuda, metal};
+    use crate::platform::{by_name, cuda, metal};
     use crate::profiler::Profile;
     use crate::tensor::Shape;
     use crate::util::rng::Pcg;
@@ -193,9 +194,6 @@ mod tests {
         if fused {
             s.fusion_depth = usize::MAX;
         }
-        if spec.kind == PlatformKind::Metal {
-            s.use_graphs = false;
-        }
         let plan = lower(&g, &s);
         let mut rng = Pcg::seed(0);
         let sim = simulate(spec, &plan, &mut rng, 10, 2);
@@ -206,8 +204,20 @@ mod tests {
     fn launch_bound_cuda_gets_graphs() {
         let spec = cuda::h100();
         let (p, s) = profile_for(false, 32, &spec);
-        let agent = AnalysisAgent::new(PlatformKind::Cuda);
-        let rec = agent.recommend_cuda(&p, &s);
+        let agent = AnalysisAgent::new(by_name("cuda").unwrap());
+        let rec = agent.recommend_from_profile(&p, &s);
+        assert_eq!(rec, Recommendation::UseCudaGraphs, "profile: {p:?}");
+    }
+
+    #[test]
+    fn launch_bound_rocm_gets_graphs_via_csv_path() {
+        // rocm profiles programmatically (rocprof CSV) and amortizes
+        // with hipGraph — the CSV path must route it to device graphs
+        let rocm = by_name("rocm").unwrap();
+        let spec = rocm.spec().clone();
+        let (p, s) = profile_for(false, 32, &spec);
+        let agent = AnalysisAgent::new(rocm);
+        let rec = agent.recommend(&p, &s);
         assert_eq!(rec, Recommendation::UseCudaGraphs, "profile: {p:?}");
     }
 
@@ -215,13 +225,13 @@ mod tests {
     fn launch_bound_metal_gets_pipeline_caching_then_fusion() {
         let spec = metal::m4_max();
         let (p, mut s) = profile_for(false, 32, &spec);
-        let agent = AnalysisAgent::new(PlatformKind::Metal);
+        let agent = AnalysisAgent::new(by_name("metal").unwrap());
         let screens = crate::profiler::xcode::capture_screens(&p);
-        let rec = agent.recommend_metal(&screens, &s);
+        let rec = agent.recommend_from_screens(&screens, &s);
         assert_eq!(rec, Recommendation::CachePipelineState);
         // once caching is on, the next advice is fusion
         s.use_graphs = true;
-        let rec2 = agent.recommend_metal(&screens, &s);
+        let rec2 = agent.recommend_from_screens(&screens, &s);
         assert_eq!(rec2, Recommendation::IncreaseFusion);
     }
 
@@ -230,29 +240,28 @@ mod tests {
         let spec = cuda::h100();
         let (p, mut s) = profile_for(true, 2048, &spec);
         s.use_graphs = true; // silence the launch path
-        let agent = AnalysisAgent::new(PlatformKind::Cuda);
-        let rec = agent.recommend_cuda(&p, &s);
+        let agent = AnalysisAgent::new(by_name("cuda").unwrap());
+        let rec = agent.recommend_from_profile(&p, &s);
         assert_eq!(rec, Recommendation::RetileMatmul, "{p:?}");
     }
 
     #[test]
     fn garbage_screens_yield_looks_optimal() {
-        let agent = AnalysisAgent::new(PlatformKind::Metal);
-        let rec = agent.recommend_metal(&["?".into(), "?".into(), "?".into()], &Schedule::naive());
+        let agent = AnalysisAgent::new(by_name("metal").unwrap());
+        let rec =
+            agent.recommend_from_screens(&["?".into(), "?".into(), "?".into()], &Schedule::naive());
         assert_eq!(rec, Recommendation::LooksOptimal);
     }
 
     #[test]
-    fn metal_and_cuda_agree_on_clear_bottleneck() {
+    fn lossless_and_scraped_views_agree_on_clear_bottleneck() {
         // the scrape is lossy but a dominant launch bottleneck survives
         let spec = metal::m4_max();
         let (p, s) = profile_for(false, 32, &spec);
-        let cuda_view = AnalysisAgent::new(PlatformKind::Metal).rank(
-            AnalysisAgent::new(PlatformKind::Metal).facts_from_profile(&p),
-            &s,
-        );
+        let agent = AnalysisAgent::new(by_name("metal").unwrap());
+        let lossless_view = agent.rank(agent.facts_from_profile(&p), &s);
         let screens = crate::profiler::xcode::capture_screens(&p);
-        let metal_view = AnalysisAgent::new(PlatformKind::Metal).recommend_metal(&screens, &s);
-        assert_eq!(cuda_view, metal_view);
+        let scraped_view = agent.recommend_from_screens(&screens, &s);
+        assert_eq!(lossless_view, scraped_view);
     }
 }

@@ -23,7 +23,7 @@ use super::Recommendation;
 use crate::kir::op::{Op, ReduceKind, UnaryKind};
 use crate::kir::rewrite::{self, Rewrite};
 use crate::kir::Graph;
-use crate::platform::PlatformKind;
+use crate::platform::PlatformRef;
 use crate::sched::schedule::Lever;
 use crate::sched::Schedule;
 use crate::util::rng::Pcg;
@@ -75,11 +75,11 @@ impl Program {
 #[derive(Debug, Clone)]
 pub struct GenerationAgent {
     pub persona: &'static Persona,
-    pub platform: PlatformKind,
+    pub platform: PlatformRef,
 }
 
 impl GenerationAgent {
-    pub fn new(persona: &'static Persona, platform: PlatformKind) -> Self {
+    pub fn new(persona: &'static Persona, platform: PlatformRef) -> Self {
         GenerationAgent { persona, platform }
     }
 
@@ -97,7 +97,7 @@ impl GenerationAgent {
         }
         let p_ok = self
             .persona
-            .p_single_shot(self.platform, problem.level, reference.is_some());
+            .p_single_shot(&*self.platform, problem.level, reference.is_some());
         // Reasoning models self-check k internal candidates; the
         // calibrated p_ok already reflects the final answer, so a single
         // draw decides correctness while internal sampling shapes the
@@ -161,7 +161,7 @@ impl GenerationAgent {
                     let mut sched = next.schedule.clone();
                     if lever == Lever::Tile || lever == Lever::Threadgroup {
                         // move toward the *platform* expert point
-                        let expert = Schedule::expert_for(self.platform);
+                        let expert = self.platform.expert_schedule();
                         match lever {
                             Lever::Tile => sched.tile = expert.tile,
                             Lever::Threadgroup => sched.threadgroup = expert.threadgroup,
@@ -230,14 +230,14 @@ impl GenerationAgent {
         }
         // platform sanity the persona always knows: the threadgroup-memory
         // budget is in the prompt's single-shot example, so sampled tiles
-        // are clamped to legal on Metal (illegal schedules enter only via
-        // the explicit IllegalSchedule defect, keeping the §3.3 state mix
-        // aligned with the calibrated single-shot rates)
-        if self.platform != PlatformKind::Cuda {
-            let expert = Schedule::expert_for(PlatformKind::Metal);
-            if sched.tile.onchip_bytes() > expert.tile.onchip_bytes() {
-                sched.tile = expert.tile;
-            }
+        // are clamped to the platform expert tile when they overflow its
+        // on-chip budget (illegal schedules enter only via the explicit
+        // IllegalSchedule defect, keeping the §3.3 state mix aligned with
+        // the calibrated single-shot rates); a no-op on devices whose
+        // expert tile is already the largest sampleable tile
+        let expert = self.platform.expert_schedule();
+        if sched.tile.onchip_bytes() > expert.tile.onchip_bytes() {
+            sched.tile = expert.tile;
         }
         sched
     }
@@ -267,10 +267,11 @@ impl GenerationAgent {
     fn repair(&self, problem: &Problem, prev: &Program, error: &str, rng: &mut Pcg) -> Program {
         let mut schedule = prev.schedule.clone();
         if error.contains("runtime error") {
-            let legal_max_tile = Schedule::expert_for(self.platform).tile;
+            let spec = self.platform.spec();
+            let legal_max_tile = self.platform.expert_schedule().tile;
             if schedule.threadgroup == 0
-                || schedule.threadgroup % 32 != 0
-                || schedule.threadgroup > 1024
+                || schedule.threadgroup % spec.simd_width != 0
+                || schedule.threadgroup > spec.max_threadgroup
             {
                 schedule.threadgroup = 256;
             }
@@ -403,14 +404,17 @@ mod tests {
     use crate::sched::legal;
     use crate::workloads::Suite;
 
-    fn agent(name: &str, platform: PlatformKind) -> GenerationAgent {
-        GenerationAgent::new(by_name(name).unwrap(), platform)
+    fn agent(name: &str, platform: &str) -> GenerationAgent {
+        GenerationAgent::new(
+            by_name(name).unwrap(),
+            crate::platform::by_name(platform).unwrap(),
+        )
     }
 
     #[test]
     fn correct_programs_have_no_defects_and_validate() {
         let suite = Suite::sample(2);
-        let a = agent("openai-gpt-5", PlatformKind::Cuda);
+        let a = agent("openai-gpt-5", "cuda");
         let mut rng = Pcg::seed(1);
         let mut found_correct = false;
         for p in suite.problems.iter() {
@@ -473,7 +477,7 @@ mod tests {
     #[test]
     fn single_shot_rate_tracks_calibration() {
         let suite = Suite::full();
-        let a = agent("claude-opus-4", PlatformKind::Metal);
+        let a = agent("claude-opus-4", "metal");
         let mut rng = Pcg::seed(42);
         let l1: Vec<_> = suite.by_level(crate::workloads::Level::L1);
         let mut ok = 0;
@@ -497,7 +501,7 @@ mod tests {
     fn refine_repairs_errors_eventually() {
         let suite = Suite::sample(1);
         let p = &suite.problems[0];
-        let a = agent("openai-gpt-5", PlatformKind::Cuda);
+        let a = agent("openai-gpt-5", "cuda");
         let mut rng = Pcg::seed(9);
         let mut prog = tests_support::trivial_program(p);
         prog.defects = vec![Defect::Syntax];
@@ -520,7 +524,7 @@ mod tests {
     fn optimization_follows_recommendation() {
         let suite = Suite::sample(1);
         let p = &suite.problems[0];
-        let a = agent("openai-gpt-5", PlatformKind::Cuda);
+        let a = agent("openai-gpt-5", "cuda");
         let mut rng = Pcg::seed(5);
         let mut prog = tests_support::trivial_program(p);
         assert!(!prog.schedule.fast_math);
@@ -540,7 +544,7 @@ mod tests {
     #[test]
     fn metal_agent_schedules_stay_legal_when_correct() {
         let suite = Suite::sample(2);
-        let a = agent("openai-gpt-5", PlatformKind::Metal);
+        let a = agent("openai-gpt-5", "metal");
         let spec = crate::platform::metal::m4_max();
         let mut rng = Pcg::seed(11);
         for p in suite.problems.iter() {
@@ -556,7 +560,7 @@ mod tests {
     fn reference_transfers_schedule_decisions() {
         let suite = Suite::sample(1);
         let p = &suite.problems[0];
-        let a = agent("claude-opus-4", PlatformKind::Metal);
+        let a = agent("claude-opus-4", "metal");
         let mut rng = Pcg::seed(13);
         let mut reference = tests_support::trivial_program(p);
         reference.schedule = Schedule::expert();

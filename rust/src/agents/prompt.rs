@@ -107,7 +107,7 @@ pub fn synthesis_prompt(
         (None, _) => String::new(),
     };
     let mut vars: BTreeMap<&str, String> = BTreeMap::new();
-    vars.insert("accelerator", spec.kind.language().to_string());
+    vars.insert("accelerator", spec.language.to_string());
     vars.insert("example_arch_src", example);
     vars.insert("example_new_arch_src", example_new);
     vars.insert("arc_src", problem.eval_graph.render());
@@ -122,7 +122,7 @@ pub fn analysis_prompt(spec: &PlatformSpec, program: &Program, artifacts_desc: &
         "You are a {} performance engineer. Given the kernel source and the \
          profiling data below, produce a single recommendation for maximum \
          performance improvement.\n\nKernel source:\n{}\nProfiling data:\n{}\n",
-        spec.kind.language(),
+        spec.language,
         program.source_listing,
         artifacts_desc
     )

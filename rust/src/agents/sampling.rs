@@ -91,14 +91,18 @@ pub fn pass_at_k(
 mod tests {
     use super::*;
     use crate::agents::persona::by_name;
-    use crate::platform::{cuda, PlatformKind};
+    use crate::platform::cuda;
     use crate::workloads::Suite;
+
+    fn cuda_platform() -> crate::platform::PlatformRef {
+        crate::platform::by_name("cuda").unwrap()
+    }
 
     #[test]
     fn more_samples_solve_more() {
         let suite = Suite::sample(8);
         let spec = cuda::h100();
-        let agent = GenerationAgent::new(by_name("deepseek-v3").unwrap(), PlatformKind::Cuda);
+        let agent = GenerationAgent::new(by_name("deepseek-v3").unwrap(), cuda_platform());
         let problems: Vec<&crate::workloads::Problem> = suite.problems.iter().collect();
         let p1 = pass_at_k(&agent, &spec, &problems, 1, 0);
         let p8 = pass_at_k(&agent, &spec, &problems, 8, 0);
@@ -110,7 +114,7 @@ mod tests {
     fn best_is_fastest_correct() {
         let suite = Suite::sample(1);
         let spec = cuda::h100();
-        let agent = GenerationAgent::new(by_name("openai-gpt-5").unwrap(), PlatformKind::Cuda);
+        let agent = GenerationAgent::new(by_name("openai-gpt-5").unwrap(), cuda_platform());
         let mut rng = Pcg::seed(5);
         let r = repeated_sampling(&agent, &spec, &suite.problems[0], None, 6, &mut rng);
         assert_eq!(r.states.len(), 6);
@@ -124,7 +128,7 @@ mod tests {
     fn deterministic() {
         let suite = Suite::sample(1);
         let spec = cuda::h100();
-        let agent = GenerationAgent::new(by_name("claude-opus-4").unwrap(), PlatformKind::Cuda);
+        let agent = GenerationAgent::new(by_name("claude-opus-4").unwrap(), cuda_platform());
         let mut r1 = Pcg::seed(9);
         let mut r2 = Pcg::seed(9);
         let a = repeated_sampling(&agent, &spec, &suite.problems[0], None, 4, &mut r1);

@@ -13,20 +13,17 @@ use crate::kir::rewrite::fusion;
 use crate::kir::Graph;
 use crate::perfsim::lower::lower_with_plan;
 use crate::perfsim::{simulate, Plan, SimResult};
-use crate::platform::{PlatformKind, PlatformSpec};
-use crate::sched::{Schedule, Tile};
+use crate::platform::PlatformSpec;
+use crate::sched::Schedule;
 use crate::util::rng::Pcg;
 
 /// Inductor-style generated-kernel schedule: fused, vectorized, but
 /// generic tiles (codegen does not hit cuBLAS-level tiles on every
-/// shape) and no fast-math by default.
-pub fn inductor_schedule(kind: PlatformKind) -> Schedule {
+/// shape, `PlatformSpec::inductor_tile`) and no fast-math by default.
+pub fn inductor_schedule(spec: &PlatformSpec) -> Schedule {
     Schedule {
         fusion_depth: usize::MAX,
-        tile: match kind {
-            PlatformKind::Cuda => Tile { bm: 64, bn: 64, bk: 32 },
-            PlatformKind::Metal => Tile { bm: 32, bn: 32, bk: 32 },
-        },
+        tile: spec.inductor_tile,
         ept: 4,
         threadgroup: 256,
         fast_math: false,
@@ -44,7 +41,7 @@ pub const GUARD_OVERHEAD_S: f64 = 12.0e-6;
 
 /// Lower a graph the inductor way.
 pub fn plan(g: &Graph, spec: &PlatformSpec) -> Plan {
-    let s = inductor_schedule(spec.kind);
+    let s = inductor_schedule(spec);
     let fplan = fusion::greedy_epilogue(g);
     lower_with_plan(g, &s, &fplan)
 }

@@ -10,20 +10,18 @@ use crate::kir::rewrite::fusion;
 use crate::kir::Graph;
 use crate::perfsim::lower::lower_with_plan;
 use crate::perfsim::{simulate, Plan, SimResult};
-use crate::platform::{PlatformKind, PlatformSpec};
-use crate::sched::{Schedule, Tile};
+use crate::platform::PlatformSpec;
+use crate::sched::Schedule;
 use crate::util::rng::Pcg;
 
 /// The schedule stock vendor kernels effectively run with: decent
-/// tiles and vectorization (cuBLAS/MPS are well tuned per kernel),
-/// no fusion, no graphs, no fast-math.
-pub fn stock_schedule(kind: PlatformKind) -> Schedule {
+/// tiles and vectorization (cuBLAS/MPS/rocBLAS are well tuned per
+/// kernel, `PlatformSpec::stock_tile`), no fusion, no graphs, no
+/// fast-math.
+pub fn stock_schedule(spec: &PlatformSpec) -> Schedule {
     Schedule {
         fusion_depth: 0,
-        tile: match kind {
-            PlatformKind::Cuda => Tile { bm: 128, bn: 128, bk: 32 },
-            PlatformKind::Metal => Tile { bm: 64, bn: 64, bk: 32 },
-        },
+        tile: spec.stock_tile,
         ept: 4,
         threadgroup: 256,
         fast_math: false,
@@ -34,7 +32,7 @@ pub fn stock_schedule(kind: PlatformKind) -> Schedule {
 
 /// Lower a graph the eager way.
 pub fn plan(g: &Graph, spec: &PlatformSpec) -> Plan {
-    let s = stock_schedule(spec.kind);
+    let s = stock_schedule(spec);
     let fplan = fusion::none(g);
     lower_with_plan(g, &s, &fplan)
 }

@@ -15,7 +15,7 @@ use crate::agents::analysis::AnalysisAgent;
 use crate::agents::{GenerationAgent, Persona, Program};
 use crate::baseline::{compilebase, eager};
 use crate::metrics::TaskOutcome;
-use crate::platform::{cuda, metal, PlatformKind, PlatformSpec};
+use crate::platform::{PlatformRef, PlatformSpec};
 use crate::profiler::Profile;
 use crate::util::rng::Pcg;
 use crate::verify::{self, ExecState};
@@ -35,13 +35,15 @@ pub enum BaselineKind {
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub name: String,
-    pub platform: PlatformKind,
+    /// The target platform, resolved through the registry.
+    pub platform: PlatformRef,
     pub personas: Vec<&'static Persona>,
     /// Total iterations (1 = single-shot; the paper uses 5).
     pub iterations: usize,
     /// Feed profiling data through the analysis agent G.
     pub use_profiling: bool,
-    /// Provide CUDA reference implementations (Metal transfer, §6.2).
+    /// Provide CUDA reference implementations (cross-platform transfer,
+    /// §6.2).
     pub use_reference: bool,
     pub baseline: BaselineKind,
     pub seed: u64,
@@ -51,40 +53,43 @@ pub struct ExperimentConfig {
 
 impl ExperimentConfig {
     pub fn spec(&self) -> PlatformSpec {
-        match self.platform {
-            PlatformKind::Cuda => cuda::h100(),
-            PlatformKind::Metal => metal::m4_max(),
+        self.platform.spec().clone()
+    }
+
+    /// The paper's default iterative-refinement configuration on any
+    /// registered platform.
+    pub fn iterative(platform: PlatformRef, personas: Vec<&'static Persona>) -> ExperimentConfig {
+        ExperimentConfig {
+            name: format!("{}_iterative", platform.name()),
+            workers: platform.default_workers(),
+            platform,
+            personas,
+            iterations: 5,
+            use_profiling: false,
+            use_reference: false,
+            baseline: BaselineKind::Eager,
+            seed: 0x5EED,
         }
     }
 
     /// The paper's default CUDA iterative-refinement configuration.
     pub fn cuda_iterative(personas: Vec<&'static Persona>) -> ExperimentConfig {
-        ExperimentConfig {
-            name: "cuda_iterative".into(),
-            platform: PlatformKind::Cuda,
+        let mut cfg = Self::iterative(
+            crate::platform::by_name("cuda").expect("builtin cuda"),
             personas,
-            iterations: 5,
-            use_profiling: false,
-            use_reference: false,
-            baseline: BaselineKind::Eager,
-            seed: 0x5EED,
-            workers: 4,
-        }
+        );
+        cfg.name = "cuda_iterative".into();
+        cfg
     }
 
     /// The paper's default MPS configuration.
     pub fn mps_iterative(personas: Vec<&'static Persona>) -> ExperimentConfig {
-        ExperimentConfig {
-            name: "mps_iterative".into(),
-            platform: PlatformKind::Metal,
+        let mut cfg = Self::iterative(
+            crate::platform::by_name("metal").expect("builtin metal"),
             personas,
-            iterations: 5,
-            use_profiling: false,
-            use_reference: false,
-            baseline: BaselineKind::Eager,
-            seed: 0x5EED,
-            workers: 5,
-        }
+        );
+        cfg.name = "mps_iterative".into();
+        cfg
     }
 }
 
@@ -130,8 +135,8 @@ pub fn run_task(
         cfg.seed ^ crate::util::rng::fnv1a(cfg.name.as_bytes()),
         crate::util::rng::fnv1a(format!("{}::{}", persona.name, problem.id).as_bytes()),
     );
-    let agent = GenerationAgent::new(persona, cfg.platform);
-    let analyst = AnalysisAgent::new(cfg.platform);
+    let agent = GenerationAgent::new(persona, cfg.platform.clone());
+    let analyst = AnalysisAgent::new(cfg.platform.clone());
 
     // baseline measurement (compilation context reset per run — fresh RNG)
     let mut brng = rng.fork("baseline");
@@ -169,7 +174,7 @@ pub fn run_task(
                 if cfg.use_profiling {
                     if let Some(prog) = &candidate {
                         let profile = Profile::from_sim(&problem.id, spec.name, &sim);
-                        last_rec = Some(analyst.recommend(spec, &profile, &prog.schedule));
+                        last_rec = Some(analyst.recommend(&profile, &prog.schedule));
                     }
                 }
                 last_error = None;
@@ -235,12 +240,13 @@ mod tests {
     use super::*;
     use crate::agents::persona::by_name;
     use crate::metrics;
+    use crate::platform::metal;
     use crate::workloads::Level;
 
-    fn small_cfg(platform: PlatformKind, iterations: usize) -> ExperimentConfig {
+    fn small_cfg(platform: &str, iterations: usize) -> ExperimentConfig {
         ExperimentConfig {
             name: "test".into(),
-            platform,
+            platform: crate::platform::by_name(platform).unwrap(),
             personas: vec![by_name("openai-gpt-5").unwrap()],
             iterations,
             use_profiling: false,
@@ -254,7 +260,7 @@ mod tests {
     #[test]
     fn campaign_runs_and_is_deterministic() {
         let suite = Suite::sample(3);
-        let cfg = small_cfg(PlatformKind::Cuda, 2);
+        let cfg = small_cfg("cuda", 2);
         let a = run_campaign(&suite, None, &cfg);
         let b = run_campaign(&suite, None, &cfg);
         assert_eq!(a.results.len(), 9);
@@ -268,8 +274,8 @@ mod tests {
     #[test]
     fn iterations_improve_correctness() {
         let suite = Suite::sample(6);
-        let one = run_campaign(&suite, None, &small_cfg(PlatformKind::Cuda, 1));
-        let five = run_campaign(&suite, None, &small_cfg(PlatformKind::Cuda, 5));
+        let one = run_campaign(&suite, None, &small_cfg("cuda", 1));
+        let five = run_campaign(&suite, None, &small_cfg("cuda", 5));
         let rate = |c: &CampaignResult| {
             let o: Vec<_> = c.results.iter().map(|r| r.outcome).collect();
             metrics::correctness_rate(&o)
@@ -280,7 +286,7 @@ mod tests {
     #[test]
     fn state_census_labels_valid() {
         let suite = Suite::sample(4);
-        let c = run_campaign(&suite, None, &small_cfg(PlatformKind::Metal, 3));
+        let c = run_campaign(&suite, None, &small_cfg("metal", 3));
         for k in c.state_census().keys() {
             assert!(matches!(
                 *k,
@@ -292,7 +298,7 @@ mod tests {
     #[test]
     fn metal_excludes_unsupported() {
         let suite = Suite::full();
-        let mut cfg = small_cfg(PlatformKind::Metal, 1);
+        let mut cfg = small_cfg("metal", 1);
         cfg.personas = vec![by_name("deepseek-v3").unwrap()];
         // run only L1 problems via a sample for speed
         let sample = Suite::sample(40); // 40 L1 includes some conv3dT

@@ -17,7 +17,6 @@ use crate::agents::sampling;
 use crate::agents::GenerationAgent;
 use crate::coordinator::{run_campaign, ExperimentConfig};
 use crate::metrics::{self, TaskOutcome};
-use crate::platform::PlatformKind;
 use crate::util::rng::Pcg;
 use crate::workloads::Suite;
 
@@ -55,7 +54,8 @@ pub fn run(scale: Scale) -> (Ablation, String) {
     ));
 
     // repeated sampling: 5 independent samples, keep fastest correct
-    let agent = GenerationAgent::new(persona, PlatformKind::Cuda);
+    let agent =
+        GenerationAgent::new(persona, crate::platform::by_name("cuda").expect("builtin cuda"));
     let sampled: Vec<TaskOutcome> = suite
         .problems
         .iter()

@@ -9,7 +9,7 @@ use super::render;
 use crate::baseline::eager;
 use crate::kir::rewrite::{algebraic, constant_fold, cse};
 use crate::perfsim::{lower, simulate};
-use crate::platform::{metal, PlatformKind};
+use crate::platform::metal;
 use crate::sched::Schedule;
 use crate::util::rng::Pcg;
 use crate::workloads::Suite;
@@ -34,7 +34,7 @@ pub fn run() -> (CaseStudies, String) {
     // §7.2 — swish: naive (stock eager) vs tuned schedule
     let swish = suite.get("l1_act_swish_0").expect("swish problem");
     let eager_sim = eager::measure(&swish.perf_graph, &spec, &mut rng);
-    let tuned = Schedule::expert_for(PlatformKind::Metal);
+    let tuned = Schedule::expert_for(&spec);
     let plan = lower::lower(&swish.perf_graph, &tuned);
     let tuned_sim = simulate(&spec, &plan, &mut rng, 100, 10);
     let swish_speedup = eager_sim.measured_s / tuned_sim.measured_s;
@@ -66,7 +66,7 @@ pub fn run() -> (CaseStudies, String) {
     let p12 = suite.get("l2_012_reduction_chain").unwrap();
     let base12 = eager::measure(&p12.perf_graph, &spec, &mut rng);
     let reduced = algebraic::reduce_matmul_chains(&cse::eliminate(&p12.perf_graph));
-    let red_sched = Schedule::expert_for(PlatformKind::Metal);
+    let red_sched = Schedule::expert_for(&spec);
     let red_sim = simulate(
         &spec,
         &lower::lower(&reduced, &red_sched),

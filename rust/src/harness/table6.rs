@@ -8,7 +8,7 @@ use super::render;
 use crate::agents::persona::by_name;
 use crate::agents::GenerationAgent;
 use crate::baseline::{compilebase, eager};
-use crate::platform::{cuda, PlatformKind};
+use crate::platform::cuda;
 use crate::util::rng::Pcg;
 use crate::verify;
 use crate::workloads::level3;
@@ -44,7 +44,8 @@ pub const GEN_BATCH: usize = 16;
 fn synthesize_best(name: &str, ctor: fn(usize) -> crate::kir::Graph, rng: &mut Pcg) -> crate::sched::Schedule {
     let spec = cuda::h100();
     let persona = by_name("openai-gpt-5").unwrap();
-    let agent = GenerationAgent::new(persona, PlatformKind::Cuda);
+    let agent =
+        GenerationAgent::new(persona, crate::platform::by_name("cuda").expect("builtin cuda"));
     let problem = problem_for(name, ctor, GEN_BATCH);
     let mut best: Option<(f64, crate::sched::Schedule)> = None;
     let mut current = None;

@@ -15,19 +15,26 @@
 //!
 //! Module map:
 //! - [`util`] — seeded PRNG, JSON/CSV writers, stats, timing (offline
-//!   build: no external crates beyond `xla`/`anyhow`).
+//!   build: the only external crate is a vendored `anyhow` shim).
 //! - [`tensor`] — f32 ndarray + reference CPU ops (ground truth).
 //! - [`kir`] — the Kernel IR candidate programs are expressed in:
 //!   typed graphs, shape inference, validation, interpreter, rewrites.
 //! - [`sched`] — the schedule space (tiling, elements-per-thread, …).
-//! - [`platform`] — CUDA-like (H100) and Metal-like (M4 Max) specs.
+//! - [`platform`] — the open platform plugin API: a `Platform` trait +
+//!   name registry over data-driven `PlatformSpec`s.  Built-ins: CUDA
+//!   (H100), Metal (M4 Max), ROCm (MI300X).  Adding an accelerator is
+//!   a one-module change; no other module branches on the platform.
 //! - [`perfsim`] — roofline/launch/occupancy device simulator.
-//! - [`profiler`] — nsys-like CSV and Xcode-like screenshot profilers.
+//! - [`profiler`] — nsys/rocprof-like CSV and Xcode-like screenshot
+//!   profiler frontends, chosen per platform spec.
 //! - [`baseline`] — PyTorch-eager and torch.compile analogs.
-//! - [`agents`] — personas, generation agent F, analysis agent G.
+//! - [`agents`] — personas (per-platform calibration with a principled
+//!   fallback for unseen platforms), generation agent F, analysis
+//!   agent G.
 //! - [`verify`] — the 5-state verification pipeline (§3.3).
 //! - [`workloads`] — the 250-problem KernelBench-KIR suite.
-//! - [`runtime`] — PJRT artifact loading/execution (real numerics).
+//! - [`runtime`] — PJRT artifact loading/execution (real numerics;
+//!   behind the `pjrt` cargo feature, stubbed otherwise).
 //! - [`coordinator`] — job queue, device-worker pool, experiments.
 //! - [`metrics`] — fast_p and friends.
 //! - [`harness`] — regenerates every paper table and figure.

@@ -1,20 +1,25 @@
 //! KForge CLI — the leader entrypoint.
 //!
 //! ```text
-//! kforge suite                      # Table 2 + suite census
-//! kforge run --problem <id> --model <persona> [--platform cuda|metal]
+//! kforge suite                      # Table 2 + suite census, per platform
+//! kforge run --problem <id> --model <persona> [--platform <name>]
 //!                                   # one iterative-refinement job, verbose
+//! kforge platforms                  # list the registered platforms
 //! kforge bench <fig2|fig3|fig4|table2|table4|table5|table6|cases|all>
 //!              [--quick N] [--out DIR]
 //! kforge serve [--artifacts DIR]    # PJRT request loop over real artifacts
-//! kforge personas                   # list the 8 calibrated personas
+//! kforge personas                   # the 8 calibrated personas, per platform
 //! ```
+//!
+//! `--platform` accepts any name or alias registered in
+//! `kforge::platform::registry()` — adding a platform module makes it
+//! addressable here with no CLI changes.
 
 use anyhow::{bail, Context, Result};
 use kforge::agents::persona::{by_name, PERSONAS};
 use kforge::coordinator::ExperimentConfig;
 use kforge::harness::{self, Scale};
-use kforge::platform::PlatformKind;
+use kforge::platform::{registry, PlatformRef};
 use kforge::workloads::Suite;
 
 fn main() {
@@ -32,17 +37,30 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
+/// Resolve `--platform` through the registry (default: cuda).  Unknown
+/// names produce an error listing everything registered.
+fn platform_arg(args: &[String]) -> Result<PlatformRef> {
+    match flag_value(args, "--platform") {
+        Some(name) => kforge::platform::by_name(name),
+        None => kforge::platform::by_name("cuda"),
+    }
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("suite") => cmd_suite(),
         Some("personas") => cmd_personas(),
+        Some("platforms") => cmd_platforms(),
         Some("run") => cmd_run(args),
         Some("bench") => cmd_bench(args),
         Some("serve") => cmd_serve(args),
-        Some(other) => bail!("unknown command {other:?}; try: suite, personas, run, bench, serve"),
+        Some(other) => {
+            bail!("unknown command {other:?}; try: suite, personas, platforms, run, bench, serve")
+        }
         None => {
             println!("kforge — program synthesis for diverse AI hardware accelerators");
-            println!("commands: suite | personas | run | bench | serve");
+            println!("commands: suite | personas | platforms | run | bench | serve");
+            println!("registered platforms: {}", registry().describe());
             Ok(())
         }
     }
@@ -60,49 +78,80 @@ fn cmd_suite() -> Result<()> {
     Ok(())
 }
 
-fn cmd_personas() -> Result<()> {
+fn cmd_platforms() -> Result<()> {
     println!(
-        "{:<18} {:>9} {:>28} {:>28}",
-        "model", "reasoning", "single-shot cuda L1/L2/L3", "single-shot metal L1/L2/L3"
+        "{:<8} {:<10} {:<28} {:>10} {:>9} {:>8} {:<8}",
+        "name", "language", "device", "mem GB/s", "simd", "workers", "profiler"
     );
-    for p in PERSONAS {
+    for p in registry().platforms() {
+        let s = p.spec();
         println!(
-            "{:<18} {:>9} {:>10.2}/{:.2}/{:.2} {:>13.2}/{:.2}/{:.2}",
-            p.name,
-            p.reasoning,
-            p.single_shot[0][0],
-            p.single_shot[0][1],
-            p.single_shot[0][2],
-            p.single_shot[1][0],
-            p.single_shot[1][1],
-            p.single_shot[1][2],
+            "{:<8} {:<10} {:<28} {:>10.0} {:>9} {:>8} {:<8?}",
+            p.name(),
+            p.language(),
+            s.name,
+            s.mem_bw / 1e9,
+            s.simd_width,
+            p.default_workers(),
+            s.profiler,
         );
+        if !p.aliases().is_empty() {
+            println!("         aliases: {}", p.aliases().join(", "));
+        }
     }
+    Ok(())
+}
+
+fn cmd_personas() -> Result<()> {
+    // one single-shot column block per registered platform — platforms
+    // without dedicated calibration rows (e.g. rocm) show their
+    // fallback-derived prior
+    let platforms = registry().platforms();
+    print!("{:<18} {:>9}", "model", "reasoning");
+    for p in platforms {
+        // data cells below render at width 24: {:>14.2} + two "/x.xx"
+        print!(" {:>24}", format!("{} L1/L2/L3", p.name()));
+    }
+    println!();
+    for persona in PERSONAS {
+        print!("{:<18} {:>9}", persona.name, persona.reasoning);
+        for p in platforms {
+            let row = persona.single_shot(&**p);
+            print!(" {:>14.2}/{:.2}/{:.2}", row[0], row[1], row[2]);
+        }
+        println!();
+    }
+    println!("\n(platforms without dedicated calibration fall back per their declared prior)");
     Ok(())
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
     let problem_id = flag_value(args, "--problem").context("--problem <id> required")?;
     let model = flag_value(args, "--model").unwrap_or("openai-gpt-5");
-    let platform = match flag_value(args, "--platform").unwrap_or("cuda") {
-        "cuda" => PlatformKind::Cuda,
-        "metal" | "mps" => PlatformKind::Metal,
-        other => bail!("unknown platform {other}"),
-    };
+    let platform = platform_arg(args)?;
     let persona = by_name(model).with_context(|| format!("unknown persona {model}"))?;
     let suite = Suite::full();
     let problem = suite
         .get(problem_id)
         .with_context(|| format!("unknown problem {problem_id}"))?;
+    if !problem.supported_on(platform.spec()) {
+        bail!(
+            "problem {problem_id} uses ops unsupported on {} ({:?})",
+            platform.name(),
+            platform.spec().unsupported_ops
+        );
+    }
 
-    let mut cfg = match platform {
-        PlatformKind::Cuda => ExperimentConfig::cuda_iterative(vec![persona]),
-        PlatformKind::Metal => ExperimentConfig::mps_iterative(vec![persona]),
-    };
+    let mut cfg = ExperimentConfig::iterative(platform.clone(), vec![persona]);
     cfg.use_profiling = true;
     let spec = cfg.spec();
     println!("problem: {problem_id} ({})", problem.level.name());
-    println!("persona: {} on {}", persona.name, spec.name);
+    println!(
+        "persona: {} on {} [{}]",
+        persona.name,
+        spec.name,
+        platform.name()
+    );
     println!("reference graph:\n{}", problem.eval_graph.render());
     let result = kforge::coordinator::experiment::run_task(&cfg, &spec, persona, problem, None);
     println!("iteration states: {:?}", result.state_history);

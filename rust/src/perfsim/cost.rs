@@ -24,12 +24,10 @@ pub struct KernelCost {
 
 /// Matmul-engine utilization as a function of tile size: small tiles
 /// starve the MM pipe (low data reuse), oversized tiles lose occupancy.
-/// Peaks near the platform's sweet spot (128 on H100, 64 on M-series).
+/// Peaks near the platform's sweet spot (`PlatformSpec::tile_sweet_spot`:
+/// 128 on H100 and MI300X, 64 on M-series).
 fn tile_utilization(spec: &PlatformSpec, s: &Schedule) -> f64 {
-    let sweet = match spec.kind {
-        crate::platform::PlatformKind::Cuda => 128.0,
-        crate::platform::PlatformKind::Metal => 64.0,
-    };
+    let sweet = spec.tile_sweet_spot;
     let t = s.tile.bm.min(s.tile.bn) as f64;
     // reuse grows ~ t/sweet up to 1; bk adds pipeline efficiency
     let reuse = (t / sweet).min(1.0);
@@ -124,23 +122,27 @@ pub fn kernel_cost(spec: &PlatformSpec, s: &Schedule, k: &KernelLaunch) -> Kerne
     }
 }
 
-/// Launch cost for a whole plan: with CUDA graphs the per-dispatch
-/// overhead is paid once per *graph* launch instead of per kernel.
+/// Launch cost for a whole plan: with the launch-consolidation lever
+/// on, the per-dispatch overhead amortizes the way the platform's
+/// mechanism dictates (`PlatformSpec::launch_amortization`).
 pub fn launch_cost(spec: &PlatformSpec, s: &Schedule, n_kernels: usize) -> f64 {
+    use crate::platform::LaunchAmortization;
     if n_kernels == 0 {
         return 0.0;
     }
-    match (s.use_graphs, spec.kind) {
-        // one graph launch + tiny per-node replay cost
-        (true, crate::platform::PlatformKind::Cuda) => {
-            spec.launch_overhead + n_kernels as f64 * 0.3e-6
+    if !s.use_graphs {
+        return n_kernels as f64 * (spec.launch_overhead + spec.dispatch_overhead);
+    }
+    match spec.launch_amortization {
+        // one graph launch + tiny per-node replay cost (CUDA/HIP graphs)
+        LaunchAmortization::DeviceGraphs { replay_per_node_s } => {
+            spec.launch_overhead + n_kernels as f64 * replay_per_node_s
         }
         // cached pipeline state / command-queue reuse (§7.2): the
         // encoder setup cost drops away, dispatch remains
-        (true, crate::platform::PlatformKind::Metal) => {
-            n_kernels as f64 * (0.35 * spec.launch_overhead)
+        LaunchAmortization::PipelineCache { dispatch_factor } => {
+            n_kernels as f64 * (dispatch_factor * spec.launch_overhead)
         }
-        (false, _) => n_kernels as f64 * (spec.launch_overhead + spec.dispatch_overhead),
     }
 }
 

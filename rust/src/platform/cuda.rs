@@ -1,12 +1,15 @@
-//! CUDA-like platform: NVIDIA H100 SXM5 constants (the paper's testbed:
+//! CUDA platform: NVIDIA H100 SXM5 constants (the paper's testbed:
 //! 4× H100 SXM5, 80GB HBM3, 3.35 TB/s — §4.3).
 
-use super::spec::{PlatformKind, PlatformSpec, ProfilerAccess};
+use super::spec::{LaunchAmortization, PlatformSpec, ProfilerAccess};
+use super::Platform;
+use crate::sched::schedule::Tile;
 
 /// H100 SXM5 device model.
 pub fn h100() -> PlatformSpec {
     PlatformSpec {
-        kind: PlatformKind::Cuda,
+        platform_id: "cuda",
+        language: "CUDA",
         name: "NVIDIA H100 SXM5 80GB",
         // 132 SMs * 128 fp32 lanes * 2 flop * ~1.8GHz ≈ 60 TFLOP/s
         peak_flops_f32: 60e12,
@@ -27,8 +30,55 @@ pub fn h100() -> PlatformSpec {
         // staging still crosses PCIe)
         h2d_bw: 64e9,
         profiler: ProfilerAccess::ProgrammaticCsv,
+        // CUDA graphs: one launch + tiny per-node replay cost
+        launch_amortization: LaunchAmortization::DeviceGraphs {
+            replay_per_node_s: 0.3e-6,
+        },
+        tile_sweet_spot: 128.0,
+        expert_tile: Tile { bm: 128, bn: 128, bk: 64 },
+        stock_tile: Tile { bm: 128, bn: 128, bk: 32 },
+        inductor_tile: Tile { bm: 64, bn: 64, bk: 32 },
         noise_sigma: 0.04,
         unsupported_ops: &[],
+    }
+}
+
+/// The CUDA platform plugin.
+#[derive(Debug)]
+pub struct CudaPlatform {
+    spec: PlatformSpec,
+}
+
+impl CudaPlatform {
+    pub fn new() -> CudaPlatform {
+        CudaPlatform { spec: h100() }
+    }
+}
+
+impl Default for CudaPlatform {
+    fn default() -> Self {
+        CudaPlatform::new()
+    }
+}
+
+impl Platform for CudaPlatform {
+    fn spec(&self) -> &PlatformSpec {
+        &self.spec
+    }
+
+    /// The paper's CUDA testbed: 4 H100s, one kernel per GPU at a time.
+    fn default_workers(&self) -> usize {
+        4
+    }
+
+    /// On CUDA the reference corpus *is* CUDA code — providing it is
+    /// not a cross-platform transfer, so no ref-effect applies (§6.2).
+    fn reference_transfer(&self) -> bool {
+        false
+    }
+
+    fn calibration_fallback(&self) -> (&'static str, f64) {
+        ("cuda", 1.0)
     }
 }
 
@@ -39,9 +89,14 @@ mod tests {
     #[test]
     fn h100_headlines() {
         let s = h100();
-        assert_eq!(s.kind, PlatformKind::Cuda);
+        assert_eq!(s.platform_id, "cuda");
         assert!((s.mem_bw - 3.35e12).abs() < 1e9);
         assert!(s.peak_flops_mm > s.peak_flops_f32);
         assert_eq!(s.max_threadgroup, 1024);
+    }
+
+    #[test]
+    fn cuda_reference_is_not_a_transfer() {
+        assert!(!CudaPlatform::new().reference_transfer());
     }
 }

@@ -1,12 +1,15 @@
-//! Metal-like platform: Apple M4 Max constants (the paper's testbed:
+//! Metal platform: Apple M4 Max constants (the paper's testbed:
 //! 5× Mac Studio, 14-core CPU / 32-core GPU / 36GB unified — §4.3).
 
-use super::spec::{PlatformKind, PlatformSpec, ProfilerAccess};
+use super::spec::{LaunchAmortization, PlatformSpec, ProfilerAccess};
+use super::Platform;
+use crate::sched::schedule::Tile;
 
 /// M4 Max (32-core GPU) device model.
 pub fn m4_max() -> PlatformSpec {
     PlatformSpec {
-        kind: PlatformKind::Metal,
+        platform_id: "metal",
+        language: "Metal",
         name: "Apple M4 Max (32-core GPU)",
         // 32 cores * 128 ALUs * 2 flop * ~1.6GHz ≈ 13 TFLOP/s fp32
         peak_flops_f32: 13e12,
@@ -27,10 +30,52 @@ pub fn m4_max() -> PlatformSpec {
         unified_memory: true,
         h2d_bw: f64::INFINITY,
         profiler: ProfilerAccess::GuiScreenshot,
+        // no command graphs on Metal: the launch-amortization lever is
+        // cached pipeline state + command-queue reuse (§7.2's listing)
+        launch_amortization: LaunchAmortization::PipelineCache {
+            dispatch_factor: 0.35,
+        },
+        tile_sweet_spot: 64.0,
+        expert_tile: Tile { bm: 64, bn: 64, bk: 32 },
+        stock_tile: Tile { bm: 64, bn: 64, bk: 32 },
+        inductor_tile: Tile { bm: 32, bn: 32, bk: 32 },
         // the paper reports higher variance on MPS measurements
         noise_sigma: 0.07,
         // PyTorch 2.7 MPS gaps (§4.1): Conv3D-transpose, 3-D pooling
         unsupported_ops: &["conv3d_transpose", "avgpool3d", "maxpool3d"],
+    }
+}
+
+/// The Metal platform plugin.
+#[derive(Debug)]
+pub struct MetalPlatform {
+    spec: PlatformSpec,
+}
+
+impl MetalPlatform {
+    pub fn new() -> MetalPlatform {
+        MetalPlatform { spec: m4_max() }
+    }
+}
+
+impl Default for MetalPlatform {
+    fn default() -> Self {
+        MetalPlatform::new()
+    }
+}
+
+impl Platform for MetalPlatform {
+    fn spec(&self) -> &PlatformSpec {
+        &self.spec
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["mps"]
+    }
+
+    /// The paper's Metal testbed: 5 Mac Studio nodes.
+    fn default_workers(&self) -> usize {
+        5
     }
 }
 
@@ -41,7 +86,7 @@ mod tests {
     #[test]
     fn m4_headlines() {
         let s = m4_max();
-        assert_eq!(s.kind, PlatformKind::Metal);
+        assert_eq!(s.platform_id, "metal");
         assert!(s.unified_memory);
         assert!(s.launch_overhead > 1e-5);
         assert_eq!(s.unsupported_ops.len(), 3);

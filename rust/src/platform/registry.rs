@@ -1,0 +1,167 @@
+//! Name → platform lookup.
+//!
+//! The process-wide [`registry`] holds the built-in platforms (cuda,
+//! metal, rocm).  [`PlatformRegistry`] is also constructible standalone
+//! so embedders (and tests) can register additional targets without
+//! touching the built-in set.
+
+use super::{Platform, PlatformRef};
+use anyhow::{bail, Result};
+use std::sync::{Arc, OnceLock};
+
+/// An ordered collection of platforms, addressable by name or alias.
+#[derive(Debug, Default)]
+pub struct PlatformRegistry {
+    platforms: Vec<PlatformRef>,
+}
+
+impl PlatformRegistry {
+    /// An empty registry.
+    pub fn new() -> PlatformRegistry {
+        PlatformRegistry::default()
+    }
+
+    /// Register a platform.  Names and aliases must not collide with
+    /// anything already registered.
+    pub fn register(&mut self, platform: PlatformRef) -> Result<()> {
+        for taken in self.platforms.iter() {
+            let mut claimed = vec![taken.name()];
+            claimed.extend(taken.aliases());
+            for id in std::iter::once(platform.name()).chain(platform.aliases().iter().copied()) {
+                if claimed.contains(&id) {
+                    bail!(
+                        "platform name {id:?} already registered (by {:?})",
+                        taken.name()
+                    );
+                }
+            }
+        }
+        self.platforms.push(platform);
+        Ok(())
+    }
+
+    /// Look up a platform by name or alias.  Unknown names are an
+    /// error (never a panic) listing everything registered.
+    pub fn get(&self, name: &str) -> Result<PlatformRef> {
+        for p in &self.platforms {
+            if p.name() == name || p.aliases().contains(&name) {
+                return Ok(p.clone());
+            }
+        }
+        bail!(
+            "unknown platform {name:?}; registered platforms: {}",
+            self.describe()
+        )
+    }
+
+    /// All registered platforms, in registration order.
+    pub fn platforms(&self) -> &[PlatformRef] {
+        &self.platforms
+    }
+
+    /// Registered primary names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.platforms.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.platforms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.platforms.is_empty()
+    }
+
+    /// Human-readable listing: `cuda, metal (aka mps), rocm (aka hip)`.
+    pub fn describe(&self) -> String {
+        self.platforms
+            .iter()
+            .map(|p| {
+                if p.aliases().is_empty() {
+                    p.name().to_string()
+                } else {
+                    format!("{} (aka {})", p.name(), p.aliases().join(", "))
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// The process-wide registry of built-in platforms.
+pub fn registry() -> &'static PlatformRegistry {
+    static REGISTRY: OnceLock<PlatformRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut r = PlatformRegistry::new();
+        r.register(Arc::new(super::cuda::CudaPlatform::new()))
+            .expect("builtin cuda registers");
+        r.register(Arc::new(super::metal::MetalPlatform::new()))
+            .expect("builtin metal registers");
+        r.register(Arc::new(super::rocm::RocmPlatform::new()))
+            .expect("builtin rocm registers");
+        r
+    })
+}
+
+/// Look up a built-in platform by name or alias.
+pub fn by_name(name: &str) -> Result<PlatformRef> {
+    registry().get(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformSpec;
+
+    #[test]
+    fn builtins_resolve_by_name_and_alias() {
+        assert_eq!(by_name("cuda").unwrap().name(), "cuda");
+        assert_eq!(by_name("metal").unwrap().name(), "metal");
+        assert_eq!(by_name("mps").unwrap().name(), "metal");
+        assert_eq!(by_name("rocm").unwrap().name(), "rocm");
+        assert_eq!(by_name("hip").unwrap().name(), "rocm");
+        assert!(registry().len() >= 3);
+    }
+
+    #[test]
+    fn unknown_platform_is_error_not_panic() {
+        let err = by_name("tpu").unwrap_err().to_string();
+        assert!(err.contains("unknown platform"), "{err}");
+        assert!(err.contains("cuda"), "error should list platforms: {err}");
+        assert!(err.contains("rocm"), "error should list platforms: {err}");
+    }
+
+    #[derive(Debug)]
+    struct FakePlatform {
+        spec: PlatformSpec,
+    }
+
+    impl crate::platform::Platform for FakePlatform {
+        fn spec(&self) -> &PlatformSpec {
+            &self.spec
+        }
+
+        fn aliases(&self) -> &'static [&'static str] {
+            &["fake2"]
+        }
+    }
+
+    fn fake(id: &'static str) -> PlatformRef {
+        let mut spec = crate::platform::cuda::h100();
+        spec.platform_id = id;
+        Arc::new(FakePlatform { spec })
+    }
+
+    #[test]
+    fn standalone_registry_registers_and_rejects_duplicates() {
+        let mut r = PlatformRegistry::new();
+        r.register(fake("fake")).unwrap();
+        assert_eq!(r.get("fake").unwrap().name(), "fake");
+        assert_eq!(r.get("fake2").unwrap().name(), "fake");
+        // same name again → error
+        assert!(r.register(fake("fake")).is_err());
+        // alias collision → error
+        assert!(r.register(fake("fake2")).is_err());
+        assert_eq!(r.names(), vec!["fake"]);
+    }
+}

@@ -1,0 +1,141 @@
+//! ROCm platform: AMD Instinct MI300X constants (CDNA3).
+//!
+//! This module is the proof that the platform API is open: a third
+//! accelerator landed **entirely here** — spec + `Platform` impl +
+//! one registration line in [`super::registry`] — with no match arms
+//! or special cases anywhere else in the codebase.
+//!
+//! The interesting contrasts with the built-in pair:
+//! - discrete HBM3 memory like CUDA, but 64-wide wavefronts (CDNA)
+//!   instead of 32-wide warps — the legality checks and schedule
+//!   samplers pick this up from `simd_width` alone;
+//! - programmatic profiling like CUDA (`rocprof` emits CSV), so the
+//!   analysis agent runs the lossless-CSV path, not screen-scraping;
+//! - hipGraph launch amortization (the HIP port of CUDA graphs) with a
+//!   slightly heavier per-node replay;
+//! - its own unsupported-op list (MIOpen's transposed-3D-conv gap);
+//! - **no dedicated persona calibration rows**: personas fall back to
+//!   their CUDA calibration with a failure-rate haircut — the paper's
+//!   "single-shot example is enough to target a new platform" story.
+
+use super::spec::{LaunchAmortization, PlatformSpec, ProfilerAccess};
+use super::Platform;
+use crate::sched::schedule::Tile;
+
+/// MI300X (304 CU, 192GB HBM3) device model.
+pub fn mi300x() -> PlatformSpec {
+    PlatformSpec {
+        platform_id: "rocm",
+        language: "HIP",
+        name: "AMD Instinct MI300X 192GB",
+        // 304 CUs * 128 fp32 lanes * 2 flop * ~2.1GHz ≈ 163 TFLOP/s
+        peak_flops_f32: 163e12,
+        // matrix-core TF32 throughput (dense) ≈ 654 TFLOP/s
+        peak_flops_mm: 654e12,
+        // 5.3 TB/s HBM3
+        mem_bw: 5.3e12,
+        // HIP kernel launch runs a little heavier than CUDA's
+        launch_overhead: 6.0e-6,
+        dispatch_overhead: 2.0e-6,
+        // 64 KB LDS per workgroup
+        onchip_bytes: 64 * 1024,
+        max_threadgroup: 1024,
+        // CDNA wavefront
+        simd_width: 64,
+        num_cores: 304,
+        unified_memory: false,
+        // PCIe Gen5 x16 host staging
+        h2d_bw: 64e9,
+        // rocprof emits machine-readable CSV, same class as nsys
+        profiler: ProfilerAccess::ProgrammaticCsv,
+        // hipGraph: CUDA-graphs port, slightly costlier replay
+        launch_amortization: LaunchAmortization::DeviceGraphs {
+            replay_per_node_s: 0.5e-6,
+        },
+        tile_sweet_spot: 128.0,
+        // 64 KB LDS caps the tile below the H100 point: 64x64x64 is
+        // the largest Tile::CHOICES entry that fits (48 KB)
+        expert_tile: Tile { bm: 64, bn: 64, bk: 64 },
+        stock_tile: Tile { bm: 64, bn: 64, bk: 32 },
+        inductor_tile: Tile { bm: 64, bn: 64, bk: 32 },
+        noise_sigma: 0.05,
+        // MIOpen gap: transposed 3-D convolution falls back to host
+        unsupported_ops: &["conv3d_transpose"],
+    }
+}
+
+/// The ROCm platform plugin.
+#[derive(Debug)]
+pub struct RocmPlatform {
+    spec: PlatformSpec,
+}
+
+impl RocmPlatform {
+    pub fn new() -> RocmPlatform {
+        RocmPlatform { spec: mi300x() }
+    }
+}
+
+impl Default for RocmPlatform {
+    fn default() -> Self {
+        RocmPlatform::new()
+    }
+}
+
+impl Platform for RocmPlatform {
+    fn spec(&self) -> &PlatformSpec {
+        &self.spec
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["hip", "mi300"]
+    }
+
+    /// One 8-GPU MI300X node, one kernel per GPU at a time.
+    fn default_workers(&self) -> usize {
+        8
+    }
+
+    /// HIP is close enough to CUDA that persona priors transfer with a
+    /// mild haircut: same row, failure rate inflated 15%.
+    fn calibration_fallback(&self) -> (&'static str, f64) {
+        ("cuda", 1.15)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{by_name, cuda};
+
+    #[test]
+    fn mi300x_headlines() {
+        let s = mi300x();
+        assert_eq!(s.platform_id, "rocm");
+        assert_eq!(s.simd_width, 64);
+        assert!(!s.unified_memory);
+        assert_eq!(s.profiler, ProfilerAccess::ProgrammaticCsv);
+        assert!(s.mem_bw > cuda::h100().mem_bw);
+        assert!(!s.supports("conv3d_transpose"));
+        assert!(s.supports("maxpool3d"));
+    }
+
+    #[test]
+    fn expert_tile_fits_lds() {
+        let s = mi300x();
+        assert!(s.expert_tile.onchip_bytes() <= s.onchip_bytes);
+    }
+
+    #[test]
+    fn registered_with_aliases() {
+        assert_eq!(by_name("hip").unwrap().name(), "rocm");
+        assert_eq!(by_name("mi300").unwrap().name(), "rocm");
+    }
+
+    #[test]
+    fn falls_back_to_cuda_calibration() {
+        let (fallback, factor) = RocmPlatform::new().calibration_fallback();
+        assert_eq!(fallback, "cuda");
+        assert!(factor > 1.0);
+    }
+}

@@ -1,30 +1,13 @@
-//! Platform specification: the device constants the simulator and the
-//! legality checks consume.
+//! Platform specification: the device constants the simulator, the
+//! legality checks, the baselines and the cost model consume.
+//!
+//! A [`PlatformSpec`] is fully data-driven: everything that used to be
+//! pattern-matched on a closed platform enum (tile sweet spots, launch
+//! amortization behavior, baseline tiles, prompt language) is a field
+//! here, so a new accelerator is described entirely by its own module
+//! (see [`super::rocm`]) with no match arms anywhere else.
 
-/// Which platform family.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum PlatformKind {
-    Cuda,
-    Metal,
-}
-
-impl PlatformKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            PlatformKind::Cuda => "cuda",
-            PlatformKind::Metal => "metal",
-        }
-    }
-
-    /// The accelerator-language name used in prompts (Listing 1's
-    /// `{{ accelerator }}` substitution).
-    pub fn language(&self) -> &'static str {
-        match self {
-            PlatformKind::Cuda => "CUDA",
-            PlatformKind::Metal => "Metal",
-        }
-    }
-}
+use crate::sched::schedule::Tile;
 
 /// How profiling data can be obtained on this platform — the central
 /// asymmetry of the paper (§6.3): CUDA has programmatic APIs (nsys
@@ -32,20 +15,48 @@ impl PlatformKind {
 /// with cliclick and screenshots.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ProfilerAccess {
-    /// Structured CSV reports, machine-readable.
+    /// Structured CSV reports, machine-readable (nsys, rocprof).
     ProgrammaticCsv,
     /// Rendered screenshots of GUI views; must be parsed visually.
     GuiScreenshot,
 }
 
+/// How launch overhead amortizes when the schedule's launch-
+/// consolidation lever (`Schedule::use_graphs`) is on.  This is the
+/// platform-specific mechanism behind the §5.1 / §7.2 optimizations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LaunchAmortization {
+    /// Device command graphs (CUDA graphs, hipGraph): the whole kernel
+    /// sequence is captured and replayed with one launch plus a tiny
+    /// per-node replay cost.
+    DeviceGraphs {
+        /// Per-node replay cost (seconds) inside a captured graph.
+        replay_per_node_s: f64,
+    },
+    /// Cached pipeline state / command-queue reuse (Metal, §7.2's
+    /// thread-local caching listing): encoder setup drops away and each
+    /// dispatch pays a fraction of the full launch overhead.
+    PipelineCache {
+        /// Fraction of `launch_overhead` still paid per dispatch.
+        dispatch_factor: f64,
+    },
+}
+
 /// Device constants.  All rates in SI (bytes/s, flop/s, seconds).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlatformSpec {
-    pub kind: PlatformKind,
+    /// Stable lowercase identifier ("cuda", "metal", "rocm", …) used by
+    /// the CLI, the registry, persona calibration rows and run logs.
+    pub platform_id: &'static str,
+    /// The accelerator-language name used in prompts (Listing 1's
+    /// `{{ accelerator }}` substitution).
+    pub language: &'static str,
+    /// Human-readable device name.
     pub name: &'static str,
     /// Peak f32 compute (FLOP/s) through the vector units.
     pub peak_flops_f32: f64,
-    /// Peak matmul-engine compute (FLOP/s) — tensor core / simdgroup-mm.
+    /// Peak matmul-engine compute (FLOP/s) — tensor core / simdgroup-mm
+    /// / matrix core.
     pub peak_flops_mm: f64,
     /// HBM / unified-memory bandwidth (bytes/s).
     pub mem_bw: f64,
@@ -55,13 +66,15 @@ pub struct PlatformSpec {
     /// Extra per-dispatch overhead the runtime pays when the command
     /// stream isn't consolidated (graphs amortize this on CUDA).
     pub dispatch_overhead: f64,
-    /// On-chip memory per threadgroup (shared mem / threadgroup mem).
+    /// On-chip memory per threadgroup (shared mem / threadgroup mem /
+    /// LDS).
     pub onchip_bytes: usize,
     /// Max threads per threadgroup.
     pub max_threadgroup: usize,
-    /// Execution-unit width (warp = 32 on CUDA, SIMD-group = 32 on Metal).
+    /// Execution-unit width (warp = 32 on CUDA, SIMD-group = 32 on
+    /// Metal, wavefront = 64 on CDNA).
     pub simd_width: usize,
-    /// Number of SMs / GPU cores (occupancy granularity).
+    /// Number of SMs / GPU cores / CUs (occupancy granularity).
     pub num_cores: usize,
     /// Unified memory (no explicit H2D/D2H transfer cost).
     pub unified_memory: bool,
@@ -69,6 +82,19 @@ pub struct PlatformSpec {
     pub h2d_bw: f64,
     /// How profiles are accessed on this platform.
     pub profiler: ProfilerAccess,
+    /// How launch overhead amortizes under the `use_graphs` lever.
+    pub launch_amortization: LaunchAmortization,
+    /// Matmul tile edge (elements) at which the MM engine saturates —
+    /// the cost model's tile-utilization sweet spot.
+    pub tile_sweet_spot: f64,
+    /// The tile an expert (or a converged refinement loop) lands on;
+    /// must fit `onchip_bytes`.
+    pub expert_tile: Tile,
+    /// The tile stock vendor kernels effectively run with (cuBLAS /
+    /// MPS / rocBLAS are well tuned per kernel).
+    pub stock_tile: Tile,
+    /// The generic tile an inductor-style compiler backend emits.
+    pub inductor_tile: Tile,
     /// Measurement noise sigma (log-space) for simulated timings; the
     /// paper notes small-shape measurements carry irreducible noise.
     pub noise_sigma: f64,
@@ -130,4 +156,18 @@ mod tests {
         assert!(m.supports("matmul"));
         assert!(cuda::h100().supports("conv3d_transpose"));
     }
+
+    #[test]
+    fn expert_tiles_fit_onchip_memory() {
+        for spec in [cuda::h100(), metal::m4_max(), crate::platform::rocm::mi300x()] {
+            assert!(
+                spec.expert_tile.onchip_bytes() <= spec.onchip_bytes,
+                "{}: expert tile overflows on-chip memory",
+                spec.platform_id
+            );
+            assert!(spec.stock_tile.onchip_bytes() <= spec.onchip_bytes);
+            assert!(spec.inductor_tile.onchip_bytes() <= spec.onchip_bytes);
+        }
+    }
+
 }

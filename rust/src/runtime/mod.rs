@@ -4,6 +4,10 @@
 //! (`artifacts/*.hlo.txt` + `manifest.json`), compiles each once on
 //! the PJRT CPU client, and executes them with concrete inputs from
 //! the coordinator's request loop.  Python is never on this path.
+//!
+//! Real execution needs the `xla` crate and sits behind the `pjrt`
+//! cargo feature; the default (offline) build ships an API-compatible
+//! stub that errors at construction.
 
 pub mod registry;
 pub mod pjrt;

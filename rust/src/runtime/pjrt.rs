@@ -5,144 +5,232 @@
 //! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos with
 //! 64-bit instruction ids; the text parser reassigns ids).
 //! Executables are compiled once and cached per artifact key.
+//!
+//! The `xla` crate (and its native xla_extension library) is not
+//! vendorable in the offline build, so the real implementation sits
+//! behind the `pjrt` cargo feature.  Without it, [`PjrtRuntime`] keeps
+//! the identical API but errors at construction — callers (CLI
+//! `serve`, the e2e example, the PJRT integration tests) degrade with
+//! a clear message instead of failing to link.
 
-use super::registry::{ArtifactEntry, Registry};
-use crate::tensor::{Shape, Tensor};
-use crate::util::rng::Pcg;
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
-use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::super::registry::{ArtifactEntry, Registry};
+    use crate::tensor::{Shape, Tensor};
+    use crate::util::rng::Pcg;
+    use anyhow::{bail, Context, Result};
+    use std::cell::RefCell;
+    use std::collections::HashMap;
 
-/// A PJRT runtime with a compile-once executable cache.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    registry: Registry,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
-
-impl PjrtRuntime {
-    /// Create a CPU-backed runtime over an artifact registry.
-    pub fn new(registry: Registry) -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtRuntime {
-            client,
-            registry,
-            cache: RefCell::new(HashMap::new()),
-        })
+    /// A PJRT runtime with a compile-once executable cache.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        registry: Registry,
+        cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    pub fn registry(&self) -> &Registry {
-        &self.registry
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch the cached executable for) an artifact.
-    fn executable(&self, entry: &ArtifactEntry) -> Result<()> {
-        let mut cache = self.cache.borrow_mut();
-        if cache.contains_key(&entry.key) {
-            return Ok(());
-        }
-        let path = entry
-            .path
-            .to_str()
-            .with_context(|| format!("non-utf8 path {:?}", entry.path))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", entry.key))?;
-        cache.insert(entry.key.clone(), exe);
-        Ok(())
-    }
-
-    /// Execute an artifact by key with the given inputs.
-    pub fn execute(&self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let entry = self
-            .registry
-            .get(key)
-            .with_context(|| format!("unknown artifact {key}"))?
-            .clone();
-        if inputs.len() != entry.input_shapes.len() {
-            bail!(
-                "{key}: expected {} inputs, got {}",
-                entry.input_shapes.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, dims)) in inputs.iter().zip(&entry.input_shapes).enumerate() {
-            if t.shape.dims() != dims.as_slice() {
-                bail!("{key}: input {i} shape {} != expected {dims:?}", t.shape);
-            }
-        }
-        self.executable(&entry)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.shape.dims().iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .context("reshaping input literal")
+    impl PjrtRuntime {
+        /// Create a CPU-backed runtime over an artifact registry.
+        pub fn new(registry: Registry) -> Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtRuntime {
+                client,
+                registry,
+                cache: RefCell::new(HashMap::new()),
             })
-            .collect::<Result<_>>()?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(key).expect("just compiled");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {key}"))?;
-        let out_lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True: decompose the tuple
-        let elements = out_lit.to_tuple().context("decomposing tuple")?;
-        let mut outputs = Vec::with_capacity(elements.len());
-        for el in elements {
-            let shape = el.array_shape().context("result shape")?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data = el.to_vec::<f32>().context("reading f32 result")?;
-            outputs.push(Tensor::new(Shape(dims), data));
         }
-        Ok(outputs)
-    }
 
-    /// Generate seeded inputs matching an artifact's declared shapes.
-    pub fn seeded_inputs(&self, key: &str, seed: u64) -> Result<Vec<Tensor>> {
-        let entry = self
-            .registry
-            .get(key)
-            .with_context(|| format!("unknown artifact {key}"))?;
-        let mut rng = Pcg::new(seed, crate::util::rng::fnv1a(key.as_bytes()));
-        Ok(entry
-            .input_shapes
-            .iter()
-            .map(|dims| Tensor::randn(Shape(dims.clone()), &mut rng, 0.5))
-            .collect())
-    }
-
-    /// Time `runs` executions (after `warmup`) of an artifact with the
-    /// given inputs; returns per-run seconds.
-    pub fn bench(&self, key: &str, inputs: &[Tensor], warmup: usize, runs: usize) -> Result<Vec<f64>> {
-        for _ in 0..warmup {
-            self.execute(key, inputs)?;
+        pub fn registry(&self) -> &Registry {
+            &self.registry
         }
-        let mut samples = Vec::with_capacity(runs);
-        for _ in 0..runs {
-            let t0 = std::time::Instant::now();
-            self.execute(key, inputs)?;
-            samples.push(t0.elapsed().as_secs_f64());
-        }
-        Ok(samples)
-    }
 
-    /// Number of compiled executables held in the cache.
-    pub fn cache_len(&self) -> usize {
-        self.cache.borrow().len()
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch the cached executable for) an artifact.
+        fn executable(&self, entry: &ArtifactEntry) -> Result<()> {
+            let mut cache = self.cache.borrow_mut();
+            if cache.contains_key(&entry.key) {
+                return Ok(());
+            }
+            let path = entry
+                .path
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", entry.path))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.key))?;
+            cache.insert(entry.key.clone(), exe);
+            Ok(())
+        }
+
+        /// Execute an artifact by key with the given inputs.
+        pub fn execute(&self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            let entry = self
+                .registry
+                .get(key)
+                .with_context(|| format!("unknown artifact {key}"))?
+                .clone();
+            if inputs.len() != entry.input_shapes.len() {
+                bail!(
+                    "{key}: expected {} inputs, got {}",
+                    entry.input_shapes.len(),
+                    inputs.len()
+                );
+            }
+            for (i, (t, dims)) in inputs.iter().zip(&entry.input_shapes).enumerate() {
+                if t.shape.dims() != dims.as_slice() {
+                    bail!("{key}: input {i} shape {} != expected {dims:?}", t.shape);
+                }
+            }
+            self.executable(&entry)?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let dims: Vec<i64> = t.shape.dims().iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&dims)
+                        .context("reshaping input literal")
+                })
+                .collect::<Result<_>>()?;
+            let cache = self.cache.borrow();
+            let exe = cache.get(key).expect("just compiled");
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {key}"))?;
+            let out_lit = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // aot.py lowers with return_tuple=True: decompose the tuple
+            let elements = out_lit.to_tuple().context("decomposing tuple")?;
+            let mut outputs = Vec::with_capacity(elements.len());
+            for el in elements {
+                let shape = el.array_shape().context("result shape")?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = el.to_vec::<f32>().context("reading f32 result")?;
+                outputs.push(Tensor::new(Shape(dims), data));
+            }
+            Ok(outputs)
+        }
+
+        /// Generate seeded inputs matching an artifact's declared shapes.
+        pub fn seeded_inputs(&self, key: &str, seed: u64) -> Result<Vec<Tensor>> {
+            let entry = self
+                .registry
+                .get(key)
+                .with_context(|| format!("unknown artifact {key}"))?;
+            let mut rng = Pcg::new(seed, crate::util::rng::fnv1a(key.as_bytes()));
+            Ok(entry
+                .input_shapes
+                .iter()
+                .map(|dims| Tensor::randn(Shape(dims.clone()), &mut rng, 0.5))
+                .collect())
+        }
+
+        /// Time `runs` executions (after `warmup`) of an artifact with the
+        /// given inputs; returns per-run seconds.
+        pub fn bench(
+            &self,
+            key: &str,
+            inputs: &[Tensor],
+            warmup: usize,
+            runs: usize,
+        ) -> Result<Vec<f64>> {
+            for _ in 0..warmup {
+                self.execute(key, inputs)?;
+            }
+            let mut samples = Vec::with_capacity(runs);
+            for _ in 0..runs {
+                let t0 = std::time::Instant::now();
+                self.execute(key, inputs)?;
+                samples.push(t0.elapsed().as_secs_f64());
+            }
+            Ok(samples)
+        }
+
+        /// Number of compiled executables held in the cache.
+        pub fn cache_len(&self) -> usize {
+            self.cache.borrow().len()
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use real::PjrtRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::super::registry::Registry;
+    use crate::tensor::{Shape, Tensor};
+    use crate::util::rng::Pcg;
+    use anyhow::{bail, Context, Result};
+
+    const DISABLED: &str = "PJRT support not compiled in: add the `xla` crate to \
+         [dependencies] and rebuild with `--features pjrt` (the dependency is not \
+         vendored in the offline build)";
+
+    /// API-compatible stand-in used when the `pjrt` feature is off, so
+    /// callers (CLI `serve`, the e2e example, the integration tests)
+    /// compile unchanged.  Construction always fails with a clear
+    /// message; the remaining methods exist only to keep those call
+    /// sites type-checking.
+    pub struct PjrtRuntime {
+        registry: Registry,
+    }
+
+    impl PjrtRuntime {
+        pub fn new(_registry: Registry) -> Result<PjrtRuntime> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn registry(&self) -> &Registry {
+            &self.registry
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        pub fn execute(&self, key: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            bail!("cannot execute {key}: {DISABLED}")
+        }
+
+        pub fn seeded_inputs(&self, key: &str, seed: u64) -> Result<Vec<Tensor>> {
+            let entry = self
+                .registry
+                .get(key)
+                .with_context(|| format!("unknown artifact {key}"))?;
+            let mut rng = Pcg::new(seed, crate::util::rng::fnv1a(key.as_bytes()));
+            Ok(entry
+                .input_shapes
+                .iter()
+                .map(|dims| Tensor::randn(Shape(dims.clone()), &mut rng, 0.5))
+                .collect())
+        }
+
+        pub fn bench(
+            &self,
+            key: &str,
+            _inputs: &[Tensor],
+            _warmup: usize,
+            _runs: usize,
+        ) -> Result<Vec<f64>> {
+            bail!("cannot bench {key}: {DISABLED}")
+        }
+
+        pub fn cache_len(&self) -> usize {
+            0
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtRuntime;
 
 // Tests requiring real artifacts live in rust/tests/pjrt_integration.rs
-// (they need `make artifacts` to have run).
+// (they need `make artifacts` to have run and the `pjrt` feature).

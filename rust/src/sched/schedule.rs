@@ -86,23 +86,16 @@ impl Schedule {
         }
     }
 
-    /// Platform-appropriate expert point: Metal's 32KB threadgroup
-    /// memory caps the tile, and command graphs are CUDA-only.  This is
-    /// the target the refinement loop converges to on each platform.
-    pub fn expert_for(kind: crate::platform::PlatformKind) -> Schedule {
-        match kind {
-            crate::platform::PlatformKind::Cuda => Schedule::expert(),
-            crate::platform::PlatformKind::Metal => Schedule {
-                fusion_depth: usize::MAX,
-                tile: Tile { bm: 64, bn: 64, bk: 32 },
-                ept: 8,
-                threadgroup: 256,
-                fast_math: true,
-                // on Metal this lever = cached pipeline state (§7.2),
-                // the launch-amortization analog of CUDA graphs
-                use_graphs: true,
-                vec_width: 4,
-            },
+    /// Platform-appropriate expert point: the on-chip memory budget
+    /// caps the tile (`PlatformSpec::expert_tile`), everything else is
+    /// the universal expert point.  This is the target the refinement
+    /// loop converges to on each platform; `use_graphs` means whatever
+    /// launch amortization the platform offers (CUDA/HIP graphs, or
+    /// Metal's cached pipeline state — §7.2).
+    pub fn expert_for(spec: &crate::platform::PlatformSpec) -> Schedule {
+        Schedule {
+            tile: spec.expert_tile,
+            ..Schedule::expert()
         }
     }
 

@@ -14,9 +14,8 @@ use crate::platform::PlatformSpec;
 use crate::sched::legal;
 use crate::util::rng::Pcg;
 use crate::workloads::Problem;
-use once_cell::sync::Lazy;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::state::ExecState;
 
@@ -25,34 +24,40 @@ use super::state::ExecState;
 /// this halves the interpreter work per verification and amortizes
 /// ~40x across personas × iterations).
 type IoPair = (Arc<Vec<crate::tensor::Tensor>>, Arc<Vec<crate::tensor::Tensor>>);
-static REF_CACHE: Lazy<Mutex<HashMap<(String, u64), IoPair>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+
+fn ref_cache() -> &'static Mutex<HashMap<(String, u64), IoPair>> {
+    static REF_CACHE: OnceLock<Mutex<HashMap<(String, u64), IoPair>>> = OnceLock::new();
+    REF_CACHE.get_or_init(Default::default)
+}
 
 /// (inputs, reference outputs) for a (problem, seed): both are pure and
 /// re-requested per candidate, so cached together.
 fn reference_io(problem: &Problem, seed: u64) -> IoPair {
     let key = (problem.id.clone(), seed);
-    if let Some(hit) = REF_CACHE.lock().unwrap().get(&key) {
+    if let Some(hit) = ref_cache().lock().unwrap().get(&key) {
         return hit.clone();
     }
     let inputs = problem.eval_inputs(seed);
     let out = interp::eval(&problem.eval_graph, &inputs)
         .unwrap_or_else(|e| panic!("reference graph for {} failed: {e}", problem.id));
     let pair = (Arc::new(inputs), Arc::new(out));
-    REF_CACHE.lock().unwrap().insert(key, pair.clone());
+    ref_cache().lock().unwrap().insert(key, pair.clone());
     pair
 }
 
 /// Candidate-independent CSE'd perf graph per problem (§Perf round 2).
-static PERF_CSE_CACHE: Lazy<Mutex<HashMap<String, Arc<crate::kir::Graph>>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+fn cse_cache() -> &'static Mutex<HashMap<String, Arc<crate::kir::Graph>>> {
+    static PERF_CSE_CACHE: OnceLock<Mutex<HashMap<String, Arc<crate::kir::Graph>>>> =
+        OnceLock::new();
+    PERF_CSE_CACHE.get_or_init(Default::default)
+}
 
 fn cse_perf_graph(problem: &Problem) -> Arc<crate::kir::Graph> {
-    if let Some(hit) = PERF_CSE_CACHE.lock().unwrap().get(&problem.id) {
+    if let Some(hit) = cse_cache().lock().unwrap().get(&problem.id) {
         return hit.clone();
     }
     let g = Arc::new(crate::kir::rewrite::cse::eliminate(&problem.perf_graph));
-    PERF_CSE_CACHE
+    cse_cache()
         .lock()
         .unwrap()
         .insert(problem.id.clone(), g.clone());

@@ -8,7 +8,7 @@
 //! first correct program.
 
 use crate::agents::{GenerationAgent, Program};
-use crate::platform::{cuda, PlatformKind};
+use crate::platform::cuda;
 use crate::util::rng::Pcg;
 use crate::verify;
 use crate::workloads::Suite;
@@ -26,7 +26,8 @@ impl RefCorpus {
     pub fn build(suite: &Suite, attempts_per_problem: usize, seed: u64) -> RefCorpus {
         let spec = cuda::h100();
         let persona = crate::agents::persona::by_name("openai-gpt-5").unwrap();
-        let agent = GenerationAgent::new(persona, PlatformKind::Cuda);
+        let agent =
+            GenerationAgent::new(persona, crate::platform::by_name("cuda").expect("builtin cuda"));
         let mut programs = HashMap::new();
         for problem in suite.problems.iter() {
             let mut rng = Pcg::new(seed, crate::util::rng::fnv1a(problem.id.as_bytes()));

@@ -131,24 +131,21 @@ fn prop_fast_p_monotone_and_bounded() {
 #[test]
 fn prop_schedule_sampling_always_improvable_to_legal() {
     // any sampled schedule, after repair toward the platform expert,
-    // passes legality on that platform
-    let cuda = kforge::platform::cuda::h100();
-    let metal = kforge::platform::metal::m4_max();
+    // passes legality on that platform — for every registered platform
+    let platforms = kforge::platform::registry().platforms();
     let mut rng = Pcg::seed(0x5EED);
     for _ in 0..300 {
         let skill = rng.uniform();
         let mut s = Schedule::sample(&mut rng, skill);
-        // CUDA expert point always legal on CUDA
-        let e = Schedule::expert_for(kforge::platform::PlatformKind::Cuda);
-        s.tile = e.tile;
-        s.threadgroup = e.threadgroup;
-        s.ept = s.ept.clamp(1, 8).next_power_of_two();
-        s.vec_width = s.vec_width.clamp(1, 4).next_power_of_two();
-        legal::check(&s, &cuda).unwrap();
-        // Metal expert point always legal on Metal
-        let em = Schedule::expert_for(kforge::platform::PlatformKind::Metal);
-        s.tile = em.tile;
-        legal::check(&s, &metal).unwrap();
+        for platform in platforms {
+            let spec = platform.spec();
+            let e = Schedule::expert_for(spec);
+            s.tile = e.tile;
+            s.threadgroup = e.threadgroup;
+            s.ept = s.ept.clamp(1, 8).next_power_of_two();
+            s.vec_width = s.vec_width.clamp(1, 4).next_power_of_two();
+            legal::check(&s, spec).unwrap();
+        }
     }
 }
 
@@ -183,11 +180,10 @@ fn prop_profile_screenshot_roundtrip_bounded_loss() {
 #[test]
 fn prop_verification_deterministic_across_runs() {
     use kforge::agents::GenerationAgent;
-    use kforge::platform::PlatformKind;
     let suite = kforge::workloads::Suite::sample(4);
     let spec = kforge::platform::cuda::h100();
     let persona = kforge::agents::persona::by_name("deepseek-r1").unwrap();
-    let agent = GenerationAgent::new(persona, PlatformKind::Cuda);
+    let agent = GenerationAgent::new(persona, kforge::platform::by_name("cuda").unwrap());
     for p in suite.problems.iter() {
         let mut r1 = Pcg::seed(42);
         let mut r2 = Pcg::seed(42);

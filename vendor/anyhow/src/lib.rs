@@ -1,0 +1,233 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container this repo builds in has no crates.io access, so the
+//! workspace vendors the small surface kforge actually uses:
+//!
+//! - [`Error`]: a message plus an optional context chain;
+//! - [`Result<T>`] defaulting the error type;
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! - `anyhow!` / `bail!` macros (format-string forms);
+//! - `Display` prints the outermost message, `{:#}` prints the chain
+//!   (`outer: inner: root`), `Debug` prints a `Caused by:` listing —
+//!   matching real anyhow closely enough for logs and tests.
+//!
+//! Swap back to the real crate by replacing the `[dependencies]` path
+//! entry; no source changes needed.
+
+use std::fmt;
+
+/// An error message with an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> String {
+        self.msg.clone()
+    }
+
+    /// Iterate the chain from the outermost message to the root cause.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(src) = &cur.source {
+            cur = src;
+        }
+        &cur.msg
+    }
+}
+
+/// Iterator over an [`Error`]'s context chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a str;
+
+    fn next(&mut self) -> Option<&'a str> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(&cur.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = &self.source;
+        let mut first = true;
+        while let Some(e) = cur {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {}", e.msg)?;
+            cur = &e.source;
+        }
+        Ok(())
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`,
+// which is what makes this blanket conversion coherent (the reflexive
+// `From<Error> for Error` comes from core's identity impl instead).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        // flatten the std source chain into our context chain
+        let mut msgs = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut e = Error::msg(it.next().expect("at least one message"));
+        for m in it {
+            e = e.context(m);
+        }
+        e
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_is_outermost_alternate_is_chain() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "middle", "root"]);
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert!(format!("{e:#}").contains("file missing"));
+
+        let o: Option<u32> = None;
+        let e2 = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e2.to_string(), "missing key");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero is not allowed (got {x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        let e = f(0).unwrap_err();
+        assert_eq!(e.to_string(), "zero is not allowed (got 0)");
+        let e2 = anyhow!("plain");
+        assert_eq!(e2.to_string(), "plain");
+    }
+}
