@@ -1,61 +1,95 @@
-//! Profile-guided optimization (§3.2, §5.2, §6.3): the analysis agent
-//! turns raw profiling artifacts into one recommendation per iteration.
-//!
-//! Shows both profiler frontends on the same workload:
-//! - CUDA: nsys-style CSV reports (programmatic), and
-//! - Metal: Xcode-style rendered screenshots that the agent must
-//!   screen-scrape (the paper automated Xcode with cliclick).
+//! Profile-guided optimization (§3.2, §5.2, §6.3): each platform's
+//! registered profiler frontend turns the raw profile into its native
+//! artifact (nsys CSV tables, Xcode screenshots, rocprof trace JSON),
+//! interprets it into the Evidence IR, and the analysis agent ranks a
+//! recommendation from the evidence alone — with the capture fidelity
+//! surfaced as confidence.
 //!
 //! ```bash
-//! cargo run --release --example profile_guided
+//! cargo run --release --example profile_guided                     # all platforms
+//! cargo run --release --example profile_guided -- --platform rocm # one platform
+//! cargo run --release --example profile_guided -- --list          # names, one per line
 //! ```
 
 use kforge::agents::analysis::AnalysisAgent;
 use kforge::perfsim::{lower, simulate};
-use kforge::platform::ProfilerAccess;
-use kforge::profiler::{nsys, xcode, Profile};
+use kforge::platform::PlatformRef;
+use kforge::profiler::Profile;
 use kforge::sched::Schedule;
 use kforge::util::rng::Pcg;
 use kforge::workloads::Suite;
 
-fn main() -> anyhow::Result<()> {
+fn run_platform(platform: &PlatformRef) -> anyhow::Result<()> {
     let suite = Suite::full();
     let problem = suite.get("l3_squeezenet_fire").unwrap();
     let naive = Schedule::naive();
     let mut rng = Pcg::seed(7);
 
-    // every registered platform, through whichever profiler frontend it
-    // actually exposes (programmatic CSV vs GUI screenshots)
-    for platform in kforge::platform::registry().platforms() {
-        let spec = platform.spec();
-        let plan = lower::lower(&problem.perf_graph, &naive);
-        let sim = simulate(spec, &plan, &mut rng, 100, 10);
-        let profile = Profile::from_sim(&problem.id, spec.name, &sim);
-        let agent = AnalysisAgent::new(platform.clone());
-        let rec = match spec.profiler {
-            ProfilerAccess::ProgrammaticCsv => {
-                println!(
-                    "========= {}: programmatic CSV reports ({} path) =========\n",
-                    spec.name,
-                    platform.language()
-                );
-                println!("{}", nsys::full_report(&profile));
-                agent.recommend_from_profile(&profile, &naive)
+    let spec = platform.spec();
+    let plan = lower::lower(&problem.perf_graph, &naive);
+    let sim = simulate(spec, &plan, &mut rng, 100, 10);
+    let profile = Profile::from_sim(&problem.id, spec.name, &sim);
+
+    let frontend = platform.profiler_frontend();
+    println!(
+        "========= {}: {} frontend ({:?}, {}) =========\n",
+        spec.name,
+        frontend.name(),
+        frontend.kind(),
+        if frontend.lossless() { "recommendation-grade" } else { "lossy capture" },
+    );
+    let artifact = frontend.capture(&profile);
+    for part in &artifact.parts {
+        println!("--- part {:?} ---\n{}", part.name, part.content);
+    }
+
+    let evidence = frontend.interpret(&artifact)?;
+    println!(
+        "evidence: {} kernels, total {:.1} us, launch fraction {:.2}, fidelity score {:.3}",
+        evidence.n_kernels(),
+        evidence.total_us.or(f64::NAN),
+        evidence.launch_fraction().or(f64::NAN),
+        evidence.fidelity_score()
+    );
+
+    let agent = AnalysisAgent::new(platform.clone());
+    let advice = agent.advise_from_evidence(&evidence, &naive);
+    println!(
+        "analysis agent recommendation: {:?} (confidence {:.3})",
+        advice.recommendation, advice.confidence
+    );
+    println!(
+        "recommendation text fed to the generation agent:\n  {}\n",
+        advice.recommendation.text()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let registry = kforge::platform::registry();
+    if args.iter().any(|a| a == "--list") {
+        for p in registry.platforms() {
+            println!("{}", p.name());
+        }
+        return Ok(());
+    }
+    let only = match args.iter().position(|a| a == "--platform") {
+        Some(i) => {
+            let name = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("--platform requires a name (try --list)"))?;
+            Some(kforge::platform::by_name(name)?)
+        }
+        None => None,
+    };
+    match only {
+        Some(platform) => run_platform(&platform)?,
+        None => {
+            for platform in registry.platforms() {
+                run_platform(platform)?;
             }
-            ProfilerAccess::GuiScreenshot => {
-                println!(
-                    "========= {}: GUI screenshots (screen-scraped) =========\n",
-                    spec.name
-                );
-                let screens = xcode::capture_screens(&profile);
-                for screen in &screens {
-                    println!("{screen}");
-                }
-                agent.recommend_from_screens(&screens, &naive)
-            }
-        };
-        println!("analysis agent recommendation: {rec:?}");
-        println!("recommendation text fed to the generation agent:\n  {}\n", rec.text());
+        }
     }
     Ok(())
 }

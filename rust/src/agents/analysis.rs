@@ -1,10 +1,15 @@
 //! The performance-analysis agent `G : (o, k, {v^i}) → r` (§3.2).
 //!
-//! On programmatic-CSV platforms (CUDA's nsys, ROCm's rocprof) the
-//! inputs are structured, lossless reports; on GUI-only platforms
-//! (Metal's Xcode) they are screenshots that must be screen-scraped
-//! first (lossy).  The agent ranks candidate bottlenecks by estimated
-//! impact and emits **one** recommendation.
+//! The agent consumes **only** the [`Evidence`] IR.  Its platform's
+//! [`crate::platform::Platform::profiler_frontend`] turns the raw
+//! profile into a tool-native artifact and back into `Evidence`; by the
+//! time data reaches this agent, *how* it was captured is gone — only
+//! the per-fact fidelity tags remain.  Programmatic frontends (nsys,
+//! rocprof) deliver recommendation-grade facts; the Xcode screenshot
+//! scrape delivers rounded values, truncated names and missing joins.
+//! The agent ranks candidate bottlenecks by estimated impact, emits
+//! **one** recommendation, and reports the evidence fidelity as its
+//! confidence.
 //!
 //! Specialization rationale (from the paper): profiling data is
 //! extensive but optimization signals are sparse, and retrieval
@@ -12,10 +17,9 @@
 //! contract (one recommendation) replaces feeding raw profiles to the
 //! synthesis agent.
 
-use super::recommend::Recommendation;
-use crate::platform::{LaunchAmortization, PlatformRef, ProfilerAccess};
-use crate::profiler::parse::{scrape, ScrapedProfile};
-use crate::profiler::Profile;
+use super::recommend::{Advice, Recommendation};
+use crate::platform::{LaunchAmortization, PlatformRef};
+use crate::profiler::{Evidence, Profile};
 use crate::sched::Schedule;
 
 /// The analysis agent.
@@ -24,7 +28,8 @@ pub struct AnalysisAgent {
     pub platform: PlatformRef,
 }
 
-/// The bottleneck facts the agent extracts before ranking.
+/// The bottleneck facts the agent extracts from evidence before
+/// ranking.
 #[derive(Debug, Clone, Copy, Default)]
 struct Facts {
     launch_fraction: f64,
@@ -42,91 +47,54 @@ impl AnalysisAgent {
         AnalysisAgent { platform }
     }
 
-    /// Programmatic path (nsys / rocprof): the CSV is lossless, so we
-    /// read the typed records directly — equivalent to parsing the
-    /// CSVs.
-    pub fn recommend_from_profile(&self, profile: &Profile, schedule: &Schedule) -> Recommendation {
-        self.rank(self.facts_from_profile(profile), schedule)
-    }
-
-    /// GUI path (Xcode): only the rendered screenshots are available;
-    /// scrape them (lossy) and work from what survives.  A scrape
-    /// failure yields `LooksOptimal` — the agent can't see a bottleneck
-    /// it can't read (this is the paper's "profiling information is not
-    /// always sufficient" failure mode).
-    pub fn recommend_from_screens(&self, screens: &[String], schedule: &Schedule) -> Recommendation {
-        match scrape(screens) {
-            Ok(s) => self.rank(self.facts_from_scrape(&s), schedule),
-            Err(_) => Recommendation::LooksOptimal,
+    /// The full loop step: capture the profile through this platform's
+    /// frontend, interpret it into evidence, rank.  An uninterpretable
+    /// capture yields `LooksOptimal` at zero confidence — the agent
+    /// can't see a bottleneck it can't read (the paper's "profiling
+    /// information is not always sufficient" failure mode).
+    pub fn advise(&self, profile: &Profile, schedule: &Schedule) -> Advice {
+        match self.platform.profiler_frontend().evidence(profile) {
+            Ok(ev) => self.advise_from_evidence(&ev, schedule),
+            Err(_) => Advice { recommendation: Recommendation::LooksOptimal, confidence: 0.0 },
         }
     }
 
-    /// Platform dispatch used by the verification pipeline: pick the
-    /// profiler frontend this agent's platform actually exposes.
+    /// Like [`AnalysisAgent::advise`], keeping only the recommendation.
     pub fn recommend(&self, profile: &Profile, schedule: &Schedule) -> Recommendation {
-        match self.platform.spec().profiler {
-            ProfilerAccess::ProgrammaticCsv => self.recommend_from_profile(profile, schedule),
-            ProfilerAccess::GuiScreenshot => {
-                let screens = crate::profiler::xcode::capture_screens(profile);
-                self.recommend_from_screens(&screens, schedule)
-            }
+        self.advise(profile, schedule).recommendation
+    }
+
+    /// Rank already-interpreted evidence (any frontend's).
+    pub fn advise_from_evidence(&self, evidence: &Evidence, schedule: &Schedule) -> Advice {
+        Advice {
+            recommendation: self.rank(self.facts(evidence), schedule),
+            confidence: evidence.fidelity_score(),
         }
     }
 
-    fn facts_from_profile(&self, p: &Profile) -> Facts {
-        let hottest = p.hottest();
+    fn facts(&self, ev: &Evidence) -> Facts {
+        let hottest = ev.hottest();
+        let families = ["swish", "sigmoid", "gelu", "tanh", "exp", "softmax", "layernorm"];
         Facts {
-            launch_fraction: p.launch_fraction(),
-            n_kernels: p.kernels.len(),
-            hottest_memory_bound: hottest.map(|k| !k.compute_bound).unwrap_or(false),
-            hottest_mem_util: hottest.map(|k| k.mem_utilization).unwrap_or(1.0),
-            hottest_mm_util: hottest.map(|k| k.mm_utilization).unwrap_or(1.0),
-            hottest_is_matmul: hottest
-                .map(|k| k.name.contains("matmul") || k.name.contains("conv") || k.name.contains("attention"))
+            launch_fraction: ev.launch_fraction().or(0.0),
+            n_kernels: ev.n_kernels(),
+            hottest_memory_bound: hottest
+                .and_then(|k| k.compute_bound)
+                .map(|b| !b)
                 .unwrap_or(false),
-            hottest_transcendental: hottest
+            hottest_mem_util: hottest.map(|k| k.mem_utilization.or(1.0)).unwrap_or(1.0),
+            hottest_mm_util: hottest.map(|k| k.mm_utilization.or(1.0)).unwrap_or(1.0),
+            // truncated names still carry the op-family prefix, so
+            // `contains` survives every frontend's name fidelity
+            hottest_is_matmul: hottest
                 .map(|k| {
-                    ["swish", "sigmoid", "gelu", "tanh", "exp", "softmax", "layernorm"]
-                        .iter()
-                        .any(|t| k.name.contains(t))
+                    k.name.contains("matmul") || k.name.contains("conv") || k.name.contains("attention")
                 })
                 .unwrap_or(false),
-            min_occupancy: p.kernels.iter().map(|k| k.occupancy).fold(1.0, f64::min),
-        }
-    }
-
-    fn facts_from_scrape(&self, s: &ScrapedProfile) -> Facts {
-        let hottest = s
-            .kernels
-            .iter()
-            .max_by(|a, b| {
-                a.time_us
-                    .unwrap_or(a.mem_pct)
-                    .partial_cmp(&b.time_us.unwrap_or(b.mem_pct))
-                    .unwrap()
-            });
-        Facts {
-            launch_fraction: s.encoder_overhead_us / s.gpu_time_us.max(1e-9),
-            n_kernels: s.dispatches,
-            hottest_memory_bound: hottest.map(|k| !k.limiter_alu).unwrap_or(false),
-            hottest_mem_util: hottest.map(|k| k.mem_pct / 100.0).unwrap_or(1.0),
-            hottest_mm_util: hottest.map(|k| k.alu_pct / 100.0).unwrap_or(1.0),
-            hottest_is_matmul: hottest
-                .map(|k| k.name.contains("matmul") || k.name.contains("conv") || k.name.contains("attention"))
-                .unwrap_or(false),
-            // truncated 20-char names still carry the op family prefix
             hottest_transcendental: hottest
-                .map(|k| {
-                    ["swish", "sigmoid", "gelu", "tanh", "exp", "softmax", "layernorm"]
-                        .iter()
-                        .any(|t| k.name.contains(t))
-                })
+                .map(|k| families.iter().any(|t| k.name.contains(t)))
                 .unwrap_or(false),
-            min_occupancy: s
-                .kernels
-                .iter()
-                .map(|k| k.occupancy_pct / 100.0)
-                .fold(1.0, f64::min),
+            min_occupancy: ev.min_occupancy().or(1.0),
         }
     }
 
@@ -177,7 +145,10 @@ mod tests {
     use crate::perfsim::lower::lower;
     use crate::perfsim::simulate;
     use crate::platform::{by_name, cuda, metal};
-    use crate::profiler::Profile;
+    use crate::profiler::nsys::NsysFrontend;
+    use crate::profiler::rocprof::RocprofFrontend;
+    use crate::profiler::xcode::XcodeFrontend;
+    use crate::profiler::{Profile, ProfilerFrontend};
     use crate::tensor::Shape;
     use crate::util::rng::Pcg;
 
@@ -205,20 +176,23 @@ mod tests {
         let spec = cuda::h100();
         let (p, s) = profile_for(false, 32, &spec);
         let agent = AnalysisAgent::new(by_name("cuda").unwrap());
-        let rec = agent.recommend_from_profile(&p, &s);
+        let rec = agent.recommend(&p, &s);
         assert_eq!(rec, Recommendation::UseCudaGraphs, "profile: {p:?}");
     }
 
     #[test]
-    fn launch_bound_rocm_gets_graphs_via_csv_path() {
-        // rocm profiles programmatically (rocprof CSV) and amortizes
-        // with hipGraph — the CSV path must route it to device graphs
+    fn launch_bound_rocm_gets_graphs_via_rocprof() {
+        // rocm profiles through its own rocprof trace frontend and
+        // amortizes with hipGraph — the evidence path must route it to
+        // device graphs without ever branching on the capture format
         let rocm = by_name("rocm").unwrap();
+        assert_eq!(rocm.profiler_frontend().name(), "rocprof");
         let spec = rocm.spec().clone();
         let (p, s) = profile_for(false, 32, &spec);
         let agent = AnalysisAgent::new(rocm);
-        let rec = agent.recommend(&p, &s);
-        assert_eq!(rec, Recommendation::UseCudaGraphs, "profile: {p:?}");
+        let advice = agent.advise(&p, &s);
+        assert_eq!(advice.recommendation, Recommendation::UseCudaGraphs, "profile: {p:?}");
+        assert!(advice.confidence > 0.97, "{}", advice.confidence);
     }
 
     #[test]
@@ -226,12 +200,11 @@ mod tests {
         let spec = metal::m4_max();
         let (p, mut s) = profile_for(false, 32, &spec);
         let agent = AnalysisAgent::new(by_name("metal").unwrap());
-        let screens = crate::profiler::xcode::capture_screens(&p);
-        let rec = agent.recommend_from_screens(&screens, &s);
+        let rec = agent.recommend(&p, &s);
         assert_eq!(rec, Recommendation::CachePipelineState);
         // once caching is on, the next advice is fusion
         s.use_graphs = true;
-        let rec2 = agent.recommend_from_screens(&screens, &s);
+        let rec2 = agent.recommend(&p, &s);
         assert_eq!(rec2, Recommendation::IncreaseFusion);
     }
 
@@ -241,27 +214,63 @@ mod tests {
         let (p, mut s) = profile_for(true, 2048, &spec);
         s.use_graphs = true; // silence the launch path
         let agent = AnalysisAgent::new(by_name("cuda").unwrap());
-        let rec = agent.recommend_from_profile(&p, &s);
+        let rec = agent.recommend(&p, &s);
         assert_eq!(rec, Recommendation::RetileMatmul, "{p:?}");
     }
 
     #[test]
-    fn garbage_screens_yield_looks_optimal() {
+    fn unreadable_capture_yields_looks_optimal_at_zero_confidence() {
+        // a capture the scraper cannot read (no kernel rows survive
+        // rendering) must not invent a bottleneck: the agent reports
+        // LooksOptimal and zero confidence
         let agent = AnalysisAgent::new(by_name("metal").unwrap());
-        let rec =
-            agent.recommend_from_screens(&["?".into(), "?".into(), "?".into()], &Schedule::naive());
-        assert_eq!(rec, Recommendation::LooksOptimal);
+        let (mut p, s) = profile_for(false, 32, &metal::m4_max());
+        p.kernels.clear();
+        let advice = agent.advise(&p, &s);
+        assert_eq!(advice.recommendation, Recommendation::LooksOptimal);
+        assert_eq!(advice.confidence, 0.0);
     }
 
     #[test]
-    fn lossless_and_scraped_views_agree_on_clear_bottleneck() {
-        // the scrape is lossy but a dominant launch bottleneck survives
-        let spec = metal::m4_max();
+    fn lossless_frontends_give_identical_recommendations() {
+        // acceptance: the two programmatic frontends — different
+        // formats, field names and units — produce the same
+        // recommendation on the same profile, at comparable confidence
+        let spec = cuda::h100();
+        let agent = AnalysisAgent::new(by_name("cuda").unwrap());
+        for (dim, fused) in [(32, false), (2048, true), (256, false)] {
+            let (p, mut s) = profile_for(fused, dim, &spec);
+            if fused {
+                s.use_graphs = true;
+            }
+            let nsys = agent.advise_from_evidence(&NsysFrontend.evidence(&p).unwrap(), &s);
+            let rocprof = agent.advise_from_evidence(&RocprofFrontend.evidence(&p).unwrap(), &s);
+            assert_eq!(
+                nsys.recommendation, rocprof.recommendation,
+                "dim={dim} fused={fused}: {p:?}"
+            );
+            assert!((nsys.confidence - rocprof.confidence).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn screenshot_frontend_is_strictly_degraded_but_bottleneck_consistent() {
+        // acceptance: on a clear bottleneck the lossy scrape reaches
+        // the same recommendation as the lossless frontends, at
+        // strictly lower confidence
+        let spec = cuda::h100();
+        let agent = AnalysisAgent::new(by_name("cuda").unwrap());
         let (p, s) = profile_for(false, 32, &spec);
-        let agent = AnalysisAgent::new(by_name("metal").unwrap());
-        let lossless_view = agent.rank(agent.facts_from_profile(&p), &s);
-        let screens = crate::profiler::xcode::capture_screens(&p);
-        let scraped_view = agent.recommend_from_screens(&screens, &s);
-        assert_eq!(lossless_view, scraped_view);
+        let nsys = agent.advise_from_evidence(&NsysFrontend.evidence(&p).unwrap(), &s);
+        let rocprof = agent.advise_from_evidence(&RocprofFrontend.evidence(&p).unwrap(), &s);
+        let scraped = agent.advise_from_evidence(&XcodeFrontend.evidence(&p).unwrap(), &s);
+        assert_eq!(scraped.recommendation, nsys.recommendation);
+        assert!(
+            scraped.confidence < nsys.confidence.min(rocprof.confidence),
+            "scrape {} should trail nsys {} / rocprof {}",
+            scraped.confidence,
+            nsys.confidence,
+            rocprof.confidence
+        );
     }
 }

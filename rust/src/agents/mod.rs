@@ -5,8 +5,10 @@
 //!   graph + schedule + any injected defects), and refines it across
 //!   iterations from verification feedback and recommendations.
 //! - [`analysis`] — the performance-analysis agent `G : (o, k, {v^i})
-//!   → r`: consumes profiling artifacts (nsys CSV on CUDA, screenshot
-//!   scrapes on Metal) and emits **one** recommendation.
+//!   → r`: consumes the profiler `Evidence` IR (produced by whichever
+//!   frontend the platform registers — nsys CSV, Xcode screenshot
+//!   scrape, rocprof trace JSON) and emits **one** recommendation with
+//!   a fidelity-derived confidence.
 //!
 //! [`persona`] defines the 8 calibrated model personas (Table 1);
 //! [`prompt`] assembles the Listing-1-style prompts; [`recommend`] is
@@ -30,4 +32,4 @@ pub mod analysis;
 
 pub use generation::{GenerationAgent, Program};
 pub use persona::{Persona, PERSONAS};
-pub use recommend::Recommendation;
+pub use recommend::{Advice, Recommendation};

@@ -7,6 +7,19 @@
 
 use crate::sched::schedule::Lever;
 
+/// A recommendation plus how much the analysis agent trusts it: the
+/// mean fidelity of the [`crate::profiler::Evidence`] it was ranked
+/// from.  Lossless programmatic frontends yield confidence near 1;
+/// screen-scraped captures are visibly lower; unreadable captures are
+/// 0 — the paper's "profiling information is not always sufficient"
+/// failure mode, quantified.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Advice {
+    pub recommendation: Recommendation,
+    /// Evidence fidelity score ∈ [0, 1].
+    pub confidence: f64,
+}
+
 /// One actionable optimization recommendation.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Recommendation {

@@ -7,8 +7,13 @@
 //! ```text
 //! iteration 0: F(p) → k₀ → verify
 //! functional pass: while not correct: F(p, kₜ₋₁, error) → kₜ
-//! optimization pass: G(profile) → r; F(p, kₜ₋₁, r) → kₜ  (keep best)
+//! optimization pass: G(evidence) → r; F(p, kₜ₋₁, r) → kₜ  (keep best)
 //! ```
+//!
+//! The profiling step is frontend-agnostic: the platform's registered
+//! `ProfilerFrontend` captures the profile into its native artifact and
+//! interprets it into the `Evidence` IR; the analysis agent ranks from
+//! evidence alone.
 
 use super::job::TaskResult;
 use crate::agents::analysis::AnalysisAgent;
@@ -170,11 +175,19 @@ pub fn run_task(
                 if best.map(|(b, _)| t < b).unwrap_or(true) {
                     best = Some((t, iter));
                 }
-                // profile → one recommendation for the next iteration
+                // profile → frontend capture → Evidence → one
+                // recommendation for the next iteration; a capture the
+                // frontend could not interpret carries zero confidence
+                // and is withheld (no evidence ⇒ no recommendation)
                 if cfg.use_profiling {
                     if let Some(prog) = &candidate {
                         let profile = Profile::from_sim(&problem.id, spec.name, &sim);
-                        last_rec = Some(analyst.recommend(&profile, &prog.schedule));
+                        let advice = analyst.advise(&profile, &prog.schedule);
+                        last_rec = if advice.confidence > 0.0 {
+                            Some(advice.recommendation)
+                        } else {
+                            None
+                        };
                     }
                 }
                 last_error = None;

@@ -25,8 +25,11 @@
 //!   (H100), Metal (M4 Max), ROCm (MI300X).  Adding an accelerator is
 //!   a one-module change; no other module branches on the platform.
 //! - [`perfsim`] — roofline/launch/occupancy device simulator.
-//! - [`profiler`] — nsys/rocprof-like CSV and Xcode-like screenshot
-//!   profiler frontends, chosen per platform spec.
+//! - [`profiler`] — the open profiler-frontend plugin API: a
+//!   `ProfilerFrontend` trait (capture → tool-native artifact →
+//!   `Evidence` IR with per-fact fidelity).  Built-ins: nsys CSV,
+//!   Xcode screenshot scrape, rocprof trace JSON — selected per
+//!   platform via `Platform::profiler_frontend()`.
 //! - [`baseline`] — PyTorch-eager and torch.compile analogs.
 //! - [`agents`] — personas (per-platform calibration with a principled
 //!   fallback for unseen platforms), generation agent F, analysis

@@ -85,15 +85,20 @@ fn cmd_platforms() -> Result<()> {
     );
     for p in registry().platforms() {
         let s = p.spec();
+        let frontend = p.profiler_frontend();
         println!(
-            "{:<8} {:<10} {:<28} {:>10.0} {:>9} {:>8} {:<8?}",
+            "{:<8} {:<10} {:<28} {:>10.0} {:>9} {:>8} {:<8}",
             p.name(),
             p.language(),
             s.name,
             s.mem_bw / 1e9,
             s.simd_width,
             p.default_workers(),
-            s.profiler,
+            format!(
+                "{}{}",
+                frontend.name(),
+                if frontend.lossless() { "" } else { " (lossy)" }
+            ),
         );
         if !p.aliases().is_empty() {
             println!("         aliases: {}", p.aliases().join(", "));

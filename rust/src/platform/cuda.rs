@@ -1,9 +1,11 @@
 //! CUDA platform: NVIDIA H100 SXM5 constants (the paper's testbed:
 //! 4× H100 SXM5, 80GB HBM3, 3.35 TB/s — §4.3).
 
-use super::spec::{LaunchAmortization, PlatformSpec, ProfilerAccess};
+use super::spec::{LaunchAmortization, PlatformSpec};
 use super::Platform;
+use crate::profiler::ProfilerFrontendRef;
 use crate::sched::schedule::Tile;
+use std::sync::Arc;
 
 /// H100 SXM5 device model.
 pub fn h100() -> PlatformSpec {
@@ -29,7 +31,6 @@ pub fn h100() -> PlatformSpec {
         // PCIe Gen5 x16 ≈ 64 GB/s (SXM uses NVLink to peers, but host
         // staging still crosses PCIe)
         h2d_bw: 64e9,
-        profiler: ProfilerAccess::ProgrammaticCsv,
         // CUDA graphs: one launch + tiny per-node replay cost
         launch_amortization: LaunchAmortization::DeviceGraphs {
             replay_per_node_s: 0.3e-6,
@@ -64,6 +65,14 @@ impl Default for CudaPlatform {
 impl Platform for CudaPlatform {
     fn spec(&self) -> &PlatformSpec {
         &self.spec
+    }
+
+    /// `nsys stats` CSV reports (§5.2) — the trait default, stated
+    /// explicitly for the paper's primary platform.
+    fn profiler_frontend(&self) -> ProfilerFrontendRef {
+        static NSYS: std::sync::OnceLock<ProfilerFrontendRef> = std::sync::OnceLock::new();
+        NSYS.get_or_init(|| Arc::new(crate::profiler::nsys::NsysFrontend))
+            .clone()
     }
 
     /// The paper's CUDA testbed: 4 H100s, one kernel per GPU at a time.

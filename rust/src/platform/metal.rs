@@ -1,9 +1,11 @@
 //! Metal platform: Apple M4 Max constants (the paper's testbed:
 //! 5× Mac Studio, 14-core CPU / 32-core GPU / 36GB unified — §4.3).
 
-use super::spec::{LaunchAmortization, PlatformSpec, ProfilerAccess};
+use super::spec::{LaunchAmortization, PlatformSpec};
 use super::Platform;
+use crate::profiler::ProfilerFrontendRef;
 use crate::sched::schedule::Tile;
+use std::sync::Arc;
 
 /// M4 Max (32-core GPU) device model.
 pub fn m4_max() -> PlatformSpec {
@@ -29,7 +31,6 @@ pub fn m4_max() -> PlatformSpec {
         num_cores: 32,
         unified_memory: true,
         h2d_bw: f64::INFINITY,
-        profiler: ProfilerAccess::GuiScreenshot,
         // no command graphs on Metal: the launch-amortization lever is
         // cached pipeline state + command-queue reuse (§7.2's listing)
         launch_amortization: LaunchAmortization::PipelineCache {
@@ -71,6 +72,16 @@ impl Platform for MetalPlatform {
 
     fn aliases(&self) -> &'static [&'static str] {
         &["mps"]
+    }
+
+    /// macOS exposes no programmatic GPU-profiling API: the only
+    /// profiling artifact is rendered Xcode-Instruments screens that
+    /// must be scraped back (§6.3's cliclick pipeline).
+    fn profiler_frontend(&self) -> ProfilerFrontendRef {
+        static XCODE: std::sync::OnceLock<ProfilerFrontendRef> = std::sync::OnceLock::new();
+        XCODE
+            .get_or_init(|| Arc::new(crate::profiler::xcode::XcodeFrontend))
+            .clone()
     }
 
     /// The paper's Metal testbed: 5 Mac Studio nodes.

@@ -6,12 +6,13 @@
 //!
 //! - [`PlatformSpec`] (in [`spec`]) carries every device constant and
 //!   behavioral knob — roofline rates, launch amortization model,
-//!   profiler frontend, baseline/expert tiles, prompt language, the
-//!   unsupported-op list — as plain data;
+//!   baseline/expert tiles, prompt language, the unsupported-op list —
+//!   as plain data;
 //! - the [`Platform`] trait bundles the spec with the few behavioral
-//!   hooks that are per-platform policy rather than constants (expert
-//!   schedule, worker-pool sizing, persona-calibration fallback,
-//!   whether a CUDA reference acts as cross-platform transfer);
+//!   hooks that are per-platform policy rather than constants (the
+//!   profiler frontend, expert schedule, worker-pool sizing,
+//!   persona-calibration fallback, whether a CUDA reference acts as
+//!   cross-platform transfer);
 //! - [`PlatformRegistry`] (in [`registry`]) maps names and aliases to
 //!   [`PlatformRef`] handles; the CLI, coordinator, agents, baselines
 //!   and harness all resolve platforms through it.
@@ -26,8 +27,9 @@
 //! extension:
 //! - [`cuda`] — discrete H100 SXM5, programmatic `nsys` CSV profiling;
 //! - [`metal`] — unified-memory Apple M4 Max, GUI-screenshot profiling;
-//! - [`rocm`] — discrete MI300X, programmatic `rocprof`-style CSV
-//!   profiling, 64-wide wavefronts, its own unsupported-op list.
+//! - [`rocm`] — discrete MI300X, `rocprof` chrome-trace JSON profiling
+//!   (its own frontend in `profiler/rocprof.rs`), 64-wide wavefronts,
+//!   its own unsupported-op list.
 
 pub mod spec;
 pub mod registry;
@@ -36,8 +38,9 @@ pub mod metal;
 pub mod rocm;
 
 pub use registry::{by_name, registry, PlatformRegistry};
-pub use spec::{LaunchAmortization, PlatformSpec, ProfilerAccess};
+pub use spec::{LaunchAmortization, PlatformSpec};
 
+use crate::profiler::ProfilerFrontendRef;
 use crate::sched::Schedule;
 use std::fmt;
 use std::sync::Arc;
@@ -68,6 +71,23 @@ pub trait Platform: fmt::Debug + Send + Sync {
     /// The accelerator-language name used in prompts.
     fn language(&self) -> &'static str {
         self.spec().language
+    }
+
+    /// The profiling tool this platform exposes — how raw profiles
+    /// become [`crate::profiler::Evidence`] for the analysis agent
+    /// (§6.3's asymmetry: programmatic reports on CUDA/ROCm, scraped
+    /// GUI screenshots on Metal).  Defaults to the nsys CSV frontend,
+    /// the least surprising choice for a programmatically profiled
+    /// accelerator; platforms with their own tooling override this
+    /// (see `profiler/rocprof.rs` for the one-module recipe).
+    ///
+    /// Called once per optimization iteration, so implementations
+    /// should hand out a cached `Arc` (frontends are stateless) rather
+    /// than allocating per call.
+    fn profiler_frontend(&self) -> ProfilerFrontendRef {
+        static NSYS: std::sync::OnceLock<ProfilerFrontendRef> = std::sync::OnceLock::new();
+        NSYS.get_or_init(|| Arc::new(crate::profiler::nsys::NsysFrontend))
+            .clone()
     }
 
     /// The schedule point an expert (or a converged refinement loop)
@@ -111,6 +131,22 @@ mod tests {
             let sched = p.expert_schedule();
             legal::check(&sched, p.spec())
                 .unwrap_or_else(|e| panic!("{}: expert schedule illegal: {e}", p.name()));
+        }
+    }
+
+    #[test]
+    fn profiler_asymmetry_via_frontends() {
+        // the paper's §6.3 asymmetry, now expressed as frontend choice:
+        // CUDA and ROCm expose lossless programmatic tools, Metal only
+        // a lossy rendered-screen scrape — and the tools are distinct
+        let f = |name: &str| by_name(name).unwrap().profiler_frontend();
+        assert_eq!(f("cuda").name(), "nsys");
+        assert_eq!(f("metal").name(), "xcode");
+        assert_eq!(f("rocm").name(), "rocprof");
+        assert!(f("cuda").lossless() && f("rocm").lossless());
+        assert!(!f("metal").lossless());
+        for p in registry().platforms() {
+            assert!(!p.profiler_frontend().part_names().is_empty(), "{}", p.name());
         }
     }
 

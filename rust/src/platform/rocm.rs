@@ -9,18 +9,24 @@
 //! - discrete HBM3 memory like CUDA, but 64-wide wavefronts (CDNA)
 //!   instead of 32-wide warps — the legality checks and schedule
 //!   samplers pick this up from `simd_width` alone;
-//! - programmatic profiling like CUDA (`rocprof` emits CSV), so the
-//!   analysis agent runs the lossless-CSV path, not screen-scraping;
+//! - **its own profiler frontend**: `rocprof` chrome-trace JSON
+//!   (`profiler/rocprof.rs`) with rocprof field names and ns units —
+//!   programmatic and recommendation-grade like nsys, but a genuinely
+//!   different artifact dialect, registered via the one
+//!   [`Platform::profiler_frontend`] hook below;
 //! - hipGraph launch amortization (the HIP port of CUDA graphs) with a
 //!   slightly heavier per-node replay;
 //! - its own unsupported-op list (MIOpen's transposed-3D-conv gap);
-//! - **no dedicated persona calibration rows**: personas fall back to
-//!   their CUDA calibration with a failure-rate haircut — the paper's
-//!   "single-shot example is enough to target a new platform" story.
+//! - named MI300X persona calibration rows in `agents/persona.rs`
+//!   (measured single-shot rates; before those landed, personas rode
+//!   the declared CUDA-fallback prior below, which remains the path
+//!   for platforms newer than their calibration).
 
-use super::spec::{LaunchAmortization, PlatformSpec, ProfilerAccess};
+use super::spec::{LaunchAmortization, PlatformSpec};
 use super::Platform;
+use crate::profiler::ProfilerFrontendRef;
 use crate::sched::schedule::Tile;
+use std::sync::Arc;
 
 /// MI300X (304 CU, 192GB HBM3) device model.
 pub fn mi300x() -> PlatformSpec {
@@ -46,8 +52,6 @@ pub fn mi300x() -> PlatformSpec {
         unified_memory: false,
         // PCIe Gen5 x16 host staging
         h2d_bw: 64e9,
-        // rocprof emits machine-readable CSV, same class as nsys
-        profiler: ProfilerAccess::ProgrammaticCsv,
         // hipGraph: CUDA-graphs port, slightly costlier replay
         launch_amortization: LaunchAmortization::DeviceGraphs {
             replay_per_node_s: 0.5e-6,
@@ -91,6 +95,15 @@ impl Platform for RocmPlatform {
         &["hip", "mi300"]
     }
 
+    /// rocprof chrome-trace JSON — the frontend defined in
+    /// `profiler/rocprof.rs`; this hook is its entire registration.
+    fn profiler_frontend(&self) -> ProfilerFrontendRef {
+        static ROCPROF: std::sync::OnceLock<ProfilerFrontendRef> = std::sync::OnceLock::new();
+        ROCPROF
+            .get_or_init(|| Arc::new(crate::profiler::rocprof::RocprofFrontend))
+            .clone()
+    }
+
     /// One 8-GPU MI300X node, one kernel per GPU at a time.
     fn default_workers(&self) -> usize {
         8
@@ -114,10 +127,17 @@ mod tests {
         assert_eq!(s.platform_id, "rocm");
         assert_eq!(s.simd_width, 64);
         assert!(!s.unified_memory);
-        assert_eq!(s.profiler, ProfilerAccess::ProgrammaticCsv);
         assert!(s.mem_bw > cuda::h100().mem_bw);
         assert!(!s.supports("conv3d_transpose"));
         assert!(s.supports("maxpool3d"));
+    }
+
+    #[test]
+    fn profiles_through_rocprof_not_nsys() {
+        let f = RocmPlatform::new().profiler_frontend();
+        assert_eq!(f.name(), "rocprof");
+        assert!(f.lossless());
+        assert!(f.part_names().contains(&"kernel_trace_json"));
     }
 
     #[test]

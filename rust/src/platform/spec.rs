@@ -9,18 +9,6 @@
 
 use crate::sched::schedule::Tile;
 
-/// How profiling data can be obtained on this platform — the central
-/// asymmetry of the paper (§6.3): CUDA has programmatic APIs (nsys
-/// stats → CSV), Metal only exposes Xcode's GUI, which the paper drove
-/// with cliclick and screenshots.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ProfilerAccess {
-    /// Structured CSV reports, machine-readable (nsys, rocprof).
-    ProgrammaticCsv,
-    /// Rendered screenshots of GUI views; must be parsed visually.
-    GuiScreenshot,
-}
-
 /// How launch overhead amortizes when the schedule's launch-
 /// consolidation lever (`Schedule::use_graphs`) is on.  This is the
 /// platform-specific mechanism behind the §5.1 / §7.2 optimizations.
@@ -80,8 +68,6 @@ pub struct PlatformSpec {
     pub unified_memory: bool,
     /// Host-device transfer bandwidth (bytes/s); unused when unified.
     pub h2d_bw: f64,
-    /// How profiles are accessed on this platform.
-    pub profiler: ProfilerAccess,
     /// How launch overhead amortizes under the `use_graphs` lever.
     pub launch_amortization: LaunchAmortization,
     /// Matmul tile edge (elements) at which the MM engine saturates —
@@ -141,12 +127,6 @@ mod tests {
     fn metal_is_unified_cuda_is_not() {
         assert!(metal::m4_max().unified_memory);
         assert!(!cuda::h100().unified_memory);
-    }
-
-    #[test]
-    fn profiler_asymmetry() {
-        assert_eq!(cuda::h100().profiler, ProfilerAccess::ProgrammaticCsv);
-        assert_eq!(metal::m4_max().profiler, ProfilerAccess::GuiScreenshot);
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! The Evidence IR: what the analysis agent is allowed to see.
+//!
+//! Every profiler frontend — programmatic CSV, rendered screenshots,
+//! trace JSON — ultimately produces an [`Evidence`] value: per-fact
+//! measurements tagged with the [`Fidelity`] the capture path
+//! preserved.  The performance-analysis agent ranks bottlenecks from
+//! `Evidence` alone; it never learns (and never branches on) *how* the
+//! data was captured.  Capture lossiness therefore shows up exactly
+//! where the paper observed it (§6.3, Table 5): as coarser values and
+//! lower recommendation confidence, not as a different code path.
+
+/// How much of a fact survived the capture pipeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fidelity {
+    /// Exact to machine precision (typed records, raw counters).
+    Lossless,
+    /// Rounded to `digits` decimal digits in the fact's canonical unit
+    /// (microseconds for times, fractions for ratios) — what a printed
+    /// report or a rendered screen preserves.
+    Rounded { digits: u32 },
+    /// A label cut to `chars` characters (fixed-width GUI columns).
+    Truncated { chars: usize },
+    /// The capture path lost this fact entirely.
+    Missing,
+}
+
+impl Fidelity {
+    /// Fidelity as a score in [0, 1]: 1 = lossless, 0 = missing.
+    /// Rounding costs more the fewer digits survive; truncation costs
+    /// more the shorter the surviving label.
+    pub fn score(&self) -> f64 {
+        match self {
+            Fidelity::Lossless => 1.0,
+            Fidelity::Rounded { digits } => 1.0 / (1.0 + 10f64.powi(-(*digits as i32))),
+            Fidelity::Truncated { chars } => *chars as f64 / (*chars as f64 + 10.0),
+            Fidelity::Missing => 0.0,
+        }
+    }
+
+    /// The worse (lower-scoring) of two fidelities — the fidelity of
+    /// any value derived from both.
+    pub fn worse(self, other: Fidelity) -> Fidelity {
+        if self.score() <= other.score() {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+/// One captured numeric fact: a value plus the fidelity it arrived at.
+/// A `Missing` measure carries no usable value.
+#[derive(Debug, Clone, Copy)]
+pub struct Measure {
+    value: f64,
+    pub fidelity: Fidelity,
+}
+
+/// Two measures are equal when they carry the same fidelity and the
+/// same usable value; two `Missing` measures are equal (a derived
+/// impl would compare the NaN payload and make missing ≠ missing).
+impl PartialEq for Measure {
+    fn eq(&self, other: &Measure) -> bool {
+        self.fidelity == other.fidelity && self.get() == other.get()
+    }
+}
+
+impl Measure {
+    pub fn lossless(value: f64) -> Measure {
+        Measure { value, fidelity: Fidelity::Lossless }
+    }
+
+    pub fn rounded(value: f64, digits: u32) -> Measure {
+        Measure { value, fidelity: Fidelity::Rounded { digits } }
+    }
+
+    pub fn missing() -> Measure {
+        Measure { value: f64::NAN, fidelity: Fidelity::Missing }
+    }
+
+    pub fn is_missing(&self) -> bool {
+        self.fidelity == Fidelity::Missing
+    }
+
+    /// The value, if the capture path preserved one.
+    pub fn get(&self) -> Option<f64> {
+        if self.is_missing() {
+            None
+        } else {
+            Some(self.value)
+        }
+    }
+
+    /// The value, or `default` when missing.
+    pub fn or(&self, default: f64) -> f64 {
+        self.get().unwrap_or(default)
+    }
+
+    /// Divide two measures; the quotient carries the worse fidelity.
+    pub fn ratio(&self, denom: &Measure) -> Measure {
+        match (self.get(), denom.get()) {
+            (Some(n), Some(d)) => Measure {
+                value: n / d.max(1e-9),
+                fidelity: self.fidelity.worse(denom.fidelity),
+            },
+            _ => Measure::missing(),
+        }
+    }
+}
+
+/// One kernel's evidence row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelEvidence {
+    /// Kernel name as the capture preserved it (GUI columns truncate).
+    pub name: String,
+    pub name_fidelity: Fidelity,
+    pub time_us: Measure,
+    /// Matmul-engine utilization ∈ [0, 1].
+    pub mm_utilization: Measure,
+    /// Memory-bandwidth utilization ∈ [0, 1].
+    pub mem_utilization: Measure,
+    /// Occupancy ∈ [0, 1].
+    pub occupancy: Measure,
+    /// Whether the kernel is compute-bound; `None` when the capture
+    /// path lost the limiter readout.
+    pub compute_bound: Option<bool>,
+}
+
+impl KernelEvidence {
+    /// Sort key for "hottest": preserved time, else memory pressure —
+    /// the same heuristic a human applies to a screen with no time
+    /// column joined.
+    fn heat(&self) -> f64 {
+        self.time_us.get().unwrap_or_else(|| self.mem_utilization.or(0.0))
+    }
+}
+
+/// Everything a profiler frontend recovered about one plan execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evidence {
+    /// Which frontend produced this (provenance only — nothing ranks
+    /// on it).
+    pub frontend: &'static str,
+    pub total_us: Measure,
+    pub launch_overhead_us: Measure,
+    pub busy_fraction: Measure,
+    pub kernels: Vec<KernelEvidence>,
+}
+
+impl Evidence {
+    pub fn n_kernels(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Fraction of wall time lost to launch gaps.
+    pub fn launch_fraction(&self) -> Measure {
+        self.launch_overhead_us.ratio(&self.total_us)
+    }
+
+    /// The single hottest kernel (optimization target).
+    pub fn hottest(&self) -> Option<&KernelEvidence> {
+        self.kernels
+            .iter()
+            .max_by(|a, b| a.heat().partial_cmp(&b.heat()).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// Lowest per-kernel occupancy (missing rows excluded).
+    pub fn min_occupancy(&self) -> Measure {
+        self.kernels
+            .iter()
+            .filter(|k| !k.occupancy.is_missing())
+            .min_by(|a, b| a.occupancy.or(1.0).partial_cmp(&b.occupancy.or(1.0)).unwrap())
+            .map(|k| k.occupancy)
+            .unwrap_or_else(Measure::missing)
+    }
+
+    /// Mean fidelity score across every fact in the evidence ∈ [0, 1].
+    /// This is what the analysis agent surfaces as recommendation
+    /// confidence: lossless frontends score near 1, screen scrapes
+    /// materially lower, and an empty capture scores 0 — evidence with
+    /// no kernel rows cannot support a recommendation, whichever
+    /// frontend produced it.
+    pub fn fidelity_score(&self) -> f64 {
+        if self.kernels.is_empty() {
+            return 0.0;
+        }
+        let mut scores = vec![
+            self.total_us.fidelity.score(),
+            self.launch_overhead_us.fidelity.score(),
+            self.busy_fraction.fidelity.score(),
+        ];
+        for k in &self.kernels {
+            scores.push(k.name_fidelity.score());
+            scores.push(k.time_us.fidelity.score());
+            scores.push(k.mm_utilization.fidelity.score());
+            scores.push(k.mem_utilization.fidelity.score());
+            scores.push(k.occupancy.fidelity.score());
+            scores.push(if k.compute_bound.is_some() { 1.0 } else { 0.0 });
+        }
+        scores.iter().sum::<f64>() / scores.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel(name: &str, t: f64) -> KernelEvidence {
+        KernelEvidence {
+            name: name.to_string(),
+            name_fidelity: Fidelity::Lossless,
+            time_us: Measure::lossless(t),
+            mm_utilization: Measure::lossless(0.5),
+            mem_utilization: Measure::lossless(0.5),
+            occupancy: Measure::lossless(0.5),
+            compute_bound: Some(true),
+        }
+    }
+
+    #[test]
+    fn fidelity_scores_ordered() {
+        let l = Fidelity::Lossless.score();
+        let r3 = Fidelity::Rounded { digits: 3 }.score();
+        let r0 = Fidelity::Rounded { digits: 0 }.score();
+        let t = Fidelity::Truncated { chars: 20 }.score();
+        let m = Fidelity::Missing.score();
+        assert!(l > r3 && r3 > r0 && r0 > m);
+        assert!(t > m && t < l);
+        assert_eq!(m, 0.0);
+        assert_eq!(l, 1.0);
+    }
+
+    #[test]
+    fn worse_picks_lower_score() {
+        let w = Fidelity::Lossless.worse(Fidelity::Rounded { digits: 1 });
+        assert_eq!(w, Fidelity::Rounded { digits: 1 });
+    }
+
+    #[test]
+    fn missing_measure_has_no_value() {
+        let m = Measure::missing();
+        assert_eq!(m.get(), None);
+        assert_eq!(m.or(7.0), 7.0);
+        assert!(Measure::lossless(1.0).ratio(&m).is_missing());
+        // missing == missing (the NaN payload must not leak into eq)
+        assert_eq!(Measure::missing(), Measure::missing());
+        assert_ne!(Measure::missing(), Measure::lossless(1.0));
+    }
+
+    #[test]
+    fn ratio_carries_worse_fidelity() {
+        let n = Measure::rounded(30.0, 1);
+        let d = Measure::lossless(100.0);
+        let r = n.ratio(&d);
+        assert!((r.or(0.0) - 0.3).abs() < 1e-12);
+        assert_eq!(r.fidelity, Fidelity::Rounded { digits: 1 });
+    }
+
+    #[test]
+    fn hottest_prefers_preserved_time_then_pressure() {
+        let mut ev = Evidence {
+            frontend: "test",
+            total_us: Measure::lossless(10.0),
+            launch_overhead_us: Measure::lossless(1.0),
+            busy_fraction: Measure::lossless(0.9),
+            kernels: vec![kernel("a", 2.0), kernel("b", 5.0)],
+        };
+        assert_eq!(ev.hottest().unwrap().name, "b");
+        ev.kernels[0].time_us = Measure::missing();
+        ev.kernels[0].mem_utilization = Measure::lossless(0.99);
+        // "a" has no time; its heat falls back to mem pressure (0.99),
+        // which loses to b's 5us of preserved time
+        assert_eq!(ev.hottest().unwrap().name, "b");
+    }
+
+    #[test]
+    fn fidelity_score_ranks_lossless_above_degraded() {
+        let clean = Evidence {
+            frontend: "clean",
+            total_us: Measure::lossless(10.0),
+            launch_overhead_us: Measure::lossless(1.0),
+            busy_fraction: Measure::lossless(0.9),
+            kernels: vec![kernel("a", 2.0)],
+        };
+        let mut rough = clean.clone();
+        rough.total_us = Measure::rounded(10.0, 1);
+        rough.kernels[0].time_us = Measure::missing();
+        rough.kernels[0].name_fidelity = Fidelity::Truncated { chars: 20 };
+        assert!(clean.fidelity_score() > rough.fidelity_score());
+        assert!(clean.fidelity_score() > 0.99);
+    }
+
+    #[test]
+    fn kernel_free_evidence_scores_zero_everywhere() {
+        // no kernel rows ⇒ no basis for a recommendation, even when
+        // the global counters themselves arrived lossless
+        let empty = Evidence {
+            frontend: "clean",
+            total_us: Measure::lossless(10.0),
+            launch_overhead_us: Measure::lossless(9.0),
+            busy_fraction: Measure::lossless(0.1),
+            kernels: vec![],
+        };
+        assert_eq!(empty.fidelity_score(), 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! The open profiler-frontend API.
+//!
+//! A [`ProfilerFrontend`] is one profiling *tool*: it renders a
+//! platform-neutral [`Profile`] into the artifact that tool actually
+//! produces ([`ProfileArtifact`] — named report parts: CSV tables,
+//! rendered screens, trace JSON) and then interprets that artifact
+//! back into the common [`Evidence`] IR.  The round trip is the point:
+//! whatever the artifact format loses, the `Evidence` honestly reports
+//! as degraded [`super::evidence::Fidelity`], and the analysis agent
+//! downstream never sees anything *but* `Evidence`.
+//!
+//! Frontends are selected per platform via
+//! `Platform::profiler_frontend()`; adding a profiling tool is one new
+//! module implementing this trait plus that one-line hook (see
+//! [`super::rocprof`] for the reference example, and ROADMAP.md's
+//! "Adding a profiler frontend" guide).
+
+use super::evidence::Evidence;
+use super::record::Profile;
+use anyhow::{bail, Result};
+use std::fmt;
+use std::sync::Arc;
+
+/// Shared handle to a profiler frontend.
+pub type ProfilerFrontendRef = Arc<dyn ProfilerFrontend>;
+
+/// The artifact family a frontend produces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Machine-readable CSV report tables (nsys stats).
+    CsvTables,
+    /// Fixed-layout rendered GUI screens (Xcode Instruments).
+    RenderedScreens,
+    /// Trace/stats JSON (rocprof chrome-trace output).
+    TraceJson,
+}
+
+/// One named part of a profiler's report bundle — a CSV table, a
+/// rendered screen, a JSON document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactPart {
+    pub name: &'static str,
+    pub content: String,
+}
+
+/// The full capture a frontend produces for one profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileArtifact {
+    /// The frontend that captured this.
+    pub frontend: &'static str,
+    pub kind: ArtifactKind,
+    pub parts: Vec<ArtifactPart>,
+}
+
+impl ProfileArtifact {
+    /// A part's content by name.
+    pub fn part(&self, name: &str) -> Option<&str> {
+        self.parts
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| p.content.as_str())
+    }
+
+    /// A part's content by name, or an error naming exactly what is
+    /// missing (never a bare count).
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.part(name) {
+            Some(content) => Ok(content),
+            None => bail!(
+                "{} artifact is missing part {name:?} (has: {})",
+                self.frontend,
+                self.part_names().join(", ")
+            ),
+        }
+    }
+
+    /// The part names present, in order.
+    pub fn part_names(&self) -> Vec<&'static str> {
+        self.parts.iter().map(|p| p.name).collect()
+    }
+}
+
+/// One profiling tool: capture a [`Profile`] into that tool's native
+/// artifact, then interpret the artifact into [`Evidence`].
+///
+/// Implementations must be pure functions of the profile (no ambient
+/// state): the coordinator captures and interprets on worker threads.
+pub trait ProfilerFrontend: fmt::Debug + Send + Sync {
+    /// Stable lowercase tool id ("nsys", "xcode", "rocprof").
+    fn name(&self) -> &'static str;
+
+    /// The artifact family this tool emits.
+    fn kind(&self) -> ArtifactKind;
+
+    /// Does the capture path preserve recommendation-grade precision?
+    /// Programmatic report tools say yes; rendered-screen scrapes say
+    /// no.  This is advisory metadata for harness labels — ranking
+    /// reads fidelity from the `Evidence` itself.
+    fn lossless(&self) -> bool;
+
+    /// The named report parts [`ProfilerFrontend::capture`] produces,
+    /// in order.  Interpreters and scrape errors refer to parts by
+    /// these names.
+    fn part_names(&self) -> &'static [&'static str];
+
+    /// Render the profile into this tool's artifact.
+    fn capture(&self, profile: &Profile) -> ProfileArtifact;
+
+    /// Parse an artifact back into the Evidence IR.  Errors name the
+    /// missing or malformed part.
+    fn interpret(&self, artifact: &ProfileArtifact) -> Result<Evidence>;
+
+    /// The full capture → interpret round trip.
+    fn evidence(&self, profile: &Profile) -> Result<Evidence> {
+        self.interpret(&self.capture(profile))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact() -> ProfileArtifact {
+        ProfileArtifact {
+            frontend: "test",
+            kind: ArtifactKind::CsvTables,
+            parts: vec![
+                ArtifactPart { name: "alpha", content: "a".into() },
+                ArtifactPart { name: "beta", content: "b".into() },
+            ],
+        }
+    }
+
+    #[test]
+    fn part_lookup_by_name() {
+        let a = artifact();
+        assert_eq!(a.part("alpha"), Some("a"));
+        assert_eq!(a.part("gamma"), None);
+        assert_eq!(a.require("beta").unwrap(), "b");
+    }
+
+    #[test]
+    fn missing_part_error_names_the_part() {
+        let a = artifact();
+        let err = a.require("gamma").unwrap_err().to_string();
+        assert!(err.contains("gamma"), "{err}");
+        assert!(err.contains("alpha"), "error should list present parts: {err}");
+    }
+}

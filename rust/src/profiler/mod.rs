@@ -1,19 +1,48 @@
-//! Profiling frontends — the paper's central platform asymmetry.
+//! Profiling frontends — the paper's central platform asymmetry, as an
+//! **open plugin API**.
 //!
-//! CUDA: `nsys stats`-style **programmatic CSV** reports (kernel
-//! summary, API summary, memory ops) — [`nsys`].
+//! The paper's analysis agent interprets "diverse profiling data (from
+//! programmatic APIs to GUI-based tools)".  This module makes that
+//! diversity structural instead of a closed enum:
 //!
-//! Metal: no programmatic API.  The paper automated Xcode Instruments
-//! with cliclick and captured **screenshots** of the summary / memory /
-//! timeline views; we reproduce the shape of that pipeline by rendering
-//! the simulated timeline into fixed-layout ASCII "screenshots"
-//! ([`xcode`]) which the performance-analysis agent must *parse back*
-//! ([`parse`]) before it can reason about them — exercising the same
-//! lossy, visual-only path.
+//! - [`record`] — the platform-neutral [`Profile`] extracted from a
+//!   simulation (the ground truth every tool captures *from*);
+//! - [`frontend`] — the [`ProfilerFrontend`] trait: one profiling
+//!   *tool*, which `capture`s a `Profile` into its native
+//!   [`ProfileArtifact`] (named report parts: CSV tables, rendered
+//!   screens, trace JSON) and `interpret`s that artifact back;
+//! - [`evidence`] — the [`Evidence`] IR both steps meet at: per-fact
+//!   values tagged with the [`evidence::Fidelity`] the capture
+//!   preserved (`Lossless` / `Rounded` / `Truncated` / `Missing`).
+//!
+//! Three peer frontends ship in-tree, selected per platform via
+//! `Platform::profiler_frontend()`:
+//!
+//! - [`nsys`] — CUDA's `nsys stats` CSV report family (programmatic,
+//!   recommendation-grade precision);
+//! - [`xcode`] — Metal's Xcode-Instruments path: fixed-layout rendered
+//!   "screenshots" that must be screen-scraped back ([`parse`]),
+//!   reproducing the paper's lossy cliclick+screenshot pipeline;
+//! - [`rocprof`] — ROCm's chrome-trace JSON dialect (own field names,
+//!   ns units, gap-reconstructed launch overhead), landed entirely in
+//!   its own module as proof the API is open.
+//!
+//! The analysis agent consumes **only** [`Evidence`]; nothing outside
+//! this module inspects how profile data was captured.  Capture
+//! lossiness surfaces as degraded fidelity tags and lower
+//! recommendation confidence — not as different agent code paths.
+//! See ROADMAP.md's "Adding a profiler frontend" for the recipe.
 
 pub mod record;
+pub mod evidence;
+pub mod frontend;
 pub mod nsys;
 pub mod xcode;
 pub mod parse;
+pub mod rocprof;
 
+pub use evidence::{Evidence, Fidelity, KernelEvidence, Measure};
+pub use frontend::{
+    ArtifactKind, ArtifactPart, ProfileArtifact, ProfilerFrontend, ProfilerFrontendRef,
+};
 pub use record::{KernelRecord, Profile};

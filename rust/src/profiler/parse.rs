@@ -7,13 +7,25 @@
 //! pixels suffers.  The agent's recommendations on Metal are therefore
 //! made from coarser data than on CUDA, which the paper observed too
 //! (profiling info helps less / less consistently on Metal, Table 5).
+//!
+//! Screens are identified by the view title rendered into their top
+//! border — never by position or count — so a capture with a missing
+//! or garbled view fails with an error naming exactly which view is
+//! absent (the frontend declares its expected views in
+//! [`super::xcode::XcodeFrontend::part_names`]).
 
 use anyhow::{bail, Result};
+
+/// The view titles the capture pipeline renders, in capture order.
+pub const VIEWS: [&str; 3] = ["Summary", "Timeline", "Counters"];
 
 /// A kernel row recovered from the Counters screen.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScrapedKernel {
     pub name: String,
+    /// The GUI column is 20 chars wide: a name that fills it may have
+    /// been cut.
+    pub name_possibly_truncated: bool,
     pub limiter_alu: bool,
     pub alu_pct: f64,
     pub mem_pct: f64,
@@ -22,7 +34,7 @@ pub struct ScrapedKernel {
     pub time_us: Option<f64>,
 }
 
-/// Everything recoverable from the three screenshots.
+/// Everything recoverable from the capture screens.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScrapedProfile {
     pub gpu_time_us: f64,
@@ -47,12 +59,40 @@ fn strip_frame(line: &str) -> &str {
     line.trim_start_matches('│').trim_end_matches('│')
 }
 
-/// Parse the three capture screens (summary, timeline, counters).
-pub fn scrape(screens: &[String]) -> Result<ScrapedProfile> {
-    if screens.len() != 3 {
-        bail!("expected 3 screenshots (summary, timeline, counters), got {}", screens.len());
+/// Does this screen's top border carry the given view title?
+fn is_view(screen: &str, view: &str) -> bool {
+    screen
+        .lines()
+        .next()
+        .map(|top| top.contains(&format!("— {view}")))
+        .unwrap_or(false)
+}
+
+/// Find one view among the captured screens, by rendered title.
+fn find_view<'a>(screens: &'a [String], view: &str) -> Result<&'a str> {
+    for s in screens {
+        if is_view(s, view) {
+            return Ok(s);
+        }
     }
-    let (summary, timeline, counters) = (&screens[0], &screens[1], &screens[2]);
+    let present: Vec<&str> = VIEWS
+        .iter()
+        .copied()
+        .filter(|v| screens.iter().any(|s| is_view(s, v)))
+        .collect();
+    bail!(
+        "capture is missing the {view} view ({} screens captured, recognized views: [{}])",
+        screens.len(),
+        present.join(", ")
+    )
+}
+
+/// Parse the capture screens.  Views are located by title, in any
+/// order; a missing view is reported by name.
+pub fn scrape(screens: &[String]) -> Result<ScrapedProfile> {
+    let summary = find_view(screens, "Summary")?;
+    let timeline = find_view(screens, "Timeline")?;
+    let counters = find_view(screens, "Counters")?;
 
     let mut gpu_time = None;
     let mut overhead = None;
@@ -70,11 +110,24 @@ pub fn scrape(screens: &[String]) -> Result<ScrapedProfile> {
             dispatches = grab_number(l);
         }
     }
-    let (Some(gpu_time), Some(overhead), Some(busy), Some(dispatches)) =
-        (gpu_time, overhead, busy, dispatches)
-    else {
-        bail!("summary screen missing counters");
-    };
+    let missing_counter = [
+        ("GPU Time", gpu_time.is_none()),
+        ("Encoder Overhead", overhead.is_none()),
+        ("GPU Busy", busy.is_none()),
+        ("Dispatches", dispatches.is_none()),
+    ]
+    .iter()
+    .find(|(_, missing)| *missing)
+    .map(|(name, _)| *name);
+    if let Some(name) = missing_counter {
+        bail!("Summary view is missing the {name:?} counter");
+    }
+    let (gpu_time, overhead, busy, dispatches) = (
+        gpu_time.unwrap(),
+        overhead.unwrap(),
+        busy.unwrap(),
+        dispatches.unwrap(),
+    );
 
     // timeline rows: "  name  ...████  123.4us"
     let mut times: Vec<(String, f64)> = Vec::new();
@@ -120,6 +173,7 @@ pub fn scrape(screens: &[String]) -> Result<ScrapedProfile> {
             .find(|(n, _)| *n == name)
             .map(|(_, t)| *t);
         kernels.push(ScrapedKernel {
+            name_possibly_truncated: name.chars().count() >= super::xcode::NAME_W,
             name,
             limiter_alu,
             alu_pct: nums[0],
@@ -129,7 +183,7 @@ pub fn scrape(screens: &[String]) -> Result<ScrapedProfile> {
         });
     }
     if kernels.is_empty() {
-        bail!("counters screen had no kernel rows");
+        bail!("Counters view had no kernel rows");
     }
     Ok(ScrapedProfile {
         gpu_time_us: gpu_time,
@@ -144,6 +198,7 @@ pub fn scrape(screens: &[String]) -> Result<ScrapedProfile> {
 mod tests {
     use super::*;
     use crate::profiler::record::tests::sample_profile;
+    use crate::profiler::record::{KernelRecord, Profile};
     use crate::profiler::xcode::capture_screens;
 
     #[test]
@@ -176,14 +231,109 @@ mod tests {
     }
 
     #[test]
-    fn wrong_screen_count_rejected() {
-        assert!(scrape(&[]).is_err());
-        assert!(scrape(&vec!["x".to_string(); 2]).is_err());
+    fn views_found_in_any_order() {
+        let p = sample_profile();
+        let mut screens = capture_screens(&p);
+        screens.reverse();
+        let scraped = scrape(&screens).unwrap();
+        assert_eq!(scraped.dispatches, p.kernels.len());
     }
 
     #[test]
-    fn garbage_rejected() {
+    fn missing_view_error_names_it() {
+        let p = sample_profile();
+        let screens = capture_screens(&p);
+        // drop the timeline view: the error must say so by name
+        let partial: Vec<String> = screens
+            .iter()
+            .filter(|s| !s.contains("Timeline"))
+            .cloned()
+            .collect();
+        let err = scrape(&partial).unwrap_err().to_string();
+        assert!(err.contains("Timeline"), "{err}");
+        assert!(err.contains("Summary"), "error should list recognized views: {err}");
+        // empty capture names the first missing view, not a bare count
+        let err = scrape(&[]).unwrap_err().to_string();
+        assert!(err.contains("Summary"), "{err}");
+    }
+
+    #[test]
+    fn garbage_rejected_with_named_view() {
         let garbage = vec!["not a screen".to_string(); 3];
-        assert!(scrape(&garbage).is_err());
+        let err = scrape(&garbage).unwrap_err().to_string();
+        assert!(err.contains("Summary"), "{err}");
+    }
+
+    #[test]
+    fn truncated_summary_screen_names_lost_counter() {
+        let p = sample_profile();
+        let screens = capture_screens(&p);
+        // keep the title line but chop the body: counters are gone
+        let chopped: String = screens[0].lines().take(2).collect::<Vec<_>>().join("\n");
+        let err = scrape(&[chopped, screens[1].clone(), screens[2].clone()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("GPU Time"), "{err}");
+    }
+
+    fn synthetic_profile(names: &[&str]) -> Profile {
+        Profile {
+            workload: "synthetic".into(),
+            platform: "Test GPU".into(),
+            kernels: names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| KernelRecord {
+                    name: n.to_string(),
+                    time_us: 10.0 + i as f64,
+                    pct_of_total: 40.0,
+                    gap_before_us: 2.0,
+                    mm_utilization: 0.4,
+                    mem_utilization: 0.7,
+                    occupancy: 0.5,
+                    compute_bound: i % 2 == 0,
+                })
+                .collect(),
+            total_us: 50.0,
+            launch_overhead_us: 4.0,
+            busy_fraction: 0.8,
+            total_flops: 1e9,
+            total_bytes: 1e6,
+        }
+    }
+
+    #[test]
+    fn long_kernel_names_truncate_but_scrape() {
+        let p = synthetic_profile(&[
+            "matmul_with_an_extremely_long_epilogue_fusion_name",
+            "softmax_0",
+        ]);
+        let scraped = scrape(&capture_screens(&p)).unwrap();
+        assert_eq!(scraped.kernels.len(), 2);
+        let long = &scraped.kernels[0];
+        assert_eq!(long.name.chars().count(), crate::profiler::xcode::NAME_W);
+        assert!(long.name_possibly_truncated);
+        // the op-family prefix survives the 20-char column
+        assert!(long.name.starts_with("matmul"));
+        assert!(!scraped.kernels[1].name_possibly_truncated);
+    }
+
+    #[test]
+    fn multibyte_kernel_names_never_panic() {
+        // names with multibyte chars around the truncation boundary:
+        // rendering must clip on char boundaries and still scrape
+        let p = synthetic_profile(&[
+            "matmul_αβγδεζηθικλμνξοπρστυ",
+            "softmax_日本語カーネル名前が長い場合",
+        ]);
+        let screens = capture_screens(&p);
+        for s in &screens {
+            for l in s.lines() {
+                assert_eq!(l.chars().count(), crate::profiler::xcode::SCREEN_W, "{l:?}");
+            }
+        }
+        let scraped = scrape(&screens).unwrap();
+        assert_eq!(scraped.kernels.len(), 2);
+        assert!(scraped.kernels.iter().all(|k| k.name_possibly_truncated));
     }
 }

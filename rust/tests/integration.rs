@@ -150,6 +150,18 @@ fn registry_platforms_round_trip_through_the_whole_api() {
     for platform in kforge::platform::registry().platforms() {
         let spec = platform.spec();
         assert!(spec.peak_flops_f32 > 0.0 && spec.mem_bw > 0.0, "{}", platform.name());
+        // the profiler frontend round-trips a real profile to Evidence
+        let frontend = platform.profiler_frontend();
+        assert!(!frontend.name().is_empty());
+        let plan = kforge::perfsim::lower::lower(&problem.perf_graph, &kforge::sched::Schedule::naive());
+        let mut rng = kforge::util::rng::Pcg::seed(3);
+        let sim = kforge::perfsim::simulate(spec, &plan, &mut rng, 10, 2);
+        let profile = kforge::profiler::Profile::from_sim(&problem.id, spec.name, &sim);
+        let evidence = frontend
+            .evidence(&profile)
+            .unwrap_or_else(|e| panic!("{}: frontend {} failed: {e:#}", platform.name(), frontend.name()));
+        assert_eq!(evidence.n_kernels(), profile.kernels.len(), "{}", platform.name());
+        assert!(evidence.fidelity_score() > 0.0, "{}", platform.name());
         // the prompt renders with the platform's language and no holes
         let prompt = kforge::agents::prompt::synthesis_prompt(spec, problem, None, None, None);
         assert!(prompt.contains(platform.language()), "{}", platform.name());
@@ -191,8 +203,8 @@ fn rocm_level1_problem_end_to_end() {
             best_seen = Some(t);
         }
     }
-    // gpt-5's fallback prior on rocm is ~0.8 at L1 over 5 iterations:
-    // at least one of the sampled problems must complete correctly
+    // gpt-5's named MI300X calibration row is 0.80 at L1 over 5
+    // iterations: at least one sampled problem must complete correctly
     assert!(best_seen.is_some(), "no correct rocm candidate across L1 sample");
 }
 

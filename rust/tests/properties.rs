@@ -178,6 +178,98 @@ fn prop_profile_screenshot_roundtrip_bounded_loss() {
 }
 
 #[test]
+fn prop_frontends_agree_on_dominant_bottleneck() {
+    // every frontend — lossless nsys/rocprof and the scraped xcode
+    // screens — identifies the same hottest kernel on random profiles
+    // (modulo the 20-char name column), whenever the top-2 gap exceeds
+    // the coarsest frontend's rounding resolution
+    use kforge::profiler::nsys::NsysFrontend;
+    use kforge::profiler::rocprof::RocprofFrontend;
+    use kforge::profiler::xcode::XcodeFrontend;
+    use kforge::profiler::{KernelRecord, Profile, ProfilerFrontend};
+    let names = [
+        "matmul_0",
+        "softmax_1",
+        "layernorm_with_a_fused_bias_epilogue_2",
+        "conv_3",
+        "swish_4",
+        "attention_projection_packed_qkv_5",
+    ];
+    let mut rng = Pcg::seed(0xB0771E);
+    let mut checked = 0;
+    for case in 0..80 {
+        let n_kernels = rng.range_i64(2, 6) as usize;
+        let mut kernels = Vec::new();
+        let mut total = 0.0;
+        let mut launch = 0.0;
+        for i in 0..n_kernels {
+            let time = rng.range_f64(1.0, 100.0);
+            let gap = rng.range_f64(0.5, 10.0);
+            total += time + gap;
+            launch += gap;
+            kernels.push(KernelRecord {
+                name: names[i].to_string(),
+                time_us: time,
+                pct_of_total: 0.0, // filled below once total is known
+                gap_before_us: gap,
+                mm_utilization: rng.uniform(),
+                mem_utilization: rng.uniform(),
+                occupancy: rng.uniform(),
+                compute_bound: rng.chance(0.5),
+            });
+        }
+        let busy = (total - launch) / total;
+        for k in &mut kernels {
+            k.pct_of_total = 100.0 * k.time_us / total;
+        }
+        let profile = Profile {
+            workload: "prop".into(),
+            platform: "Prop GPU".into(),
+            kernels,
+            total_us: total,
+            launch_overhead_us: launch,
+            busy_fraction: busy,
+            total_flops: 1e9,
+            total_bytes: 1e6,
+        };
+        // skip near-ties: below the screenshot's 0.1us print resolution
+        // no frontend is obliged to order the top two consistently
+        let mut times: Vec<f64> = profile.kernels.iter().map(|k| k.time_us).collect();
+        times.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        if times[0] - times[1] < 0.3 {
+            continue;
+        }
+        checked += 1;
+        let truth = profile
+            .kernels
+            .iter()
+            .max_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap())
+            .unwrap();
+        for frontend in [
+            &NsysFrontend as &dyn ProfilerFrontend,
+            &RocprofFrontend,
+            &XcodeFrontend,
+        ] {
+            let ev = frontend
+                .evidence(&profile)
+                .unwrap_or_else(|e| panic!("case {case} {}: {e:#}", frontend.name()));
+            let hot = ev.hottest().unwrap_or_else(|| panic!("{}: no hottest", frontend.name()));
+            // scraped names are clipped to the GUI column width; a
+            // lossless frontend must match exactly
+            let clipped: String = truth.name.chars().take(20).collect();
+            assert!(
+                hot.name == truth.name || hot.name == clipped,
+                "case {case} {}: hottest {:?} != true hottest {:?}",
+                frontend.name(),
+                hot.name,
+                truth.name
+            );
+        }
+    }
+    assert!(checked >= 40, "only {checked} informative cases");
+}
+
+#[test]
 fn prop_verification_deterministic_across_runs() {
     use kforge::agents::GenerationAgent;
     let suite = kforge::workloads::Suite::sample(4);
