@@ -1,0 +1,115 @@
+//! Per-platform census artifact: the data-driven facts a platform
+//! contributes to the system, rendered deterministically.
+//!
+//! One of these exists per registered platform, so the golden set
+//! notices when a platform's spec, suite filter, profiler frontend or
+//! persona calibration drifts — the facts every paper artifact is
+//! downstream of, caught before they smear into campaign numbers.
+
+use crate::agents::persona::PERSONAS;
+use crate::harness::Artifact;
+use crate::platform::Platform;
+use crate::workloads::Suite;
+
+/// The census artifact for one platform (`census_<name>`).
+pub fn artifact(platform: &dyn Platform) -> Artifact {
+    Artifact::new(format!("census_{}", platform.name()), render(platform))
+}
+
+/// Render the census text for one platform.
+pub fn render(platform: &dyn Platform) -> String {
+    let spec = platform.spec();
+    let full = Suite::full();
+    let filtered = full.supported_on(spec);
+    let (l1, l2, l3) = filtered.distribution();
+    let frontend = platform.profiler_frontend();
+    let mut out = format!("== Census: {} ({}) ==\n", platform.name(), spec.name);
+    out.push_str(&format!("language: {}\n", platform.language()));
+    out.push_str(&format!(
+        "aliases: {}\n",
+        if platform.aliases().is_empty() {
+            "(none)".to_string()
+        } else {
+            platform.aliases().join(", ")
+        }
+    ));
+    out.push_str(&format!(
+        "simd width: {} | max threadgroup: {} | cores: {} | unified memory: {}\n",
+        spec.simd_width, spec.max_threadgroup, spec.num_cores, spec.unified_memory
+    ));
+    out.push_str(&format!(
+        "mem bandwidth: {:.0} GB/s | onchip: {} KiB | default workers: {}\n",
+        spec.mem_bw / 1e9,
+        spec.onchip_bytes / 1024,
+        platform.default_workers()
+    ));
+    out.push_str(&format!(
+        "suite: L1={l1} L2={l2} L3={l3} (supported {}/{})\n",
+        filtered.len(),
+        full.len()
+    ));
+    out.push_str(&format!(
+        "unsupported ops: {}\n",
+        if spec.unsupported_ops.is_empty() {
+            "(none)".to_string()
+        } else {
+            spec.unsupported_ops.join(", ")
+        }
+    ));
+    out.push_str(&format!(
+        "profiler frontend: {}{}\n",
+        frontend.name(),
+        if frontend.lossless() { "" } else { " (lossy)" }
+    ));
+    out.push_str(&format!(
+        "reference transfer: {} | calibration fallback: {} x{:.2}\n",
+        platform.reference_transfer(),
+        platform.calibration_fallback().0,
+        platform.calibration_fallback().1
+    ));
+    out.push_str("single-shot priors (L1/L2/L3):\n");
+    for persona in PERSONAS {
+        let row = persona.single_shot(platform);
+        out.push_str(&format!(
+            "  {:<18} {:.2}/{:.2}/{:.2}\n",
+            persona.name, row[0], row[1], row[2]
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::registry;
+
+    #[test]
+    fn census_is_deterministic_and_names_the_platform() {
+        for platform in registry().platforms() {
+            let a = render(&**platform);
+            let b = render(&**platform);
+            assert_eq!(a, b);
+            assert!(a.contains(platform.name()));
+            assert!(a.contains(platform.language()));
+            assert!(a.contains("single-shot priors"));
+        }
+    }
+
+    #[test]
+    fn census_reflects_the_suite_filter() {
+        let metal = crate::platform::by_name("metal").unwrap();
+        let text = render(&*metal);
+        // the Table-2 Metal numbers, via the platform's own filter
+        assert!(text.contains("L1=91 L2=79 L3=50"), "{text}");
+        assert!(text.contains("conv3d_transpose"), "{text}");
+    }
+
+    #[test]
+    fn census_has_a_row_per_persona() {
+        let cuda = crate::platform::by_name("cuda").unwrap();
+        let text = render(&*cuda);
+        for persona in PERSONAS {
+            assert!(text.contains(persona.name), "{} missing", persona.name);
+        }
+    }
+}

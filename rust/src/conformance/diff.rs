@@ -1,0 +1,124 @@
+//! Cell-level golden diffing.
+//!
+//! Harness artifacts are fixed-width tables (two-space column gutters,
+//! see `harness::render`), so a drifted artifact is best reported as
+//! *which cell moved*, with the full golden/current lines as context —
+//! not as an opaque byte mismatch.
+
+/// Maximum drifted lines detailed per artifact before eliding.
+const MAX_DETAILED_LINES: usize = 8;
+
+/// Split a rendered table line into cells on the two-space gutter.
+/// Cells may contain single spaces ("Level 1"); gutters are always at
+/// least two.
+fn cells(line: &str) -> Vec<String> {
+    line.split("  ")
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect()
+}
+
+/// Compare a golden artifact against its re-render.  `None` means
+/// byte-identical; otherwise a human-readable drift report naming every
+/// drifted cell with line context.
+pub fn cell_diff(name: &str, golden: &str, current: &str) -> Option<String> {
+    if golden == current {
+        return None;
+    }
+    let gl: Vec<&str> = golden.lines().collect();
+    let cl: Vec<&str> = current.lines().collect();
+    let mut out = format!("artifact {name}: drift from golden\n");
+    if gl.len() != cl.len() {
+        out.push_str(&format!(
+            "  line count: golden {} vs current {}\n",
+            gl.len(),
+            cl.len()
+        ));
+    }
+    let mut detailed = 0;
+    let mut drifted_lines = 0;
+    for (i, (g, c)) in gl.iter().zip(&cl).enumerate() {
+        if g == c {
+            continue;
+        }
+        drifted_lines += 1;
+        if detailed >= MAX_DETAILED_LINES {
+            continue;
+        }
+        detailed += 1;
+        out.push_str(&format!("  line {}:\n", i + 1));
+        out.push_str(&format!("    golden  | {g}\n"));
+        out.push_str(&format!("    current | {c}\n"));
+        let gc = cells(g);
+        let cc = cells(c);
+        if gc.len() != cc.len() {
+            out.push_str(&format!(
+                "    cell count: golden {} vs current {}\n",
+                gc.len(),
+                cc.len()
+            ));
+        }
+        for (col, (a, b)) in gc.iter().zip(&cc).enumerate() {
+            if a != b {
+                out.push_str(&format!("    cell {col}: {a:?} -> {b:?}\n"));
+            }
+        }
+    }
+    if drifted_lines > detailed {
+        out.push_str(&format!(
+            "  … {} further drifted lines elided\n",
+            drifted_lines - detailed
+        ));
+    }
+    // lines present on only one side
+    let common = gl.len().min(cl.len());
+    for (label, side) in [("golden only", &gl), ("current only", &cl)] {
+        for (k, line) in side.iter().enumerate().skip(common).take(3) {
+            out.push_str(&format!("  line {} ({label}): {line}\n", k + 1));
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_text_is_no_drift() {
+        assert!(cell_diff("t", "a  b\nc  d\n", "a  b\nc  d\n").is_none());
+    }
+
+    #[test]
+    fn single_cell_drift_names_line_column_and_values() {
+        let golden = "== T ==\nModel  L1  L2\ngpt  0.90  0.80\n";
+        let current = "== T ==\nModel  L1  L2\ngpt  0.90  0.75\n";
+        let report = cell_diff("t", golden, current).unwrap();
+        assert!(report.contains("line 3"), "{report}");
+        assert!(report.contains("cell 2"), "{report}");
+        assert!(report.contains("\"0.80\" -> \"0.75\""), "{report}");
+        assert!(report.contains("golden  | gpt  0.90  0.80"), "{report}");
+    }
+
+    #[test]
+    fn cells_keep_single_spaces() {
+        assert_eq!(cells("Benchmark  Level 1  Level 2"), vec!["Benchmark", "Level 1", "Level 2"]);
+        assert_eq!(cells("a     b"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn extra_lines_are_reported() {
+        let report = cell_diff("t", "a\n", "a\nb\nc\n").unwrap();
+        assert!(report.contains("line count: golden 1 vs current 3"), "{report}");
+        assert!(report.contains("current only"), "{report}");
+    }
+
+    #[test]
+    fn long_drifts_are_elided() {
+        let golden: String = (0..40).map(|i| format!("row {i}  x\n")).collect();
+        let current: String = (0..40).map(|i| format!("row {i}  y\n")).collect();
+        let report = cell_diff("t", &golden, &current).unwrap();
+        assert!(report.contains("further drifted lines elided"), "{report}");
+    }
+}

@@ -1,0 +1,232 @@
+//! Golden-artifact storage: bless and check against `goldens/`.
+//!
+//! Layout: one `<artifact-name>.txt` per rendered artifact, byte-exact.
+//! `bless` makes the directory mirror the render set (stale files are
+//! removed); `check` reports missing, drifted and stale artifacts —
+//! all three fail, because a stale golden is how a silently deleted
+//! artifact hides.
+
+use super::diff;
+use crate::harness::Artifact;
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Default golden directory, relative to the repo root.
+pub const DEFAULT_DIR: &str = "goldens";
+
+/// A drifted artifact: name plus the cell-level report.
+#[derive(Debug, Clone)]
+pub struct Drift {
+    pub name: String,
+    pub report: String,
+}
+
+/// Outcome of a conformance check.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Artifacts compared (rendered set size).
+    pub checked: usize,
+    /// Rendered artifacts with no committed golden.
+    pub missing: Vec<String>,
+    /// Artifacts whose golden differs from the fresh render.
+    pub drifted: Vec<Drift>,
+    /// Golden files no rendered artifact claims (deleted artifact or
+    /// typo'd name — either way a rot vector).
+    pub stale: Vec<String>,
+}
+
+impl Report {
+    pub fn passed(&self) -> bool {
+        self.checked > 0
+            && self.missing.is_empty()
+            && self.drifted.is_empty()
+            && self.stale.is_empty()
+    }
+
+    /// Was the golden directory simply never blessed?  (Distinct from
+    /// drift: the fix is `--bless` + commit, not a code review.)
+    pub fn unblessed(&self) -> bool {
+        self.missing.len() == self.checked && self.drifted.is_empty()
+    }
+
+    pub fn summary(&self) -> String {
+        if self.passed() {
+            return format!("conformance OK: {} artifacts match their goldens", self.checked);
+        }
+        let mut out = format!(
+            "conformance FAILED: {} checked, {} missing, {} drifted, {} stale\n",
+            self.checked,
+            self.missing.len(),
+            self.drifted.len(),
+            self.stale.len()
+        );
+        if !self.missing.is_empty() {
+            out.push_str(&format!("  missing goldens: {}\n", self.missing.join(", ")));
+        }
+        for d in &self.drifted {
+            out.push_str(&format!("  drifted: {}\n", d.name));
+        }
+        if !self.stale.is_empty() {
+            out.push_str(&format!("  stale goldens: {}\n", self.stale.join(", ")));
+        }
+        if self.unblessed() {
+            out.push_str("  (no goldens committed yet — run `kforge conformance --bless` and commit goldens/)\n");
+        }
+        out
+    }
+
+    /// Every drift report concatenated (written to `--out` for CI
+    /// artifact upload).
+    pub fn full_diff(&self) -> String {
+        self.drifted
+            .iter()
+            .map(|d| d.report.as_str())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+fn golden_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.txt"))
+}
+
+/// Write the rendered artifacts into `dir` (shared by bless and the
+/// CI `--out` capture).  Does not remove anything.
+pub fn write_artifacts(dir: &Path, arts: &[Artifact]) -> Result<()> {
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    for a in arts {
+        let path = golden_path(dir, &a.name);
+        fs::write(&path, &a.text).with_context(|| format!("writing {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Golden `.txt` files present in `dir`, by artifact name.
+fn present(dir: &Path) -> Vec<String> {
+    let mut names = Vec::new();
+    if let Ok(entries) = fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("txt") {
+                if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+    }
+    names.sort();
+    names
+}
+
+/// Bless: make `dir` mirror `arts` exactly.  Returns the blessed
+/// names; stale files are removed so a deleted artifact cannot leave a
+/// zombie golden behind.
+pub fn bless_with(dir: &Path, arts: &[Artifact]) -> Result<Vec<String>> {
+    write_artifacts(dir, arts)?;
+    let rendered: Vec<&str> = arts.iter().map(|a| a.name.as_str()).collect();
+    for stale in present(dir).iter().filter(|n| !rendered.contains(&n.as_str())) {
+        let path = golden_path(dir, stale);
+        fs::remove_file(&path).with_context(|| format!("removing stale {}", path.display()))?;
+    }
+    Ok(arts.iter().map(|a| a.name.clone()).collect())
+}
+
+/// Check `arts` against the goldens in `dir`.
+pub fn check_against(dir: &Path, arts: &[Artifact]) -> Result<Report> {
+    let mut report = Report {
+        checked: arts.len(),
+        ..Report::default()
+    };
+    for a in arts {
+        let path = golden_path(dir, &a.name);
+        match fs::read_to_string(&path) {
+            Err(_) => report.missing.push(a.name.clone()),
+            Ok(golden) => {
+                if let Some(d) = diff::cell_diff(&a.name, &golden, &a.text) {
+                    report.drifted.push(Drift {
+                        name: a.name.clone(),
+                        report: d,
+                    });
+                }
+            }
+        }
+    }
+    let rendered: Vec<&str> = arts.iter().map(|a| a.name.as_str()).collect();
+    report.stale = present(dir)
+        .into_iter()
+        .filter(|n| !rendered.contains(&n.as_str()))
+        .collect();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art(name: &str, text: &str) -> Artifact {
+        Artifact::new(name, text.to_string())
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("kforge_golden_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn bless_check_round_trip_and_drift() {
+        let dir = tmp("rt");
+        let arts = vec![art("a", "x  1\n"), art("b", "y  2\n")];
+        bless_with(&dir, &arts).unwrap();
+        let ok = check_against(&dir, &arts).unwrap();
+        assert!(ok.passed(), "{}", ok.summary());
+
+        let drifted = vec![art("a", "x  9\n"), art("b", "y  2\n")];
+        let bad = check_against(&dir, &drifted).unwrap();
+        assert!(!bad.passed());
+        assert_eq!(bad.drifted.len(), 1);
+        assert_eq!(bad.drifted[0].name, "a");
+        assert!(bad.drifted[0].report.contains("\"1\" -> \"9\""), "{}", bad.drifted[0].report);
+        assert!(bad.summary().contains("drifted: a"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_and_stale_goldens_fail() {
+        let dir = tmp("ms");
+        let arts = vec![art("a", "1\n"), art("b", "2\n")];
+        bless_with(&dir, &arts).unwrap();
+        // a new artifact appears → missing
+        let grown = vec![art("a", "1\n"), art("b", "2\n"), art("c", "3\n")];
+        let r = check_against(&dir, &grown).unwrap();
+        assert_eq!(r.missing, vec!["c".to_string()]);
+        assert!(!r.passed());
+        // an artifact disappears → its golden is stale
+        let shrunk = vec![art("a", "1\n")];
+        let r = check_against(&dir, &shrunk).unwrap();
+        assert_eq!(r.stale, vec!["b".to_string()]);
+        assert!(!r.passed());
+        // bless with the shrunk set removes the zombie
+        bless_with(&dir, &shrunk).unwrap();
+        assert!(check_against(&dir, &shrunk).unwrap().passed());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unblessed_directory_is_distinguished() {
+        let dir = tmp("ub");
+        let arts = vec![art("a", "1\n")];
+        let r = check_against(&dir, &arts).unwrap();
+        assert!(!r.passed());
+        assert!(r.unblessed());
+        assert!(r.summary().contains("--bless"), "{}", r.summary());
+    }
+
+    #[test]
+    fn empty_render_set_never_passes() {
+        let dir = tmp("er");
+        let r = check_against(&dir, &[]).unwrap();
+        assert!(!r.passed());
+    }
+}

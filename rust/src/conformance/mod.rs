@@ -1,0 +1,99 @@
+//! The conformance subsystem: what the system computes, pinned.
+//!
+//! Two PRs of open plugin APIs (platforms, profiler frontends) made the
+//! codebase easy to refactor aggressively — and nothing pinned the
+//! results those refactors must preserve.  This module is that pin,
+//! with three legs:
+//!
+//! - **Golden paper artifacts** ([`golden`], [`diff`], [`census`]):
+//!   every paper table/figure (via the harness modules' `artifact`
+//!   hooks) plus a per-registered-platform census is rendered to
+//!   canonical text and compared cell-by-cell against the committed
+//!   `goldens/` directory.  `kforge conformance` checks; `kforge
+//!   conformance --bless` regenerates.
+//! - **Differential KIR fuzzing** ([`crate::kir::fuzz`]): thousands of
+//!   seeded random graphs assert that every rewrite pass (and the full
+//!   pipeline in any order) preserves interpreter semantics and
+//!   validator invariants — see `rust/tests/conformance.rs`.
+//! - **Synthetic workloads** ([`crate::workloads::synth`]):
+//!   `Suite::synthetic(seed, n)` promotes the fuzz generator into an
+//!   unbounded campaign source.
+//!
+//! Every later scale/speed refactor in the ROADMAP lands against this
+//! gate instead of vibes.
+
+pub mod census;
+pub mod diff;
+pub mod golden;
+
+use crate::harness::{self, Artifact, Scale};
+use crate::platform::registry;
+
+/// The scale golden artifacts are rendered at.  Small enough that a
+/// bless/check cycle is a CI-friendly minute, large enough that every
+/// campaign-driven artifact carries real rows.  Changing this constant
+/// changes every golden — re-bless deliberately.
+pub const SCALE: Scale = Scale::Quick(4);
+
+/// Render the full golden artifact set at `scale`, in a stable order:
+/// a manifest, the nine paper artifacts, then one census per registered
+/// platform.  Registering a new platform therefore *adds* a golden —
+/// the check fails until the new platform's artifact is blessed, which
+/// is exactly the review moment the conformance gate exists to force.
+///
+/// The manifest records the render scale, so goldens blessed at one
+/// `--quick` scale and checked at another fail on a single explicit
+/// `scale:` cell instead of a wall of spurious numeric drift.
+pub fn render_all(scale: Scale) -> Vec<Artifact> {
+    let mut arts = harness::artifacts(scale);
+    for platform in registry().platforms() {
+        arts.push(census::artifact(&**platform));
+    }
+    let mut manifest = format!("scale: {scale:?}\nartifacts: {}\n", arts.len() + 1);
+    for a in &arts {
+        manifest.push_str(&format!("- {}\n", a.name));
+    }
+    arts.insert(0, Artifact::new("manifest", manifest));
+    arts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_artifacts_cover_every_registered_platform() {
+        // census rendering is cheap (no campaigns), so run it directly
+        let names: Vec<String> = registry()
+            .platforms()
+            .iter()
+            .map(|p| census::artifact(&**p).name)
+            .collect();
+        for p in registry().platforms() {
+            assert!(names.contains(&format!("census_{}", p.name())));
+        }
+    }
+
+    #[test]
+    fn scale_constant_is_quick() {
+        // the golden set must never silently run at Full scale (hours)
+        assert!(matches!(SCALE, Scale::Quick(n) if n >= 2));
+    }
+
+    #[test]
+    fn manifest_leads_and_records_the_scale() {
+        // cheap structural check without campaign artifacts: the
+        // manifest text is derived, not rendered, so exercise its
+        // format against a hand-built artifact list
+        let arts = vec![
+            Artifact::new("a", "1".into()),
+            Artifact::new("b", "2".into()),
+        ];
+        let mut manifest = format!("scale: {:?}\nartifacts: {}\n", SCALE, arts.len() + 1);
+        for a in &arts {
+            manifest.push_str(&format!("- {}\n", a.name));
+        }
+        assert!(manifest.contains("scale: Quick(4)"), "{manifest}");
+        assert!(manifest.contains("- a\n- b\n"));
+    }
+}

@@ -285,6 +285,51 @@ mod tests {
     }
 
     #[test]
+    fn campaign_bitwise_identical_across_worker_pool_sizes() {
+        // the worker.rs doc comment claims pool size never changes
+        // results; pin that for the real §3 loop (not just a pure
+        // closure): every field of every TaskResult, f64s compared by
+        // bit pattern, for 1, 4 and 16 workers on the same config
+        let suite = Suite::sample(3);
+        let mut base = small_cfg("cuda", 2);
+        base.personas = vec![
+            by_name("openai-gpt-5").unwrap(),
+            by_name("deepseek-v3").unwrap(),
+        ];
+        let runs: Vec<CampaignResult> = [1usize, 4, 16]
+            .iter()
+            .map(|&w| {
+                let mut cfg = base.clone();
+                cfg.workers = w;
+                run_campaign(&suite, None, &cfg)
+            })
+            .collect();
+        assert_eq!(runs[0].results.len(), 18); // 2 personas × 9 problems
+        for run in &runs[1..] {
+            assert_eq!(run.results.len(), runs[0].results.len());
+            for (a, b) in runs[0].results.iter().zip(&run.results) {
+                assert_eq!(a.problem_id, b.problem_id);
+                assert_eq!(a.persona, b.persona);
+                assert_eq!(a.level, b.level);
+                assert_eq!(a.state_history, b.state_history);
+                assert_eq!(a.outcome.correct, b.outcome.correct, "{}", a.problem_id);
+                assert_eq!(
+                    a.outcome.speedup.to_bits(),
+                    b.outcome.speedup.to_bits(),
+                    "{}",
+                    a.problem_id
+                );
+                assert_eq!(a.best_iteration, b.best_iteration);
+                assert_eq!(a.baseline_s.to_bits(), b.baseline_s.to_bits());
+                assert_eq!(
+                    a.best_candidate_s.map(f64::to_bits),
+                    b.best_candidate_s.map(f64::to_bits)
+                );
+            }
+        }
+    }
+
+    #[test]
     fn iterations_improve_correctness() {
         let suite = Suite::sample(6);
         let one = run_campaign(&suite, None, &small_cfg("cuda", 1));

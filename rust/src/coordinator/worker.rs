@@ -5,12 +5,35 @@
 //! return in job order regardless of scheduling, and each job's
 //! determinism comes from its own forked RNG stream (see
 //! `experiment::run_task`), so the pool size never changes results.
+//!
+//! Panic behavior: a panicking job no longer takes its worker thread
+//! (and the rest of that thread's queue share) down with it, and the
+//! panic is re-raised *naming the job index* — by job order, not by
+//! nondeterministic thread timing — once every other job has finished.
+//! Before this, the panic surfaced either as the scoped-thread join's
+//! opaque payload or as the result slot's `expect("job completed")`,
+//! with no way to tell which job died.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Best-effort panic payload rendering (panics carry `&str` or
+/// `String` in practice; anything else is labeled as such).
+fn payload_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run `jobs` across `workers` threads with `f`, preserving job order
-/// in the returned vector.
+/// in the returned vector.  If any job panics, the panic is re-raised
+/// on the calling thread as `"job <i> panicked: <message>"` for the
+/// smallest failing job index.
 pub fn run_jobs<J, R, F>(workers: usize, jobs: &[J], f: F) -> Vec<R>
 where
     J: Sync,
@@ -22,7 +45,8 @@ where
     }
     let n = jobs.len();
     let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let results: Vec<Mutex<Option<std::thread::Result<R>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
     let workers = workers.clamp(1, n);
     std::thread::scope(|scope| {
         for _ in 0..workers {
@@ -31,15 +55,25 @@ where
                 if i >= n {
                     break;
                 }
-                let r = f(&jobs[i]);
+                let r = catch_unwind(AssertUnwindSafe(|| f(&jobs[i])));
                 *results[i].lock().unwrap() = Some(r);
             });
         }
     });
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("job completed"))
-        .collect()
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in results.into_iter().enumerate() {
+        match slot.into_inner().unwrap() {
+            Some(Ok(r)) => out.push(r),
+            Some(Err(payload)) => {
+                panic!("job {i} panicked: {}", payload_text(&*payload))
+            }
+            // every index below n is claimed exactly once and its slot
+            // filled before the worker moves on; the scope join means
+            // all workers are done
+            None => unreachable!("job {i} slot empty after scope join"),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -74,5 +108,59 @@ mod tests {
         let jobs: Vec<usize> = (0..200).collect();
         run_jobs(7, &jobs, |_| count.fetch_add(1, Ordering::Relaxed));
         assert_eq!(count.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    #[should_panic(expected = "job 5 panicked: boom 5")]
+    fn panicking_job_is_reraised_naming_the_job() {
+        let jobs: Vec<usize> = (0..8).collect();
+        run_jobs(3, &jobs, |&j| {
+            if j == 5 {
+                panic!("boom {j}");
+            }
+            j
+        });
+    }
+
+    #[test]
+    fn panicking_job_does_not_take_down_its_worker() {
+        // even with one worker the remaining queue still runs: the
+        // worker thread survives the caught panic and drains the list
+        use std::sync::atomic::AtomicUsize;
+        let count = AtomicUsize::new(0);
+        let jobs: Vec<usize> = (0..10).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            run_jobs(1, &jobs, |&j| {
+                if j == 2 {
+                    panic!("dies early");
+                }
+                count.fetch_add(1, Ordering::Relaxed);
+                j
+            })
+        }));
+        let err = result.expect_err("job 2 must re-raise");
+        assert!(payload_text(&*err).contains("job 2 panicked"), "{:?}", payload_text(&*err));
+        // the other 9 jobs all completed despite the mid-queue panic
+        assert_eq!(count.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn smallest_failing_index_wins() {
+        // deterministic re-raise: job order, not thread timing
+        let jobs: Vec<usize> = (0..20).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            run_jobs(8, &jobs, |&j| {
+                if j % 7 == 3 {
+                    panic!("multi");
+                }
+                j
+            })
+        }));
+        let err = result.expect_err("several jobs panic");
+        assert!(
+            payload_text(&*err).starts_with("job 3 panicked"),
+            "{}",
+            payload_text(&*err)
+        );
     }
 }

@@ -107,6 +107,11 @@ pub fn run(scale: Scale) -> (Ablation, String) {
     (Ablation { rows }, text)
 }
 
+/// Stable serialization hook for the conformance golden set.
+pub fn artifact(scale: Scale) -> super::Artifact {
+    super::Artifact::new("ablation", run(scale).1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -105,6 +105,12 @@ pub fn run() -> (CaseStudies, String) {
     (data, text)
 }
 
+/// Stable serialization hook for the conformance golden set.  The case
+/// studies run at their fixed paper shapes regardless of scale.
+pub fn artifact(_scale: super::Scale) -> super::Artifact {
+    super::Artifact::new("cases", run().1)
+}
+
 #[cfg(test)]
 mod tests {
     #[test]

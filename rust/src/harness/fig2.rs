@@ -70,6 +70,11 @@ impl Fig2 {
     }
 }
 
+/// Stable serialization hook for the conformance golden set.
+pub fn artifact(scale: Scale) -> super::Artifact {
+    super::Artifact::new("fig2", run(scale).1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

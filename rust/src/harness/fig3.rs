@@ -86,6 +86,11 @@ impl Fig3 {
     }
 }
 
+/// Stable serialization hook for the conformance golden set.
+pub fn artifact(scale: Scale) -> super::Artifact {
+    super::Artifact::new("fig3", run(scale).1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

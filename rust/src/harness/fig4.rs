@@ -87,6 +87,11 @@ impl Fig4 {
     }
 }
 
+/// Stable serialization hook for the conformance golden set.
+pub fn artifact(scale: Scale) -> super::Artifact {
+    super::Artifact::new("fig4", run(scale).1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -41,3 +41,56 @@ impl Scale {
         }
     }
 }
+
+/// A rendered paper artifact with a stable name — the serialization
+/// hook the conformance golden set consumes.  Every harness module
+/// exposes `artifact(scale)` returning one of these; the rendered text
+/// is byte-deterministic for a fixed scale (seeded RNG streams, ordered
+/// registries, fixed-precision formatting), which is what makes golden
+/// diffing possible at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    pub name: String,
+    pub text: String,
+}
+
+impl Artifact {
+    pub fn new(name: impl Into<String>, text: String) -> Artifact {
+        Artifact {
+            name: name.into(),
+            text,
+        }
+    }
+}
+
+/// Every paper artifact at one scale, in a stable order.  (The
+/// conformance subsystem appends its per-platform census artifacts on
+/// top of these — see `crate::conformance::render_all`.)
+pub fn artifacts(scale: Scale) -> Vec<Artifact> {
+    vec![
+        table2::artifact(scale),
+        fig2::artifact(scale),
+        fig3::artifact(scale),
+        table4::artifact(scale),
+        fig4::artifact(scale),
+        table5::artifact(scale),
+        table6::artifact(scale),
+        casestudy::artifact(scale),
+        ablation::artifact(scale),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn artifact_names_are_stable_and_unique() {
+        // names only — rendering is covered by the conformance tests
+        let names = [
+            "table2", "fig2", "fig3", "table4", "fig4", "table5", "table6", "cases", "ablation",
+        ];
+        let mut sorted = names.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len());
+    }
+}

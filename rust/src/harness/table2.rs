@@ -48,6 +48,12 @@ pub fn run() -> (Table2, String) {
     (data, text)
 }
 
+/// Stable serialization hook for the conformance golden set.  The
+/// census is scale-independent: it always reports the full suite.
+pub fn artifact(_scale: super::Scale) -> super::Artifact {
+    super::Artifact::new("table2", run().1)
+}
+
 #[cfg(test)]
 mod tests {
     #[test]

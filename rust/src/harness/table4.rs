@@ -59,6 +59,11 @@ pub fn run(scale: Scale) -> (Table4, String) {
     (Table4 { rows }, text)
 }
 
+/// Stable serialization hook for the conformance golden set.
+pub fn artifact(scale: Scale) -> super::Artifact {
+    super::Artifact::new("table4", run(scale).1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -96,6 +96,11 @@ pub fn run(scale: Scale) -> (Table5, String) {
     (Table5 { rows }, text)
 }
 
+/// Stable serialization hook for the conformance golden set.
+pub fn artifact(scale: Scale) -> super::Artifact {
+    super::Artifact::new("table5", run(scale).1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,660 @@
+//! Seeded random KIR graph generation — the differential-fuzzing and
+//! synthetic-workload backbone of the conformance subsystem.
+//!
+//! [`graph`] turns a `u64` seed into a well-typed [`Graph`] drawn from
+//! the full op vocabulary (every [`Op`] variant, every unary / binary /
+//! reduce kind) over small static shapes, including deliberate
+//! injections of the motifs the rewrite passes fire on (the §7.4
+//! `sum₁∘(matmul+bias)` chain and the §7.3 singleton-reduce /
+//! `sub(a,a)` collapse).  The same seed always produces the same graph,
+//! so a failing case is reproducible from one integer.
+//!
+//! [`equivalent`] is the differential oracle: a rewritten graph must
+//! keep validator invariants and interpreter semantics on seeded
+//! inputs.  [`shrink`] greedily minimizes a failing graph (output
+//! pruning + same-shape node bypassing) so a fuzz failure prints as a
+//! few-line repro instead of a 20-node soup.
+
+use super::graph::{infer_shape, Graph, GraphBuilder, NodeId};
+use super::interp;
+use super::op::{BinaryKind, Op, ReduceKind, UnaryKind};
+use super::rewrite::dce;
+use super::validate::validate;
+use crate::tensor::{Shape, Tensor};
+use crate::util::rng::Pcg;
+
+/// Generation knobs.  The defaults keep graphs small enough that the
+/// interpreter prices thousands of them per second while still covering
+/// every op and shape class.
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    /// Compute ops appended after the initial inputs.
+    pub max_ops: usize,
+    /// Largest sampled dimension (smallest is 1, drawn occasionally to
+    /// exercise singleton-axis paths).
+    pub dim_max: usize,
+    /// Probability that a step emits a rewrite-trigger motif instead of
+    /// a single random op.
+    pub motif_chance: f64,
+    /// Cap on declared graph inputs; once reached, fresh operands come
+    /// from `ConstFill` instead.
+    pub max_inputs: usize,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> FuzzConfig {
+        FuzzConfig {
+            max_ops: 12,
+            dim_max: 6,
+            motif_chance: 0.3,
+            max_inputs: 10,
+        }
+    }
+}
+
+/// Generate the seeded graph with default knobs.
+pub fn graph(seed: u64) -> Graph {
+    graph_with(seed, &FuzzConfig::default())
+}
+
+/// Generate the seeded graph with explicit knobs.
+pub fn graph_with(seed: u64, cfg: &FuzzConfig) -> Graph {
+    let mut rng = Pcg::new(seed, 0xF0_77_ED);
+    let mut gen = Gen {
+        b: GraphBuilder::new(&format!("fuzz_{seed:x}")),
+        shapes: Vec::new(),
+        rng: &mut rng,
+        cfg,
+        n_inputs: 0,
+    };
+    // 1–3 starting inputs, rank 2 biased (the dominant shape class)
+    let n_start = 1 + gen.rng.below(3) as usize;
+    for _ in 0..n_start {
+        let shape = gen.random_shape();
+        gen.fresh(shape);
+    }
+    let n_ops = 1 + gen.rng.below(cfg.max_ops as u32) as usize;
+    for _ in 0..n_ops {
+        if gen.rng.chance(cfg.motif_chance) {
+            gen.motif();
+        } else {
+            gen.step();
+        }
+    }
+    // outputs: the final node plus up to two random earlier ones
+    let mut outputs = vec![gen.shapes.len() - 1];
+    for _ in 0..gen.rng.below(3) {
+        outputs.push(gen.any());
+    }
+    outputs.sort_unstable();
+    outputs.dedup();
+    gen.b.finish(outputs)
+}
+
+/// Seeded evaluation inputs for a fuzzed graph (small values keep
+/// transcendental chains finite for the overwhelming majority of
+/// seeds; callers skip the non-finite remainder).
+pub fn inputs(g: &Graph, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg::new(seed, crate::util::rng::fnv1a(g.name.as_bytes()));
+    g.input_shapes
+        .iter()
+        .map(|s| Tensor::randn(s.clone(), &mut rng, 0.4))
+        .collect()
+}
+
+/// The differential oracle: does `rewritten` keep `original`'s
+/// validator invariants and interpreter semantics on `ins`?  Returns a
+/// description of the first divergence.  Output positions whose
+/// reference value is non-finite carry no numeric claim (rewrites may
+/// legally reassociate them) but must still match in arity and shape.
+pub fn equivalent(
+    original: &Graph,
+    rewritten: &Graph,
+    ins: &[Tensor],
+    rtol: f32,
+    atol: f32,
+) -> Result<(), String> {
+    if let Err(e) = validate(rewritten) {
+        return Err(format!("rewritten graph fails validation: {e}"));
+    }
+    let want = match interp::eval(original, ins) {
+        Ok(w) => w,
+        Err(e) => return Err(format!("original graph failed to evaluate: {e}")),
+    };
+    let got = match interp::eval(rewritten, ins) {
+        Ok(g) => g,
+        Err(e) => return Err(format!("rewritten graph failed to evaluate: {e}")),
+    };
+    if got.len() != want.len() {
+        return Err(format!(
+            "output arity changed: {} -> {}",
+            want.len(),
+            got.len()
+        ));
+    }
+    for (i, (gt, wt)) in got.iter().zip(&want).enumerate() {
+        if gt.shape != wt.shape {
+            return Err(format!("output {i} shape changed: {} -> {}", wt.shape, gt.shape));
+        }
+        if wt.data.iter().any(|v| !v.is_finite()) {
+            continue;
+        }
+        if !gt.allclose(wt, rtol, atol) {
+            return Err(format!(
+                "output {i} numerics diverge: max |diff| = {:.6}",
+                gt.max_abs_diff(wt)
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Greedily minimize a failing graph while `still_fails` holds.
+///
+/// Two reductions:
+/// 1. try narrowing to each single output in turn, keeping the first
+///    one that still reproduces the failure;
+/// 2. bypass nodes to a fixpoint: redirect a node's users to a
+///    same-shaped operand and DCE it away.
+///
+/// Both preserve well-typedness, so the shrunk graph is always a valid
+/// repro for the same predicate.
+pub fn shrink(g: &Graph, still_fails: &dyn Fn(&Graph) -> bool) -> Graph {
+    let mut cur = g.clone();
+    // 1. output minimization: a single output is the best repro
+    if cur.outputs.len() > 1 {
+        for &o in cur.outputs.clone().iter() {
+            let mut cand = cur.clone();
+            cand.outputs = vec![o];
+            let cand = dce(&cand);
+            if cand.len() < cur.len() && still_fails(&cand) {
+                cur = cand;
+                break;
+            }
+        }
+    }
+    // 2. node bypassing to a fixpoint
+    loop {
+        let mut changed = false;
+        for id in (0..cur.nodes.len()).rev() {
+            if matches!(cur.nodes[id].op, Op::Input { .. }) {
+                continue;
+            }
+            let shape = cur.nodes[id].shape.clone();
+            for o in cur.nodes[id].op.operands() {
+                if cur.nodes[o].shape != shape {
+                    continue;
+                }
+                let cand = bypass(&cur, id, o);
+                if cand.len() < cur.len() && still_fails(&cand) {
+                    cur = cand;
+                    changed = true;
+                    break;
+                }
+            }
+            if changed {
+                break;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    cur
+}
+
+/// Redirect every use of `from` (including outputs) to `to` and prune.
+/// Caller guarantees the two nodes share a shape.
+fn bypass(g: &Graph, from: NodeId, to: NodeId) -> Graph {
+    let mut out = g.clone();
+    for n in out.nodes.iter_mut() {
+        n.op = n.op.map_operands(|o| if o == from { to } else { o });
+    }
+    for o in out.outputs.iter_mut() {
+        if *o == from {
+            *o = to;
+        }
+    }
+    dce(&out)
+}
+
+// ---------------------------------------------------------------------------
+
+struct Gen<'a> {
+    b: GraphBuilder,
+    /// Shapes mirroring the builder's node list (the builder keeps its
+    /// node list private; ids stay aligned because both only append).
+    shapes: Vec<Shape>,
+    rng: &'a mut Pcg,
+    cfg: &'a FuzzConfig,
+    n_inputs: usize,
+}
+
+impl Gen<'_> {
+    /// One random dimension; occasionally 1 to exercise singleton axes.
+    fn dim(&mut self) -> usize {
+        if self.rng.chance(0.12) {
+            1
+        } else {
+            self.rng.range_i64(2, self.cfg.dim_max as i64) as usize
+        }
+    }
+
+    fn random_shape(&mut self) -> Shape {
+        match self.rng.below(10) {
+            0 => Shape::of(&[self.dim()]),
+            1..=6 => {
+                let (m, n) = (self.dim(), self.dim());
+                Shape::of(&[m, n])
+            }
+            _ => {
+                let n = 1 + self.rng.below(2) as usize;
+                let c = 1 + self.rng.below(3) as usize;
+                let hw = self.rng.range_i64(3, self.cfg.dim_max as i64) as usize;
+                Shape::of(&[n, c, hw, hw])
+            }
+        }
+    }
+
+    /// A fresh leaf of the given shape: a new graph input while the
+    /// input budget lasts, a constant fill afterwards.
+    fn fresh(&mut self, shape: Shape) -> NodeId {
+        if self.n_inputs < self.cfg.max_inputs {
+            self.n_inputs += 1;
+            self.shapes.push(shape.clone());
+            self.b.input(shape)
+        } else {
+            let value = self.rng.range_f64(-1.5, 1.5) as f32;
+            self.push(Op::ConstFill { value, shape })
+        }
+    }
+
+    /// Push a non-Input op, mirroring the builder's shape inference.
+    fn push(&mut self, op: Op) -> NodeId {
+        let shapes = &self.shapes;
+        let shape = infer_shape(&op, &|i| shapes[i].clone(), &[])
+            .unwrap_or_else(|e| panic!("fuzz generator built an ill-typed {op:?}: {e}"));
+        let id = self.b.push(op);
+        self.shapes.push(shape);
+        id
+    }
+
+    fn any(&mut self) -> NodeId {
+        self.rng.below(self.shapes.len() as u32) as usize
+    }
+
+    fn nodes_where(&self, pred: impl Fn(&Shape) -> bool) -> Vec<NodeId> {
+        self.shapes
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| pred(s))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    fn pick(&mut self, ids: &[NodeId]) -> NodeId {
+        ids[self.rng.below(ids.len() as u32) as usize]
+    }
+
+    /// A rank-2 node, minting an input if none exists yet.
+    fn rank2(&mut self) -> NodeId {
+        let cands = self.nodes_where(|s| s.rank() == 2);
+        if cands.is_empty() {
+            let (m, n) = (self.dim(), self.dim());
+            self.fresh(Shape::of(&[m, n]))
+        } else {
+            self.pick(&cands)
+        }
+    }
+
+    /// A rank-4 (NCHW, spatial ≥ 3) node, minting an input if needed.
+    fn rank4(&mut self) -> NodeId {
+        let cands = self.nodes_where(|s| s.rank() == 4 && s.dim(2) >= 3 && s.dim(3) >= 3);
+        if cands.is_empty() {
+            let n = 1 + self.rng.below(2) as usize;
+            let c = 1 + self.rng.below(3) as usize;
+            let hw = self.rng.range_i64(3, self.cfg.dim_max as i64) as usize;
+            self.fresh(Shape::of(&[n, c, hw, hw]))
+        } else {
+            self.pick(&cands)
+        }
+    }
+
+    /// One random op from the full vocabulary.
+    fn step(&mut self) {
+        match self.rng.below(14) {
+            0 | 1 => {
+                let kind = *self.rng.choose(&UnaryKind::ALL);
+                let mut x = self.any();
+                if kind == UnaryKind::Sqrt {
+                    // sqrt of a randn value is NaN half the time; square
+                    // first so sqrt coverage doesn't poison the suite
+                    x = self.push(Op::Unary { kind: UnaryKind::Square, input: x });
+                }
+                self.push(Op::Unary { kind, input: x });
+            }
+            2 | 3 => self.binary(),
+            4 => {
+                self.matmul();
+            }
+            5 => {
+                let x = self.rank2();
+                self.push(Op::Transpose2 { input: x });
+            }
+            6 => self.reduce(),
+            7 => {
+                let cands = self.nodes_where(|s| s.rank() >= 1);
+                if let Some(&x) = cands.first() {
+                    let x = if cands.len() > 1 { self.pick(&cands) } else { x };
+                    self.push(Op::Softmax { input: x });
+                }
+            }
+            8 => self.layernorm(),
+            9 => self.attention(),
+            10 => self.conv(),
+            11 => self.pool(),
+            12 => self.concat(),
+            _ => self.reshape(),
+        }
+    }
+
+    fn binary(&mut self) {
+        let a = self.any();
+        let kind = *self
+            .rng
+            .choose(&[BinaryKind::Add, BinaryKind::Sub, BinaryKind::Mul, BinaryKind::Max, BinaryKind::Div]);
+        let rhs = if kind == BinaryKind::Div {
+            // denominators bounded away from zero keep most seeds finite
+            let value = self.rng.range_f64(0.6, 1.8) as f32;
+            let shape = self.shapes[a].clone();
+            self.push(Op::ConstFill { value, shape })
+        } else {
+            match self.rng.below(3) {
+                0 => {
+                    // same-shape partner; `a` itself qualifies, which
+                    // also mints sub(a,a) — the §7.3 zero collapse
+                    let shape = self.shapes[a].clone();
+                    let mates = self.nodes_where(|s| *s == shape);
+                    self.pick(&mates)
+                }
+                1 if self.shapes[a].rank() >= 1 => {
+                    // row-broadcast vector over the last axis
+                    let f = self.shapes[a].dim(self.shapes[a].rank() - 1);
+                    self.fresh(Shape::of(&[f]))
+                }
+                _ => {
+                    let value = self.rng.range_f64(-1.5, 1.5) as f32;
+                    self.push(Op::ConstFill { value, shape: Shape::scalar() })
+                }
+            }
+        };
+        self.push(Op::Binary { kind, lhs: a, rhs });
+    }
+
+    fn matmul(&mut self) -> NodeId {
+        let x = self.rank2();
+        let k = self.shapes[x].dim(1);
+        let mates = self.nodes_where(|s| s.rank() == 2 && s.dim(0) == k);
+        let w = if mates.is_empty() || self.rng.chance(0.5) {
+            let n = self.dim();
+            self.fresh(Shape::of(&[k, n]))
+        } else {
+            self.pick(&mates)
+        };
+        self.push(Op::Matmul { lhs: x, rhs: w })
+    }
+
+    fn reduce(&mut self) {
+        let cands = self.nodes_where(|s| s.rank() >= 1);
+        if cands.is_empty() {
+            return;
+        }
+        let x = self.pick(&cands);
+        let axis = self.rng.below(self.shapes[x].rank() as u32) as usize;
+        let kind = *self.rng.choose(&[
+            ReduceKind::Sum,
+            ReduceKind::Max,
+            ReduceKind::Mean,
+            ReduceKind::LogSumExp,
+        ]);
+        self.push(Op::Reduce { kind, axis, input: x });
+    }
+
+    fn layernorm(&mut self) {
+        let cands = self.nodes_where(|s| s.rank() >= 1);
+        if cands.is_empty() {
+            return;
+        }
+        let x = self.pick(&cands);
+        let f = self.shapes[x].dim(self.shapes[x].rank() - 1);
+        let gamma = self.fresh(Shape::of(&[f]));
+        let beta = self.fresh(Shape::of(&[f]));
+        self.push(Op::Layernorm { input: x, gamma, beta });
+    }
+
+    fn attention(&mut self) {
+        let q = self.rank2();
+        let d = self.shapes[q].dim(1);
+        let sk = self.dim();
+        let dv = self.dim();
+        let k = self.fresh(Shape::of(&[sk, d]));
+        let v = self.fresh(Shape::of(&[sk, dv]));
+        self.push(Op::Attention { q, k, v });
+    }
+
+    fn conv(&mut self) {
+        let x = self.rank4();
+        let (c, h, w) = (self.shapes[x].dim(1), self.shapes[x].dim(2), self.shapes[x].dim(3));
+        let kk = 1 + self.rng.below(h.min(w).min(3) as u32) as usize;
+        let stride = 1 + self.rng.below(2) as usize;
+        let padding = self.rng.below(2) as usize;
+        if self.rng.chance(0.7) {
+            let o = 1 + self.rng.below(4) as usize;
+            let weight = self.fresh(Shape::of(&[o, c, kk, kk]));
+            self.push(Op::Conv2d { input: x, weight, stride, padding });
+        } else {
+            let weight = self.fresh(Shape::of(&[c, 1, kk, kk]));
+            self.push(Op::DepthwiseConv2d { input: x, weight, stride, padding });
+        }
+    }
+
+    fn pool(&mut self) {
+        let x = self.rank4();
+        match self.rng.below(3) {
+            0 => {
+                self.push(Op::GlobalAvgPool { input: x });
+            }
+            which => {
+                let (h, w) = (self.shapes[x].dim(2), self.shapes[x].dim(3));
+                let k = 1 + self.rng.below(h.min(w).min(3) as u32) as usize;
+                let stride = 1 + self.rng.below(2) as usize;
+                if which == 1 {
+                    self.push(Op::MaxPool2d { input: x, k, stride });
+                } else {
+                    self.push(Op::AvgPool2d { input: x, k, stride });
+                }
+            }
+        }
+    }
+
+    fn concat(&mut self) {
+        let cands = self.nodes_where(|s| s.rank() >= 1);
+        if cands.is_empty() {
+            return;
+        }
+        let x = self.pick(&cands);
+        let shape = self.shapes[x].clone();
+        let mates = self.nodes_where(|s| *s == shape);
+        let mut inputs = vec![x, self.pick(&mates)];
+        if self.rng.chance(0.3) {
+            inputs.push(self.pick(&mates));
+        }
+        let axis = self.rng.below(shape.rank() as u32) as usize;
+        self.push(Op::Concat { inputs, axis });
+    }
+
+    fn reshape(&mut self) {
+        let x = self.any();
+        let numel = self.shapes[x].numel();
+        let shape = self.factorize(numel);
+        self.push(Op::Reshape { input: x, shape });
+    }
+
+    /// Split `numel` into 1–3 factors (a valid reshape target).
+    fn factorize(&mut self, numel: usize) -> Shape {
+        let mut dims = Vec::new();
+        let mut rem = numel.max(1);
+        let parts = 1 + self.rng.below(3) as usize;
+        for _ in 1..parts {
+            let divisors: Vec<usize> = (1..=rem).filter(|d| rem % d == 0).collect();
+            let d = *self.rng.choose(&divisors);
+            dims.push(d);
+            rem /= d;
+        }
+        dims.push(rem);
+        Shape(dims)
+    }
+
+    /// Emit a rewrite-trigger motif instead of a single op.
+    fn motif(&mut self) {
+        if self.rng.chance(0.5) {
+            // §7.4: sum over columns of (x@W [+ bias]) — the algebraic
+            // matmul→matvec reduction's exact match shape
+            let mm = self.matmul();
+            let fed = if self.rng.chance(0.6) {
+                let n = self.shapes[mm].dim(1);
+                let bias = self.fresh(Shape::of(&[n]));
+                self.push(Op::Binary { kind: BinaryKind::Add, lhs: mm, rhs: bias })
+            } else {
+                mm
+            };
+            self.push(Op::Reduce { kind: ReduceKind::Sum, axis: 1, input: fed });
+        } else {
+            // §7.3: max₁ → mean over the now-singleton axis → sub = 0
+            let x = self.rank2();
+            let mx = self.push(Op::Reduce { kind: ReduceKind::Max, axis: 1, input: x });
+            let mean = self.push(Op::Reduce { kind: ReduceKind::Mean, axis: 1, input: mx });
+            let sub = self.push(Op::Binary { kind: BinaryKind::Sub, lhs: mx, rhs: mean });
+            if self.rng.chance(0.5) {
+                self.push(Op::Unary { kind: UnaryKind::Gelu, input: sub });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::rewrite::{algebraic, constant_fold};
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn generator_is_deterministic() {
+        for seed in 0..20 {
+            let a = graph(seed);
+            let b = graph(seed);
+            assert_eq!(a, b, "seed {seed} not reproducible");
+        }
+    }
+
+    #[test]
+    fn generated_graphs_always_validate() {
+        for seed in 0..300 {
+            let g = graph(seed);
+            validate(&g).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{}", g.render()));
+            assert!(!g.outputs.is_empty());
+        }
+    }
+
+    #[test]
+    fn generator_covers_the_op_vocabulary() {
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        for seed in 0..600 {
+            for n in graph(seed).nodes.iter() {
+                let m = n.op.mnemonic();
+                // normalize reduce_<kind><axis> to reduce_<kind>
+                let fam = if let Some(rest) = m.strip_prefix("reduce_") {
+                    format!("reduce_{}", rest.trim_end_matches(|c: char| c.is_ascii_digit()))
+                } else {
+                    m
+                };
+                seen.insert(fam);
+            }
+        }
+        for want in [
+            "const", "matmul", "transpose", "softmax", "layernorm", "attention", "conv2d",
+            "dwconv2d", "maxpool2d", "avgpool2d", "gavgpool", "concat", "reshape",
+            "reduce_sum", "reduce_max", "reduce_mean", "reduce_logsumexp",
+            "relu", "sigmoid", "swish", "gelu", "tanh", "exp", "neg", "square", "sqrt",
+            "add", "sub", "mul", "div", "max", "input0",
+        ] {
+            assert!(seen.contains(want), "op family {want:?} never generated; saw {seen:?}");
+        }
+    }
+
+    #[test]
+    fn most_seeds_evaluate_finite() {
+        let mut finite = 0;
+        let total = 200;
+        for seed in 0..total {
+            let g = graph(seed);
+            let ins = inputs(&g, seed);
+            if let Ok(out) = interp::eval(&g, &ins) {
+                if out.iter().all(|t| t.data.iter().all(|v| v.is_finite())) {
+                    finite += 1;
+                }
+            }
+        }
+        assert!(finite * 5 >= total * 4, "only {finite}/{total} seeds finite");
+    }
+
+    #[test]
+    fn motifs_reach_the_rewrite_passes() {
+        let mut algebraic_hits = 0;
+        let mut constant_hits = 0;
+        for seed in 0..300 {
+            let g = graph(seed);
+            if algebraic::count_opportunities(&g) > 0 {
+                algebraic_hits += 1;
+            }
+            if constant_fold::fold(&g).len() < g.len() {
+                constant_hits += 1;
+            }
+        }
+        assert!(algebraic_hits >= 20, "algebraic motif too rare: {algebraic_hits}/300");
+        assert!(constant_hits >= 20, "constant-fold motif too rare: {constant_hits}/300");
+    }
+
+    #[test]
+    fn equivalent_accepts_identity_and_flags_corruption() {
+        let g = graph(7);
+        let ins = inputs(&g, 7);
+        assert!(equivalent(&g, &g, &ins, 1e-6, 1e-6).is_ok());
+        let mut broken = g.clone();
+        broken.outputs = vec![broken.nodes.len() + 5];
+        let err = equivalent(&g, &broken, &ins, 1e-6, 1e-6).unwrap_err();
+        assert!(err.contains("validation"), "{err}");
+    }
+
+    #[test]
+    fn shrink_minimizes_while_preserving_the_failure() {
+        // predicate: graph still contains a matmul node
+        let seed = (0..500)
+            .find(|&s| graph(s).nodes.iter().any(|n| matches!(n.op, Op::Matmul { .. })))
+            .expect("some seed contains a matmul");
+        let g = graph(seed);
+        let has_matmul =
+            |g: &Graph| g.nodes.iter().any(|n| matches!(n.op, Op::Matmul { .. }));
+        let min = shrink(&g, &has_matmul);
+        assert!(has_matmul(&min), "shrink lost the failure");
+        assert!(min.len() <= g.len());
+        validate(&min).unwrap();
+    }
+
+    #[test]
+    fn shrunk_graph_keeps_input_interface() {
+        let g = graph(11);
+        let min = shrink(&g, &|_| true);
+        assert_eq!(min.input_shapes, g.input_shapes);
+    }
+}

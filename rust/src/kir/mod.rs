@@ -12,12 +12,15 @@
 //! - [`interp`] — reference evaluation via `tensor::ops`.
 //! - [`rewrite`] — fusion discovery, constant folding (§7.3 invariance
 //!   exploitation), algebraic reduction (§7.4 matmul→matvec), CSE.
+//! - [`fuzz`] — seeded random graph generation, the differential
+//!   oracle, and failure shrinking (conformance subsystem).
 
 pub mod op;
 pub mod graph;
 pub mod validate;
 pub mod interp;
 pub mod rewrite;
+pub mod fuzz;
 
 pub use graph::{Graph, GraphBuilder, Node, NodeId};
 pub use op::{BinaryKind, Op, ReduceKind, UnaryKind};

@@ -41,6 +41,10 @@
 //! - [`coordinator`] — job queue, device-worker pool, experiments.
 //! - [`metrics`] — fast_p and friends.
 //! - [`harness`] — regenerates every paper table and figure.
+//! - [`conformance`] — the conformance gate: golden paper artifacts
+//!   (bless/check with a cell-level differ), per-platform census
+//!   artifacts, and the entry points the differential KIR fuzzer and
+//!   synthetic workload suites hang off.
 
 pub mod util;
 pub mod tensor;
@@ -57,6 +61,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod metrics;
 pub mod harness;
+pub mod conformance;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

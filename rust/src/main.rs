@@ -7,6 +7,9 @@
 //! kforge platforms                  # list the registered platforms
 //! kforge bench <fig2|fig3|fig4|table2|table4|table5|table6|cases|all>
 //!              [--quick N] [--out DIR]
+//! kforge conformance [--bless] [--dir DIR] [--quick N] [--out DIR]
+//!                                   # check (or regenerate) the golden
+//!                                   # paper artifacts for every platform
 //! kforge serve [--artifacts DIR]    # PJRT request loop over real artifacts
 //! kforge personas                   # the 8 calibrated personas, per platform
 //! ```
@@ -53,13 +56,16 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("platforms") => cmd_platforms(),
         Some("run") => cmd_run(args),
         Some("bench") => cmd_bench(args),
+        Some("conformance") => cmd_conformance(args),
         Some("serve") => cmd_serve(args),
         Some(other) => {
-            bail!("unknown command {other:?}; try: suite, personas, platforms, run, bench, serve")
+            bail!(
+                "unknown command {other:?}; try: suite, personas, platforms, run, bench, conformance, serve"
+            )
         }
         None => {
             println!("kforge — program synthesis for diverse AI hardware accelerators");
-            println!("commands: suite | personas | platforms | run | bench | serve");
+            println!("commands: suite | personas | platforms | run | bench | conformance | serve");
             println!("registered platforms: {}", registry().describe());
             Ok(())
         }
@@ -214,6 +220,55 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     }
     eprintln!("[bench {which} completed in {:.1}s]", t0.elapsed().as_secs_f64());
     Ok(())
+}
+
+/// `kforge conformance [--bless] [--dir DIR] [--quick N] [--out DIR]`
+///
+/// Renders the full golden artifact set (paper tables/figures + one
+/// census per registered platform) once, then either blesses it into
+/// `--dir` (default `goldens/`) or checks against what is committed
+/// there, reporting per-cell drift.  `--out` additionally captures the
+/// rendered artifacts (and `DIFF.txt` on failure) for CI upload.
+fn cmd_conformance(args: &[String]) -> Result<()> {
+    use kforge::conformance::{self, golden};
+    let dir = std::path::PathBuf::from(flag_value(args, "--dir").unwrap_or(golden::DEFAULT_DIR));
+    let scale = match flag_value(args, "--quick") {
+        Some(n) => Scale::Quick(n.parse().context("--quick N")?),
+        None => conformance::SCALE,
+    };
+    let out_dir = flag_value(args, "--out").map(std::path::PathBuf::from);
+    let t0 = std::time::Instant::now();
+    let arts = conformance::render_all(scale);
+    eprintln!(
+        "[rendered {} artifacts in {:.1}s]",
+        arts.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(out) = &out_dir {
+        golden::write_artifacts(out, &arts)?;
+    }
+    if args.iter().any(|a| a == "--bless") {
+        let names = golden::bless_with(&dir, &arts)?;
+        println!(
+            "blessed {} golden artifacts into {}: {}",
+            names.len(),
+            dir.display(),
+            names.join(", ")
+        );
+        return Ok(());
+    }
+    let report = golden::check_against(&dir, &arts)?;
+    println!("{}", report.summary());
+    if report.passed() {
+        return Ok(());
+    }
+    if let Some(first) = report.drifted.first() {
+        println!("\nfirst drift:\n{}", first.report);
+    }
+    if let Some(out) = &out_dir {
+        std::fs::write(out.join("DIFF.txt"), report.full_diff())?;
+    }
+    bail!("conformance check failed against {}", dir.display());
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {

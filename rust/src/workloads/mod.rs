@@ -22,6 +22,7 @@ pub mod level2;
 pub mod level3;
 pub mod suite;
 pub mod refcorpus;
+pub mod synth;
 
 pub use spec::{Level, Problem};
 pub use suite::Suite;

@@ -62,6 +62,99 @@ impl RefCorpus {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{run_campaign, BaselineKind, CampaignResult, ExperimentConfig};
+
+    /// Single-shot config; the *same* name and seed for the with- and
+    /// without-reference runs so each (persona, problem) job draws the
+    /// identical RNG stream in both (see `experiment::run_task`).
+    fn single_shot_cfg(platform: &str, use_reference: bool) -> ExperimentConfig {
+        ExperimentConfig {
+            name: "refcorpus_transfer_prop".into(),
+            platform: crate::platform::by_name(platform).unwrap(),
+            personas: vec![crate::agents::persona::by_name("claude-opus-4").unwrap()],
+            iterations: 1,
+            use_profiling: false,
+            use_reference,
+            baseline: BaselineKind::Eager,
+            seed: 0x6_2,
+            workers: 4,
+        }
+    }
+
+    fn assert_results_identical(a: &CampaignResult, b: &CampaignResult) {
+        assert_eq!(a.results.len(), b.results.len());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.problem_id, y.problem_id);
+            assert_eq!(x.state_history, y.state_history);
+            assert_eq!(x.outcome.correct, y.outcome.correct);
+            assert_eq!(x.outcome.speedup.to_bits(), y.outcome.speedup.to_bits());
+            assert_eq!(x.baseline_s.to_bits(), y.baseline_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn cuda_reference_never_lowers_single_shot_on_transfer_platforms() {
+        // §6.2 for the big-gainer persona (claude-opus-4, ref_effect <
+        // 1 at every level): with aligned RNG streams, a job's
+        // correctness draw compares the same uniform against p_base vs
+        // p_ref ≥ p_base, so the with-reference run can never flip a
+        // correct job to incorrect — per job, not just on average —
+        // and that must hold on every transfer platform
+        let suite = Suite::sample(8); // 24 problems
+        let corpus = RefCorpus::build(&suite, 6, 0xC0DE);
+        assert!(corpus.coverage(&suite) > 0.5);
+        for platform in ["metal", "rocm"] {
+            assert!(
+                crate::platform::by_name(platform).unwrap().reference_transfer(),
+                "{platform} should treat the CUDA corpus as cross-platform transfer"
+            );
+            let without = run_campaign(&suite, None, &single_shot_cfg(platform, false));
+            let with = run_campaign(&suite, Some(&corpus), &single_shot_cfg(platform, true));
+            assert_eq!(without.results.len(), with.results.len());
+            for (base, refd) in without.results.iter().zip(&with.results) {
+                assert_eq!(base.problem_id, refd.problem_id);
+                assert!(
+                    !(base.outcome.correct && !refd.outcome.correct),
+                    "{platform}/{}: CUDA reference lowered single-shot correctness",
+                    base.problem_id
+                );
+                // a problem the corpus does not cover must be untouched
+                if corpus.get(&base.problem_id).is_none() {
+                    assert_eq!(base.state_history, refd.state_history, "{}", base.problem_id);
+                    assert_eq!(base.outcome.correct, refd.outcome.correct);
+                }
+            }
+            let rate = |c: &CampaignResult| {
+                crate::metrics::correctness_rate(
+                    &c.results.iter().map(|r| r.outcome).collect::<Vec<_>>(),
+                )
+            };
+            assert!(
+                rate(&with) >= rate(&without),
+                "{platform}: with-ref rate {} below baseline {}",
+                rate(&with),
+                rate(&without)
+            );
+        }
+    }
+
+    #[test]
+    fn corpus_get_misses_fall_back_cleanly() {
+        // an empty corpus with use_reference on must be bit-identical
+        // to no corpus at all: every `get` miss falls through to the
+        // reference-free synthesis path
+        let suite = Suite::sample(4);
+        let empty = RefCorpus::default();
+        assert!(empty.get("l1_act_swish_0").is_none());
+        assert_eq!(empty.coverage(&suite), 0.0);
+        let without = run_campaign(&suite, None, &single_shot_cfg("metal", false));
+        let with_empty = run_campaign(&suite, Some(&empty), &single_shot_cfg("metal", true));
+        assert_results_identical(&without, &with_empty);
+        // and use_reference without any corpus handle at all is the
+        // same degenerate path
+        let with_none = run_campaign(&suite, None, &single_shot_cfg("metal", true));
+        assert_results_identical(&without, &with_none);
+    }
 
     #[test]
     fn corpus_builds_with_good_coverage() {

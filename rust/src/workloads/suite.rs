@@ -29,6 +29,16 @@ impl Suite {
         }
     }
 
+    /// An unbounded synthetic suite: `n` deterministic fuzz-generated
+    /// problems from `seed` (see [`super::synth`]).  Not cached — every
+    /// `(seed, n)` pair is a fresh suite, opening scenario diversity
+    /// beyond the fixed L1–L3 levels.
+    pub fn synthetic(seed: u64, n: usize) -> Suite {
+        Suite {
+            problems: Arc::new(super::synth::problems(seed, n)),
+        }
+    }
+
     /// A deterministic subset (first `n` of each level) for fast tests.
     pub fn sample(per_level: usize) -> Suite {
         let full = Suite::full();
@@ -116,6 +126,28 @@ mod tests {
         let s = Suite::full();
         assert!(s.get("l3_043_mingpt").is_some());
         assert!(s.get("nonexistent").is_none());
+    }
+
+    #[test]
+    fn synthetic_suite_is_deterministic_and_filterable() {
+        let a = Suite::synthetic(0x5EED, 15);
+        let b = Suite::synthetic(0x5EED, 15);
+        assert_eq!(a.len(), 15);
+        for (x, y) in a.problems.iter().zip(b.problems.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.eval_graph, y.eval_graph);
+        }
+        // platforms with unsupported ops must filter something out of a
+        // tagged synthetic suite; platforms without keep everything
+        for p in crate::platform::registry().platforms() {
+            let kept = a.supported_on(p.spec()).len();
+            if p.spec().unsupported_ops.is_empty() {
+                assert_eq!(kept, a.len(), "{} filtered a fully supported suite", p.name());
+            } else {
+                assert!(kept < a.len(), "{} filter never exercised", p.name());
+                assert!(kept > 0, "{} filtered everything", p.name());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! Conformance-subsystem acceptance tests:
+//!
+//! 1. **Differential KIR fuzzing** — ≥ 1,000 seeded random graphs per
+//!    rewrite pass (and the full pipeline in all 6 pass orders) must
+//!    preserve validator invariants and interpreter semantics; failures
+//!    shrink to a minimal repro keyed by the generator seed.
+//! 2. **Renderer determinism** — two in-process renders of the full
+//!    golden artifact set are byte-identical (the property the golden
+//!    differ rests on).
+//! 3. **Golden round trip** — bless → check passes; a mutated golden
+//!    fails with a cell-level report; stale/missing goldens fail.
+//! 4. **Synthetic-suite census** — fuzz-generated problems drive every
+//!    §3.3 execution state through the verification pipeline and every
+//!    platform's unsupported-op filter.
+
+use kforge::conformance::{self, golden};
+use kforge::harness::Scale;
+use kforge::kir::fuzz;
+use kforge::kir::interp;
+use kforge::kir::rewrite::{apply_all, dce, Rewrite};
+use kforge::kir::validate::validate;
+use kforge::kir::Graph;
+use kforge::workloads::Suite;
+
+/// Seeded graphs per rewrite pass (acceptance floor: 1,000).
+const SEEDS_PER_PASS: u64 = 1200;
+/// Rewrites may reassociate float reductions; this is the paper-grade
+/// tolerance the verification pipeline itself grants candidates.
+const RTOL: f32 = 1e-3;
+const ATOL: f32 = 1e-3;
+
+/// A numeric claim needs every *intermediate* value finite, not just
+/// the outputs: a rewrite may legally replace `x - x` with zero, but
+/// `inf - inf` is NaN, and downstream ops (`max`, …) can launder a NaN
+/// back into a finite output that then disagrees.  Evaluate the graph
+/// with every node exposed as an output and require all of it finite.
+/// A small fraction of random transcendental chains overflow and are
+/// skipped this way.
+fn finite_reference(g: &Graph, ins: &[kforge::tensor::Tensor]) -> bool {
+    // dead nodes may hold harmless non-finites (they cannot reach an
+    // output on either side of the comparison), so prune them first —
+    // only *live* intermediates poison the differential claim
+    let mut all_nodes = dce(g);
+    all_nodes.outputs = (0..all_nodes.nodes.len()).collect();
+    match interp::eval(&all_nodes, ins) {
+        Ok(out) => out
+            .iter()
+            .all(|t| t.data.iter().all(|v| v.is_finite())),
+        Err(_) => false,
+    }
+}
+
+/// Run one rewrite over the seed sweep, shrinking any failure to a
+/// minimal repro before panicking.
+fn sweep(pass_name: &str, apply: &dyn Fn(&Graph) -> Graph) {
+    let mut skipped = 0usize;
+    for seed in 0..SEEDS_PER_PASS {
+        let g = fuzz::graph(seed);
+        validate(&g).unwrap_or_else(|e| {
+            panic!("seed {seed}: fuzz generator emitted an invalid graph: {e}\n{}", g.render())
+        });
+        let ins = fuzz::inputs(&g, seed);
+        if !finite_reference(&g, &ins) {
+            skipped += 1;
+            continue;
+        }
+        let rewritten = apply(&g);
+        if let Err(why) = fuzz::equivalent(&g, &rewritten, &ins, RTOL, ATOL) {
+            let still_fails = |cand: &Graph| {
+                let cins = fuzz::inputs(cand, seed);
+                finite_reference(cand, &cins)
+                    && fuzz::equivalent(cand, &apply(cand), &cins, RTOL, ATOL).is_err()
+            };
+            let min = fuzz::shrink(&g, &still_fails);
+            panic!(
+                "pass {pass_name} diverged on seed {seed}: {why}\n\
+                 minimized repro (from kforge::kir::fuzz::graph({seed})):\n{}\n\
+                 rewritten form:\n{}",
+                min.render(),
+                apply(&min).render()
+            );
+        }
+    }
+    assert!(
+        skipped * 5 < SEEDS_PER_PASS as usize,
+        "{pass_name}: {skipped}/{SEEDS_PER_PASS} seeds skipped as non-finite — generator drifted"
+    );
+}
+
+#[test]
+fn differential_fuzz_constant_fold() {
+    sweep("constant_fold", &|g| Rewrite::ConstantFold.apply(g));
+}
+
+#[test]
+fn differential_fuzz_algebraic_reduce() {
+    sweep("algebraic_reduce", &|g| Rewrite::AlgebraicReduce.apply(g));
+}
+
+#[test]
+fn differential_fuzz_cse() {
+    sweep("cse", &|g| Rewrite::Cse.apply(g));
+}
+
+#[test]
+fn differential_fuzz_dce() {
+    sweep("dce", &dce);
+}
+
+#[test]
+fn differential_fuzz_full_pipeline_every_pass_order() {
+    use Rewrite::{AlgebraicReduce, Cse, ConstantFold};
+    let orders: [[Rewrite; 3]; 6] = [
+        [ConstantFold, AlgebraicReduce, Cse],
+        [ConstantFold, Cse, AlgebraicReduce],
+        [AlgebraicReduce, ConstantFold, Cse],
+        [AlgebraicReduce, Cse, ConstantFold],
+        [Cse, ConstantFold, AlgebraicReduce],
+        [Cse, AlgebraicReduce, ConstantFold],
+    ];
+    for (i, order) in orders.iter().enumerate() {
+        let name = format!(
+            "pipeline[{}]",
+            order.iter().map(|r| r.name()).collect::<Vec<_>>().join("->")
+        );
+        // a third of the per-pass budget per order still sweeps 2,400
+        // pipeline applications; stagger seeds so orders see different
+        // graphs too
+        let base = (i as u64) * 101;
+        for seed in base..base + SEEDS_PER_PASS / 3 {
+            let g = fuzz::graph(seed);
+            let ins = fuzz::inputs(&g, seed);
+            if !finite_reference(&g, &ins) {
+                continue;
+            }
+            let rewritten = apply_all(&g, order);
+            if let Err(why) = fuzz::equivalent(&g, &rewritten, &ins, RTOL, ATOL) {
+                let still_fails = |cand: &Graph| {
+                    let cins = fuzz::inputs(cand, seed);
+                    finite_reference(cand, &cins)
+                        && fuzz::equivalent(cand, &apply_all(cand, order), &cins, RTOL, ATOL)
+                            .is_err()
+                };
+                let min = fuzz::shrink(&g, &still_fails);
+                panic!(
+                    "{name} diverged on seed {seed}: {why}\n\
+                     minimized repro (from kforge::kir::fuzz::graph({seed})):\n{}",
+                    min.render()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// golden artifacts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn renderers_deterministic_and_golden_round_trip() {
+    let scale = Scale::Quick(2);
+    let first = conformance::render_all(scale);
+    let n_platforms = kforge::platform::registry().len();
+    assert_eq!(
+        first.len(),
+        10 + n_platforms,
+        "manifest + nine paper artifacts + one census per registered platform"
+    );
+    assert_eq!(first[0].name, "manifest");
+    assert!(first[0].text.contains("scale: Quick(2)"), "{}", first[0].text);
+
+    // (a) determinism: a second in-process render is byte-identical —
+    // the property the golden differ depends on
+    let second = conformance::render_all(scale);
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(
+            a.text.as_bytes(),
+            b.text.as_bytes(),
+            "renderer {} is nondeterministic across in-process runs",
+            a.name
+        );
+        assert!(!a.text.is_empty(), "artifact {} rendered empty", a.name);
+    }
+
+    // (b) round trip through the on-disk golden store
+    let dir = std::env::temp_dir().join(format!("kforge_conformance_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    golden::bless_with(&dir, &first).unwrap();
+    let report = golden::check_against(&dir, &first).unwrap();
+    assert!(report.passed(), "{}", report.summary());
+
+    // (c) a mutated golden cell fails with a per-cell report
+    let table2 = dir.join("table2.txt");
+    let pristine = std::fs::read_to_string(&table2).unwrap();
+    assert!(pristine.contains("100"));
+    std::fs::write(&table2, pristine.replacen("100", "999", 1)).unwrap();
+    let drifted = golden::check_against(&dir, &first).unwrap();
+    assert!(!drifted.passed());
+    assert_eq!(drifted.drifted.len(), 1);
+    assert_eq!(drifted.drifted[0].name, "table2");
+    assert!(
+        drifted.drifted[0].report.contains("999"),
+        "cell report must show the drifted value:\n{}",
+        drifted.drifted[0].report
+    );
+    std::fs::write(&table2, pristine).unwrap();
+
+    // (d) stale and missing goldens both fail
+    std::fs::write(dir.join("ghost.txt"), "boo").unwrap();
+    let stale = golden::check_against(&dir, &first).unwrap();
+    assert_eq!(stale.stale, vec!["ghost".to_string()]);
+    assert!(!stale.passed());
+    std::fs::remove_file(dir.join("ghost.txt")).unwrap();
+    std::fs::remove_file(dir.join("fig2.txt")).unwrap();
+    let missing = golden::check_against(&dir, &first).unwrap();
+    assert_eq!(missing.missing, vec!["fig2".to_string()]);
+    assert!(!missing.passed());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Once `goldens/` is blessed and committed (the CI bootstrap uploads
+/// the set — see goldens/README.md), the tier-1 gate itself enforces
+/// it: any artifact drift fails `cargo test` with the cell-level
+/// report, independent of whether the CI conformance job runs.
+#[test]
+fn committed_goldens_match_when_present() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("goldens");
+    let has_goldens = std::fs::read_dir(&dir)
+        .map(|entries| {
+            entries
+                .flatten()
+                .any(|e| e.path().extension().and_then(|x| x.to_str()) == Some("txt"))
+        })
+        .unwrap_or(false);
+    if !has_goldens {
+        eprintln!(
+            "goldens/ holds no blessed artifacts yet; skipping (run `kforge conformance --bless`)"
+        );
+        return;
+    }
+    let arts = conformance::render_all(conformance::SCALE);
+    let report = golden::check_against(&dir, &arts).unwrap();
+    assert!(
+        report.passed(),
+        "{}\n{}",
+        report.summary(),
+        report.full_diff()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// synthetic workload census
+// ---------------------------------------------------------------------------
+
+#[test]
+fn synthetic_problems_exercise_every_exec_state() {
+    use kforge::agents::generation::tests_support::trivial_program;
+    use kforge::kir::op::{BinaryKind, Op};
+    use kforge::kir::Node;
+    use kforge::util::rng::Pcg;
+    use kforge::verify;
+    use std::collections::BTreeSet;
+
+    let spec = kforge::platform::cuda::h100();
+    let suite = Suite::synthetic(0xABCD, 12);
+    let mut rng = Pcg::seed(0);
+    let mut seen: BTreeSet<&'static str> = BTreeSet::new();
+    for p in suite.problems.iter() {
+        // generation failure: the agent returned no program
+        seen.insert(verify::verify(&spec, p, None, &mut rng).state.label());
+        // compilation failure: dangling output reference
+        let mut bad = trivial_program(p);
+        bad.graph.outputs = vec![bad.graph.len() + 9];
+        seen.insert(verify::verify(&spec, p, Some(&bad), &mut rng).state.label());
+        // runtime error: threadgroup over the device limit
+        let mut ill = trivial_program(p);
+        ill.schedule.threadgroup = 4096;
+        seen.insert(verify::verify(&spec, p, Some(&ill), &mut rng).state.label());
+        // mismatch: +1 on the first output (well-typed, wrong values)
+        let mut wrong = trivial_program(p);
+        let out0 = wrong.graph.outputs[0];
+        let shape = wrong.graph.nodes[out0].shape.clone();
+        wrong.graph.nodes.push(Node {
+            op: Op::ConstFill { value: 1.0, shape: shape.clone() },
+            shape: shape.clone(),
+        });
+        let c = wrong.graph.nodes.len() - 1;
+        wrong.graph.nodes.push(Node {
+            op: Op::Binary { kind: BinaryKind::Add, lhs: out0, rhs: c },
+            shape,
+        });
+        wrong.graph.outputs[0] = wrong.graph.nodes.len() - 1;
+        seen.insert(verify::verify(&spec, p, Some(&wrong), &mut rng).state.label());
+        // correct: the reference graph itself
+        let ok = trivial_program(p);
+        seen.insert(verify::verify(&spec, p, Some(&ok), &mut rng).state.label());
+    }
+    for state in [
+        "generation_failure",
+        "compilation_failure",
+        "runtime_error",
+        "mismatch",
+        "correct",
+    ] {
+        assert!(seen.contains(state), "state {state:?} never reached; saw {seen:?}");
+    }
+}
+
+#[test]
+fn synthetic_campaign_runs_end_to_end() {
+    use kforge::coordinator::{run_campaign, BaselineKind, ExperimentConfig};
+    // the real §3 loop over a generated suite: the point of
+    // Suite::synthetic is that campaigns accept it like any other suite
+    let suite = Suite::synthetic(0xCAFE, 9);
+    let cfg = ExperimentConfig {
+        name: "synthetic_campaign".into(),
+        platform: kforge::platform::by_name("cuda").unwrap(),
+        personas: vec![kforge::agents::persona::by_name("openai-gpt-5").unwrap()],
+        iterations: 2,
+        use_profiling: false,
+        use_reference: false,
+        baseline: BaselineKind::Eager,
+        seed: 11,
+        workers: 3,
+    };
+    let a = run_campaign(&suite, None, &cfg);
+    assert_eq!(a.results.len(), 9, "cuda supports every synthetic problem");
+    let b = run_campaign(&suite, None, &cfg);
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.problem_id, y.problem_id);
+        assert_eq!(x.state_history, y.state_history);
+    }
+    // census labels stay within the §3.3 vocabulary
+    for key in a.state_census().keys() {
+        assert!(matches!(
+            *key,
+            "generation_failure" | "compilation_failure" | "runtime_error" | "mismatch" | "correct"
+        ));
+    }
+}
+
+#[test]
+fn synthetic_suites_respect_platform_filters_in_campaigns() {
+    use kforge::coordinator::{run_campaign, BaselineKind, ExperimentConfig};
+    let suite = Suite::synthetic(0xF117E5, 15);
+    for platform in kforge::platform::registry().platforms() {
+        let kept = suite.supported_on(platform.spec()).len();
+        if platform.spec().unsupported_ops.is_empty() {
+            assert_eq!(kept, suite.len());
+            continue;
+        }
+        assert!(kept < suite.len(), "{} filter unexercised", platform.name());
+        let cfg = ExperimentConfig {
+            name: format!("synth_filter_{}", platform.name()),
+            platform: platform.clone(),
+            personas: vec![kforge::agents::persona::by_name("deepseek-v3").unwrap()],
+            iterations: 1,
+            use_profiling: false,
+            use_reference: false,
+            baseline: BaselineKind::Eager,
+            seed: 5,
+            workers: 2,
+        };
+        let campaign = run_campaign(&suite, None, &cfg);
+        assert_eq!(campaign.results.len(), kept, "{}", platform.name());
+    }
+}
