@@ -104,10 +104,10 @@ fn main() -> anyhow::Result<()> {
     let total = t0.elapsed().as_secs_f64();
     let s = stats::summarize(&latencies);
     println!(
-        "  throughput: {:.1} req/s   latency ms p50={:.2} p90={:.2} p99={:.2}",
+        "  throughput: {:.1} req/s   latency ms p50={:.2} p95={:.2} p99={:.2}",
         128.0 / total,
         s.p50 * 1e3,
-        s.p90 * 1e3,
+        s.p95 * 1e3,
         s.p99 * 1e3
     );
     println!("  compiled executables cached: {}\n", rt.cache_len());

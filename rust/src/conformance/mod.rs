@@ -21,6 +21,11 @@
 //!
 //! Every later scale/speed refactor in the ROADMAP lands against this
 //! gate instead of vibes.
+//!
+//! The gate also pins the result store (`crate::store`): rendering
+//! against a warm `--cache-dir` must produce byte-identical artifacts
+//! to a cold render (CI's `cache-smoke` job renders twice against one
+//! shared store and asserts nonzero hits with zero golden drift).
 
 pub mod census;
 pub mod diff;

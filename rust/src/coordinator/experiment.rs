@@ -22,10 +22,12 @@ use crate::baseline::{compilebase, eager};
 use crate::metrics::TaskOutcome;
 use crate::platform::{PlatformRef, PlatformSpec};
 use crate::profiler::Profile;
+use crate::store::{CacheStats, JobKey, Journal, KeyScope, Store};
 use crate::util::rng::Pcg;
 use crate::verify::{self, ExecState};
 use crate::workloads::refcorpus::RefCorpus;
 use crate::workloads::{Problem, Suite};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Which baseline the speedup is computed against.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -103,6 +105,10 @@ impl ExperimentConfig {
 pub struct CampaignResult {
     pub config_name: String,
     pub results: Vec<TaskResult>,
+    /// Result-store counters for this campaign: how many jobs were
+    /// answered from the cache, restored from a `--resume` journal, or
+    /// actually computed (all zeros when the store is disabled).
+    pub cache: CacheStats,
 }
 
 impl CampaignResult {
@@ -220,31 +226,152 @@ pub fn run_task(
 }
 
 /// Run a full campaign over a suite, distributing jobs across the
-/// worker pool (one job per simulated device at a time).
+/// worker pool (one job per simulated device at a time), consulting
+/// the process-wide result store (see [`crate::store::global`] — a
+/// pass-through unless the CLI configured one).
 pub fn run_campaign(
+    suite: &Suite,
+    corpus: Option<&RefCorpus>,
+    cfg: &ExperimentConfig,
+) -> CampaignResult {
+    run_campaign_with(crate::store::global(), suite, corpus, cfg)
+}
+
+/// [`run_campaign`] against an explicit result store.  The store is
+/// consulted *before* dispatch (hits never reach the worker pool) and
+/// written back as each computed job completes; with journaling
+/// enabled, every completion is also appended to the campaign journal
+/// so a killed campaign resumes from the last completed job.
+///
+/// Substituting a stored result is safe because job results are
+/// bit-identical across worker counts and scheduling (the PR 3
+/// property pinned in the tests below), and the [`JobKey`] covers
+/// everything a result depends on.
+pub fn run_campaign_with(
+    store: &Store,
     suite: &Suite,
     corpus: Option<&RefCorpus>,
     cfg: &ExperimentConfig,
 ) -> CampaignResult {
     let spec = cfg.spec();
     let filtered = suite.supported_on(&spec);
-    // build the job list: persona × problem
-    let jobs: Vec<(&'static Persona, &Problem)> = cfg
+    // build the job list: persona × problem, references resolved up
+    // front (the reference is part of the job's identity)
+    let jobs: Vec<(&'static Persona, &Problem, Option<&Program>)> = cfg
         .personas
         .iter()
-        .flat_map(|p| filtered.problems.iter().map(move |pr| (*p, pr)))
+        .flat_map(|p| {
+            filtered.problems.iter().map(move |pr| {
+                let reference = if cfg.use_reference {
+                    corpus.and_then(|c| c.get(&pr.id))
+                } else {
+                    None
+                };
+                (*p, pr, reference)
+            })
+        })
         .collect();
-    let results = super::worker::run_jobs(cfg.workers.max(1), &jobs, |(persona, problem)| {
-        let reference = if cfg.use_reference {
-            corpus.and_then(|c| c.get(&problem.id))
-        } else {
-            None
+    let workers = cfg.workers.max(1);
+    if !store.enabled() {
+        let results =
+            super::worker::run_jobs(workers, &jobs, |(persona, problem, reference)| {
+                run_task(cfg, &spec, persona, problem, *reference)
+            });
+        return CampaignResult {
+            config_name: cfg.name.clone(),
+            results,
+            cache: CacheStats::default(),
         };
-        run_task(cfg, &spec, persona, problem, reference)
+    }
+
+    let scope = KeyScope::new(cfg, &spec);
+    let keys: Vec<JobKey> = jobs
+        .iter()
+        .map(|(persona, problem, reference)| scope.key(persona, problem, *reference))
+        .collect();
+    let mut stats = CacheStats::default();
+    let mut slots: Vec<Option<TaskResult>> = vec![None; jobs.len()];
+
+    // 1. restore completed jobs from the campaign journal (--resume);
+    //    without resume, start the journal fresh.  Journal I/O failures
+    //    are logged and never fail the campaign.
+    let journal: Option<Journal> = store.journal_path(&cfg.name, &keys).and_then(|path| {
+        let opened = if store.resume() {
+            Journal::resume(&path, &cfg.name, &keys).map(|(j, restored)| {
+                for (i, r) in restored {
+                    stats.resumed += 1;
+                    store.record_resumed();
+                    stats.bytes_written += store.put(&keys[i], &r);
+                    slots[i] = Some(r);
+                }
+                j
+            })
+        } else {
+            Journal::fresh(&path, &cfg.name, &keys)
+        };
+        match opened {
+            Ok(j) => Some(j),
+            Err(e) => {
+                eprintln!("[store] campaign journal unavailable ({e:#}); continuing without it");
+                None
+            }
+        }
     });
+
+    // 2. consult the store before dispatch; cache hits not already in
+    //    the journal are backfilled so the journal converges to a
+    //    complete record of the campaign.
+    let mut backfill: Vec<usize> = Vec::new();
+    for (i, slot) in slots.iter_mut().enumerate() {
+        if slot.is_none() {
+            if let Some((r, bytes)) = store.get(&keys[i]) {
+                stats.hits += 1;
+                stats.bytes_read += bytes;
+                *slot = Some(r);
+                backfill.push(i);
+            }
+        }
+    }
+    if let Some(j) = &journal {
+        for &i in &backfill {
+            if let Err(e) = j.append(i, &keys[i], slots[i].as_ref().expect("backfilled slot")) {
+                eprintln!("[store] journal backfill failed ({e:#})");
+                break;
+            }
+        }
+    }
+
+    // 3. compute what remains, writing back (store + journal) as each
+    //    job completes so a kill loses at most the in-flight jobs.
+    let pending: Vec<usize> = slots
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| s.is_none().then_some(i))
+        .collect();
+    stats.misses = pending.len() as u64;
+    let bytes_written = AtomicU64::new(0);
+    let computed = super::worker::run_sparse(workers, &pending, |i| {
+        let (persona, problem, reference) = jobs[i];
+        let r = run_task(cfg, &spec, persona, problem, reference);
+        bytes_written.fetch_add(store.put(&keys[i], &r), Ordering::Relaxed);
+        if let Some(j) = &journal {
+            if let Err(e) = j.append(i, &keys[i], &r) {
+                eprintln!("[store] journal append failed for job {i} ({e:#})");
+            }
+        }
+        r
+    });
+    for (i, r) in pending.into_iter().zip(computed) {
+        slots[i] = Some(r);
+    }
+    stats.bytes_written += bytes_written.into_inner();
     CampaignResult {
         config_name: cfg.name.clone(),
-        results,
+        results: slots
+            .into_iter()
+            .map(|s| s.expect("every job slot filled after dispatch"))
+            .collect(),
+        cache: stats,
     }
 }
 
@@ -308,24 +435,67 @@ mod tests {
         for run in &runs[1..] {
             assert_eq!(run.results.len(), runs[0].results.len());
             for (a, b) in runs[0].results.iter().zip(&run.results) {
-                assert_eq!(a.problem_id, b.problem_id);
-                assert_eq!(a.persona, b.persona);
-                assert_eq!(a.level, b.level);
-                assert_eq!(a.state_history, b.state_history);
-                assert_eq!(a.outcome.correct, b.outcome.correct, "{}", a.problem_id);
-                assert_eq!(
-                    a.outcome.speedup.to_bits(),
-                    b.outcome.speedup.to_bits(),
-                    "{}",
-                    a.problem_id
-                );
-                assert_eq!(a.best_iteration, b.best_iteration);
-                assert_eq!(a.baseline_s.to_bits(), b.baseline_s.to_bits());
-                assert_eq!(
-                    a.best_candidate_s.map(f64::to_bits),
-                    b.best_candidate_s.map(f64::to_bits)
-                );
+                assert_bit_identical(a, b);
             }
+        }
+        // worker-count invariance is what makes cached substitution
+        // safe; close the loop by pinning the warm-vs-cold half too: a
+        // campaign answered entirely from the store is bit-identical
+        // to the cold run above, field by field, f64s by bit pattern
+        let store = Store::memory();
+        let mut warm_cfg = base.clone();
+        warm_cfg.workers = 4;
+        let first = run_campaign_with(&store, &suite, None, &warm_cfg);
+        assert_eq!(first.cache.misses, 18, "cold store must compute every job");
+        assert_eq!(first.cache.hits, 0);
+        let warm = run_campaign_with(&store, &suite, None, &warm_cfg);
+        assert_eq!(warm.cache.hits, 18, "warm store must answer every job");
+        assert_eq!(warm.cache.misses, 0);
+        for (a, b) in runs[0].results.iter().zip(&warm.results) {
+            assert_bit_identical(a, b);
+        }
+        // the disabled-store (cold) path reports all-zero counters
+        assert_eq!(runs[0].cache, CacheStats::default());
+    }
+
+    fn assert_bit_identical(a: &TaskResult, b: &TaskResult) {
+        assert_eq!(a.problem_id, b.problem_id);
+        assert_eq!(a.persona, b.persona);
+        assert_eq!(a.level, b.level);
+        assert_eq!(a.state_history, b.state_history);
+        assert_eq!(a.outcome.correct, b.outcome.correct, "{}", a.problem_id);
+        assert_eq!(
+            a.outcome.speedup.to_bits(),
+            b.outcome.speedup.to_bits(),
+            "{}",
+            a.problem_id
+        );
+        assert_eq!(a.best_iteration, b.best_iteration);
+        assert_eq!(a.baseline_s.to_bits(), b.baseline_s.to_bits());
+        assert_eq!(
+            a.best_candidate_s.map(f64::to_bits),
+            b.best_candidate_s.map(f64::to_bits)
+        );
+    }
+
+    #[test]
+    fn store_shares_jobs_across_overlapping_suites() {
+        // per-job keys are independent of the suite that contains the
+        // job, so a campaign over a superset suite reuses the subset's
+        // results — this is exactly how `kforge conformance` and
+        // `kforge bench` stop recomputing shared jobs in one process
+        let store = Store::memory();
+        let cfg = small_cfg("cuda", 2);
+        let small = run_campaign_with(&store, &Suite::sample(2), None, &cfg);
+        assert_eq!(small.cache.misses, 6);
+        let big = run_campaign_with(&store, &Suite::sample(3), None, &cfg);
+        assert_eq!(big.results.len(), 9);
+        assert_eq!(big.cache.hits, 6, "subset jobs must be reused");
+        assert_eq!(big.cache.misses, 3);
+        // reused results are bit-identical to a cold run of the big suite
+        let cold = run_campaign_with(&Store::disabled(), &Suite::sample(3), None, &cfg);
+        for (a, b) in cold.results.iter().zip(&big.results) {
+            assert_bit_identical(a, b);
         }
     }
 

@@ -6,12 +6,17 @@
 //! Studio node on Metal) — runs the iterative synthesis loop for each
 //! job, and aggregates `fast_p` outcomes.  Deterministic regardless of
 //! worker interleaving: every job's RNG stream is forked from
-//! (seed, persona, problem).
+//! (seed, persona, problem) — which is also what makes results from
+//! the [`crate::store`] result cache safe to substitute for fresh
+//! runs: campaigns consult the store before dispatch and write back
+//! (cache + journal) as each job completes.
 
 pub mod job;
 pub mod worker;
 pub mod experiment;
 pub mod runlog;
 
-pub use experiment::{run_campaign, BaselineKind, CampaignResult, ExperimentConfig};
+pub use experiment::{
+    run_campaign, run_campaign_with, BaselineKind, CampaignResult, ExperimentConfig,
+};
 pub use job::TaskResult;

@@ -34,6 +34,16 @@ pub fn to_json(c: &CampaignResult) -> Json {
         .collect();
     Json::obj()
         .set("config", c.config_name.as_str())
+        .set(
+            "cache",
+            Json::obj()
+                .set("hits", c.cache.hits as f64)
+                .set("misses", c.cache.misses as f64)
+                .set("resumed", c.cache.resumed as f64)
+                .set("bytes_read", c.cache.bytes_read as f64)
+                .set("bytes_written", c.cache.bytes_written as f64)
+                .set("evictions", c.cache.evictions as f64),
+        )
         .set("results", Json::Arr(results))
 }
 
@@ -55,6 +65,7 @@ mod tests {
     fn campaign() -> CampaignResult {
         CampaignResult {
             config_name: "unit".into(),
+            cache: crate::store::CacheStats { hits: 2, misses: 1, ..Default::default() },
             results: vec![TaskResult {
                 problem_id: "p1".into(),
                 level: Level::L2,
@@ -79,6 +90,9 @@ mod tests {
             r.get("states").unwrap().as_arr().unwrap().len(),
             2
         );
+        let cache = parsed.get("cache").unwrap();
+        assert_eq!(cache.get("hits").unwrap().as_f64(), Some(2.0));
+        assert_eq!(cache.get("misses").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

@@ -76,6 +76,19 @@ where
     out
 }
 
+/// Run only the jobs at `indices` (a sparse view over a larger job
+/// list), returning results in `indices` order.  This is the partial
+/// dispatch the result store uses: jobs answered from the cache never
+/// reach the pool, and the remainder keeps the same ordering,
+/// panic-naming and determinism guarantees as [`run_jobs`].
+pub fn run_sparse<R, F>(workers: usize, indices: &[usize], f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    run_jobs(workers, indices, |&i| f(i))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,6 +106,21 @@ mod tests {
         let a = run_jobs(1, &jobs, |&j| j * j);
         let b = run_jobs(16, &jobs, |&j| j * j);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_runs_only_named_indices_in_order() {
+        use std::sync::atomic::AtomicUsize;
+        let touched = AtomicUsize::new(0);
+        let indices = [7usize, 2, 9, 4];
+        let out = run_sparse(3, &indices, |i| {
+            touched.fetch_add(1, Ordering::Relaxed);
+            i * 10
+        });
+        assert_eq!(out, vec![70, 20, 90, 40]);
+        assert_eq!(touched.load(Ordering::Relaxed), 4);
+        let none: Vec<usize> = run_sparse(3, &[], |i| i);
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! underlying numbers, so tests can assert the *shape* criteria from
 //! DESIGN.md §4 (who wins, by roughly what factor, where crossovers
 //! fall) without chasing absolute values.
+//!
+//! Campaigns inside these modules go through `run_campaign`, which
+//! consults the process-wide result store (`crate::store`): under the
+//! CLI every artifact module shares one store, so jobs overlapping
+//! between artifacts (or between `kforge bench` and `kforge
+//! conformance` against a `--cache-dir`) are computed exactly once.
+//! Cached substitution cannot change rendered bytes — stored results
+//! are bit-exact copies of computed ones.
 
 pub mod render;
 pub mod table2;

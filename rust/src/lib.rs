@@ -39,6 +39,11 @@
 //! - [`runtime`] — PJRT artifact loading/execution (real numerics;
 //!   behind the `pjrt` cargo feature, stubbed otherwise).
 //! - [`coordinator`] — job queue, device-worker pool, experiments.
+//! - [`store`] — the synthesis result store: content-addressed job
+//!   cache (canonical `JobKey` fingerprints, corruption-tolerant disk
+//!   entries) plus crash-safe per-campaign journals behind `--resume`.
+//!   One store is shared per process so the harness artifacts and the
+//!   conformance gate never compute the same job twice.
 //! - [`metrics`] — fast_p and friends.
 //! - [`harness`] — regenerates every paper table and figure.
 //! - [`conformance`] — the conformance gate: golden paper artifacts
@@ -59,6 +64,7 @@ pub mod verify;
 pub mod workloads;
 pub mod runtime;
 pub mod coordinator;
+pub mod store;
 pub mod metrics;
 pub mod harness;
 pub mod conformance;

@@ -2,14 +2,19 @@
 //!
 //! ```text
 //! kforge suite                      # Table 2 + suite census, per platform
-//! kforge run --problem <id> --model <persona> [--platform <name>]
-//!                                   # one iterative-refinement job, verbose
+//! kforge run --model <persona> [--problem <id>] [--platform <name>]
+//!            [--sample N] [--cache-dir DIR] [--resume] [--no-cache]
+//!                                   # one verbose job, or (without
+//!                                   # --problem) a resumable campaign
 //! kforge platforms                  # list the registered platforms
 //! kforge bench <fig2|fig3|fig4|table2|table4|table5|table6|cases|all>
-//!              [--quick N] [--out DIR]
+//!              [--quick N] [--out DIR] [--cache-dir DIR] [--resume] [--no-cache]
 //! kforge conformance [--bless] [--dir DIR] [--quick N] [--out DIR]
+//!                    [--cache-dir DIR] [--resume] [--no-cache]
 //!                                   # check (or regenerate) the golden
 //!                                   # paper artifacts for every platform
+//! kforge cache <stats|clear|gc> [--cache-dir DIR] [--max-bytes N]
+//!                                   # inspect / empty / bound the store
 //! kforge serve [--artifacts DIR]    # PJRT request loop over real artifacts
 //! kforge personas                   # the 8 calibrated personas, per platform
 //! ```
@@ -17,12 +22,20 @@
 //! `--platform` accepts any name or alias registered in
 //! `kforge::platform::registry()` — adding a platform module makes it
 //! addressable here with no CLI changes.
+//!
+//! Every campaign-running command shares one process-wide result store
+//! (`kforge::store`): in-memory by default, disk-backed under
+//! `--cache-dir` (which also enables per-campaign journals and
+//! `--resume`), and fully off under `--no-cache`.  Unknown flags are
+//! rejected per subcommand, naming the flag and the valid set.
 
 use anyhow::{bail, Context, Result};
 use kforge::agents::persona::{by_name, PERSONAS};
 use kforge::coordinator::ExperimentConfig;
 use kforge::harness::{self, Scale};
 use kforge::platform::{registry, PlatformRef};
+use kforge::store::{self, Store};
+use kforge::util::cliflags::{self, FlagSpec};
 use kforge::workloads::Suite;
 
 fn main() {
@@ -40,6 +53,30 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// First bare (non-flag) token after the subcommand, skipping flag
+/// values — so `kforge bench --quick 3 fig2` and `kforge bench fig2
+/// --quick 3` both name the same target.  (The flag spec has already
+/// validated every token by the time this runs.)
+fn first_positional<'a>(args: &'a [String], value_flags: &[&str]) -> Option<&'a str> {
+    let mut i = 1;
+    while i < args.len() {
+        let tok = args[i].as_str();
+        if tok.starts_with("--") {
+            if value_flags.contains(&tok) {
+                i += 1;
+            }
+        } else {
+            return Some(tok);
+        }
+        i += 1;
+    }
+    None
+}
+
 /// Resolve `--platform` through the registry (default: cuda).  Unknown
 /// names produce an error listing everything registered.
 fn platform_arg(args: &[String]) -> Result<PlatformRef> {
@@ -49,26 +86,89 @@ fn platform_arg(args: &[String]) -> Result<PlatformRef> {
     }
 }
 
-fn dispatch(args: &[String]) -> Result<()> {
-    match args.first().map(|s| s.as_str()) {
-        Some("suite") => cmd_suite(),
-        Some("personas") => cmd_personas(),
-        Some("platforms") => cmd_platforms(),
-        Some("run") => cmd_run(args),
-        Some("bench") => cmd_bench(args),
-        Some("conformance") => cmd_conformance(args),
-        Some("serve") => cmd_serve(args),
-        Some(other) => {
-            bail!(
-                "unknown command {other:?}; try: suite, personas, platforms, run, bench, conformance, serve"
-            )
+/// Install the process-wide result store from `--cache-dir` /
+/// `--no-cache` / `--resume` before any campaign runs.  Default: an
+/// in-memory store shared by every campaign in this process.
+fn configure_store(args: &[String]) -> Result<()> {
+    let no_cache = has_flag(args, "--no-cache");
+    let resume = has_flag(args, "--resume");
+    let dir = flag_value(args, "--cache-dir");
+    let configured = if no_cache {
+        if resume {
+            bail!("--resume needs the result store; drop --no-cache");
         }
+        if dir.is_some() {
+            bail!("--no-cache and --cache-dir are mutually exclusive");
+        }
+        Store::disabled()
+    } else if let Some(d) = dir {
+        Store::at_dir(std::path::Path::new(d), resume)?
+    } else {
+        if resume {
+            bail!("--resume requires --cache-dir (campaign journals live in the store directory)");
+        }
+        Store::memory()
+    };
+    store::configure(configured)?;
+    Ok(())
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let (cmd, rest) = match args.split_first() {
+        Some((c, rest)) => (c.as_str(), rest),
         None => {
             println!("kforge — program synthesis for diverse AI hardware accelerators");
-            println!("commands: suite | personas | platforms | run | bench | conformance | serve");
+            println!("commands: suite | personas | platforms | run | bench | conformance | cache | serve");
             println!("registered platforms: {}", registry().describe());
-            Ok(())
+            return Ok(());
         }
+    };
+    let none = FlagSpec { value_flags: &[], bool_flags: &[], max_positionals: 0 };
+    let spec = match cmd {
+        "suite" | "personas" | "platforms" => none,
+        "run" => FlagSpec {
+            value_flags: &["--problem", "--model", "--platform", "--sample", "--cache-dir"],
+            bool_flags: &["--resume", "--no-cache"],
+            max_positionals: 0,
+        },
+        "bench" => FlagSpec {
+            value_flags: &["--quick", "--out", "--cache-dir"],
+            bool_flags: &["--resume", "--no-cache"],
+            max_positionals: 1,
+        },
+        "conformance" => FlagSpec {
+            value_flags: &["--dir", "--quick", "--out", "--cache-dir"],
+            bool_flags: &["--bless", "--resume", "--no-cache"],
+            max_positionals: 0,
+        },
+        "cache" => FlagSpec {
+            value_flags: &["--cache-dir", "--max-bytes"],
+            bool_flags: &[],
+            max_positionals: 1,
+        },
+        "serve" => FlagSpec {
+            value_flags: &["--artifacts", "--requests"],
+            bool_flags: &[],
+            max_positionals: 0,
+        },
+        other => bail!(
+            "unknown command {other:?}; try: suite, personas, platforms, run, bench, conformance, cache, serve"
+        ),
+    };
+    cliflags::validate(cmd, rest, &spec)?;
+    if matches!(cmd, "run" | "bench" | "conformance") {
+        configure_store(args)?;
+    }
+    match cmd {
+        "suite" => cmd_suite(),
+        "personas" => cmd_personas(),
+        "platforms" => cmd_platforms(),
+        "run" => cmd_run(args),
+        "bench" => cmd_bench(args),
+        "conformance" => cmd_conformance(args),
+        "cache" => cmd_cache(args),
+        "serve" => cmd_serve(args),
+        _ => unreachable!("validated above"),
     }
 }
 
@@ -137,10 +237,48 @@ fn cmd_personas() -> Result<()> {
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
-    let problem_id = flag_value(args, "--problem").context("--problem <id> required")?;
     let model = flag_value(args, "--model").unwrap_or("openai-gpt-5");
     let platform = platform_arg(args)?;
     let persona = by_name(model).with_context(|| format!("unknown persona {model}"))?;
+    let mut cfg = ExperimentConfig::iterative(platform.clone(), vec![persona]);
+    cfg.use_profiling = true;
+
+    let Some(problem_id) = flag_value(args, "--problem") else {
+        // campaign mode: the whole suite (or --sample N per level),
+        // cached and journaled through the process store, resumable
+        // with --cache-dir + --resume after a kill
+        let suite = match flag_value(args, "--sample") {
+            Some(n) => Suite::sample(n.parse().context("--sample N")?),
+            None => Suite::full(),
+        };
+        let supported = suite.supported_on(platform.spec()).len();
+        println!(
+            "campaign {}: persona {} over {supported} of {} problems on {}",
+            cfg.name,
+            persona.name,
+            suite.len(),
+            platform.name()
+        );
+        let t0 = std::time::Instant::now();
+        let campaign = kforge::coordinator::run_campaign(&suite, None, &cfg);
+        let outcomes: Vec<_> = campaign.results.iter().map(|r| r.outcome).collect();
+        println!(
+            "jobs: {}  correct: {:.1}%  fast_1: {:.1}%",
+            campaign.results.len(),
+            kforge::metrics::correctness_rate(&outcomes) * 100.0,
+            kforge::metrics::fast_p(&outcomes, 1.0) * 100.0
+        );
+        let census = campaign.state_census();
+        let census: Vec<String> = census.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        println!("iteration states: {}", census.join(" "));
+        println!("cache: {}", campaign.cache);
+        eprintln!("[campaign completed in {:.1}s]", t0.elapsed().as_secs_f64());
+        return Ok(());
+    };
+
+    if has_flag(args, "--sample") {
+        bail!("--sample only applies to campaign mode; drop --problem to run a sampled campaign");
+    }
     let suite = Suite::full();
     let problem = suite
         .get(problem_id)
@@ -152,9 +290,6 @@ fn cmd_run(args: &[String]) -> Result<()> {
             platform.spec().unsupported_ops
         );
     }
-
-    let mut cfg = ExperimentConfig::iterative(platform.clone(), vec![persona]);
-    cfg.use_profiling = true;
     let spec = cfg.spec();
     println!("problem: {problem_id} ({})", problem.level.name());
     println!(
@@ -164,7 +299,13 @@ fn cmd_run(args: &[String]) -> Result<()> {
         platform.name()
     );
     println!("reference graph:\n{}", problem.eval_graph.render());
-    let result = kforge::coordinator::experiment::run_task(&cfg, &spec, persona, problem, None);
+    // run as a one-problem campaign so the job flows through the
+    // result store (and its journal) like any other
+    let single = Suite {
+        problems: std::sync::Arc::new(vec![problem.clone()]),
+    };
+    let campaign = kforge::coordinator::run_campaign(&single, None, &cfg);
+    let result = &campaign.results[0];
     println!("iteration states: {:?}", result.state_history);
     println!("baseline: {:.3} ms", result.baseline_s * 1e3);
     match result.best_candidate_s {
@@ -176,11 +317,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
         ),
         None => println!("no correct candidate produced"),
     }
+    println!("cache: {}", campaign.cache);
     Ok(())
 }
 
 fn cmd_bench(args: &[String]) -> Result<()> {
-    let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let which = first_positional(args, &["--quick", "--out", "--cache-dir"]).unwrap_or("all");
     let scale = match flag_value(args, "--quick") {
         Some(n) => Scale::Quick(n.parse().context("--quick N")?),
         None => Scale::Full,
@@ -218,7 +360,66 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             std::fs::write(dir.join(format!("{name}.txt")), text)?;
         }
     }
+    println!("cache: {}", store::global().snapshot());
     eprintln!("[bench {which} completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// `kforge cache <stats|clear|gc> [--cache-dir DIR] [--max-bytes N]` —
+/// operate on an on-disk result store (default `.kforge-cache`).
+fn cmd_cache(args: &[String]) -> Result<()> {
+    let action = first_positional(args, &["--cache-dir", "--max-bytes"])
+        .context("usage: kforge cache <stats|clear|gc> [--cache-dir DIR] [--max-bytes N]")?;
+    if !matches!(action, "stats" | "clear" | "gc") {
+        bail!("unknown cache action {action:?}; try: stats, clear, gc");
+    }
+    let dir = std::path::PathBuf::from(flag_value(args, "--cache-dir").unwrap_or(store::DEFAULT_DIR));
+    // inspection must not create the directory it inspects (and a
+    // typo'd --cache-dir should be visible, not silently materialized)
+    if !dir.exists() {
+        println!("cache dir {} does not exist; nothing to do", dir.display());
+        return Ok(());
+    }
+    let cache = kforge::store::Cache::at(&dir)?;
+    match action {
+        "stats" => {
+            let entries = cache.disk_entries()?;
+            let bytes: u64 = entries.iter().map(|(_, b, _)| *b).sum();
+            let journals = match std::fs::read_dir(dir.join("journals")) {
+                Ok(rd) => rd.filter_map(|e| e.ok()).filter(|e| e.path().is_file()).count(),
+                Err(_) => 0,
+            };
+            println!("dir: {}", dir.display());
+            println!("objects: {}", entries.len());
+            println!("bytes: {bytes}");
+            println!("journals: {journals}");
+            println!(
+                "schema: {} pipeline: {:016x}",
+                kforge::store::STORE_SCHEMA,
+                kforge::store::key::pipeline_fingerprint()
+            );
+        }
+        "clear" => {
+            let removed = cache.clear()?;
+            let journals = dir.join("journals");
+            if journals.exists() {
+                std::fs::remove_dir_all(&journals)?;
+            }
+            println!(
+                "cleared {removed} cached results (and campaign journals) from {}",
+                dir.display()
+            );
+        }
+        "gc" => {
+            let max_bytes: u64 = match flag_value(args, "--max-bytes") {
+                Some(n) => n.parse().context("--max-bytes N")?,
+                None => 256 * 1024 * 1024,
+            };
+            let (evicted, kept) = cache.gc(max_bytes)?;
+            println!("evicted {evicted} entries; {kept} bytes kept (budget {max_bytes})");
+        }
+        _ => unreachable!("validated above"),
+    }
     Ok(())
 }
 
@@ -244,6 +445,9 @@ fn cmd_conformance(args: &[String]) -> Result<()> {
         arts.len(),
         t0.elapsed().as_secs_f64()
     );
+    // process-level store counters: the CI cache-smoke job asserts the
+    // second (warm) render reports nonzero hits here
+    println!("cache: {}", store::global().snapshot());
     if let Some(out) = &out_dir {
         golden::write_artifacts(out, &arts)?;
     }
@@ -302,9 +506,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         requests as f64 / total
     );
     println!(
-        "latency ms: p50={:.2} p90={:.2} p99={:.2} max={:.2} (compile-once cache: {} executables)",
+        "latency ms: p50={:.2} p95={:.2} p99={:.2} max={:.2} (compile-once cache: {} executables)",
         s.p50 * 1e3,
-        s.p90 * 1e3,
+        s.p95 * 1e3,
         s.p99 * 1e3,
         s.max * 1e3,
         rt.cache_len()

@@ -1,0 +1,585 @@
+//! The content-addressed result store: an in-memory map over
+//! versioned on-disk entries.
+//!
+//! Entries are addressed by [`JobKey::hex`] and carry the full key
+//! text, which is re-verified on every hit — a digest collision, a
+//! truncated file, or plain garbage all degrade to a *logged miss*,
+//! never a crash and never a wrong substitution.
+//!
+//! Serialization is bit-exact: every `f64` is stored as its IEEE-754
+//! bit pattern in hex, so a result loaded from disk is
+//! indistinguishable (by `to_bits`) from the freshly computed one —
+//! the property the warm-vs-cold conformance guarantee rests on.
+
+use super::key::JobKey;
+use super::stats::StatCounters;
+use crate::coordinator::job::TaskResult;
+use crate::metrics::TaskOutcome;
+use crate::workloads::Level;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+pub const ENTRY_MAGIC: &str = "kforge-cache v1";
+const RESULT_END: &str = "end kforge-result";
+
+/// Intern a string, returning a `&'static str` — `TaskResult.persona`
+/// is a static reference, so deserialized names must live forever.
+/// The pool is tiny (one entry per distinct persona name seen), and a
+/// name is only interned *after* the entry parses cleanly, so corrupt
+/// data never leaks.
+pub(crate) fn intern(s: &str) -> &'static str {
+    static POOL: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    let mut pool = POOL.get_or_init(|| Mutex::new(Vec::new())).lock().unwrap();
+    if let Some(hit) = pool.iter().find(|x| **x == s) {
+        return hit;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    pool.push(leaked);
+    leaked
+}
+
+/// Map a stored state label back to the verifier's static label set;
+/// an unknown label means a corrupt entry, not a new allocation.
+fn state_label(s: &str) -> Result<&'static str> {
+    Ok(match s {
+        "generation_failure" => "generation_failure",
+        "compilation_failure" => "compilation_failure",
+        "runtime_error" => "runtime_error",
+        "mismatch" => "mismatch",
+        "correct" => "correct",
+        other => bail!("unknown state label {other:?}"),
+    })
+}
+
+fn level_name(level: Level) -> &'static str {
+    match level {
+        Level::L1 => "L1",
+        Level::L2 => "L2",
+        Level::L3 => "L3",
+    }
+}
+
+fn parse_level(s: &str) -> Result<Level> {
+    Ok(match s {
+        "L1" => Level::L1,
+        "L2" => Level::L2,
+        "L3" => Level::L3,
+        other => bail!("unknown level {other:?}"),
+    })
+}
+
+fn parse_bits(s: &str) -> Result<f64> {
+    let raw = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bits {s:?}"))?;
+    Ok(f64::from_bits(raw))
+}
+
+/// Serialize one result, bit-exact, ending with a trailer line that
+/// detects truncation.
+pub fn serialize_result(r: &TaskResult) -> String {
+    let states = if r.state_history.is_empty() {
+        "-".to_string()
+    } else {
+        r.state_history.join(",")
+    };
+    let best_iteration = match r.best_iteration {
+        Some(i) => i.to_string(),
+        None => "none".to_string(),
+    };
+    let best_candidate_s = match r.best_candidate_s {
+        Some(t) => format!("{:016x}", t.to_bits()),
+        None => "none".to_string(),
+    };
+    format!(
+        "problem_id {}\nlevel {}\npersona {}\nstates {}\ncorrect {}\nspeedup {:016x}\nbest_iteration {}\nbaseline_s {:016x}\nbest_candidate_s {}\n{}\n",
+        r.problem_id,
+        level_name(r.level),
+        r.persona,
+        states,
+        r.outcome.correct,
+        r.outcome.speedup.to_bits(),
+        best_iteration,
+        r.baseline_s.to_bits(),
+        best_candidate_s,
+        RESULT_END,
+    )
+}
+
+/// Strict inverse of [`serialize_result`]: any missing field, unknown
+/// label, malformed number, or absent trailer is an error (= a miss).
+pub fn parse_result(text: &str) -> Result<TaskResult> {
+    let mut lines = text.lines();
+    let mut field = |name: &str| -> Result<String> {
+        let line = lines.next().with_context(|| format!("entry truncated before {name}"))?;
+        let value = line
+            .strip_prefix(name)
+            .and_then(|rest| rest.strip_prefix(' '))
+            .with_context(|| format!("expected {name:?} line, got {line:?}"))?;
+        Ok(value.to_string())
+    };
+    let problem_id = field("problem_id")?;
+    let level = parse_level(&field("level")?)?;
+    let persona_name = field("persona")?;
+    let states_raw = field("states")?;
+    let correct = match field("correct")?.as_str() {
+        "true" => true,
+        "false" => false,
+        other => bail!("bad correct flag {other:?}"),
+    };
+    let speedup = parse_bits(&field("speedup")?)?;
+    let best_iteration = match field("best_iteration")?.as_str() {
+        "none" => None,
+        n => Some(n.parse::<usize>().with_context(|| format!("bad best_iteration {n:?}"))?),
+    };
+    let baseline_s = parse_bits(&field("baseline_s")?)?;
+    let best_candidate_s = match field("best_candidate_s")?.as_str() {
+        "none" => None,
+        bits => Some(parse_bits(bits)?),
+    };
+    match lines.next() {
+        Some(RESULT_END) => {}
+        other => bail!("missing result trailer (got {other:?})"),
+    }
+    if lines.next().is_some() {
+        bail!("trailing data after result trailer");
+    }
+    let state_history = if states_raw == "-" {
+        Vec::new()
+    } else {
+        states_raw.split(',').map(state_label).collect::<Result<Vec<_>>>()?
+    };
+    Ok(TaskResult {
+        problem_id,
+        level,
+        persona: intern(&persona_name),
+        state_history,
+        outcome: if correct { TaskOutcome::correct(speedup) } else { TaskOutcome { correct: false, speedup } },
+        best_iteration,
+        baseline_s,
+        best_candidate_s,
+    })
+}
+
+/// One on-disk entry: magic, content address, the exact key text
+/// (length-prefixed — it is multi-line), then the result block.
+pub fn serialize_entry(key: &JobKey, r: &TaskResult) -> String {
+    format!(
+        "{ENTRY_MAGIC}\nkey {}\nkeytext {}\n{}\n{}",
+        key.hex(),
+        key.text.len(),
+        key.text,
+        serialize_result(r),
+    )
+}
+
+/// Parse an entry *for a specific key*: the stored key text must match
+/// byte-for-byte, so a digest collision is an error (= a miss).
+pub fn parse_entry(data: &str, key: &JobKey) -> Result<TaskResult> {
+    let rest = data
+        .strip_prefix(ENTRY_MAGIC)
+        .and_then(|r| r.strip_prefix('\n'))
+        .context("bad entry magic")?;
+    let (key_line, rest) = rest.split_once('\n').context("entry truncated at key line")?;
+    let hex = key_line.strip_prefix("key ").context("missing key line")?;
+    if hex != key.hex() {
+        bail!("entry addressed to {hex}, expected {}", key.hex());
+    }
+    let (len_line, rest) = rest.split_once('\n').context("entry truncated at keytext line")?;
+    let len: usize = len_line
+        .strip_prefix("keytext ")
+        .and_then(|n| n.parse().ok())
+        .context("bad keytext length")?;
+    // byte-compare before slicing: a corrupt length must not be able
+    // to panic on a UTF-8 boundary (or overflow `len + 1`), only to miss
+    let end = len.checked_add(1).context("absurd keytext length")?;
+    let bytes = rest.as_bytes();
+    if bytes.len() < end {
+        bail!("entry truncated inside key text");
+    }
+    if &bytes[..len] != key.text.as_bytes() {
+        bail!("key text mismatch (digest collision)");
+    }
+    if bytes[len] != b'\n' {
+        bail!("missing newline after key text");
+    }
+    // the prefix equals key.text (valid UTF-8) and byte len is '\n',
+    // so len + 1 is a char boundary
+    parse_result(&rest[len + 1..])
+}
+
+struct CacheSlot {
+    keytext: String,
+    result: TaskResult,
+}
+
+/// In-memory + optional on-disk content-addressed store.
+pub struct Cache {
+    mem: Mutex<HashMap<String, CacheSlot>>,
+    dir: Option<PathBuf>,
+    counters: StatCounters,
+}
+
+impl Cache {
+    /// Memory-only store (one process's harness modules share it).
+    pub fn memory() -> Cache {
+        Cache {
+            mem: Mutex::new(HashMap::new()),
+            dir: None,
+            counters: StatCounters::new(),
+        }
+    }
+
+    /// Disk-backed store rooted at `dir` (objects under `dir/objects`).
+    pub fn at(dir: &Path) -> Result<Cache> {
+        let objects = dir.join("objects");
+        std::fs::create_dir_all(&objects)
+            .with_context(|| format!("creating cache dir {}", objects.display()))?;
+        Ok(Cache {
+            mem: Mutex::new(HashMap::new()),
+            dir: Some(dir.to_path_buf()),
+            counters: StatCounters::new(),
+        })
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    fn object_path(&self, hex: &str) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join("objects").join(hex))
+    }
+
+    /// Look up a key.  Returns the result plus the bytes read from
+    /// disk (0 for a memory hit).  Any disk anomaly is a logged miss.
+    pub fn get(&self, key: &JobKey) -> Option<(TaskResult, u64)> {
+        let hex = key.hex();
+        {
+            let mem = self.mem.lock().unwrap();
+            if let Some(slot) = mem.get(&hex) {
+                if slot.keytext == key.text {
+                    self.counters.record_hit(0);
+                    return Some((slot.result.clone(), 0));
+                }
+                // in-memory digest collision: fall through as a miss
+            }
+        }
+        if let Some(path) = self.object_path(&hex) {
+            match std::fs::read_to_string(&path) {
+                Ok(data) => match parse_entry(&data, key) {
+                    Ok(result) => {
+                        let bytes = data.len() as u64;
+                        self.counters.record_hit(bytes);
+                        self.mem.lock().unwrap().insert(
+                            hex,
+                            CacheSlot { keytext: key.text.clone(), result: result.clone() },
+                        );
+                        return Some((result, bytes));
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[store] corrupt cache entry {} ({e:#}); treating as a miss",
+                            path.display()
+                        );
+                    }
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    eprintln!("[store] unreadable cache entry {} ({e}); treating as a miss", path.display());
+                }
+            }
+        }
+        self.counters.record_miss();
+        None
+    }
+
+    /// Store a result.  Returns bytes written to disk (0 when
+    /// memory-only).  Disk failures are logged, never fatal — the
+    /// campaign result is already in hand.
+    pub fn put(&self, key: &JobKey, r: &TaskResult) -> u64 {
+        let hex = key.hex();
+        self.mem.lock().unwrap().insert(
+            hex.clone(),
+            CacheSlot { keytext: key.text.clone(), result: r.clone() },
+        );
+        let Some(path) = self.object_path(&hex) else {
+            return 0;
+        };
+        let entry = serialize_entry(key, r);
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        let written = std::fs::write(&tmp, &entry)
+            .and_then(|()| std::fs::rename(&tmp, &path))
+            .map(|()| entry.len() as u64);
+        match written {
+            Ok(bytes) => {
+                self.counters.record_write(bytes);
+                bytes
+            }
+            Err(e) => {
+                eprintln!("[store] failed to persist cache entry {} ({e})", path.display());
+                let _ = std::fs::remove_file(&tmp);
+                0
+            }
+        }
+    }
+
+    /// All on-disk objects as (path, bytes, modified-time).
+    pub fn disk_entries(&self) -> Result<Vec<(PathBuf, u64, std::time::SystemTime)>> {
+        let Some(dir) = self.dir.as_ref() else {
+            return Ok(Vec::new());
+        };
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir.join("objects"))? {
+            let entry = entry?;
+            let meta = entry.metadata()?;
+            if meta.is_file() {
+                out.push((
+                    entry.path(),
+                    meta.len(),
+                    meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH),
+                ));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Drop every entry (memory and disk objects).  Returns the number
+    /// of disk objects removed.
+    pub fn clear(&self) -> Result<usize> {
+        self.mem.lock().unwrap().clear();
+        let mut removed = 0;
+        for (path, _, _) in self.disk_entries()? {
+            std::fs::remove_file(&path)?;
+            removed += 1;
+        }
+        Ok(removed)
+    }
+
+    /// Evict oldest-first until the on-disk footprint fits
+    /// `max_bytes`.  Returns (evicted count, bytes kept).
+    pub fn gc(&self, max_bytes: u64) -> Result<(usize, u64)> {
+        let mut entries = self.disk_entries()?;
+        entries.sort_by_key(|(_, _, mtime)| *mtime);
+        let mut total: u64 = entries.iter().map(|(_, b, _)| *b).sum();
+        let mut evicted = 0;
+        for (path, bytes, _) in &entries {
+            if total <= max_bytes {
+                break;
+            }
+            std::fs::remove_file(path)?;
+            total -= bytes;
+            evicted += 1;
+        }
+        // evicted disk entries may still sit in this process's memory
+        // tier; that is fine (they are valid results), but the CLI's gc
+        // runs in its own short-lived process anyway
+        self.counters.record_evictions(evicted as u64);
+        Ok((evicted as usize, total))
+    }
+
+    /// Count a journal-restored job in the process counters (restored
+    /// jobs never touch `get`, so they would otherwise be invisible to
+    /// the `cache:` line the CLI prints from the global snapshot).
+    pub fn record_resumed(&self) {
+        self.counters.record_resumed();
+    }
+
+    pub fn snapshot(&self) -> super::stats::CacheStats {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::{BaselineKind, ExperimentConfig};
+    use crate::store::key::KeyScope;
+    use crate::workloads::Suite;
+
+    fn sample_result() -> TaskResult {
+        TaskResult {
+            problem_id: "l1_test_0".into(),
+            level: Level::L2,
+            persona: "openai-gpt-5",
+            state_history: vec!["mismatch", "correct"],
+            outcome: TaskOutcome::correct(1.0 / 3.0),
+            best_iteration: Some(1),
+            baseline_s: f64::MIN_POSITIVE,
+            best_candidate_s: Some(2.7e-5),
+        }
+    }
+
+    fn sample_key() -> JobKey {
+        let cfg = ExperimentConfig {
+            name: "cache_test".into(),
+            platform: crate::platform::by_name("cuda").unwrap(),
+            personas: vec![crate::agents::persona::by_name("openai-gpt-5").unwrap()],
+            iterations: 1,
+            use_profiling: false,
+            use_reference: false,
+            baseline: BaselineKind::Eager,
+            seed: 1,
+            workers: 1,
+        };
+        let spec = cfg.spec();
+        let suite = Suite::sample(1);
+        KeyScope::new(&cfg, &spec).key(cfg.personas[0], &suite.problems[0], None)
+    }
+
+    fn assert_bit_identical(a: &TaskResult, b: &TaskResult) {
+        assert_eq!(a.problem_id, b.problem_id);
+        assert_eq!(a.level, b.level);
+        assert_eq!(a.persona, b.persona);
+        assert_eq!(a.state_history, b.state_history);
+        assert_eq!(a.outcome.correct, b.outcome.correct);
+        assert_eq!(a.outcome.speedup.to_bits(), b.outcome.speedup.to_bits());
+        assert_eq!(a.best_iteration, b.best_iteration);
+        assert_eq!(a.baseline_s.to_bits(), b.baseline_s.to_bits());
+        assert_eq!(a.best_candidate_s.map(f64::to_bits), b.best_candidate_s.map(f64::to_bits));
+    }
+
+    #[test]
+    fn result_roundtrip_is_bit_exact() {
+        let r = sample_result();
+        assert_bit_identical(&parse_result(&serialize_result(&r)).unwrap(), &r);
+        // incorrect outcome, empty history, None options
+        let r2 = TaskResult {
+            problem_id: "x".into(),
+            level: Level::L3,
+            persona: "deepseek-v3",
+            state_history: vec![],
+            outcome: TaskOutcome::incorrect(),
+            best_iteration: None,
+            baseline_s: 1.0 + f64::EPSILON,
+            best_candidate_s: None,
+        };
+        assert_bit_identical(&parse_result(&serialize_result(&r2)).unwrap(), &r2);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_results() {
+        let good = serialize_result(&sample_result());
+        // truncation at every interior line boundary (dropping only the
+        // final newline still leaves a complete record — lines() treats
+        // a missing trailing newline identically)
+        for (i, _) in good.match_indices('\n') {
+            if i + 1 == good.len() {
+                continue;
+            }
+            assert!(parse_result(&good[..i]).is_err(), "truncated at byte {i} parsed");
+        }
+        assert!(parse_result(&good.replace("correct true", "correct maybe")).is_err());
+        assert!(parse_result(&good.replace("mismatch", "vibes")).is_err());
+        assert!(parse_result(&good.replace("level L2", "level L9")).is_err());
+        assert!(parse_result(&format!("{good}trailing\n")).is_err());
+        assert!(parse_result("").is_err());
+    }
+
+    #[test]
+    fn entry_roundtrip_and_collision_detection() {
+        let key = sample_key();
+        let r = sample_result();
+        let entry = serialize_entry(&key, &r);
+        assert_bit_identical(&parse_entry(&entry, &key).unwrap(), &r);
+        // same entry presented for a different key = collision = error
+        let other = {
+            let cfg = ExperimentConfig {
+                name: "cache_test_other".into(),
+                platform: crate::platform::by_name("cuda").unwrap(),
+                personas: vec![crate::agents::persona::by_name("openai-gpt-5").unwrap()],
+                iterations: 1,
+                use_profiling: false,
+                use_reference: false,
+                baseline: BaselineKind::Eager,
+                seed: 1,
+                workers: 1,
+            };
+            let spec = cfg.spec();
+            let suite = Suite::sample(1);
+            KeyScope::new(&cfg, &spec).key(cfg.personas[0], &suite.problems[0], None)
+        };
+        assert!(parse_entry(&entry, &other).is_err());
+        // truncated entries never parse
+        for cut in [10, entry.len() / 2, entry.len() - 2] {
+            assert!(parse_entry(&entry[..cut], &key).is_err(), "cut at {cut} parsed");
+        }
+        // an absurd keytext length must error (miss), not overflow/panic
+        let huge = entry.replace(
+            &format!("keytext {}", key.text.len()),
+            "keytext 18446744073709551615",
+        );
+        assert!(parse_entry(&huge, &key).is_err());
+    }
+
+    #[test]
+    fn memory_cache_roundtrip() {
+        let cache = Cache::memory();
+        let key = sample_key();
+        assert!(cache.get(&key).is_none());
+        cache.put(&key, &sample_result());
+        let (got, bytes) = cache.get(&key).unwrap();
+        assert_eq!(bytes, 0);
+        assert_bit_identical(&got, &sample_result());
+        let s = cache.snapshot();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn disk_cache_roundtrip_and_corruption_tolerance() {
+        let dir = std::env::temp_dir().join(format!("kforge_cache_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let key = sample_key();
+        {
+            let cache = Cache::at(&dir).unwrap();
+            assert!(cache.put(&key, &sample_result()) > 0);
+        }
+        // a fresh instance (fresh memory tier) reads it back from disk
+        let cache = Cache::at(&dir).unwrap();
+        let (got, bytes) = cache.get(&key).unwrap();
+        assert!(bytes > 0);
+        assert_bit_identical(&got, &sample_result());
+        // truncate the object: a new instance must report a miss
+        let path = dir.join("objects").join(key.hex());
+        let data = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() / 2]).unwrap();
+        let cold = Cache::at(&dir).unwrap();
+        assert!(cold.get(&key).is_none(), "truncated entry must miss");
+        // garbage object: also a miss
+        std::fs::write(&path, "not a cache entry at all").unwrap();
+        let cold2 = Cache::at(&dir).unwrap();
+        assert!(cold2.get(&key).is_none(), "garbage entry must miss");
+        let s = cold2.snapshot();
+        assert_eq!((s.hits, s.misses), (0, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_and_gc() {
+        let dir = std::env::temp_dir().join(format!("kforge_cache_gc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = Cache::at(&dir).unwrap();
+        let key = sample_key();
+        cache.put(&key, &sample_result());
+        assert_eq!(cache.disk_entries().unwrap().len(), 1);
+        // gc with a huge budget keeps everything
+        let (evicted, _) = cache.gc(u64::MAX).unwrap();
+        assert_eq!(evicted, 0);
+        // gc to zero evicts everything
+        let (evicted, kept) = cache.gc(0).unwrap();
+        assert_eq!(evicted, 1);
+        assert_eq!(kept, 0);
+        cache.put(&key, &sample_result());
+        assert_eq!(cache.clear().unwrap(), 1);
+        assert_eq!(cache.disk_entries().unwrap().len(), 0);
+        assert!(cache.snapshot().evictions >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn intern_is_idempotent() {
+        let a = intern("some-persona");
+        let b = intern("some-persona");
+        assert!(std::ptr::eq(a, b));
+    }
+}

@@ -1,0 +1,333 @@
+//! Append-only per-campaign journals: `--resume` for killed campaigns.
+//!
+//! One journal per (config, job list).  The header pins a campaign
+//! digest derived from every job key, so a journal can never be
+//! replayed against a different config, suite, seed, or binary (the
+//! keys embed the schema version and pipeline fingerprint).  Each
+//! record carries the job index, its key address, a checksum, and the
+//! full serialized result — resume restores completed jobs from the
+//! journal alone, without needing the object store.
+//!
+//! Crash model: the process dies mid-campaign, so only the *tail* of
+//! the file can be a partial line.  Resume reads the longest valid
+//! prefix, truncates the file back to it, and reports the restored
+//! results; anything malformed past that point is discarded.
+
+use super::cache::{parse_result, serialize_result};
+use super::key::JobKey;
+use crate::coordinator::job::TaskResult;
+use crate::util::rng::fnv1a;
+use anyhow::{Context, Result};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+pub const JOURNAL_MAGIC: &str = "kforge-journal v1";
+
+/// Digest pinning a journal to one exact campaign: the config name,
+/// the job count, and every job key address in dispatch order.
+pub fn campaign_digest(config_name: &str, keys: &[JobKey]) -> u64 {
+    let mut text = format!("{config_name}\x00{}\x00", keys.len());
+    for k in keys {
+        text.push_str(&k.hex());
+        text.push('\n');
+    }
+    fnv1a(text.as_bytes())
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            other => anyhow::bail!("bad escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// An open campaign journal; `append` is thread-safe (workers call it
+/// as each job completes) and flushes per record.
+pub struct Journal {
+    file: Mutex<std::fs::File>,
+    path: PathBuf,
+}
+
+fn header(digest: u64, njobs: usize) -> String {
+    format!("{JOURNAL_MAGIC} campaign {digest:016x} jobs {njobs}\n")
+}
+
+/// Parse one `done` record against the expected key list.
+fn parse_record(line: &str, keys: &[JobKey]) -> Result<(usize, TaskResult)> {
+    let rest = line.strip_prefix("done ").context("not a done record")?;
+    let (idx, rest) = rest.split_once(' ').context("missing index")?;
+    let idx: usize = idx.parse().context("bad index")?;
+    let key = keys.get(idx).with_context(|| format!("index {idx} out of range"))?;
+    let (hex, rest) = rest.split_once(' ').context("missing key address")?;
+    anyhow::ensure!(hex == key.hex(), "record key {hex} != expected {}", key.hex());
+    let (sum, payload) = rest.split_once(' ').context("missing checksum")?;
+    let payload = unescape(payload)?;
+    let expect = u64::from_str_radix(sum, 16).context("bad checksum")?;
+    anyhow::ensure!(fnv1a(payload.as_bytes()) == expect, "checksum mismatch");
+    Ok((idx, parse_result(&payload)?))
+}
+
+impl Journal {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Start a fresh journal (truncating any prior file).
+    pub fn fresh(path: &Path, config_name: &str, keys: &[JobKey]) -> Result<Journal> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        file.write_all(header(campaign_digest(config_name, keys), keys.len()).as_bytes())?;
+        file.flush()?;
+        Ok(Journal { file: Mutex::new(file), path: path.to_path_buf() })
+    }
+
+    /// Open for resume: restore the longest valid prefix of completed
+    /// jobs, truncate any partial tail, and return the journal opened
+    /// for appending.  A missing file, or a header pinned to a
+    /// different campaign, starts fresh (restoring nothing).
+    pub fn resume(
+        path: &Path,
+        config_name: &str,
+        keys: &[JobKey],
+    ) -> Result<(Journal, Vec<(usize, TaskResult)>)> {
+        let digest = campaign_digest(config_name, keys);
+        let data = match std::fs::read_to_string(path) {
+            Ok(d) => d,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok((Journal::fresh(path, config_name, keys)?, Vec::new()));
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading journal {}", path.display())),
+        };
+        let expected_header = header(digest, keys.len());
+        if !data.starts_with(&expected_header) {
+            eprintln!(
+                "[store] journal {} belongs to a different campaign; starting fresh",
+                path.display()
+            );
+            return Ok((Journal::fresh(path, config_name, keys)?, Vec::new()));
+        }
+        let mut restored: Vec<(usize, TaskResult)> = Vec::new();
+        let mut seen = vec![false; keys.len()];
+        let mut valid_len = expected_header.len();
+        let mut rest = &data[expected_header.len()..];
+        while let Some((line, tail)) = rest.split_once('\n') {
+            match parse_record(line, keys) {
+                Ok((idx, result)) if !seen[idx] => {
+                    seen[idx] = true;
+                    restored.push((idx, result));
+                }
+                Ok(_) => {} // duplicate record: first one wins
+                Err(e) => {
+                    eprintln!(
+                        "[store] journal {} record invalid ({e:#}); resuming from the valid prefix",
+                        path.display()
+                    );
+                    break;
+                }
+            }
+            valid_len += line.len() + 1;
+            rest = tail;
+        }
+        // a trailing fragment without '\n' is the crash tail; drop it
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("reopening journal {}", path.display()))?;
+        file.set_len(valid_len as u64)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok((Journal { file: Mutex::new(file), path: path.to_path_buf() }, restored))
+    }
+
+    /// Record one completed job.  Errors are returned (the caller logs
+    /// and keeps going — a journal failure must not fail the campaign).
+    pub fn append(&self, idx: usize, key: &JobKey, result: &TaskResult) -> Result<()> {
+        let payload = serialize_result(result);
+        let line = format!(
+            "done {idx} {} {:016x} {}\n",
+            key.hex(),
+            fnv1a(payload.as_bytes()),
+            escape(&payload)
+        );
+        let mut file = self.file.lock().unwrap();
+        file.write_all(line.as_bytes())?;
+        file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::{BaselineKind, ExperimentConfig};
+    use crate::metrics::TaskOutcome;
+    use crate::store::key::KeyScope;
+    use crate::workloads::{Level, Suite};
+
+    fn keys_for(name: &str, n_per_level: usize) -> Vec<JobKey> {
+        let cfg = ExperimentConfig {
+            name: name.into(),
+            platform: crate::platform::by_name("cuda").unwrap(),
+            personas: vec![crate::agents::persona::by_name("openai-gpt-5").unwrap()],
+            iterations: 1,
+            use_profiling: false,
+            use_reference: false,
+            baseline: BaselineKind::Eager,
+            seed: 3,
+            workers: 1,
+        };
+        let spec = cfg.spec();
+        let scope = KeyScope::new(&cfg, &spec);
+        Suite::sample(n_per_level)
+            .problems
+            .iter()
+            .map(|p| scope.key(cfg.personas[0], p, None))
+            .collect()
+    }
+
+    fn result(i: usize) -> TaskResult {
+        TaskResult {
+            problem_id: format!("p{i}"),
+            level: Level::L1,
+            persona: "openai-gpt-5",
+            state_history: vec!["correct"],
+            outcome: TaskOutcome::correct(1.0 + i as f64 / 7.0),
+            best_iteration: Some(0),
+            baseline_s: 0.25 * (i + 1) as f64,
+            best_candidate_s: Some(0.125),
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kforge_journal_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn fresh_append_resume_roundtrip() {
+        let path = tmp("roundtrip");
+        let keys = keys_for("jr", 2);
+        {
+            let j = Journal::fresh(&path, "jr", &keys).unwrap();
+            for i in 0..3 {
+                j.append(i, &keys[i], &result(i)).unwrap();
+            }
+        }
+        let (_, restored) = Journal::resume(&path, "jr", &keys).unwrap();
+        assert_eq!(restored.len(), 3);
+        for (k, (idx, r)) in restored.iter().enumerate() {
+            assert_eq!(*idx, k);
+            assert_eq!(r.problem_id, format!("p{k}"));
+            assert_eq!(r.baseline_s.to_bits(), result(k).baseline_s.to_bits());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn partial_tail_is_dropped_and_truncated() {
+        let path = tmp("tail");
+        let keys = keys_for("jt", 2);
+        {
+            let j = Journal::fresh(&path, "jt", &keys).unwrap();
+            j.append(0, &keys[0], &result(0)).unwrap();
+            j.append(1, &keys[1], &result(1)).unwrap();
+        }
+        // simulate a kill mid-write: chop the last record in half
+        let data = std::fs::read_to_string(&path).unwrap();
+        let cut = data.len() - 20;
+        std::fs::write(&path, &data[..cut]).unwrap();
+        let (j, restored) = Journal::resume(&path, "jt", &keys).unwrap();
+        assert_eq!(restored.len(), 1);
+        assert_eq!(restored[0].0, 0);
+        // the file was truncated back to the valid prefix, so a new
+        // append produces a well-formed journal
+        j.append(1, &keys[1], &result(1)).unwrap();
+        drop(j);
+        let (_, restored2) = Journal::resume(&path, "jt", &keys).unwrap();
+        assert_eq!(restored2.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mismatched_campaign_starts_fresh() {
+        let path = tmp("mismatch");
+        let keys = keys_for("ja", 1);
+        {
+            let j = Journal::fresh(&path, "ja", &keys).unwrap();
+            j.append(0, &keys[0], &result(0)).unwrap();
+        }
+        // same path, different campaign (different config name → keys)
+        let other = keys_for("jb", 1);
+        let (_, restored) = Journal::resume(&path, "jb", &other).unwrap();
+        assert!(restored.is_empty(), "stale journal must not restore");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_middle_record_stops_the_prefix() {
+        let path = tmp("corrupt");
+        let keys = keys_for("jc", 2);
+        {
+            let j = Journal::fresh(&path, "jc", &keys).unwrap();
+            for i in 0..4 {
+                j.append(i, &keys[i], &result(i)).unwrap();
+            }
+        }
+        // flip a checksum digit in record 2
+        let data = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = data.lines().collect();
+        let mut bad = lines.clone();
+        let tampered = lines[3].replacen("done 2 ", "done 2 f", 1);
+        bad[3] = &tampered;
+        std::fs::write(&path, format!("{}\n", bad.join("\n"))).unwrap();
+        let (_, restored) = Journal::resume(&path, "jc", &keys).unwrap();
+        assert_eq!(restored.len(), 2, "prefix before the corrupt record only");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn escape_roundtrip() {
+        let s = "line1\nline2\\with\\slashes\r\n";
+        assert_eq!(unescape(&escape(s)).unwrap(), s);
+        assert!(!escape(s).contains('\n'));
+        assert!(unescape("bad\\q").is_err());
+    }
+
+    #[test]
+    fn digest_covers_order_and_count() {
+        let keys = keys_for("jd", 2);
+        let d = campaign_digest("jd", &keys);
+        assert_ne!(d, campaign_digest("jd", &keys[..3]));
+        assert_ne!(d, campaign_digest("other", &keys));
+        let mut rev: Vec<JobKey> = keys.clone();
+        rev.reverse();
+        assert_ne!(d, campaign_digest("jd", &rev));
+    }
+}

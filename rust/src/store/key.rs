@@ -1,0 +1,316 @@
+//! The canonical job fingerprint.
+//!
+//! A [`JobKey`] covers *everything* that determines a
+//! [`crate::coordinator::TaskResult`], so a stored result may be
+//! substituted for a fresh run only when the key matches exactly:
+//!
+//! - the store schema version ([`STORE_SCHEMA`]) and a **pipeline
+//!   fingerprint** hashing the KIR rewrite-pass sources and
+//!   `platform/spec.rs` at build time — editing a rewrite pass or a
+//!   `PlatformSpec` field definition invalidates every cached entry
+//!   automatically.  Semantic changes *outside* those files (the
+//!   verifier, the simulator, the generation agent) must bump
+//!   [`STORE_SCHEMA`] in the same PR;
+//! - the campaign config knobs that feed the per-job RNG stream and the
+//!   loop shape: config name, seed, iteration budget, profiling,
+//!   reference mode, baseline kind;
+//! - the platform: id, a structural hash over the full `PlatformSpec`,
+//!   the registered profiler frontend, and the reference-transfer hook;
+//! - the persona: name plus a hash of every behavioral rate *as
+//!   resolved for this platform* (the calibration row, fallback
+//!   applied), so adding a row for some other platform does not
+//!   invalidate this one;
+//! - the problem: id, level, structural hashes of the eval and perf
+//!   graphs, op families and the §7.3/§7.4 tags;
+//! - the reference program actually supplied to the job (or `none`).
+//!
+//! The key keeps its full canonical text alongside a 128-bit digest;
+//! the cache verifies the text on every hit, so even a digest collision
+//! degrades to a miss instead of a wrong substitution.
+
+use crate::agents::{Persona, Program};
+use crate::coordinator::experiment::ExperimentConfig;
+use crate::platform::{Platform, PlatformRef, PlatformSpec};
+use crate::util::rng::fnv1a;
+use crate::workloads::Problem;
+use std::sync::OnceLock;
+
+/// Bump on any semantic change to the synthesis loop that the pipeline
+/// fingerprint's source set does not cover (verifier, simulator,
+/// agents, coordinator).  Every bump invalidates all stored results.
+pub const STORE_SCHEMA: u32 = 1;
+
+/// Second FNV-1a chain over domain-separated input, so the digest is
+/// 128 bits (two independent 64-bit chains), not one chain reused.
+fn fnv1a_alt(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in b"kforge-store-alt\x00" {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hash of the KIR rewrite pipeline and platform-spec *sources*, baked
+/// in at compile time.  Editing any of these files changes the
+/// fingerprint of every key the new binary computes, so stale disk
+/// entries from the old binary can never be substituted.
+pub fn pipeline_fingerprint() -> u64 {
+    static FP: OnceLock<u64> = OnceLock::new();
+    *FP.get_or_init(|| {
+        let sources = [
+            include_str!("../kir/rewrite/mod.rs"),
+            include_str!("../kir/rewrite/constant_fold.rs"),
+            include_str!("../kir/rewrite/algebraic.rs"),
+            include_str!("../kir/rewrite/cse.rs"),
+            include_str!("../kir/rewrite/fusion.rs"),
+            include_str!("../platform/spec.rs"),
+        ];
+        let mut h: u64 = 0;
+        for src in sources {
+            h = h.rotate_left(17) ^ fnv1a(src.as_bytes());
+        }
+        h
+    })
+}
+
+fn bits(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+fn bits3(xs: &[f64; 3]) -> String {
+    format!("{}{}{}", bits(xs[0]), bits(xs[1]), bits(xs[2]))
+}
+
+/// All persona rates that reach the generation path, with the
+/// single-shot calibration resolved *for this platform* (fallback
+/// applied), hashed to one value.
+fn persona_fingerprint(p: &Persona, platform: &dyn Platform) -> u64 {
+    let row = p.single_shot(platform);
+    let text = format!(
+        "{} {:?} reasoning {} row {} ref {} fix {} opt {} instr {} k {} sched {} pcf {} palg {} pgen {}",
+        p.name,
+        p.provider,
+        p.reasoning,
+        bits3(&row),
+        bits3(&p.ref_effect),
+        bits(p.fix_skill),
+        bits(p.opt_skill),
+        bits(p.instruction_following),
+        p.internal_samples,
+        bits3(&p.schedule_skill),
+        bits(p.p_constant_fold),
+        bits(p.p_algebraic),
+        bits(p.p_generation_failure),
+    );
+    fnv1a(text.as_bytes())
+}
+
+/// Structural hash of a KIR graph: ops with all their parameters,
+/// inferred shapes, declared inputs and outputs (the derived `Debug`
+/// rendering carries every field).
+pub fn graph_fingerprint(g: &crate::kir::Graph) -> u64 {
+    fnv1a(format!("{g:?}").as_bytes())
+}
+
+fn reference_fingerprint(reference: Option<&Program>) -> String {
+    match reference {
+        None => "none".to_string(),
+        Some(p) => format!("{:016x}", fnv1a(format!("{p:?}").as_bytes())),
+    }
+}
+
+/// A computed job fingerprint: the canonical key text plus its 128-bit
+/// digest.  Construct via [`KeyScope::key`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobKey {
+    /// Canonical multi-line description (no trailing newline).  Stored
+    /// verbatim in every cache entry and compared on hit.
+    pub text: String,
+    digest: [u64; 2],
+}
+
+impl JobKey {
+    fn of_text(text: String) -> JobKey {
+        let digest = [fnv1a(text.as_bytes()), fnv1a_alt(text.as_bytes())];
+        JobKey { text, digest }
+    }
+
+    /// 32-hex-char content address (the on-disk object name).
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.digest[0], self.digest[1])
+    }
+}
+
+/// The per-campaign part of the key, computed once and reused for every
+/// (persona, problem) job in the campaign.
+pub struct KeyScope {
+    head: String,
+    platform: PlatformRef,
+}
+
+impl KeyScope {
+    pub fn new(cfg: &ExperimentConfig, spec: &PlatformSpec) -> KeyScope {
+        let frontend = cfg.platform.profiler_frontend();
+        let head = format!(
+            "kforge-jobkey v1\nschema {}\npipeline {:016x}\nconfig {}\nseed {:016x}\niterations {}\nprofiling {}\nreference_mode {}\nbaseline {:?}\nplatform {} spec {:016x} impl {:?} frontend {} transfer {}\n",
+            STORE_SCHEMA,
+            pipeline_fingerprint(),
+            cfg.name,
+            cfg.seed,
+            cfg.iterations,
+            cfg.use_profiling,
+            cfg.use_reference,
+            cfg.baseline,
+            cfg.platform.name(),
+            fnv1a(format!("{spec:?}").as_bytes()),
+            cfg.platform,
+            frontend.name(),
+            cfg.platform.reference_transfer(),
+        );
+        KeyScope {
+            head,
+            platform: cfg.platform.clone(),
+        }
+    }
+
+    /// The full key for one (persona, problem, reference) job.
+    pub fn key(&self, persona: &Persona, problem: &Problem, reference: Option<&Program>) -> JobKey {
+        let text = format!(
+            "{}persona {} {:016x}\nproblem {} level {:?} eval {:016x} perf {:016x} families {} const {} red {}\nreference {}",
+            self.head,
+            persona.name,
+            persona_fingerprint(persona, &*self.platform),
+            problem.id,
+            problem.level,
+            graph_fingerprint(&problem.eval_graph),
+            graph_fingerprint(&problem.perf_graph),
+            problem.op_families.join(","),
+            problem.constant_output,
+            problem.reducible,
+            reference_fingerprint(reference),
+        );
+        JobKey::of_text(text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::persona::by_name;
+    use crate::coordinator::experiment::BaselineKind;
+    use crate::workloads::Suite;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "key_test".into(),
+            platform: crate::platform::by_name("cuda").unwrap(),
+            personas: vec![by_name("openai-gpt-5").unwrap()],
+            iterations: 2,
+            use_profiling: false,
+            use_reference: false,
+            baseline: BaselineKind::Eager,
+            seed: 42,
+            workers: 1,
+        }
+    }
+
+    fn one_key(c: &ExperimentConfig) -> JobKey {
+        let spec = c.spec();
+        let suite = Suite::sample(1);
+        KeyScope::new(c, &spec).key(c.personas[0], &suite.problems[0], None)
+    }
+
+    #[test]
+    fn key_is_stable_and_text_addressed() {
+        let a = one_key(&cfg());
+        let b = one_key(&cfg());
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.hex(), b.hex());
+        assert_eq!(a.hex().len(), 32);
+        assert!(a.text.contains(&format!("schema {STORE_SCHEMA}")));
+        assert!(a.text.contains(&format!("pipeline {:016x}", pipeline_fingerprint())));
+    }
+
+    #[test]
+    fn every_config_knob_flips_the_key() {
+        let base = one_key(&cfg());
+        let mutations: Vec<Box<dyn Fn(&mut ExperimentConfig)>> = vec![
+            Box::new(|c| c.name = "other".into()),
+            Box::new(|c| c.seed ^= 1),
+            Box::new(|c| c.iterations += 1),
+            Box::new(|c| c.use_profiling = true),
+            Box::new(|c| c.use_reference = true),
+            Box::new(|c| c.baseline = BaselineKind::TorchCompile),
+            Box::new(|c| c.platform = crate::platform::by_name("rocm").unwrap()),
+        ];
+        for (i, m) in mutations.iter().enumerate() {
+            let mut c = cfg();
+            m(&mut c);
+            assert_ne!(one_key(&c).hex(), base.hex(), "mutation {i} did not flip the key");
+        }
+        // worker count is deliberately NOT in the key: PR 3 proved pool
+        // size never changes results, which is what makes cached
+        // substitution safe across worker counts
+        let mut c = cfg();
+        c.workers = 16;
+        assert_eq!(one_key(&c).hex(), base.hex());
+    }
+
+    #[test]
+    fn spec_mutation_flips_the_key() {
+        let c = cfg();
+        let suite = Suite::sample(1);
+        let spec = c.spec();
+        let mut warped = spec.clone();
+        warped.mem_bw *= 1.0 + 1e-12;
+        let a = KeyScope::new(&c, &spec).key(c.personas[0], &suite.problems[0], None);
+        let b = KeyScope::new(&c, &warped).key(c.personas[0], &suite.problems[0], None);
+        assert_ne!(a.hex(), b.hex());
+    }
+
+    #[test]
+    fn persona_mutation_flips_the_key() {
+        let c = cfg();
+        let spec = c.spec();
+        let suite = Suite::sample(1);
+        let scope = KeyScope::new(&c, &spec);
+        let base = scope.key(c.personas[0], &suite.problems[0], None);
+        let mut warped = c.personas[0].clone();
+        warped.fix_skill += 1e-9;
+        assert_ne!(scope.key(&warped, &suite.problems[0], None).hex(), base.hex());
+        let mut warped_row = c.personas[0].clone();
+        warped_row.ref_effect[1] += 1e-9;
+        assert_ne!(scope.key(&warped_row, &suite.problems[0], None).hex(), base.hex());
+    }
+
+    #[test]
+    fn problem_and_reference_flip_the_key() {
+        let c = cfg();
+        let spec = c.spec();
+        let suite = Suite::sample(2);
+        let scope = KeyScope::new(&c, &spec);
+        let a = scope.key(c.personas[0], &suite.problems[0], None);
+        let b = scope.key(c.personas[0], &suite.problems[1], None);
+        assert_ne!(a.hex(), b.hex());
+        // a supplied reference program distinguishes the job from a
+        // reference-free one even with identical knobs
+        let corpus = crate::workloads::refcorpus::RefCorpus::build(&Suite::sample(1), 6, 3);
+        if let Some(prog) = corpus.get(&suite.problems[0].id) {
+            let with_ref = scope.key(c.personas[0], &suite.problems[0], Some(prog));
+            assert_ne!(with_ref.hex(), a.hex());
+        }
+    }
+
+    #[test]
+    fn digest_chains_are_independent() {
+        // the two 64-bit chains must not be the same function
+        let k = one_key(&cfg());
+        assert_ne!(&k.hex()[..16], &k.hex()[16..]);
+        assert_ne!(fnv1a(b"x"), fnv1a_alt(b"x"));
+    }
+}

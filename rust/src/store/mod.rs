@@ -1,0 +1,201 @@
+//! The synthesis result store: a content-addressed job cache with
+//! crash-safe, resumable campaigns.
+//!
+//! Every (persona, problem) job in a campaign runs up to five
+//! generation/verify/profile iterations, and the harness artifacts plus
+//! the conformance gate re-run heavily overlapping campaigns.  PR 3
+//! proved campaigns bit-identical across worker counts — which is what
+//! makes a cached [`crate::coordinator::TaskResult`] provably safe to
+//! substitute for a fresh run.  This subsystem never computes the same
+//! job twice:
+//!
+//! - [`key`] — the canonical [`JobKey`] fingerprint covering everything
+//!   that determines a result (including a schema version and a
+//!   compile-time pipeline fingerprint, so editing a rewrite pass or a
+//!   `PlatformSpec` field auto-invalidates);
+//! - [`cache`] — the content-addressed in-memory + on-disk store;
+//!   corrupt or truncated entries are logged misses, never crashes;
+//! - [`journal`] — append-only per-campaign journals behind
+//!   `kforge run --resume` / `kforge bench --resume`;
+//! - [`stats`] — hits/misses/resumed/bytes/evictions, surfaced per
+//!   campaign in [`crate::coordinator::CampaignResult`] and per process
+//!   via `kforge cache stats`.
+//!
+//! One [`Store`] is shared per process (see [`global`]); the CLI
+//! configures it at startup (`--cache-dir`, `--no-cache`, `--resume`),
+//! so `kforge conformance` and `kforge bench` stop recomputing jobs
+//! their artifact modules share.  The **default global store is
+//! disabled**: library consumers (tests, benches) get cold runs unless
+//! they opt in with [`crate::coordinator::experiment::run_campaign_with`]
+//! — determinism tests stay meaningful, and the hot-path bench still
+//! measures synthesis, not the cache.
+
+pub mod cache;
+pub mod journal;
+pub mod key;
+pub mod stats;
+
+pub use cache::Cache;
+pub use journal::Journal;
+pub use key::{JobKey, KeyScope, STORE_SCHEMA};
+pub use stats::CacheStats;
+
+use crate::coordinator::job::TaskResult;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+/// Default on-disk location used by the `kforge cache` subcommands
+/// when `--cache-dir` is not given.
+pub const DEFAULT_DIR: &str = ".kforge-cache";
+
+/// A process-wide result store: the cache plus journal policy.
+pub struct Store {
+    enabled: bool,
+    cache: Cache,
+    journal_dir: Option<PathBuf>,
+    resume: bool,
+}
+
+impl Store {
+    /// Pass-through store: every lookup misses, nothing is written.
+    pub fn disabled() -> Store {
+        Store { enabled: false, cache: Cache::memory(), journal_dir: None, resume: false }
+    }
+
+    /// Memory-only store (shared within one process, no persistence,
+    /// no journaling — there is no disk to resume from).
+    pub fn memory() -> Store {
+        Store { enabled: true, cache: Cache::memory(), journal_dir: None, resume: false }
+    }
+
+    /// Disk-backed store rooted at `dir`: objects under `dir/objects`,
+    /// campaign journals under `dir/journals`.  With `resume`, a
+    /// campaign whose journal exists continues from the last completed
+    /// job instead of starting over.
+    pub fn at_dir(dir: &Path, resume: bool) -> Result<Store> {
+        Ok(Store {
+            enabled: true,
+            cache: Cache::at(dir)?,
+            journal_dir: Some(dir.join("journals")),
+            resume,
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn resume(&self) -> bool {
+        self.enabled && self.resume
+    }
+
+    pub fn cache(&self) -> &Cache {
+        &self.cache
+    }
+
+    /// The journal path for a campaign, when journaling is on.  The
+    /// file name embeds the campaign digest, so configs with the same
+    /// name but different suites/knobs never share a journal.
+    pub fn journal_path(&self, config_name: &str, keys: &[JobKey]) -> Option<PathBuf> {
+        if !self.enabled {
+            return None;
+        }
+        let dir = self.journal_dir.as_ref()?;
+        let sanitized: String = config_name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        Some(dir.join(format!(
+            "{sanitized}-{:016x}.journal",
+            journal::campaign_digest(config_name, keys)
+        )))
+    }
+
+    /// Look up a job result; `None` when disabled or absent.  Returns
+    /// the result plus bytes read from disk (0 for memory hits).
+    pub fn get(&self, key: &JobKey) -> Option<(TaskResult, u64)> {
+        if !self.enabled {
+            return None;
+        }
+        self.cache.get(key)
+    }
+
+    /// Store a job result; returns bytes written to disk.
+    pub fn put(&self, key: &JobKey, result: &TaskResult) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        self.cache.put(key, result)
+    }
+
+    /// Count a journal-restored job in the process-level counters.
+    pub fn record_resumed(&self) {
+        if self.enabled {
+            self.cache.record_resumed();
+        }
+    }
+
+    /// Process-level counters (what `kforge conformance` prints).
+    pub fn snapshot(&self) -> CacheStats {
+        self.cache.snapshot()
+    }
+}
+
+static GLOBAL: OnceLock<Store> = OnceLock::new();
+
+/// The process-wide store.  Defaults to [`Store::disabled`] until
+/// [`configure`] installs one — the CLI does so at startup; library
+/// consumers opt in explicitly.
+pub fn global() -> &'static Store {
+    GLOBAL.get_or_init(Store::disabled)
+}
+
+/// Install the process-wide store.  Must run before the first
+/// [`global`] access (the CLI calls it first thing); errors if a store
+/// is already installed.
+pub fn configure(store: Store) -> Result<&'static Store> {
+    let mut installed = false;
+    let s = GLOBAL.get_or_init(|| {
+        installed = true;
+        store
+    });
+    anyhow::ensure!(installed, "store already configured for this process");
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_store_is_a_pass_through() {
+        let s = Store::disabled();
+        assert!(!s.enabled());
+        assert!(!s.resume());
+        let keys = Vec::new();
+        assert!(s.journal_path("x", &keys).is_none());
+        // the global default is disabled: tests and benches get cold
+        // runs unless they opt in
+        assert!(!global().enabled());
+    }
+
+    #[test]
+    fn journal_path_sanitizes_and_pins_digest() {
+        let dir = std::env::temp_dir().join(format!("kforge_store_jp_{}", std::process::id()));
+        let s = Store::at_dir(&dir, true).unwrap();
+        assert!(s.resume());
+        let p = s.journal_path("weird name/with:stuff", &[]).unwrap();
+        let file = p.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(file.starts_with("weird_name_with_stuff-"), "{file}");
+        assert!(file.ends_with(".journal"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn memory_store_has_no_journal() {
+        let s = Store::memory();
+        assert!(s.enabled());
+        assert!(s.journal_path("c", &[]).is_none());
+    }
+}

@@ -1,0 +1,153 @@
+//! Store statistics: per-campaign counters surfaced in
+//! [`crate::coordinator::CampaignResult`] and process-wide atomic
+//! counters behind `kforge cache stats`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters for one campaign (or one process, when snapshotted from
+/// [`StatCounters`]).  All fields are plain totals; `Default` is all
+/// zeros, which is also what a disabled store reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Jobs answered from the store (memory or disk) without running.
+    pub hits: u64,
+    /// Jobs that had to be computed.
+    pub misses: u64,
+    /// Jobs restored from a campaign journal by `--resume`.
+    pub resumed: u64,
+    /// Bytes read from disk entries (0 for memory hits).
+    pub bytes_read: u64,
+    /// Bytes written to disk entries.
+    pub bytes_written: u64,
+    /// Disk entries removed by `kforge cache gc`.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Store lookups that could have been answered (hits + misses;
+    /// resumed jobs never reached the cache).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups answered from the store (0.0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups() as f64
+    }
+}
+
+impl fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} resumed={} read={}B written={}B evictions={} hit_rate={:.1}%",
+            self.hits,
+            self.misses,
+            self.resumed,
+            self.bytes_read,
+            self.bytes_written,
+            self.evictions,
+            self.hit_rate() * 100.0
+        )
+    }
+}
+
+/// Process-wide counters (lock-free; shared across every campaign that
+/// consults one [`crate::store::Store`]).
+#[derive(Debug, Default)]
+pub struct StatCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    resumed: AtomicU64,
+    bytes_read: AtomicU64,
+    bytes_written: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl StatCounters {
+    pub const fn new() -> StatCounters {
+        StatCounters {
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            resumed: AtomicU64::new(0),
+            bytes_read: AtomicU64::new(0),
+            bytes_written: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_hit(&self, bytes_read: u64) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.bytes_read.fetch_add(bytes_read, Ordering::Relaxed);
+    }
+
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_resumed(&self) {
+        self.resumed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_write(&self, bytes: u64) {
+        self.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_evictions(&self, n: u64) {
+        self.evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            resumed: self.resumed.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_and_lookups() {
+        let s = CacheStats { hits: 3, misses: 1, ..Default::default() };
+        assert_eq!(s.lookups(), 4);
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn counters_snapshot() {
+        let c = StatCounters::new();
+        c.record_hit(10);
+        c.record_hit(0);
+        c.record_miss();
+        c.record_resumed();
+        c.record_write(7);
+        c.record_evictions(2);
+        let s = c.snapshot();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.resumed, 1);
+        assert_eq!(s.bytes_read, 10);
+        assert_eq!(s.bytes_written, 7);
+        assert_eq!(s.evictions, 2);
+    }
+
+    #[test]
+    fn display_is_greppable() {
+        let s = CacheStats { hits: 12, misses: 4, ..Default::default() };
+        let text = s.to_string();
+        assert!(text.contains("hits=12") && text.contains("evictions=0"), "{text}");
+        assert!(text.contains("hit_rate=75.0%"), "{text}");
+    }
+}

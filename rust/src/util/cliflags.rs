@@ -1,0 +1,127 @@
+//! Strict CLI flag validation.
+//!
+//! `flag_value`-style lookup silently ignores anything it does not ask
+//! for, so a typo like `--platfrom rocm` used to run the default
+//! platform without a word.  Each subcommand now declares its flag set
+//! as a [`FlagSpec`]; anything outside it is rejected with an error
+//! naming the offending token and the valid set.
+
+use anyhow::{bail, Result};
+
+/// The accepted surface of one subcommand.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagSpec {
+    /// Flags that consume the following token as a value.
+    pub value_flags: &'static [&'static str],
+    /// Boolean flags (present or absent).
+    pub bool_flags: &'static [&'static str],
+    /// Maximum bare (non-flag) arguments, e.g. `bench <target>`.
+    pub max_positionals: usize,
+}
+
+impl FlagSpec {
+    fn describe(&self) -> String {
+        let mut all: Vec<&str> = self.value_flags.iter().chain(self.bool_flags).copied().collect();
+        all.sort_unstable();
+        if all.is_empty() {
+            "(this subcommand takes no flags)".to_string()
+        } else {
+            all.join(", ")
+        }
+    }
+}
+
+/// Validate `args` (everything after the subcommand name) against the
+/// spec.  Unknown flags, flags missing their value, and surplus
+/// positional arguments are all errors naming what was seen and what
+/// is valid.
+pub fn validate(cmd: &str, args: &[String], spec: &FlagSpec) -> Result<()> {
+    let mut positionals = 0usize;
+    let mut i = 0;
+    while i < args.len() {
+        let tok = args[i].as_str();
+        if tok.starts_with("--") {
+            if spec.value_flags.contains(&tok) {
+                match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => i += 1,
+                    _ => bail!("flag {tok} for `kforge {cmd}` requires a value"),
+                }
+            } else if !spec.bool_flags.contains(&tok) {
+                bail!(
+                    "unknown flag {tok} for `kforge {cmd}`; valid flags: {}",
+                    spec.describe()
+                );
+            }
+        } else {
+            positionals += 1;
+            if positionals > spec.max_positionals {
+                bail!(
+                    "unexpected argument {tok:?} for `kforge {cmd}` (takes at most {} positional argument{})",
+                    spec.max_positionals,
+                    if spec.max_positionals == 1 { "" } else { "s" }
+                );
+            }
+        }
+        i += 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: FlagSpec = FlagSpec {
+        value_flags: &["--quick", "--out"],
+        bool_flags: &["--bless"],
+        max_positionals: 1,
+    };
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn accepts_declared_flags_and_positionals() {
+        validate("bench", &args(&["fig2", "--quick", "3", "--bless", "--out", "d"]), &SPEC).unwrap();
+        validate("bench", &args(&[]), &SPEC).unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_flag_naming_it_and_the_valid_set() {
+        let e = validate("bench", &args(&["--quack", "3"]), &SPEC).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("--quack"), "{msg}");
+        assert!(msg.contains("--quick") && msg.contains("--bless") && msg.contains("--out"), "{msg}");
+        assert!(msg.contains("bench"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_value_flag_without_value() {
+        let e = validate("bench", &args(&["--quick"]), &SPEC).unwrap_err();
+        assert!(format!("{e:#}").contains("requires a value"));
+        // a following flag is not a value
+        let e2 = validate("bench", &args(&["--quick", "--bless"]), &SPEC).unwrap_err();
+        assert!(format!("{e2:#}").contains("requires a value"));
+    }
+
+    #[test]
+    fn rejects_surplus_positionals() {
+        let e = validate("bench", &args(&["fig2", "fig3"]), &SPEC).unwrap_err();
+        assert!(format!("{e:#}").contains("\"fig3\""), "{e:#}");
+    }
+
+    #[test]
+    fn empty_spec_names_itself() {
+        let none = FlagSpec { value_flags: &[], bool_flags: &[], max_positionals: 0 };
+        let e = validate("suite", &args(&["--x"]), &none).unwrap_err();
+        assert!(format!("{e:#}").contains("takes no flags"));
+    }
+
+    #[test]
+    fn flag_values_are_not_positionals() {
+        // "--out dir" must not count dir toward the positional budget
+        let zero = FlagSpec { value_flags: &["--out"], bool_flags: &[], max_positionals: 0 };
+        validate("conformance", &args(&["--out", "somedir"]), &zero).unwrap();
+    }
+}

@@ -7,3 +7,4 @@ pub mod json;
 pub mod csvw;
 pub mod stats;
 pub mod timing;
+pub mod cliflags;

@@ -11,6 +11,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -30,6 +31,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
         min: sorted[0],
         p50: percentile_sorted(&sorted, 50.0),
         p90: percentile_sorted(&sorted, 90.0),
+        p95: percentile_sorted(&sorted, 95.0),
         p99: percentile_sorted(&sorted, 99.0),
         max: sorted[n - 1],
     }
@@ -75,6 +77,14 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
         assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_are_ordered() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p95 - 949.05).abs() < 1e-9, "p95={}", s.p95);
     }
 
     #[test]

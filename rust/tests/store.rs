@@ -1,0 +1,187 @@
+//! Result-store integration: the ISSUE 4 acceptance properties.
+//!
+//! - warm-vs-cold bit identity: a campaign answered from the disk
+//!   store is indistinguishable (every `TaskResult` field, f64s by bit
+//!   pattern) from a cold run — the property that makes a warm
+//!   `kforge conformance` render byte-identical to a cold one;
+//! - corrupted/truncated cache entries degrade to misses;
+//! - `--resume` after a simulated mid-campaign kill (truncated journal
+//!   tail, wiped object store) completes with no duplicated or missing
+//!   jobs, bit-identical to an uninterrupted campaign.
+
+use kforge::agents::persona::by_name;
+use kforge::coordinator::{run_campaign_with, BaselineKind, CampaignResult, ExperimentConfig};
+use kforge::store::Store;
+use kforge::workloads::Suite;
+use std::path::PathBuf;
+
+fn cfg(name: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        platform: kforge::platform::by_name("cuda").unwrap(),
+        personas: vec![by_name("openai-gpt-5").unwrap(), by_name("deepseek-v3").unwrap()],
+        iterations: 2,
+        use_profiling: false,
+        use_reference: false,
+        baseline: BaselineKind::Eager,
+        seed: 0xAB,
+        workers: 4,
+    }
+}
+
+fn assert_bit_identical(a: &CampaignResult, b: &CampaignResult) {
+    assert_eq!(a.results.len(), b.results.len());
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.problem_id, y.problem_id);
+        assert_eq!(x.persona, y.persona);
+        assert_eq!(x.level, y.level);
+        assert_eq!(x.state_history, y.state_history);
+        assert_eq!(x.outcome.correct, y.outcome.correct, "{}", x.problem_id);
+        assert_eq!(x.outcome.speedup.to_bits(), y.outcome.speedup.to_bits(), "{}", x.problem_id);
+        assert_eq!(x.best_iteration, y.best_iteration);
+        assert_eq!(x.baseline_s.to_bits(), y.baseline_s.to_bits(), "{}", x.problem_id);
+        assert_eq!(
+            x.best_candidate_s.map(f64::to_bits),
+            y.best_candidate_s.map(f64::to_bits),
+            "{}",
+            x.problem_id
+        );
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("kforge_store_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn warm_store_is_bit_identical_to_cold_across_instances() {
+    let suite = Suite::sample(3);
+    let c = cfg("store_warm_cold_prop");
+    let cold = run_campaign_with(&Store::disabled(), &suite, None, &c);
+    assert_eq!(cold.results.len(), 18); // 2 personas × 9 problems
+    let dir = tmpdir("warm");
+    {
+        let s = Store::at_dir(&dir, false).unwrap();
+        let first = run_campaign_with(&s, &suite, None, &c);
+        assert_eq!(first.cache.misses, 18);
+        assert_eq!(first.cache.hits, 0);
+        assert!(first.cache.bytes_written > 0, "disk store must persist entries");
+        assert_bit_identical(&cold, &first);
+    }
+    // a fresh Store instance models a fresh process: every job must be
+    // answered from disk, bit-identical to the cold computation
+    let s2 = Store::at_dir(&dir, false).unwrap();
+    let warm = run_campaign_with(&s2, &suite, None, &c);
+    assert_eq!(warm.cache.hits, 18, "{:?}", warm.cache);
+    assert_eq!(warm.cache.misses, 0);
+    assert!(warm.cache.bytes_read > 0);
+    assert_bit_identical(&cold, &warm);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_and_truncated_entries_degrade_to_misses() {
+    let suite = Suite::sample(2);
+    let c = cfg("store_corruption_prop");
+    let cold = run_campaign_with(&Store::disabled(), &suite, None, &c);
+    let n = cold.results.len() as u64; // 12
+    let dir = tmpdir("corrupt");
+    {
+        let s = Store::at_dir(&dir, false).unwrap();
+        run_campaign_with(&s, &suite, None, &c);
+    }
+    // vandalize three entries: truncate, garbage, empty
+    let mut objects: Vec<PathBuf> = std::fs::read_dir(dir.join("objects"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    objects.sort();
+    assert_eq!(objects.len() as u64, n);
+    let data = std::fs::read(&objects[0]).unwrap();
+    std::fs::write(&objects[0], &data[..data.len() / 3]).unwrap();
+    std::fs::write(&objects[1], b"complete garbage, not an entry").unwrap();
+    std::fs::write(&objects[2], b"").unwrap();
+    let s = Store::at_dir(&dir, false).unwrap();
+    let run = run_campaign_with(&s, &suite, None, &c);
+    assert_eq!(run.cache.hits, n - 3, "{:?}", run.cache);
+    assert_eq!(run.cache.misses, 3);
+    // recomputed-through-corruption results are still bit-identical
+    assert_bit_identical(&cold, &run);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_after_simulated_kill_has_no_duplicated_or_missing_jobs() {
+    let suite = Suite::sample(3);
+    let c = cfg("store_resume_prop");
+    let uninterrupted = run_campaign_with(&Store::disabled(), &suite, None, &c);
+    let n = uninterrupted.results.len(); // 18
+    let dir = tmpdir("resume");
+    {
+        let s = Store::at_dir(&dir, false).unwrap();
+        run_campaign_with(&s, &suite, None, &c);
+    }
+    let journals: Vec<PathBuf> = std::fs::read_dir(dir.join("journals"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    assert_eq!(journals.len(), 1, "one journal per campaign");
+    // simulate a kill mid-campaign: keep the header, k complete
+    // records, and half of the next record; wipe the object store (a
+    // dead process's memory tier is gone, and the disk tier may be too)
+    let data = std::fs::read_to_string(&journals[0]).unwrap();
+    let lines: Vec<&str> = data.lines().collect();
+    assert_eq!(lines.len(), n + 1, "header + one record per job");
+    let k = 7;
+    let mut kept = lines[..1 + k].join("\n");
+    kept.push('\n');
+    kept.push_str(&lines[1 + k][..lines[1 + k].len() / 2]);
+    std::fs::write(&journals[0], kept).unwrap();
+    Store::at_dir(&dir, false).unwrap().cache().clear().unwrap();
+
+    let s = Store::at_dir(&dir, true).unwrap();
+    assert!(s.resume());
+    let resumed = run_campaign_with(&s, &suite, None, &c);
+    assert_eq!(resumed.cache.resumed, k as u64, "{:?}", resumed.cache);
+    assert_eq!(resumed.cache.misses, (n - k) as u64);
+    assert_eq!(resumed.cache.hits, 0);
+    assert_bit_identical(&uninterrupted, &resumed);
+    // no duplicated or missing jobs
+    let mut seen = std::collections::HashSet::new();
+    for r in &resumed.results {
+        assert!(seen.insert((r.persona, r.problem_id.clone())), "duplicate {}", r.problem_id);
+    }
+    assert_eq!(seen.len(), n);
+
+    // the resumed run repaired the journal: a second resume (object
+    // store wiped again) restores every job without recomputing any
+    let s2 = Store::at_dir(&dir, true).unwrap();
+    s2.cache().clear().unwrap();
+    let again = run_campaign_with(&s2, &suite, None, &c);
+    assert_eq!(again.cache.resumed, n as u64, "{:?}", again.cache);
+    assert_eq!(again.cache.misses, 0);
+    assert_bit_identical(&uninterrupted, &again);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_with_untouched_journal_recomputes_nothing() {
+    // the no-kill degenerate case: rerunning with --resume after a
+    // completed campaign is a pure journal replay
+    let suite = Suite::sample(2);
+    let c = cfg("store_resume_complete_prop");
+    let dir = tmpdir("resume_complete");
+    let full = {
+        let s = Store::at_dir(&dir, false).unwrap();
+        run_campaign_with(&s, &suite, None, &c)
+    };
+    let s = Store::at_dir(&dir, true).unwrap();
+    s.cache().clear().unwrap();
+    let replay = run_campaign_with(&s, &suite, None, &c);
+    assert_eq!(replay.cache.resumed, full.results.len() as u64);
+    assert_eq!(replay.cache.misses, 0);
+    assert_bit_identical(&full, &replay);
+    let _ = std::fs::remove_dir_all(&dir);
+}
