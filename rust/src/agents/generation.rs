@@ -69,6 +69,13 @@ impl Program {
             source_listing: listing,
         }
     }
+
+    /// A defect-free program from an explicit graph + schedule — the
+    /// constructor non-agent producers use (the schedule autotuner's
+    /// reference arm in Table 4, tests).
+    pub fn with_schedule(graph: Graph, schedule: Schedule) -> Program {
+        Program::new(graph, schedule, vec![])
+    }
 }
 
 /// The generation agent: one persona synthesizing for one platform.

@@ -1,0 +1,122 @@
+//! Autotuned-search baseline: the strongest non-agent comparator.
+//!
+//! Where [`super::eager`] runs stock per-op kernels and
+//! [`super::compilebase`] a generic compiled schedule, this arm runs
+//! the schedule the [`crate::search`] beam autotuner finds for the
+//! workload — turning "agent vs. naive/expert" comparisons into
+//! "agent vs. best-effort search" (`--baseline autotuned` on campaigns,
+//! the "Autotuned Search" rows of Table 6).
+//!
+//! The search is deterministic in (platform spec, graph) alone and is
+//! memoized process-wide: a campaign prices the same perf graph once
+//! per persona per measurement, but searches it exactly once.
+
+use crate::kir::Graph;
+use crate::perfsim::lower::lower;
+use crate::perfsim::{simulate, SimResult};
+use crate::platform::PlatformSpec;
+use crate::sched::Schedule;
+use crate::search::{BeamStrategy, Budget, CostOracle, SearchStrategy};
+use crate::store::key::{graph_fingerprint, spec_hash};
+use crate::util::rng::Pcg;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Search budget the baseline arm gives each distinct (spec, graph) —
+/// enough beam rounds to stack several lever moves without turning a
+/// campaign baseline into a tuning campaign.  Changing this changes
+/// baseline semantics: bump `store::STORE_SCHEMA` in the same PR.
+pub const BASELINE_BUDGET: usize = 128;
+/// Early-stop patience for the baseline search.
+pub const BASELINE_PATIENCE: usize = 2;
+
+/// Find (and memoize) the best-found schedule for a graph on a spec.
+/// Never worse than naive — the naive seed plus an explicit fallback
+/// guarantee it.  No evidence re-rank here: the baseline arm must be a
+/// pure function of (spec, graph), independent of which profiler
+/// frontend a platform registers.
+pub fn schedule_for(g: &Graph, spec: &PlatformSpec) -> Schedule {
+    static MEMO: OnceLock<Mutex<HashMap<(u64, u64), Schedule>>> = OnceLock::new();
+    let key = (spec_hash(spec), graph_fingerprint(g));
+    let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(s) = memo.lock().unwrap().get(&key) {
+        return s.clone();
+    }
+    // single-worker oracle: campaign baselines run on worker threads
+    // that are already the parallelism
+    let oracle = CostOracle::new(spec, g);
+    let naive_cost = oracle.cost(&Schedule::naive());
+    let mut budget = Budget::new(BASELINE_BUDGET, BASELINE_PATIENCE);
+    let mut rng = Pcg::new(0xA070_7E5E, key.0 ^ key.1);
+    let out = BeamStrategy::default().search(&oracle, &mut budget, &mut rng);
+    let best = if out.best.cost_s <= naive_cost {
+        out.best.schedule
+    } else {
+        Schedule::naive()
+    };
+    memo.lock().unwrap().insert(key, best.clone());
+    best
+}
+
+/// Measure the autotuned baseline with the paper's protocol (100 runs
+/// / 10 warmup, seeded noise) — the drop-in sibling of
+/// [`super::eager::measure`] / [`super::compilebase::measure`].
+pub fn measure(g: &Graph, spec: &PlatformSpec, rng: &mut Pcg) -> SimResult {
+    let s = schedule_for(g, spec);
+    simulate(spec, &lower(g, &s), rng, super::RUNS, super::WARMUP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::eager;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::UnaryKind;
+    use crate::platform::{cuda, registry};
+    use crate::tensor::Shape;
+
+    fn g() -> Graph {
+        let mut b = GraphBuilder::new("auto");
+        let x = b.input(Shape::of(&[64, 64]));
+        let w = b.input(Shape::of(&[64, 64]));
+        let m = b.matmul(x, w);
+        let r = b.unary(UnaryKind::Swish, m);
+        b.finish(vec![r])
+    }
+
+    #[test]
+    fn autotuned_never_loses_to_eager_with_aligned_noise() {
+        // measured with the same rng stream, autotuned <= eager exactly:
+        // the stock schedule seeds the search, so the tuned ideal time
+        // is <= the eager plan's, and the noise multipliers cancel
+        let graph = g();
+        for platform in registry().platforms() {
+            let spec = platform.spec();
+            let mut r1 = Pcg::seed(42);
+            let mut r2 = Pcg::seed(42);
+            let e = eager::measure(&graph, spec, &mut r1);
+            let a = measure(&graph, spec, &mut r2);
+            assert!(
+                a.measured_s <= e.measured_s,
+                "{}: autotuned {} > eager {}",
+                platform.name(),
+                a.measured_s,
+                e.measured_s
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_is_memoized_legal_and_deterministic() {
+        let spec = cuda::h100();
+        let graph = g();
+        let a = schedule_for(&graph, &spec);
+        let b = schedule_for(&graph, &spec);
+        assert_eq!(a, b);
+        crate::sched::legal::check(&a, &spec).unwrap();
+        // a different spec searches a different space
+        let m = crate::platform::metal::m4_max();
+        let c = schedule_for(&graph, &m);
+        crate::sched::legal::check(&c, &m).unwrap();
+    }
+}

@@ -5,9 +5,13 @@
 //! - [`compilebase`] — torch.compile (TorchInductor, default mode)
 //!   analog: greedy epilogue fusion + sane-but-generic schedules, plus
 //!   the compile-context behavior the paper controls for (§4.1).
+//! - [`autotuned`] — the schedule the [`crate::search`] beam autotuner
+//!   finds for the workload: the best-effort *non-agent* comparator
+//!   (`--baseline autotuned`, Table 6's "Autotuned Search" rows).
 
 pub mod eager;
 pub mod compilebase;
+pub mod autotuned;
 
 /// The paper's measurement protocol constants (§4.1): execution time
 /// across 100 runs with 10 warmup steps.

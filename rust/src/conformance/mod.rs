@@ -7,10 +7,11 @@
 //!
 //! - **Golden paper artifacts** ([`golden`], [`diff`], [`census`]):
 //!   every paper table/figure (via the harness modules' `artifact`
-//!   hooks) plus a per-registered-platform census is rendered to
-//!   canonical text and compared cell-by-cell against the committed
-//!   `goldens/` directory.  `kforge conformance` checks; `kforge
-//!   conformance --bless` regenerates.
+//!   hooks) plus, per registered platform, a census and a
+//!   `search_frontier` artifact ([`crate::search::frontier`]) are
+//!   rendered to canonical text and compared cell-by-cell against the
+//!   committed `goldens/` directory.  `kforge conformance` checks;
+//!   `kforge conformance --bless` regenerates.
 //! - **Differential KIR fuzzing** ([`crate::kir::fuzz`]): thousands of
 //!   seeded random graphs assert that every rewrite pass (and the full
 //!   pipeline in any order) preserves interpreter semantics and
@@ -41,9 +42,10 @@ use crate::platform::registry;
 pub const SCALE: Scale = Scale::Quick(4);
 
 /// Render the full golden artifact set at `scale`, in a stable order:
-/// a manifest, the nine paper artifacts, then one census per registered
-/// platform.  Registering a new platform therefore *adds* a golden —
-/// the check fails until the new platform's artifact is blessed, which
+/// a manifest, the nine paper artifacts, then one census and one
+/// search-frontier artifact per registered platform.  Registering a
+/// new platform (or search strategy) therefore *adds* or reshapes a
+/// golden — the check fails until the new artifact is blessed, which
 /// is exactly the review moment the conformance gate exists to force.
 ///
 /// The manifest records the render scale, so goldens blessed at one
@@ -53,6 +55,9 @@ pub fn render_all(scale: Scale) -> Vec<Artifact> {
     let mut arts = harness::artifacts(scale);
     for platform in registry().platforms() {
         arts.push(census::artifact(&**platform));
+    }
+    for platform in registry().platforms() {
+        arts.push(crate::search::frontier::artifact(platform, scale));
     }
     let mut manifest = format!("scale: {scale:?}\nartifacts: {}\n", arts.len() + 1);
     for a in &arts {

@@ -18,7 +18,7 @@
 use super::job::TaskResult;
 use crate::agents::analysis::AnalysisAgent;
 use crate::agents::{GenerationAgent, Persona, Program};
-use crate::baseline::{compilebase, eager};
+use crate::baseline::{autotuned, compilebase, eager};
 use crate::metrics::TaskOutcome;
 use crate::platform::{PlatformRef, PlatformSpec};
 use crate::profiler::Profile;
@@ -36,6 +36,10 @@ pub enum BaselineKind {
     Eager,
     /// torch.compile / TorchInductor default (Fig 3, Table 6).
     TorchCompile,
+    /// The schedule the beam autotuner finds for the workload
+    /// (`kforge run --baseline autotuned`): speedups against the
+    /// best-effort non-agent search instead of naive/stock baselines.
+    Autotuned,
 }
 
 /// One experimental configuration.
@@ -154,6 +158,7 @@ pub fn run_task(
     let baseline_sim = match cfg.baseline {
         BaselineKind::Eager => eager::measure(&problem.perf_graph, spec, &mut brng),
         BaselineKind::TorchCompile => compilebase::measure(&problem.perf_graph, spec, &mut brng),
+        BaselineKind::Autotuned => autotuned::measure(&problem.perf_graph, spec, &mut brng),
     };
     let baseline_s = baseline_sim.measured_s;
 
@@ -496,6 +501,46 @@ mod tests {
         let cold = run_campaign_with(&Store::disabled(), &Suite::sample(3), None, &cfg);
         for (a, b) in cold.results.iter().zip(&big.results) {
             assert_bit_identical(a, b);
+        }
+    }
+
+    #[test]
+    fn autotuned_baseline_is_a_harder_comparator_than_eager() {
+        let suite = Suite::sample(3);
+        let eager_cfg = small_cfg("cuda", 2);
+        let mut auto_cfg = eager_cfg.clone();
+        auto_cfg.baseline = BaselineKind::Autotuned;
+        let e = run_campaign(&suite, None, &eager_cfg);
+        let a = run_campaign(&suite, None, &auto_cfg);
+        assert_eq!(e.results.len(), a.results.len());
+        let mut strictly_harder = 0;
+        for (x, y) in e.results.iter().zip(&a.results) {
+            assert_eq!(x.problem_id, y.problem_id);
+            // the baseline kind must not perturb the candidate stream
+            // (the baseline draws from a forked RNG)
+            assert_eq!(x.state_history, y.state_history, "{}", x.problem_id);
+            // the tuned baseline prices at or below eager with the same
+            // noise stream, so per-job speedups can only shrink
+            assert!(
+                y.baseline_s <= x.baseline_s,
+                "{}: autotuned baseline {} above eager {}",
+                x.problem_id,
+                y.baseline_s,
+                x.baseline_s
+            );
+            if x.outcome.correct {
+                assert!(y.outcome.speedup <= x.outcome.speedup, "{}", x.problem_id);
+                if y.outcome.speedup < x.outcome.speedup {
+                    strictly_harder += 1;
+                }
+            }
+        }
+        assert!(strictly_harder > 0, "the autotuned arm never tightened a speedup");
+        // and the arm is deterministic like every other campaign
+        let b = run_campaign(&suite, None, &auto_cfg);
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.outcome.speedup.to_bits(), y.outcome.speedup.to_bits());
+            assert_eq!(x.baseline_s.to_bits(), y.baseline_s.to_bits());
         }
     }
 

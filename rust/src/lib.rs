@@ -30,7 +30,13 @@
 //!   `Evidence` IR with per-fact fidelity).  Built-ins: nsys CSV,
 //!   Xcode screenshot scrape, rocprof trace JSON — selected per
 //!   platform via `Platform::profiler_frontend()`.
-//! - [`baseline`] — PyTorch-eager and torch.compile analogs.
+//! - [`baseline`] — PyTorch-eager, torch.compile and autotuned-search
+//!   analogs.
+//! - [`search`] — the schedule autotuner: an open `SearchStrategy`
+//!   plugin API (beam + evolutionary built-ins) over legality-filtered
+//!   schedule moves, a pure cost oracle with optional profiler-Evidence
+//!   re-ranking, budget/early-stop control, and store-cached `kforge
+//!   tune` runs with golden-pinned `search_frontier_*` artifacts.
 //! - [`agents`] — personas (per-platform calibration with a principled
 //!   fallback for unseen platforms), generation agent F, analysis
 //!   agent G.
@@ -63,6 +69,7 @@ pub mod agents;
 pub mod verify;
 pub mod workloads;
 pub mod runtime;
+pub mod search;
 pub mod coordinator;
 pub mod store;
 pub mod metrics;

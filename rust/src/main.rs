@@ -3,19 +3,30 @@
 //! ```text
 //! kforge suite                      # Table 2 + suite census, per platform
 //! kforge run --model <persona> [--problem <id>] [--platform <name>]
+//!            [--baseline <eager|compile|autotuned>]
 //!            [--sample N] [--cache-dir DIR] [--resume] [--no-cache]
 //!                                   # one verbose job, or (without
 //!                                   # --problem) a resumable campaign
-//! kforge platforms                  # list the registered platforms
+//! kforge tune [--platform <name>] [--strategy <beam|evolve>]
+//!             [--sample N | --synthetic N] [--budget N] [--seed S]
+//!             [--workers N] [--no-evidence] [--out DIR]
+//!             [--cache-dir DIR] [--no-cache]
+//!                                   # schedule autotuner: population
+//!                                   # search per problem, store-cached;
+//!                                   # exits nonzero if any tuned
+//!                                   # schedule prices above naive
+//! kforge platforms [--names]        # list the registered platforms
 //! kforge bench <fig2|fig3|fig4|table2|table4|table5|table6|cases|all>
-//!              [--quick N] [--out DIR] [--cache-dir DIR] [--resume] [--no-cache]
+//!              [--quick N] [--out DIR] [--json PATH]
+//!              [--cache-dir DIR] [--resume] [--no-cache]
 //! kforge conformance [--bless] [--dir DIR] [--quick N] [--out DIR]
 //!                    [--cache-dir DIR] [--resume] [--no-cache]
 //!                                   # check (or regenerate) the golden
 //!                                   # paper artifacts for every platform
 //! kforge cache <stats|clear|gc> [--cache-dir DIR] [--max-bytes N]
 //!                                   # inspect / empty / bound the store
-//! kforge serve [--artifacts DIR]    # PJRT request loop over real artifacts
+//! kforge serve [--artifacts DIR] [--requests N] [--warmup N]
+//!                                   # PJRT request loop over real artifacts
 //! kforge personas                   # the 8 calibrated personas, per platform
 //! ```
 //!
@@ -118,21 +129,42 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some((c, rest)) => (c.as_str(), rest),
         None => {
             println!("kforge — program synthesis for diverse AI hardware accelerators");
-            println!("commands: suite | personas | platforms | run | bench | conformance | cache | serve");
+            println!("commands: suite | personas | platforms | run | tune | bench | conformance | cache | serve");
             println!("registered platforms: {}", registry().describe());
+            println!(
+                "search strategies: {}",
+                kforge::search::strategies()
+                    .iter()
+                    .map(|s| s.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
             return Ok(());
         }
     };
     let none = FlagSpec { value_flags: &[], bool_flags: &[], max_positionals: 0 };
     let spec = match cmd {
-        "suite" | "personas" | "platforms" => none,
+        "suite" | "personas" => none,
+        "platforms" => FlagSpec {
+            value_flags: &[],
+            bool_flags: &["--names"],
+            max_positionals: 0,
+        },
         "run" => FlagSpec {
-            value_flags: &["--problem", "--model", "--platform", "--sample", "--cache-dir"],
+            value_flags: &["--problem", "--model", "--platform", "--baseline", "--sample", "--cache-dir"],
             bool_flags: &["--resume", "--no-cache"],
             max_positionals: 0,
         },
+        "tune" => FlagSpec {
+            value_flags: &[
+                "--platform", "--strategy", "--sample", "--synthetic", "--budget", "--seed",
+                "--workers", "--out", "--cache-dir",
+            ],
+            bool_flags: &["--no-cache", "--no-evidence"],
+            max_positionals: 0,
+        },
         "bench" => FlagSpec {
-            value_flags: &["--quick", "--out", "--cache-dir"],
+            value_flags: &["--quick", "--out", "--json", "--cache-dir"],
             bool_flags: &["--resume", "--no-cache"],
             max_positionals: 1,
         },
@@ -147,23 +179,24 @@ fn dispatch(args: &[String]) -> Result<()> {
             max_positionals: 1,
         },
         "serve" => FlagSpec {
-            value_flags: &["--artifacts", "--requests"],
+            value_flags: &["--artifacts", "--requests", "--warmup"],
             bool_flags: &[],
             max_positionals: 0,
         },
         other => bail!(
-            "unknown command {other:?}; try: suite, personas, platforms, run, bench, conformance, cache, serve"
+            "unknown command {other:?}; try: suite, personas, platforms, run, tune, bench, conformance, cache, serve"
         ),
     };
     cliflags::validate(cmd, rest, &spec)?;
-    if matches!(cmd, "run" | "bench" | "conformance") {
+    if matches!(cmd, "run" | "tune" | "bench" | "conformance") {
         configure_store(args)?;
     }
     match cmd {
         "suite" => cmd_suite(),
         "personas" => cmd_personas(),
-        "platforms" => cmd_platforms(),
+        "platforms" => cmd_platforms(args),
         "run" => cmd_run(args),
+        "tune" => cmd_tune(args),
         "bench" => cmd_bench(args),
         "conformance" => cmd_conformance(args),
         "cache" => cmd_cache(args),
@@ -184,7 +217,15 @@ fn cmd_suite() -> Result<()> {
     Ok(())
 }
 
-fn cmd_platforms() -> Result<()> {
+fn cmd_platforms(args: &[String]) -> Result<()> {
+    if has_flag(args, "--names") {
+        // one primary name per line — the scriptable form CI's
+        // tune-smoke job iterates
+        for p in registry().platforms() {
+            println!("{}", p.name());
+        }
+        return Ok(());
+    }
     println!(
         "{:<8} {:<10} {:<28} {:>10} {:>9} {:>8} {:<8}",
         "name", "language", "device", "mem GB/s", "simd", "workers", "profiler"
@@ -237,11 +278,20 @@ fn cmd_personas() -> Result<()> {
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
+    use kforge::coordinator::BaselineKind;
     let model = flag_value(args, "--model").unwrap_or("openai-gpt-5");
     let platform = platform_arg(args)?;
     let persona = by_name(model).with_context(|| format!("unknown persona {model}"))?;
     let mut cfg = ExperimentConfig::iterative(platform.clone(), vec![persona]);
     cfg.use_profiling = true;
+    // the baseline kind is part of every job key, so arms never share
+    // cached results even under one config name
+    cfg.baseline = match flag_value(args, "--baseline").unwrap_or("eager") {
+        "eager" => BaselineKind::Eager,
+        "compile" | "torch-compile" => BaselineKind::TorchCompile,
+        "autotuned" => BaselineKind::Autotuned,
+        other => bail!("unknown baseline {other:?}; try: eager, compile, autotuned"),
+    };
 
     let Some(problem_id) = flag_value(args, "--problem") else {
         // campaign mode: the whole suite (or --sample N per level),
@@ -321,8 +371,74 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `kforge tune` — the schedule autotuner: population-based search per
+/// problem, cached in the result store, printed as a per-problem table
+/// plus the golden-pinned acceptance lines.  Exits nonzero if any
+/// autotuned schedule prices above naive (CI's tune-smoke gate).
+fn cmd_tune(args: &[String]) -> Result<()> {
+    use kforge::search::{strategy_by_name, tune_suite, TuneConfig};
+    let platform = platform_arg(args)?;
+    let mut cfg = TuneConfig::new(platform.clone());
+    if let Some(name) = flag_value(args, "--strategy") {
+        cfg.strategy = strategy_by_name(name)?;
+    }
+    if let Some(n) = flag_value(args, "--budget") {
+        cfg.budget = n.parse().context("--budget N")?;
+    }
+    if let Some(s) = flag_value(args, "--seed") {
+        cfg.seed = s.parse().context("--seed S")?;
+    }
+    if let Some(w) = flag_value(args, "--workers") {
+        cfg.workers = w.parse().context("--workers N")?;
+    }
+    if has_flag(args, "--no-evidence") {
+        cfg.use_evidence = false;
+    }
+    let suite = match (flag_value(args, "--sample"), flag_value(args, "--synthetic")) {
+        (Some(_), Some(_)) => bail!("--sample and --synthetic are mutually exclusive"),
+        (Some(n), None) => Suite::sample(n.parse().context("--sample N")?),
+        (None, Some(n)) => Suite::synthetic(cfg.seed, n.parse().context("--synthetic N")?),
+        (None, None) => Suite::sample(4),
+    };
+    println!(
+        "tune: strategy {} on {} over {} problems (budget {}/problem, seed {:#x}, evidence {})",
+        cfg.strategy.name(),
+        platform.name(),
+        suite.supported_on(platform.spec()).len(),
+        cfg.budget,
+        cfg.seed,
+        cfg.use_evidence
+    );
+    let t0 = std::time::Instant::now();
+    let report = tune_suite(&cfg, &suite);
+    // one renderer shared with the golden-pinned frontier artifacts —
+    // the CLI report and the goldens can never diverge column-wise
+    let rendered = kforge::search::frontier::render_report(
+        &format!("Autotuned schedules: {} / {}", platform.name(), report.strategy),
+        &report,
+    );
+    print!("{rendered}");
+    println!("cache: {}", report.cache);
+    if let Some(dir) = flag_value(args, "--out") {
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("tune_{}_{}.txt", platform.name(), report.strategy));
+        std::fs::write(&path, &rendered)?;
+        println!("wrote frontier report to {}", path.display());
+    }
+    eprintln!("[tune {} completed in {:.1}s]", platform.name(), t0.elapsed().as_secs_f64());
+    let total = report.outcomes.len();
+    if report.count_le_naive() < total {
+        bail!(
+            "autotuned schedule prices above naive on {} of {total} problems — the search arm must never lose to an untuned program",
+            total - report.count_le_naive()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_bench(args: &[String]) -> Result<()> {
-    let which = first_positional(args, &["--quick", "--out", "--cache-dir"]).unwrap_or("all");
+    let which = first_positional(args, &["--quick", "--out", "--json", "--cache-dir"]).unwrap_or("all");
     let scale = match flag_value(args, "--quick") {
         Some(n) => Scale::Quick(n.parse().context("--quick N")?),
         None => Scale::Full,
@@ -361,8 +477,82 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         }
     }
     println!("cache: {}", store::global().snapshot());
-    eprintln!("[bench {which} completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    let wall_s = t0.elapsed().as_secs_f64();
+    if let Some(path) = flag_value(args, "--json") {
+        // machine-readable summary for the BENCH_*.json perf trajectory
+        // (schema kforge-bench-v1, documented in ROADMAP.md)
+        let json = bench_json(which, scale, &reports, wall_s);
+        std::fs::write(path, json).with_context(|| format!("writing {path}"))?;
+        println!("wrote machine-readable summary to {path}");
+    }
+    eprintln!("[bench {which} completed in {wall_s:.1}s]");
     Ok(())
+}
+
+/// The `kforge bench --json` document: per-report sizes, wall time,
+/// process cache counters, and a geomean-speedup block per (platform,
+/// persona) from a bounded Quick campaign through the shared store —
+/// so repeated emissions accumulate a comparable perf trajectory.
+fn bench_json(target: &str, scale: Scale, reports: &[(&str, String)], wall_s: f64) -> String {
+    use kforge::util::json::Json;
+    use kforge::util::stats;
+    // bound the speedup campaigns: Full-scale bench must not imply a
+    // second Full campaign per platform just to emit a summary
+    let speedup_scale = match scale {
+        Scale::Quick(n) => Scale::Quick(n.min(4)),
+        Scale::Full => Scale::Quick(4),
+    };
+    let suite = speedup_scale.suite();
+    let mut speedups = Json::obj();
+    for platform in registry().platforms() {
+        let cfg = ExperimentConfig::iterative(platform.clone(), PERSONAS.iter().collect());
+        let campaign = kforge::coordinator::run_campaign(&suite, None, &cfg);
+        let mut per_persona = Json::obj();
+        for persona in PERSONAS {
+            let outcomes: Vec<kforge::metrics::TaskOutcome> = campaign
+                .results
+                .iter()
+                .filter(|r| r.persona == persona.name)
+                .map(|r| r.outcome)
+                .collect();
+            let correct: Vec<f64> = outcomes
+                .iter()
+                .filter(|o| o.correct)
+                .map(|o| o.speedup)
+                .collect();
+            let geomean = if correct.is_empty() { 0.0 } else { stats::geomean(&correct) };
+            per_persona = per_persona.set(
+                persona.name,
+                Json::obj()
+                    .set("geomean_speedup", geomean)
+                    .set("correct", correct.len())
+                    .set("jobs", outcomes.len()),
+            );
+        }
+        speedups = speedups.set(platform.name(), per_persona);
+    }
+    let snap = store::global().snapshot();
+    let cache = Json::obj()
+        .set("hits", snap.hits as i64)
+        .set("misses", snap.misses as i64)
+        .set("resumed", snap.resumed as i64)
+        .set("bytes_read", snap.bytes_read as i64)
+        .set("bytes_written", snap.bytes_written as i64)
+        .set("evictions", snap.evictions as i64);
+    let report_list: Vec<Json> = reports
+        .iter()
+        .map(|(name, text)| Json::obj().set("name", *name).set("bytes", text.len()))
+        .collect();
+    Json::obj()
+        .set("schema", "kforge-bench-v1")
+        .set("target", target)
+        .set("scale", format!("{scale:?}"))
+        .set("speedup_scale", format!("{speedup_scale:?}"))
+        .set("wall_s", wall_s)
+        .set("reports", Json::Arr(report_list))
+        .set("speedups", speedups)
+        .set("cache", cache)
+        .to_pretty()
 }
 
 /// `kforge cache <stats|clear|gc> [--cache-dir DIR] [--max-bytes N]` —
@@ -476,20 +666,29 @@ fn cmd_conformance(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
+    use kforge::util::stats;
     let dir = flag_value(args, "--artifacts").unwrap_or("artifacts");
     let requests: usize = flag_value(args, "--requests")
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(64);
+    // the first request pays one-time compilation, which used to skew
+    // p95/p99 badly at small --requests; warmup requests are measured
+    // and reported separately, never in the percentile summary
+    let warmup: usize = flag_value(args, "--warmup")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
+    if requests == 0 {
+        bail!("--requests must be at least 1");
+    }
     let registry = kforge::runtime::Registry::load(dir)
         .with_context(|| format!("loading artifact registry from {dir} (run `make artifacts`)"))?;
     let rt = kforge::runtime::PjrtRuntime::new(registry)?;
     println!("platform: {}", rt.platform());
     println!("artifacts: {}", rt.registry().entries.len());
     let keys: Vec<String> = rt.registry().entries.iter().map(|e| e.key.clone()).collect();
-    let mut latencies = Vec::new();
-    let t0 = std::time::Instant::now();
-    for i in 0..requests {
+    let serve_one = |i: usize, latencies: &mut Vec<f64>| -> Result<()> {
         let key = &keys[i % keys.len()];
         let inputs = rt.seeded_inputs(key, i as u64)?;
         let t = std::time::Instant::now();
@@ -498,9 +697,27 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         if i == 0 {
             println!("first request: {key} -> {} outputs", out.len());
         }
+        Ok(())
+    };
+    let mut warm_latencies = Vec::new();
+    for i in 0..warmup {
+        serve_one(i, &mut warm_latencies)?;
+    }
+    if !warm_latencies.is_empty() {
+        println!(
+            "warmup: {} request(s) excluded from percentiles; first={:.2} ms mean={:.2} ms",
+            warmup,
+            warm_latencies[0] * 1e3,
+            stats::mean(&warm_latencies) * 1e3
+        );
+    }
+    let mut latencies = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        serve_one(warmup + i, &mut latencies)?;
     }
     let total = t0.elapsed().as_secs_f64();
-    let s = kforge::util::stats::summarize(&latencies);
+    let s = stats::summarize(&latencies);
     println!(
         "served {requests} requests in {total:.2}s ({:.1} req/s)",
         requests as f64 / total

@@ -47,10 +47,12 @@ impl SimResult {
     }
 }
 
-/// Simulate a plan: build the timeline, price launches, apply the
-/// measurement protocol (`runs` timed runs after `warmup`, lognormal
-/// noise from the platform's sigma, seeded).
-pub fn simulate(spec: &PlatformSpec, plan: &Plan, rng: &mut Pcg, runs: usize, warmup: usize) -> SimResult {
+/// Build the device timeline for one plan execution and return it with
+/// the noise-free model time.  This is the single pricing path: both
+/// [`simulate`] and the schedule autotuner's [`ideal_time`] go through
+/// it, so a schedule search can never rank by a cost model that drifts
+/// from what the measurement protocol then reports.
+fn build_timeline(spec: &PlatformSpec, plan: &Plan) -> (Vec<TimelineEntry>, f64) {
     let s = &plan.schedule;
     let n = plan.kernels.len();
     let total_launch = launch_cost(spec, s, n);
@@ -80,7 +82,23 @@ pub fn simulate(spec: &PlatformSpec, plan: &Plan, rng: &mut Pcg, runs: usize, wa
         clock += cost.total_s;
         prev_body = cost.total_s;
     }
-    let ideal = clock + HOST_OVERHEAD_S;
+    (timeline, clock + HOST_OVERHEAD_S)
+}
+
+/// Noise-free model time for one run of `plan` — bit-identical to the
+/// `ideal_s` a [`simulate`] call would report, with no RNG involved.
+/// The schedule autotuner ranks candidates by this, which is what makes
+/// seeded search results independent of worker count and measurement
+/// noise alike.
+pub fn ideal_time(spec: &PlatformSpec, plan: &Plan) -> f64 {
+    build_timeline(spec, plan).1
+}
+
+/// Simulate a plan: build the timeline, price launches, apply the
+/// measurement protocol (`runs` timed runs after `warmup`, lognormal
+/// noise from the platform's sigma, seeded).
+pub fn simulate(spec: &PlatformSpec, plan: &Plan, rng: &mut Pcg, runs: usize, warmup: usize) -> SimResult {
+    let (timeline, ideal) = build_timeline(spec, plan);
     // measurement protocol: warmup runs discarded, mean of the rest
     let mut samples = Vec::with_capacity(runs + warmup);
     for i in 0..(runs + warmup) {
@@ -155,6 +173,21 @@ mod tests {
         let b = simulate(&spec, &p, &mut r2, 100, 10);
         assert_eq!(a.measured_s, b.measured_s);
         assert!((a.measured_s / a.ideal_s - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn ideal_time_matches_simulate_bitwise() {
+        let spec = cuda::h100();
+        for (fused, dim) in [(false, 32), (false, 64), (true, 64)] {
+            let p = plan(fused, dim);
+            let mut rng = Pcg::seed(3);
+            let sim = simulate(&spec, &p, &mut rng, 10, 2);
+            assert_eq!(
+                ideal_time(&spec, &p).to_bits(),
+                sim.ideal_s.to_bits(),
+                "fused={fused} dim={dim}"
+            );
+        }
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub mod lower;
 pub mod cost;
 pub mod exec;
 
-pub use exec::{simulate, SimResult};
+pub use exec::{ideal_time, simulate, SimResult};
 pub use lower::{KernelClass, KernelLaunch, Plan};

@@ -180,6 +180,83 @@ impl Schedule {
         false
     }
 
+    /// Canonical single-line rendering of every lever.  This is the
+    /// deterministic sort/dedup key the search subsystem uses and the
+    /// exact (all-integer, hence lossless) serialization the result
+    /// store round-trips tune results through — [`Schedule::from_canon`]
+    /// is its strict inverse.
+    pub fn canon(&self) -> String {
+        format!(
+            "fusion={} tile={}x{}x{} ept={} tg={} fast={} graphs={} vec={}",
+            if self.fusion_depth == usize::MAX {
+                "full".to_string()
+            } else {
+                self.fusion_depth.to_string()
+            },
+            self.tile.bm,
+            self.tile.bn,
+            self.tile.bk,
+            self.ept,
+            self.threadgroup,
+            self.fast_math,
+            self.use_graphs,
+            self.vec_width
+        )
+    }
+
+    /// Strict inverse of [`Schedule::canon`]: every field must be
+    /// present, well-formed and in order; anything else is an error
+    /// (the store treats it as a corrupt entry, i.e. a miss).
+    pub fn from_canon(text: &str) -> anyhow::Result<Schedule> {
+        use anyhow::Context;
+        let mut fields = text.split_whitespace();
+        let mut take = |name: &str| -> anyhow::Result<String> {
+            let tok = fields
+                .next()
+                .with_context(|| format!("schedule text truncated before {name}"))?;
+            tok.strip_prefix(name)
+                .and_then(|rest| rest.strip_prefix('='))
+                .map(|v| v.to_string())
+                .with_context(|| format!("expected {name}=..., got {tok:?}"))
+        };
+        let fusion = take("fusion")?;
+        let fusion_depth = if fusion == "full" {
+            usize::MAX
+        } else {
+            fusion.parse().with_context(|| format!("bad fusion depth {fusion:?}"))?
+        };
+        let tile_text = take("tile")?;
+        let dims: Vec<&str> = tile_text.split('x').collect();
+        anyhow::ensure!(dims.len() == 3, "bad tile {tile_text:?}");
+        let tile = Tile {
+            bm: dims[0].parse().with_context(|| format!("bad tile {tile_text:?}"))?,
+            bn: dims[1].parse().with_context(|| format!("bad tile {tile_text:?}"))?,
+            bk: dims[2].parse().with_context(|| format!("bad tile {tile_text:?}"))?,
+        };
+        let parse_bool = |v: String| -> anyhow::Result<bool> {
+            match v.as_str() {
+                "true" => Ok(true),
+                "false" => Ok(false),
+                other => anyhow::bail!("bad bool {other:?}"),
+            }
+        };
+        let ept = take("ept")?.parse().context("bad ept")?;
+        let threadgroup = take("tg")?.parse().context("bad threadgroup")?;
+        let fast_math = parse_bool(take("fast")?)?;
+        let use_graphs = parse_bool(take("graphs")?)?;
+        let vec_width = take("vec")?.parse().context("bad vec width")?;
+        anyhow::ensure!(fields.next().is_none(), "trailing data after schedule fields");
+        Ok(Schedule {
+            fusion_depth,
+            tile,
+            ept,
+            threadgroup,
+            fast_math,
+            use_graphs,
+            vec_width,
+        })
+    }
+
     /// Distance from the expert schedule in lever count (0 = expert).
     pub fn distance_from_expert(&self) -> usize {
         let e = Schedule::expert();
@@ -284,6 +361,33 @@ mod tests {
         assert!(avg_hi < avg_lo, "hi={avg_hi} lo={avg_lo}");
         assert!(avg_hi < 1.5);
         assert!(avg_lo > 3.0);
+    }
+
+    #[test]
+    fn canon_round_trips_every_sampled_schedule() {
+        let mut rng = Pcg::seed(0xCA90);
+        for _ in 0..200 {
+            let s = Schedule::sample(&mut rng, rng.uniform());
+            let back = Schedule::from_canon(&s.canon()).unwrap();
+            assert_eq!(back, s, "{}", s.canon());
+        }
+        // usize::MAX fusion renders as "full" and survives the trip
+        let e = Schedule::expert();
+        assert!(e.canon().contains("fusion=full"), "{}", e.canon());
+        assert_eq!(Schedule::from_canon(&e.canon()).unwrap(), e);
+    }
+
+    #[test]
+    fn from_canon_rejects_malformed_text() {
+        let good = Schedule::naive().canon();
+        assert!(Schedule::from_canon("").is_err());
+        assert!(Schedule::from_canon(&good.replace("fast=false", "fast=perhaps")).is_err());
+        assert!(Schedule::from_canon(&good.replace("tile=16x16x16", "tile=16x16")).is_err());
+        assert!(Schedule::from_canon(&format!("{good} extra=1")).is_err());
+        // truncated at every field boundary
+        for (i, _) in good.match_indices(' ') {
+            assert!(Schedule::from_canon(&good[..i]).is_err(), "truncated at {i} parsed");
+        }
     }
 
     #[test]

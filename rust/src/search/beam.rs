@@ -1,0 +1,130 @@
+//! Beam search over single-lever `Schedule` neighborhoods.
+//!
+//! The deterministic workhorse strategy: keep the `width` best points,
+//! expand every legal single-lever move of each
+//! ([`super::neighbors::neighbors`]), score the unseen expansions
+//! through the oracle's worker fan-out, keep the best `width` of the
+//! merged frontier, repeat until the budget or patience runs out.  The
+//! lever neighborhoods are exactly the moves the agents'
+//! `Lever::improve` steps take, so beam search is the exhaustive
+//! counterpart of the persona optimization pass — the paper-grade
+//! "best-effort search" arm.
+
+use super::neighbors;
+use super::{score_batch, seed_points, sort_frontier, Budget, CostOracle, SearchOutcome, SearchStrategy};
+use crate::util::rng::Pcg;
+use std::collections::BTreeSet;
+
+/// Beam search strategy.  `width` is the frontier size kept per round.
+#[derive(Debug, Clone)]
+pub struct BeamStrategy {
+    pub width: usize,
+}
+
+impl Default for BeamStrategy {
+    fn default() -> BeamStrategy {
+        BeamStrategy { width: 4 }
+    }
+}
+
+impl SearchStrategy for BeamStrategy {
+    fn name(&self) -> &'static str {
+        "beam"
+    }
+
+    fn describe(&self) -> &'static str {
+        "beam search over legality-filtered single-lever schedule neighborhoods"
+    }
+
+    fn search(&self, oracle: &CostOracle<'_>, budget: &mut Budget, _rng: &mut Pcg) -> SearchOutcome {
+        let spec = oracle.spec();
+        let width = self.width.max(1);
+        let mut visited = Vec::new();
+        let seeds = seed_points(spec);
+        // membership-only set (order never read), so determinism holds
+        let mut seen: BTreeSet<String> = seeds.iter().map(|s| s.canon()).collect();
+        let mut beam = score_batch(oracle, budget, seeds, &mut visited);
+        sort_frontier(&mut beam);
+        beam.truncate(width);
+        if let Some(head) = beam.first() {
+            budget.observe(head.cost_s);
+        }
+        while budget.should_continue() && !beam.is_empty() {
+            let mut expansions = Vec::new();
+            for point in &beam {
+                for cand in neighbors::neighbors(&point.schedule, spec) {
+                    if seen.insert(cand.canon()) {
+                        expansions.push(cand);
+                    }
+                }
+            }
+            if expansions.is_empty() {
+                break; // neighborhood exhausted around the frontier
+            }
+            let scored = score_batch(oracle, budget, expansions, &mut visited);
+            if scored.is_empty() {
+                break; // budget exhausted mid-round
+            }
+            let mut merged = beam.clone();
+            merged.extend(scored);
+            sort_frontier(&mut merged);
+            merged.truncate(width);
+            let round_best = merged[0].cost_s;
+            beam = merged;
+            if !budget.observe(round_best) {
+                break;
+            }
+        }
+        oracle.rerank(&mut beam);
+        let best = beam.first().cloned().unwrap_or_else(|| super::Scored {
+            schedule: crate::sched::Schedule::naive(),
+            cost_s: f64::INFINITY,
+        });
+        SearchOutcome { best, frontier: beam, visited }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::cuda;
+    use crate::sched::Schedule;
+    use crate::workloads::Suite;
+
+    #[test]
+    fn beam_improves_on_naive_and_is_deterministic() {
+        let suite = Suite::sample(1);
+        let problem = &suite.problems[0];
+        let spec = cuda::h100();
+        let oracle = CostOracle::new(&spec, &problem.perf_graph);
+        let naive = oracle.cost(&Schedule::naive());
+        let run = |workers: usize| {
+            let oracle = CostOracle::new(&spec, &problem.perf_graph).with_workers(workers);
+            let mut budget = Budget::new(160, 3);
+            let mut rng = Pcg::seed(1);
+            BeamStrategy::default().search(&oracle, &mut budget, &mut rng)
+        };
+        let a = run(1);
+        assert!(a.best.cost_s <= naive, "beam {} worse than naive {naive}", a.best.cost_s);
+        assert!(!a.visited.is_empty());
+        assert_eq!(a.best.schedule, a.frontier[0].schedule);
+        // worker-count invariance, down to the visit order and bits
+        let b = run(8);
+        assert_eq!(a.visited, b.visited);
+        assert_eq!(a.best.schedule, b.best.schedule);
+        assert_eq!(a.best.cost_s.to_bits(), b.best.cost_s.to_bits());
+    }
+
+    #[test]
+    fn beam_respects_a_tiny_budget() {
+        let suite = Suite::sample(1);
+        let problem = &suite.problems[0];
+        let spec = cuda::h100();
+        let oracle = CostOracle::new(&spec, &problem.perf_graph);
+        let mut budget = Budget::new(3, 2);
+        let mut rng = Pcg::seed(1);
+        let out = BeamStrategy::default().search(&oracle, &mut budget, &mut rng);
+        assert!(out.visited.len() <= 3);
+        assert!(out.best.cost_s.is_finite());
+    }
+}

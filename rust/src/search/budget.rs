@@ -1,0 +1,120 @@
+//! The evaluation budget / early-stop controller every strategy runs
+//! under.  A budget bounds total oracle evaluations (`max_evals`) and
+//! stops a search whose frontier has gone stale (`patience` rounds with
+//! no strict improvement) — the knob `kforge tune --budget` exposes and
+//! the tune key fingerprints.
+
+/// Evaluation budget + patience-based early stop.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    max_evals: usize,
+    patience: usize,
+    used: usize,
+    stale_rounds: usize,
+    best_seen: f64,
+    stopped_early: bool,
+}
+
+impl Budget {
+    /// `max_evals` total candidate evaluations; early-stop after
+    /// `patience` consecutive rounds without a strictly better cost.
+    pub fn new(max_evals: usize, patience: usize) -> Budget {
+        Budget {
+            max_evals,
+            patience: patience.max(1),
+            used: 0,
+            stale_rounds: 0,
+            best_seen: f64::INFINITY,
+            stopped_early: false,
+        }
+    }
+
+    /// Evaluations still available.
+    pub fn remaining(&self) -> usize {
+        self.max_evals.saturating_sub(self.used)
+    }
+
+    /// Evaluations consumed so far.
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Claim up to `n` evaluations; returns the granted count (0 when
+    /// exhausted).  Strategies must truncate their batch to the grant.
+    pub fn take(&mut self, n: usize) -> usize {
+        let granted = n.min(self.remaining());
+        self.used += granted;
+        granted
+    }
+
+    /// Record a round's best cost.  Returns `false` when the search
+    /// should stop early (the frontier has been stale for `patience`
+    /// rounds).
+    pub fn observe(&mut self, round_best: f64) -> bool {
+        if round_best < self.best_seen {
+            self.best_seen = round_best;
+            self.stale_rounds = 0;
+        } else {
+            self.stale_rounds += 1;
+        }
+        if self.stale_rounds >= self.patience {
+            self.stopped_early = true;
+        }
+        !self.stopped_early
+    }
+
+    /// Should the strategy start another round?
+    pub fn should_continue(&self) -> bool {
+        self.remaining() > 0 && !self.stopped_early
+    }
+
+    /// Did the patience rule fire (as opposed to plain exhaustion)?
+    pub fn stopped_early(&self) -> bool {
+        self.stopped_early
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_never_overdraws() {
+        let mut b = Budget::new(10, 3);
+        assert_eq!(b.take(6), 6);
+        assert_eq!(b.take(6), 4);
+        assert_eq!(b.take(6), 0);
+        assert_eq!(b.used(), 10);
+        assert_eq!(b.remaining(), 0);
+        assert!(!b.should_continue());
+        assert!(!b.stopped_early());
+    }
+
+    #[test]
+    fn patience_stops_stale_searches() {
+        let mut b = Budget::new(1000, 2);
+        assert!(b.observe(5.0)); // improvement (from infinity)
+        assert!(b.observe(4.0)); // improvement
+        assert!(b.observe(4.0)); // stale 1
+        assert!(!b.observe(4.0)); // stale 2 -> stop
+        assert!(b.stopped_early());
+        assert!(!b.should_continue());
+    }
+
+    #[test]
+    fn improvement_resets_patience() {
+        let mut b = Budget::new(1000, 2);
+        assert!(b.observe(5.0));
+        assert!(b.observe(5.0)); // stale 1
+        assert!(b.observe(4.0)); // improvement resets
+        assert!(b.observe(4.0)); // stale 1 again
+        assert!(!b.observe(4.0)); // stale 2 -> stop
+    }
+
+    #[test]
+    fn zero_patience_is_clamped_to_one() {
+        let mut b = Budget::new(10, 0);
+        assert!(b.observe(1.0)); // improvement
+        assert!(!b.observe(1.0)); // first stale round stops
+    }
+}

@@ -1,0 +1,120 @@
+//! The `search_frontier_<platform>` conformance artifact: search
+//! behavior, golden-pinned per registered platform.
+//!
+//! One table per registered strategy over a small curated slice, plus
+//! the acceptance summary lines (`autotuned<=naive`, `autotuned<=expert`,
+//! geomean speedup).  Rendering goes through [`super::tune_suite`], so
+//! under the CLI a `--cache-dir` warms the tune cache and a warm render
+//! is byte-identical to a cold one — the same contract every other
+//! golden artifact carries.  Registering a new platform (or strategy)
+//! changes the artifact set and fails conformance until the new
+//! frontier is reviewed and blessed, by design.
+
+use super::tune::{tune_suite, TuneConfig, TuneReport};
+use super::strategies;
+use crate::harness::{render, Artifact, Scale};
+use crate::platform::PlatformRef;
+use crate::workloads::Suite;
+
+/// Render one tune report as the fixed-format table plus its summary
+/// lines — the single source both the `kforge tune` CLI and the
+/// golden-pinned frontier artifacts print, so the two can never
+/// diverge column-by-column.
+pub fn render_report(title: &str, report: &TuneReport) -> String {
+    let rows: Vec<Vec<String>> = report
+        .outcomes
+        .iter()
+        .map(|o| {
+            vec![
+                o.problem_id.clone(),
+                format!("{:.4}", o.naive_s * 1e3),
+                format!("{:.4}", o.expert_s * 1e3),
+                format!("{:.4}", o.tuned_s * 1e3),
+                format!("{:.2}x", o.speedup_vs_naive()),
+                if o.le_expert() { "yes" } else { "no" }.to_string(),
+                o.evals.to_string(),
+                o.schedule.canon(),
+            ]
+        })
+        .collect();
+    let table = render::table(
+        title,
+        &["problem", "naive ms", "expert ms", "tuned ms", "vs naive", "<=expert", "evals", "schedule"],
+        &rows,
+    );
+    format!("{table}{}", report.summary())
+}
+
+/// Per-problem search budget for the golden-pinned render: small
+/// enough to keep `kforge conformance` fast, large enough that beam
+/// stacks several lever moves on the curated problems.
+pub const FRONTIER_BUDGET: usize = 96;
+
+/// The frontier artifact for one platform.
+pub fn artifact(platform: &PlatformRef, scale: Scale) -> Artifact {
+    Artifact::new(
+        format!("search_frontier_{}", platform.name()),
+        render_frontier(platform, scale),
+    )
+}
+
+/// Render the frontier text for one platform at `scale`.
+pub fn render_frontier(platform: &PlatformRef, scale: Scale) -> String {
+    // the frontier golden is a behavioral pin, not a benchmark: cap
+    // the slice so even a Full-scale bless stays minutes, not hours
+    let per_level = match scale {
+        Scale::Full => 4,
+        Scale::Quick(n) => n.min(4),
+    };
+    let suite = Suite::sample(per_level);
+    let mut out = format!(
+        "== Search frontier: {} ({} problems/level, budget {}) ==\n",
+        platform.name(),
+        per_level,
+        FRONTIER_BUDGET
+    );
+    for strategy in strategies() {
+        let mut cfg = TuneConfig::new(platform.clone());
+        cfg.strategy = strategy.clone();
+        cfg.budget = FRONTIER_BUDGET;
+        let report = tune_suite(&cfg, &suite);
+        out.push_str(&render_report(
+            &format!("strategy: {} — {}", strategy.name(), strategy.describe()),
+            &report,
+        ));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::by_name;
+
+    #[test]
+    fn frontier_artifact_is_deterministic_and_pins_the_acceptance_lines() {
+        let platform = by_name("cuda").unwrap();
+        let a = artifact(&platform, Scale::Quick(2));
+        assert_eq!(a.name, "search_frontier_cuda");
+        // the curated acceptance fraction: tuned <= naive on 100%
+        assert!(a.text.contains("autotuned<=naive: 6/6 (100.0%)"), "{}", a.text);
+        assert!(a.text.contains("autotuned<=expert:"), "{}", a.text);
+        // one section per registered strategy
+        for s in crate::search::strategies() {
+            assert!(a.text.contains(&format!("strategy: {}", s.name())), "{}", a.text);
+        }
+        // byte determinism (the golden differ's precondition)
+        let b = artifact(&platform, Scale::Quick(2));
+        assert_eq!(a.text.as_bytes(), b.text.as_bytes());
+    }
+
+    #[test]
+    fn frontier_respects_the_platform_suite_filter() {
+        // metal's artifact must only carry problems metal supports
+        let metal = by_name("metal").unwrap();
+        let text = render_frontier(&metal, Scale::Quick(2));
+        assert!(!text.contains("conv3d_transpose"), "{text}");
+        assert!(text.contains("autotuned<=naive"), "{text}");
+    }
+}

@@ -1,0 +1,244 @@
+//! The schedule autotuner: deterministic, seeded, population-based
+//! search over the [`crate::sched::Schedule`] space.
+//!
+//! KForge's optimization pass is agent-driven — personas move one
+//! `Lever` per iteration under analysis-agent advice — so the system
+//! never explored the schedule space it can already cost
+//! ([`crate::perfsim`]) and legality-check ([`crate::sched::legal`]).
+//! KernelBench-style evaluations argue every synthesis claim needs a
+//! *tuned-baseline* arm to be credible; this subsystem is that arm:
+//! the strongest non-agent comparator the repo can field, consuming
+//! all three open plugin APIs at once:
+//!
+//! - the **platform registry** — every strategy is platform-generic:
+//!   candidates come only from legality-filtered generators
+//!   ([`neighbors`]) parameterized by the `PlatformSpec`, with zero
+//!   per-platform match arms anywhere in this module tree;
+//! - the **profiler Evidence IR** — the cost oracle ([`oracle`]) can
+//!   re-rank near-tied frontiers from the platform frontend's
+//!   interpreted evidence (launch pressure, occupancy), never from the
+//!   capture format;
+//! - the **result store** — tune results are cached under their own
+//!   `kforge-tunekey` key kind ([`tune`]), so `kforge tune`, the
+//!   `--baseline autotuned` campaign arm and the `search_frontier_*`
+//!   conformance artifacts never search the same (platform, problem)
+//!   twice.
+//!
+//! Strategies are an open plugin surface exactly like platforms and
+//! profiler frontends: implement [`SearchStrategy`], register it in
+//! [`strategies`], done — the `kforge tune` CLI, the property tests and
+//! the golden-pinned frontier artifacts pick it up from the registry
+//! (see ROADMAP.md's "Adding a search strategy" guide).
+//!
+//! Determinism contract (CI- and property-test-enforced): a strategy
+//! draws randomness only from the `Pcg` it is handed, scores candidates
+//! only through the pure [`CostOracle`] (fanned across the worker pool
+//! — worker count never changes values), and emits only candidates that
+//! pass `legal::check` on the target spec.  A full `kforge tune` run is
+//! therefore bit-identical across worker counts and warm vs cold store.
+
+pub mod beam;
+pub mod budget;
+pub mod evolve;
+pub mod frontier;
+pub mod neighbors;
+pub mod oracle;
+pub mod tune;
+
+pub use beam::BeamStrategy;
+pub use budget::Budget;
+pub use evolve::EvolveStrategy;
+pub use oracle::CostOracle;
+pub use tune::{tune_problem, tune_suite, tune_suite_with, TuneConfig, TuneOutcome, TuneReport};
+
+use crate::platform::PlatformSpec;
+use crate::sched::{legal, Schedule};
+use crate::util::rng::Pcg;
+use anyhow::{bail, Result};
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+/// Shared handle to a registered search strategy.
+pub type StrategyRef = Arc<dyn SearchStrategy>;
+
+/// One scored point on a search frontier.
+#[derive(Debug, Clone)]
+pub struct Scored {
+    pub schedule: Schedule,
+    /// Noise-free simulated seconds ([`crate::perfsim::ideal_time`]).
+    pub cost_s: f64,
+}
+
+/// What a strategy hands back for one (platform, problem) search.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// The winning point (also `frontier[0]`).
+    pub best: Scored,
+    /// The final frontier, best first (evidence re-rank applied when
+    /// the oracle carries a profiler frontend).
+    pub frontier: Vec<Scored>,
+    /// Every candidate the strategy evaluated, in evaluation order —
+    /// the legality property tests sweep this, so strategies must not
+    /// evaluate anything they do not record here.
+    pub visited: Vec<Schedule>,
+}
+
+/// A schedule-search strategy — the third open plugin surface, shaped
+/// like [`crate::platform::Platform`] and
+/// [`crate::profiler::ProfilerFrontend`].
+pub trait SearchStrategy: fmt::Debug + Send + Sync {
+    /// Stable lowercase strategy id ("beam", "evolve").
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `kforge tune` listings.
+    fn describe(&self) -> &'static str;
+
+    /// Run the search.  The oracle carries the target spec and graph;
+    /// all randomness must come from `rng`, all scoring from the
+    /// oracle, and every evaluated candidate must be legal on the
+    /// oracle's spec and recorded in [`SearchOutcome::visited`].
+    fn search(&self, oracle: &CostOracle<'_>, budget: &mut Budget, rng: &mut Pcg) -> SearchOutcome;
+}
+
+/// The registered strategies, in a stable order.  Adding a strategy is
+/// one line here plus its module — the CLI, the frontier artifacts and
+/// the property tests all iterate this registry.
+pub fn strategies() -> &'static [StrategyRef] {
+    static STRATEGIES: OnceLock<Vec<StrategyRef>> = OnceLock::new();
+    STRATEGIES.get_or_init(|| {
+        vec![
+            Arc::new(BeamStrategy::default()) as StrategyRef,
+            Arc::new(EvolveStrategy::default()) as StrategyRef,
+        ]
+    })
+}
+
+/// Look up a strategy by name.  Unknown names are an error listing
+/// everything registered (never a panic).
+pub fn strategy_by_name(name: &str) -> Result<StrategyRef> {
+    for s in strategies() {
+        if s.name() == name {
+            return Ok(s.clone());
+        }
+    }
+    bail!(
+        "unknown search strategy {name:?}; registered strategies: {}",
+        strategies().iter().map(|s| s.name()).collect::<Vec<_>>().join(", ")
+    )
+}
+
+/// The starting points every strategy seeds its population with: the
+/// naive schedule (so the search result can never be worse than an
+/// untuned program) and the platform's stock-kernel schedule.  The
+/// expert point is deliberately *not* seeded — whether search reaches
+/// it is exactly what the frontier artifacts report.
+pub(crate) fn seed_points(spec: &PlatformSpec) -> Vec<Schedule> {
+    let mut out = vec![Schedule::naive()];
+    let stock = crate::baseline::eager::stock_schedule(spec);
+    if legal::check(&stock, spec).is_ok() && !out.contains(&stock) {
+        out.push(stock);
+    }
+    out
+}
+
+/// Sort a frontier best-first, fully deterministically: by cost bit
+/// pattern, ties broken by the canonical schedule rendering.  Equal
+/// schedules (now adjacent) are deduplicated.
+pub(crate) fn sort_frontier(xs: &mut Vec<Scored>) {
+    xs.sort_by(|a, b| {
+        a.cost_s
+            .total_cmp(&b.cost_s)
+            .then_with(|| a.schedule.canon().cmp(&b.schedule.canon()))
+    });
+    xs.dedup_by(|a, b| a.schedule == b.schedule);
+}
+
+/// Evaluate a candidate batch against the budget: charges up to
+/// `cands.len()` evaluations, scores the granted prefix through the
+/// oracle's worker fan-out, and records it in `visited`.
+pub(crate) fn score_batch(
+    oracle: &CostOracle<'_>,
+    budget: &mut Budget,
+    mut cands: Vec<Schedule>,
+    visited: &mut Vec<Schedule>,
+) -> Vec<Scored> {
+    let granted = budget.take(cands.len());
+    cands.truncate(granted);
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    let costs = oracle.cost_many(&cands);
+    visited.extend(cands.iter().cloned());
+    cands
+        .into_iter()
+        .zip(costs)
+        .map(|(schedule, cost_s)| Scored { schedule, cost_s })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_beam_and_evolve_with_distinct_names() {
+        let names: Vec<&str> = strategies().iter().map(|s| s.name()).collect();
+        assert!(names.contains(&"beam"));
+        assert!(names.contains(&"evolve"));
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate strategy names");
+        for s in strategies() {
+            assert!(!s.describe().is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_strategy_is_error_listing_the_registry() {
+        let err = strategy_by_name("annealing").unwrap_err().to_string();
+        assert!(err.contains("annealing"), "{err}");
+        assert!(err.contains("beam") && err.contains("evolve"), "{err}");
+        assert_eq!(strategy_by_name("beam").unwrap().name(), "beam");
+    }
+
+    #[test]
+    fn seed_points_are_legal_everywhere_and_include_naive() {
+        for platform in crate::platform::registry().platforms() {
+            let spec = platform.spec();
+            let seeds = seed_points(spec);
+            assert_eq!(seeds[0], Schedule::naive());
+            assert!(seeds.len() >= 2, "{}: stock seed missing", platform.name());
+            for s in &seeds {
+                legal::check(s, spec)
+                    .unwrap_or_else(|e| panic!("{}: seed illegal: {e}", platform.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn sort_frontier_is_deterministic_and_dedups() {
+        let a = Schedule::naive();
+        let mut b = Schedule::naive();
+        b.fast_math = true;
+        let mut xs = vec![
+            Scored { schedule: b.clone(), cost_s: 2.0 },
+            Scored { schedule: a.clone(), cost_s: 1.0 },
+            Scored { schedule: a.clone(), cost_s: 1.0 },
+        ];
+        sort_frontier(&mut xs);
+        assert_eq!(xs.len(), 2);
+        assert_eq!(xs[0].schedule, a);
+        assert_eq!(xs[1].schedule, b);
+        // equal costs order by canonical rendering, not insertion order
+        let mut ys = vec![
+            Scored { schedule: b.clone(), cost_s: 1.0 },
+            Scored { schedule: a.clone(), cost_s: 1.0 },
+        ];
+        sort_frontier(&mut ys);
+        let keys: Vec<String> = ys.iter().map(|s| s.schedule.canon()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+}

@@ -1,0 +1,246 @@
+//! Legality-filtered schedule move generators.
+//!
+//! Every candidate any strategy emits flows through these generators
+//! (or is a field-wise recombination of schedules that did), and every
+//! generator filters through [`legal::check`] against the target
+//! [`PlatformSpec`] — so illegal schedules can never enter a search
+//! population.  Crossover needs no re-check because schedule legality
+//! is per-field (threadgroup shape, tile footprint, ept, vector width
+//! are judged independently), so any field-wise mix of two legal
+//! parents is legal; a test below pins that assumption against every
+//! registered platform so a future coupled legality rule fails loudly
+//! here instead of corrupting search populations silently.
+
+use crate::platform::PlatformSpec;
+use crate::sched::legal;
+use crate::sched::schedule::{Lever, Schedule, Tile};
+use crate::util::rng::Pcg;
+
+/// Fusion depths worth distinguishing: eager, shallow partial takes,
+/// and fully fused.  (Depths beyond a graph's opportunity count behave
+/// like `full`, so a denser grid only duplicates plans.)
+pub const FUSION_CHOICES: [usize; 5] = [0, 1, 2, 3, usize::MAX];
+/// Elements-per-thread grid (legality caps at 16).
+pub const EPT_CHOICES: [usize; 5] = [1, 2, 4, 8, 16];
+/// Threadgroup sizes (filtered per platform by simd-width multiple and
+/// device maximum).
+pub const THREADGROUP_CHOICES: [usize; 5] = [64, 128, 256, 512, 1024];
+/// Vector load widths (legality caps at 8).
+pub const VEC_CHOICES: [usize; 4] = [1, 2, 4, 8];
+
+/// All alternative values of one lever from `base`, legality-filtered,
+/// `base` itself excluded, in declaration order (deterministic).
+pub fn lever_values(spec: &PlatformSpec, base: &Schedule, lever: Lever) -> Vec<Schedule> {
+    let mut out: Vec<Schedule> = Vec::new();
+    let mut push = |cand: Schedule| {
+        if cand != *base && legal::check(&cand, spec).is_ok() && !out.contains(&cand) {
+            out.push(cand);
+        }
+    };
+    match lever {
+        Lever::Fusion => {
+            for v in FUSION_CHOICES {
+                let mut c = base.clone();
+                c.fusion_depth = v;
+                push(c);
+            }
+        }
+        Lever::Tile => {
+            for t in Tile::CHOICES {
+                let mut c = base.clone();
+                c.tile = t;
+                push(c);
+            }
+        }
+        Lever::Ept => {
+            for v in EPT_CHOICES {
+                let mut c = base.clone();
+                c.ept = v;
+                push(c);
+            }
+        }
+        Lever::Threadgroup => {
+            for v in THREADGROUP_CHOICES {
+                let mut c = base.clone();
+                c.threadgroup = v;
+                push(c);
+            }
+        }
+        Lever::FastMath => {
+            let mut c = base.clone();
+            c.fast_math = !c.fast_math;
+            push(c);
+        }
+        Lever::Graphs => {
+            let mut c = base.clone();
+            c.use_graphs = !c.use_graphs;
+            push(c);
+        }
+        Lever::VecWidth => {
+            for v in VEC_CHOICES {
+                let mut c = base.clone();
+                c.vec_width = v;
+                push(c);
+            }
+        }
+    }
+    out
+}
+
+/// The full single-lever neighborhood of `base`: every legal move of
+/// every lever, deduplicated, in lever-then-value order.
+pub fn neighbors(base: &Schedule, spec: &PlatformSpec) -> Vec<Schedule> {
+    let mut out: Vec<Schedule> = Vec::new();
+    for lever in Lever::ALL {
+        for cand in lever_values(spec, base, lever) {
+            if !out.contains(&cand) {
+                out.push(cand);
+            }
+        }
+    }
+    out
+}
+
+/// Draw a uniformly random legal schedule (evolutionary init).  Falls
+/// back to naive if the (astronomically unlikely) retry budget runs
+/// out — naive is legal on every registered platform.
+pub fn random_legal(spec: &PlatformSpec, rng: &mut Pcg) -> Schedule {
+    for _ in 0..64 {
+        let s = Schedule {
+            fusion_depth: *rng.choose(&FUSION_CHOICES),
+            tile: *rng.choose(&Tile::CHOICES),
+            ept: *rng.choose(&EPT_CHOICES),
+            threadgroup: *rng.choose(&THREADGROUP_CHOICES),
+            fast_math: rng.chance(0.5),
+            use_graphs: rng.chance(0.5),
+            vec_width: *rng.choose(&VEC_CHOICES),
+        };
+        if legal::check(&s, spec).is_ok() {
+            return s;
+        }
+    }
+    Schedule::naive()
+}
+
+/// Mutate one random lever of `base` to a random legal alternative.
+/// Returns `base` unchanged only if no lever has any legal alternative
+/// (impossible on the registered platforms — fast-math always toggles).
+pub fn mutate(base: &Schedule, spec: &PlatformSpec, rng: &mut Pcg) -> Schedule {
+    for _ in 0..16 {
+        let lever = *rng.choose(&Lever::ALL);
+        let opts = lever_values(spec, base, lever);
+        if !opts.is_empty() {
+            return opts[rng.below(opts.len() as u32) as usize].clone();
+        }
+    }
+    base.clone()
+}
+
+/// Field-wise crossover of two legal parents (uniform mask).  Legal by
+/// construction — see the module docs and the pin test below.
+pub fn crossover(a: &Schedule, b: &Schedule, rng: &mut Pcg) -> Schedule {
+    let mut s = a.clone();
+    if rng.chance(0.5) {
+        s.fusion_depth = b.fusion_depth;
+    }
+    if rng.chance(0.5) {
+        s.tile = b.tile;
+    }
+    if rng.chance(0.5) {
+        s.ept = b.ept;
+    }
+    if rng.chance(0.5) {
+        s.threadgroup = b.threadgroup;
+    }
+    if rng.chance(0.5) {
+        s.fast_math = b.fast_math;
+    }
+    if rng.chance(0.5) {
+        s.use_graphs = b.use_graphs;
+    }
+    if rng.chance(0.5) {
+        s.vec_width = b.vec_width;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::registry;
+
+    #[test]
+    fn neighborhoods_are_legal_nonempty_and_deterministic() {
+        for platform in registry().platforms() {
+            let spec = platform.spec();
+            for base in [Schedule::naive(), platform.expert_schedule()] {
+                let ns = neighbors(&base, spec);
+                assert!(!ns.is_empty(), "{}: empty neighborhood", platform.name());
+                assert_eq!(ns, neighbors(&base, spec), "{}", platform.name());
+                for n in &ns {
+                    assert_ne!(*n, base);
+                    legal::check(n, spec)
+                        .unwrap_or_else(|e| panic!("{}: illegal neighbor {}: {e}", platform.name(), n.canon()));
+                }
+                // no duplicates
+                let mut keys: Vec<String> = ns.iter().map(|s| s.canon()).collect();
+                let total = keys.len();
+                keys.sort();
+                keys.dedup();
+                assert_eq!(keys.len(), total, "{}: duplicate neighbors", platform.name());
+            }
+        }
+    }
+
+    #[test]
+    fn metal_tile_neighborhood_is_onchip_filtered() {
+        // 32 KiB of threadgroup memory excludes the 128-wide tiles
+        let spec = crate::platform::metal::m4_max();
+        let tiles = lever_values(&spec, &Schedule::naive(), Lever::Tile);
+        assert!(!tiles.is_empty());
+        for t in &tiles {
+            assert!(t.tile.onchip_bytes() <= spec.onchip_bytes);
+            assert!(t.tile.bm < 128, "oversized tile {} survived the filter", t.canon());
+        }
+    }
+
+    #[test]
+    fn random_legal_and_mutate_stay_legal_on_every_platform() {
+        for platform in registry().platforms() {
+            let spec = platform.spec();
+            let mut rng = Pcg::seed(0xF17E | crate::util::rng::fnv1a(platform.name().as_bytes()));
+            let mut s = Schedule::naive();
+            for _ in 0..200 {
+                let r = random_legal(spec, &mut rng);
+                legal::check(&r, spec).unwrap();
+                s = mutate(&s, spec, &mut rng);
+                legal::check(&s, spec).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_of_legal_parents_is_legal_per_field() {
+        // the assumption crossover rests on: legality is per-field, so
+        // any field-wise mix of legal parents is legal.  Pin it by
+        // exhaustively mixing random legal parents on every platform.
+        for platform in registry().platforms() {
+            let spec = platform.spec();
+            let mut rng = Pcg::seed(0xC0550);
+            for _ in 0..300 {
+                let a = random_legal(spec, &mut rng);
+                let b = random_legal(spec, &mut rng);
+                let c = crossover(&a, &b, &mut rng);
+                legal::check(&c, spec).unwrap_or_else(|e| {
+                    panic!(
+                        "{}: crossover of legal parents produced illegal child {} (parents {} / {}): {e}",
+                        platform.name(),
+                        c.canon(),
+                        a.canon(),
+                        b.canon()
+                    )
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! The tune driver: run a strategy over a suite, store-cached.
+//!
+//! One [`TuneOutcome`] per (platform, strategy, problem) is cached in
+//! the process result store under its own `kforge-tunekey` key kind:
+//! schema version + the compile-time pipeline fingerprint + the full
+//! platform spec hash + frontend + strategy/budget/patience/seed/
+//! evidence knobs + the perf-graph structural hash.  Worker count is
+//! deliberately excluded — candidate evaluation is pure, so pool size
+//! never changes a result (property-pinned in `rust/tests/store.rs`).
+//!
+//! Serialization is bit-exact: the three cost f64s are stored as
+//! IEEE-754 bit patterns and the schedule as its all-integer canonical
+//! line, so a warm `search_frontier_*` render is byte-identical to a
+//! cold one — the same guarantee campaign results carry.
+
+use super::{strategy_by_name, Budget, CostOracle, StrategyRef};
+use crate::platform::PlatformRef;
+use crate::sched::Schedule;
+use crate::store::{self, key as storekey, CacheStats, JobKey, Store, STORE_SCHEMA};
+use crate::util::rng::{fnv1a, Pcg};
+use crate::util::stats;
+use crate::workloads::{Problem, Suite};
+use anyhow::{bail, Context, Result};
+
+/// Magic first line of every tune key — what keeps this key kind
+/// textually disjoint from job keys.
+pub const TUNE_MAGIC: &str = "kforge-tunekey v1";
+
+const TUNE_RESULT_END: &str = "end kforge-tune-result";
+
+/// One autotuning run: platform, strategy and budget knobs.
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    pub platform: PlatformRef,
+    pub strategy: StrategyRef,
+    /// Max oracle evaluations per problem.
+    pub budget: usize,
+    /// Early-stop after this many stale rounds.
+    pub patience: usize,
+    pub seed: u64,
+    /// Worker threads for candidate evaluation (never affects results).
+    pub workers: usize,
+    /// Re-rank near-tied frontiers with profiler `Evidence` from the
+    /// platform's registered frontend.
+    pub use_evidence: bool,
+}
+
+impl TuneConfig {
+    /// Defaults: beam strategy, the platform's worker-pool size,
+    /// evidence re-rank on.
+    pub fn new(platform: PlatformRef) -> TuneConfig {
+        TuneConfig {
+            workers: platform.default_workers(),
+            platform,
+            strategy: strategy_by_name("beam").expect("builtin beam strategy"),
+            budget: 160,
+            patience: 3,
+            seed: 0x7E5E,
+            use_evidence: true,
+        }
+    }
+}
+
+/// The autotuner's verdict on one problem.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub problem_id: String,
+    pub strategy: &'static str,
+    /// Noise-free simulated seconds of the naive schedule.
+    pub naive_s: f64,
+    /// ... of the platform's expert schedule.
+    pub expert_s: f64,
+    /// ... of the best schedule search found (≤ `naive_s` always —
+    /// naive seeds every population, with an explicit fallback).
+    pub tuned_s: f64,
+    pub schedule: Schedule,
+    /// Oracle evaluations spent.
+    pub evals: usize,
+}
+
+impl TuneOutcome {
+    pub fn speedup_vs_naive(&self) -> f64 {
+        self.naive_s / self.tuned_s.max(1e-300)
+    }
+
+    pub fn le_naive(&self) -> bool {
+        self.tuned_s <= self.naive_s
+    }
+
+    pub fn le_expert(&self) -> bool {
+        self.tuned_s <= self.expert_s
+    }
+}
+
+/// A full tune run over a suite.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub platform: &'static str,
+    pub strategy: &'static str,
+    pub outcomes: Vec<TuneOutcome>,
+    /// Tune-cache counters for this run (all zeros when the store is
+    /// disabled, mirroring campaign semantics).
+    pub cache: CacheStats,
+}
+
+impl TuneReport {
+    pub fn count_le_naive(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.le_naive()).count()
+    }
+
+    pub fn count_le_expert(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.le_expert()).count()
+    }
+
+    /// The printed, golden-pinned acceptance lines: the ≤naive and
+    /// ≤expert fractions plus the geomean speedup over naive.
+    pub fn summary(&self) -> String {
+        let n = self.outcomes.len();
+        if n == 0 {
+            return "no problems tuned (suite empty after the platform filter)\n".to_string();
+        }
+        let speedups: Vec<f64> = self.outcomes.iter().map(|o| o.speedup_vs_naive()).collect();
+        format!(
+            "autotuned<=naive: {}/{} ({:.1}%)\nautotuned<=expert: {}/{} ({:.1}%)\ngeomean speedup vs naive: {:.3}x\n",
+            self.count_le_naive(),
+            n,
+            100.0 * self.count_le_naive() as f64 / n as f64,
+            self.count_le_expert(),
+            n,
+            100.0 * self.count_le_expert() as f64 / n as f64,
+            stats::geomean(&speedups),
+        )
+    }
+}
+
+/// The canonical tune key for one (config, problem).
+pub fn tune_key(cfg: &TuneConfig, problem: &Problem) -> JobKey {
+    let spec = cfg.platform.spec();
+    let text = format!(
+        "{TUNE_MAGIC}\nschema {}\npipeline {:016x}\nplatform {} spec {:016x} frontend {}\nstrategy {} budget {} patience {} seed {:016x} evidence {}\nproblem {} level {:?} perf {:016x}",
+        STORE_SCHEMA,
+        storekey::pipeline_fingerprint(),
+        cfg.platform.name(),
+        storekey::spec_hash(spec),
+        cfg.platform.profiler_frontend().name(),
+        cfg.strategy.name(),
+        cfg.budget,
+        cfg.patience,
+        cfg.seed,
+        cfg.use_evidence,
+        problem.id,
+        problem.level,
+        storekey::graph_fingerprint(&problem.perf_graph),
+    );
+    JobKey::from_text(text)
+}
+
+// bit-exact f64 round trip: the store's shared helpers, so tune
+// entries and campaign entries can never drift formats
+use crate::store::cache::parse_bits;
+use crate::store::key::bits;
+
+/// Bit-exact tune-result serialization (the blob payload).
+pub fn serialize_tune(r: &TuneOutcome) -> String {
+    format!(
+        "problem_id {}\nstrategy {}\nnaive_s {}\nexpert_s {}\ntuned_s {}\nevals {}\nschedule {}\n{TUNE_RESULT_END}",
+        r.problem_id,
+        r.strategy,
+        bits(r.naive_s),
+        bits(r.expert_s),
+        bits(r.tuned_s),
+        r.evals,
+        r.schedule.canon(),
+    )
+}
+
+/// Strict inverse of [`serialize_tune`]: any missing field, unknown
+/// strategy, malformed number or absent trailer is an error (= a
+/// miss, recomputed).
+pub fn parse_tune(text: &str) -> Result<TuneOutcome> {
+    let mut lines = text.lines();
+    let mut field = |name: &str| -> Result<String> {
+        let line = lines.next().with_context(|| format!("tune entry truncated before {name}"))?;
+        line.strip_prefix(name)
+            .and_then(|rest| rest.strip_prefix(' '))
+            .map(|v| v.to_string())
+            .with_context(|| format!("expected {name:?} line, got {line:?}"))
+    };
+    let problem_id = field("problem_id")?;
+    // resolve through the registry so the name is the strategy's own
+    // static str; an unregistered strategy means a stale entry
+    let strategy = strategy_by_name(&field("strategy")?)?.name();
+    let naive_s = parse_bits(&field("naive_s")?)?;
+    let expert_s = parse_bits(&field("expert_s")?)?;
+    let tuned_s = parse_bits(&field("tuned_s")?)?;
+    let evals: usize = field("evals")?.parse().context("bad evals count")?;
+    let schedule = Schedule::from_canon(&field("schedule")?)?;
+    match lines.next() {
+        Some(TUNE_RESULT_END) => {}
+        other => bail!("missing tune trailer (got {other:?})"),
+    }
+    if lines.next().is_some() {
+        bail!("trailing data after tune trailer");
+    }
+    Ok(TuneOutcome { problem_id, strategy, naive_s, expert_s, tuned_s, schedule, evals })
+}
+
+/// Tune one problem (no store involved).  Deterministic in
+/// (config, problem) alone; the worker count only parallelizes the
+/// pure evaluations.
+pub fn tune_problem(cfg: &TuneConfig, problem: &Problem) -> TuneOutcome {
+    let spec = cfg.platform.spec();
+    let mut oracle = CostOracle::new(spec, &problem.perf_graph).with_workers(cfg.workers);
+    if cfg.use_evidence {
+        oracle = oracle.with_evidence(cfg.platform.profiler_frontend());
+    }
+    let naive_s = oracle.cost(&Schedule::naive());
+    let expert_s = oracle.cost(&cfg.platform.expert_schedule());
+    let mut budget = Budget::new(cfg.budget, cfg.patience);
+    let mut rng = Pcg::new(
+        cfg.seed ^ fnv1a(cfg.platform.name().as_bytes()),
+        fnv1a(problem.id.as_bytes()),
+    );
+    let out = cfg.strategy.search(&oracle, &mut budget, &mut rng);
+    // naive seeds every population, but a pathologically small budget
+    // can stop a search before it scores anything: never report a
+    // schedule worse than the untuned program
+    let (schedule, tuned_s) = if out.best.cost_s <= naive_s {
+        (out.best.schedule.clone(), out.best.cost_s)
+    } else {
+        (Schedule::naive(), naive_s)
+    };
+    TuneOutcome {
+        problem_id: problem.id.clone(),
+        strategy: cfg.strategy.name(),
+        naive_s,
+        expert_s,
+        tuned_s,
+        schedule,
+        evals: out.visited.len(),
+    }
+}
+
+/// Tune a suite against an explicit store: consult before search,
+/// write back after.  Problems the platform cannot run are filtered
+/// exactly like campaigns filter them.
+pub fn tune_suite_with(store: &Store, cfg: &TuneConfig, suite: &Suite) -> TuneReport {
+    let spec = cfg.platform.spec();
+    let filtered = suite.supported_on(spec);
+    let mut outcomes = Vec::with_capacity(filtered.len());
+    let mut cache = CacheStats::default();
+    for problem in filtered.problems.iter() {
+        let key = tune_key(cfg, problem);
+        // parse inside the lookup so a corrupt payload is a miss at
+        // every counting level (process counters included), exactly
+        // like a corrupt TaskResult entry
+        if let Some((r, bytes)) = store.get_blob_checked(&key, parse_tune) {
+            cache.hits += 1;
+            cache.bytes_read += bytes;
+            outcomes.push(r);
+            continue;
+        }
+        let r = tune_problem(cfg, problem);
+        if store.enabled() {
+            cache.misses += 1;
+            cache.bytes_written += store.put_blob(&key, &serialize_tune(&r));
+        }
+        outcomes.push(r);
+    }
+    TuneReport {
+        platform: cfg.platform.name(),
+        strategy: cfg.strategy.name(),
+        outcomes,
+        cache,
+    }
+}
+
+/// [`tune_suite_with`] against the process-wide store ([`store::global`]
+/// — a pass-through unless the CLI configured one).
+pub fn tune_suite(cfg: &TuneConfig, suite: &Suite) -> TuneReport {
+    tune_suite_with(store::global(), cfg, suite)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::by_name;
+
+    fn cfg() -> TuneConfig {
+        let mut c = TuneConfig::new(by_name("cuda").unwrap());
+        c.budget = 96;
+        c
+    }
+
+    fn sample_outcome() -> TuneOutcome {
+        let suite = Suite::sample(1);
+        let mut c = cfg();
+        c.budget = 48;
+        tune_problem(&c, &suite.problems[0])
+    }
+
+    fn assert_bit_identical(a: &TuneOutcome, b: &TuneOutcome) {
+        assert_eq!(a.problem_id, b.problem_id);
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.naive_s.to_bits(), b.naive_s.to_bits());
+        assert_eq!(a.expert_s.to_bits(), b.expert_s.to_bits());
+        assert_eq!(a.tuned_s.to_bits(), b.tuned_s.to_bits());
+        assert_eq!(a.schedule, b.schedule);
+        assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn tune_serialization_is_bit_exact_and_strict() {
+        let r = sample_outcome();
+        let text = serialize_tune(&r);
+        assert_bit_identical(&parse_tune(&text).unwrap(), &r);
+        // truncation at every interior line boundary fails
+        for (i, _) in text.match_indices('\n') {
+            assert!(parse_tune(&text[..i]).is_err(), "truncated at byte {i} parsed");
+        }
+        assert!(parse_tune(&text.replace("strategy beam", "strategy vibes")).is_err());
+        assert!(parse_tune(&format!("{text}\ntrailing")).is_err());
+        assert!(parse_tune("").is_err());
+    }
+
+    #[test]
+    fn tune_key_covers_every_knob() {
+        let suite = Suite::sample(1);
+        let problem = &suite.problems[0];
+        let base = tune_key(&cfg(), problem);
+        assert!(base.text.starts_with(TUNE_MAGIC));
+        assert!(base.text.contains(&format!("schema {STORE_SCHEMA}")));
+        let mutations: Vec<Box<dyn Fn(&mut TuneConfig)>> = vec![
+            Box::new(|c| c.strategy = strategy_by_name("evolve").unwrap()),
+            Box::new(|c| c.budget += 1),
+            Box::new(|c| c.patience += 1),
+            Box::new(|c| c.seed ^= 1),
+            Box::new(|c| c.use_evidence = false),
+            Box::new(|c| c.platform = by_name("rocm").unwrap()),
+        ];
+        for (i, m) in mutations.iter().enumerate() {
+            let mut c = cfg();
+            m(&mut c);
+            assert_ne!(tune_key(&c, problem).hex(), base.hex(), "mutation {i} did not flip the key");
+        }
+        // worker count deliberately does NOT flip the key
+        let mut c = cfg();
+        c.workers = 16;
+        assert_eq!(tune_key(&c, problem).hex(), base.hex());
+        // a different problem flips it
+        let other = &Suite::sample(2).problems[1];
+        assert_ne!(tune_key(&cfg(), other).hex(), base.hex());
+    }
+
+    #[test]
+    fn tune_problem_never_worse_than_naive_and_reaches_expert_sometimes() {
+        let suite = Suite::sample(2); // 6 problems
+        let mut c = cfg();
+        c.budget = 320; // enough beam rounds to stack 3+ lever moves
+        let mut beats_expert = 0;
+        for p in suite.problems.iter() {
+            let r = tune_problem(&c, p);
+            assert!(r.le_naive(), "{}: tuned {} > naive {}", p.id, r.tuned_s, r.naive_s);
+            assert!(r.evals > 0 && r.evals <= c.budget);
+            crate::sched::legal::check(&r.schedule, c.platform.spec()).unwrap();
+            if r.le_expert() {
+                beats_expert += 1;
+            }
+        }
+        assert!(beats_expert > 0, "beam at budget 320 should match the expert somewhere");
+    }
+
+    #[test]
+    fn tune_suite_caches_and_report_summarizes() {
+        let suite = Suite::sample(1); // 3 problems
+        let store = Store::memory();
+        let c = cfg();
+        let cold = tune_suite_with(&store, &c, &suite);
+        assert_eq!(cold.cache.misses, 3);
+        assert_eq!(cold.cache.hits, 0);
+        let warm = tune_suite_with(&store, &c, &suite);
+        assert_eq!(warm.cache.hits, 3);
+        assert_eq!(warm.cache.misses, 0);
+        for (a, b) in cold.outcomes.iter().zip(&warm.outcomes) {
+            assert_bit_identical(a, b);
+        }
+        let s = warm.summary();
+        assert!(s.contains("autotuned<=naive: 3/3 (100.0%)"), "{s}");
+        assert!(s.contains("autotuned<=expert:"), "{s}");
+        // disabled store: zero counters, same outcomes
+        let off = tune_suite_with(&Store::disabled(), &c, &suite);
+        assert_eq!(off.cache, CacheStats::default());
+        for (a, b) in cold.outcomes.iter().zip(&off.outcomes) {
+            assert_bit_identical(a, b);
+        }
+    }
+}

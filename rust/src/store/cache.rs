@@ -70,7 +70,9 @@ fn parse_level(s: &str) -> Result<Level> {
     })
 }
 
-fn parse_bits(s: &str) -> Result<f64> {
+/// Strict inverse of `key::bits` — the one f64 bit-pattern parser every
+/// stored object kind shares.
+pub(crate) fn parse_bits(s: &str) -> Result<f64> {
     let raw = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bits {s:?}"))?;
     Ok(f64::from_bits(raw))
 }
@@ -173,9 +175,11 @@ pub fn serialize_entry(key: &JobKey, r: &TaskResult) -> String {
     )
 }
 
-/// Parse an entry *for a specific key*: the stored key text must match
-/// byte-for-byte, so a digest collision is an error (= a miss).
-pub fn parse_entry(data: &str, key: &JobKey) -> Result<TaskResult> {
+/// Strip the shared entry envelope (magic, content address, verified
+/// key text) and return the payload body.  The stored key text must
+/// match byte-for-byte, so a digest collision is an error (= a miss)
+/// for every object kind.
+fn parse_envelope<'a>(data: &'a str, key: &JobKey) -> Result<&'a str> {
     let rest = data
         .strip_prefix(ENTRY_MAGIC)
         .and_then(|r| r.strip_prefix('\n'))
@@ -205,7 +209,51 @@ pub fn parse_entry(data: &str, key: &JobKey) -> Result<TaskResult> {
     }
     // the prefix equals key.text (valid UTF-8) and byte len is '\n',
     // so len + 1 is a char boundary
-    parse_result(&rest[len + 1..])
+    Ok(&rest[len + 1..])
+}
+
+/// Parse a result entry *for a specific key*.
+pub fn parse_entry(data: &str, key: &JobKey) -> Result<TaskResult> {
+    parse_result(parse_envelope(data, key)?)
+}
+
+const BLOB_END: &str = "end kforge-blob";
+
+/// Serialize a raw-text object entry — the second stored kind, used
+/// for non-`TaskResult` key kinds (the schedule autotuner's tune
+/// results).  Same envelope as [`serialize_entry`], with the payload
+/// length-prefixed and trailed so truncation is always detectable.
+pub fn serialize_blob_entry(key: &JobKey, payload: &str) -> String {
+    format!(
+        "{ENTRY_MAGIC}\nkey {}\nkeytext {}\n{}\nblob {}\n{}\n{BLOB_END}\n",
+        key.hex(),
+        key.text.len(),
+        key.text,
+        payload.len(),
+        payload,
+    )
+}
+
+/// Strict inverse of [`serialize_blob_entry`]: envelope verified, then
+/// the payload length and trailer must match exactly.
+pub fn parse_blob_entry(data: &str, key: &JobKey) -> Result<String> {
+    let body = parse_envelope(data, key)?;
+    let (len_line, rest) = body.split_once('\n').context("entry truncated at blob line")?;
+    let len: usize = len_line
+        .strip_prefix("blob ")
+        .and_then(|n| n.parse().ok())
+        .context("bad blob length")?;
+    let trailer = format!("\n{BLOB_END}\n");
+    let expected = len.checked_add(trailer.len()).context("absurd blob length")?;
+    let bytes = rest.as_bytes();
+    if bytes.len() != expected {
+        bail!("blob length mismatch ({} bytes, expected {expected})", bytes.len());
+    }
+    if &bytes[len..] != trailer.as_bytes() {
+        bail!("missing blob trailer");
+    }
+    // the byte at `len` is the trailer's '\n', so `len` is a char boundary
+    Ok(rest[..len].to_string())
 }
 
 struct CacheSlot {
@@ -213,9 +261,13 @@ struct CacheSlot {
     result: TaskResult,
 }
 
-/// In-memory + optional on-disk content-addressed store.
+/// In-memory + optional on-disk content-addressed store.  Two object
+/// kinds share the address space and the disk directory: `TaskResult`
+/// entries and raw-text blob entries (tune results); their key texts
+/// start with different magic lines, so the kinds can never collide.
 pub struct Cache {
     mem: Mutex<HashMap<String, CacheSlot>>,
+    blob_mem: Mutex<HashMap<String, (String, String)>>,
     dir: Option<PathBuf>,
     counters: StatCounters,
 }
@@ -225,6 +277,7 @@ impl Cache {
     pub fn memory() -> Cache {
         Cache {
             mem: Mutex::new(HashMap::new()),
+            blob_mem: Mutex::new(HashMap::new()),
             dir: None,
             counters: StatCounters::new(),
         }
@@ -237,6 +290,7 @@ impl Cache {
             .with_context(|| format!("creating cache dir {}", objects.display()))?;
         Ok(Cache {
             mem: Mutex::new(HashMap::new()),
+            blob_mem: Mutex::new(HashMap::new()),
             dir: Some(dir.to_path_buf()),
             counters: StatCounters::new(),
         })
@@ -323,6 +377,99 @@ impl Cache {
         }
     }
 
+    /// Look up a raw-text blob by key.  Same contract as [`Cache::get`]:
+    /// the result plus bytes read from disk, any anomaly a logged miss.
+    pub fn get_blob(&self, key: &JobKey) -> Option<(String, u64)> {
+        self.get_blob_checked(key, |payload| Ok(payload.to_string()))
+    }
+
+    /// Like [`Cache::get_blob`], but the caller's `parse` validates the
+    /// payload *before* the lookup counts as a hit — mirroring how
+    /// [`Cache::get`] fully parses a `TaskResult` entry before recording
+    /// one.  A payload the caller cannot parse is a corrupt entry: a
+    /// logged miss in the process counters, never a hit followed by a
+    /// silent recompute.
+    pub fn get_blob_checked<T>(
+        &self,
+        key: &JobKey,
+        parse: impl Fn(&str) -> Result<T>,
+    ) -> Option<(T, u64)> {
+        let hex = key.hex();
+        {
+            let mem = self.blob_mem.lock().unwrap();
+            if let Some((keytext, payload)) = mem.get(&hex) {
+                if *keytext == key.text {
+                    if let Ok(value) = parse(payload) {
+                        self.counters.record_hit(0);
+                        return Some((value, 0));
+                    }
+                    // unparseable memory payload: fall through as a miss
+                }
+                // in-memory digest collision: fall through as a miss
+            }
+        }
+        if let Some(path) = self.object_path(&hex) {
+            match std::fs::read_to_string(&path) {
+                Ok(data) => {
+                    let parsed = parse_blob_entry(&data, key)
+                        .and_then(|payload| parse(&payload).map(|value| (payload, value)));
+                    match parsed {
+                        Ok((payload, value)) => {
+                            let bytes = data.len() as u64;
+                            self.counters.record_hit(bytes);
+                            self.blob_mem
+                                .lock()
+                                .unwrap()
+                                .insert(hex, (key.text.clone(), payload));
+                            return Some((value, bytes));
+                        }
+                        Err(e) => {
+                            eprintln!(
+                                "[store] corrupt cache entry {} ({e:#}); treating as a miss",
+                                path.display()
+                            );
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    eprintln!("[store] unreadable cache entry {} ({e}); treating as a miss", path.display());
+                }
+            }
+        }
+        self.counters.record_miss();
+        None
+    }
+
+    /// Store a raw-text blob.  Same contract as [`Cache::put`]: returns
+    /// bytes written to disk, disk failures logged and never fatal.
+    pub fn put_blob(&self, key: &JobKey, payload: &str) -> u64 {
+        let hex = key.hex();
+        self.blob_mem
+            .lock()
+            .unwrap()
+            .insert(hex.clone(), (key.text.clone(), payload.to_string()));
+        let Some(path) = self.object_path(&hex) else {
+            return 0;
+        };
+        let entry = serialize_blob_entry(key, payload);
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        let written = std::fs::write(&tmp, &entry)
+            .and_then(|()| std::fs::rename(&tmp, &path))
+            .map(|()| entry.len() as u64);
+        match written {
+            Ok(bytes) => {
+                self.counters.record_write(bytes);
+                bytes
+            }
+            Err(e) => {
+                eprintln!("[store] failed to persist cache entry {} ({e})", path.display());
+                let _ = std::fs::remove_file(&tmp);
+                0
+            }
+        }
+    }
+
     /// All on-disk objects as (path, bytes, modified-time).
     pub fn disk_entries(&self) -> Result<Vec<(PathBuf, u64, std::time::SystemTime)>> {
         let Some(dir) = self.dir.as_ref() else {
@@ -348,6 +495,7 @@ impl Cache {
     /// of disk objects removed.
     pub fn clear(&self) -> Result<usize> {
         self.mem.lock().unwrap().clear();
+        self.blob_mem.lock().unwrap().clear();
         let mut removed = 0;
         for (path, _, _) in self.disk_entries()? {
             std::fs::remove_file(&path)?;
@@ -573,6 +721,69 @@ mod tests {
         assert_eq!(cache.clear().unwrap(), 1);
         assert_eq!(cache.disk_entries().unwrap().len(), 0);
         assert!(cache.snapshot().evictions >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn blob_key(tag: &str) -> JobKey {
+        JobKey::from_text(format!("kforge-tunekey v-test\ntag {tag}\n"))
+    }
+
+    #[test]
+    fn blob_entry_roundtrip_truncation_and_collision() {
+        let key = blob_key("rt");
+        let payload = "problem_id x\ntuned_s 3ff0000000000000\n";
+        let entry = serialize_blob_entry(&key, payload);
+        assert_eq!(parse_blob_entry(&entry, &key).unwrap(), payload);
+        // wrong key = collision = error
+        assert!(parse_blob_entry(&entry, &blob_key("other")).is_err());
+        // a result entry never parses as a blob and vice versa
+        assert!(parse_entry(&entry, &key).is_err());
+        let result_entry = serialize_entry(&sample_key(), &sample_result());
+        assert!(parse_blob_entry(&result_entry, &sample_key()).is_err());
+        // truncation anywhere is an error, never a partial payload
+        for cut in [5, entry.len() / 2, entry.len() - 1] {
+            assert!(parse_blob_entry(&entry[..cut], &key).is_err(), "cut at {cut} parsed");
+        }
+        // trailing garbage is an error too
+        assert!(parse_blob_entry(&format!("{entry}x"), &key).is_err());
+        // a lying length must miss, not panic — including one pointing
+        // into the middle of a multi-byte char
+        let uni = serialize_blob_entry(&key, "héllo∀");
+        assert!(parse_blob_entry(&uni, &key).is_ok());
+        let lied = uni.replace(&format!("blob {}", "héllo∀".len()), "blob 2");
+        assert!(parse_blob_entry(&lied, &key).is_err());
+    }
+
+    #[test]
+    fn blob_cache_roundtrip_memory_and_disk() {
+        let key = blob_key("cache");
+        let cache = Cache::memory();
+        assert!(cache.get_blob(&key).is_none());
+        cache.put_blob(&key, "payload one");
+        assert_eq!(cache.get_blob(&key).unwrap(), ("payload one".to_string(), 0));
+        // blobs and results do not shadow each other in memory
+        assert!(cache.get(&key).is_none());
+
+        let dir = std::env::temp_dir().join(format!("kforge_cache_blob_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let disk = Cache::at(&dir).unwrap();
+            assert!(disk.put_blob(&key, "persisted") > 0);
+        }
+        let fresh = Cache::at(&dir).unwrap();
+        let (payload, bytes) = fresh.get_blob(&key).unwrap();
+        assert_eq!(payload, "persisted");
+        assert!(bytes > 0);
+        // vandalized blob objects degrade to misses
+        let path = dir.join("objects").join(key.hex());
+        std::fs::write(&path, "garbage").unwrap();
+        let cold = Cache::at(&dir).unwrap();
+        assert!(cold.get_blob(&key).is_none());
+        // clear drops the blob memory tier too
+        let again = Cache::at(&dir).unwrap();
+        again.put_blob(&key, "back");
+        again.clear().unwrap();
+        assert!(again.get_blob(&key).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -37,8 +37,13 @@ use std::sync::OnceLock;
 
 /// Bump on any semantic change to the synthesis loop that the pipeline
 /// fingerprint's source set does not cover (verifier, simulator,
-/// agents, coordinator).  Every bump invalidates all stored results.
-pub const STORE_SCHEMA: u32 = 1;
+/// agents, coordinator, search strategies).  Every bump invalidates
+/// all stored results.
+///
+/// v2: the schedule autotuner PR — a new `BaselineKind::Autotuned`
+/// campaign arm and a second stored object kind (`kforge-tunekey` tune
+/// results, see `crate::search::tune`).
+pub const STORE_SCHEMA: u32 = 2;
 
 /// Second FNV-1a chain over domain-separated input, so the digest is
 /// 128 bits (two independent 64-bit chains), not one chain reused.
@@ -78,8 +83,18 @@ pub fn pipeline_fingerprint() -> u64 {
     })
 }
 
-fn bits(x: f64) -> String {
+/// Bit-exact f64 rendering (IEEE-754 pattern in hex) — the one format
+/// every stored f64 uses; `cache::parse_bits` is its inverse.
+pub(crate) fn bits(x: f64) -> String {
     format!("{:016x}", x.to_bits())
+}
+
+/// Structural hash over a full [`PlatformSpec`] (the derived `Debug`
+/// rendering carries every field).  Shared by the campaign job key,
+/// the tune key and the autotuned-baseline memo, so the three can
+/// never hash different representations of the same spec.
+pub fn spec_hash(spec: &PlatformSpec) -> u64 {
+    fnv1a(format!("{spec:?}").as_bytes())
 }
 
 fn bits3(xs: &[f64; 3]) -> String {
@@ -144,6 +159,15 @@ impl JobKey {
     pub fn hex(&self) -> String {
         format!("{:016x}{:016x}", self.digest[0], self.digest[1])
     }
+
+    /// A key for a non-job object kind (e.g. the schedule autotuner's
+    /// `kforge-tunekey` results).  The caller's text must begin with
+    /// its own magic line so key *kinds* can never collide textually
+    /// with job keys — the full text is still verified on every hit,
+    /// so even a digest collision across kinds degrades to a miss.
+    pub fn from_text(text: String) -> JobKey {
+        JobKey::of_text(text)
+    }
 }
 
 /// The per-campaign part of the key, computed once and reused for every
@@ -167,7 +191,7 @@ impl KeyScope {
             cfg.use_reference,
             cfg.baseline,
             cfg.platform.name(),
-            fnv1a(format!("{spec:?}").as_bytes()),
+            spec_hash(spec),
             cfg.platform,
             frontend.name(),
             cfg.platform.reference_transfer(),

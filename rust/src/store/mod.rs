@@ -129,6 +129,39 @@ impl Store {
         self.cache.put(key, result)
     }
 
+    /// Look up a raw-text object (the autotuner's `kforge-tunekey`
+    /// kind); `None` when disabled or absent.  Returns the payload plus
+    /// bytes read from disk (0 for memory hits).
+    pub fn get_blob(&self, key: &JobKey) -> Option<(String, u64)> {
+        if !self.enabled {
+            return None;
+        }
+        self.cache.get_blob(key)
+    }
+
+    /// [`Store::get_blob`] with caller-side payload validation: the
+    /// lookup only counts as a hit (in the process counters and the
+    /// returned value) when `parse` accepts the payload, so a corrupt
+    /// entry is a consistent miss at every counting level.
+    pub fn get_blob_checked<T>(
+        &self,
+        key: &JobKey,
+        parse: impl Fn(&str) -> Result<T>,
+    ) -> Option<(T, u64)> {
+        if !self.enabled {
+            return None;
+        }
+        self.cache.get_blob_checked(key, parse)
+    }
+
+    /// Store a raw-text object; returns bytes written to disk.
+    pub fn put_blob(&self, key: &JobKey, payload: &str) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        self.cache.put_blob(key, payload)
+    }
+
     /// Count a journal-restored job in the process-level counters.
     pub fn record_resumed(&self) {
         if self.enabled {

@@ -51,6 +51,12 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Arithmetic mean; panics on an empty slice (mirrors [`summarize`]).
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "mean(empty)");
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
 /// Geometric mean (speedup aggregation).
 pub fn geomean(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
@@ -93,6 +99,13 @@ mod tests {
         assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
         assert_eq!(percentile_sorted(&xs, 100.0), 3.0);
         assert_eq!(percentile_sorted(&xs, 50.0), 2.0);
+    }
+
+    #[test]
+    fn mean_matches_summary_mean() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), summarize(&xs).mean);
+        assert_eq!(mean(&[7.0]), 7.0);
     }
 
     #[test]

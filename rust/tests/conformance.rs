@@ -163,10 +163,17 @@ fn renderers_deterministic_and_golden_round_trip() {
     let n_platforms = kforge::platform::registry().len();
     assert_eq!(
         first.len(),
-        10 + n_platforms,
-        "manifest + nine paper artifacts + one census per registered platform"
+        10 + 2 * n_platforms,
+        "manifest + nine paper artifacts + one census and one search frontier per registered platform"
     );
     assert_eq!(first[0].name, "manifest");
+    for p in kforge::platform::registry().platforms() {
+        assert!(
+            first.iter().any(|a| a.name == format!("search_frontier_{}", p.name())),
+            "missing search frontier artifact for {}",
+            p.name()
+        );
+    }
     assert!(first[0].text.contains("scale: Quick(2)"), "{}", first[0].text);
 
     // (a) determinism: a second in-process render is byte-identical —

@@ -270,6 +270,70 @@ fn prop_frontends_agree_on_dominant_bottleneck() {
 }
 
 #[test]
+fn prop_search_candidates_legal_on_every_registered_platform() {
+    // ISSUE 5 acceptance: every candidate any registered strategy
+    // emits passes legal::check on the spec it searched — swept over
+    // every (platform, strategy) pair on curated problems
+    use kforge::search::{strategies, Budget, CostOracle};
+    let suite = kforge::workloads::Suite::sample(2);
+    for platform in kforge::platform::registry().platforms() {
+        let spec = platform.spec();
+        for strategy in strategies() {
+            for p in suite.problems.iter().filter(|p| p.supported_on(spec)).take(3) {
+                let oracle = CostOracle::new(spec, &p.perf_graph);
+                let mut budget = Budget::new(120, 2);
+                let mut rng = Pcg::seed(0x5EA7C4);
+                let out = strategy.search(&oracle, &mut budget, &mut rng);
+                assert!(!out.visited.is_empty(), "{}/{}", platform.name(), strategy.name());
+                assert!(out.visited.len() <= 120, "{}/{} overdrew the budget", platform.name(), strategy.name());
+                for s in &out.visited {
+                    legal::check(s, spec).unwrap_or_else(|e| {
+                        panic!(
+                            "{}/{} on {}: illegal candidate {}: {e}",
+                            platform.name(),
+                            strategy.name(),
+                            p.id,
+                            s.canon()
+                        )
+                    });
+                }
+                assert!(out.best.cost_s.is_finite());
+                assert_eq!(out.best.schedule, out.frontier[0].schedule);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tuned_schedule_never_prices_above_naive() {
+    // the curated-suite acceptance invariant behind `kforge tune`'s
+    // nonzero exit: tuned <= naive on 100% of problems, per platform
+    // and per strategy
+    use kforge::search::{strategies, tune_problem, TuneConfig};
+    let suite = kforge::workloads::Suite::sample(2);
+    for platform in kforge::platform::registry().platforms() {
+        for strategy in strategies() {
+            let mut cfg = TuneConfig::new(platform.clone());
+            cfg.strategy = strategy.clone();
+            cfg.budget = 96;
+            for p in suite.problems.iter().filter(|p| p.supported_on(platform.spec())).take(3) {
+                let r = tune_problem(&cfg, p);
+                assert!(
+                    r.tuned_s <= r.naive_s,
+                    "{}/{} on {}: tuned {} > naive {}",
+                    platform.name(),
+                    strategy.name(),
+                    p.id,
+                    r.tuned_s,
+                    r.naive_s
+                );
+                legal::check(&r.schedule, platform.spec()).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_verification_deterministic_across_runs() {
     use kforge::agents::GenerationAgent;
     let suite = kforge::workloads::Suite::sample(4);

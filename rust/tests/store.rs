@@ -166,6 +166,121 @@ fn resume_after_simulated_kill_has_no_duplicated_or_missing_jobs() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ---------------------------------------------------------------------------
+// tune results: the ISSUE 5 acceptance properties
+// ---------------------------------------------------------------------------
+
+fn tune_cfg(workers: usize) -> kforge::search::TuneConfig {
+    let mut c = kforge::search::TuneConfig::new(kforge::platform::by_name("cuda").unwrap());
+    c.budget = 96;
+    c.workers = workers;
+    c
+}
+
+fn assert_tune_bit_identical(a: &kforge::search::TuneReport, b: &kforge::search::TuneReport) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.problem_id, y.problem_id);
+        assert_eq!(x.strategy, y.strategy);
+        assert_eq!(x.naive_s.to_bits(), y.naive_s.to_bits(), "{}", x.problem_id);
+        assert_eq!(x.expert_s.to_bits(), y.expert_s.to_bits(), "{}", x.problem_id);
+        assert_eq!(x.tuned_s.to_bits(), y.tuned_s.to_bits(), "{}", x.problem_id);
+        assert_eq!(x.schedule, y.schedule, "{}", x.problem_id);
+        assert_eq!(x.evals, y.evals, "{}", x.problem_id);
+    }
+}
+
+#[test]
+fn tune_bit_identical_across_worker_counts_and_store_temperature() {
+    use kforge::search::tune_suite_with;
+    let suite = Suite::sample(2); // 6 problems
+    // worker counts 1, 4, 16 against a disabled store: pure computation
+    let runs: Vec<kforge::search::TuneReport> = [1usize, 4, 16]
+        .iter()
+        .map(|&w| tune_suite_with(&Store::disabled(), &tune_cfg(w), &suite))
+        .collect();
+    assert_eq!(runs[0].outcomes.len(), 6);
+    for run in &runs[1..] {
+        assert_tune_bit_identical(&runs[0], run);
+    }
+    // disabled store reports all-zero counters
+    assert_eq!(runs[0].cache, kforge::store::CacheStats::default());
+
+    // warm vs cold: a memory store answers the second run entirely
+    // from cache, bit-identical to the cold computation
+    let store = Store::memory();
+    let cold = tune_suite_with(&store, &tune_cfg(4), &suite);
+    assert_eq!(cold.cache.misses, 6);
+    assert_eq!(cold.cache.hits, 0);
+    let warm = tune_suite_with(&store, &tune_cfg(1), &suite); // different workers: same keys
+    assert_eq!(warm.cache.hits, 6, "{:?}", warm.cache);
+    assert_eq!(warm.cache.misses, 0);
+    assert_tune_bit_identical(&runs[0], &cold);
+    assert_tune_bit_identical(&runs[0], &warm);
+}
+
+#[test]
+fn tune_disk_store_round_trips_and_tolerates_corruption() {
+    use kforge::search::tune_suite_with;
+    let suite = Suite::sample(1); // 3 problems
+    let dir = tmpdir("tune_disk");
+    let cold = {
+        let s = Store::at_dir(&dir, false).unwrap();
+        let r = tune_suite_with(&s, &tune_cfg(4), &suite);
+        assert_eq!(r.cache.misses, 3);
+        assert!(r.cache.bytes_written > 0, "disk store must persist tune entries");
+        r
+    };
+    // a fresh instance (fresh process model) answers from disk
+    let warm = {
+        let s = Store::at_dir(&dir, false).unwrap();
+        tune_suite_with(&s, &tune_cfg(4), &suite)
+    };
+    assert_eq!(warm.cache.hits, 3, "{:?}", warm.cache);
+    assert!(warm.cache.bytes_read > 0);
+    assert_tune_bit_identical(&cold, &warm);
+    // vandalize one object: it degrades to a recompute, bit-identical
+    let mut objects: Vec<PathBuf> = std::fs::read_dir(dir.join("objects"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    objects.sort();
+    assert_eq!(objects.len(), 3);
+    std::fs::write(&objects[0], b"not a cache entry").unwrap();
+    let repaired = {
+        let s = Store::at_dir(&dir, false).unwrap();
+        tune_suite_with(&s, &tune_cfg(4), &suite)
+    };
+    assert_eq!(repaired.cache.hits, 2, "{:?}", repaired.cache);
+    assert_eq!(repaired.cache.misses, 1);
+    assert_tune_bit_identical(&cold, &repaired);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tune_and_campaign_entries_share_a_store_without_collisions() {
+    // one --cache-dir serves both object kinds: a campaign and a tune
+    // run over the same problems coexist, and each warm pass answers
+    // fully from its own entries
+    use kforge::search::tune_suite_with;
+    let suite = Suite::sample(1); // 3 problems
+    let dir = tmpdir("tune_mixed");
+    {
+        let s = Store::at_dir(&dir, false).unwrap();
+        let c = cfg("mixed_store_prop");
+        let campaign_cold = run_campaign_with(&s, &suite, None, &c);
+        assert_eq!(campaign_cold.cache.misses, 6); // 2 personas × 3 problems
+        let tune_cold = tune_suite_with(&s, &tune_cfg(4), &suite);
+        assert_eq!(tune_cold.cache.misses, 3);
+        let campaign_warm = run_campaign_with(&s, &suite, None, &c);
+        assert_eq!(campaign_warm.cache.hits, 6, "{:?}", campaign_warm.cache);
+        let tune_warm = tune_suite_with(&s, &tune_cfg(4), &suite);
+        assert_eq!(tune_warm.cache.hits, 3, "{:?}", tune_warm.cache);
+        assert_tune_bit_identical(&tune_cold, &tune_warm);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn resume_with_untouched_journal_recomputes_nothing() {
     // the no-kill degenerate case: rerunning with --resume after a

@@ -178,6 +178,22 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an [`Error`] if a condition is false (the real
+/// crate's two forms: bare condition, or condition + format string).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +230,18 @@ mod tests {
         }
         assert_eq!(parse("42").unwrap(), 42);
         assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn ensure_both_forms() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x != 0);
+            ensure!(x < 10, "too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(0).unwrap_err().to_string().contains("condition failed"));
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
     }
 
     #[test]
