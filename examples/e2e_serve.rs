@@ -7,8 +7,9 @@
 //! 1. **numerically validates** every schedule variant against its
 //!    reference variant (real execution, real numerics — the same
 //!    check the verification pipeline performs in simulation);
-//! 2. **serves batched requests** round-robin across workloads,
-//!    reporting latency percentiles and throughput;
+//! 2. **serves batched requests** round-robin across workloads through
+//!    the `kforge::serve::Service` front end (admission control +
+//!    typed outcomes), reporting latency percentiles and throughput;
 //! 3. **times variant pairs** (naive vs tuned) with the paper's
 //!    100-run/10-warmup protocol and reports real speedups.
 //!
@@ -19,6 +20,7 @@
 //! ```
 
 use kforge::runtime::{PjrtRuntime, Registry};
+use kforge::serve::{AdmissionPolicy, Outcome, Priority, Service, Ticket};
 use kforge::util::stats;
 
 fn main() -> anyhow::Result<()> {
@@ -81,7 +83,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(failed, 0, "variant numerics must match");
 
     // ---- 2. serving loop -------------------------------------------------
-    println!("== serving 128 batched requests (round-robin) ==");
+    println!("== serving 128 batched requests (round-robin, Service front end) ==");
     // serve the reference variants (the tuned Pallas variants run under
     // interpret mode on CPU — structurally validated above, but their
     // wallclock is not representative; see the note at the end)
@@ -92,16 +94,32 @@ fn main() -> anyhow::Result<()> {
         .filter(|e| e.is_reference)
         .map(|e| e.key.clone())
         .collect();
-    let mut latencies = Vec::new();
+    anyhow::ensure!(!keys.is_empty(), "no reference artifacts in the registry");
+    // capacity covers every submission: the example demonstrates the
+    // request lifecycle, not load-shedding (kforge serve --synthetic
+    // exercises that)
+    let svc: Service<usize, f64> = Service::new(AdmissionPolicy::new(128));
+    let tickets: Vec<Ticket<f64>> =
+        (0..128usize).map(|i| svc.submit(Priority::Interactive, None, i)).collect();
+    svc.close();
     let t0 = std::time::Instant::now();
-    for i in 0..128usize {
+    // the PJRT executable cache is not Sync, so drain on this thread
+    svc.drain_inline(|&i| {
         let key = &keys[i % keys.len()];
         let inputs = rt.seeded_inputs(key, i as u64)?;
         let t = std::time::Instant::now();
         rt.execute(key, &inputs)?;
-        latencies.push(t.elapsed().as_secs_f64());
-    }
+        Ok(t.elapsed().as_secs_f64())
+    });
     let total = t0.elapsed().as_secs_f64();
+    println!("  {}", svc.stats_line());
+    let mut latencies = Vec::new();
+    for t in tickets {
+        match t.wait() {
+            (Outcome::Completed { .. }, Some(s)) => latencies.push(s),
+            (outcome, _) => anyhow::bail!("request resolved {}", outcome.label()),
+        }
+    }
     let s = stats::summarize(&latencies);
     println!(
         "  throughput: {:.1} req/s   latency ms p50={:.2} p95={:.2} p99={:.2}",

@@ -56,6 +56,11 @@
 //!   (bless/check with a cell-level differ), per-platform census
 //!   artifacts, and the entry points the differential KIR fuzzer and
 //!   synthetic workload suites hang off.
+//! - [`serve`] — the production serving tier: bounded two-lane request
+//!   queue, admission control with load-shedding and deadlines, a
+//!   seeded bursty load generator, the deterministic virtual-time
+//!   scenario engine behind `kforge serve --synthetic`, and the
+//!   real-time `Service` front end the artifact-replay path runs on.
 
 pub mod util;
 pub mod tensor;
@@ -75,6 +80,7 @@ pub mod store;
 pub mod metrics;
 pub mod harness;
 pub mod conformance;
+pub mod serve;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

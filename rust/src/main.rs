@@ -25,8 +25,18 @@
 //!                                   # paper artifacts for every platform
 //! kforge cache <stats|clear|gc> [--cache-dir DIR] [--max-bytes N]
 //!                                   # inspect / empty / bound the store
-//! kforge serve [--artifacts DIR] [--requests N] [--warmup N]
-//!                                   # PJRT request loop over real artifacts
+//! kforge serve --synthetic [--requests N] [--workers N] [--seed S]
+//!              [--queue-cap N] [--shed-depth N] [--deadline-ms MS]
+//!              [--warm K] [--gc-max-bytes N] [--json PATH]
+//!              [--cache-dir DIR] [--no-cache]
+//!                                   # deterministic bursty load test:
+//!                                   # admission control, deadlines and
+//!                                   # cache warming over the shared
+//!                                   # result store; exits nonzero when
+//!                                   # the p99 / shed-rate budgets fail
+//! kforge serve [--artifacts DIR] [--requests N] [--warmup N] [--json PATH]
+//!                                   # PJRT artifact replay through the
+//!                                   # same service front end
 //! kforge personas                   # the 8 calibrated personas, per platform
 //! ```
 //!
@@ -179,8 +189,12 @@ fn dispatch(args: &[String]) -> Result<()> {
             max_positionals: 1,
         },
         "serve" => FlagSpec {
-            value_flags: &["--artifacts", "--requests", "--warmup"],
-            bool_flags: &[],
+            value_flags: &[
+                "--artifacts", "--requests", "--warmup", "--workers", "--seed", "--queue-cap",
+                "--shed-depth", "--deadline-ms", "--warm", "--gc-max-bytes", "--json",
+                "--cache-dir",
+            ],
+            bool_flags: &["--synthetic", "--no-cache"],
             max_positionals: 0,
         },
         other => bail!(
@@ -188,7 +202,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         ),
     };
     cliflags::validate(cmd, rest, &spec)?;
-    if matches!(cmd, "run" | "tune" | "bench" | "conformance") {
+    if matches!(cmd, "run" | "tune" | "bench" | "conformance" | "serve") {
         configure_store(args)?;
     }
     match cmd {
@@ -666,12 +680,97 @@ fn cmd_conformance(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    use kforge::util::stats;
-    let dir = flag_value(args, "--artifacts").unwrap_or("artifacts");
     let requests: usize = flag_value(args, "--requests")
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(64);
+    if requests == 0 {
+        bail!("--requests must be at least 1");
+    }
+    if has_flag(args, "--synthetic") {
+        cmd_serve_synthetic(args, requests)
+    } else {
+        cmd_serve_replay(args, requests)
+    }
+}
+
+/// The load-test harness: seeded bursty traffic through the virtual-time
+/// scenario engine, real execution of every admitted distinct job over
+/// the shared store.  Exits nonzero when the declared p99 or shed-rate
+/// budget fails.
+fn cmd_serve_synthetic(args: &[String], requests: usize) -> Result<()> {
+    use kforge::serve;
+    let workers: usize = flag_value(args, "--workers")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let seed: u64 = flag_value(args, "--seed")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0x5EED);
+    let mut cfg = serve::ScenarioConfig::new(seed, requests, workers);
+    if let Some(v) = flag_value(args, "--queue-cap") {
+        cfg.queue_capacity = v.parse()?;
+        // follow capacity unless --shed-depth overrides below
+        cfg.shed_depth = cfg.queue_capacity;
+    }
+    if let Some(v) = flag_value(args, "--shed-depth") {
+        cfg.shed_depth = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--deadline-ms") {
+        cfg.load.deadline_ms = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--warm") {
+        cfg.warm_hottest = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--gc-max-bytes") {
+        cfg.gc_max_bytes = Some(v.parse()?);
+    }
+    if cfg.queue_capacity == 0 {
+        bail!("--queue-cap must be at least 1");
+    }
+    cfg.progress_every = 16;
+    let store = store::global();
+    println!(
+        "serve: synthetic load seed={seed} requests={requests} workers={workers} \
+         capacity={} shed_depth={} warm={} store={}",
+        cfg.queue_capacity,
+        cfg.shed_depth,
+        cfg.warm_hottest,
+        if store.enabled() { "on" } else { "off" }
+    );
+    let report = serve::run_scenario(store, &cfg);
+    let summary = serve::summarize(&cfg, &report);
+    print!("{}", summary.render_text());
+    if let Some(path) = flag_value(args, "--json") {
+        std::fs::write(path, summary.to_json("synthetic").to_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    if !summary.within_latency_budget() {
+        bail!(
+            "virtual p99 {:.2} ms exceeds the {:.1} ms budget",
+            summary.latency.map_or(0.0, |s| s.p99),
+            summary.p99_budget_ms
+        );
+    }
+    if !summary.within_shed_budget() {
+        bail!(
+            "shed rate {:.1}% exceeds the {:.1}% budget",
+            summary.shed_rate() * 100.0,
+            summary.shed_budget * 100.0
+        );
+    }
+    Ok(())
+}
+
+/// Artifact replay: compiled PJRT artifacts cycled through the
+/// real-time service front end on the calling thread (the runtime's
+/// executable cache is not `Sync`).
+fn cmd_serve_replay(args: &[String], requests: usize) -> Result<()> {
+    use kforge::serve::{self, Outcome, Priority};
+    use kforge::util::{json::Json, stats};
+    let dir = flag_value(args, "--artifacts").unwrap_or("artifacts");
     // the first request pays one-time compilation, which used to skew
     // p95/p99 badly at small --requests; warmup requests are measured
     // and reported separately, never in the percentile summary
@@ -679,29 +778,45 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(1);
-    if requests == 0 {
-        bail!("--requests must be at least 1");
-    }
     let registry = kforge::runtime::Registry::load(dir)
         .with_context(|| format!("loading artifact registry from {dir} (run `make artifacts`)"))?;
+    let keys = serve::replay_keys(&registry)?;
     let rt = kforge::runtime::PjrtRuntime::new(registry)?;
     println!("platform: {}", rt.platform());
     println!("artifacts: {}", rt.registry().entries.len());
-    let keys: Vec<String> = rt.registry().entries.iter().map(|e| e.key.clone()).collect();
-    let serve_one = |i: usize, latencies: &mut Vec<f64>| -> Result<()> {
-        let key = &keys[i % keys.len()];
+    let total = warmup + requests;
+    let svc: serve::Service<usize, f64> =
+        serve::Service::new(serve::AdmissionPolicy::new(total));
+    let tickets: Vec<serve::Ticket<f64>> =
+        (0..total).map(|i| svc.submit(Priority::Interactive, None, i)).collect();
+    svc.close();
+    let t0 = std::time::Instant::now();
+    svc.drain_inline(|&i| {
+        let key = serve::key_for_request(&keys, i);
         let inputs = rt.seeded_inputs(key, i as u64)?;
         let t = std::time::Instant::now();
         let out = rt.execute(key, &inputs)?;
-        latencies.push(t.elapsed().as_secs_f64());
         if i == 0 {
             println!("first request: {key} -> {} outputs", out.len());
         }
-        Ok(())
-    };
+        Ok(t.elapsed().as_secs_f64())
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", svc.stats_line());
     let mut warm_latencies = Vec::new();
-    for i in 0..warmup {
-        serve_one(i, &mut warm_latencies)?;
+    let mut latencies = Vec::new();
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            (Outcome::Completed { .. }, Some(s)) => {
+                if i < warmup {
+                    warm_latencies.push(s);
+                } else {
+                    latencies.push(s);
+                }
+            }
+            (Outcome::Failed { error }, _) => bail!("request {i} failed: {error}"),
+            (other, _) => bail!("request {i} unexpectedly resolved {}", other.label()),
+        }
     }
     if !warm_latencies.is_empty() {
         println!(
@@ -711,16 +826,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             stats::mean(&warm_latencies) * 1e3
         );
     }
-    let mut latencies = Vec::new();
-    let t0 = std::time::Instant::now();
-    for i in 0..requests {
-        serve_one(warmup + i, &mut latencies)?;
-    }
-    let total = t0.elapsed().as_secs_f64();
     let s = stats::summarize(&latencies);
     println!(
-        "served {requests} requests in {total:.2}s ({:.1} req/s)",
-        requests as f64 / total
+        "served {requests} requests in {wall:.2}s ({:.1} req/s)",
+        requests as f64 / wall
     );
     println!(
         "latency ms: p50={:.2} p95={:.2} p99={:.2} max={:.2} (compile-once cache: {} executables)",
@@ -730,5 +839,33 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         s.max * 1e3,
         rt.cache_len()
     );
+    if let Some(path) = flag_value(args, "--json") {
+        let counts = svc.counts();
+        let doc = Json::obj()
+            .set("schema", serve::SERVE_SCHEMA)
+            .set("mode", "replay")
+            .set("artifacts", keys.len())
+            .set(
+                "requests",
+                Json::obj()
+                    .set("total", counts.submitted as i64)
+                    .set("completed", counts.completed as i64)
+                    .set("rejected", counts.rejected as i64)
+                    .set("expired", counts.expired as i64)
+                    .set("failed", counts.failed as i64),
+            )
+            .set(
+                "latency_ms",
+                Json::obj()
+                    .set("p50", s.p50 * 1e3)
+                    .set("p95", s.p95 * 1e3)
+                    .set("p99", s.p99 * 1e3)
+                    .set("max", s.max * 1e3)
+                    .set("mean", s.mean * 1e3),
+            )
+            .set("wall_s", wall);
+        std::fs::write(path, doc.to_pretty()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }

@@ -1,0 +1,122 @@
+//! Log-bucketed latency histogram for the serve observability surface.
+//!
+//! Fixed bucket bounds (doubling from 0.25 ms), `le`-style cumulative
+//! rendering — one greppable line per snapshot, plus the bucket array
+//! the `kforge-serve-v1` JSON summary embeds.  Recording is exact
+//! counting into static buckets, so two runs that observe the same
+//! latencies (as the virtual-time scenario guarantees given a seed)
+//! render byte-identical histograms.
+
+/// Histogram over millisecond latencies with fixed upper bounds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    bounds_ms: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts, one per bound.
+    counts: Vec<u64>,
+    /// Samples above the last bound.
+    overflow: u64,
+}
+
+impl LatencyHistogram {
+    /// Build from ascending upper bounds (a sample lands in the first
+    /// bucket whose bound is >= the sample).
+    pub fn new(bounds_ms: Vec<f64>) -> LatencyHistogram {
+        assert!(!bounds_ms.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds_ms.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        let counts = vec![0; bounds_ms.len()];
+        LatencyHistogram { bounds_ms, counts, overflow: 0 }
+    }
+
+    /// The serve default: 0.25 ms to ~8.2 s, doubling (16 buckets).
+    pub fn default_serve() -> LatencyHistogram {
+        LatencyHistogram::new((0..16).map(|i| 0.25 * (1u64 << i) as f64).collect())
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        match self.bounds_ms.iter().position(|&b| ms <= b) {
+            Some(i) => self.counts[i] += 1,
+            None => self.overflow += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.overflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Cumulative `(upper_bound_ms, count_at_or_below)` pairs.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0;
+        self.bounds_ms
+            .iter()
+            .zip(&self.counts)
+            .map(|(&b, &c)| {
+                acc += c;
+                (b, acc)
+            })
+            .collect()
+    }
+
+    /// One greppable line: `le0.25=0 le0.5=2 … overflow=0`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (b, c) in self.cumulative() {
+            out.push_str(&format!("le{b}={c} "));
+        }
+        out.push_str(&format!("overflow={}", self.overflow));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_le_inclusive() {
+        let mut h = LatencyHistogram::new(vec![1.0, 2.0, 4.0]);
+        h.record(0.5); // le1
+        h.record(1.0); // le1 (inclusive)
+        h.record(1.01); // le2
+        h.record(4.0); // le4
+        h.record(4.01); // overflow
+        assert_eq!(h.cumulative(), vec![(1.0, 2), (2.0, 3), (4.0, 4)]);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.total(), 5);
+    }
+
+    #[test]
+    fn default_bounds_double_from_quarter_ms() {
+        let h = LatencyHistogram::default_serve();
+        let bounds: Vec<f64> = h.cumulative().iter().map(|(b, _)| *b).collect();
+        assert_eq!(bounds.len(), 16);
+        assert_eq!(bounds[0], 0.25);
+        assert_eq!(bounds[1], 0.5);
+        assert_eq!(bounds[15], 8192.0);
+    }
+
+    #[test]
+    fn render_is_greppable_and_deterministic() {
+        let mut a = LatencyHistogram::new(vec![1.0, 10.0]);
+        let mut b = LatencyHistogram::new(vec![1.0, 10.0]);
+        for x in [0.2, 3.0, 5.0, 50.0] {
+            a.record(x);
+            b.record(x);
+        }
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.render(), "le1=1 le10=3 overflow=1");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn unsorted_bounds_panic() {
+        LatencyHistogram::new(vec![2.0, 1.0]);
+    }
+}

@@ -3,6 +3,12 @@
 //! `fast_p = (1/N) Σ 1(correct_i ∧ speedup_i > p)` where speedup is
 //! baseline-time / candidate-time.  `fast_0` is the correctness rate,
 //! `fast_1` on-par performance, `fast_p (p>1)` superior performance.
+//!
+//! [`hist`] adds the serve path's log-bucketed latency histogram.
+
+pub mod hist;
+
+pub use hist::LatencyHistogram;
 
 /// Outcome of one task: correctness + speedup vs the baseline.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -1,0 +1,160 @@
+//! Admission control: load-shedding and per-request deadlines.
+//!
+//! A request is admitted or shed *at the door*, before it consumes
+//! queue space — the service never blocks a producer and never lets
+//! the queue grow past its bound.  Two shed triggers exist: the
+//! physical queue capacity ([`ShedReason::QueueFull`]) and an optional
+//! earlier policy threshold ([`ShedReason::DepthLimit`], for shedding
+//! batch-shaped load before the queue is literally full).  Admitted
+//! requests may still time out waiting: a consumer checks the
+//! request's deadline at dequeue and resolves it as
+//! [`Outcome::DeadlineExceeded`] without executing it.
+//!
+//! Every request resolves to exactly one typed [`Outcome`]; nothing
+//! blocks indefinitely and nothing is silently dropped.
+
+/// Admission policy over the current queue depth.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    /// The queue's physical bound.
+    pub queue_capacity: usize,
+    /// Shed once this many requests are already queued (≤ capacity;
+    /// equal by default, i.e. shed only when the queue is full).
+    pub shed_depth: usize,
+}
+
+impl AdmissionPolicy {
+    pub fn new(queue_capacity: usize) -> AdmissionPolicy {
+        AdmissionPolicy { queue_capacity, shed_depth: queue_capacity }
+    }
+
+    /// Decide admission for a request arriving at `depth` queued.
+    pub fn decide(&self, depth: usize) -> Decision {
+        if depth >= self.queue_capacity {
+            Decision::Shed(ShedReason::QueueFull)
+        } else if depth >= self.shed_depth {
+            Decision::Shed(ShedReason::DepthLimit)
+        } else {
+            Decision::Admit
+        }
+    }
+}
+
+/// The admission verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Admit,
+    Shed(ShedReason),
+}
+
+/// Why a request was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The queue is at its physical capacity.
+    QueueFull,
+    /// The policy's shed threshold (below capacity) was reached.
+    DepthLimit,
+    /// The service stopped accepting requests.
+    Closed,
+}
+
+impl ShedReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::DepthLimit => "depth_limit",
+            ShedReason::Closed => "closed",
+        }
+    }
+}
+
+/// True when a request that has waited `waited_ms` has overrun its
+/// deadline (requests without a deadline never expire).
+pub fn deadline_expired(deadline_ms: Option<f64>, waited_ms: f64) -> bool {
+    matches!(deadline_ms, Some(d) if waited_ms > d)
+}
+
+/// The typed resolution every request ends in.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    /// Served: waited `queue_ms`, then executed for `service_ms`.
+    Completed { queue_ms: f64, service_ms: f64 },
+    /// Shed at admission; never entered the queue.
+    Rejected { reason: ShedReason },
+    /// Admitted, but its deadline passed before a worker reached it.
+    DeadlineExceeded { waited_ms: f64 },
+    /// The handler returned an error (CI gates this count to zero for
+    /// synthetic traffic — synthesis jobs are infallible).
+    Failed { error: String },
+}
+
+impl Outcome {
+    /// End-to-end latency for completed requests (queue wait + service).
+    pub fn latency_ms(&self) -> Option<f64> {
+        match self {
+            Outcome::Completed { queue_ms, service_ms } => Some(queue_ms + service_ms),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Outcome::Completed { .. } => "completed",
+            Outcome::Rejected { .. } => "rejected",
+            Outcome::DeadlineExceeded { .. } => "deadline_exceeded",
+            Outcome::Failed { .. } => "failed",
+        }
+    }
+
+    pub fn is_completed(&self) -> bool {
+        matches!(self, Outcome::Completed { .. })
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, Outcome::Rejected { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decide_thresholds() {
+        let p = AdmissionPolicy { queue_capacity: 8, shed_depth: 6 };
+        assert_eq!(p.decide(0), Decision::Admit);
+        assert_eq!(p.decide(5), Decision::Admit);
+        assert_eq!(p.decide(6), Decision::Shed(ShedReason::DepthLimit));
+        assert_eq!(p.decide(7), Decision::Shed(ShedReason::DepthLimit));
+        assert_eq!(p.decide(8), Decision::Shed(ShedReason::QueueFull));
+        assert_eq!(p.decide(100), Decision::Shed(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn default_policy_sheds_only_at_capacity() {
+        let p = AdmissionPolicy::new(4);
+        assert_eq!(p.decide(3), Decision::Admit);
+        assert_eq!(p.decide(4), Decision::Shed(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn deadlines() {
+        assert!(!deadline_expired(None, 1e9));
+        assert!(!deadline_expired(Some(10.0), 10.0)); // exactly on time
+        assert!(deadline_expired(Some(10.0), 10.001));
+    }
+
+    #[test]
+    fn outcome_latency_and_labels() {
+        let done = Outcome::Completed { queue_ms: 2.0, service_ms: 5.0 };
+        assert_eq!(done.latency_ms(), Some(7.0));
+        assert!(done.is_completed());
+        assert_eq!(done.label(), "completed");
+        let shed = Outcome::Rejected { reason: ShedReason::QueueFull };
+        assert_eq!(shed.latency_ms(), None);
+        assert!(shed.is_rejected());
+        assert_eq!(shed.label(), "rejected");
+        assert_eq!(Outcome::DeadlineExceeded { waited_ms: 3.0 }.label(), "deadline_exceeded");
+        assert_eq!(Outcome::Failed { error: "x".into() }.label(), "failed");
+    }
+}

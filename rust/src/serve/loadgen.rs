@@ -1,0 +1,217 @@
+//! Seeded load generator: bursty Poisson-ish arrivals over mixed
+//! platforms and personas.
+//!
+//! Traffic alternates calm and burst phases; within a phase,
+//! inter-arrival gaps are exponential around the phase's mean, drawn
+//! from a forked [`Pcg`] stream — so a seed pins the entire arrival
+//! process, and the scenario engine's outcomes (admissions, sheds,
+//! deadline misses, latency percentiles) are bit-reproducible.  Each
+//! request pairs a registered platform with a synthetic problem that
+//! platform supports and one of the calibrated personas; interactive
+//! requests carry a deadline, batch requests do not.
+
+use super::queue::Priority;
+use crate::agents::persona::{Persona, PERSONAS};
+use crate::platform::{registry, PlatformRef};
+use crate::util::rng::{fnv1a, Pcg};
+use crate::workloads::{Problem, Suite};
+
+/// Traffic shape knobs.  `LoadgenConfig::new` gives the default
+/// scenario: 70% interactive with a 120 ms deadline, ~8 ms calm gaps,
+/// 0.5 ms burst gaps, bursts of up to 12 requests.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    pub seed: u64,
+    pub requests: usize,
+    /// Size of the synthetic problem pool requests draw from.
+    pub synthetic_problems: usize,
+    /// Fraction of requests in the interactive priority class.
+    pub interactive_fraction: f64,
+    /// Deadline attached to interactive requests (virtual ms).
+    pub deadline_ms: f64,
+    /// Mean inter-arrival gap in a calm phase (ms).
+    pub calm_gap_ms: f64,
+    /// Mean inter-arrival gap in a burst phase (ms).
+    pub burst_gap_ms: f64,
+    /// Upper bound on requests per phase (each phase's length is drawn
+    /// uniformly from 2..=burst_len).
+    pub burst_len: usize,
+}
+
+impl LoadgenConfig {
+    pub fn new(seed: u64, requests: usize) -> LoadgenConfig {
+        LoadgenConfig {
+            seed,
+            requests,
+            synthetic_problems: 12,
+            interactive_fraction: 0.7,
+            deadline_ms: 120.0,
+            calm_gap_ms: 8.0,
+            burst_gap_ms: 0.5,
+            burst_len: 12,
+        }
+    }
+}
+
+/// One generated request.
+#[derive(Clone)]
+pub struct RequestSpec {
+    /// Arrival-order index (ids are assigned in arrival order).
+    pub id: usize,
+    /// Virtual arrival time.
+    pub at_ms: f64,
+    pub priority: Priority,
+    /// Virtual deadline budget, measured from arrival.
+    pub deadline_ms: Option<f64>,
+    pub platform: PlatformRef,
+    pub persona: &'static Persona,
+    pub problem: Problem,
+}
+
+impl RequestSpec {
+    /// The request's job identity: requests with equal job ids resolve
+    /// to the same synthesized result (and the same store `JobKey`).
+    pub fn job_id(&self) -> String {
+        format!("{}::{}::{}", self.platform.name(), self.persona.name, self.problem.id)
+    }
+}
+
+impl std::fmt::Debug for RequestSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RequestSpec")
+            .field("id", &self.id)
+            .field("at_ms", &self.at_ms)
+            .field("priority", &self.priority)
+            .field("deadline_ms", &self.deadline_ms)
+            .field("job", &self.job_id())
+            .finish()
+    }
+}
+
+/// Generate the arrival sequence for a scenario.
+pub fn generate(cfg: &LoadgenConfig) -> Vec<RequestSpec> {
+    let base = Suite::synthetic(cfg.seed, cfg.synthetic_problems.max(1));
+    // per-platform pools of supported problems (platform filters are
+    // real: a synthetic problem tagged with an unsupported op family
+    // never pairs with that platform)
+    let pools: Vec<(PlatformRef, Vec<Problem>)> = registry()
+        .platforms()
+        .iter()
+        .map(|p| {
+            let supported: Vec<Problem> =
+                base.supported_on(p.spec()).problems.iter().cloned().collect();
+            (p.clone(), supported)
+        })
+        .filter(|(_, pool)| !pool.is_empty())
+        .collect();
+    assert!(!pools.is_empty(), "no platform supports any synthetic problem");
+
+    let root = Pcg::new(cfg.seed, fnv1a(b"serve-loadgen"));
+    let mut arrivals = root.fork("arrivals");
+    let mut mix = root.fork("mix");
+    let mut out = Vec::with_capacity(cfg.requests);
+    let mut t = 0.0f64;
+    let mut in_burst = false;
+    let mut phase_left = 0usize;
+    for id in 0..cfg.requests {
+        if phase_left == 0 {
+            in_burst = !in_burst;
+            phase_left = arrivals.range_i64(2, cfg.burst_len.max(2) as i64) as usize;
+        }
+        phase_left -= 1;
+        let gap = if in_burst { cfg.burst_gap_ms } else { cfg.calm_gap_ms };
+        // exponential inter-arrival with mean `gap`
+        t += -gap * (1.0 - arrivals.uniform()).max(1e-12).ln();
+        let (platform, pool) = &pools[mix.below(pools.len() as u32) as usize];
+        let problem = mix.choose(pool).clone();
+        let persona = mix.choose(PERSONAS);
+        let (priority, deadline_ms) = if mix.chance(cfg.interactive_fraction) {
+            (Priority::Interactive, Some(cfg.deadline_ms))
+        } else {
+            (Priority::Batch, None)
+        };
+        out.push(RequestSpec {
+            id,
+            at_ms: t,
+            priority,
+            deadline_ms,
+            platform: platform.clone(),
+            persona,
+            problem,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = LoadgenConfig::new(0xFEED, 64);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.at_ms.to_bits(), y.at_ms.to_bits());
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.deadline_ms.map(f64::to_bits), y.deadline_ms.map(f64::to_bits));
+            assert_eq!(x.job_id(), y.job_id());
+        }
+        // a different seed reshapes the arrival process
+        let c = generate(&LoadgenConfig::new(0xFEED + 1, 64));
+        assert!(a.iter().zip(&c).any(|(x, y)| x.at_ms.to_bits() != y.at_ms.to_bits()));
+    }
+
+    #[test]
+    fn arrivals_are_ordered_and_bursty() {
+        let reqs = generate(&LoadgenConfig::new(7, 128));
+        for w in reqs.windows(2) {
+            assert!(w[1].at_ms >= w[0].at_ms, "arrivals must be time-ordered");
+        }
+        let gaps: Vec<f64> = reqs.windows(2).map(|w| w[1].at_ms - w[0].at_ms).collect();
+        let tight = gaps.iter().filter(|&&g| g < 2.0).count();
+        let loose = gaps.iter().filter(|&&g| g > 4.0).count();
+        assert!(tight > 10, "bursts missing: {tight} tight gaps");
+        assert!(loose > 10, "calm phases missing: {loose} loose gaps");
+    }
+
+    #[test]
+    fn platform_problem_pairings_are_supported() {
+        let reqs = generate(&LoadgenConfig::new(11, 96));
+        for r in &reqs {
+            assert!(
+                r.problem.supported_on(r.platform.spec()),
+                "{} paired with unsupported problem {}",
+                r.platform.name(),
+                r.problem.id
+            );
+        }
+        // the mix spans platforms and personas
+        let platforms: std::collections::HashSet<&str> =
+            reqs.iter().map(|r| r.platform.name()).collect();
+        let personas: std::collections::HashSet<&str> =
+            reqs.iter().map(|r| r.persona.name).collect();
+        assert!(platforms.len() > 1, "only {platforms:?}");
+        assert!(personas.len() > 2, "only {personas:?}");
+    }
+
+    #[test]
+    fn deadlines_ride_interactive_requests_only() {
+        let reqs = generate(&LoadgenConfig::new(13, 128));
+        let mut interactive = 0;
+        for r in &reqs {
+            match r.priority {
+                Priority::Interactive => {
+                    interactive += 1;
+                    assert_eq!(r.deadline_ms, Some(120.0));
+                }
+                Priority::Batch => assert_eq!(r.deadline_ms, None),
+            }
+        }
+        assert!(interactive > 64, "interactive fraction off: {interactive}/128");
+        assert!(interactive < 128, "batch class never drawn");
+    }
+}

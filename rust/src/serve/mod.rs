@@ -1,0 +1,339 @@
+//! Production serving tier: concurrent synthesis service with
+//! admission control, deadlines, and a load-test harness.
+//!
+//! The sixth subsystem.  A bounded two-lane MPMC queue ([`queue`])
+//! feeds the coordinator's worker pool; admission control ([`admission`])
+//! sheds load at the door and expires overdue requests at dequeue, so
+//! every request resolves to a typed [`Outcome`] — the service never
+//! blocks a producer and never drops a request silently.  Concurrent
+//! campaign requests multiplex over the crash-safe result store, with
+//! the hottest job keys warmed at startup.
+//!
+//! Two execution modes share the machinery:
+//!
+//! - **`kforge serve --synthetic`** drives the seeded bursty load
+//!   generator ([`loadgen`]) through the virtual-time scenario engine
+//!   ([`scenario`]): deterministic admission/shed/deadline outcomes
+//!   and latency percentiles given a seed, plus real concurrent
+//!   execution of every distinct admitted job through the store.  This
+//!   is the load-test harness; its p99 and shed-rate are gated against
+//!   the declared budgets in tests and in CI.
+//! - **`kforge serve --artifacts`** replays compiled artifacts through
+//!   the real-time [`Service`] front end ([`service`], [`replay`]).
+//!
+//! Observability: a periodic greppable stats line while serving, and a
+//! machine-readable summary under the [`SERVE_SCHEMA`] id (the
+//! `kforge-bench-v1` convention), rendered by [`ServeSummary`].
+
+pub mod admission;
+pub mod loadgen;
+pub mod queue;
+pub mod replay;
+pub mod scenario;
+pub mod service;
+
+pub use admission::{deadline_expired, AdmissionPolicy, Decision, Outcome, ShedReason};
+pub use loadgen::{generate, LoadgenConfig, RequestSpec};
+pub use queue::{BoundedQueue, Priority, PushError};
+pub use replay::{key_for_request, replay_keys};
+pub use scenario::{
+    execute_job, run_scenario, RequestReport, ScenarioConfig, ScenarioReport, SERVE_JOB_SEED,
+};
+pub use service::{Service, ServiceCounts, Ticket};
+
+use crate::metrics::LatencyHistogram;
+use crate::store::CacheStats;
+use crate::util::json::Json;
+use crate::util::stats::{self, Summary};
+
+/// Schema id stamped into every `kforge serve --json` summary.
+pub const SERVE_SCHEMA: &str = "kforge-serve-v1";
+
+/// Aggregated view of one scenario run: outcome census, admission and
+/// queue behavior, virtual latency distribution, store counters, and
+/// the measured (wall-clock) execution figures.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub expired: usize,
+    pub failed: usize,
+    pub queue_capacity: usize,
+    pub shed_depth: usize,
+    pub max_depth: usize,
+    pub workers: usize,
+    pub exec_workers: usize,
+    pub seed: u64,
+    pub makespan_ms: f64,
+    /// Virtual end-to-end latency of completed requests (None when
+    /// nothing completed).
+    pub latency: Option<Summary>,
+    pub hist: LatencyHistogram,
+    /// Requests the simulation modeled as store hits.
+    pub virtual_hits: usize,
+    pub warmed: Vec<String>,
+    pub distinct_jobs: usize,
+    pub exec_total_ms: f64,
+    pub wall_s: f64,
+    pub cache: CacheStats,
+    pub p99_budget_ms: f64,
+    pub shed_budget: f64,
+}
+
+/// Fold a scenario run into its summary.
+pub fn summarize(cfg: &ScenarioConfig, report: &ScenarioReport) -> ServeSummary {
+    let latencies = report.virtual_latencies_ms();
+    let mut hist = LatencyHistogram::default_serve();
+    for &ms in &latencies {
+        hist.record(ms);
+    }
+    ServeSummary {
+        requests: report.requests.len(),
+        completed: report.count("completed"),
+        rejected: report.count("rejected"),
+        expired: report.count("deadline_exceeded"),
+        failed: report.count("failed"),
+        queue_capacity: cfg.queue_capacity,
+        shed_depth: cfg.shed_depth.min(cfg.queue_capacity),
+        max_depth: report.max_depth,
+        workers: cfg.workers,
+        exec_workers: cfg.exec_workers.unwrap_or(cfg.workers).max(1),
+        seed: cfg.load.seed,
+        makespan_ms: report.makespan_ms,
+        latency: if latencies.is_empty() { None } else { Some(stats::summarize(&latencies)) },
+        hist,
+        virtual_hits: report.requests.iter().filter(|r| r.virtual_hit).count(),
+        warmed: report.warmed.clone(),
+        distinct_jobs: report.results.len(),
+        exec_total_ms: report.exec_wall_ms.iter().sum(),
+        wall_s: report.wall_s,
+        cache: report.cache,
+        p99_budget_ms: cfg.p99_budget_ms,
+        shed_budget: cfg.shed_budget,
+    }
+}
+
+impl ServeSummary {
+    /// Fraction of requests shed at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.requests as f64
+    }
+
+    /// Virtual p99 within the declared budget (vacuously true when
+    /// nothing completed).
+    pub fn within_latency_budget(&self) -> bool {
+        self.latency.map_or(true, |s| s.p99 <= self.p99_budget_ms)
+    }
+
+    pub fn within_shed_budget(&self) -> bool {
+        self.shed_rate() <= self.shed_budget
+    }
+
+    pub fn within_budgets(&self) -> bool {
+        self.within_latency_budget() && self.within_shed_budget()
+    }
+
+    /// The greppable multi-line text report.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "serve: requests={} completed={} rejected={} expired={} failed={}\n",
+            self.requests, self.completed, self.rejected, self.expired, self.failed
+        ));
+        out.push_str(&format!(
+            "admission: shed_rate={:.1}% capacity={} shed_depth={} max_depth={}\n",
+            self.shed_rate() * 100.0,
+            self.queue_capacity,
+            self.shed_depth,
+            self.max_depth
+        ));
+        out.push_str(&format!(
+            "queue: workers={} makespan_ms={:.2} distinct_jobs={} warmed={}\n",
+            self.workers,
+            self.makespan_ms,
+            self.distinct_jobs,
+            self.warmed.len()
+        ));
+        match &self.latency {
+            Some(s) => out.push_str(&format!(
+                "latency(virtual) ms: p50={:.2} p95={:.2} p99={:.2} max={:.2} budget_p99={:.1}\n",
+                s.p50, s.p95, s.p99, s.max, self.p99_budget_ms
+            )),
+            None => out.push_str("latency(virtual) ms: no completed requests\n"),
+        }
+        out.push_str(&format!("hist(virtual): {}\n", self.hist.render()));
+        out.push_str(&format!("store: {} virtual_hits={}\n", self.cache, self.virtual_hits));
+        out.push_str(&format!(
+            "measured: exec_workers={} exec_total_ms={:.1} wall={:.2}s\n",
+            self.exec_workers, self.exec_total_ms, self.wall_s
+        ));
+        out
+    }
+
+    /// The `kforge-serve-v1` machine-readable summary.
+    pub fn to_json(&self, mode: &str) -> Json {
+        let latency = match &self.latency {
+            Some(s) => Json::obj()
+                .set("p50", s.p50)
+                .set("p95", s.p95)
+                .set("p99", s.p99)
+                .set("max", s.max)
+                .set("mean", s.mean),
+            None => Json::Null,
+        };
+        let hist: Vec<Json> = self
+            .hist
+            .cumulative()
+            .iter()
+            .map(|(le, n)| Json::obj().set("le", *le).set("count", *n as i64))
+            .collect();
+        Json::obj()
+            .set("schema", SERVE_SCHEMA)
+            .set("mode", mode)
+            .set("seed", self.seed as i64)
+            .set("workers", self.workers)
+            .set("exec_workers", self.exec_workers)
+            .set(
+                "requests",
+                Json::obj()
+                    .set("total", self.requests)
+                    .set("completed", self.completed)
+                    .set("rejected", self.rejected)
+                    .set("expired", self.expired)
+                    .set("failed", self.failed),
+            )
+            .set(
+                "admission",
+                Json::obj()
+                    .set("queue_capacity", self.queue_capacity)
+                    .set("shed_depth", self.shed_depth)
+                    .set("max_depth", self.max_depth)
+                    .set("shed_rate", self.shed_rate()),
+            )
+            .set("latency_virtual_ms", latency)
+            .set(
+                "histogram_virtual_ms",
+                Json::obj().set("cumulative", hist).set("overflow", self.hist.overflow() as i64),
+            )
+            .set(
+                "store",
+                Json::obj()
+                    .set("hits", self.cache.hits as i64)
+                    .set("misses", self.cache.misses as i64)
+                    .set("resumed", self.cache.resumed as i64)
+                    .set("evictions", self.cache.evictions as i64)
+                    .set("bytes_read", self.cache.bytes_read as i64)
+                    .set("bytes_written", self.cache.bytes_written as i64)
+                    .set("hit_rate", self.cache.hit_rate())
+                    .set("virtual_hits", self.virtual_hits),
+            )
+            .set(
+                "measured",
+                Json::obj()
+                    .set("distinct_jobs", self.distinct_jobs)
+                    .set("exec_total_ms", self.exec_total_ms)
+                    .set("wall_s", self.wall_s),
+            )
+            .set("warmed", Json::Arr(self.warmed.iter().map(|w| Json::from(w.as_str())).collect()))
+            .set(
+                "budgets",
+                Json::obj()
+                    .set("p99_ms", self.p99_budget_ms)
+                    .set("shed", self.shed_budget)
+                    .set("within", self.within_budgets()),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ServeSummary {
+        let mut hist = LatencyHistogram::default_serve();
+        for ms in [1.0, 2.0, 40.0] {
+            hist.record(ms);
+        }
+        ServeSummary {
+            requests: 8,
+            completed: 3,
+            rejected: 4,
+            expired: 1,
+            failed: 0,
+            queue_capacity: 4,
+            shed_depth: 4,
+            max_depth: 4,
+            workers: 2,
+            exec_workers: 2,
+            seed: 9,
+            makespan_ms: 50.0,
+            latency: Some(stats::summarize(&[1.0, 2.0, 40.0])),
+            hist,
+            virtual_hits: 1,
+            warmed: vec!["cuda::expert::p1".into()],
+            distinct_jobs: 3,
+            exec_total_ms: 12.5,
+            wall_s: 0.2,
+            cache: CacheStats { hits: 2, misses: 3, ..Default::default() },
+            p99_budget_ms: 250.0,
+            shed_budget: 0.6,
+        }
+    }
+
+    #[test]
+    fn budgets_and_shed_rate() {
+        let mut s = sample();
+        assert!((s.shed_rate() - 0.5).abs() < 1e-12);
+        assert!(s.within_budgets());
+        s.shed_budget = 0.4;
+        assert!(!s.within_shed_budget());
+        s.shed_budget = 0.6;
+        s.p99_budget_ms = 10.0;
+        assert!(!s.within_latency_budget());
+    }
+
+    #[test]
+    fn text_is_greppable() {
+        let text = sample().render_text();
+        assert!(text.contains("serve: requests=8 completed=3 rejected=4 expired=1 failed=0"));
+        assert!(text.contains("admission: shed_rate=50.0%"));
+        assert!(text.contains("hist(virtual): le0.25=0"));
+        assert!(text.contains("virtual_hits=1"));
+    }
+
+    #[test]
+    fn json_schema_and_counters() {
+        let j = sample().to_json("synthetic");
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(SERVE_SCHEMA));
+        assert_eq!(j.get("mode").and_then(Json::as_str), Some("synthetic"));
+        let reqs = j.get("requests").unwrap();
+        assert_eq!(reqs.get("failed").and_then(Json::as_i64), Some(0));
+        assert_eq!(reqs.get("rejected").and_then(Json::as_i64), Some(4));
+        let store = j.get("store").unwrap();
+        assert_eq!(store.get("hits").and_then(Json::as_i64), Some(2));
+        assert_eq!(store.get("virtual_hits").and_then(Json::as_i64), Some(1));
+        // the CI smoke job greps the pretty rendering for these
+        let text = j.to_pretty();
+        assert!(text.contains("\"schema\": \"kforge-serve-v1\""), "{text}");
+        assert!(text.contains("\"failed\": 0"), "{text}");
+        assert!(text.contains("\"hits\": 2"), "{text}");
+        // round-trips through the parser
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some(SERVE_SCHEMA));
+    }
+
+    #[test]
+    fn empty_latency_is_null_and_vacuously_in_budget() {
+        let mut s = sample();
+        s.latency = None;
+        s.completed = 0;
+        assert!(s.within_latency_budget());
+        let j = s.to_json("synthetic");
+        assert!(matches!(j.get("latency_virtual_ms"), Some(Json::Null)));
+        assert!(s.render_text().contains("no completed requests"));
+    }
+}

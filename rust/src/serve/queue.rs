@@ -1,0 +1,246 @@
+//! Bounded two-lane MPMC request queue.
+//!
+//! The serve path's front door: producers (`Service::submit`, the
+//! scenario engine) push admitted requests, worker threads pop them.
+//! Two priority lanes — [`Priority::Interactive`] always dequeues
+//! before [`Priority::Batch`] — and each lane is strictly FIFO, a
+//! property the load-test suite asserts from the recorded pop order.
+//!
+//! The queue never blocks a producer: `try_push` returns the item to
+//! the caller when the queue is full (admission control turns that
+//! into a typed `Rejected` outcome instead of backpressure), and a
+//! closed queue keeps draining what it holds but accepts nothing new.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Priority class of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// User-facing traffic: dequeued before any batch request.
+    Interactive,
+    /// Background traffic: served only when no interactive request waits.
+    Batch,
+}
+
+impl Priority {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Why a push was refused; carries the item back to the caller.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity.
+    Full(T),
+    /// The queue was closed; no further requests are accepted.
+    Closed(T),
+}
+
+struct Lanes<T> {
+    interactive: VecDeque<T>,
+    batch: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Lanes<T> {
+    fn depth(&self) -> usize {
+        self.interactive.len() + self.batch.len()
+    }
+
+    fn pop(&mut self) -> Option<(Priority, T)> {
+        if let Some(x) = self.interactive.pop_front() {
+            return Some((Priority::Interactive, x));
+        }
+        self.batch.pop_front().map(|x| (Priority::Batch, x))
+    }
+}
+
+/// Bounded MPMC queue with two FIFO priority lanes.  The capacity
+/// bounds the two lanes together.
+pub struct BoundedQueue<T> {
+    lanes: Mutex<Lanes<T>>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        assert!(capacity > 0, "queue capacity must be at least 1");
+        BoundedQueue {
+            lanes: Mutex::new(Lanes {
+                interactive: VecDeque::new(),
+                batch: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests currently queued (both lanes).
+    pub fn depth(&self) -> usize {
+        self.lanes.lock().unwrap().depth()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lanes.lock().unwrap().closed
+    }
+
+    /// Enqueue without blocking; a full or closed queue hands the item
+    /// straight back so the caller can shed it.
+    pub fn try_push(&self, priority: Priority, item: T) -> Result<(), PushError<T>> {
+        let mut lanes = self.lanes.lock().unwrap();
+        if lanes.closed {
+            return Err(PushError::Closed(item));
+        }
+        if lanes.depth() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        match priority {
+            Priority::Interactive => lanes.interactive.push_back(item),
+            Priority::Batch => lanes.batch.push_back(item),
+        }
+        drop(lanes);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue without blocking: the oldest interactive request, else
+    /// the oldest batch request, else `None`.
+    pub fn try_pop(&self) -> Option<(Priority, T)> {
+        self.lanes.lock().unwrap().pop()
+    }
+
+    /// Dequeue, waiting for an item.  Returns `None` only once the
+    /// queue is closed *and* drained — queued requests are always
+    /// served (or deadline-expired by the consumer), never dropped.
+    pub fn pop_blocking(&self) -> Option<(Priority, T)> {
+        let mut lanes = self.lanes.lock().unwrap();
+        loop {
+            if let Some(x) = lanes.pop() {
+                return Some(x);
+            }
+            if lanes.closed {
+                return None;
+            }
+            lanes = self.ready.wait(lanes).unwrap();
+        }
+    }
+
+    /// Stop accepting new requests and wake every waiting consumer.
+    /// Already-queued items remain poppable.
+    pub fn close(&self) {
+        self.lanes.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_a_lane() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.try_push(Priority::Batch, i).unwrap();
+        }
+        let popped: Vec<i32> = (0..5).map(|_| q.try_pop().unwrap().1).collect();
+        assert_eq!(popped, vec![0, 1, 2, 3, 4]);
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn interactive_precedes_batch() {
+        let q = BoundedQueue::new(8);
+        q.try_push(Priority::Batch, "b0").unwrap();
+        q.try_push(Priority::Interactive, "i0").unwrap();
+        q.try_push(Priority::Batch, "b1").unwrap();
+        q.try_push(Priority::Interactive, "i1").unwrap();
+        let order: Vec<&str> = (0..4).map(|_| q.try_pop().unwrap().1).collect();
+        assert_eq!(order, vec!["i0", "i1", "b0", "b1"]);
+    }
+
+    #[test]
+    fn full_queue_returns_the_item() {
+        let q = BoundedQueue::new(2);
+        q.try_push(Priority::Interactive, 1).unwrap();
+        q.try_push(Priority::Batch, 2).unwrap();
+        assert_eq!(q.depth(), 2);
+        match q.try_push(Priority::Interactive, 3) {
+            Err(PushError::Full(x)) => assert_eq!(x, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // capacity is shared across lanes
+        match q.try_push(Priority::Batch, 4) {
+            Err(PushError::Full(x)) => assert_eq!(x, 4),
+            other => panic!("expected Full, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn closed_queue_rejects_new_but_drains_old() {
+        let q = BoundedQueue::new(4);
+        q.try_push(Priority::Batch, 1).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        match q.try_push(Priority::Batch, 2) {
+            Err(PushError::Closed(x)) => assert_eq!(x, 2),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert_eq!(q.pop_blocking(), Some((Priority::Batch, 1)));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers_conserve_items() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let q = BoundedQueue::new(1024);
+        let popped = AtomicUsize::new(0);
+        let sum = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for p in 0..4 {
+                let q = &q;
+                s.spawn(move || {
+                    for i in 0..100usize {
+                        let prio = if i % 3 == 0 { Priority::Interactive } else { Priority::Batch };
+                        q.try_push(prio, p * 100 + i).unwrap();
+                    }
+                });
+            }
+            for _ in 0..3 {
+                let (q, popped, sum) = (&q, &popped, &sum);
+                s.spawn(move || {
+                    while let Some((_, x)) = q.pop_blocking() {
+                        popped.fetch_add(1, Ordering::Relaxed);
+                        sum.fetch_add(x, Ordering::Relaxed);
+                    }
+                });
+            }
+            // close once every producer has finished; consumers then
+            // drain the remainder and exit on None
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            while q.depth() < 400 - popped.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            q.close();
+        });
+        assert_eq!(popped.load(Ordering::Relaxed), 400);
+        assert_eq!(sum.load(Ordering::Relaxed), (0..4).map(|p| (0..100).map(|i| p * 100 + i).sum::<usize>()).sum());
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_panics() {
+        BoundedQueue::<u8>::new(0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Artifact-replay request planning for `kforge serve --artifacts`.
+//!
+//! The replay path cycles compiled artifacts through the PJRT runtime
+//! via the [`super::Service`] front end.  Its request plan is derived
+//! here — in particular the guard for the empty-registry case, which
+//! previously reached `keys[i % keys.len()]` in `main.rs` and died on
+//! a division by zero instead of explaining itself.
+
+use crate::runtime::Registry;
+use anyhow::{bail, Result};
+
+/// The artifact keys a replay session cycles through, in manifest
+/// order.  An empty registry is a usage error (the artifacts were
+/// never built), reported as such rather than as a modulo panic.
+pub fn replay_keys(registry: &Registry) -> Result<Vec<String>> {
+    if registry.entries.is_empty() {
+        bail!("no artifacts in {} (run `make artifacts`)", registry.root.display());
+    }
+    Ok(registry.entries.iter().map(|e| e.key.clone()).collect())
+}
+
+/// Round-robin assignment of request `i` to a key.  Total function on
+/// any non-empty key list — `replay_keys` guarantees non-emptiness.
+pub fn key_for_request(keys: &[String], i: usize) -> &str {
+    &keys[i % keys.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    const EMPTY: &str = r#"{"version": 1, "entries": []}"#;
+    const TWO: &str = r#"{
+ "version": 1,
+ "entries": [
+  {"key": "a__naive__b1", "workload": "a", "variant": "naive", "batch": 1,
+   "path": "a.hlo.txt", "inputs": [], "is_reference": true},
+  {"key": "a__fast__b1", "workload": "a", "variant": "fast", "batch": 1,
+   "path": "b.hlo.txt", "inputs": [], "is_reference": false}
+ ]
+}"#;
+
+    #[test]
+    fn empty_registry_is_a_usage_error_not_a_panic() {
+        let reg = Registry::parse(EMPTY, PathBuf::from("/tmp/arts")).unwrap();
+        let err = replay_keys(&reg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no artifacts in /tmp/arts"), "{msg}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn keys_cycle_in_manifest_order() {
+        let reg = Registry::parse(TWO, PathBuf::from("/x")).unwrap();
+        let keys = replay_keys(&reg).unwrap();
+        assert_eq!(keys, vec!["a__naive__b1", "a__fast__b1"]);
+        assert_eq!(key_for_request(&keys, 0), "a__naive__b1");
+        assert_eq!(key_for_request(&keys, 1), "a__fast__b1");
+        assert_eq!(key_for_request(&keys, 2), "a__naive__b1");
+        assert_eq!(key_for_request(&keys, 5), "a__fast__b1");
+    }
+}

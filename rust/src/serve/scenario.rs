@@ -1,0 +1,497 @@
+//! The load-test scenario engine: a deterministic virtual-time
+//! simulation of the service front end, followed by real concurrent
+//! execution of every admitted distinct job through the result store.
+//!
+//! The split is what reconciles "real concurrent service" with
+//! "deterministic scenario outcome given a seed":
+//!
+//! 1. **Virtual phase** — a discrete-event simulation drives the real
+//!    [`BoundedQueue`] and [`AdmissionPolicy`] with the seeded arrival
+//!    sequence from [`loadgen`].  `workers` virtual servers pull from
+//!    the queue; service times are modeled per request (per-level base
+//!    cost, persona factor, seeded lognormal noise for store misses; a
+//!    small constant for hits), deadlines are checked at dequeue, and
+//!    every request resolves to a typed [`Outcome`].  Everything here
+//!    — admissions, sheds, deadline misses, pop order, latency
+//!    percentiles, makespan — is bit-reproducible from the seed.
+//! 2. **Execution phase** — the hottest job keys are warmed into the
+//!    store, then every *distinct* job that virtually completed runs
+//!    for real, fanned over [`crate::coordinator::worker::run_jobs`]
+//!    as single-job campaigns through [`run_campaign_with`] against
+//!    the shared store.  Results are bit-identical regardless of the
+//!    execution pool width (the PR 3/4 property), so only wall-clock
+//!    measurements vary run to run.
+//!
+//! Executing each distinct job exactly once (instead of one campaign
+//! per request) is also what keeps the crash-safe journals sound: two
+//! concurrent campaigns over the same key list would share a journal
+//! path.  Duplicate requests are resolved from the first execution —
+//! exactly what the store would do anyway, minus the file races.
+
+use super::admission::{deadline_expired, AdmissionPolicy, Decision, Outcome, ShedReason};
+use super::loadgen::{self, LoadgenConfig, RequestSpec};
+use super::queue::{BoundedQueue, Priority, PushError};
+use crate::coordinator::{run_campaign_with, BaselineKind, ExperimentConfig, TaskResult};
+use crate::store::{CacheStats, Store};
+use crate::util::rng::{fnv1a, Pcg};
+use crate::workloads::{Level, Suite};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, HashSet};
+use std::sync::Arc;
+
+/// The fixed seed of every serve-path campaign.  Part of each job's
+/// store key: keeping it constant (rather than deriving it from the
+/// scenario seed) is what lets different traffic scenarios share
+/// cached results for overlapping jobs — the whole point of a cache.
+pub const SERVE_JOB_SEED: u64 = 0x5E12;
+
+/// Iterations per serve-path synthesis job (cheaper than the paper's 5
+/// — a serving tier trades refinement depth for latency).
+pub const SERVE_JOB_ITERATIONS: usize = 3;
+
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub load: LoadgenConfig,
+    /// Service capacity: virtual servers in the simulation, and the
+    /// default execution pool width.
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub shed_depth: usize,
+    /// Warm the K hottest job keys into the store before serving.
+    pub warm_hottest: usize,
+    /// Execution pool width override.  The virtual scenario (and thus
+    /// every deterministic outcome) is a function of `workers` only;
+    /// this knob varies real parallelism without touching it — the
+    /// worker-count bit-identity tests pivot on exactly that.
+    pub exec_workers: Option<usize>,
+    /// Apply store-eviction pressure after the warm phase: gc the disk
+    /// tier down to this many bytes.
+    pub gc_max_bytes: Option<u64>,
+    /// Declared latency budget gated by `kforge serve` and the tests.
+    pub p99_budget_ms: f64,
+    /// Declared shed-rate budget (rejected / total).
+    pub shed_budget: f64,
+    /// Print a stats line every N processed arrivals (0 = silent).
+    pub progress_every: usize,
+}
+
+impl ScenarioConfig {
+    pub fn new(seed: u64, requests: usize, workers: usize) -> ScenarioConfig {
+        let workers = workers.max(1);
+        ScenarioConfig {
+            load: LoadgenConfig::new(seed, requests),
+            workers,
+            queue_capacity: 2 * workers + 8,
+            shed_depth: 2 * workers + 8,
+            warm_hottest: 4,
+            exec_workers: None,
+            gc_max_bytes: None,
+            p99_budget_ms: 250.0,
+            shed_budget: 0.5,
+            progress_every: 0,
+        }
+    }
+}
+
+/// One request's resolution.
+#[derive(Debug, Clone)]
+pub struct RequestReport {
+    pub id: usize,
+    pub priority: Priority,
+    pub job: String,
+    pub outcome: Outcome,
+    /// Virtual service start (None for shed / expired requests).
+    pub started_ms: Option<f64>,
+    /// Whether the simulation modeled this request as a store hit.
+    pub virtual_hit: bool,
+}
+
+/// Everything a scenario run produces.  All fields except `wall_s`,
+/// `exec_wall_ms` and the byte counters inside `cache` are
+/// deterministic given the seed and config (with a fresh store, the
+/// hit/miss counters are too).
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub requests: Vec<RequestReport>,
+    /// (priority, request id) in virtual dequeue order — the FIFO
+    /// evidence the load tests assert on.
+    pub pop_order: Vec<(Priority, usize)>,
+    pub max_depth: usize,
+    /// Virtual time of the last completion.
+    pub makespan_ms: f64,
+    /// Job ids warmed into the store before serving, hottest first.
+    pub warmed: Vec<String>,
+    /// Synthesized results for every distinct job that completed
+    /// virtually, in first-virtual-start order.
+    pub results: Vec<(String, TaskResult)>,
+    /// Measured wall time per executed job (ms), same order.
+    pub exec_wall_ms: Vec<f64>,
+    /// Measured wall time of the whole execution phase (warm + gc +
+    /// serve), seconds.
+    pub wall_s: f64,
+    /// Store counter delta across the execution phase.
+    pub cache: CacheStats,
+}
+
+impl ScenarioReport {
+    pub fn count(&self, label: &str) -> usize {
+        self.requests.iter().filter(|r| r.outcome.label() == label).count()
+    }
+
+    /// Virtual end-to-end latencies of completed requests, request order.
+    pub fn virtual_latencies_ms(&self) -> Vec<f64> {
+        self.requests.iter().filter_map(|r| r.outcome.latency_ms()).collect()
+    }
+}
+
+/// Modeled service cost for a store miss: per-level base cost times a
+/// persona factor times seeded lognormal noise.
+fn miss_cost_ms(spec: &RequestSpec, rng: &mut Pcg) -> f64 {
+    let base = match spec.problem.level {
+        Level::L1 => 4.0,
+        Level::L2 => 6.5,
+        Level::L3 => 10.0,
+    };
+    let factor = if spec.persona.reasoning { 1.25 } else { 1.0 };
+    base * factor * rng.lognormal_noise(0.12)
+}
+
+/// Modeled service cost for a store hit (lookup + deserialize).
+fn hit_cost_ms(rng: &mut Pcg) -> f64 {
+    0.4 * rng.lognormal_noise(0.08)
+}
+
+/// The campaign config a request's job runs under.  Fixed name and
+/// seed: the store key covers both, so every serve scenario (and every
+/// serve process) shares one key space.
+fn job_config(spec: &RequestSpec) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "serve".into(),
+        platform: spec.platform.clone(),
+        personas: vec![spec.persona],
+        iterations: SERVE_JOB_ITERATIONS,
+        use_profiling: false,
+        use_reference: false,
+        baseline: BaselineKind::Eager,
+        seed: SERVE_JOB_SEED,
+        workers: 1,
+    }
+}
+
+/// Execute one request's job as a single-problem campaign through the
+/// store (the `kforge run --problem` idiom).  Public so integration
+/// tests can reproduce a serve-path result independently.
+pub fn execute_job(store: &Store, spec: &RequestSpec) -> TaskResult {
+    let cfg = job_config(spec);
+    let single = Suite { problems: Arc::new(vec![spec.problem.clone()]) };
+    let campaign = run_campaign_with(store, &single, None, &cfg);
+    campaign.results.into_iter().next().expect("single-job campaign yields one result")
+}
+
+/// f64 virtual-time heap key with a total order.
+#[derive(PartialEq)]
+struct Ms(f64);
+impl Eq for Ms {}
+impl PartialOrd for Ms {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ms {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Mutable state of the virtual-time simulation.
+struct Engine<'a> {
+    specs: &'a [RequestSpec],
+    /// Pre-drawn (miss_ms, hit_ms) per request — drawn up front so the
+    /// noise stream never depends on event interleaving.
+    costs: Vec<(f64, f64)>,
+    warm_set: HashSet<String>,
+    /// Model store hits at all?  False for a disabled store.
+    model_hits: bool,
+    queue: BoundedQueue<usize>,
+    idle: usize,
+    /// (finish time, request idx); min-heap with a total f64 order and
+    /// the request id as a deterministic tie-break.
+    completions: BinaryHeap<Reverse<(Ms, usize)>>,
+    /// Job id → earliest virtual completion (inserted only once the
+    /// simulation clock has passed it, so membership ⇒ done by `now`).
+    job_done: HashSet<String>,
+    reports: Vec<Option<RequestReport>>,
+    pop_order: Vec<(Priority, usize)>,
+    max_depth: usize,
+    makespan_ms: f64,
+    completed: usize,
+    expired: usize,
+}
+
+impl Engine<'_> {
+    /// Process every completion at or before `t`, starting queued
+    /// requests as servers free up (at the completion's own time, not
+    /// at `t` — a freed server never idles while work waits).
+    fn drain_until(&mut self, t: f64) {
+        while let Some(Reverse((Ms(ct), _))) = self.completions.peek() {
+            if *ct > t {
+                break;
+            }
+            let Reverse((Ms(ct), idx)) = self.completions.pop().expect("peeked");
+            self.idle += 1;
+            self.completed += 1;
+            self.makespan_ms = if ct > self.makespan_ms { ct } else { self.makespan_ms };
+            self.job_done.insert(self.specs[idx].job_id());
+            self.start_ready(ct);
+        }
+    }
+
+    /// Hand queued requests to idle servers at virtual time `now`.
+    /// Expired requests are resolved without consuming a server.
+    fn start_ready(&mut self, now: f64) {
+        while self.idle > 0 {
+            let Some((priority, idx)) = self.queue.try_pop() else {
+                break;
+            };
+            self.pop_order.push((priority, idx));
+            let spec = &self.specs[idx];
+            let waited = now - spec.at_ms;
+            let job = spec.job_id();
+            if deadline_expired(spec.deadline_ms, waited) {
+                self.reports[idx] = Some(RequestReport {
+                    id: idx,
+                    priority,
+                    job,
+                    outcome: Outcome::DeadlineExceeded { waited_ms: waited },
+                    started_ms: None,
+                    virtual_hit: false,
+                });
+                self.expired += 1;
+                continue;
+            }
+            let hit = self.model_hits
+                && (self.warm_set.contains(&job) || self.job_done.contains(&job));
+            let (miss_ms, hit_ms) = self.costs[idx];
+            let service_ms = if hit { hit_ms } else { miss_ms };
+            self.idle -= 1;
+            self.completions.push(Reverse((Ms(now + service_ms), idx)));
+            self.reports[idx] = Some(RequestReport {
+                id: idx,
+                priority,
+                job,
+                outcome: Outcome::Completed { queue_ms: waited, service_ms },
+                started_ms: Some(now),
+                virtual_hit: hit,
+            });
+        }
+    }
+}
+
+/// Run a full scenario: generate traffic, simulate the service in
+/// virtual time, then warm the store and execute every admitted
+/// distinct job for real.
+pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
+    let specs = loadgen::generate(&cfg.load);
+
+    // hottest job keys: by request frequency, job id as the tie-break
+    let mut freq: BTreeMap<String, usize> = BTreeMap::new();
+    for s in &specs {
+        *freq.entry(s.job_id()).or_insert(0) += 1;
+    }
+    let mut hottest: Vec<(&String, &usize)> = freq.iter().collect();
+    hottest.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
+    let warm_n = if store.enabled() { cfg.warm_hottest } else { 0 };
+    let warmed: Vec<String> = hottest.iter().take(warm_n).map(|(k, _)| (*k).clone()).collect();
+
+    // pre-draw modeled service costs (independent of event order)
+    let svc_root = Pcg::new(cfg.load.seed, fnv1a(b"serve-service"));
+    let costs: Vec<(f64, f64)> = specs
+        .iter()
+        .map(|s| {
+            let mut r = svc_root.fork(&format!("req-{}", s.id));
+            (miss_cost_ms(s, &mut r), hit_cost_ms(&mut r))
+        })
+        .collect();
+
+    // ---- virtual phase -------------------------------------------------
+    let policy = AdmissionPolicy {
+        queue_capacity: cfg.queue_capacity,
+        shed_depth: cfg.shed_depth.min(cfg.queue_capacity),
+    };
+    let mut eng = Engine {
+        specs: &specs,
+        costs,
+        warm_set: warmed.iter().cloned().collect(),
+        model_hits: store.enabled(),
+        queue: BoundedQueue::new(cfg.queue_capacity),
+        idle: cfg.workers.max(1),
+        completions: BinaryHeap::new(),
+        job_done: HashSet::new(),
+        reports: specs.iter().map(|_| None).collect(),
+        pop_order: Vec::new(),
+        max_depth: 0,
+        makespan_ms: 0.0,
+        completed: 0,
+        expired: 0,
+    };
+    let mut rejected = 0usize;
+    for (idx, spec) in specs.iter().enumerate() {
+        eng.drain_until(spec.at_ms);
+        match policy.decide(eng.queue.depth()) {
+            Decision::Shed(reason) => {
+                eng.reports[idx] = Some(RequestReport {
+                    id: idx,
+                    priority: spec.priority,
+                    job: spec.job_id(),
+                    outcome: Outcome::Rejected { reason },
+                    started_ms: None,
+                    virtual_hit: false,
+                });
+                rejected += 1;
+            }
+            Decision::Admit => match eng.queue.try_push(spec.priority, idx) {
+                Ok(()) => {
+                    let depth = eng.queue.depth();
+                    if depth > eng.max_depth {
+                        eng.max_depth = depth;
+                    }
+                    eng.start_ready(spec.at_ms);
+                }
+                Err(PushError::Full(_)) | Err(PushError::Closed(_)) => {
+                    // decide() admits only below capacity and nothing
+                    // closes this queue, but shed rather than panic if
+                    // the policy and queue ever disagree
+                    eng.reports[idx] = Some(RequestReport {
+                        id: idx,
+                        priority: spec.priority,
+                        job: spec.job_id(),
+                        outcome: Outcome::Rejected { reason: ShedReason::QueueFull },
+                        started_ms: None,
+                        virtual_hit: false,
+                    });
+                    rejected += 1;
+                }
+            },
+        }
+        if cfg.progress_every > 0 && (idx + 1) % cfg.progress_every == 0 {
+            println!(
+                "[serve] t={:.1}ms arrived={} depth={} in_flight={} completed={} rejected={} expired={}",
+                spec.at_ms,
+                idx + 1,
+                eng.queue.depth(),
+                cfg.workers.max(1) - eng.idle,
+                eng.completed,
+                rejected,
+                eng.expired
+            );
+        }
+    }
+    eng.drain_until(f64::INFINITY);
+    debug_assert_eq!(eng.queue.depth(), 0, "virtual queue fully drained");
+    let requests: Vec<RequestReport> = eng
+        .reports
+        .into_iter()
+        .map(|r| r.expect("every request resolves to exactly one outcome"))
+        .collect();
+
+    // ---- execution phase -----------------------------------------------
+    let t0 = std::time::Instant::now();
+    let snap0 = store.snapshot();
+    let mut first_spec: HashMap<String, usize> = HashMap::new();
+    for (i, s) in specs.iter().enumerate() {
+        first_spec.entry(s.job_id()).or_insert(i);
+    }
+    // cache warming: the hottest keys, before any traffic executes
+    for job in &warmed {
+        let _ = execute_job(store, &specs[first_spec[job]]);
+    }
+    // optional eviction pressure on the disk tier between warm and serve
+    if let Some(max_bytes) = cfg.gc_max_bytes {
+        if let Err(e) = store.cache().gc(max_bytes) {
+            eprintln!("[serve] gc failed ({e:#}); continuing");
+        }
+    }
+    // distinct jobs that virtually completed, in first-start order,
+    // fanned over the real worker pool as single-job campaigns
+    let mut started: Vec<&RequestReport> =
+        requests.iter().filter(|r| r.started_ms.is_some()).collect();
+    started.sort_by(|a, b| {
+        a.started_ms
+            .expect("filtered on started")
+            .total_cmp(&b.started_ms.expect("filtered on started"))
+            .then(a.id.cmp(&b.id))
+    });
+    let mut seen = HashSet::new();
+    let exec_jobs: Vec<(String, usize)> = started
+        .iter()
+        .filter(|r| seen.insert(r.job.clone()))
+        .map(|r| (r.job.clone(), first_spec[&r.job]))
+        .collect();
+    let exec_workers = cfg.exec_workers.unwrap_or(cfg.workers).max(1);
+    let timed: Vec<(TaskResult, f64)> =
+        crate::coordinator::worker::run_jobs(exec_workers, &exec_jobs, |(_, spec_idx)| {
+            let t = std::time::Instant::now();
+            let r = execute_job(store, &specs[*spec_idx]);
+            (r, t.elapsed().as_secs_f64() * 1e3)
+        });
+    let results: Vec<(String, TaskResult)> = exec_jobs
+        .iter()
+        .zip(&timed)
+        .map(|((job, _), (r, _))| (job.clone(), r.clone()))
+        .collect();
+    let exec_wall_ms: Vec<f64> = timed.iter().map(|(_, ms)| *ms).collect();
+
+    ScenarioReport {
+        requests,
+        pop_order: eng.pop_order,
+        max_depth: eng.max_depth,
+        makespan_ms: eng.makespan_ms,
+        warmed,
+        results,
+        exec_wall_ms,
+        wall_s: t0.elapsed().as_secs_f64(),
+        cache: store.snapshot().since(&snap0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ms_orders_totally_with_ties_broken_by_index() {
+        let mut h: BinaryHeap<Reverse<(Ms, usize)>> = BinaryHeap::new();
+        h.push(Reverse((Ms(2.0), 1)));
+        h.push(Reverse((Ms(1.0), 9)));
+        h.push(Reverse((Ms(2.0), 0)));
+        let order: Vec<usize> = std::iter::from_fn(|| h.pop().map(|Reverse((_, i))| i)).collect();
+        assert_eq!(order, vec![9, 0, 1]);
+    }
+
+    #[test]
+    fn modeled_costs_are_positive_and_hit_is_cheaper() {
+        let specs = loadgen::generate(&LoadgenConfig::new(3, 32));
+        let root = Pcg::new(3, fnv1a(b"serve-service"));
+        for s in &specs {
+            let mut r = root.fork(&format!("req-{}", s.id));
+            let miss = miss_cost_ms(s, &mut r);
+            let hit = hit_cost_ms(&mut r);
+            assert!(miss > 0.0 && hit > 0.0);
+            assert!(hit < miss, "hit {hit} must undercut miss {miss}");
+        }
+    }
+
+    #[test]
+    fn serve_job_config_is_stable() {
+        let specs = loadgen::generate(&LoadgenConfig::new(5, 4));
+        let cfg = job_config(&specs[0]);
+        assert_eq!(cfg.name, "serve");
+        assert_eq!(cfg.seed, SERVE_JOB_SEED);
+        assert_eq!(cfg.iterations, SERVE_JOB_ITERATIONS);
+        // a different scenario seed must not perturb the job identity
+        let other = loadgen::generate(&LoadgenConfig::new(6, 4));
+        let cfg2 = job_config(&other[0]);
+        assert_eq!(cfg.name, cfg2.name);
+        assert_eq!(cfg.seed, cfg2.seed);
+    }
+}

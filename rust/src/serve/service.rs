@@ -1,0 +1,342 @@
+//! The real-time service front end: admission-controlled submission,
+//! a worker pool draining the bounded queue, and ticket-based results.
+//!
+//! This is the wall-clock sibling of the virtual-time scenario engine
+//! — same queue, same admission policy, same typed [`Outcome`]s, but
+//! driven by real threads and measured with [`Instant`].  `kforge
+//! serve --artifacts` replays compiled artifacts through it, and
+//! `examples/e2e_serve.rs` demos it; the deterministic load tests live
+//! on the scenario side where timing is virtual.
+//!
+//! Usage pattern: `submit` every request (each returns a [`Ticket`]
+//! immediately — shed requests come back pre-resolved), then [`close`]
+//! the intake, then [`run`] a worker pool (or [`drain_inline`] for
+//! handlers that are not `Sync`, like the PJRT runtime) until the
+//! queue is empty.  Every submitted ticket is resolved by the time
+//! `run`/`drain_inline` returns; `Ticket::wait` before that may block.
+
+use super::admission::{deadline_expired, AdmissionPolicy, Decision, Outcome, ShedReason};
+use super::queue::{BoundedQueue, Priority, PushError};
+use crate::coordinator::worker::run_jobs;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One request's eventual resolution: the typed outcome, plus the
+/// handler's value when it completed.
+pub type Resolution<R> = (Outcome, Option<R>);
+
+struct TicketCell<R> {
+    slot: Mutex<Option<Resolution<R>>>,
+    ready: Condvar,
+}
+
+impl<R> TicketCell<R> {
+    fn resolve(&self, outcome: Outcome, value: Option<R>) {
+        let mut slot = self.slot.lock().unwrap();
+        debug_assert!(slot.is_none(), "a ticket resolves exactly once");
+        *slot = Some((outcome, value));
+        self.ready.notify_all();
+    }
+}
+
+/// Handle to one submitted request.  Shed requests are resolved before
+/// `submit` even returns; admitted ones resolve as the pool processes
+/// them.
+pub struct Ticket<R>(Arc<TicketCell<R>>);
+
+impl<R> Ticket<R> {
+    /// Block until resolved.  Call only after `run`/`drain_inline` has
+    /// returned (or from another thread while the pool runs).
+    pub fn wait(self) -> Resolution<R> {
+        let mut slot = self.0.slot.lock().unwrap();
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self.0.ready.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking check; `None` while the request is still queued or
+    /// in flight.
+    pub fn try_take(&self) -> Option<Resolution<R>> {
+        self.0.slot.lock().unwrap().take()
+    }
+}
+
+struct Request<T, R> {
+    payload: T,
+    deadline_ms: Option<f64>,
+    enqueued: Instant,
+    ticket: Arc<TicketCell<R>>,
+}
+
+/// Monotonic service counters (a snapshot, not a live view).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServiceCounts {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub failed: u64,
+    pub in_flight: u64,
+    pub depth: usize,
+}
+
+/// Admission-controlled request service over payloads `T` resolving to
+/// handler results `R`.
+pub struct Service<T, R> {
+    queue: BoundedQueue<Request<T, R>>,
+    policy: AdmissionPolicy,
+    started: Instant,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    expired: AtomicU64,
+    failed: AtomicU64,
+    in_flight: AtomicU64,
+}
+
+impl<T, R> Service<T, R> {
+    pub fn new(policy: AdmissionPolicy) -> Service<T, R> {
+        Service {
+            queue: BoundedQueue::new(policy.queue_capacity),
+            policy,
+            started: Instant::now(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+        }
+    }
+
+    fn shed(&self, reason: ShedReason) -> Ticket<R> {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        let cell = Arc::new(TicketCell { slot: Mutex::new(None), ready: Condvar::new() });
+        cell.resolve(Outcome::Rejected { reason }, None);
+        Ticket(cell)
+    }
+
+    /// Submit a request.  Never blocks: a shed request's ticket comes
+    /// back already resolved as [`Outcome::Rejected`].
+    pub fn submit(&self, priority: Priority, deadline_ms: Option<f64>, payload: T) -> Ticket<R> {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Decision::Shed(reason) = self.policy.decide(self.queue.depth()) {
+            return self.shed(reason);
+        }
+        let cell = Arc::new(TicketCell { slot: Mutex::new(None), ready: Condvar::new() });
+        let req = Request {
+            payload,
+            deadline_ms,
+            enqueued: Instant::now(),
+            ticket: Arc::clone(&cell),
+        };
+        match self.queue.try_push(priority, req) {
+            Ok(()) => Ticket(cell),
+            // decide() raced another producer — shed, don't block
+            Err(PushError::Full(_)) => self.shed(ShedReason::QueueFull),
+            Err(PushError::Closed(_)) => self.shed(ShedReason::Closed),
+        }
+    }
+
+    /// Stop accepting requests; already-queued ones still drain.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    /// Resolve one queued request with `handler`; false once the queue
+    /// is closed and drained.
+    fn serve_one<F>(&self, handler: &F) -> bool
+    where
+        F: Fn(&T) -> anyhow::Result<R>,
+    {
+        let Some((_, req)) = self.queue.pop_blocking() else {
+            return false;
+        };
+        let waited_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+        if deadline_expired(req.deadline_ms, waited_ms) {
+            self.expired.fetch_add(1, Ordering::Relaxed);
+            req.ticket.resolve(Outcome::DeadlineExceeded { waited_ms }, None);
+            return true;
+        }
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        let t = Instant::now();
+        let result = handler(&req.payload);
+        let service_ms = t.elapsed().as_secs_f64() * 1e3;
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        match result {
+            Ok(value) => {
+                self.completed.fetch_add(1, Ordering::Relaxed);
+                req.ticket
+                    .resolve(Outcome::Completed { queue_ms: waited_ms, service_ms }, Some(value));
+            }
+            Err(e) => {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+                req.ticket.resolve(Outcome::Failed { error: format!("{e:#}") }, None);
+            }
+        }
+        true
+    }
+
+    /// Drain the queue with a pool of `workers` threads.  Returns once
+    /// the queue is closed and empty; every admitted ticket is resolved.
+    pub fn run<F>(&self, workers: usize, handler: F)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(&T) -> anyhow::Result<R> + Sync,
+    {
+        let lanes: Vec<usize> = (0..workers.max(1)).collect();
+        run_jobs(workers.max(1), &lanes, |_| while self.serve_one(&handler) {});
+    }
+
+    /// Drain the queue on the calling thread.  For handlers that are
+    /// not `Sync` (the PJRT runtime's executable cache, say); otherwise
+    /// identical to `run(1, ..)`.
+    pub fn drain_inline<F>(&self, handler: F)
+    where
+        F: Fn(&T) -> anyhow::Result<R>,
+    {
+        while self.serve_one(&handler) {}
+    }
+
+    pub fn counts(&self) -> ServiceCounts {
+        ServiceCounts {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            depth: self.queue.depth(),
+        }
+    }
+
+    /// One greppable live-stats line.
+    pub fn stats_line(&self) -> String {
+        let c = self.counts();
+        format!(
+            "serve: uptime={:.1}s depth={} in_flight={} submitted={} completed={} rejected={} expired={} failed={}",
+            self.started.elapsed().as_secs_f64(),
+            c.depth,
+            c.in_flight,
+            c.submitted,
+            c.completed,
+            c.rejected,
+            c.expired,
+            c.failed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service(capacity: usize) -> Service<u32, u32> {
+        Service::new(AdmissionPolicy::new(capacity))
+    }
+
+    #[test]
+    fn submit_close_drain_resolves_every_ticket() {
+        let svc = service(16);
+        let tickets: Vec<Ticket<u32>> =
+            (0..8).map(|i| svc.submit(Priority::Batch, None, i)).collect();
+        svc.close();
+        svc.drain_inline(|&x| Ok(x * 2));
+        for (i, t) in tickets.into_iter().enumerate() {
+            let (outcome, value) = t.wait();
+            assert!(outcome.is_completed(), "{outcome:?}");
+            assert_eq!(value, Some(i as u32 * 2));
+        }
+        let c = svc.counts();
+        assert_eq!((c.submitted, c.completed, c.rejected), (8, 8, 0));
+        assert_eq!((c.depth, c.in_flight), (0, 0));
+    }
+
+    #[test]
+    fn overload_sheds_with_queue_full() {
+        let svc = service(2);
+        let tickets: Vec<Ticket<u32>> =
+            (0..5).map(|i| svc.submit(Priority::Interactive, None, i)).collect();
+        // no worker ran yet: 2 queued, 3 shed pre-resolved
+        let shed: Vec<bool> = tickets.iter().map(|t| t.try_take().is_some()).collect();
+        assert_eq!(shed, vec![false, false, true, true, true]);
+        assert_eq!(svc.counts().rejected, 3);
+        svc.close();
+        svc.drain_inline(|&x| Ok(x));
+        assert_eq!(svc.counts().completed, 2);
+    }
+
+    #[test]
+    fn expired_deadline_skips_the_handler() {
+        let svc = service(4);
+        let t = svc.submit(Priority::Interactive, Some(0.0), 7u32);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        svc.close();
+        let ran = std::sync::atomic::AtomicU64::new(0);
+        svc.drain_inline(|&x| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            Ok(x)
+        });
+        let (outcome, value) = t.wait();
+        assert_eq!(outcome.label(), "deadline_exceeded");
+        assert_eq!(value, None);
+        assert_eq!(ran.load(Ordering::Relaxed), 0, "expired request must not execute");
+        assert_eq!(svc.counts().expired, 1);
+    }
+
+    #[test]
+    fn handler_errors_become_failed_outcomes() {
+        let svc = service(4);
+        let ok = svc.submit(Priority::Batch, None, 1u32);
+        let bad = svc.submit(Priority::Batch, None, 13u32);
+        svc.close();
+        svc.drain_inline(|&x| {
+            if x == 13 {
+                anyhow::bail!("unlucky")
+            }
+            Ok(x)
+        });
+        assert!(ok.wait().0.is_completed());
+        let (outcome, _) = bad.wait();
+        match outcome {
+            Outcome::Failed { error } => assert!(error.contains("unlucky"), "{error}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        let c = svc.counts();
+        assert_eq!((c.completed, c.failed), (1, 1));
+    }
+
+    #[test]
+    fn closed_service_sheds_new_submissions() {
+        let svc = service(4);
+        svc.close();
+        let t = svc.submit(Priority::Batch, None, 1u32);
+        match t.wait().0 {
+            Outcome::Rejected { reason } => assert_eq!(reason.label(), "closed"),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn concurrent_pool_conserves_requests() {
+        let svc = service(256);
+        let tickets: Vec<Ticket<u32>> =
+            (0..100).map(|i| svc.submit(Priority::Batch, None, i)).collect();
+        svc.close();
+        svc.run(4, |&x| Ok(x + 1));
+        let mut sum = 0u64;
+        for t in tickets {
+            let (outcome, value) = t.wait();
+            assert!(outcome.is_completed());
+            sum += u64::from(value.unwrap());
+        }
+        assert_eq!(sum, (1..=100).sum::<u64>());
+        let c = svc.counts();
+        assert_eq!((c.submitted, c.completed, c.failed, c.rejected), (100, 100, 0, 0));
+    }
+}

@@ -38,6 +38,22 @@ impl CacheStats {
         }
         self.hits as f64 / self.lookups() as f64
     }
+
+    /// Counter delta since an `earlier` snapshot of the same counters
+    /// (saturating, so a stale snapshot from another store reads as
+    /// zeros rather than wrapping).  The serve path brackets its
+    /// execution phase with two [`crate::store::Store::snapshot`]s and
+    /// reports this difference.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            resumed: self.resumed.saturating_sub(earlier.resumed),
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            bytes_written: self.bytes_written.saturating_sub(earlier.bytes_written),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+        }
+    }
 }
 
 impl fmt::Display for CacheStats {
@@ -141,6 +157,20 @@ mod tests {
         assert_eq!(s.bytes_read, 10);
         assert_eq!(s.bytes_written, 7);
         assert_eq!(s.evictions, 2);
+    }
+
+    #[test]
+    fn since_is_a_saturating_delta() {
+        let early = CacheStats { hits: 2, misses: 1, bytes_written: 100, ..Default::default() };
+        let late = CacheStats { hits: 5, misses: 1, bytes_written: 160, ..Default::default() };
+        let d = late.since(&early);
+        assert_eq!(d.hits, 3);
+        assert_eq!(d.misses, 0);
+        assert_eq!(d.bytes_written, 60);
+        // a snapshot from the "future" saturates to zero, never wraps
+        let weird = early.since(&late);
+        assert_eq!(weird.hits, 0);
+        assert_eq!(weird.bytes_written, 0);
     }
 
     #[test]

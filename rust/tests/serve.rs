@@ -1,0 +1,202 @@
+//! Serve-subsystem integration: the ISSUE 6 acceptance properties.
+//!
+//! - a scenario's outcome census, pop order, virtual latencies and
+//!   makespan are bit-reproducible given a seed;
+//! - synthesized results are bit-identical across execution pool
+//!   widths 1/4/16 (virtual service capacity held fixed);
+//! - the queue is FIFO per priority class under a seeded burst;
+//! - the declared p99 / shed-rate budgets hold for the default
+//!   scenario, requests are conserved, and nothing fails;
+//! - cache warming + `gc` eviction pressure behave on a disk store.
+
+use kforge::serve::{
+    run_scenario, summarize, Priority, ScenarioConfig, ScenarioReport, SERVE_SCHEMA,
+};
+use kforge::store::Store;
+use kforge::util::json::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("kforge_serve_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The deterministic (virtual-phase) view of a report: everything
+/// except wall-clock measurements and store byte counters.
+fn virtual_fingerprint(r: &ScenarioReport) -> Vec<String> {
+    let mut out = Vec::new();
+    for req in &r.requests {
+        out.push(format!(
+            "{}|{}|{}|{:?}|{}|{:?}",
+            req.id,
+            req.priority.label(),
+            req.job,
+            req.outcome.latency_ms().map(f64::to_bits),
+            req.outcome.label(),
+            req.started_ms.map(f64::to_bits),
+        ));
+    }
+    out.push(format!("pop={:?}", r.pop_order));
+    out.push(format!("depth={} makespan={}", r.max_depth, r.makespan_ms.to_bits()));
+    out.push(format!("warmed={:?} jobs={:?}", r.warmed, r.results.iter().map(|(j, _)| j).collect::<Vec<_>>()));
+    out
+}
+
+fn assert_results_bit_identical(a: &ScenarioReport, b: &ScenarioReport) {
+    let index: HashMap<&String, &kforge::coordinator::TaskResult> =
+        b.results.iter().map(|(j, r)| (j, r)).collect();
+    assert_eq!(a.results.len(), b.results.len());
+    for (job, x) in &a.results {
+        let y = index.get(job).unwrap_or_else(|| panic!("job {job} missing from other run"));
+        assert_eq!(x.problem_id, y.problem_id, "{job}");
+        assert_eq!(x.persona, y.persona, "{job}");
+        assert_eq!(x.state_history, y.state_history, "{job}");
+        assert_eq!(x.outcome.correct, y.outcome.correct, "{job}");
+        assert_eq!(x.outcome.speedup.to_bits(), y.outcome.speedup.to_bits(), "{job}");
+        assert_eq!(x.best_iteration, y.best_iteration, "{job}");
+        assert_eq!(x.baseline_s.to_bits(), y.baseline_s.to_bits(), "{job}");
+        assert_eq!(x.best_candidate_s.map(f64::to_bits), y.best_candidate_s.map(f64::to_bits), "{job}");
+    }
+}
+
+#[test]
+fn scenario_outcome_is_deterministic_given_a_seed() {
+    let cfg = ScenarioConfig::new(0xC0FFEE, 48, 4);
+    let a = run_scenario(&Store::memory(), &cfg);
+    let b = run_scenario(&Store::memory(), &cfg);
+    assert_eq!(virtual_fingerprint(&a), virtual_fingerprint(&b));
+    assert_results_bit_identical(&a, &b);
+    // a different seed reshapes the scenario
+    let c = run_scenario(&Store::memory(), &ScenarioConfig::new(0xC0FFEF, 48, 4));
+    assert_ne!(virtual_fingerprint(&a), virtual_fingerprint(&c));
+}
+
+#[test]
+fn results_bit_identical_across_exec_worker_counts() {
+    // virtual service capacity stays at 4 (part of the deterministic
+    // scenario); only the real execution pool width varies
+    let mut reports = Vec::new();
+    for exec_workers in [1usize, 4, 16] {
+        let mut cfg = ScenarioConfig::new(0xBEEF, 32, 4);
+        cfg.exec_workers = Some(exec_workers);
+        reports.push(run_scenario(&Store::memory(), &cfg));
+    }
+    for r in &reports[1..] {
+        assert_eq!(virtual_fingerprint(&reports[0]), virtual_fingerprint(r));
+        assert_results_bit_identical(&reports[0], r);
+    }
+}
+
+#[test]
+fn queue_is_fifo_per_priority_class_under_a_seeded_burst() {
+    // small service capacity so bursts actually queue
+    let mut cfg = ScenarioConfig::new(0xF1F0, 96, 2);
+    cfg.queue_capacity = 12;
+    cfg.shed_depth = 12;
+    let report = run_scenario(&Store::memory(), &cfg);
+    assert!(!report.pop_order.is_empty());
+    let mut last_interactive = None;
+    let mut last_batch = None;
+    for &(priority, id) in &report.pop_order {
+        let last = match priority {
+            Priority::Interactive => &mut last_interactive,
+            Priority::Batch => &mut last_batch,
+        };
+        if let Some(prev) = *last {
+            assert!(id > prev, "{} lane popped {id} after {prev}", priority.label());
+        }
+        *last = Some(id);
+    }
+    // both classes flowed through the queue
+    assert!(report.pop_order.iter().any(|(p, _)| *p == Priority::Interactive));
+    assert!(report.pop_order.iter().any(|(p, _)| *p == Priority::Batch));
+    // the queue actually built depth under the burst
+    assert!(report.max_depth >= 2, "max depth {}", report.max_depth);
+}
+
+#[test]
+fn default_scenario_holds_its_budgets_and_conserves_requests() {
+    let cfg = ScenarioConfig::new(0x5EED, 64, 4);
+    let report = run_scenario(&Store::memory(), &cfg);
+    let summary = summarize(&cfg, &report);
+    // conservation: every request resolves to exactly one outcome
+    assert_eq!(
+        summary.completed + summary.rejected + summary.expired + summary.failed,
+        summary.requests
+    );
+    assert_eq!(summary.requests, 64);
+    // synthetic synthesis jobs are infallible
+    assert_eq!(summary.failed, 0);
+    assert!(summary.completed > 0);
+    // the declared budgets: virtual p99 and shed rate
+    let p99 = summary.latency.expect("completed requests exist").p99;
+    assert!(
+        summary.within_latency_budget(),
+        "virtual p99 {p99:.2} ms over the {:.1} ms budget",
+        summary.p99_budget_ms
+    );
+    assert!(
+        summary.within_shed_budget(),
+        "shed rate {:.3} over the {:.2} budget",
+        summary.shed_rate(),
+        summary.shed_budget
+    );
+    // histogram counts completed requests exactly
+    assert_eq!(summary.hist.total(), summary.completed as u64);
+    // the JSON surface carries the schema and the same census
+    let j = summary.to_json("synthetic");
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some(SERVE_SCHEMA));
+    let reqs = j.get("requests").unwrap();
+    assert_eq!(reqs.get("total").and_then(Json::as_i64), Some(64));
+    assert_eq!(reqs.get("failed").and_then(Json::as_i64), Some(0));
+    assert_eq!(
+        j.get("budgets").unwrap().get("within").and_then(Json::as_bool),
+        Some(true)
+    );
+}
+
+#[test]
+fn warming_and_gc_pressure_on_a_disk_store() {
+    let dir = tmpdir("warm_gc");
+    let mut cfg = ScenarioConfig::new(21, 48, 4);
+    // nothing sheds or expires: every request (and so every hot job)
+    // completes and executes
+    cfg.queue_capacity = 64;
+    cfg.shed_depth = 64;
+    cfg.load.deadline_ms = 1e9;
+    cfg.warm_hottest = 2;
+    cfg.gc_max_bytes = Some(0); // evict the whole disk tier after warming
+    let store = Store::at_dir(&dir, false).unwrap();
+    let report = run_scenario(&store, &cfg);
+    assert_eq!(report.warmed.len(), 2);
+    assert!(report.results.len() > 2, "only {} distinct jobs", report.results.len());
+    let stats = report.cache;
+    // the warm phase wrote one disk entry per warmed job; gc --max-bytes 0
+    // then evicted them all
+    assert_eq!(stats.evictions, 2, "{stats:?}");
+    // warmed jobs still hit when served: eviction only empties the disk
+    // tier, the in-process memory tier keeps the hot entries
+    assert!(stats.hits >= 2, "{stats:?}");
+    assert!(stats.misses > 0, "{stats:?}");
+    assert!(stats.bytes_written > 0, "{stats:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disabled_store_models_no_hits_and_warms_nothing() {
+    let mut cfg = ScenarioConfig::new(33, 32, 4);
+    cfg.warm_hottest = 4;
+    let report = run_scenario(&Store::disabled(), &cfg);
+    assert!(report.warmed.is_empty(), "a disabled store cannot be warmed");
+    assert!(report.requests.iter().all(|r| !r.virtual_hit));
+    assert_eq!(report.cache, kforge::store::CacheStats::default());
+    // requests still conserve and execute
+    let summary = summarize(&cfg, &report);
+    assert_eq!(
+        summary.completed + summary.rejected + summary.expired,
+        summary.requests
+    );
+    assert!(!report.results.is_empty());
+}

@@ -281,6 +281,127 @@ fn tune_and_campaign_entries_share_a_store_without_collisions() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ---------------------------------------------------------------------------
+// serve traffic over the store: the ISSUE 6 acceptance properties
+// ---------------------------------------------------------------------------
+
+fn assert_serve_results_bit_identical(
+    a: &[(String, kforge::coordinator::TaskResult)],
+    b: &[(String, kforge::coordinator::TaskResult)],
+) {
+    let index: std::collections::HashMap<&String, &kforge::coordinator::TaskResult> =
+        b.iter().map(|(j, r)| (j, r)).collect();
+    assert_eq!(a.len(), b.len());
+    for (job, x) in a {
+        let y = index.get(job).unwrap_or_else(|| panic!("job {job} missing"));
+        assert_eq!(x.problem_id, y.problem_id, "{job}");
+        assert_eq!(x.state_history, y.state_history, "{job}");
+        assert_eq!(x.outcome.correct, y.outcome.correct, "{job}");
+        assert_eq!(x.outcome.speedup.to_bits(), y.outcome.speedup.to_bits(), "{job}");
+        assert_eq!(x.baseline_s.to_bits(), y.baseline_s.to_bits(), "{job}");
+        assert_eq!(
+            x.best_candidate_s.map(f64::to_bits),
+            y.best_candidate_s.map(f64::to_bits),
+            "{job}"
+        );
+    }
+}
+
+/// A deliberately lossy serve scenario: a tiny queue under bursty
+/// traffic with near-instant deadlines, so requests are shed at the
+/// door and expire while queued.
+fn lossy_serve_cfg() -> kforge::serve::ScenarioConfig {
+    let mut cfg = kforge::serve::ScenarioConfig::new(0xD00D, 48, 2);
+    cfg.queue_capacity = 3;
+    cfg.shed_depth = 3;
+    cfg.warm_hottest = 0;
+    cfg.load.deadline_ms = 1.5;
+    cfg
+}
+
+#[test]
+fn lossy_serve_traffic_never_corrupts_the_store() {
+    use kforge::serve::run_scenario;
+    let cfg = lossy_serve_cfg();
+    let dir = tmpdir("serve_lossy");
+    let first = {
+        let s = Store::at_dir(&dir, false).unwrap();
+        run_scenario(&s, &cfg)
+    };
+    let shed = first.requests.iter().filter(|r| r.outcome.is_rejected()).count();
+    let expired =
+        first.requests.iter().filter(|r| r.outcome.label() == "deadline_exceeded").count();
+    assert!(shed > 0, "a 3-deep queue must shed under 12-request bursts");
+    assert!(expired > 0, "1.5 ms deadlines must expire while queued");
+    assert!(!first.results.is_empty());
+    let n = first.results.len() as u64;
+    assert_eq!(first.cache.misses, n, "{:?}", first.cache);
+    assert!(first.cache.bytes_written > 0);
+    // every disk object written under lossy traffic is readable: a
+    // fresh store instance answers the identical rerun entirely from
+    // disk, bit-identical
+    let second = {
+        let s = Store::at_dir(&dir, false).unwrap();
+        run_scenario(&s, &cfg)
+    };
+    assert_eq!(second.cache.hits, n, "{:?}", second.cache);
+    assert_eq!(second.cache.misses, 0);
+    assert_serve_results_bit_identical(&first.results, &second.results);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lossy_serve_traffic_never_corrupts_the_journals() {
+    use kforge::serve::run_scenario;
+    let cfg = lossy_serve_cfg();
+    let dir = tmpdir("serve_journals");
+    let first = {
+        let s = Store::at_dir(&dir, false).unwrap();
+        run_scenario(&s, &cfg)
+    };
+    // serve jobs run as single-job campaigns: one journal per distinct
+    // executed job, no collisions
+    let journals: Vec<PathBuf> = std::fs::read_dir(dir.join("journals"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    assert_eq!(journals.len(), first.results.len());
+    // every journal replays: with the object store wiped, --resume
+    // restores every job without recomputing, bit-identical
+    let s = Store::at_dir(&dir, true).unwrap();
+    s.cache().clear().unwrap();
+    let resumed = run_scenario(&s, &cfg);
+    assert_eq!(resumed.cache.resumed, first.results.len() as u64, "{:?}", resumed.cache);
+    assert_eq!(resumed.cache.misses, 0);
+    assert_serve_results_bit_identical(&first.results, &resumed.results);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_results_match_a_storeless_run_job_for_job() {
+    use kforge::serve::run_scenario;
+    // hit modeling differs with the store off, so the virtual outcome
+    // census (and thus the executed job set) may differ — but any job
+    // both runs execute must synthesize bit-identically: serve jobs
+    // are pure functions of their key, not of serving conditions
+    let cfg = lossy_serve_cfg();
+    let with_store = run_scenario(&Store::memory(), &cfg);
+    let without = run_scenario(&Store::disabled(), &cfg);
+    let index: std::collections::HashMap<&String, &kforge::coordinator::TaskResult> =
+        without.results.iter().map(|(j, r)| (j, r)).collect();
+    let mut overlap = 0;
+    for (job, x) in &with_store.results {
+        if let Some(y) = index.get(job) {
+            overlap += 1;
+            assert_eq!(x.outcome.correct, y.outcome.correct, "{job}");
+            assert_eq!(x.outcome.speedup.to_bits(), y.outcome.speedup.to_bits(), "{job}");
+            assert_eq!(x.baseline_s.to_bits(), y.baseline_s.to_bits(), "{job}");
+            assert_eq!(x.state_history, y.state_history, "{job}");
+        }
+    }
+    assert!(overlap > 0, "runs share no jobs; the comparison proved nothing");
+}
+
 #[test]
 fn resume_with_untouched_journal_recomputes_nothing() {
     // the no-kill degenerate case: rerunning with --resume after a
