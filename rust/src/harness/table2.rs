@@ -4,23 +4,26 @@
 //! (MPS-unsupported ops excluded).  With the open platform API the
 //! census is registry-driven: one row per registered platform (each
 //! applying its own unsupported-op list) plus the unfiltered suite.
+//! Columns are level-registry-driven ([`Level::ALL`]), so a new tier
+//! (like the level-4 whole-model workloads) appears without an edit.
 
 use super::render;
 use crate::platform::registry;
-use crate::workloads::Suite;
+use crate::workloads::{Level, Suite};
 
-/// Table-2 data: (benchmark, l1, l2, l3).
+/// Table-2 data: per benchmark, the per-level counts aligned with
+/// [`Level::ALL`].
 pub struct Table2 {
-    pub rows: Vec<(String, usize, usize, usize)>,
+    pub rows: Vec<(String, Vec<usize>)>,
 }
 
 impl Table2 {
     /// Look up a row by benchmark name.
-    pub fn row(&self, benchmark: &str) -> Option<(usize, usize, usize)> {
+    pub fn row(&self, benchmark: &str) -> Option<&[usize]> {
         self.rows
             .iter()
-            .find(|(n, _, _, _)| n == benchmark)
-            .map(|(_, a, b, c)| (*a, *b, *c))
+            .find(|(n, _)| n == benchmark)
+            .map(|(_, counts)| counts.as_slice())
     }
 }
 
@@ -29,20 +32,28 @@ pub fn run() -> (Table2, String) {
     let mut rows = Vec::new();
     for platform in registry().platforms() {
         let filtered = full.supported_on(platform.spec());
-        let (l1, l2, l3) = filtered.distribution();
-        rows.push((format!("KernelBench-{}", platform.language()), l1, l2, l3));
+        rows.push((
+            format!("KernelBench-{}", platform.language()),
+            filtered.distribution(),
+        ));
     }
-    let (f1, f2, f3) = full.distribution();
-    rows.push(("KernelBench".into(), f1, f2, f3));
+    rows.push(("KernelBench".into(), full.distribution()));
     let data = Table2 { rows };
     let rows: Vec<Vec<String>> = data
         .rows
         .iter()
-        .map(|(n, a, b, c)| vec![n.clone(), a.to_string(), b.to_string(), c.to_string()])
+        .map(|(n, counts)| {
+            let mut row = vec![n.clone()];
+            row.extend(counts.iter().map(|c| c.to_string()));
+            row
+        })
+        .collect();
+    let headers: Vec<&'static str> = std::iter::once("Benchmark")
+        .chain(Level::ALL.iter().map(|l| l.name()))
         .collect();
     let text = render::table(
         "Table 2: problem distribution (each platform excludes its unsupported ops)",
-        &["Benchmark", "Level 1", "Level 2", "Level 3"],
+        &headers,
         &rows,
     );
     (data, text)
@@ -59,12 +70,14 @@ mod tests {
     #[test]
     fn matches_paper_counts() {
         let (data, text) = super::run();
-        // the paper's pair, by name (no positional coupling)
-        assert_eq!(data.row("KernelBench-Metal"), Some((91, 79, 50)));
-        assert_eq!(data.row("KernelBench"), Some((100, 100, 50)));
+        // the paper's pair, by name (no positional coupling); the
+        // level-4 whole-model tier rides along as the fourth column
+        assert_eq!(data.row("KernelBench-Metal"), Some(&[91, 79, 50, 8][..]));
+        assert_eq!(data.row("KernelBench"), Some(&[100, 100, 50, 8][..]));
         // CUDA supports the full suite
-        assert_eq!(data.row("KernelBench-CUDA"), Some((100, 100, 50)));
+        assert_eq!(data.row("KernelBench-CUDA"), Some(&[100, 100, 50, 8][..]));
         assert!(text.contains("91"));
+        assert!(text.contains("Level 4"));
     }
 
     #[test]
@@ -88,7 +101,7 @@ mod tests {
             .filter(|p| p.op_families.contains(&"conv3d_transpose"))
             .count();
         assert!(excluded > 0);
-        let (l1, l2, l3) = data.row("KernelBench-HIP").unwrap();
-        assert_eq!(l1 + l2 + l3, full.len() - excluded);
+        let counts = data.row("KernelBench-HIP").unwrap();
+        assert_eq!(counts.iter().sum::<usize>(), full.len() - excluded);
     }
 }

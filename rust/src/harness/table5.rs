@@ -15,9 +15,10 @@ use crate::workloads::refcorpus::RefCorpus;
 use crate::workloads::Level;
 
 pub struct Table5 {
-    /// (platform, frontend, persona, threshold,
-    ///  [ref L1,L2,L3], [ref+prof L1,L2,L3])
-    pub rows: Vec<(String, String, String, f64, [f64; 3], [f64; 3])>,
+    /// (platform, frontend, persona, threshold, ref, ref+prof) — the
+    /// last two are per-level fast_p vectors aligned with
+    /// [`Level::ALL`], so a new suite tier adds a column.
+    pub rows: Vec<(String, String, String, f64, Vec<f64>, Vec<f64>)>,
 }
 
 impl Table5 {
@@ -25,7 +26,7 @@ impl Table5 {
     pub fn platform_rows(
         &self,
         platform: &str,
-    ) -> Vec<&(String, String, String, f64, [f64; 3], [f64; 3])> {
+    ) -> Vec<&(String, String, String, f64, Vec<f64>, Vec<f64>)> {
         self.rows.iter().filter(|r| r.0 == platform).collect()
     }
 }
@@ -51,8 +52,8 @@ pub fn run(scale: Scale) -> (Table5, String) {
 
         for &threshold in &[1.0, 1.5] {
             for persona in &personas {
-                let mut r = [0.0; 3];
-                let mut pr = [0.0; 3];
+                let mut r = vec![0.0; Level::COUNT];
+                let mut pr = vec![0.0; Level::COUNT];
                 for (i, level) in Level::ALL.iter().enumerate() {
                     r[i] = metrics::fast_p(&with_ref.outcomes(persona.name, *level), threshold);
                     pr[i] = metrics::fast_p(&with_prof.outcomes(persona.name, *level), threshold);
@@ -71,26 +72,22 @@ pub fn run(scale: Scale) -> (Table5, String) {
     let table_rows: Vec<Vec<String>> = rows
         .iter()
         .map(|(plat, fe, n, t, r, p)| {
-            vec![
-                plat.clone(),
-                fe.clone(),
-                format!("fast_{t}"),
-                n.clone(),
-                format!("{:.3}", r[0]),
-                format!("{:.3}", r[1]),
-                format!("{:.3}", r[2]),
-                format!("{:.3}", p[0]),
-                format!("{:.3}", p[1]),
-                format!("{:.3}", p[2]),
-            ]
+            let mut row = vec![plat.clone(), fe.clone(), format!("fast_{t}"), n.clone()];
+            for arm in [r, p] {
+                row.extend(arm.iter().map(|v| format!("{v:.3}")));
+            }
+            row
         })
         .collect();
+    let mut header: Vec<String> =
+        ["platform", "frontend", "metric", "Model"].map(String::from).to_vec();
+    for arm in ["ref", "prof"] {
+        header.extend(Level::ALL.iter().map(|l| format!("{arm} {}", l.tag())));
+    }
+    let header: Vec<&str> = header.iter().map(String::as_str).collect();
     let text = render::table(
         "Table 5: impact of profiling information per platform/frontend (CUDA-ref vs CUDA-ref+prof)",
-        &[
-            "platform", "frontend", "metric", "Model", "ref L1", "ref L2", "ref L3", "prof L1",
-            "prof L2", "prof L3",
-        ],
+        &header,
         &table_rows,
     );
     (Table5 { rows }, text)

@@ -57,6 +57,18 @@ pub fn graph(seed: u64) -> Graph {
     graph_with(seed, &FuzzConfig::default())
 }
 
+/// Unary kinds safe for the DAG motifs: bounded or polynomial, so the
+/// duplicated chains don't drag the finite-evaluation rate down (exp
+/// can overflow, sqrt NaNs on negatives).
+const DAG_UNARIES: &[UnaryKind] = &[
+    UnaryKind::Relu,
+    UnaryKind::Sigmoid,
+    UnaryKind::Gelu,
+    UnaryKind::Tanh,
+    UnaryKind::Neg,
+    UnaryKind::Square,
+];
+
 /// Generate the seeded graph with explicit knobs.
 pub fn graph_with(seed: u64, cfg: &FuzzConfig) -> Graph {
     let mut rng = Pcg::new(seed, 0xF0_77_ED);
@@ -517,26 +529,52 @@ impl Gen<'_> {
 
     /// Emit a rewrite-trigger motif instead of a single op.
     fn motif(&mut self) {
-        if self.rng.chance(0.5) {
-            // §7.4: sum over columns of (x@W [+ bias]) — the algebraic
-            // matmul→matvec reduction's exact match shape
-            let mm = self.matmul();
-            let fed = if self.rng.chance(0.6) {
-                let n = self.shapes[mm].dim(1);
-                let bias = self.fresh(Shape::of(&[n]));
-                self.push(Op::Binary { kind: BinaryKind::Add, lhs: mm, rhs: bias })
-            } else {
-                mm
-            };
-            self.push(Op::Reduce { kind: ReduceKind::Sum, axis: 1, input: fed });
-        } else {
-            // §7.3: max₁ → mean over the now-singleton axis → sub = 0
-            let x = self.rank2();
-            let mx = self.push(Op::Reduce { kind: ReduceKind::Max, axis: 1, input: x });
-            let mean = self.push(Op::Reduce { kind: ReduceKind::Mean, axis: 1, input: mx });
-            let sub = self.push(Op::Binary { kind: BinaryKind::Sub, lhs: mx, rhs: mean });
-            if self.rng.chance(0.5) {
-                self.push(Op::Unary { kind: UnaryKind::Gelu, input: sub });
+        match self.rng.below(4) {
+            0 => {
+                // §7.4: sum over columns of (x@W [+ bias]) — the algebraic
+                // matmul→matvec reduction's exact match shape
+                let mm = self.matmul();
+                let fed = if self.rng.chance(0.6) {
+                    let n = self.shapes[mm].dim(1);
+                    let bias = self.fresh(Shape::of(&[n]));
+                    self.push(Op::Binary { kind: BinaryKind::Add, lhs: mm, rhs: bias })
+                } else {
+                    mm
+                };
+                self.push(Op::Reduce { kind: ReduceKind::Sum, axis: 1, input: fed });
+            }
+            1 => {
+                // §7.3: max₁ → mean over the now-singleton axis → sub = 0
+                let x = self.rank2();
+                let mx = self.push(Op::Reduce { kind: ReduceKind::Max, axis: 1, input: x });
+                let mean = self.push(Op::Reduce { kind: ReduceKind::Mean, axis: 1, input: mx });
+                let sub = self.push(Op::Binary { kind: BinaryKind::Sub, lhs: mx, rhs: mean });
+                if self.rng.chance(0.5) {
+                    self.push(Op::Unary { kind: UnaryKind::Gelu, input: sub });
+                }
+            }
+            2 => {
+                // DAG fan-out join: one value feeding two divergent
+                // chains, rejoined by a binary — the cross-kernel
+                // dataflow shape whole-model (level-4) graphs are made
+                // of, which fusion must not duplicate
+                let x = self.rank2();
+                let ka = *self.rng.choose(DAG_UNARIES);
+                let kb = *self.rng.choose(DAG_UNARIES);
+                let a = self.push(Op::Unary { kind: ka, input: x });
+                let b = self.push(Op::Unary { kind: kb, input: x });
+                let kind = if self.rng.chance(0.5) { BinaryKind::Mul } else { BinaryKind::Add };
+                self.push(Op::Binary { kind, lhs: a, rhs: b });
+            }
+            _ => {
+                // shared subexpression across a kernel boundary: the
+                // same op emitted twice from the same operand (CSE
+                // fodder — `cse::eliminate` must merge the twins)
+                let x = self.rank2();
+                let k = *self.rng.choose(DAG_UNARIES);
+                let t1 = self.push(Op::Unary { kind: k, input: x });
+                let t2 = self.push(Op::Unary { kind: k, input: x });
+                self.push(Op::Binary { kind: BinaryKind::Add, lhs: t1, rhs: t2 });
             }
         }
     }
@@ -569,7 +607,7 @@ mod tests {
     #[test]
     fn generator_covers_the_op_vocabulary() {
         let mut seen: BTreeSet<String> = BTreeSet::new();
-        for seed in 0..600 {
+        for seed in 0..1000 {
             for n in graph(seed).nodes.iter() {
                 let m = n.op.mnemonic();
                 // normalize reduce_<kind><axis> to reduce_<kind>
@@ -623,6 +661,42 @@ mod tests {
         }
         assert!(algebraic_hits >= 20, "algebraic motif too rare: {algebraic_hits}/300");
         assert!(constant_hits >= 20, "constant-fold motif too rare: {constant_hits}/300");
+    }
+
+    #[test]
+    fn dag_motifs_cover_fan_out_and_shared_subexpressions() {
+        // over 1,000 seeds the generator must routinely emit (a) nodes
+        // with fan-out >= 2 feeding a rejoining binary and (b) twin
+        // subexpressions that cse::eliminate can merge
+        let mut fan_out_graphs = 0;
+        let mut cse_graphs = 0;
+        let total = 1000;
+        for seed in 0..total {
+            let g = graph(seed);
+            let uses = g.use_counts();
+            let has_fan_out = g.nodes.iter().enumerate().any(|(i, n)| {
+                !matches!(n.op, Op::Input { .. }) && uses[i] >= 2
+            });
+            if has_fan_out {
+                fan_out_graphs += 1;
+            }
+            if crate::kir::rewrite::cse::eliminate(&g).len() < g.len() {
+                cse_graphs += 1;
+            }
+        }
+        assert!(fan_out_graphs >= 100, "fan-out joins too rare: {fan_out_graphs}/{total}");
+        assert!(cse_graphs >= 50, "shared subexpressions too rare: {cse_graphs}/{total}");
+    }
+
+    #[test]
+    fn dag_motif_graphs_stay_sound() {
+        // the motif change must not cost validity or determinism at
+        // the 1,000-seed scale the coverage assertions run at
+        for seed in 0..1000 {
+            let g = graph(seed);
+            validate(&g).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{}", g.render()));
+            assert_eq!(g, graph(seed), "seed {seed} not reproducible");
+        }
     }
 
     #[test]

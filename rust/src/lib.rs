@@ -41,7 +41,11 @@
 //!   fallback for unseen platforms), generation agent F, analysis
 //!   agent G.
 //! - [`verify`] — the 5-state verification pipeline (§3.3).
-//! - [`workloads`] — the 250-problem KernelBench-KIR suite.
+//! - [`workloads`] — the 258-problem suite: KernelBench-KIR levels
+//!   1–3 plus the level-4 whole-model tier.
+//! - [`model`] — whole-model workloads: a seeded multi-kernel DAG
+//!   stitcher, an NNEF-subset text reader, and the pulsed (streaming)
+//!   executor with its batch-axis carrier analysis.
 //! - [`runtime`] — PJRT artifact loading/execution (real numerics;
 //!   behind the `pjrt` cargo feature, stubbed otherwise).
 //! - [`coordinator`] — job queue, device-worker pool, experiments.
@@ -73,6 +77,7 @@ pub mod baseline;
 pub mod agents;
 pub mod verify;
 pub mod workloads;
+pub mod model;
 pub mod runtime;
 pub mod search;
 pub mod coordinator;

@@ -3,10 +3,17 @@
 //! ```text
 //! kforge suite                      # Table 2 + suite census, per platform
 //! kforge run --model <persona> [--problem <id>] [--platform <name>]
-//!            [--baseline <eager|compile|autotuned>]
+//!            [--baseline <eager|compile|autotuned>] [--level <L1..L4>]
 //!            [--sample N] [--cache-dir DIR] [--resume] [--no-cache]
 //!                                   # one verbose job, or (without
-//!                                   # --problem) a resumable campaign
+//!                                   # --problem) a resumable campaign,
+//!                                   # optionally filtered to one level
+//! kforge model <import|gen> [--nnef PATH] [--seed S] [--blocks N]
+//!              [--attention] [--global]
+//!                                   # whole-model workloads: import an
+//!                                   # NNEF-subset file (or stitch a
+//!                                   # seeded DAG), validate, evaluate,
+//!                                   # and verify pulsed == whole-graph
 //! kforge tune [--platform <name>] [--strategy <beam|evolve>]
 //!             [--sample N | --synthetic N] [--budget N] [--seed S]
 //!             [--workers N] [--no-evidence] [--out DIR]
@@ -28,12 +35,15 @@
 //! kforge serve --synthetic [--requests N] [--workers N] [--seed S]
 //!              [--queue-cap N] [--shed-depth N] [--deadline-ms MS]
 //!              [--warm K] [--gc-max-bytes N] [--json PATH]
-//!              [--cache-dir DIR] [--no-cache]
+//!              [--streaming-fraction F] [--chunk-rows N]
+//!              [--chunk-budget-ms MS] [--cache-dir DIR] [--no-cache]
 //!                                   # deterministic bursty load test:
 //!                                   # admission control, deadlines and
 //!                                   # cache warming over the shared
-//!                                   # result store; exits nonzero when
-//!                                   # the p99 / shed-rate budgets fail
+//!                                   # result store; level-4 requests
+//!                                   # may stream in pulsed chunks;
+//!                                   # exits nonzero when the p99 /
+//!                                   # shed-rate / chunk budgets fail
 //! kforge serve [--artifacts DIR] [--requests N] [--warmup N] [--json PATH]
 //!                                   # PJRT artifact replay through the
 //!                                   # same service front end
@@ -139,7 +149,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some((c, rest)) => (c.as_str(), rest),
         None => {
             println!("kforge — program synthesis for diverse AI hardware accelerators");
-            println!("commands: suite | personas | platforms | run | tune | bench | conformance | cache | serve");
+            println!("commands: suite | personas | platforms | run | model | tune | bench | conformance | cache | serve");
             println!("registered platforms: {}", registry().describe());
             println!(
                 "search strategies: {}",
@@ -161,9 +171,17 @@ fn dispatch(args: &[String]) -> Result<()> {
             max_positionals: 0,
         },
         "run" => FlagSpec {
-            value_flags: &["--problem", "--model", "--platform", "--baseline", "--sample", "--cache-dir"],
+            value_flags: &[
+                "--problem", "--model", "--platform", "--baseline", "--level", "--sample",
+                "--cache-dir",
+            ],
             bool_flags: &["--resume", "--no-cache"],
             max_positionals: 0,
+        },
+        "model" => FlagSpec {
+            value_flags: &["--nnef", "--seed", "--blocks"],
+            bool_flags: &["--attention", "--global"],
+            max_positionals: 1,
         },
         "tune" => FlagSpec {
             value_flags: &[
@@ -192,13 +210,13 @@ fn dispatch(args: &[String]) -> Result<()> {
             value_flags: &[
                 "--artifacts", "--requests", "--warmup", "--workers", "--seed", "--queue-cap",
                 "--shed-depth", "--deadline-ms", "--warm", "--gc-max-bytes", "--json",
-                "--cache-dir",
+                "--streaming-fraction", "--chunk-rows", "--chunk-budget-ms", "--cache-dir",
             ],
             bool_flags: &["--synthetic", "--no-cache"],
             max_positionals: 0,
         },
         other => bail!(
-            "unknown command {other:?}; try: suite, personas, platforms, run, tune, bench, conformance, cache, serve"
+            "unknown command {other:?}; try: suite, personas, platforms, run, model, tune, bench, conformance, cache, serve"
         ),
     };
     cliflags::validate(cmd, rest, &spec)?;
@@ -210,6 +228,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "personas" => cmd_personas(),
         "platforms" => cmd_platforms(args),
         "run" => cmd_run(args),
+        "model" => cmd_model(args),
         "tune" => cmd_tune(args),
         "bench" => cmd_bench(args),
         "conformance" => cmd_conformance(args),
@@ -311,10 +330,19 @@ fn cmd_run(args: &[String]) -> Result<()> {
         // campaign mode: the whole suite (or --sample N per level),
         // cached and journaled through the process store, resumable
         // with --cache-dir + --resume after a kill
-        let suite = match flag_value(args, "--sample") {
+        let mut suite = match flag_value(args, "--sample") {
             Some(n) => Suite::sample(n.parse().context("--sample N")?),
             None => Suite::full(),
         };
+        if let Some(tag) = flag_value(args, "--level") {
+            let level = kforge::workloads::Level::from_tag(tag)
+                .with_context(|| format!("unknown level {tag:?}; try: L1, L2, L3, L4"))?;
+            suite = Suite {
+                problems: std::sync::Arc::new(
+                    suite.by_level(level).into_iter().cloned().collect(),
+                ),
+            };
+        }
         let supported = suite.supported_on(platform.spec()).len();
         println!(
             "campaign {}: persona {} over {supported} of {} problems on {}",
@@ -342,6 +370,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
 
     if has_flag(args, "--sample") {
         bail!("--sample only applies to campaign mode; drop --problem to run a sampled campaign");
+    }
+    if has_flag(args, "--level") {
+        bail!("--level only applies to campaign mode; drop --problem to run a filtered campaign");
     }
     let suite = Suite::full();
     let problem = suite
@@ -382,6 +413,82 @@ fn cmd_run(args: &[String]) -> Result<()> {
         None => println!("no correct candidate produced"),
     }
     println!("cache: {}", campaign.cache);
+    Ok(())
+}
+
+/// `kforge model <import|gen>` — the whole-model workload layer:
+/// import an NNEF-subset file (or stitch a seeded multi-kernel DAG),
+/// validate it, print its subgraph provenance, evaluate it on seeded
+/// inputs, and — when streamable — verify pulsed (chunked) execution
+/// bit-identical to whole-graph.  CI's model-smoke job drives both
+/// forms.
+fn cmd_model(args: &[String]) -> Result<()> {
+    use kforge::model;
+    let action = first_positional(args, &["--nnef", "--seed", "--blocks"]).context(
+        "usage: kforge model <import|gen> [--nnef PATH] [--seed S] [--blocks N] [--attention] [--global]",
+    )?;
+    let m = match action {
+        "import" => {
+            let path = flag_value(args, "--nnef").context("model import needs --nnef PATH")?;
+            let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let m = model::parse_nnef(&src)?;
+            println!("imported {path}");
+            m
+        }
+        "gen" => {
+            let seed: u64 = flag_value(args, "--seed")
+                .map(|s| s.parse())
+                .transpose()
+                .context("--seed S")?
+                .unwrap_or(0x41);
+            let mut cfg = model::ModelConfig::default();
+            if let Some(b) = flag_value(args, "--blocks") {
+                cfg.blocks = b.parse().context("--blocks N")?;
+            }
+            cfg.allow_attention = has_flag(args, "--attention");
+            cfg.allow_global = has_flag(args, "--global");
+            let m = model::generate(seed, &cfg);
+            println!("generated seed={seed:#x} blocks={}", cfg.blocks);
+            m
+        }
+        other => bail!("unknown model action {other:?}; try: import, gen"),
+    };
+    let g = &m.graph;
+    println!(
+        "model: {} ({} nodes, {} inputs, {} outputs)",
+        g.name,
+        g.nodes.len(),
+        g.input_shapes.len(),
+        g.outputs.len()
+    );
+    for span in &m.provenance {
+        println!("  {:<24} nodes {:>3}..{:<3}", span.name, span.start, span.end);
+    }
+    let streamable = model::is_streamable(g);
+    println!("streamable: {streamable}");
+    // evaluate on seeded inputs; when streamable, cross-check the
+    // pulsed executor against whole-graph evaluation bit for bit
+    let mut rng =
+        kforge::util::rng::Pcg::new(0xE7A1, kforge::util::rng::fnv1a(g.name.as_bytes()));
+    let inputs: Vec<kforge::tensor::Tensor> = g
+        .input_shapes
+        .iter()
+        .map(|s| kforge::tensor::Tensor::randn(s.clone(), &mut rng, 0.4))
+        .collect();
+    let whole = kforge::kir::interp::eval(g, &inputs)?;
+    println!("eval: {} output tensor(s), first shape {:?}", whole.len(), whole[0].shape.0);
+    if streamable {
+        let pulsed = model::stream_eval(g, &inputs, 2)?;
+        let same = whole.len() == pulsed.len()
+            && whole.iter().zip(&pulsed).all(|(a, b)| {
+                a.shape == b.shape
+                    && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+            });
+        if !same {
+            bail!("pulsed evaluation diverged from whole-graph");
+        }
+        println!("pulsed(chunk_rows=2): bit-identical to whole-graph");
+    }
     Ok(())
 }
 
@@ -504,9 +611,11 @@ fn cmd_bench(args: &[String]) -> Result<()> {
 }
 
 /// The `kforge bench --json` document: per-report sizes, wall time,
-/// process cache counters, and a geomean-speedup block per (platform,
+/// process cache counters, a geomean-speedup block per (platform,
 /// persona) from a bounded Quick campaign through the shared store —
-/// so repeated emissions accumulate a comparable perf trajectory.
+/// so repeated emissions accumulate a comparable perf trajectory —
+/// and a `level4` block: per-whole-model geomean speedup plus the
+/// deterministic streaming chunk p99 from the virtual scenario phase.
 fn bench_json(target: &str, scale: Scale, reports: &[(&str, String)], wall_s: f64) -> String {
     use kforge::util::json::Json;
     use kforge::util::stats;
@@ -545,6 +654,66 @@ fn bench_json(target: &str, scale: Scale, reports: &[(&str, String)], wall_s: f6
         }
         speedups = speedups.set(platform.name(), per_persona);
     }
+    // level-4 whole-model block: per-model geomean speedup across the
+    // personas from a bounded campaign on the default platform, plus
+    // the deterministic streaming price (chunk p99) from the virtual
+    // scenario phase alone — no real synthesis behind the chunk figure
+    let l4_suite = {
+        let full = Suite::full();
+        let ps: Vec<_> = full
+            .by_level(kforge::workloads::Level::L4)
+            .into_iter()
+            .cloned()
+            .collect();
+        Suite { problems: std::sync::Arc::new(ps) }
+    };
+    let l4_platform = registry().platforms()[0].clone();
+    let l4_cfg = ExperimentConfig::iterative(l4_platform, PERSONAS.iter().collect());
+    let l4_campaign = kforge::coordinator::run_campaign(&l4_suite, None, &l4_cfg);
+    let mut per_model = Json::obj();
+    let mut all_correct: Vec<f64> = Vec::new();
+    for p in l4_suite.problems.iter() {
+        let correct: Vec<f64> = l4_campaign
+            .results
+            .iter()
+            .filter(|r| r.problem_id == p.id && r.outcome.correct)
+            .map(|r| r.outcome.speedup)
+            .collect();
+        let geomean = if correct.is_empty() { 0.0 } else { stats::geomean(&correct) };
+        all_correct.extend(&correct);
+        per_model = per_model.set(
+            p.id.as_str(),
+            Json::obj().set("geomean_speedup", geomean).set("correct", correct.len()),
+        );
+    }
+    let mut l4_scenario = kforge::serve::ScenarioConfig::new(0x5EED, 256, 4);
+    l4_scenario.load.synthetic_problems = 16; // guarantees L4 traffic in the pool
+    let virt = kforge::serve::run_virtual(&l4_scenario, true);
+    let chunk_ms: Vec<f64> =
+        virt.requests.iter().flat_map(|r| r.chunk_ms.iter().copied()).collect();
+    let streaming_requests =
+        virt.requests.iter().filter(|r| !r.chunk_ms.is_empty()).count();
+    let chunk_p99 = if chunk_ms.is_empty() {
+        Json::Null
+    } else {
+        Json::from(stats::summarize(&chunk_ms).p99)
+    };
+    let level4 = Json::obj()
+        .set("models", l4_suite.len())
+        .set(
+            "geomean_speedup",
+            if all_correct.is_empty() { 0.0 } else { stats::geomean(&all_correct) },
+        )
+        .set("per_model", per_model)
+        .set(
+            "streaming",
+            Json::obj()
+                .set("scenario_seed", l4_scenario.load.seed as i64)
+                .set("requests", streaming_requests)
+                .set("chunks", chunk_ms.len())
+                .set("chunk_p99_ms", chunk_p99)
+                .set("chunk_budget_ms", l4_scenario.chunk_budget_ms),
+        );
     let snap = store::global().snapshot();
     let cache = Json::obj()
         .set("hits", snap.hits as i64)
@@ -565,6 +734,7 @@ fn bench_json(target: &str, scale: Scale, reports: &[(&str, String)], wall_s: f6
         .set("wall_s", wall_s)
         .set("reports", Json::Arr(report_list))
         .set("speedups", speedups)
+        .set("level4", level4)
         .set("cache", cache)
         .to_pretty()
 }
@@ -726,6 +896,21 @@ fn cmd_serve_synthetic(args: &[String], requests: usize) -> Result<()> {
     if let Some(v) = flag_value(args, "--gc-max-bytes") {
         cfg.gc_max_bytes = Some(v.parse()?);
     }
+    if let Some(v) = flag_value(args, "--streaming-fraction") {
+        cfg.load.streaming_fraction = v.parse()?;
+        if !(0.0..=1.0).contains(&cfg.load.streaming_fraction) {
+            bail!("--streaming-fraction must be in [0, 1]");
+        }
+    }
+    if let Some(v) = flag_value(args, "--chunk-rows") {
+        cfg.load.chunk_rows = v.parse()?;
+        if cfg.load.chunk_rows == 0 {
+            bail!("--chunk-rows must be at least 1");
+        }
+    }
+    if let Some(v) = flag_value(args, "--chunk-budget-ms") {
+        cfg.chunk_budget_ms = v.parse()?;
+    }
     if cfg.queue_capacity == 0 {
         bail!("--queue-cap must be at least 1");
     }
@@ -759,6 +944,14 @@ fn cmd_serve_synthetic(args: &[String], requests: usize) -> Result<()> {
             "shed rate {:.1}% exceeds the {:.1}% budget",
             summary.shed_rate() * 100.0,
             summary.shed_budget * 100.0
+        );
+    }
+    if !summary.within_chunk_budget() {
+        bail!(
+            "streaming chunk p99 {:.2} ms exceeds the {:.1} ms budget ({} pulsed-vs-whole mismatches)",
+            summary.chunk_latency.map_or(0.0, |s| s.p99),
+            summary.chunk_budget_ms,
+            summary.stream_mismatches
         );
     }
     Ok(())

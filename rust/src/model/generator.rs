@@ -1,0 +1,343 @@
+//! Seeded whole-model generator: stitches the level-1/2/3 kernel
+//! vocabulary into one multi-kernel DAG.
+//!
+//! Every block operates on a `[batch, d_model]` activation tensor and
+//! returns one of the same shape, so blocks compose freely and the
+//! stitched graph keeps a single streamed batch axis (see
+//! [`super::stream`]).  Weights are declared as graph inputs — the
+//! [`crate::workloads::Problem`] convention — and the draw sequence
+//! depends only on the seed and the block count, never on the
+//! dimensions, so the same seed yields the same *topology* at
+//! evaluation and paper-perf scales.
+
+use crate::kir::graph::{Graph, GraphBuilder, NodeId};
+use crate::kir::op::{BinaryKind, Op, ReduceKind, UnaryKind};
+use crate::tensor::Shape;
+use crate::util::rng::Pcg;
+
+/// Named subgraph provenance: the node-id half-open range `[start, end)`
+/// a stitched block lowered to.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubgraphSpan {
+    pub name: String,
+    pub start: NodeId,
+    pub end: NodeId,
+}
+
+/// A lowered model: one KIR graph plus the provenance of every block.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub graph: Graph,
+    pub provenance: Vec<SubgraphSpan>,
+}
+
+impl ModelGraph {
+    /// The span covering a node id, if any (the input/weight prelude of
+    /// each block belongs to that block's span).
+    pub fn span_of(&self, id: NodeId) -> Option<&SubgraphSpan> {
+        self.provenance.iter().find(|s| s.start <= id && id < s.end)
+    }
+}
+
+/// Generation knobs.  `batch`/`d_model` scale the tensors; `blocks` and
+/// the head flags shape the topology.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    /// Rows of the streamed activation input.
+    pub batch: usize,
+    /// Feature width the blocks preserve.
+    pub d_model: usize,
+    /// Stitched body blocks.
+    pub blocks: usize,
+    /// Append an attention head (query = activations, keys/values =
+    /// weights — row-wise in the batch, so still streamable).
+    pub allow_attention: bool,
+    /// Append a global-summary head (batch-axis mean folded back in).
+    /// This mixes rows, making the model deliberately non-streamable.
+    pub allow_global: bool,
+}
+
+impl Default for ModelConfig {
+    fn default() -> ModelConfig {
+        ModelConfig {
+            batch: 8,
+            d_model: 8,
+            blocks: 4,
+            allow_attention: false,
+            allow_global: false,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// The same topology at different tensor scales.
+    pub fn scaled(&self, batch: usize, d_model: usize) -> ModelConfig {
+        ModelConfig { batch, d_model, ..self.clone() }
+    }
+}
+
+struct Stitcher {
+    b: GraphBuilder,
+    rng: Pcg,
+    d: usize,
+    batch: usize,
+    provenance: Vec<SubgraphSpan>,
+}
+
+impl Stitcher {
+    fn weight(&mut self, dims: &[usize]) -> NodeId {
+        self.b.input(Shape::of(dims))
+    }
+
+    fn activation(&mut self) -> &'static [UnaryKind] {
+        &[
+            UnaryKind::Relu,
+            UnaryKind::Gelu,
+            UnaryKind::Tanh,
+            UnaryKind::Sigmoid,
+            UnaryKind::Swish,
+        ]
+    }
+
+    /// h = act(x@W1 + b1); y = h@W2 + b2 — back to width d.
+    fn mlp(&mut self, x: NodeId) -> NodeId {
+        let f = self.d * (1 + self.rng.below(2) as usize);
+        let kinds = self.activation();
+        let act = *self.rng.choose(kinds);
+        let w1 = self.weight(&[self.d, f]);
+        let b1 = self.weight(&[f]);
+        let h = self.b.matmul(x, w1);
+        let h = self.b.add(h, b1);
+        let h = self.b.unary(act, h);
+        let w2 = self.weight(&[f, self.d]);
+        let b2 = self.weight(&[self.d]);
+        let y = self.b.matmul(h, w2);
+        self.b.add(y, b2)
+    }
+
+    /// y = x + mlp(x) — the residual join.
+    fn residual(&mut self, x: NodeId) -> NodeId {
+        let inner = self.mlp(x);
+        self.b.add(x, inner)
+    }
+
+    /// y = (x@Wa + ba) * sigmoid(x@Wb + bb) — fan-out from x, rejoined
+    /// multiplicatively (the GLU idiom; a cross-kernel fan-out join).
+    fn gated(&mut self, x: NodeId) -> NodeId {
+        let wa = self.weight(&[self.d, self.d]);
+        let ba = self.weight(&[self.d]);
+        let wb = self.weight(&[self.d, self.d]);
+        let bb = self.weight(&[self.d]);
+        let a = self.b.matmul(x, wa);
+        let a = self.b.add(a, ba);
+        let g = self.b.matmul(x, wb);
+        let g = self.b.add(g, bb);
+        let g = self.b.unary(UnaryKind::Sigmoid, g);
+        self.b.binary(BinaryKind::Mul, a, g)
+    }
+
+    /// t = x@W; y = act(t) + t — one projection consumed by two kernels
+    /// (a shared subexpression across the kernel boundary).
+    fn shared(&mut self, x: NodeId) -> NodeId {
+        let w = self.weight(&[self.d, self.d]);
+        let kinds = self.activation();
+        let act = *self.rng.choose(kinds);
+        let t = self.b.matmul(x, w);
+        let a = self.b.unary(act, t);
+        self.b.add(a, t)
+    }
+
+    /// y = layernorm(x; gamma, beta).
+    fn layernorm(&mut self, x: NodeId) -> NodeId {
+        let gamma = self.weight(&[self.d]);
+        let beta = self.weight(&[self.d]);
+        self.b.push(Op::Layernorm { input: x, gamma, beta })
+    }
+
+    /// s = softmax(x@Wk); y = s@Wv — an attention-shaped mixer over a
+    /// weight codebook (row-wise in the batch).
+    fn mixer(&mut self, x: NodeId) -> NodeId {
+        let k = self.d * (1 + self.rng.below(2) as usize);
+        let wk = self.weight(&[self.d, k]);
+        let wv = self.weight(&[k, self.d]);
+        let logits = self.b.matmul(x, wk);
+        let s = self.b.push(Op::Softmax { input: logits });
+        self.b.matmul(s, wv)
+    }
+
+    fn block(&mut self, which: u32, x: NodeId) -> (NodeId, &'static str) {
+        match which {
+            0 => (self.mlp(x), "mlp"),
+            1 => (self.residual(x), "residual_mlp"),
+            2 => (self.gated(x), "gated"),
+            3 => (self.shared(x), "shared_proj"),
+            4 => (self.layernorm(x), "layernorm"),
+            _ => (self.mixer(x), "softmax_mixer"),
+        }
+    }
+}
+
+/// Generate a seeded whole-model DAG.  Same seed + same block count =>
+/// same topology and block sequence, at any `batch`/`d_model`.
+pub fn generate(seed: u64, cfg: &ModelConfig) -> ModelGraph {
+    assert!(cfg.batch >= 1 && cfg.d_model >= 1 && cfg.blocks >= 1, "degenerate model config");
+    let mut st = Stitcher {
+        b: GraphBuilder::new(&format!("model_{seed:x}")),
+        rng: Pcg::new(seed, 0x4D0D_E1),
+        d: cfg.d_model,
+        batch: cfg.batch,
+        provenance: Vec::new(),
+    };
+    let batch = st.batch;
+    let mut x = st.b.input(Shape::of(&[batch, st.d]));
+    st.provenance.push(SubgraphSpan { name: "input".into(), start: 0, end: 1 });
+    let mut count = 1usize;
+    for i in 0..cfg.blocks {
+        // one draw per block regardless of the remap, so topology stays
+        // a pure function of (seed, blocks); the first block is never a
+        // bare layernorm — every model owns at least one compute anchor
+        let mut which = st.rng.below(6);
+        if i == 0 && which == 4 {
+            which = 0;
+        }
+        let start = count;
+        let (y, name) = st.block(which, x);
+        count = y + 1;
+        st.provenance.push(SubgraphSpan {
+            name: format!("blk{i}:{name}"),
+            start,
+            end: count,
+        });
+        x = y;
+    }
+    if cfg.allow_attention {
+        let start = count;
+        let sk = st.d * 2;
+        let k = st.weight(&[sk, st.d]);
+        let v = st.weight(&[sk, st.d]);
+        let att = st.b.push(Op::Attention { q: x, k, v });
+        x = st.b.add(x, att);
+        count = x + 1;
+        st.provenance.push(SubgraphSpan {
+            name: "head:attention".into(),
+            start,
+            end: count,
+        });
+    }
+    if cfg.allow_global {
+        let start = count;
+        let pooled = st.b.reduce(ReduceKind::Mean, 0, x);
+        x = st.b.add(x, pooled);
+        count = x + 1;
+        st.provenance.push(SubgraphSpan {
+            name: "head:global_mean".into(),
+            start,
+            end: count,
+        });
+    }
+    let graph = st.b.finish(vec![x]);
+    debug_assert_eq!(count, graph.len(), "provenance spans must cover the graph");
+    ModelGraph { graph, provenance: st.provenance }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::interp;
+    use crate::kir::validate::validate;
+    use crate::tensor::Tensor;
+
+    fn eval_inputs(g: &Graph, seed: u64) -> Vec<Tensor> {
+        let mut rng = Pcg::seed(seed);
+        g.input_shapes
+            .iter()
+            .map(|s| Tensor::randn(s.clone(), &mut rng, 0.4))
+            .collect()
+    }
+
+    #[test]
+    fn deterministic_and_valid() {
+        for seed in 0..24 {
+            let cfg = ModelConfig::default();
+            let a = generate(seed, &cfg);
+            let b = generate(seed, &cfg);
+            assert_eq!(a.graph, b.graph, "seed {seed}");
+            assert_eq!(a.provenance, b.provenance, "seed {seed}");
+            validate(&a.graph).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+
+    #[test]
+    fn provenance_covers_every_node_without_overlap() {
+        let m = generate(11, &ModelConfig { blocks: 6, ..Default::default() });
+        for id in 0..m.graph.len() {
+            assert!(m.span_of(id).is_some(), "node {id} uncovered");
+        }
+        for w in m.provenance.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "spans must tile: {w:?}");
+        }
+        assert_eq!(m.provenance.last().unwrap().end, m.graph.len());
+    }
+
+    #[test]
+    fn topology_is_scale_invariant() {
+        let cfg = ModelConfig { allow_attention: true, ..Default::default() };
+        let small = generate(5, &cfg);
+        let big = generate(5, &cfg.scaled(64, 32));
+        assert_eq!(small.graph.len(), big.graph.len());
+        for (a, b) in small.graph.nodes.iter().zip(big.graph.nodes.iter()) {
+            assert_eq!(a.op.mnemonic(), b.op.mnemonic());
+        }
+        let names =
+            |m: &ModelGraph| m.provenance.iter().map(|s| s.name.clone()).collect::<Vec<_>>();
+        assert_eq!(names(&small), names(&big));
+        assert_eq!(big.graph.input_shapes[0].dim(0), 64);
+    }
+
+    #[test]
+    fn models_evaluate_finite_on_seeded_inputs() {
+        for seed in 0..12 {
+            let m = generate(seed, &ModelConfig::default());
+            let out = interp::eval(&m.graph, &eval_inputs(&m.graph, seed)).unwrap();
+            assert!(
+                out.iter().all(|t| t.data.iter().all(|v| v.is_finite())),
+                "seed {seed} produced non-finite output"
+            );
+        }
+    }
+
+    #[test]
+    fn blocks_vary_with_seed_and_fan_out_joins_exist() {
+        let mut kinds = std::collections::BTreeSet::new();
+        let mut fan_out = 0usize;
+        for seed in 0..40 {
+            let m = generate(seed, &ModelConfig { blocks: 5, ..Default::default() });
+            for s in &m.provenance {
+                if let Some(k) = s.name.split(':').nth(1) {
+                    kinds.insert(k.to_string());
+                }
+            }
+            let uses = m.graph.use_counts();
+            if m.graph.nodes.iter().enumerate().any(|(i, n)| {
+                !matches!(n.op, crate::kir::op::Op::Input { .. }) && uses[i] >= 2
+            }) {
+                fan_out += 1;
+            }
+        }
+        for want in ["mlp", "residual_mlp", "gated", "shared_proj", "layernorm", "softmax_mixer"] {
+            assert!(kinds.contains(want), "block kind {want} never stitched: {kinds:?}");
+        }
+        assert!(fan_out >= 20, "fan-out joins too rare: {fan_out}/40");
+    }
+
+    #[test]
+    fn heads_control_streamability() {
+        let base = ModelConfig::default();
+        let plain = generate(3, &base);
+        let att = generate(3, &ModelConfig { allow_attention: true, ..base.clone() });
+        let global = generate(3, &ModelConfig { allow_global: true, ..base });
+        assert!(super::super::stream::is_streamable(&plain.graph));
+        assert!(super::super::stream::is_streamable(&att.graph));
+        assert!(!super::super::stream::is_streamable(&global.graph));
+    }
+}

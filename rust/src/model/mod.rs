@@ -1,0 +1,31 @@
+//! Whole-model workloads: multi-kernel KIR model graphs.
+//!
+//! The seventh subsystem.  Everything upstream of this module works on
+//! single-kernel problems — exactly the KernelBench setting — but the
+//! paper's north star is serving real models, where fusion/CSE/
+//! scheduling decisions interact *across* kernel boundaries.  This
+//! module supplies those workloads in three pieces:
+//!
+//! - [`generator`] — a seeded stitcher that composes the level-1/2/3
+//!   kernel vocabulary (MLP blocks, gated joins, attention heads,
+//!   residual adds) into one multi-kernel DAG, lowered to a single
+//!   [`crate::kir::Graph`] with named subgraph provenance.
+//! - [`nnef`] — a small NNEF-subset text reader, so a committed model
+//!   fixture (or a hand-written one) can enter the suite through the
+//!   same [`ModelGraph`] type the generator produces.
+//! - [`stream`] — pulsed execution: a model whose batch axis is
+//!   row-independent is processed in chunks of rows, bit-identical to
+//!   whole-graph evaluation.  This is the execution mode the serve
+//!   tier's streaming request kind prices and runs.
+//!
+//! Whole-model problems enter campaigns as the level-4 suite tier
+//! ([`crate::workloads::level4`]); the store prices them through the
+//! ordinary `JobKey` graph hashes (STORE_SCHEMA v3).
+
+pub mod generator;
+pub mod nnef;
+pub mod stream;
+
+pub use generator::{generate, ModelConfig, ModelGraph, SubgraphSpan};
+pub use nnef::parse as parse_nnef;
+pub use stream::{check_streamable, chunk_ranges, is_streamable, stream_eval, with_batch};

@@ -1,0 +1,485 @@
+//! A small NNEF-subset text reader.
+//!
+//! Enough of the Khronos NNEF flat syntax to commit whole-model
+//! fixtures as text and lower them onto [`crate::kir::Graph`] — not a
+//! general importer.  The accepted subset:
+//!
+//! ```text
+//! # block embed                      <- provenance marker (extension)
+//! graph tiny_mlp(x) -> (y) {
+//!   x  = external(shape = [8, 16]);
+//!   w1 = variable(shape = [16, 32], label = "w1");
+//!   c  = constant(value = 0.5, shape = [32]);
+//!   t  = matmul(x, w1);
+//!   t2 = add(t, c);
+//!   y  = relu(t2);
+//! }
+//! ```
+//!
+//! One statement per line, `;`-terminated.  `external` and `variable`
+//! both declare graph inputs (in statement order); `# block <name>`
+//! comments open a named provenance span covering the statements that
+//! follow.  Supported ops: the nine unary kinds, the five binary
+//! kinds, `matmul`, `transpose`, `softmax`, `layer_norm`, `attention`,
+//! and `reduce_{sum,max,mean,lse}(x, axis = N)`.  Errors carry the
+//! 1-based source line.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::generator::{ModelGraph, SubgraphSpan};
+use crate::kir::graph::{GraphBuilder, NodeId};
+use crate::kir::op::{BinaryKind, Op, ReduceKind, UnaryKind};
+use crate::tensor::Shape;
+
+const UNARY: &[(&str, UnaryKind)] = &[
+    ("relu", UnaryKind::Relu),
+    ("sigmoid", UnaryKind::Sigmoid),
+    ("swish", UnaryKind::Swish),
+    ("gelu", UnaryKind::Gelu),
+    ("tanh", UnaryKind::Tanh),
+    ("exp", UnaryKind::Exp),
+    ("neg", UnaryKind::Neg),
+    ("square", UnaryKind::Square),
+    ("sqrt", UnaryKind::Sqrt),
+];
+
+const BINARY: &[(&str, BinaryKind)] = &[
+    ("add", BinaryKind::Add),
+    ("sub", BinaryKind::Sub),
+    ("mul", BinaryKind::Mul),
+    ("div", BinaryKind::Div),
+    ("max", BinaryKind::Max),
+];
+
+const REDUCE: &[(&str, ReduceKind)] = &[
+    ("reduce_sum", ReduceKind::Sum),
+    ("reduce_max", ReduceKind::Max),
+    ("reduce_mean", ReduceKind::Mean),
+    ("reduce_lse", ReduceKind::LogSumExp),
+];
+
+/// Parse NNEF-subset text into a [`ModelGraph`].
+pub fn parse(src: &str) -> Result<ModelGraph> {
+    Parser::new(src).run()
+}
+
+struct Parser<'a> {
+    src: &'a str,
+    env: HashMap<String, NodeId>,
+    provenance: Vec<SubgraphSpan>,
+    block: String,
+    block_start: usize,
+    node_count: usize,
+    results: Vec<String>,
+    header_params: Vec<String>,
+    externals: Vec<String>,
+}
+
+impl<'a> Parser<'a> {
+    fn new(src: &'a str) -> Parser<'a> {
+        Parser {
+            src,
+            env: HashMap::new(),
+            provenance: Vec::new(),
+            block: "graph".into(),
+            block_start: 0,
+            node_count: 0,
+            results: Vec::new(),
+            header_params: Vec::new(),
+            externals: Vec::new(),
+        }
+    }
+
+    fn run(mut self) -> Result<ModelGraph> {
+        let mut builder: Option<GraphBuilder> = None;
+        let mut closed = false;
+        for (i, raw) in self.src.lines().enumerate() {
+            let lineno = i + 1;
+            let line = raw.trim();
+            let ctx = || format!("line {lineno}: {line:?}");
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('#') {
+                if let Some(name) = rest.trim().strip_prefix("block ") {
+                    self.open_block(name.trim());
+                }
+                continue;
+            }
+            if closed {
+                bail!("line {lineno}: statement after closing brace");
+            }
+            if builder.is_none() {
+                self.parse_header(line).with_context(ctx)?;
+                builder = Some(GraphBuilder::new(&self.header_name(line)?));
+                continue;
+            }
+            if line == "}" {
+                closed = true;
+                continue;
+            }
+            let b = builder.as_mut().unwrap();
+            self.statement(b, line).with_context(ctx)?;
+        }
+        let Some(b) = builder else { bail!("no graph header found") };
+        if !closed {
+            bail!("missing closing brace");
+        }
+        for p in &self.header_params {
+            if !self.externals.contains(p) {
+                bail!("graph parameter {p:?} was never declared external");
+            }
+        }
+        let mut outputs = Vec::new();
+        for r in &self.results {
+            let id = self
+                .env
+                .get(r)
+                .copied()
+                .with_context(|| format!("graph result {r:?} is undefined"))?;
+            outputs.push(id);
+        }
+        let graph = b.finish(outputs);
+        self.close_block(graph.len());
+        Ok(ModelGraph { graph, provenance: self.provenance })
+    }
+
+    fn open_block(&mut self, name: &str) {
+        // close the running span at the current node count
+        let here = self.node_count;
+        self.close_block(here);
+        self.block = name.to_string();
+        self.block_start = here;
+    }
+
+    fn close_block(&mut self, end: usize) {
+        if end > self.block_start {
+            self.provenance.push(SubgraphSpan {
+                name: std::mem::replace(&mut self.block, "graph".into()),
+                start: self.block_start,
+                end,
+            });
+        }
+        self.block_start = end;
+    }
+
+    fn header_name(&self, line: &str) -> Result<String> {
+        let rest = line.strip_prefix("graph ").context("expected `graph`")?;
+        let open = rest.find('(').context("expected `(` in graph header")?;
+        Ok(rest[..open].trim().to_string())
+    }
+
+    fn parse_header(&mut self, line: &str) -> Result<()> {
+        let rest = line.strip_prefix("graph ").context("expected `graph <name>(...) -> (...) {`")?;
+        let (params, rest) = delimited(rest, '(', ')').context("malformed parameter list")?;
+        let rest = rest.trim().strip_prefix("->").context("expected `->`")?;
+        let (results, rest) = delimited(rest, '(', ')').context("malformed result list")?;
+        if rest.trim() != "{" {
+            bail!("expected `{{` after result list");
+        }
+        self.header_params = idents(params)?;
+        self.results = idents(results)?;
+        if self.results.is_empty() {
+            bail!("graph declares no results");
+        }
+        Ok(())
+    }
+
+    fn statement(&mut self, b: &mut GraphBuilder, line: &str) -> Result<()> {
+        let line = line.strip_suffix(';').context("statement must end with `;`")?;
+        let (lhs, rhs) = line.split_once('=').context("expected `<id> = <op>(...)`")?;
+        let lhs = lhs.trim();
+        if !is_ident(lhs) {
+            bail!("bad identifier {lhs:?}");
+        }
+        let rhs = rhs.trim();
+        let open = rhs.find('(').context("expected an op invocation")?;
+        let op_name = rhs[..open].trim();
+        let (args, tail) = delimited(&rhs[open..], '(', ')').context("unbalanced parens")?;
+        if !tail.trim().is_empty() {
+            bail!("trailing tokens {tail:?}");
+        }
+        let args = split_args(args);
+        let id = self.lower(b, op_name, &args, lhs)?;
+        self.node_count = id + 1;
+        if self.env.insert(lhs.to_string(), id).is_some() {
+            bail!("identifier {lhs:?} redefined");
+        }
+        Ok(())
+    }
+
+    fn lower(
+        &mut self,
+        b: &mut GraphBuilder,
+        op: &str,
+        args: &[&str],
+        lhs: &str,
+    ) -> Result<NodeId> {
+        if op == "external" || op == "variable" {
+            let shape = attr_shape(args, "shape")?;
+            if op == "external" {
+                self.externals.push(lhs.to_string());
+            }
+            return Ok(b.input(shape));
+        }
+        if op == "constant" {
+            let shape = attr_shape(args, "shape")?;
+            let value = attr_f64(args, "value")? as f32;
+            return Ok(b.push(Op::ConstFill { value, shape }));
+        }
+        if let Some((_, kind)) = UNARY.iter().find(|(n, _)| *n == op) {
+            let [x] = self.operands::<1>(args, op)?;
+            return Ok(b.unary(*kind, x));
+        }
+        if let Some((_, kind)) = BINARY.iter().find(|(n, _)| *n == op) {
+            let [x, y] = self.operands::<2>(args, op)?;
+            return Ok(b.binary(*kind, x, y));
+        }
+        if let Some((_, kind)) = REDUCE.iter().find(|(n, _)| *n == op) {
+            let [x] = self.operands::<1>(args, op)?;
+            let axis = attr_f64(args, "axis")? as usize;
+            return Ok(b.reduce(*kind, axis, x));
+        }
+        match op {
+            "matmul" => {
+                let [x, y] = self.operands::<2>(args, op)?;
+                Ok(b.matmul(x, y))
+            }
+            "transpose" => {
+                let [x] = self.operands::<1>(args, op)?;
+                Ok(b.push(Op::Transpose2 { input: x }))
+            }
+            "softmax" => {
+                let [x] = self.operands::<1>(args, op)?;
+                Ok(b.push(Op::Softmax { input: x }))
+            }
+            "layer_norm" => {
+                let [x, gamma, beta] = self.operands::<3>(args, op)?;
+                Ok(b.push(Op::Layernorm { input: x, gamma, beta }))
+            }
+            "attention" => {
+                let [q, k, v] = self.operands::<3>(args, op)?;
+                Ok(b.push(Op::Attention { q, k, v }))
+            }
+            _ => bail!("unsupported op {op:?}"),
+        }
+    }
+
+    /// The first N args must be identifiers naming defined nodes
+    /// (further args may be `key = value` attributes).
+    fn operands<const N: usize>(&self, args: &[&str], op: &str) -> Result<[NodeId; N]> {
+        let positional: Vec<&&str> = args.iter().filter(|a| !a.contains('=')).collect();
+        if positional.len() != N {
+            bail!("{op} wants {N} operand(s), got {}", positional.len());
+        }
+        let mut out = [0usize; N];
+        for (slot, name) in out.iter_mut().zip(positional) {
+            *slot = self
+                .env
+                .get(name.trim())
+                .copied()
+                .with_context(|| format!("undefined operand {name:?}"))?;
+        }
+        Ok(out)
+    }
+}
+
+/// `delimited("(a, b) rest", '(', ')')` → `("a, b", " rest")`.
+fn delimited(s: &str, open: char, close: char) -> Option<(&str, &str)> {
+    let s = s.trim_start();
+    let mut depth = 0usize;
+    let start = s.find(open)?;
+    if s[..start].trim() != "" {
+        return None;
+    }
+    for (i, c) in s.char_indices().skip(start) {
+        if c == open {
+            depth += 1;
+        } else if c == close {
+            depth -= 1;
+            if depth == 0 {
+                return Some((&s[start + 1..i], &s[i + 1..]));
+            }
+        }
+    }
+    None
+}
+
+/// Split on top-level commas (brackets and quotes bind tighter).
+fn split_args(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut quoted, mut last) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => quoted = !quoted,
+            '[' | '(' if !quoted => depth += 1,
+            ']' | ')' if !quoted => depth = depth.saturating_sub(1),
+            ',' if depth == 0 && !quoted => {
+                out.push(s[last..i].trim());
+                last = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let tail = s[last..].trim();
+    if !tail.is_empty() {
+        out.push(tail);
+    }
+    out
+}
+
+fn idents(s: &str) -> Result<Vec<String>> {
+    split_args(s)
+        .into_iter()
+        .map(|p| {
+            if is_ident(p) {
+                Ok(p.to_string())
+            } else {
+                bail!("bad identifier {p:?}")
+            }
+        })
+        .collect()
+}
+
+fn is_ident(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn attr<'s>(args: &[&'s str], key: &str) -> Result<&'s str> {
+    for a in args {
+        if let Some((k, v)) = a.split_once('=') {
+            if k.trim() == key {
+                return Ok(v.trim());
+            }
+        }
+    }
+    bail!("missing attribute `{key}`")
+}
+
+fn attr_f64(args: &[&str], key: &str) -> Result<f64> {
+    let v = attr(args, key)?;
+    v.parse::<f64>().with_context(|| format!("attribute `{key}`: bad number {v:?}"))
+}
+
+fn attr_shape(args: &[&str], key: &str) -> Result<Shape> {
+    let v = attr(args, key)?;
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|v| v.strip_suffix(']'))
+        .with_context(|| format!("attribute `{key}` must be a [..] list, got {v:?}"))?;
+    let dims: Vec<usize> = split_args(inner)
+        .into_iter()
+        .map(|d| d.parse::<usize>().with_context(|| format!("bad dim {d:?}")))
+        .collect::<Result<_>>()?;
+    if dims.is_empty() {
+        bail!("attribute `{key}`: empty shape");
+    }
+    Ok(Shape(dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::interp;
+    use crate::kir::validate::validate;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg;
+
+    const TINY: &str = r#"
+# block embed
+graph tiny(x) -> (y) {
+  x  = external(shape = [4, 8]);
+  w1 = variable(shape = [8, 16], label = "w1");
+  b1 = variable(shape = [16], label = "b1");
+  t1 = matmul(x, w1);
+  t2 = add(t1, b1);
+  h  = gelu(t2);
+# block head
+  w2 = variable(shape = [16, 8], label = "w2");
+  p  = matmul(h, w2);
+  s  = softmax(p);
+  y  = mul(s, p);
+}
+"#;
+
+    #[test]
+    fn parses_lowered_graph_with_provenance() {
+        let m = parse(TINY).unwrap();
+        assert_eq!(m.graph.name, "tiny");
+        validate(&m.graph).unwrap();
+        assert_eq!(m.graph.input_shapes.len(), 4);
+        assert_eq!(m.graph.input_shapes[0].dims(), &[4, 8]);
+        assert_eq!(m.graph.outputs.len(), 1);
+        let names: Vec<&str> = m.provenance.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["embed", "head"]);
+        assert_eq!(m.provenance[0].start, 0);
+        assert_eq!(m.provenance[1].end, m.graph.len());
+        assert_eq!(m.provenance[0].end, m.provenance[1].start);
+    }
+
+    #[test]
+    fn parsed_model_evaluates() {
+        let m = parse(TINY).unwrap();
+        let mut rng = Pcg::seed(7);
+        let inputs: Vec<Tensor> = m
+            .graph
+            .input_shapes
+            .iter()
+            .map(|s| Tensor::randn(s.clone(), &mut rng, 0.5))
+            .collect();
+        let out = interp::eval(&m.graph, &inputs).unwrap();
+        assert_eq!(out[0].shape.dims(), &[4, 8]);
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn reduce_constant_and_attention_forms_parse() {
+        let src = r#"
+graph forms(x) -> (y) {
+  x = external(shape = [4, 6]);
+  k = variable(shape = [5, 6], label = "k");
+  v = variable(shape = [5, 6], label = "v");
+  c = constant(value = 0.25, shape = [4, 6]);
+  a = attention(x, k, v);
+  m = mul(a, c);
+  r = reduce_mean(m, axis = 1);
+  n = layer_norm_input(m);
+  y = add(m, r);
+}
+"#;
+        // layer_norm_input is not an op — the error names the line
+        let err = parse(src).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 10"), "{msg}");
+        assert!(msg.contains("unsupported op"), "{msg}");
+        let fixed = src.replace("  n = layer_norm_input(m);\n", "");
+        let m = parse(&fixed).unwrap();
+        validate(&m.graph).unwrap();
+    }
+
+    #[test]
+    fn structural_errors_are_reported_with_lines() {
+        for (src, want) in [
+            ("graph g(x) -> (y) {\n  y = relu(x);\n}", "undefined operand"),
+            ("graph g(x) -> (y) {\n  x = external(shape = [2, 2]);\n}", "result \"y\" is undefined"),
+            (
+                "graph g(x) -> (y) {\n  y = external(shape = [2]);\n}",
+                "parameter \"x\" was never declared",
+            ),
+            ("graph g(x) -> (y) {\n  x = external(shape = [2, 2]);\n  y = relu(x)\n}", "end with"),
+            ("  y = relu(x);\n", "expected `graph"),
+        ] {
+            let err = parse(src).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(want), "source {src:?}: {msg}");
+        }
+        assert!(parse("graph g(x) -> (y) {\n  x = external(shape = [2, 2]);")
+            .unwrap_err()
+            .to_string()
+            .contains("missing closing brace"));
+    }
+}

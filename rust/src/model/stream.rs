@@ -1,0 +1,331 @@
+//! Pulsed (streaming) execution of whole-model graphs.
+//!
+//! A model whose activation input is row-independent along its leading
+//! batch axis can be evaluated in chunks of rows — the serve tier's
+//! streaming request kind — and the chunked result is **bit-identical**
+//! to whole-graph evaluation, because every admitted op applies the
+//! same per-row arithmetic in the same order regardless of how many
+//! rows sit in the buffer.
+//!
+//! [`check_streamable`] is a conservative static analysis: it tracks
+//! which nodes *carry* the batch axis (dim 0 of graph input 0) and
+//! rejects any op that would mix rows (batch-axis reduce/concat,
+//! transpose or reshape of a carrier, broadcasts that tie the batch
+//! axis to a non-streamed tensor, matmul/attention streaming the wrong
+//! side).  [`stream_eval`] then slices input 0 into row chunks,
+//! re-infers the graph at each chunk's batch size ([`with_batch`]) and
+//! concatenates outputs along axis 0.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::kir::graph::{infer_shape, Graph, Node};
+use crate::kir::interp;
+use crate::kir::op::Op;
+use crate::tensor::Tensor;
+
+/// Check that `g` admits pulsed execution along dim 0 of input 0.
+/// Errors name the offending node and rule.
+pub fn check_streamable(g: &Graph) -> Result<()> {
+    ensure!(!g.input_shapes.is_empty(), "graph has no inputs to stream");
+    let s0 = &g.input_shapes[0];
+    ensure!(
+        s0.rank() >= 2,
+        "streamed activation (input 0) must be rank >= 2, got {s0}"
+    );
+    ensure!(s0.dim(0) >= 1, "streamed batch axis is empty");
+    // carrier[i]: node i's dim 0 is the streamed batch axis
+    let mut carrier = vec![false; g.len()];
+    for (id, node) in g.nodes.iter().enumerate() {
+        let rule = |what: &str| -> anyhow::Error {
+            anyhow::anyhow!("node {id} ({}): {what}", node.op.mnemonic())
+        };
+        carrier[id] = match &node.op {
+            Op::Input { idx } => *idx == 0,
+            Op::ConstFill { .. } => false,
+            Op::Unary { input, .. } => carrier[*input],
+            Op::Binary { lhs, rhs, .. } => match (carrier[*lhs], carrier[*rhs]) {
+                (false, false) => false,
+                (true, true) => {
+                    if g.node(*lhs).shape.rank() != g.node(*rhs).shape.rank() {
+                        return Err(rule("streamed operands of mismatched rank"));
+                    }
+                    true
+                }
+                (lc, _) => {
+                    let (c, w) = if lc { (*lhs, *rhs) } else { (*rhs, *lhs) };
+                    let (cs, ws) = (&g.node(c).shape, &g.node(w).shape);
+                    if ws.rank() < cs.rank() || (ws.rank() == cs.rank() && ws.dim(0) == 1) {
+                        true
+                    } else {
+                        return Err(rule(
+                            "broadcast ties the batch axis to a non-streamed tensor",
+                        ));
+                    }
+                }
+            },
+            Op::Matmul { lhs, rhs } => {
+                if carrier[*rhs] {
+                    return Err(rule("matmul cannot stream its rhs"));
+                }
+                carrier[*lhs]
+            }
+            Op::Transpose2 { input } => {
+                if carrier[*input] {
+                    return Err(rule("transpose moves the batch axis"));
+                }
+                false
+            }
+            Op::Reduce { axis, input, .. } => {
+                if carrier[*input] && *axis == 0 {
+                    return Err(rule("reduce over the batch axis mixes rows"));
+                }
+                carrier[*input]
+            }
+            Op::Softmax { input } => carrier[*input],
+            Op::Layernorm { input, gamma, beta } => {
+                if carrier[*gamma] || carrier[*beta] {
+                    return Err(rule("layernorm scale/shift must be weights"));
+                }
+                carrier[*input]
+            }
+            Op::Attention { q, k, v } => {
+                if carrier[*k] || carrier[*v] {
+                    return Err(rule("attention keys/values must be weights"));
+                }
+                carrier[*q]
+            }
+            Op::Conv2d { input, weight, .. } | Op::DepthwiseConv2d { input, weight, .. } => {
+                if carrier[*weight] {
+                    return Err(rule("conv weight must not carry the batch axis"));
+                }
+                carrier[*input]
+            }
+            Op::MaxPool2d { input, .. }
+            | Op::AvgPool2d { input, .. }
+            | Op::GlobalAvgPool { input } => carrier[*input],
+            Op::Concat { inputs, axis } => {
+                let n_carriers = inputs.iter().filter(|i| carrier[**i]).count();
+                if n_carriers == 0 {
+                    false
+                } else if n_carriers < inputs.len() {
+                    return Err(rule("concat mixes streamed and non-streamed tensors"));
+                } else if *axis == 0 {
+                    return Err(rule("concat along the batch axis reorders rows"));
+                } else {
+                    true
+                }
+            }
+            Op::Reshape { input, .. } => {
+                if carrier[*input] {
+                    return Err(rule("reshape of the streamed activation"));
+                }
+                false
+            }
+        };
+    }
+    for &o in &g.outputs {
+        if !carrier[o] {
+            bail!(
+                "output node {o} ({}) does not carry the batch axis",
+                g.node(o).op.mnemonic()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Convenience predicate over [`check_streamable`].
+pub fn is_streamable(g: &Graph) -> bool {
+    check_streamable(g).is_ok()
+}
+
+/// Half-open row ranges covering `batch` in steps of `chunk_rows`.
+pub fn chunk_ranges(batch: usize, chunk_rows: usize) -> Vec<(usize, usize)> {
+    let step = chunk_rows.max(1);
+    (0..batch.div_ceil(step))
+        .map(|i| (i * step, ((i + 1) * step).min(batch)))
+        .collect()
+}
+
+/// Rebuild `g` with `rows` rows on the streamed batch axis, re-running
+/// shape inference over every node.
+pub fn with_batch(g: &Graph, rows: usize) -> Result<Graph> {
+    ensure!(!g.input_shapes.is_empty(), "graph has no inputs");
+    ensure!(rows >= 1, "batch must be at least one row");
+    let mut input_shapes = g.input_shapes.clone();
+    input_shapes[0].0[0] = rows;
+    let mut nodes: Vec<Node> = Vec::with_capacity(g.len());
+    for (id, node) in g.nodes.iter().enumerate() {
+        let shape = infer_shape(&node.op, &|i| nodes[i].shape.clone(), &input_shapes)
+            .with_context(|| format!("re-inferring node {id} at batch {rows}"))?;
+        nodes.push(Node { op: node.op.clone(), shape });
+    }
+    Ok(Graph {
+        name: g.name.clone(),
+        nodes,
+        input_shapes,
+        outputs: g.outputs.clone(),
+    })
+}
+
+/// Evaluate `g` in pulses of `chunk_rows` rows of input 0, stitching
+/// outputs back together along axis 0.  Bit-identical to
+/// [`interp::eval`] on streamable graphs (see [`check_streamable`]).
+pub fn stream_eval(g: &Graph, inputs: &[Tensor], chunk_rows: usize) -> Result<Vec<Tensor>> {
+    check_streamable(g)?;
+    ensure!(
+        inputs.len() == g.input_shapes.len(),
+        "expected {} inputs, got {}",
+        g.input_shapes.len(),
+        inputs.len()
+    );
+    ensure!(
+        inputs[0].shape == g.input_shapes[0],
+        "input 0 shape {} does not match declared {}",
+        inputs[0].shape,
+        g.input_shapes[0]
+    );
+    let batch = g.input_shapes[0].dim(0);
+    // row-major: one row of the activation is a contiguous slab
+    let row_stride = inputs[0].shape.numel() / batch;
+    let mut out: Option<Vec<Tensor>> = None;
+    for (lo, hi) in chunk_ranges(batch, chunk_rows) {
+        let rows = hi - lo;
+        let pulsed = with_batch(g, rows)?;
+        let mut chunk_inputs = inputs.to_vec();
+        let mut shape = inputs[0].shape.clone();
+        shape.0[0] = rows;
+        chunk_inputs[0] = Tensor {
+            shape,
+            data: inputs[0].data[lo * row_stride..hi * row_stride].to_vec(),
+        };
+        let res = interp::eval(&pulsed, &chunk_inputs)?;
+        match &mut out {
+            None => out = Some(res),
+            Some(acc) => {
+                for (a, r) in acc.iter_mut().zip(res) {
+                    a.data.extend_from_slice(&r.data);
+                    a.shape.0[0] += r.shape.dim(0);
+                }
+            }
+        }
+    }
+    out.context("empty batch produced no chunks")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::{ReduceKind, UnaryKind};
+    use crate::model::generator::{generate, ModelConfig};
+    use crate::tensor::Shape;
+    use crate::util::rng::Pcg;
+
+    fn seeded_inputs(g: &Graph, seed: u64) -> Vec<Tensor> {
+        let mut rng = Pcg::seed(seed);
+        g.input_shapes
+            .iter()
+            .map(|s| Tensor::randn(s.clone(), &mut rng, 0.5))
+            .collect()
+    }
+
+    #[test]
+    fn chunk_ranges_cover_the_batch() {
+        assert_eq!(chunk_ranges(8, 3), vec![(0, 3), (3, 6), (6, 8)]);
+        assert_eq!(chunk_ranges(4, 4), vec![(0, 4)]);
+        assert_eq!(chunk_ranges(4, 100), vec![(0, 4)]);
+        assert_eq!(chunk_ranges(5, 0), vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+    }
+
+    #[test]
+    fn chunked_equals_whole_bit_for_bit() {
+        for seed in 0..10u64 {
+            let cfg = ModelConfig {
+                batch: 8,
+                allow_attention: seed % 2 == 0,
+                ..Default::default()
+            };
+            let m = generate(seed, &cfg);
+            let inputs = seeded_inputs(&m.graph, seed ^ 0xA5);
+            let whole = interp::eval(&m.graph, &inputs).unwrap();
+            for chunk_rows in [1, 2, 3, 8, 64] {
+                let pulsed = stream_eval(&m.graph, &inputs, chunk_rows).unwrap();
+                assert_eq!(whole.len(), pulsed.len());
+                for (w, p) in whole.iter().zip(&pulsed) {
+                    assert_eq!(w.shape, p.shape, "seed {seed} chunk {chunk_rows}");
+                    // bit identity, not approximate closeness
+                    let wb: Vec<u32> = w.data.iter().map(|v| v.to_bits()).collect();
+                    let pb: Vec<u32> = p.data.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(wb, pb, "seed {seed} chunk {chunk_rows}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn with_batch_rescales_only_the_streamed_axis() {
+        let m = generate(2, &ModelConfig::default());
+        let wide = with_batch(&m.graph, 32).unwrap();
+        assert_eq!(wide.input_shapes[0].dim(0), 32);
+        for (orig, re) in m.graph.input_shapes.iter().zip(&wide.input_shapes).skip(1) {
+            assert_eq!(orig, re);
+        }
+        assert_eq!(wide.node(*wide.outputs.first().unwrap()).shape.dim(0), 32);
+    }
+
+    #[test]
+    fn batch_axis_mixing_is_rejected() {
+        // reduce over axis 0 mixes rows
+        let mut b = GraphBuilder::new("mix");
+        let x = b.input(Shape::of(&[4, 3]));
+        let pooled = b.reduce(ReduceKind::Mean, 0, x);
+        let y = b.add(x, pooled);
+        let g = b.finish(vec![y]);
+        let err = check_streamable(&g).unwrap_err().to_string();
+        assert!(err.contains("reduce over the batch axis"), "{err}");
+
+        // matmul with a streamed rhs
+        let mut b = GraphBuilder::new("rhs");
+        let x = b.input(Shape::of(&[4, 4]));
+        let w = b.input(Shape::of(&[4, 4]));
+        let y = b.matmul(w, x);
+        let g = b.finish(vec![y]);
+        assert!(!is_streamable(&g));
+
+        // output that never carries the batch axis
+        let mut b = GraphBuilder::new("dead");
+        let x = b.input(Shape::of(&[4, 3]));
+        let w = b.input(Shape::of(&[4, 3]));
+        let _ = b.unary(UnaryKind::Relu, x);
+        let y = b.unary(UnaryKind::Relu, w);
+        let g = b.finish(vec![y]);
+        let err = check_streamable(&g).unwrap_err().to_string();
+        assert!(err.contains("does not carry the batch axis"), "{err}");
+    }
+
+    #[test]
+    fn global_head_is_rejected_but_attention_head_streams() {
+        let global = generate(4, &ModelConfig { allow_global: true, ..Default::default() });
+        assert!(!is_streamable(&global.graph));
+        let att = generate(4, &ModelConfig { allow_attention: true, ..Default::default() });
+        assert!(is_streamable(&att.graph));
+        let inputs = seeded_inputs(&att.graph, 9);
+        let whole = interp::eval(&att.graph, &inputs).unwrap();
+        let pulsed = stream_eval(&att.graph, &inputs, 2).unwrap();
+        assert_eq!(whole[0].data, pulsed[0].data);
+    }
+
+    #[test]
+    fn nnef_fixture_streams() {
+        let m = crate::model::parse_nnef(include_str!(
+            "../../fixtures/model/tiny_mlp.nnef"
+        ))
+        .unwrap();
+        check_streamable(&m.graph).unwrap();
+        let inputs = seeded_inputs(&m.graph, 3);
+        let whole = interp::eval(&m.graph, &inputs).unwrap();
+        let pulsed = stream_eval(&m.graph, &inputs, 3).unwrap();
+        assert_eq!(whole[0].data, pulsed[0].data);
+    }
+}

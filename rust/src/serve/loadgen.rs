@@ -36,6 +36,13 @@ pub struct LoadgenConfig {
     /// Upper bound on requests per phase (each phase's length is drawn
     /// uniformly from 2..=burst_len).
     pub burst_len: usize,
+    /// Fraction of level-4 (whole-model) requests that arrive as
+    /// streaming requests: the model is executed in pulsed row chunks
+    /// under a per-chunk latency budget instead of one synthesis pass.
+    pub streaming_fraction: f64,
+    /// Rows per chunk for streaming requests (chunk count is derived
+    /// from the model's batch axis).
+    pub chunk_rows: usize,
 }
 
 impl LoadgenConfig {
@@ -49,6 +56,8 @@ impl LoadgenConfig {
             calm_gap_ms: 8.0,
             burst_gap_ms: 0.5,
             burst_len: 12,
+            streaming_fraction: 0.35,
+            chunk_rows: 2,
         }
     }
 }
@@ -66,6 +75,10 @@ pub struct RequestSpec {
     pub platform: PlatformRef,
     pub persona: &'static Persona,
     pub problem: Problem,
+    /// Streaming request: the whole-model answer is delivered in this
+    /// many pulsed row chunks (0 = ordinary one-shot synthesis).  Only
+    /// level-4 problems stream.
+    pub chunks: usize,
 }
 
 impl RequestSpec {
@@ -84,6 +97,7 @@ impl std::fmt::Debug for RequestSpec {
             .field("priority", &self.priority)
             .field("deadline_ms", &self.deadline_ms)
             .field("job", &self.job_id())
+            .field("chunks", &self.chunks)
             .finish()
     }
 }
@@ -109,6 +123,10 @@ pub fn generate(cfg: &LoadgenConfig) -> Vec<RequestSpec> {
     let root = Pcg::new(cfg.seed, fnv1a(b"serve-loadgen"));
     let mut arrivals = root.fork("arrivals");
     let mut mix = root.fork("mix");
+    // a dedicated stream for streaming decisions, so adding the request
+    // kind leaves the arrival/mix draws (and every pre-existing golden
+    // scenario) bit-identical
+    let mut streaming = root.fork("streaming");
     let mut out = Vec::with_capacity(cfg.requests);
     let mut t = 0.0f64;
     let mut in_burst = false;
@@ -130,6 +148,22 @@ pub fn generate(cfg: &LoadgenConfig) -> Vec<RequestSpec> {
         } else {
             (Priority::Batch, None)
         };
+        // whole-model problems may stream: chunk count derives from the
+        // model's batch axis, so it is a property of the problem, not a
+        // random draw
+        let chunks = if problem.level == crate::workloads::Level::L4
+            && streaming.chance(cfg.streaming_fraction)
+        {
+            let batch = problem
+                .eval_graph
+                .input_shapes
+                .first()
+                .map(|s| s.dim(0))
+                .unwrap_or(1);
+            batch.div_ceil(cfg.chunk_rows.max(1))
+        } else {
+            0
+        };
         out.push(RequestSpec {
             id,
             at_ms: t,
@@ -138,6 +172,7 @@ pub fn generate(cfg: &LoadgenConfig) -> Vec<RequestSpec> {
             platform: platform.clone(),
             persona,
             problem,
+            chunks,
         });
     }
     out
@@ -159,6 +194,7 @@ mod tests {
             assert_eq!(x.priority, y.priority);
             assert_eq!(x.deadline_ms.map(f64::to_bits), y.deadline_ms.map(f64::to_bits));
             assert_eq!(x.job_id(), y.job_id());
+            assert_eq!(x.chunks, y.chunks);
         }
         // a different seed reshapes the arrival process
         let c = generate(&LoadgenConfig::new(0xFEED + 1, 64));
@@ -196,6 +232,39 @@ mod tests {
             reqs.iter().map(|r| r.persona.name).collect();
         assert!(platforms.len() > 1, "only {platforms:?}");
         assert!(personas.len() > 2, "only {personas:?}");
+    }
+
+    #[test]
+    fn streaming_rides_level4_requests_only() {
+        use crate::workloads::Level;
+        let reqs = generate(&LoadgenConfig::new(0x57, 256));
+        let mut streamed = 0usize;
+        let mut l4 = 0usize;
+        for r in &reqs {
+            if r.problem.level == Level::L4 {
+                l4 += 1;
+            }
+            if r.chunks > 0 {
+                streamed += 1;
+                assert_eq!(r.problem.level, Level::L4, "req {} streams a non-L4 problem", r.id);
+                // batch 8, chunk_rows 2 => 4 chunks for the default
+                // synthetic model config
+                assert_eq!(r.chunks, 4, "req {}", r.id);
+            }
+        }
+        assert!(l4 > 0, "no level-4 requests drawn");
+        assert!(streamed > 0, "streaming fraction never fired over {l4} L4 requests");
+        assert!(streamed < l4, "every L4 request streamed — fraction ignored");
+
+        // the streaming knob does not perturb arrivals or the mix
+        let mut quiet = LoadgenConfig::new(0x57, 256);
+        quiet.streaming_fraction = 0.0;
+        let base = generate(&quiet);
+        for (a, b) in reqs.iter().zip(&base) {
+            assert_eq!(a.at_ms.to_bits(), b.at_ms.to_bits());
+            assert_eq!(a.job_id(), b.job_id());
+            assert_eq!(b.chunks, 0);
+        }
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //!   and latency percentiles given a seed, plus real concurrent
 //!   execution of every distinct admitted job through the store.  This
 //!   is the load-test harness; its p99 and shed-rate are gated against
-//!   the declared budgets in tests and in CI.
+//!   the declared budgets in tests and in CI.  Level-4 (whole-model)
+//!   requests may arrive as *streaming* requests: the virtual phase
+//!   prices them as pulsed per-chunk service under a per-chunk latency
+//!   budget, and the execution phase verifies each distinct streaming
+//!   job's chunked evaluation bit-identical to whole-graph
+//!   ([`crate::model::stream_eval`]).
 //! - **`kforge serve --artifacts`** replays compiled artifacts through
 //!   the real-time [`Service`] front end ([`service`], [`replay`]).
 //!
@@ -37,7 +42,8 @@ pub use loadgen::{generate, LoadgenConfig, RequestSpec};
 pub use queue::{BoundedQueue, Priority, PushError};
 pub use replay::{key_for_request, replay_keys};
 pub use scenario::{
-    execute_job, run_scenario, RequestReport, ScenarioConfig, ScenarioReport, SERVE_JOB_SEED,
+    execute_job, run_scenario, run_virtual, RequestReport, ScenarioConfig, ScenarioReport,
+    VirtualOutcome, SERVE_JOB_SEED,
 };
 pub use service::{Service, ServiceCounts, Ticket};
 
@@ -79,6 +85,20 @@ pub struct ServeSummary {
     pub cache: CacheStats,
     pub p99_budget_ms: f64,
     pub shed_budget: f64,
+    /// Requests served as pulsed (chunked) streaming misses.
+    pub streaming_requests: usize,
+    /// Total modeled chunks across those requests.
+    pub chunks: usize,
+    /// Distribution of modeled per-chunk service times (None when the
+    /// scenario drew no streaming traffic).
+    pub chunk_latency: Option<Summary>,
+    pub chunk_budget_ms: f64,
+    /// Modeled chunks over the per-chunk budget.
+    pub chunks_over_budget: usize,
+    /// Distinct streaming jobs verified bit-identical pulsed vs whole.
+    pub stream_checked: usize,
+    /// Streaming jobs whose pulsed execution diverged (must be 0).
+    pub stream_mismatches: usize,
 }
 
 /// Fold a scenario run into its summary.
@@ -88,6 +108,7 @@ pub fn summarize(cfg: &ScenarioConfig, report: &ScenarioReport) -> ServeSummary 
     for &ms in &latencies {
         hist.record(ms);
     }
+    let chunk_ms = report.chunk_latencies_ms();
     ServeSummary {
         requests: report.requests.len(),
         completed: report.count("completed"),
@@ -111,6 +132,13 @@ pub fn summarize(cfg: &ScenarioConfig, report: &ScenarioReport) -> ServeSummary 
         cache: report.cache,
         p99_budget_ms: cfg.p99_budget_ms,
         shed_budget: cfg.shed_budget,
+        streaming_requests: report.requests.iter().filter(|r| !r.chunk_ms.is_empty()).count(),
+        chunks: chunk_ms.len(),
+        chunk_latency: if chunk_ms.is_empty() { None } else { Some(stats::summarize(&chunk_ms)) },
+        chunk_budget_ms: cfg.chunk_budget_ms,
+        chunks_over_budget: chunk_ms.iter().filter(|&&ms| ms > cfg.chunk_budget_ms).count(),
+        stream_checked: report.stream_checked,
+        stream_mismatches: report.stream_mismatches,
     }
 }
 
@@ -133,8 +161,15 @@ impl ServeSummary {
         self.shed_rate() <= self.shed_budget
     }
 
+    /// Streaming p99 within the per-chunk budget and zero pulsed-vs-
+    /// whole mismatches (vacuously true without streaming traffic).
+    pub fn within_chunk_budget(&self) -> bool {
+        self.stream_mismatches == 0
+            && self.chunk_latency.map_or(true, |s| s.p99 <= self.chunk_budget_ms)
+    }
+
     pub fn within_budgets(&self) -> bool {
-        self.within_latency_budget() && self.within_shed_budget()
+        self.within_latency_budget() && self.within_shed_budget() && self.within_chunk_budget()
     }
 
     /// The greppable multi-line text report.
@@ -166,6 +201,19 @@ impl ServeSummary {
             None => out.push_str("latency(virtual) ms: no completed requests\n"),
         }
         out.push_str(&format!("hist(virtual): {}\n", self.hist.render()));
+        match &self.chunk_latency {
+            Some(s) => out.push_str(&format!(
+                "streaming: requests={} chunks={} chunk_p99_ms={:.2} budget_ms={:.1} over_budget={} verified={} mismatches={}\n",
+                self.streaming_requests,
+                self.chunks,
+                s.p99,
+                self.chunk_budget_ms,
+                self.chunks_over_budget,
+                self.stream_checked,
+                self.stream_mismatches
+            )),
+            None => out.push_str("streaming: no streaming requests\n"),
+        }
         out.push_str(&format!("store: {} virtual_hits={}\n", self.cache, self.virtual_hits));
         out.push_str(&format!(
             "measured: exec_workers={} exec_total_ms={:.1} wall={:.2}s\n",
@@ -215,6 +263,23 @@ impl ServeSummary {
                     .set("shed_rate", self.shed_rate()),
             )
             .set("latency_virtual_ms", latency)
+            .set(
+                "streaming",
+                Json::obj()
+                    .set("requests", self.streaming_requests)
+                    .set("chunks", self.chunks)
+                    .set(
+                        "chunk_p99_ms",
+                        match &self.chunk_latency {
+                            Some(s) => Json::from(s.p99),
+                            None => Json::Null,
+                        },
+                    )
+                    .set("chunk_budget_ms", self.chunk_budget_ms)
+                    .set("chunks_over_budget", self.chunks_over_budget)
+                    .set("stream_checked", self.stream_checked)
+                    .set("stream_mismatches", self.stream_mismatches),
+            )
             .set(
                 "histogram_virtual_ms",
                 Json::obj().set("cumulative", hist).set("overflow", self.hist.overflow() as i64),
@@ -281,6 +346,13 @@ mod tests {
             cache: CacheStats { hits: 2, misses: 3, ..Default::default() },
             p99_budget_ms: 250.0,
             shed_budget: 0.6,
+            streaming_requests: 2,
+            chunks: 8,
+            chunk_latency: Some(stats::summarize(&[1.0, 2.0, 3.0, 4.0])),
+            chunk_budget_ms: 8.0,
+            chunks_over_budget: 0,
+            stream_checked: 2,
+            stream_mismatches: 0,
         }
     }
 
@@ -297,12 +369,32 @@ mod tests {
     }
 
     #[test]
+    fn chunk_budget_gates_streaming_and_is_vacuous_without_it() {
+        let mut s = sample();
+        assert!(s.within_chunk_budget());
+        s.chunk_budget_ms = 2.0;
+        assert!(!s.within_chunk_budget(), "chunk p99 3.97 must bust a 2.0 budget");
+        assert!(!s.within_budgets());
+        s.chunk_budget_ms = 8.0;
+        s.stream_mismatches = 1;
+        assert!(!s.within_chunk_budget(), "a pulsed-vs-whole mismatch busts the budget");
+        s.stream_mismatches = 0;
+        s.chunk_latency = None;
+        s.chunk_budget_ms = 0.0;
+        assert!(s.within_chunk_budget(), "vacuous without streaming traffic");
+        assert!(s.render_text().contains("streaming: no streaming requests"));
+    }
+
+    #[test]
     fn text_is_greppable() {
         let text = sample().render_text();
         assert!(text.contains("serve: requests=8 completed=3 rejected=4 expired=1 failed=0"));
         assert!(text.contains("admission: shed_rate=50.0%"));
         assert!(text.contains("hist(virtual): le0.25=0"));
         assert!(text.contains("virtual_hits=1"));
+        assert!(text.contains(
+            "streaming: requests=2 chunks=8 chunk_p99_ms=3.97 budget_ms=8.0 over_budget=0 verified=2 mismatches=0"
+        ));
     }
 
     #[test]
@@ -316,6 +408,9 @@ mod tests {
         let store = j.get("store").unwrap();
         assert_eq!(store.get("hits").and_then(Json::as_i64), Some(2));
         assert_eq!(store.get("virtual_hits").and_then(Json::as_i64), Some(1));
+        let streaming = j.get("streaming").unwrap();
+        assert_eq!(streaming.get("chunks").and_then(Json::as_i64), Some(8));
+        assert_eq!(streaming.get("stream_mismatches").and_then(Json::as_i64), Some(0));
         // the CI smoke job greps the pretty rendering for these
         let text = j.to_pretty();
         assert!(text.contains("\"schema\": \"kforge-serve-v1\""), "{text}");

@@ -71,6 +71,10 @@ pub struct ScenarioConfig {
     pub p99_budget_ms: f64,
     /// Declared shed-rate budget (rejected / total).
     pub shed_budget: f64,
+    /// Declared per-chunk latency budget for streaming (level-4)
+    /// requests: the p99 of modeled chunk service times must stay
+    /// under it.  Vacuous when the scenario draws no streaming traffic.
+    pub chunk_budget_ms: f64,
     /// Print a stats line every N processed arrivals (0 = silent).
     pub progress_every: usize,
 }
@@ -88,6 +92,10 @@ impl ScenarioConfig {
             gc_max_bytes: None,
             p99_budget_ms: 250.0,
             shed_budget: 0.5,
+            // a pulsed L4 chunk models at (miss/chunks)·noise ≈ 4–7.5 ms
+            // worst-case (reasoning persona, upper noise tail); the
+            // budget sits above that but well below a one-shot L4 miss
+            chunk_budget_ms: 12.0,
             progress_every: 0,
         }
     }
@@ -104,6 +112,11 @@ pub struct RequestReport {
     pub started_ms: Option<f64>,
     /// Whether the simulation modeled this request as a store hit.
     pub virtual_hit: bool,
+    /// Per-chunk modeled service times for a streaming request served
+    /// as a miss (sums to the request's `service_ms`).  Empty for
+    /// one-shot requests and for streaming hits, which answer from the
+    /// cache in one piece.
+    pub chunk_ms: Vec<f64>,
 }
 
 /// Everything a scenario run produces.  All fields except `wall_s`,
@@ -131,6 +144,11 @@ pub struct ScenarioReport {
     pub wall_s: f64,
     /// Store counter delta across the execution phase.
     pub cache: CacheStats,
+    /// Distinct streaming jobs whose pulsed execution was verified
+    /// bit-identical to whole-graph evaluation in the real phase.
+    pub stream_checked: usize,
+    /// Streaming jobs whose pulsed execution diverged (must be 0).
+    pub stream_mismatches: usize,
 }
 
 impl ScenarioReport {
@@ -142,16 +160,21 @@ impl ScenarioReport {
     pub fn virtual_latencies_ms(&self) -> Vec<f64> {
         self.requests.iter().filter_map(|r| r.outcome.latency_ms()).collect()
     }
+
+    /// Every modeled chunk service time, request order then chunk order.
+    pub fn chunk_latencies_ms(&self) -> Vec<f64> {
+        self.requests.iter().flat_map(|r| r.chunk_ms.iter().copied()).collect()
+    }
 }
+
+/// Modeled per-level miss cost bases, aligned with [`Level::ALL`]
+/// (whole-model level-4 jobs are the most expensive tier).
+const MISS_BASE_MS: [f64; Level::COUNT] = [4.0, 6.5, 10.0, 16.0];
 
 /// Modeled service cost for a store miss: per-level base cost times a
 /// persona factor times seeded lognormal noise.
 fn miss_cost_ms(spec: &RequestSpec, rng: &mut Pcg) -> f64 {
-    let base = match spec.problem.level {
-        Level::L1 => 4.0,
-        Level::L2 => 6.5,
-        Level::L3 => 10.0,
-    };
+    let base = MISS_BASE_MS[spec.problem.level.index()];
     let factor = if spec.persona.reasoning { 1.25 } else { 1.0 };
     base * factor * rng.lognormal_noise(0.12)
 }
@@ -159,6 +182,29 @@ fn miss_cost_ms(spec: &RequestSpec, rng: &mut Pcg) -> f64 {
 /// Modeled service cost for a store hit (lookup + deserialize).
 fn hit_cost_ms(rng: &mut Pcg) -> f64 {
     0.4 * rng.lognormal_noise(0.08)
+}
+
+/// Pre-drawn modeled costs for one request.  Draw order inside the
+/// request's fork is load-bearing: miss, then hit, then (for streaming
+/// requests only) the per-chunk noise — so non-streaming scenarios
+/// price identically to the pre-streaming engine.
+#[derive(Debug, Clone)]
+struct ReqCost {
+    miss_ms: f64,
+    hit_ms: f64,
+    /// Per-chunk costs for a streaming request (empty otherwise); the
+    /// streaming miss's total service time is their sum.
+    chunk_ms: Vec<f64>,
+}
+
+fn request_cost(spec: &RequestSpec, svc_root: &Pcg) -> ReqCost {
+    let mut r = svc_root.fork(&format!("req-{}", spec.id));
+    let miss_ms = miss_cost_ms(spec, &mut r);
+    let hit_ms = hit_cost_ms(&mut r);
+    let chunk_ms: Vec<f64> = (0..spec.chunks)
+        .map(|_| (miss_ms / spec.chunks as f64) * r.lognormal_noise(0.10))
+        .collect();
+    ReqCost { miss_ms, hit_ms, chunk_ms }
 }
 
 /// The campaign config a request's job runs under.  Fixed name and
@@ -206,9 +252,9 @@ impl Ord for Ms {
 /// Mutable state of the virtual-time simulation.
 struct Engine<'a> {
     specs: &'a [RequestSpec],
-    /// Pre-drawn (miss_ms, hit_ms) per request — drawn up front so the
-    /// noise stream never depends on event interleaving.
-    costs: Vec<(f64, f64)>,
+    /// Pre-drawn costs per request — drawn up front so the noise
+    /// stream never depends on event interleaving.
+    costs: Vec<ReqCost>,
     warm_set: HashSet<String>,
     /// Model store hits at all?  False for a disabled store.
     model_hits: bool,
@@ -265,14 +311,25 @@ impl Engine<'_> {
                     outcome: Outcome::DeadlineExceeded { waited_ms: waited },
                     started_ms: None,
                     virtual_hit: false,
+                    chunk_ms: Vec::new(),
                 });
                 self.expired += 1;
                 continue;
             }
             let hit = self.model_hits
                 && (self.warm_set.contains(&job) || self.job_done.contains(&job));
-            let (miss_ms, hit_ms) = self.costs[idx];
-            let service_ms = if hit { hit_ms } else { miss_ms };
+            let cost = &self.costs[idx];
+            // a streaming miss is served chunk by chunk; a streaming
+            // hit answers from the cache in one piece
+            let streaming_miss = !hit && !cost.chunk_ms.is_empty();
+            let service_ms = if hit {
+                cost.hit_ms
+            } else if streaming_miss {
+                cost.chunk_ms.iter().sum()
+            } else {
+                cost.miss_ms
+            };
+            let chunk_ms = if streaming_miss { cost.chunk_ms.clone() } else { Vec::new() };
             self.idle -= 1;
             self.completions.push(Reverse((Ms(now + service_ms), idx)));
             self.reports[idx] = Some(RequestReport {
@@ -282,15 +339,31 @@ impl Engine<'_> {
                 outcome: Outcome::Completed { queue_ms: waited, service_ms },
                 started_ms: Some(now),
                 virtual_hit: hit,
+                chunk_ms,
             });
         }
     }
 }
 
-/// Run a full scenario: generate traffic, simulate the service in
-/// virtual time, then warm the store and execute every admitted
-/// distinct job for real.
-pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
+/// The deterministic product of the virtual phase: everything the
+/// simulation decides before any real job executes.  Public so
+/// `kforge bench` can price a streaming scenario (chunk percentiles
+/// included) without paying for real synthesis.
+pub struct VirtualOutcome {
+    pub specs: Vec<RequestSpec>,
+    pub requests: Vec<RequestReport>,
+    pub pop_order: Vec<(Priority, usize)>,
+    pub max_depth: usize,
+    pub makespan_ms: f64,
+    /// Job ids that would be warmed, hottest first (empty when the
+    /// store is disabled).
+    pub warmed: Vec<String>,
+}
+
+/// Run just the virtual phase.  `store_enabled` selects whether the
+/// simulation models warm-up and store hits (it must match the store
+/// the execution phase will use for the phases to agree).
+pub fn run_virtual(cfg: &ScenarioConfig, store_enabled: bool) -> VirtualOutcome {
     let specs = loadgen::generate(&cfg.load);
 
     // hottest job keys: by request frequency, job id as the tie-break
@@ -300,18 +373,12 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
     }
     let mut hottest: Vec<(&String, &usize)> = freq.iter().collect();
     hottest.sort_by(|a, b| b.1.cmp(a.1).then(a.0.cmp(b.0)));
-    let warm_n = if store.enabled() { cfg.warm_hottest } else { 0 };
+    let warm_n = if store_enabled { cfg.warm_hottest } else { 0 };
     let warmed: Vec<String> = hottest.iter().take(warm_n).map(|(k, _)| (*k).clone()).collect();
 
     // pre-draw modeled service costs (independent of event order)
     let svc_root = Pcg::new(cfg.load.seed, fnv1a(b"serve-service"));
-    let costs: Vec<(f64, f64)> = specs
-        .iter()
-        .map(|s| {
-            let mut r = svc_root.fork(&format!("req-{}", s.id));
-            (miss_cost_ms(s, &mut r), hit_cost_ms(&mut r))
-        })
-        .collect();
+    let costs: Vec<ReqCost> = specs.iter().map(|s| request_cost(s, &svc_root)).collect();
 
     // ---- virtual phase -------------------------------------------------
     let policy = AdmissionPolicy {
@@ -322,7 +389,7 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
         specs: &specs,
         costs,
         warm_set: warmed.iter().cloned().collect(),
-        model_hits: store.enabled(),
+        model_hits: store_enabled,
         queue: BoundedQueue::new(cfg.queue_capacity),
         idle: cfg.workers.max(1),
         completions: BinaryHeap::new(),
@@ -346,6 +413,7 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
                     outcome: Outcome::Rejected { reason },
                     started_ms: None,
                     virtual_hit: false,
+                    chunk_ms: Vec::new(),
                 });
                 rejected += 1;
             }
@@ -368,6 +436,7 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
                         outcome: Outcome::Rejected { reason: ShedReason::QueueFull },
                         started_ms: None,
                         virtual_hit: false,
+                        chunk_ms: Vec::new(),
                     });
                     rejected += 1;
                 }
@@ -393,6 +462,24 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
         .into_iter()
         .map(|r| r.expect("every request resolves to exactly one outcome"))
         .collect();
+
+    VirtualOutcome {
+        specs,
+        requests,
+        pop_order: eng.pop_order,
+        max_depth: eng.max_depth,
+        makespan_ms: eng.makespan_ms,
+        warmed,
+    }
+}
+
+/// Run the full scenario: the virtual phase, then real execution of
+/// every distinct virtually-completed job through the store, then —
+/// for the streaming jobs among them — a pulsed-execution verification
+/// pass (chunked evaluation must be bit-identical to whole-graph).
+pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
+    let VirtualOutcome { specs, requests, pop_order, max_depth, makespan_ms, warmed } =
+        run_virtual(cfg, store.enabled());
 
     // ---- execution phase -----------------------------------------------
     let t0 = std::time::Instant::now();
@@ -441,16 +528,62 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
         .collect();
     let exec_wall_ms: Vec<f64> = timed.iter().map(|(_, ms)| *ms).collect();
 
+    // ---- streaming verification ------------------------------------------
+    // every distinct streaming job that started must deliver the same
+    // bits pulsed (chunked) as whole-graph — the serve-tier face of the
+    // model-layer determinism property
+    let mut stream_checked = 0usize;
+    let mut stream_mismatches = 0usize;
+    let mut stream_seen: HashSet<&str> = HashSet::new();
+    for (i, s) in specs.iter().enumerate() {
+        if s.chunks == 0 || requests[i].started_ms.is_none() {
+            continue;
+        }
+        let job = &requests[i].job;
+        if !stream_seen.insert(job.as_str()) {
+            continue;
+        }
+        if !crate::model::is_streamable(&s.problem.eval_graph) {
+            continue;
+        }
+        let ins = s.problem.eval_inputs(SERVE_JOB_SEED);
+        let whole = crate::kir::interp::eval(&s.problem.eval_graph, &ins);
+        let pulsed =
+            crate::model::stream_eval(&s.problem.eval_graph, &ins, cfg.load.chunk_rows);
+        let same = match (&whole, &pulsed) {
+            (Ok(w), Ok(p)) => {
+                w.len() == p.len()
+                    && w.iter().zip(p).all(|(a, b)| {
+                        a.shape == b.shape
+                            && a.data.len() == b.data.len()
+                            && a.data
+                                .iter()
+                                .zip(&b.data)
+                                .all(|(x, y)| x.to_bits() == y.to_bits())
+                    })
+            }
+            _ => false,
+        };
+        if same {
+            stream_checked += 1;
+        } else {
+            stream_mismatches += 1;
+            eprintln!("[serve] streaming mismatch on job {job}");
+        }
+    }
+
     ScenarioReport {
         requests,
-        pop_order: eng.pop_order,
-        max_depth: eng.max_depth,
-        makespan_ms: eng.makespan_ms,
+        pop_order,
+        max_depth,
+        makespan_ms,
         warmed,
         results,
         exec_wall_ms,
         wall_s: t0.elapsed().as_secs_f64(),
         cache: store.snapshot().since(&snap0),
+        stream_checked,
+        stream_mismatches,
     }
 }
 
@@ -478,6 +611,74 @@ mod tests {
             let hit = hit_cost_ms(&mut r);
             assert!(miss > 0.0 && hit > 0.0);
             assert!(hit < miss, "hit {hit} must undercut miss {miss}");
+        }
+    }
+
+    #[test]
+    fn per_chunk_costs_sum_to_the_streaming_service_time() {
+        let specs = loadgen::generate(&LoadgenConfig::new(0x57, 256));
+        let root = Pcg::new(0x57, fnv1a(b"serve-service"));
+        let mut streaming = 0usize;
+        for s in &specs {
+            let c = request_cost(s, &root);
+            let c2 = request_cost(s, &root);
+            assert_eq!(c.miss_ms.to_bits(), c2.miss_ms.to_bits(), "request_cost must be pure");
+            assert_eq!(c.chunk_ms.len(), s.chunks);
+            if s.chunks > 0 {
+                streaming += 1;
+                let sum: f64 = c.chunk_ms.iter().sum();
+                assert!(c.chunk_ms.iter().all(|&m| m > 0.0));
+                // each chunk is miss/chunks × lognormal(0.10); the sum
+                // stays in a tight band around the one-shot miss cost
+                assert!(
+                    sum > 0.5 * c.miss_ms && sum < 2.0 * c.miss_ms,
+                    "chunk sum {sum} vs miss {}",
+                    c.miss_ms
+                );
+            }
+        }
+        assert!(streaming > 0, "no streaming request drawn");
+    }
+
+    #[test]
+    fn miss_costs_rise_with_level_and_cover_every_level() {
+        // the table is indexed by Level::index(); a new level without a
+        // base cost fails to compile, an out-of-order one fails here
+        for w in MISS_BASE_MS.windows(2) {
+            assert!(w[1] > w[0], "miss base costs must rise with level: {MISS_BASE_MS:?}");
+        }
+        assert_eq!(MISS_BASE_MS.len(), Level::ALL.len());
+    }
+
+    #[test]
+    fn virtual_phase_reports_chunked_streaming_misses() {
+        let mut cfg = ScenarioConfig::new(0x57, 256, 4);
+        cfg.load.synthetic_problems = 16; // guarantees L4 problems in the pool
+        let v = run_virtual(&cfg, true);
+        let mut streamed_miss = 0usize;
+        for r in &v.requests {
+            if r.chunk_ms.is_empty() {
+                continue;
+            }
+            streamed_miss += 1;
+            let spec = &v.specs[r.id];
+            assert_eq!(r.chunk_ms.len(), spec.chunks);
+            assert!(!r.virtual_hit, "streaming hits answer in one piece");
+            let service = match r.outcome {
+                Outcome::Completed { service_ms, .. } => service_ms,
+                ref o => panic!("chunked request resolved as {o:?}"),
+            };
+            let sum: f64 = r.chunk_ms.iter().sum();
+            assert_eq!(sum.to_bits(), service.to_bits(), "chunks must sum to service time");
+        }
+        assert!(streamed_miss > 0, "no streaming miss surfaced in the virtual phase");
+        // the virtual phase is bit-reproducible
+        let v2 = run_virtual(&cfg, true);
+        for (a, b) in v.requests.iter().zip(&v2.requests) {
+            assert_eq!(a.chunk_ms.len(), b.chunk_ms.len());
+            for (x, y) in a.chunk_ms.iter().zip(&b.chunk_ms) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
     }
 

@@ -54,20 +54,11 @@ fn state_label(s: &str) -> Result<&'static str> {
 }
 
 fn level_name(level: Level) -> &'static str {
-    match level {
-        Level::L1 => "L1",
-        Level::L2 => "L2",
-        Level::L3 => "L3",
-    }
+    level.tag()
 }
 
 fn parse_level(s: &str) -> Result<Level> {
-    Ok(match s {
-        "L1" => Level::L1,
-        "L2" => Level::L2,
-        "L3" => Level::L3,
-        other => bail!("unknown level {other:?}"),
-    })
+    Level::from_tag(s).ok_or_else(|| anyhow::anyhow!("unknown level {s:?}"))
 }
 
 /// Strict inverse of `key::bits` — the one f64 bit-pattern parser every

@@ -43,7 +43,13 @@ use std::sync::OnceLock;
 /// v2: the schedule autotuner PR — a new `BaselineKind::Autotuned`
 /// campaign arm and a second stored object kind (`kforge-tunekey` tune
 /// results, see `crate::search::tune`).
-pub const STORE_SCHEMA: u32 = 2;
+///
+/// v3: the whole-model workloads PR — the level-4 suite tier
+/// (multi-kernel DAG problems from `crate::model`, including the
+/// synthetic suite's L4 slots) and the serve tier's streaming
+/// semantics change what a cached serve-path result means, and the
+/// model layer sits outside the pipeline fingerprint's source set.
+pub const STORE_SCHEMA: u32 = 3;
 
 /// Second FNV-1a chain over domain-separated input, so the digest is
 /// 128 bits (two independent 64-bit chains), not one chain reused.

@@ -1,0 +1,196 @@
+//! Level 4: whole-model workloads (the tier above KernelBench).
+//!
+//! Eight multi-kernel model DAGs from [`crate::model`]: one lowered
+//! from the committed NNEF fixture (`rust/fixtures/model/tiny_mlp.nnef`)
+//! and seven stitched by the seeded generator.  Metadata is computed,
+//! never guessed — the same honesty contract as the synthetic tier —
+//! and most models are streamable (pulsed execution under serve);
+//! one deliberately is not, so the streaming boundary stays exercised.
+//!
+//! Evaluation graphs run at toy scale (batch 8, narrow widths); perf
+//! graphs carry paper-scale batch and width so speedup accounting is
+//! meaningful.  All eight stay inside the universally supported op
+//! families, so every registered platform keeps the full tier
+//! (Table 2: +8 in every column).
+
+use super::spec::{Level, Problem};
+use super::synth::family_of;
+use crate::kir::graph::Graph;
+use crate::kir::rewrite::{algebraic, constant_fold};
+use crate::model::{generate, parse_nnef, with_batch, ModelConfig};
+
+/// The committed NNEF fixture, as source text.
+pub const TINY_MLP_NNEF: &str = include_str!("../../fixtures/model/tiny_mlp.nnef");
+
+fn families(g: &Graph) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for node in &g.nodes {
+        if let Some(fam) = family_of(&node.op) {
+            if !out.contains(&fam) {
+                out.push(fam);
+            }
+        }
+    }
+    out
+}
+
+fn problem(id: String, eval: Graph, perf: Graph) -> Problem {
+    let op_families = families(&perf);
+    let constant_output = constant_fold::output_is_constant(&eval);
+    let reducible = algebraic::count_opportunities(&eval) > 0;
+    Problem {
+        id,
+        level: Level::L4,
+        eval_graph: eval,
+        perf_graph: perf,
+        op_families,
+        constant_output,
+        reducible,
+    }
+}
+
+/// Generated models: (seed, blocks, attention head, global head, name,
+/// perf batch, perf d_model).  The global-head entry is the one
+/// deliberately non-streamable model.
+const GEN: [(u64, usize, bool, bool, &str, usize, usize); 7] = [
+    (0x41, 4, false, false, "mlp_chain", 64, 128),
+    (0x42, 5, true, false, "attn_mix", 64, 96),
+    (0x43, 3, false, false, "shallow", 128, 64),
+    (0x44, 6, true, false, "deep_attn", 48, 128),
+    (0x45, 4, true, false, "gated_attn", 96, 96),
+    (0x46, 5, false, false, "wide", 64, 192),
+    (0x47, 4, false, true, "global_mean", 64, 128),
+];
+
+/// All 8 Level-4 problems.
+pub fn problems() -> Vec<Problem> {
+    let mut out = Vec::with_capacity(8);
+
+    // -- the committed NNEF fixture ------------------------------------
+    let fixture = parse_nnef(TINY_MLP_NNEF)
+        .expect("committed fixture must parse (rust/fixtures/model/tiny_mlp.nnef)");
+    let perf = with_batch(&fixture.graph, 128)
+        .expect("fixture must re-infer at paper batch");
+    out.push(problem("l4_000_tiny_mlp".into(), fixture.graph, perf));
+
+    // -- seven stitched models -----------------------------------------
+    for (i, &(seed, blocks, attention, global, name, pb, pd)) in GEN.iter().enumerate() {
+        let cfg = ModelConfig {
+            batch: 8,
+            d_model: 8,
+            blocks,
+            allow_attention: attention,
+            allow_global: global,
+        };
+        let eval = generate(seed, &cfg);
+        let perf = generate(seed, &cfg.scaled(pb, pd));
+        out.push(problem(format!("l4_{:03}_{name}", i + 1), eval.graph, perf.graph));
+    }
+
+    assert_eq!(out.len(), 8, "level 4 must have exactly 8 problems");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::interp::eval;
+    use crate::kir::validate::validate;
+    use crate::model::is_streamable;
+    use crate::platform::registry;
+
+    #[test]
+    fn exactly_8_problems_with_l4_ids() {
+        let ps = problems();
+        assert_eq!(ps.len(), 8);
+        for p in &ps {
+            assert!(p.id.starts_with("l4_"), "{}", p.id);
+            assert_eq!(p.level, Level::L4);
+        }
+    }
+
+    #[test]
+    fn all_graphs_validate_and_run() {
+        for p in problems() {
+            validate(&p.eval_graph).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+            validate(&p.perf_graph).unwrap_or_else(|e| panic!("{}: {e}", p.id));
+            let out = eval(&p.eval_graph, &p.eval_inputs(0))
+                .unwrap_or_else(|e| panic!("{}: {e}", p.id));
+            assert!(
+                out.iter().all(|t| t.data.iter().all(|v| v.is_finite())),
+                "{}: non-finite reference output",
+                p.id
+            );
+        }
+    }
+
+    #[test]
+    fn supported_on_every_registered_platform() {
+        // Table 2: the level-4 column reads 8 for every benchmark row
+        for platform in registry().platforms() {
+            for p in problems() {
+                assert!(
+                    p.supported_on(platform.spec()),
+                    "{} unsupported on {}",
+                    p.id,
+                    platform.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn metadata_is_computed_not_guessed() {
+        for p in problems() {
+            assert_eq!(
+                p.constant_output,
+                crate::kir::rewrite::constant_fold::output_is_constant(&p.eval_graph),
+                "{}",
+                p.id
+            );
+            assert_eq!(
+                p.reducible,
+                crate::kir::rewrite::algebraic::count_opportunities(&p.eval_graph) > 0,
+                "{}",
+                p.id
+            );
+            assert!(!p.op_families.is_empty(), "{}", p.id);
+            assert!(p.op_families.contains(&"matmul"), "{}: no matmul family", p.id);
+        }
+    }
+
+    #[test]
+    fn perf_graphs_are_paper_scale() {
+        for p in problems() {
+            assert!(
+                p.perf_graph.total_flops() > 8.0 * p.eval_graph.total_flops(),
+                "{}: perf {} vs eval {}",
+                p.id,
+                p.perf_graph.total_flops(),
+                p.eval_graph.total_flops()
+            );
+            assert!(p.perf_graph.len() >= 10, "{}: not a whole model", p.id);
+        }
+    }
+
+    #[test]
+    fn streaming_boundary_is_exercised() {
+        let ps = problems();
+        let streamable = ps.iter().filter(|p| is_streamable(&p.eval_graph)).count();
+        assert!(streamable >= 6, "only {streamable}/8 streamable");
+        assert!(streamable < ps.len(), "need one non-streamable model");
+        // the fixture streams, the global-head model does not
+        assert!(is_streamable(&ps[0].eval_graph));
+        let global = ps.iter().find(|p| p.id.ends_with("global_mean")).unwrap();
+        assert!(!is_streamable(&global.eval_graph));
+        // streamability agrees between eval and perf scales
+        for p in &ps {
+            assert_eq!(
+                is_streamable(&p.eval_graph),
+                is_streamable(&p.perf_graph),
+                "{}",
+                p.id
+            );
+        }
+    }
+}

@@ -1,6 +1,7 @@
 //! The KernelBench-KIR workload suite.
 //!
-//! 250 problems mirroring the KernelBench distribution (Table 2):
+//! 258 problems: the 250 mirroring the KernelBench distribution
+//! (Table 2) plus the level-4 whole-model tier:
 //! - **Level 1** (100): single primitives — activations, matmuls,
 //!   convolutions, reductions, normalizations;
 //! - **Level 2** (100): operator sequences with fusion potential —
@@ -8,18 +9,22 @@
 //!   (including the §7.3 constant-output and §7.4 reducible problems);
 //! - **Level 3** (50): architectures — Fire modules, MobileNetV2-style
 //!   inverted residuals, MinGPT-style transformer blocks, MLP stacks,
-//!   VGG/AlexNet-style stages.
+//!   VGG/AlexNet-style stages;
+//! - **Level 4** (8): whole-model workloads — multi-kernel DAGs from
+//!   [`crate::model`] (generated + a committed NNEF fixture), most of
+//!   them streamable under the serve tier's pulsed execution.
 //!
 //! Each problem carries two shape sets: `eval` (small; ground-truth
 //! numerics run on the CPU reference executor) and `perf` (paper-scale;
 //! priced by the device simulator).  30 problems contain ops missing on
-//! Metal (9 L1 + 21 L2) and are excluded there, leaving 220
-//! (KernelBench-Metal, Table 2).
+//! Metal (9 L1 + 21 L2) and are excluded there, leaving 228
+//! (KernelBench-Metal + the level-4 tier, Table 2).
 
 pub mod spec;
 pub mod level1;
 pub mod level2;
 pub mod level3;
+pub mod level4;
 pub mod suite;
 pub mod refcorpus;
 pub mod synth;

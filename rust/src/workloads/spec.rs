@@ -4,23 +4,67 @@ use crate::kir::Graph;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg;
 
-/// KernelBench difficulty level.
+/// KernelBench difficulty level, extended with the whole-model tier.
+///
+/// The level set is a *registry*: everything that iterates or labels
+/// levels derives from [`Level::ALL`] / [`Level::tag`] / [`Level::index`]
+/// rather than hand-written `1..=3` ranges, so adding a tier is a local
+/// edit here plus the tier's own module — not a scatter of match arms.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Level {
     L1,
     L2,
     L3,
+    /// Whole-model workloads: multi-kernel DAGs stitched from L1–L3
+    /// kernels (see `crate::model` and [`super::level4`]).
+    L4,
 }
 
 impl Level {
-    pub const ALL: [Level; 3] = [Level::L1, Level::L2, Level::L3];
+    pub const ALL: [Level; 4] = [Level::L1, Level::L2, Level::L3, Level::L4];
+
+    /// Number of registered levels (`ALL.len()` usable in const context).
+    pub const COUNT: usize = Level::ALL.len();
+
+    /// Position in [`Level::ALL`] — the canonical index for per-level
+    /// tables (`[T; Level::COUNT]`).
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+
+    /// Calibration bucket for the paper-derived per-level rate tables,
+    /// which are measured for L1–L3 only.  L4 has no published priors;
+    /// whole-model jobs clamp to the hardest measured bucket (L3).
+    pub fn calibration_bucket(&self) -> usize {
+        self.index().min(2)
+    }
 
     pub fn name(&self) -> &'static str {
         match self {
             Level::L1 => "Level 1",
             Level::L2 => "Level 2",
             Level::L3 => "Level 3",
+            Level::L4 => "Level 4",
         }
+    }
+
+    /// Short stable tag ("L1".."L4") — used in store serialization,
+    /// census lines, and CLI `--level` filters.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Level::L1 => "L1",
+            Level::L2 => "L2",
+            Level::L3 => "L3",
+            Level::L4 => "L4",
+        }
+    }
+
+    /// Inverse of [`Level::tag`]; also accepts the bare digit ("4").
+    pub fn from_tag(tag: &str) -> Option<Level> {
+        Level::ALL
+            .iter()
+            .copied()
+            .find(|l| l.tag() == tag || l.tag()[1..] == *tag)
     }
 }
 
@@ -90,6 +134,19 @@ mod tests {
         };
         assert_eq!(p.eval_inputs(1), p.eval_inputs(1));
         assert_ne!(p.eval_inputs(1)[0].data, p.eval_inputs(2)[0].data);
+    }
+
+    #[test]
+    fn level_registry_round_trips() {
+        assert_eq!(Level::ALL.len(), Level::COUNT);
+        for (i, level) in Level::ALL.iter().enumerate() {
+            assert_eq!(level.index(), i);
+            assert_eq!(Level::from_tag(level.tag()), Some(*level));
+            assert_eq!(Level::from_tag(&level.tag()[1..]), Some(*level));
+        }
+        assert_eq!(Level::from_tag("L9"), None);
+        assert_eq!(Level::L4.calibration_bucket(), Level::L3.calibration_bucket());
+        assert_eq!(Level::L1.calibration_bucket(), 0);
     }
 
     #[test]

@@ -1,7 +1,8 @@
-//! The assembled suite: 250 problems, Metal filtering, Table-2 counts.
+//! The assembled suite: 250 kernel problems plus the level-4
+//! whole-model tier, Metal filtering, Table-2 counts.
 
 use super::spec::{Level, Problem};
-use super::{level1, level2, level3};
+use super::{level1, level2, level3, level4};
 use crate::platform::PlatformSpec;
 use std::sync::{Arc, OnceLock};
 
@@ -17,12 +18,14 @@ fn full_suite() -> &'static Arc<Vec<Problem>> {
         let mut ps = level1::problems();
         ps.extend(level2::problems());
         ps.extend(level3::problems());
+        ps.extend(level4::problems());
         Arc::new(ps)
     })
 }
 
 impl Suite {
-    /// The full 250-problem KernelBench-KIR suite (cached).
+    /// The full KernelBench-KIR suite (cached): 250 kernel problems
+    /// (L1–L3) plus the level-4 whole-model tier.
     pub fn full() -> Suite {
         Suite {
             problems: full_suite().clone(),
@@ -82,13 +85,9 @@ impl Suite {
         }
     }
 
-    /// (L1, L2, L3) counts — the Table 2 row.
-    pub fn distribution(&self) -> (usize, usize, usize) {
-        (
-            self.by_level(Level::L1).len(),
-            self.by_level(Level::L2).len(),
-            self.by_level(Level::L3).len(),
-        )
+    /// Per-level counts aligned with [`Level::ALL`] — the Table 2 row.
+    pub fn distribution(&self) -> Vec<usize> {
+        Level::ALL.iter().map(|&l| self.by_level(l).len()).collect()
     }
 
     pub fn get(&self, id: &str) -> Option<&Problem> {
@@ -104,21 +103,26 @@ mod tests {
     #[test]
     fn table2_distribution() {
         let full = Suite::full();
-        assert_eq!(full.distribution(), (100, 100, 50));
+        assert_eq!(full.distribution(), vec![100, 100, 50, 8]);
         let metal_suite = full.supported_on(&metal::m4_max());
-        assert_eq!(metal_suite.distribution(), (91, 79, 50));
-        assert_eq!(metal_suite.len(), 220);
-        assert_eq!(full.supported_on(&cuda::h100()).len(), 250);
+        // level-4 models stitch only universally supported kernel
+        // families, so every platform keeps the whole tier
+        assert_eq!(metal_suite.distribution(), vec![91, 79, 50, 8]);
+        assert_eq!(metal_suite.len(), 228);
+        assert_eq!(full.supported_on(&cuda::h100()).len(), 258);
         // rocm excludes only its transposed-3D-conv family: strictly
         // between the Metal subset and the full suite
         let rocm_len = full.supported_on(&crate::platform::rocm::mi300x()).len();
-        assert!(rocm_len > 220 && rocm_len < 250, "rocm suite: {rocm_len}");
+        assert!(rocm_len > 228 && rocm_len < 258, "rocm suite: {rocm_len}");
     }
 
     #[test]
     fn sample_subsets() {
         let s = Suite::sample(3);
-        assert_eq!(s.len(), 9);
+        assert_eq!(s.len(), 3 * Level::ALL.len());
+        for level in Level::ALL {
+            assert_eq!(s.by_level(level).len(), 3, "{}", level.tag());
+        }
     }
 
     #[test]

@@ -24,7 +24,9 @@ use crate::kir::rewrite::{algebraic, constant_fold};
 
 /// Static family label for an op (Problem.op_families is `&'static str`
 /// — these mirror the curated levels' labels where they overlap).
-fn family_of(op: &Op) -> Option<&'static str> {
+/// Shared with the level-4 whole-model tier, which computes families
+/// from its stitched graphs the same way.
+pub(crate) fn family_of(op: &Op) -> Option<&'static str> {
     Some(match op {
         Op::Input { .. } | Op::ConstFill { .. } | Op::Reshape { .. } => return None,
         Op::Unary { .. } => "activation",
@@ -70,7 +72,20 @@ pub fn problems(seed: u64, n: usize) -> Vec<Problem> {
     (0..n)
         .map(|i| {
             let gseed = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-            let graph = fuzz::graph_with(gseed, &cfg);
+            let level = Level::ALL[i % Level::ALL.len()];
+            // L4 slots are whole-model workloads: multi-kernel DAGs
+            // from the model stitcher rather than single fuzz kernels,
+            // so synthetic suites exercise the level-4 paths (streaming
+            // serve requests included) exactly like the curated tier
+            let graph = if level == Level::L4 {
+                let mcfg = crate::model::ModelConfig {
+                    allow_attention: gseed % 2 == 0,
+                    ..Default::default()
+                };
+                crate::model::generate(gseed, &mcfg).graph
+            } else {
+                fuzz::graph_with(gseed, &cfg)
+            };
             let mut op_families: Vec<&'static str> = Vec::new();
             for node in graph.nodes.iter() {
                 if let Some(fam) = family_of(&node.op) {
@@ -89,7 +104,7 @@ pub fn problems(seed: u64, n: usize) -> Vec<Problem> {
                 // nominal difficulty bucket: synthetic problems are not
                 // calibrated to KernelBench levels, but campaigns and
                 // metrics slice by level, so assign them round-robin
-                level: Level::ALL[i % Level::ALL.len()],
+                level,
                 perf_graph: graph.clone(),
                 eval_graph: graph,
                 op_families,
@@ -161,6 +176,29 @@ mod tests {
         }
         // the motif injection makes both classes non-empty over 40 problems
         assert!(ps.iter().any(|p| p.reducible), "no reducible synthetic problem");
+    }
+
+    #[test]
+    fn l4_slots_are_whole_model_graphs() {
+        let ps = problems(0x77, 16);
+        let l4: Vec<_> = ps.iter().filter(|p| p.level == Level::L4).collect();
+        assert_eq!(l4.len(), 4);
+        for p in l4 {
+            assert!(
+                p.eval_graph.name.starts_with("model_"),
+                "{}: expected a stitched model graph, got {}",
+                p.id,
+                p.eval_graph.name
+            );
+            // whole-model: a multi-kernel DAG with at least one
+            // compute anchor, not a single fuzz kernel
+            assert!(p.eval_graph.len() >= 10, "{}: too small", p.id);
+            assert!(
+                p.eval_graph.nodes.iter().any(|n| n.op.is_compute_anchor()),
+                "{}: no compute anchor",
+                p.id
+            );
+        }
     }
 
     #[test]

@@ -29,13 +29,14 @@ fn virtual_fingerprint(r: &ScenarioReport) -> Vec<String> {
     let mut out = Vec::new();
     for req in &r.requests {
         out.push(format!(
-            "{}|{}|{}|{:?}|{}|{:?}",
+            "{}|{}|{}|{:?}|{}|{:?}|{:?}",
             req.id,
             req.priority.label(),
             req.job,
             req.outcome.latency_ms().map(f64::to_bits),
             req.outcome.label(),
             req.started_ms.map(f64::to_bits),
+            req.chunk_ms.iter().map(|m| m.to_bits()).collect::<Vec<_>>(),
         ));
     }
     out.push(format!("pop={:?}", r.pop_order));
@@ -87,6 +88,53 @@ fn results_bit_identical_across_exec_worker_counts() {
         assert_eq!(virtual_fingerprint(&reports[0]), virtual_fingerprint(r));
         assert_results_bit_identical(&reports[0], r);
     }
+}
+
+/// A scenario with guaranteed streaming traffic: a problem pool with
+/// level-4 models and every level-4 request arriving as a stream.
+fn streaming_cfg(exec_workers: Option<usize>) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::new(0x57AE, 48, 4);
+    cfg.load.synthetic_problems = 16;
+    cfg.load.streaming_fraction = 1.0;
+    cfg.exec_workers = exec_workers;
+    cfg
+}
+
+#[test]
+fn streaming_scenario_is_bit_identical_across_exec_worker_counts() {
+    // the ISSUE 7 streaming determinism property at the serve tier:
+    // chunk schedules, outcomes and synthesized results are all
+    // invariant under real execution pool width
+    let reports: Vec<ScenarioReport> =
+        [1usize, 4, 16].iter().map(|&w| run_scenario(&Store::memory(), &streaming_cfg(Some(w)))).collect();
+    let streamed = reports[0].requests.iter().filter(|r| !r.chunk_ms.is_empty()).count();
+    assert!(streamed > 0, "no streaming miss in the scenario");
+    // every started streaming job was verified pulsed == whole, and
+    // none diverged
+    assert!(reports[0].stream_checked > 0, "streaming verification never ran");
+    for r in &reports {
+        assert_eq!(r.stream_mismatches, 0, "pulsed execution diverged");
+    }
+    for r in &reports[1..] {
+        assert_eq!(virtual_fingerprint(&reports[0]), virtual_fingerprint(r));
+        assert_results_bit_identical(&reports[0], r);
+        assert_eq!(reports[0].stream_checked, r.stream_checked);
+    }
+    // the streaming summary surfaces chunks and holds the chunk budget
+    let cfg = streaming_cfg(None);
+    let summary = summarize(&cfg, &reports[1]);
+    assert!(summary.chunks > 0);
+    assert_eq!(summary.streaming_requests, streamed);
+    assert!(
+        summary.within_chunk_budget(),
+        "chunk p99 {:?} over the {} ms budget",
+        summary.chunk_latency.map(|s| s.p99),
+        summary.chunk_budget_ms
+    );
+    let j = summary.to_json("synthetic");
+    let s = j.get("streaming").unwrap();
+    assert_eq!(s.get("stream_mismatches").and_then(Json::as_i64), Some(0));
+    assert!(s.get("chunks").and_then(Json::as_i64).unwrap() > 0);
 }
 
 #[test]

@@ -60,12 +60,12 @@ fn warm_store_is_bit_identical_to_cold_across_instances() {
     let suite = Suite::sample(3);
     let c = cfg("store_warm_cold_prop");
     let cold = run_campaign_with(&Store::disabled(), &suite, None, &c);
-    assert_eq!(cold.results.len(), 18); // 2 personas × 9 problems
+    assert_eq!(cold.results.len(), 24); // 2 personas × 12 problems (3 per level)
     let dir = tmpdir("warm");
     {
         let s = Store::at_dir(&dir, false).unwrap();
         let first = run_campaign_with(&s, &suite, None, &c);
-        assert_eq!(first.cache.misses, 18);
+        assert_eq!(first.cache.misses, 24);
         assert_eq!(first.cache.hits, 0);
         assert!(first.cache.bytes_written > 0, "disk store must persist entries");
         assert_bit_identical(&cold, &first);
@@ -74,7 +74,7 @@ fn warm_store_is_bit_identical_to_cold_across_instances() {
     // answered from disk, bit-identical to the cold computation
     let s2 = Store::at_dir(&dir, false).unwrap();
     let warm = run_campaign_with(&s2, &suite, None, &c);
-    assert_eq!(warm.cache.hits, 18, "{:?}", warm.cache);
+    assert_eq!(warm.cache.hits, 24, "{:?}", warm.cache);
     assert_eq!(warm.cache.misses, 0);
     assert!(warm.cache.bytes_read > 0);
     assert_bit_identical(&cold, &warm);
@@ -86,7 +86,7 @@ fn corrupted_and_truncated_entries_degrade_to_misses() {
     let suite = Suite::sample(2);
     let c = cfg("store_corruption_prop");
     let cold = run_campaign_with(&Store::disabled(), &suite, None, &c);
-    let n = cold.results.len() as u64; // 12
+    let n = cold.results.len() as u64; // 16
     let dir = tmpdir("corrupt");
     {
         let s = Store::at_dir(&dir, false).unwrap();
@@ -117,7 +117,7 @@ fn resume_after_simulated_kill_has_no_duplicated_or_missing_jobs() {
     let suite = Suite::sample(3);
     let c = cfg("store_resume_prop");
     let uninterrupted = run_campaign_with(&Store::disabled(), &suite, None, &c);
-    let n = uninterrupted.results.len(); // 18
+    let n = uninterrupted.results.len(); // 24
     let dir = tmpdir("resume");
     {
         let s = Store::at_dir(&dir, false).unwrap();
@@ -193,13 +193,13 @@ fn assert_tune_bit_identical(a: &kforge::search::TuneReport, b: &kforge::search:
 #[test]
 fn tune_bit_identical_across_worker_counts_and_store_temperature() {
     use kforge::search::tune_suite_with;
-    let suite = Suite::sample(2); // 6 problems
+    let suite = Suite::sample(2); // 8 problems (2 per level, L4 included)
     // worker counts 1, 4, 16 against a disabled store: pure computation
     let runs: Vec<kforge::search::TuneReport> = [1usize, 4, 16]
         .iter()
         .map(|&w| tune_suite_with(&Store::disabled(), &tune_cfg(w), &suite))
         .collect();
-    assert_eq!(runs[0].outcomes.len(), 6);
+    assert_eq!(runs[0].outcomes.len(), 8);
     for run in &runs[1..] {
         assert_tune_bit_identical(&runs[0], run);
     }
@@ -210,10 +210,10 @@ fn tune_bit_identical_across_worker_counts_and_store_temperature() {
     // from cache, bit-identical to the cold computation
     let store = Store::memory();
     let cold = tune_suite_with(&store, &tune_cfg(4), &suite);
-    assert_eq!(cold.cache.misses, 6);
+    assert_eq!(cold.cache.misses, 8);
     assert_eq!(cold.cache.hits, 0);
     let warm = tune_suite_with(&store, &tune_cfg(1), &suite); // different workers: same keys
-    assert_eq!(warm.cache.hits, 6, "{:?}", warm.cache);
+    assert_eq!(warm.cache.hits, 8, "{:?}", warm.cache);
     assert_eq!(warm.cache.misses, 0);
     assert_tune_bit_identical(&runs[0], &cold);
     assert_tune_bit_identical(&runs[0], &warm);
@@ -222,12 +222,12 @@ fn tune_bit_identical_across_worker_counts_and_store_temperature() {
 #[test]
 fn tune_disk_store_round_trips_and_tolerates_corruption() {
     use kforge::search::tune_suite_with;
-    let suite = Suite::sample(1); // 3 problems
+    let suite = Suite::sample(1); // 4 problems (one per level)
     let dir = tmpdir("tune_disk");
     let cold = {
         let s = Store::at_dir(&dir, false).unwrap();
         let r = tune_suite_with(&s, &tune_cfg(4), &suite);
-        assert_eq!(r.cache.misses, 3);
+        assert_eq!(r.cache.misses, 4);
         assert!(r.cache.bytes_written > 0, "disk store must persist tune entries");
         r
     };
@@ -236,7 +236,7 @@ fn tune_disk_store_round_trips_and_tolerates_corruption() {
         let s = Store::at_dir(&dir, false).unwrap();
         tune_suite_with(&s, &tune_cfg(4), &suite)
     };
-    assert_eq!(warm.cache.hits, 3, "{:?}", warm.cache);
+    assert_eq!(warm.cache.hits, 4, "{:?}", warm.cache);
     assert!(warm.cache.bytes_read > 0);
     assert_tune_bit_identical(&cold, &warm);
     // vandalize one object: it degrades to a recompute, bit-identical
@@ -245,13 +245,13 @@ fn tune_disk_store_round_trips_and_tolerates_corruption() {
         .map(|e| e.unwrap().path())
         .collect();
     objects.sort();
-    assert_eq!(objects.len(), 3);
+    assert_eq!(objects.len(), 4);
     std::fs::write(&objects[0], b"not a cache entry").unwrap();
     let repaired = {
         let s = Store::at_dir(&dir, false).unwrap();
         tune_suite_with(&s, &tune_cfg(4), &suite)
     };
-    assert_eq!(repaired.cache.hits, 2, "{:?}", repaired.cache);
+    assert_eq!(repaired.cache.hits, 3, "{:?}", repaired.cache);
     assert_eq!(repaired.cache.misses, 1);
     assert_tune_bit_identical(&cold, &repaired);
     let _ = std::fs::remove_dir_all(&dir);
@@ -263,19 +263,19 @@ fn tune_and_campaign_entries_share_a_store_without_collisions() {
     // run over the same problems coexist, and each warm pass answers
     // fully from its own entries
     use kforge::search::tune_suite_with;
-    let suite = Suite::sample(1); // 3 problems
+    let suite = Suite::sample(1); // 4 problems (one per level)
     let dir = tmpdir("tune_mixed");
     {
         let s = Store::at_dir(&dir, false).unwrap();
         let c = cfg("mixed_store_prop");
         let campaign_cold = run_campaign_with(&s, &suite, None, &c);
-        assert_eq!(campaign_cold.cache.misses, 6); // 2 personas × 3 problems
+        assert_eq!(campaign_cold.cache.misses, 8); // 2 personas × 4 problems
         let tune_cold = tune_suite_with(&s, &tune_cfg(4), &suite);
-        assert_eq!(tune_cold.cache.misses, 3);
+        assert_eq!(tune_cold.cache.misses, 4);
         let campaign_warm = run_campaign_with(&s, &suite, None, &c);
-        assert_eq!(campaign_warm.cache.hits, 6, "{:?}", campaign_warm.cache);
+        assert_eq!(campaign_warm.cache.hits, 8, "{:?}", campaign_warm.cache);
         let tune_warm = tune_suite_with(&s, &tune_cfg(4), &suite);
-        assert_eq!(tune_warm.cache.hits, 3, "{:?}", tune_warm.cache);
+        assert_eq!(tune_warm.cache.hits, 4, "{:?}", tune_warm.cache);
         assert_tune_bit_identical(&tune_cold, &tune_warm);
     }
     let _ = std::fs::remove_dir_all(&dir);
@@ -400,6 +400,42 @@ fn serve_results_match_a_storeless_run_job_for_job() {
         }
     }
     assert!(overlap > 0, "runs share no jobs; the comparison proved nothing");
+}
+
+// ---------------------------------------------------------------------------
+// level-4 whole-model jobs through the store: the ISSUE 7 acceptance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn level4_campaign_round_trips_the_disk_store() {
+    use kforge::workloads::Level;
+    // a whole-model-only suite: synthesis, pricing and verification all
+    // run over multi-kernel DAGs, cached like any other job
+    let full = Suite::full();
+    let problems: Vec<_> = full.by_level(Level::L4).into_iter().take(3).cloned().collect();
+    assert_eq!(problems.len(), 3);
+    let suite = Suite { problems: std::sync::Arc::new(problems) };
+    let c = cfg("store_level4_prop");
+    let cold_ref = run_campaign_with(&Store::disabled(), &suite, None, &c);
+    assert_eq!(cold_ref.results.len(), 6); // 2 personas × 3 models
+    assert!(cold_ref.results.iter().all(|r| r.level == Level::L4));
+    let dir = tmpdir("level4");
+    {
+        let s = Store::at_dir(&dir, false).unwrap();
+        let first = run_campaign_with(&s, &suite, None, &c);
+        assert_eq!(first.cache.misses, 6, "{:?}", first.cache);
+        assert_eq!(first.cache.hits, 0);
+        assert_bit_identical(&cold_ref, &first);
+    }
+    // fresh instance (fresh process model): every whole-model job
+    // answers from disk, bit-identical — the ISSUE 7 cache-hit-on-rerun
+    // acceptance criterion
+    let s2 = Store::at_dir(&dir, false).unwrap();
+    let warm = run_campaign_with(&s2, &suite, None, &c);
+    assert_eq!(warm.cache.hits, 6, "{:?}", warm.cache);
+    assert_eq!(warm.cache.misses, 0);
+    assert_bit_identical(&cold_ref, &warm);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
