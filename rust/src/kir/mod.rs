@@ -8,6 +8,9 @@
 //! validation, lowering, or numerics downstream — see `agents`).
 //!
 //! - [`op`] / [`graph`] — typed tensor-op graph, eager shape inference.
+//! - [`patch`] — staged incremental edits ([`GraphPatch`]) with
+//!   dirty-region tracking ([`DirtySet`]); the rewrite passes emit
+//!   patches and keep their whole-graph entry points as thin wrappers.
 //! - [`validate`] — structural checks; failure = *compilation failure*.
 //! - [`interp`] — reference evaluation via `tensor::ops`.
 //! - [`rewrite`] — fusion discovery, constant folding (§7.3 invariance
@@ -17,10 +20,12 @@
 
 pub mod op;
 pub mod graph;
+pub mod patch;
 pub mod validate;
 pub mod interp;
 pub mod rewrite;
 pub mod fuzz;
 
 pub use graph::{Graph, GraphBuilder, Node, NodeId};
+pub use patch::{DirtySet, GraphPatch};
 pub use op::{BinaryKind, Op, ReduceKind, UnaryKind};

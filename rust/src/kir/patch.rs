@@ -1,0 +1,710 @@
+//! Incremental graph editing: staged patches over an immutable base
+//! graph, applied atomically, with dirty-region tracking.
+//!
+//! The rewrite passes used to be `Graph -> Graph` functions that clone
+//! and rebuild the whole node list per step — O(graph) per move, which
+//! caps graph size now that level-4 whole-model DAGs exist.  A
+//! [`GraphPatch`] instead *stages* edits against a borrowed base graph
+//! (the tract `ModelPatch` idiom): added nodes get fresh ids past the
+//! base length, replacements swap an op in place, redirects repoint
+//! every user of one value at another.  [`GraphPatch::apply`] resolves
+//! the staged edits into a new validated graph in one pass and reports
+//! which surviving nodes changed as a [`DirtySet`], so consumers
+//! (`search/oracle.rs` re-pricing, fusion-plan refresh) can rebuild
+//! only the dirty region.
+//!
+//! Atomicity: `apply` consumes the patch, never mutates the base, and
+//! returns `Err` — yielding nothing — on conflicting edits, cycles, or
+//! validation failure of the edited graph.  An empty patch is the
+//! identity (bit-identical clone of the base).
+//!
+//! The ported passes are differentially tested bit-identical to their
+//! wholesale forms over ≥1,200 fuzz seeds each (`tests/conformance.rs`).
+
+use super::graph::{infer_shape, Graph, Node, NodeId};
+use super::op::Op;
+use super::validate::validate;
+use crate::tensor::Shape;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Which surviving nodes of a patched graph differ from the base, plus
+/// the id correspondence needed to carry per-node results across.
+#[derive(Debug, Clone)]
+pub struct DirtySet {
+    /// `old_to_new[i]` = the new id of base node `i`, or `None` if the
+    /// node was pruned.  Injective on the survivors.
+    pub old_to_new: Vec<Option<NodeId>>,
+    /// Per *new* node id: did this node change relative to the base?
+    /// Clean (`false`) guarantees: same op and shape, operand list is
+    /// the image of the old operand list, user multiset and
+    /// output-membership preserved.  Per-node derived facts (flops,
+    /// external traffic, fusion decisions) are therefore reusable.
+    dirty: Vec<bool>,
+}
+
+impl DirtySet {
+    /// The identity dirty set: nothing changed, ids map to themselves.
+    pub fn identity(n: usize) -> DirtySet {
+        DirtySet { old_to_new: (0..n).map(Some).collect(), dirty: vec![false; n] }
+    }
+
+    /// Number of nodes in the *new* graph this set describes.
+    pub fn len(&self) -> usize {
+        self.dirty.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dirty.is_empty()
+    }
+
+    /// Is new node `id` dirty?
+    pub fn is_dirty(&self, id: NodeId) -> bool {
+        self.dirty[id]
+    }
+
+    /// Dirty new node ids, ascending.
+    pub fn dirty_ids(&self) -> Vec<NodeId> {
+        (0..self.dirty.len()).filter(|&i| self.dirty[i]).collect()
+    }
+
+    /// How many new nodes are dirty.
+    pub fn count(&self) -> usize {
+        self.dirty.iter().filter(|&&d| d).count()
+    }
+
+    /// Dirty nodes plus everything downstream of them in `g` (nodes
+    /// whose value can differ because an input to their cone changed).
+    /// One forward pass: operands precede users in a KIR graph.
+    pub fn forward_closure(&self, g: &Graph) -> Vec<bool> {
+        assert_eq!(self.dirty.len(), g.nodes.len(), "dirty set is for a different graph");
+        let mut m = self.dirty.clone();
+        for id in 0..g.nodes.len() {
+            if !m[id] && g.nodes[id].op.operands().iter().any(|&o| m[o]) {
+                m[id] = true;
+            }
+        }
+        m
+    }
+
+    /// Dirty nodes plus everything upstream of them in `g` (the cone
+    /// that must be re-examined to re-derive a dirty node).  One
+    /// reverse pass.
+    pub fn backward_closure(&self, g: &Graph) -> Vec<bool> {
+        assert_eq!(self.dirty.len(), g.nodes.len(), "dirty set is for a different graph");
+        let mut m = self.dirty.clone();
+        for id in (0..g.nodes.len()).rev() {
+            if m[id] {
+                for o in g.nodes[id].op.operands() {
+                    m[o] = true;
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Staged edits against a borrowed immutable base graph.
+///
+/// Edit kinds:
+/// - [`add`](GraphPatch::add): append a node (fresh id past the base);
+/// - [`replace`](GraphPatch::replace): swap a base node's op in place;
+/// - [`redirect`](GraphPatch::redirect): repoint every user (and
+///   output) of one value at a same-shaped other value;
+/// - [`rewire_output`](GraphPatch::rewire_output) /
+///   [`set_outputs`](GraphPatch::set_outputs): change the output list;
+/// - [`prune`](GraphPatch::prune): drop dead non-input nodes on apply
+///   (the DCE the wholesale passes ran);
+/// - [`resort`](GraphPatch::resort): Kahn re-sort on apply, for edits
+///   that break the id-ordered topological invariant.
+///
+/// Conflicting edits (two replaces of one node, redirecting a replaced
+/// node, …) are rejected at stage time with an error naming both node
+/// ids involved.
+pub struct GraphPatch<'g> {
+    base: &'g Graph,
+    adds: Vec<Node>,
+    replaces: BTreeMap<NodeId, Node>,
+    redirects: BTreeMap<NodeId, NodeId>,
+    output_rewires: BTreeMap<usize, NodeId>,
+    new_outputs: Option<Vec<NodeId>>,
+    prune: bool,
+    resort: bool,
+}
+
+impl<'g> GraphPatch<'g> {
+    pub fn new(base: &'g Graph) -> GraphPatch<'g> {
+        GraphPatch {
+            base,
+            adds: Vec::new(),
+            replaces: BTreeMap::new(),
+            redirects: BTreeMap::new(),
+            output_rewires: BTreeMap::new(),
+            new_outputs: None,
+            prune: false,
+            resort: false,
+        }
+    }
+
+    /// No staged edits and no apply-time passes: applying yields a
+    /// bit-identical clone of the base.
+    pub fn is_empty(&self) -> bool {
+        self.adds.is_empty()
+            && self.replaces.is_empty()
+            && self.redirects.is_empty()
+            && self.output_rewires.is_empty()
+            && self.new_outputs.is_none()
+            && !self.prune
+            && !self.resort
+    }
+
+    /// Total node count of the virtual (pre-prune) edited graph.
+    fn total(&self) -> usize {
+        self.base.nodes.len() + self.adds.len()
+    }
+
+    /// Run dead-code elimination on apply (keeps all `Input` nodes, as
+    /// the wholesale `rewrite::dce` always did).
+    pub fn prune(&mut self) {
+        self.prune = true;
+    }
+
+    /// Kahn-re-sort the node list on apply.  Required when staged nodes
+    /// replace values defined *before* their own fresh ids (e.g. the
+    /// algebraic rewrite's appended replacement chain).
+    pub fn resort(&mut self) {
+        self.resort = true;
+    }
+
+    /// Follow staged redirects to the final target of `id`.
+    fn resolve(&self, mut id: NodeId) -> NodeId {
+        while let Some(&t) = self.redirects.get(&id) {
+            id = t;
+        }
+        id
+    }
+
+    /// Shape of a virtual node (base, replaced, or added).
+    fn shape_of(&self, id: NodeId) -> Shape {
+        let nb = self.base.nodes.len();
+        if id < nb {
+            match self.replaces.get(&id) {
+                Some(n) => n.shape.clone(),
+                None => self.base.nodes[id].shape.clone(),
+            }
+        } else {
+            self.adds[id - nb].shape.clone()
+        }
+    }
+
+    /// Unresolved (as staged) op of a virtual node.
+    fn raw_op(&self, id: NodeId) -> &Op {
+        let nb = self.base.nodes.len();
+        if id < nb {
+            match self.replaces.get(&id) {
+                Some(n) => &n.op,
+                None => &self.base.nodes[id].op,
+            }
+        } else {
+            &self.adds[id - nb].op
+        }
+    }
+
+    /// Effective op of a virtual node with redirects resolved.
+    fn eff_op(&self, id: NodeId) -> Op {
+        self.raw_op(id).map_operands(|o| self.resolve(o))
+    }
+
+    /// Stage a new node.  Operands may reference base nodes or earlier
+    /// staged adds; the shape is inferred eagerly (ill-typed ops are
+    /// rejected here, mirroring `GraphBuilder`).  Returns the fresh id.
+    pub fn add(&mut self, op: Op) -> Result<NodeId> {
+        let id = self.total();
+        for o in op.operands() {
+            if o >= id {
+                bail!("patch: staged node %{id} references undefined value %{o}");
+            }
+        }
+        let shape = infer_shape(&op, &|i| self.shape_of(i), &self.base.input_shapes)?;
+        self.adds.push(Node { op, shape });
+        Ok(id)
+    }
+
+    /// Stage an in-place op replacement for base node `id`.  The new
+    /// op's shape is re-inferred; operands must precede `id` or be
+    /// staged adds (the latter requires [`resort`](GraphPatch::resort)).
+    pub fn replace(&mut self, id: NodeId, op: Op) -> Result<()> {
+        let nb = self.base.nodes.len();
+        if id >= nb {
+            bail!("patch: cannot replace %{id}: base graph has {nb} nodes");
+        }
+        if let Some(&t) = self.redirects.get(&id) {
+            bail!("patch conflict: %{id} is already redirected to %{t}; cannot also replace %{id}");
+        }
+        if self.replaces.contains_key(&id) {
+            bail!("patch conflict: %{id} already has a staged replacement; refusing a second replace of %{id}");
+        }
+        for o in op.operands() {
+            if o >= self.total() {
+                bail!("patch: replacement for %{id} references undefined value %{o}");
+            }
+            if o >= id && o < nb && !self.resort {
+                bail!("patch: replacement for %{id} reads %{o} out of order (stage resort() first)");
+            }
+        }
+        let shape = infer_shape(&op, &|i| self.shape_of(i), &self.base.input_shapes)?;
+        self.replaces.insert(id, Node { op, shape });
+        Ok(())
+    }
+
+    /// Stage a redirect: every user (and output occurrence) of `from`
+    /// reads `to` instead.  `to` must carry the same shape — redirects
+    /// are value substitutions, not retypings.
+    pub fn redirect(&mut self, from: NodeId, to: NodeId) -> Result<()> {
+        let nb = self.base.nodes.len();
+        if from >= nb {
+            bail!("patch: cannot redirect staged node %{from} (base graph has {nb} nodes)");
+        }
+        if to >= self.total() {
+            bail!("patch: redirect %{from} -> %{to} targets an undefined value");
+        }
+        if let Some(&t) = self.redirects.get(&from) {
+            bail!("patch conflict: %{from} already redirected to %{t}; cannot redirect %{from} -> %{to}");
+        }
+        if self.replaces.contains_key(&from) {
+            bail!("patch conflict: %{from} already has a staged replacement; cannot redirect %{from} -> %{to}");
+        }
+        if self.resolve(to) == from {
+            bail!("patch conflict: redirect %{from} -> %{to} closes a redirect cycle");
+        }
+        let (sf, st) = (self.shape_of(from), self.shape_of(to));
+        if sf != st {
+            bail!("patch: redirect %{from} -> %{to} changes shape {sf} -> {st}");
+        }
+        self.redirects.insert(from, to);
+        Ok(())
+    }
+
+    /// Stage a positional output rewire: output slot `pos` reads `to`.
+    pub fn rewire_output(&mut self, pos: usize, to: NodeId) -> Result<()> {
+        if self.new_outputs.is_some() {
+            bail!("patch conflict: outputs were wholesale-set; cannot also rewire slot {pos} -> %{to}");
+        }
+        if pos >= self.base.outputs.len() {
+            bail!("patch: output slot {pos} out of range (graph has {})", self.base.outputs.len());
+        }
+        if to >= self.total() {
+            bail!("patch: output rewire slot {pos} -> %{to} targets an undefined value");
+        }
+        if let Some(&prev) = self.output_rewires.get(&pos) {
+            bail!("patch conflict: output slot {pos} already rewired to %{prev}; cannot rewire it to %{to}");
+        }
+        self.output_rewires.insert(pos, to);
+        Ok(())
+    }
+
+    /// Stage a wholesale output-list replacement (the shrinker's
+    /// output-minimization move).
+    pub fn set_outputs(&mut self, outs: Vec<NodeId>) -> Result<()> {
+        if let Some((&pos, &to)) = self.output_rewires.iter().next() {
+            bail!("patch conflict: output slot {pos} already rewired to %{to}; cannot wholesale-set outputs");
+        }
+        if self.new_outputs.is_some() {
+            bail!("patch conflict: outputs already wholesale-set");
+        }
+        for &o in &outs {
+            if o >= self.total() {
+                bail!("patch: output references undefined value %{o}");
+            }
+        }
+        self.new_outputs = Some(outs);
+        Ok(())
+    }
+
+    /// Resolve the staged edits into a new graph.  Consumes the patch
+    /// (it is built against exactly this base).  The base is never
+    /// mutated; on any error nothing is produced.  The edited graph is
+    /// validated before being returned, and comes with the [`DirtySet`]
+    /// describing what changed.
+    pub fn apply(self) -> Result<(Graph, DirtySet)> {
+        let base = self.base;
+        let nb = base.nodes.len();
+        let total = self.total();
+        if self.is_empty() {
+            return Ok((base.clone(), DirtySet::identity(nb)));
+        }
+
+        // Outputs of the virtual graph, redirects resolved.
+        let mut outs: Vec<NodeId> = match &self.new_outputs {
+            Some(v) => v.clone(),
+            None => {
+                let mut v = base.outputs.clone();
+                for (&pos, &to) in &self.output_rewires {
+                    v[pos] = to;
+                }
+                v
+            }
+        };
+        for o in outs.iter_mut() {
+            *o = self.resolve(*o);
+        }
+
+        // Materialize, mapping every intermediate (virtual) id to its
+        // final id — `None` for pruned nodes.
+        let (out_g, int_to_final): (Graph, Vec<Option<NodeId>>) = if self.resort {
+            let nodes: Vec<Node> = (0..total)
+                .map(|i| Node { op: self.eff_op(i), shape: self.shape_of(i) })
+                .collect();
+            let order = kahn_order(&nodes)?;
+            let mut remap = vec![0usize; total];
+            for (new, &old) in order.iter().enumerate() {
+                remap[old] = new;
+            }
+            let mut sorted = vec![Node { op: Op::Input { idx: 0 }, shape: Shape::scalar() }; total];
+            for (old, node) in nodes.iter().enumerate() {
+                sorted[remap[old]] =
+                    Node { op: node.op.map_operands(|o| remap[o]), shape: node.shape.clone() };
+            }
+            let sorted_g = Graph {
+                name: base.name.clone(),
+                nodes: sorted,
+                input_shapes: base.input_shapes.clone(),
+                outputs: outs.iter().map(|&o| remap[o]).collect(),
+            };
+            if self.prune {
+                let (pruned, prune_map) = prune_graph(&sorted_g);
+                let int_to_final = (0..total).map(|i| prune_map[remap[i]]).collect();
+                (pruned, int_to_final)
+            } else {
+                let int_to_final = (0..total).map(|i| Some(remap[i])).collect();
+                (sorted_g, int_to_final)
+            }
+        } else {
+            // Direct emit in id order.  With prune on, dead nodes are
+            // never materialized at all — liveness runs over the
+            // *virtual* ops, so a shrink candidate only ever builds its
+            // live cone.
+            let mut live = vec![!self.prune; total];
+            if self.prune {
+                let mut stack = outs.clone();
+                while let Some(id) = stack.pop() {
+                    if live[id] {
+                        continue;
+                    }
+                    live[id] = true;
+                    stack.extend(self.eff_op(id).operands());
+                }
+                // keep all Input nodes so the calling convention never
+                // changes (same rule as the wholesale dce)
+                for i in 0..total {
+                    if matches!(self.raw_op(i), Op::Input { .. }) {
+                        live[i] = true;
+                    }
+                }
+            }
+            let mut remap: Vec<Option<NodeId>> = vec![None; total];
+            let mut nodes = Vec::new();
+            for i in 0..total {
+                if live[i] {
+                    remap[i] = Some(nodes.len());
+                    nodes.push(Node {
+                        op: self.eff_op(i).map_operands(|o| remap[o].expect("live operand")),
+                        shape: self.shape_of(i),
+                    });
+                }
+            }
+            let g = Graph {
+                name: base.name.clone(),
+                nodes,
+                input_shapes: base.input_shapes.clone(),
+                outputs: outs.iter().map(|&o| remap[o].expect("live output")).collect(),
+            };
+            (g, remap)
+        };
+
+        validate(&out_g)?;
+        let dirty = self.dirty_set(&outs, &int_to_final, out_g.nodes.len());
+        Ok((out_g, dirty))
+    }
+
+    /// Compute the dirty set in intermediate-id space, then map it
+    /// through the final renumbering.  Over-approximates: anything a
+    /// per-node derived fact could observe (content, operand identity
+    /// or content, user multiset, output membership) marks the node.
+    fn dirty_set(
+        &self,
+        outs_resolved: &[NodeId],
+        int_to_final: &[Option<NodeId>],
+        final_len: usize,
+    ) -> DirtySet {
+        let base = self.base;
+        let nb = base.nodes.len();
+        let total = self.total();
+        let mut d = vec![false; total];
+        // added nodes, and their operands (which gained a user)
+        for (k, node) in self.adds.iter().enumerate() {
+            d[nb + k] = true;
+            for o in node.op.operands() {
+                d[self.resolve(o)] = true;
+            }
+        }
+        // replaced nodes, plus old and new operands (user-set change)
+        for (&id, node) in &self.replaces {
+            d[id] = true;
+            for o in base.nodes[id].op.operands() {
+                d[self.resolve(o)] = true;
+            }
+            for o in node.op.operands() {
+                d[self.resolve(o)] = true;
+            }
+        }
+        // redirect sources and targets
+        for (&f, &t) in &self.redirects {
+            d[f] = true;
+            d[self.resolve(t)] = true;
+        }
+        // users whose operand identities changed (redirected operand)
+        // or whose operand content changed (replaced operand)
+        for i in 0..total {
+            if d[i] {
+                continue;
+            }
+            for o in self.raw_op(i).operands() {
+                let r = self.resolve(o);
+                if r != o || self.replaces.contains_key(&r) {
+                    d[i] = true;
+                    break;
+                }
+            }
+        }
+        // output-multiplicity changes
+        let mut was_cnt = vec![0u32; total];
+        for &o in &base.outputs {
+            was_cnt[o] += 1;
+        }
+        let mut now_cnt = vec![0u32; total];
+        for &o in outs_resolved {
+            now_cnt[o] += 1;
+        }
+        for i in 0..total {
+            if was_cnt[i] != now_cnt[i] {
+                d[i] = true;
+            }
+        }
+        // surviving operands of pruned nodes (they lost a user)
+        for i in 0..total {
+            if int_to_final[i].is_none() {
+                for o in self.eff_op(i).operands() {
+                    if int_to_final[o].is_some() {
+                        d[o] = true;
+                    }
+                }
+            }
+        }
+        let mut dirty = vec![false; final_len];
+        for i in 0..total {
+            if let Some(nf) = int_to_final[i] {
+                if d[i] {
+                    dirty[nf] = true;
+                }
+            }
+        }
+        let old_to_new = int_to_final[..nb].to_vec();
+        DirtySet { old_to_new, dirty }
+    }
+}
+
+/// Kahn topological order over a node list — byte-for-byte the same
+/// algorithm the wholesale algebraic rewrite sorts with (sorted initial
+/// zero-indegree queue, FIFO walk), so a resorting patch renumbers
+/// exactly like the pass it replaces.  Errs (instead of asserting) on a
+/// cycle, keeping `apply` atomic.
+fn kahn_order(nodes: &[Node]) -> Result<Vec<NodeId>> {
+    let n = nodes.len();
+    let mut indeg = vec![0usize; n];
+    let mut users: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for (id, node) in nodes.iter().enumerate() {
+        let mut ops = node.op.operands();
+        ops.sort_unstable();
+        ops.dedup();
+        indeg[id] = ops.len();
+        for o in ops {
+            users[o].push(id);
+        }
+    }
+    let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    queue.sort_unstable();
+    let mut qi = 0;
+    while qi < queue.len() {
+        let id = queue[qi];
+        qi += 1;
+        for &u in &users[id] {
+            indeg[u] -= 1;
+            if indeg[u] == 0 {
+                queue.push(u);
+            }
+        }
+    }
+    if queue.len() != n {
+        bail!("patch introduces a cycle: only {} of {n} nodes sortable", queue.len());
+    }
+    Ok(queue)
+}
+
+/// Liveness-based compaction — the same algorithm as `rewrite::dce`
+/// (outputs-rooted liveness, all `Input` nodes kept, order-preserving
+/// remap) but also returning the old→new id map for dirty tracking.
+fn prune_graph(g: &Graph) -> (Graph, Vec<Option<NodeId>>) {
+    let mut live = vec![false; g.nodes.len()];
+    let mut stack: Vec<usize> = g.outputs.clone();
+    while let Some(id) = stack.pop() {
+        if live[id] {
+            continue;
+        }
+        live[id] = true;
+        stack.extend(g.nodes[id].op.operands());
+    }
+    for (i, n) in g.nodes.iter().enumerate() {
+        if matches!(n.op, Op::Input { .. }) {
+            live[i] = true;
+        }
+    }
+    let mut remap: Vec<Option<NodeId>> = vec![None; g.nodes.len()];
+    let mut nodes = Vec::new();
+    for (i, n) in g.nodes.iter().enumerate() {
+        if live[i] {
+            remap[i] = Some(nodes.len());
+            nodes.push(Node {
+                op: n.op.map_operands(|o| remap[o].expect("live operand")),
+                shape: n.shape.clone(),
+            });
+        }
+    }
+    let out = Graph {
+        name: g.name.clone(),
+        nodes,
+        input_shapes: g.input_shapes.clone(),
+        outputs: g.outputs.iter().map(|&o| remap[o].expect("live output")).collect(),
+    };
+    (out, remap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kir::graph::GraphBuilder;
+    use crate::kir::op::{BinaryKind, UnaryKind};
+    use crate::tensor::Shape;
+
+    fn chain() -> Graph {
+        let mut b = GraphBuilder::new("p");
+        let x = b.input(Shape::of(&[4, 4]));
+        let r = b.unary(UnaryKind::Relu, x);
+        let t = b.unary(UnaryKind::Tanh, r);
+        b.finish(vec![t])
+    }
+
+    #[test]
+    fn empty_patch_is_identity() {
+        let g = chain();
+        let (out, dirty) = GraphPatch::new(&g).apply().unwrap();
+        assert_eq!(out, g);
+        assert_eq!(out.render(), g.render());
+        assert_eq!(dirty.count(), 0);
+        assert_eq!(dirty.old_to_new, (0..g.len()).map(Some).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn add_and_rewire_output() {
+        let g = chain();
+        let mut p = GraphPatch::new(&g);
+        p.prune();
+        let n = p.add(Op::Unary { kind: UnaryKind::Neg, input: 2 }).unwrap();
+        p.rewire_output(0, n).unwrap();
+        let (out, dirty) = p.apply().unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(matches!(out.nodes[3].op, Op::Unary { kind: UnaryKind::Neg, .. }));
+        assert_eq!(out.outputs, vec![3]);
+        // the added node and its operand (new user) are dirty; the tanh
+        // also lost its output slot, so it is dirty twice over
+        assert!(dirty.is_dirty(3) && dirty.is_dirty(2));
+        assert!(!dirty.is_dirty(0) && !dirty.is_dirty(1));
+    }
+
+    #[test]
+    fn redirect_prunes_and_marks_target() {
+        let g = chain();
+        let mut p = GraphPatch::new(&g);
+        p.prune();
+        // bypass the relu: tanh reads x directly
+        p.redirect(1, 0).unwrap();
+        let (out, dirty) = p.apply().unwrap();
+        assert_eq!(out.len(), 2); // x, tanh — relu dead and never materialized
+        assert_eq!(dirty.old_to_new, vec![Some(0), None, Some(1)]);
+        assert!(dirty.is_dirty(0), "redirect target gained a user");
+        assert!(dirty.is_dirty(1), "user's operand identity changed");
+    }
+
+    #[test]
+    fn conflicting_edits_name_both_ids() {
+        let g = chain();
+        let mut p = GraphPatch::new(&g);
+        p.replace(1, Op::Unary { kind: UnaryKind::Neg, input: 0 }).unwrap();
+        let err = p.redirect(1, 0).unwrap_err().to_string();
+        assert!(err.contains("%1") && err.contains("%0"), "{err}");
+        let mut q = GraphPatch::new(&g);
+        q.redirect(1, 0).unwrap();
+        let err = q.replace(1, Op::Unary { kind: UnaryKind::Neg, input: 0 }).unwrap_err().to_string();
+        assert!(err.contains("%1") && err.contains("%0"), "{err}");
+        let err = q.redirect(1, 2).unwrap_err().to_string();
+        assert!(err.contains("%1") && err.contains("%2"), "{err}");
+    }
+
+    #[test]
+    fn redirect_cycle_rejected() {
+        let g = chain();
+        let mut p = GraphPatch::new(&g);
+        p.redirect(2, 1).unwrap();
+        let err = p.redirect(1, 2).unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn shape_changing_redirect_rejected() {
+        let mut b = GraphBuilder::new("s");
+        let x = b.input(Shape::of(&[4, 4]));
+        let y = b.input(Shape::of(&[2, 2]));
+        let r = b.unary(UnaryKind::Relu, x);
+        let _ = y;
+        let g = b.finish(vec![r]);
+        let mut p = GraphPatch::new(&g);
+        assert!(p.redirect(2, 1).is_err());
+    }
+
+    #[test]
+    fn invalid_result_is_rejected_atomically() {
+        let g = chain();
+        let mut p = GraphPatch::new(&g);
+        // empty output list fails validation on apply
+        p.set_outputs(vec![]).unwrap();
+        assert!(p.apply().is_err());
+    }
+
+    #[test]
+    fn closures_walk_both_directions() {
+        let mut b = GraphBuilder::new("c");
+        let x = b.input(Shape::of(&[4]));
+        let r = b.unary(UnaryKind::Relu, x);
+        let t = b.unary(UnaryKind::Tanh, r);
+        let u = b.binary(BinaryKind::Add, t, r);
+        let g = b.finish(vec![u]);
+        let mut p = GraphPatch::new(&g);
+        p.replace(2, Op::Unary { kind: UnaryKind::Neg, input: 1 }).unwrap();
+        let (out, dirty) = p.apply().unwrap();
+        let fwd = dirty.forward_closure(&out);
+        assert!(fwd[2] && fwd[3], "replacement and its user are downstream-dirty");
+        assert!(!fwd[0], "input upstream of the edit is not in the forward closure");
+        let bwd = dirty.backward_closure(&out);
+        assert!(bwd[2] && bwd[1] && bwd[0], "upstream cone reaches the inputs");
+    }
+}

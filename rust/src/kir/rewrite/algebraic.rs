@@ -13,29 +13,82 @@
 
 use crate::kir::graph::{infer_shape, Graph, Node, NodeId};
 use crate::kir::op::{BinaryKind, Op, ReduceKind};
+use crate::kir::patch::GraphPatch;
 use crate::tensor::Shape;
 
+/// Stage the next single reduce∘matmul collapse as a patch, if any
+/// match exists.  The patch appends the replacement chain (`w_sum`,
+/// `mv`, optional `b_sum`/`Add`), redirects the matched Reduce to it,
+/// and re-sorts + prunes on apply — one `apply_match` + DCE step of the
+/// wholesale pass, bit for bit.
+pub fn next_patch(g: &Graph) -> Option<GraphPatch<'_>> {
+    let m = find_match(g)?;
+    let Op::Matmul { lhs: x, rhs: w } = g.nodes[m.matmul_id].op else {
+        unreachable!()
+    };
+    let mut p = GraphPatch::new(g);
+    p.prune();
+    p.resort();
+    // w_sum = Reduce(Sum, 1, W): [k, n] -> [k, 1]
+    let w_sum = p.add(Op::Reduce { kind: ReduceKind::Sum, axis: 1, input: w }).expect("rewrite types");
+    // x @ w_sum : [m, 1]
+    let mv = p.add(Op::Matmul { lhs: x, rhs: w_sum }).expect("rewrite types");
+    let replacement = match m.add_bias {
+        None => mv,
+        Some((_add, bias)) => {
+            // bias_sum = sum over the last axis of the bias
+            let axis = g.nodes[bias].shape.rank() - 1;
+            let b_sum = p
+                .add(Op::Reduce { kind: ReduceKind::Sum, axis, input: bias })
+                .expect("rewrite types");
+            p.add(Op::Binary { kind: BinaryKind::Add, lhs: mv, rhs: b_sum }).expect("rewrite types")
+        }
+    };
+    p.redirect(m.reduce_id, replacement).expect("replacement keeps the reduce's shape");
+    Some(p)
+}
+
 /// Apply the matmul-chain reductions everywhere they match.
+/// Patch-based: applies [`next_patch`] to a fixpoint; requires a
+/// structurally valid graph.
 pub fn reduce_matmul_chains(g: &Graph) -> Graph {
+    let mut g = g.clone();
+    loop {
+        let next = match next_patch(&g) {
+            Some(p) => p.apply().expect("algebraic patch applies to a structurally valid graph").0,
+            None => break,
+        };
+        g = next;
+    }
+    super::dce(&g)
+}
+
+/// The original clone-and-rebuild reduction loop, kept as the
+/// differential reference for the patch-vs-whole harness.
+pub fn reduce_matmul_chains_wholesale(g: &Graph) -> Graph {
     let mut g = g.clone();
     loop {
         match find_match(&g) {
             // DCE after every application: the matched Reduce node is
             // dead-but-present after redirect, and without removal
             // find_match would rediscover it forever.
-            Some(m) => g = super::dce(&apply_match(&g, m)),
+            Some(m) => g = super::dce_wholesale(&apply_match(&g, m)),
             None => break,
         }
     }
-    super::dce(&g)
+    super::dce_wholesale(&g)
 }
 
 /// Count how many reduction opportunities exist (harness statistic).
 pub fn count_opportunities(g: &Graph) -> usize {
     let mut n = 0;
     let mut cur = g.clone();
-    while let Some(m) = find_match(&cur) {
-        cur = super::dce(&apply_match(&cur, m));
+    loop {
+        let next = match next_patch(&cur) {
+            Some(p) => p.apply().expect("algebraic patch applies to a structurally valid graph").0,
+            None => break,
+        };
+        cur = next;
         n += 1;
     }
     n
@@ -251,6 +304,11 @@ mod tests {
         let g = problem12();
         let r = reduce_matmul_chains(&g);
         validate(&r).expect("rewritten graph valid");
+        assert_eq!(
+            r,
+            reduce_matmul_chains_wholesale(&g),
+            "patch reduction diverges from the wholesale reference"
+        );
         // the rewritten matmul must have an [k,1]-shaped rhs (matvec)
         let matvec = r.nodes.iter().any(|n| {
             matches!(&n.op, Op::Matmul { rhs, .. } if r.nodes[*rhs].shape.dims() == [16, 1])

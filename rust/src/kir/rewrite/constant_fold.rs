@@ -16,6 +16,7 @@
 
 use crate::kir::graph::{Graph, Node, NodeId};
 use crate::kir::op::{BinaryKind, Op, ReduceKind, UnaryKind};
+use crate::kir::patch::GraphPatch;
 
 /// Per-node constness lattice: either unknown or a known fill value.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -24,9 +25,81 @@ enum Constness {
     Fill(f32),
 }
 
+/// Stage constant folding as a patch:
+/// 1. singleton-axis reductions become redirects to their input, and
+///    `sub(a, a)` (post-redirect) becomes an in-place `ConstFill(0)`;
+/// 2. the constness lattice runs over the *virtually* simplified graph
+///    (base ids, staged edits resolved);
+/// 3. each provably-constant output position gains a fresh `ConstFill`
+///    node and an output rewire;
+/// with one final prune standing in for the wholesale pass's DCEs.
+pub fn patch(g: &Graph) -> GraphPatch<'_> {
+    let n = g.nodes.len();
+    let mut p = GraphPatch::new(g);
+    p.prune();
+    // 1. structural identities, in base-id space: alias[i] = the
+    // canonical base node i resolves to; zeroed[i] = replaced by zero.
+    let mut alias: Vec<NodeId> = (0..n).collect();
+    let mut zeroed = vec![false; n];
+    for id in 0..n {
+        let op = g.nodes[id].op.map_operands(|o| alias[o]);
+        match &op {
+            // aliasing preserves shapes, so the singleton-axis check
+            // reads base shapes even through alias chains
+            Op::Reduce { kind, axis, input }
+                if g.nodes[*input].shape.dim(*axis) == 1
+                    && matches!(kind, ReduceKind::Sum | ReduceKind::Max | ReduceKind::Mean) =>
+            {
+                alias[id] = *input;
+                p.redirect(id, *input).expect("singleton reduce aliases to a same-shaped input");
+            }
+            Op::Binary { kind: BinaryKind::Sub, lhs, rhs } if lhs == rhs => {
+                zeroed[id] = true;
+                p.replace(id, Op::ConstFill { value: 0.0, shape: g.nodes[id].shape.clone() })
+                    .expect("zero fill keeps the node's shape");
+            }
+            _ => {}
+        }
+    }
+    // 2. constness lattice over the virtually-simplified structure
+    let mut konst = vec![Constness::Unknown; n];
+    for id in 0..n {
+        konst[id] = if alias[id] != id {
+            konst[alias[id]]
+        } else if zeroed[id] {
+            Constness::Fill(0.0)
+        } else {
+            let op = g.nodes[id].op.map_operands(|o| alias[o]);
+            constness_of(&op, &|i| g.nodes[i].shape.clone(), &konst)
+        };
+    }
+    // 3. constant outputs collapse to ConstFill
+    for (pos, &out) in g.outputs.iter().enumerate() {
+        let eff = alias[out];
+        if let Constness::Fill(v) = konst[eff] {
+            let already = zeroed[eff] || matches!(g.nodes[eff].op, Op::ConstFill { .. });
+            if !already {
+                let shape = g.nodes[eff].shape.clone();
+                let fill = p
+                    .add(Op::ConstFill { value: v, shape })
+                    .expect("const fill carries its own shape");
+                p.rewire_output(pos, fill).expect("one rewire per output position");
+            }
+        }
+    }
+    p
+}
+
 /// Fold provably-constant subgraphs; collapse constant outputs to
 /// `ConstFill` nodes.  Semantics-preserving by construction.
+/// Patch-based; requires a structurally valid graph.
 pub fn fold(g: &Graph) -> Graph {
+    patch(g).apply().expect("fold patch applies to a structurally valid graph").0
+}
+
+/// The original clone-and-rebuild fold, kept as the differential
+/// reference for the patch-vs-whole harness.
+pub fn fold_wholesale(g: &Graph) -> Graph {
     let mut g = simplify_singleton_reduce(g);
     let mut konst = vec![Constness::Unknown; g.nodes.len()];
     for id in 0..g.nodes.len() {
@@ -50,7 +123,7 @@ pub fn fold(g: &Graph) -> Graph {
     }
     g.outputs = new_outputs;
     if changed {
-        super::dce(&g)
+        super::dce_wholesale(&g)
     } else {
         g
     }
@@ -106,12 +179,23 @@ fn simplify_singleton_reduce(g: &Graph) -> Graph {
         input_shapes: g.input_shapes.clone(),
         outputs: g.outputs.iter().map(|&o| alias[o]).collect(),
     };
-    super::dce(&out)
+    super::dce_wholesale(&out)
 }
 
 fn infer_constness(g: &Graph, id: NodeId, konst: &[Constness]) -> Constness {
-    let n = &g.nodes[id];
-    match &n.op {
+    constness_of(&g.nodes[id].op, &|i| g.nodes[i].shape.clone(), konst)
+}
+
+/// The constness lattice step for one op, with operand shapes supplied
+/// by the caller — shared between the wholesale pass (shapes of the
+/// simplified graph) and the patch pass (base shapes, which aliasing
+/// preserves).
+fn constness_of(
+    op: &Op,
+    shape_of: &dyn Fn(NodeId) -> crate::tensor::Shape,
+    konst: &[Constness],
+) -> Constness {
+    match op {
         Op::ConstFill { value, .. } => Constness::Fill(*value),
         Op::Input { .. } => Constness::Unknown,
         Op::Unary { kind, input } => match konst[*input] {
@@ -130,7 +214,7 @@ fn infer_constness(g: &Graph, id: NodeId, konst: &[Constness]) -> Constness {
         },
         Op::Reduce { kind, input, axis } => match konst[*input] {
             Constness::Fill(v) => {
-                let rdim = g.nodes[*input].shape.dim(*axis) as f32;
+                let rdim = shape_of(*input).dim(*axis) as f32;
                 Constness::Fill(match kind {
                     ReduceKind::Sum => v * rdim,
                     ReduceKind::Max | ReduceKind::Mean => v,
@@ -142,7 +226,7 @@ fn infer_constness(g: &Graph, id: NodeId, konst: &[Constness]) -> Constness {
         Op::Softmax { input } => match konst[*input] {
             // softmax of a constant row is uniform 1/n
             Constness::Fill(_) => {
-                let s = &g.nodes[*input].shape;
+                let s = shape_of(*input);
                 Constness::Fill(1.0 / s.dim(s.rank() - 1) as f32)
             }
             _ => Constness::Unknown,
@@ -239,6 +323,7 @@ mod tests {
         let folded = fold(&g);
         // compute nodes are gone: inputs + one ConstFill remain
         assert!(folded.nodes.len() <= g.input_shapes.len() + 1, "{}", folded.render());
+        assert_eq!(folded, fold_wholesale(&g), "patch fold diverges from the wholesale reference");
         let mut rng = Pcg::seed(1);
         let ins: Vec<Tensor> = g
             .input_shapes

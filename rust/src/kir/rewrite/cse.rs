@@ -5,6 +5,7 @@
 
 use crate::kir::graph::{Graph, Node, NodeId};
 use crate::kir::op::Op;
+use crate::kir::patch::GraphPatch;
 use std::collections::HashMap;
 
 /// Structural key for an op (operands already canonicalized).
@@ -12,9 +13,40 @@ fn key(op: &Op) -> String {
     format!("{op:?}")
 }
 
+/// Stage CSE as a patch: later duplicates redirect to their first
+/// (canonical) occurrence, and the prune pass drops the dead copies.
+/// Keys are computed over canonical *base* ids — the canonical map is
+/// injective into the compacted graph, so this merges exactly the pairs
+/// the wholesale pass merges.
+pub fn patch(g: &Graph) -> GraphPatch<'_> {
+    let mut seen: HashMap<String, NodeId> = HashMap::new();
+    let mut canon: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    let mut p = GraphPatch::new(g);
+    p.prune();
+    for (id, n) in g.nodes.iter().enumerate() {
+        let op = n.op.map_operands(|o| canon[o]);
+        let k = key(&op);
+        if let Some(&existing) = seen.get(&k) {
+            canon.push(existing);
+            p.redirect(id, existing).expect("cse: identical ops share a shape");
+        } else {
+            seen.insert(k, id);
+            canon.push(id);
+        }
+    }
+    p
+}
+
 /// Eliminate duplicate subexpressions.  Input nodes are never merged
-/// (each `Input{idx}` is unique by idx anyway).
+/// (each `Input{idx}` is unique by idx anyway).  Patch-based; requires
+/// a structurally valid graph.
 pub fn eliminate(g: &Graph) -> Graph {
+    patch(g).apply().expect("cse patch applies to a structurally valid graph").0
+}
+
+/// The original clone-and-rebuild CSE, kept as the differential
+/// reference for the patch-vs-whole harness.
+pub fn eliminate_wholesale(g: &Graph) -> Graph {
     let mut seen: HashMap<String, NodeId> = HashMap::new();
     let mut remap: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
     let mut nodes: Vec<Node> = Vec::new();
@@ -30,7 +62,7 @@ pub fn eliminate(g: &Graph) -> Graph {
             remap.push(id);
         }
     }
-    super::dce(&Graph {
+    super::dce_wholesale(&Graph {
         name: g.name.clone(),
         nodes,
         input_shapes: g.input_shapes.clone(),
@@ -86,5 +118,6 @@ mod tests {
         let g = b.finish(vec![m]);
         let c = eliminate(&g);
         assert_eq!(c.nodes.len(), 4); // x, sig, relu, add
+        assert_eq!(c, eliminate_wholesale(&g), "patch cse diverges from the wholesale reference");
     }
 }

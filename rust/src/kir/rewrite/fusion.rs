@@ -16,6 +16,7 @@
 
 use crate::kir::graph::{Graph, NodeId};
 use crate::kir::op::Op;
+use crate::kir::patch::DirtySet;
 
 /// A fusion plan: `group[i]` is the group index of node i.  Nodes that
 /// produce no kernel (inputs, reshapes, constants) carry `usize::MAX`.
@@ -77,8 +78,21 @@ pub fn none(g: &Graph) -> FusionPlan {
 pub fn greedy_epilogue(g: &Graph) -> FusionPlan {
     let uses = g.use_counts();
     let mut group = vec![usize::MAX; g.nodes.len()];
-    let mut n_groups = 0usize;
-    for (id, node) in g.nodes.iter().enumerate() {
+    let n_groups = greedy_scan(g, &uses, &mut group, 0, 0);
+    FusionPlan { group, n_groups }
+}
+
+/// The greedy join scan from node `start` onward, with `group[..start]`
+/// and `n_groups` already settled.  Shared by the full plan and the
+/// incremental refresh so the join rule cannot drift between them.
+fn greedy_scan(
+    g: &Graph,
+    uses: &[usize],
+    group: &mut [usize],
+    start: usize,
+    mut n_groups: usize,
+) -> usize {
+    for (id, node) in g.nodes.iter().enumerate().skip(start) {
         if !emits_kernel(&node.op) {
             continue;
         }
@@ -107,6 +121,44 @@ pub fn greedy_epilogue(g: &Graph) -> FusionPlan {
             }
         }
     }
+    n_groups
+}
+
+/// Incrementally refresh a greedy-epilogue plan after a patch: the
+/// *identity prefix* — leading new ids that are clean and kept their
+/// base id — reuses the previous plan's assignments verbatim (clean
+/// guarantees the join rule's every input — content, operand ids, user
+/// multiset, output membership — is unchanged there), and the scan
+/// resumes at the first changed id.  Falls back to a full recompute
+/// when nothing is reusable.  Differentially tested bit-identical to
+/// [`greedy_epilogue`] on the patched graph.
+pub fn greedy_refresh(g: &Graph, prev: &FusionPlan, dirty: &DirtySet) -> FusionPlan {
+    let n = g.nodes.len();
+    if dirty.len() != n {
+        return greedy_epilogue(g); // dirty set is for some other graph
+    }
+    let mut k = 0;
+    while k < n
+        && !dirty.is_dirty(k)
+        && dirty.old_to_new.get(k).copied() == Some(Some(k))
+    {
+        k += 1;
+    }
+    if k == 0 || prev.group.len() < k {
+        return greedy_epilogue(g);
+    }
+    let uses = g.use_counts();
+    let mut group = vec![usize::MAX; n];
+    group[..k].copy_from_slice(&prev.group[..k]);
+    // groups are numbered in scan order, so the prefix's group indices
+    // are exactly 0..n0
+    let n0 = prev.group[..k]
+        .iter()
+        .filter(|&&grp| grp != usize::MAX)
+        .map(|&grp| grp + 1)
+        .max()
+        .unwrap_or(0);
+    let n_groups = greedy_scan(g, &uses, &mut group, k, n0);
     FusionPlan { group, n_groups }
 }
 
@@ -225,6 +277,28 @@ mod tests {
         let d = b.unary(UnaryKind::Tanh, c);
         let g = b.finish(vec![d]);
         assert_eq!(greedy_epilogue(&g).launches(), 1);
+    }
+
+    #[test]
+    fn greedy_refresh_matches_full_recompute() {
+        use crate::kir::patch::GraphPatch;
+        let mut b = GraphBuilder::new("rf");
+        let x = b.input(Shape::of(&[64, 64]));
+        let w = b.input(Shape::of(&[64, 64]));
+        let m = b.matmul(x, w);
+        let a = b.unary(UnaryKind::Relu, m);
+        let t = b.unary(UnaryKind::Tanh, a);
+        let g = b.finish(vec![t]);
+        let prev = greedy_epilogue(&g);
+        let mut p = GraphPatch::new(&g);
+        p.prune();
+        p.redirect(a, m).unwrap(); // bypass the relu
+        let (g2, dirty) = p.apply().unwrap();
+        assert_eq!(greedy_refresh(&g2, &prev, &dirty), greedy_epilogue(&g2));
+        // identity patch: full prefix reuse is still the full plan
+        let (g3, clean) = GraphPatch::new(&g).apply().unwrap();
+        assert_eq!(greedy_refresh(&g3, &prev, &clean), greedy_epilogue(&g3));
+        let _ = (x, w, t);
     }
 
     #[test]

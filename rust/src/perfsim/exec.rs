@@ -6,6 +6,7 @@
 use super::cost::{kernel_cost, launch_cost, KernelCost};
 use super::lower::Plan;
 use crate::platform::PlatformSpec;
+use crate::sched::Schedule;
 use crate::util::rng::Pcg;
 use crate::util::stats;
 
@@ -92,6 +93,33 @@ fn build_timeline(spec: &PlatformSpec, plan: &Plan) -> (Vec<TimelineEntry>, f64)
 /// noise alike.
 pub fn ideal_time(spec: &PlatformSpec, plan: &Plan) -> f64 {
     build_timeline(spec, plan).1
+}
+
+/// Noise-free model time from per-kernel body durations alone.  This
+/// is [`build_timeline`]'s fold with the kernel costing factored out:
+/// `ideal_from_bodies(spec, s, bodies)` where `bodies[i]` is kernel i's
+/// `kernel_cost(..).total_s` returns exactly [`ideal_time`]'s result,
+/// bit for bit (same statements, same order — float addition is not
+/// associative, so the fold is kept textually identical).  The oracle's
+/// dirty-region re-pricing recomputes only changed bodies and re-runs
+/// this cheap fold over the full sequence.
+pub fn ideal_from_bodies(spec: &PlatformSpec, s: &Schedule, bodies: &[f64]) -> f64 {
+    let n = bodies.len();
+    let total_launch = launch_cost(spec, s, n);
+    let per_launch = if n > 0 { total_launch / n as f64 } else { 0.0 };
+    let mut clock = 0.0;
+    let mut prev_body = 0.0f64;
+    for (i, &b) in bodies.iter().enumerate() {
+        let gap = if i == 0 {
+            per_launch
+        } else {
+            (per_launch - prev_body).max(per_launch * 0.12)
+        };
+        clock += gap;
+        clock += b;
+        prev_body = b;
+    }
+    clock + HOST_OVERHEAD_S
 }
 
 /// Simulate a plan: build the timeline, price launches, apply the
@@ -185,6 +213,24 @@ mod tests {
             assert_eq!(
                 ideal_time(&spec, &p).to_bits(),
                 sim.ideal_s.to_bits(),
+                "fused={fused} dim={dim}"
+            );
+        }
+    }
+
+    #[test]
+    fn ideal_from_bodies_matches_ideal_time_bitwise() {
+        let spec = cuda::h100();
+        for (fused, dim) in [(false, 32), (false, 64), (true, 64), (true, 128)] {
+            let p = plan(fused, dim);
+            let bodies: Vec<f64> = p
+                .kernels
+                .iter()
+                .map(|k| kernel_cost(&spec, &p.schedule, k).total_s)
+                .collect();
+            assert_eq!(
+                ideal_from_bodies(&spec, &p.schedule, &bodies).to_bits(),
+                ideal_time(&spec, &p).to_bits(),
                 "fused={fused} dim={dim}"
             );
         }

@@ -95,7 +95,7 @@ pub fn lower(g: &Graph, schedule: &Schedule) -> Plan {
 /// *precomputable* — real deployments hoist it to init (the paper's
 /// §7.4 reduced program precomputes `W.sum(1)` into a buffer) — and is
 /// excluded from the per-forward plan.
-fn activation_dependent(g: &Graph) -> Vec<bool> {
+pub(crate) fn activation_dependent(g: &Graph) -> Vec<bool> {
     let mut dep = vec![false; g.nodes.len()];
     for (id, node) in g.nodes.iter().enumerate() {
         dep[id] = match &node.op {
@@ -106,18 +106,75 @@ fn activation_dependent(g: &Graph) -> Vec<bool> {
     dep
 }
 
-/// Lower with an explicit fusion plan (the baselines use this).
-pub fn lower_with_plan(g: &Graph, schedule: &Schedule, fplan: &FusionPlan) -> Plan {
-    let uses = g.use_counts();
-    let act_dep = activation_dependent(g);
-    // users[n] = ids of nodes that read n (replaces the O(nodes^2)
-    // external-use scan that dominated lowering — §Perf)
+/// Users adjacency: `users[n]` = ids of nodes that read n (replaces the
+/// O(nodes^2) external-use scan that dominated lowering — §Perf).
+pub(crate) fn node_users(g: &Graph) -> Vec<Vec<NodeId>> {
     let mut users: Vec<Vec<NodeId>> = vec![Vec::new(); g.nodes.len()];
     for (id, node) in g.nodes.iter().enumerate() {
         for o in node.op.operands() {
             users[o].push(id);
         }
     }
+    users
+}
+
+/// Account one fusion group into a kernel launch.  Shared by
+/// [`lower_with_plan`] and the oracle's dirty-region re-pricing, so an
+/// incrementally rebuilt kernel is the same code path as a full
+/// lowering — bit-identical by construction.
+pub(crate) fn build_kernel(g: &Graph, users: &[Vec<NodeId>], members: Vec<NodeId>) -> KernelLaunch {
+    let group: HashSet<NodeId> = members.iter().copied().collect();
+    let mut flops = 0.0;
+    let mut transcendental = 0.0;
+    let mut bytes_read = 0.0;
+    let mut bytes_written = 0.0;
+    let mut class = KernelClass::Elementwise;
+    let mut names = Vec::new();
+    let mut out_elems = 0usize;
+    let mut read_ids: HashSet<NodeId> = HashSet::new();
+    for &id in &members {
+        let node = &g.nodes[id];
+        flops += node_flops(g, node);
+        if let Op::Unary { kind, .. } = &node.op {
+            if kind.is_transcendental() {
+                transcendental += node.shape.numel() as f64;
+            }
+        }
+        if matches!(node.op, Op::Softmax { .. } | Op::Layernorm { .. }) {
+            transcendental += node.shape.numel() as f64;
+        }
+        names.push(node.op.mnemonic());
+        class = dominant_class(class, class_of(&node.op));
+        // external reads: operands outside the group, dedup per kernel
+        for o in node.op.operands() {
+            if !group.contains(&o) && read_ids.insert(o) {
+                bytes_read += g.nodes[o].shape.bytes() as f64;
+            }
+        }
+        // external writes: node used outside the group or is output
+        let external_use =
+            g.outputs.contains(&id) || users[id].iter().any(|u| !group.contains(u));
+        if external_use {
+            bytes_written += node.shape.bytes() as f64;
+            out_elems = out_elems.max(node.shape.numel());
+        }
+    }
+    KernelLaunch {
+        nodes: members,
+        name: names.join("+"),
+        class,
+        flops,
+        transcendental_elems: transcendental,
+        bytes_read,
+        bytes_written,
+        out_elems: out_elems.max(1),
+    }
+}
+
+/// Lower with an explicit fusion plan (the baselines use this).
+pub fn lower_with_plan(g: &Graph, schedule: &Schedule, fplan: &FusionPlan) -> Plan {
+    let act_dep = activation_dependent(g);
+    let users = node_users(g);
     let mut kernels = Vec::new();
     for members in fplan.members() {
         if members.is_empty() {
@@ -127,53 +184,7 @@ pub fn lower_with_plan(g: &Graph, schedule: &Schedule, fplan: &FusionPlan) -> Pl
         if members.iter().all(|&id| !act_dep[id]) {
             continue;
         }
-        let group: HashSet<NodeId> = members.iter().copied().collect();
-        let mut flops = 0.0;
-        let mut transcendental = 0.0;
-        let mut bytes_read = 0.0;
-        let mut bytes_written = 0.0;
-        let mut class = KernelClass::Elementwise;
-        let mut names = Vec::new();
-        let mut out_elems = 0usize;
-        let mut read_ids: HashSet<NodeId> = HashSet::new();
-        for &id in &members {
-            let node = &g.nodes[id];
-            flops += node_flops(g, node);
-            if let Op::Unary { kind, .. } = &node.op {
-                if kind.is_transcendental() {
-                    transcendental += node.shape.numel() as f64;
-                }
-            }
-            if matches!(node.op, Op::Softmax { .. } | Op::Layernorm { .. }) {
-                transcendental += node.shape.numel() as f64;
-            }
-            names.push(node.op.mnemonic());
-            class = dominant_class(class, class_of(&node.op));
-            // external reads: operands outside the group, dedup per kernel
-            for o in node.op.operands() {
-                if !group.contains(&o) && read_ids.insert(o) {
-                    bytes_read += g.nodes[o].shape.bytes() as f64;
-                }
-            }
-            // external writes: node used outside the group or is output
-            let external_use =
-                g.outputs.contains(&id) || users[id].iter().any(|u| !group.contains(u));
-            let _ = &uses;
-            if external_use {
-                bytes_written += node.shape.bytes() as f64;
-                out_elems = out_elems.max(node.shape.numel());
-            }
-        }
-        kernels.push(KernelLaunch {
-            nodes: members,
-            name: names.join("+"),
-            class,
-            flops,
-            transcendental_elems: transcendental,
-            bytes_read,
-            bytes_written,
-            out_elems: out_elems.max(1),
-        });
+        kernels.push(build_kernel(g, &users, members));
     }
     Plan {
         kernels,

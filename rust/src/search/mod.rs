@@ -48,7 +48,7 @@ pub mod tune;
 pub use beam::BeamStrategy;
 pub use budget::Budget;
 pub use evolve::EvolveStrategy;
-pub use oracle::CostOracle;
+pub use oracle::{price, reprice, CostOracle, PricedPlan};
 pub use tune::{tune_problem, tune_suite, tune_suite_with, TuneConfig, TuneOutcome, TuneReport};
 
 use crate::platform::PlatformSpec;

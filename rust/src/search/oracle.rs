@@ -16,8 +16,11 @@
 
 use super::Scored;
 use crate::coordinator::worker;
+use crate::kir::patch::DirtySet;
+use crate::kir::rewrite::fusion::{self, FusionPlan};
 use crate::kir::Graph;
-use crate::perfsim::{self, lower::lower};
+use crate::perfsim::lower::{self as lower_mod, lower, KernelLaunch, Plan};
+use crate::perfsim::{self, cost, exec};
 use crate::platform::PlatformSpec;
 use crate::profiler::{Profile, ProfilerFrontendRef};
 use crate::sched::{legal, Schedule};
@@ -25,6 +28,157 @@ use crate::util::rng::Pcg;
 
 /// Relative cost window within which evidence may reorder the frontier.
 pub const REL_EPS: f64 = 0.005;
+
+/// A priced schedule with its lowered artifacts retained, so a later
+/// [`reprice`] against a patched graph can rebuild only the dirty
+/// region's timeline contribution.  `cost_s` is bit-identical to what
+/// [`CostOracle::cost`] returns for the same (spec, graph, schedule) —
+/// the incremental path shares every costing statement with the full
+/// path and is differentially tested against it.
+pub struct PricedPlan {
+    /// Noise-free model seconds (infinite for illegal schedules).
+    pub cost_s: f64,
+    /// Kernels whose body cost was reused rather than recomputed —
+    /// zero for a fresh [`price`], the whole point of [`reprice`].
+    pub reused_kernels: usize,
+    plan: Plan,
+    fplan: FusionPlan,
+    bodies: Vec<f64>,
+    /// Kernel index per node id (None: node emits no priced kernel).
+    kernel_of: Vec<Option<usize>>,
+}
+
+fn fplan_for(g: &Graph, s: &Schedule) -> FusionPlan {
+    if s.fusion_depth == 0 {
+        fusion::none(g)
+    } else {
+        fusion::partial(g, s.fusion_depth)
+    }
+}
+
+fn finish_price(
+    spec: &PlatformSpec,
+    s: &Schedule,
+    g: &Graph,
+    fplan: FusionPlan,
+    kernels: Vec<KernelLaunch>,
+    bodies: Vec<f64>,
+    reused_kernels: usize,
+) -> PricedPlan {
+    let mut kernel_of: Vec<Option<usize>> = vec![None; g.nodes.len()];
+    for (ki, k) in kernels.iter().enumerate() {
+        for &id in &k.nodes {
+            kernel_of[id] = Some(ki);
+        }
+    }
+    let cost_s = if legal::check(s, spec).is_err() {
+        f64::INFINITY
+    } else {
+        exec::ideal_from_bodies(spec, s, &bodies)
+    };
+    PricedPlan {
+        cost_s,
+        reused_kernels,
+        plan: Plan { kernels, schedule: s.clone() },
+        fplan,
+        bodies,
+        kernel_of,
+    }
+}
+
+/// Fully price one (graph, schedule), keeping the lowered artifacts
+/// for later incremental re-pricing.
+pub fn price(spec: &PlatformSpec, g: &Graph, s: &Schedule) -> PricedPlan {
+    let fplan = fplan_for(g, s);
+    let plan = lower_mod::lower_with_plan(g, s, &fplan);
+    let bodies: Vec<f64> = plan
+        .kernels
+        .iter()
+        .map(|k| cost::kernel_cost(spec, s, k).total_s)
+        .collect();
+    finish_price(spec, s, g, fplan, plan.kernels, bodies, 0)
+}
+
+/// Re-price a patched graph, rebuilding only what the patch dirtied.
+///
+/// A kernel from `prev` is reused when every member of the new fusion
+/// group is clean under `dirty` and the group's preimage (old ids) is
+/// exactly the member set of one previous kernel — the dirty rules
+/// guarantee op content, operand shapes, user sets, and output
+/// membership are unchanged there, so its accounted cost is the same
+/// bits [`lower_mod::build_kernel`] + `kernel_cost` would recompute.
+/// Everything else (including the launch-count-dependent dispatch fold)
+/// is recomputed, so the result is bit-identical to a full [`price`] of
+/// the patched graph.  Falls back to a full price when the schedule
+/// differs from the one `prev` was priced under or the dirty set is for
+/// another graph.
+pub fn reprice(
+    spec: &PlatformSpec,
+    s: &Schedule,
+    prev: &PricedPlan,
+    g: &Graph,
+    dirty: &DirtySet,
+) -> PricedPlan {
+    if prev.plan.schedule != *s || dirty.len() != g.nodes.len() {
+        return price(spec, g, s);
+    }
+    let fplan = if s.fusion_depth == 0 {
+        fusion::none(g)
+    } else if s.fusion_depth == usize::MAX {
+        fusion::greedy_refresh(g, &prev.fplan, dirty)
+    } else {
+        // partial(k) counts opportunities globally; recompute it whole
+        fusion::partial(g, s.fusion_depth)
+    };
+    let act_dep = lower_mod::activation_dependent(g);
+    let users = lower_mod::node_users(g);
+    // invert the patch's old→new id map
+    let mut new_to_old: Vec<Option<usize>> = vec![None; g.nodes.len()];
+    for (old, m) in dirty.old_to_new.iter().enumerate() {
+        if let Some(new) = *m {
+            if new < new_to_old.len() {
+                new_to_old[new] = Some(old);
+            }
+        }
+    }
+    let mut kernels: Vec<KernelLaunch> = Vec::new();
+    let mut bodies: Vec<f64> = Vec::new();
+    let mut reused_kernels = 0usize;
+    for members in fplan.members() {
+        if members.is_empty() {
+            continue;
+        }
+        // precomputable at init: skip in the per-forward plan
+        if members.iter().all(|&id| !act_dep[id]) {
+            continue;
+        }
+        let mut reuse: Option<usize> = None;
+        if members.iter().all(|&id| !dirty.is_dirty(id) && new_to_old[id].is_some()) {
+            let olds: Vec<usize> =
+                members.iter().map(|&id| new_to_old[id].unwrap()).collect();
+            if let Some(Some(ki)) = prev.kernel_of.get(olds[0]).copied() {
+                if prev.plan.kernels[ki].nodes == olds {
+                    reuse = Some(ki);
+                }
+            }
+        }
+        match reuse {
+            Some(ki) => {
+                let mut k = prev.plan.kernels[ki].clone();
+                k.nodes = members;
+                bodies.push(prev.bodies[ki]);
+                kernels.push(k);
+                reused_kernels += 1;
+            }
+            None => {
+                let k = lower_mod::build_kernel(g, &users, members);
+                bodies.push(cost::kernel_cost(spec, s, &k).total_s);
+                kernels.push(k);
+            }
+        }
+    }
+    finish_price(spec, s, g, fplan, kernels, bodies, reused_kernels)
+}
 
 /// Pure candidate-pricing context for one (platform spec, perf graph).
 pub struct CostOracle<'a> {
@@ -64,6 +218,14 @@ impl<'a> CostOracle<'a> {
             return f64::INFINITY;
         }
         perfsim::ideal_time(self.spec, &lower(self.graph, s))
+    }
+
+    /// Price one schedule keeping the lowered artifacts, so callers
+    /// holding a [`GraphPatch`](crate::kir::patch::GraphPatch) result
+    /// can [`reprice`] instead of re-lowering from scratch.  The
+    /// returned `cost_s` is bit-identical to [`CostOracle::cost`].
+    pub fn price(&self, s: &Schedule) -> PricedPlan {
+        price(self.spec, self.graph, s)
     }
 
     /// Price a population, fanned out across the worker pool.  Results
@@ -183,6 +345,61 @@ mod tests {
         assert_eq!(one.len(), many.len());
         for (a, b) in one.iter().zip(&many) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn price_matches_cost_bitwise() {
+        let spec = cuda::h100();
+        let g = graph(64);
+        let oracle = CostOracle::new(&spec, &g);
+        for s in [Schedule::naive(), Schedule::expert_for(&spec)] {
+            assert_eq!(
+                oracle.price(&s).cost_s.to_bits(),
+                oracle.cost(&s).to_bits(),
+                "{}",
+                s.canon()
+            );
+        }
+        let mut bad = Schedule::naive();
+        bad.threadgroup = 2048;
+        assert!(oracle.price(&bad).cost_s.is_infinite());
+    }
+
+    #[test]
+    fn reprice_after_patch_matches_full_price() {
+        use crate::kir::op::Op;
+        use crate::kir::patch::GraphPatch;
+        let spec = cuda::h100();
+        let g = graph(64);
+        let swish = g
+            .nodes
+            .iter()
+            .position(|n| matches!(n.op, Op::Unary { .. }))
+            .unwrap();
+        let mm = g
+            .nodes
+            .iter()
+            .position(|n| matches!(n.op, Op::Matmul { .. }))
+            .unwrap();
+        for s in [Schedule::naive(), Schedule::expert_for(&spec)] {
+            let prev = price(&spec, &g, &s);
+            let mut p = GraphPatch::new(&g);
+            p.prune();
+            p.redirect(swish, mm).unwrap(); // bypass the epilogue
+            let (g2, dirty) = p.apply().unwrap();
+            let inc = reprice(&spec, &s, &prev, &g2, &dirty);
+            let full = price(&spec, &g2, &s);
+            assert_eq!(
+                inc.cost_s.to_bits(),
+                full.cost_s.to_bits(),
+                "{}",
+                s.canon()
+            );
+            assert_eq!(
+                inc.cost_s.to_bits(),
+                CostOracle::new(&spec, &g2).cost(&s).to_bits()
+            );
         }
     }
 

@@ -74,6 +74,7 @@ pub fn pipeline_fingerprint() -> u64 {
     static FP: OnceLock<u64> = OnceLock::new();
     *FP.get_or_init(|| {
         let sources = [
+            include_str!("../kir/patch.rs"),
             include_str!("../kir/rewrite/mod.rs"),
             include_str!("../kir/rewrite/constant_fold.rs"),
             include_str!("../kir/rewrite/algebraic.rs"),

@@ -3,7 +3,11 @@
 //! 1. **Differential KIR fuzzing** — ≥ 1,000 seeded random graphs per
 //!    rewrite pass (and the full pipeline in all 6 pass orders) must
 //!    preserve validator invariants and interpreter semantics; failures
-//!    shrink to a minimal repro keyed by the generator seed.
+//!    shrink to a minimal repro keyed by the generator seed.  A second
+//!    sweep (`differential_patch_*`) holds each pass's patch-based form
+//!    to a *stricter* claim: bit-identical — nodes, shapes, outputs and
+//!    interpreter values by f32 bit pattern — to its retained wholesale
+//!    reference.
 //! 2. **Renderer determinism** — two in-process renders of the full
 //!    golden artifact set are byte-identical (the property the golden
 //!    differ rests on).
@@ -105,6 +109,125 @@ fn differential_fuzz_cse() {
 #[test]
 fn differential_fuzz_dce() {
     sweep("dce", &dce);
+}
+
+/// Bit-identity oracle for the patch-vs-whole harness: the two graphs
+/// must agree structurally (nodes, shapes, outputs — `Graph: PartialEq`
+/// covers all of it) and every interpreter output value must match by
+/// f32 *bit pattern* (strictly stronger than `allclose`; NaN payloads
+/// included).
+fn bit_identical(a: &Graph, b: &Graph, ins: &[kforge::tensor::Tensor]) -> Result<(), String> {
+    if a != b {
+        return Err("graph structures differ".into());
+    }
+    match (interp::eval(a, ins), interp::eval(b, ins)) {
+        (Ok(va), Ok(vb)) => {
+            if va.len() != vb.len() {
+                return Err(format!("output arity differs: {} vs {}", va.len(), vb.len()));
+            }
+            for (i, (ta, tb)) in va.iter().zip(&vb).enumerate() {
+                if ta.shape != tb.shape {
+                    return Err(format!("output {i} shape differs: {} vs {}", ta.shape, tb.shape));
+                }
+                for (j, (x, y)) in ta.data.iter().zip(&tb.data).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "output {i}[{j}] bits differ: {x:?} ({:#010x}) vs {y:?} ({:#010x})",
+                            x.to_bits(),
+                            y.to_bits()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        }
+        (Err(ea), Err(eb)) if ea.to_string() == eb.to_string() => Ok(()),
+        (ra, rb) => Err(format!(
+            "evaluation outcomes differ: {:?} vs {:?}",
+            ra.map(|_| "ok").map_err(|e| e.to_string()),
+            rb.map(|_| "ok").map_err(|e| e.to_string())
+        )),
+    }
+}
+
+/// Sweep one pass's patch-based form against its wholesale reference
+/// over the full seed budget, minimizing any divergence to a
+/// seed-keyed repro.  No finite-reference skip: bit identity is a
+/// structural claim and holds for overflowing seeds too.
+fn patch_sweep(
+    pass_name: &str,
+    patched: &dyn Fn(&Graph) -> Graph,
+    wholesale: &dyn Fn(&Graph) -> Graph,
+) {
+    for seed in 0..SEEDS_PER_PASS {
+        let g = fuzz::graph(seed);
+        let ins = fuzz::inputs(&g, seed);
+        let p = patched(&g);
+        let w = wholesale(&g);
+        if let Err(why) = bit_identical(&p, &w, &ins) {
+            let still_fails = |cand: &Graph| patched(cand) != wholesale(cand);
+            let min = fuzz::shrink(&g, &still_fails);
+            panic!(
+                "pass {pass_name}: patch form diverged from wholesale on seed {seed}: {why}\n\
+                 minimized repro (from kforge::kir::fuzz::graph({seed})):\n{}\n\
+                 patched form:\n{}\n\
+                 wholesale form:\n{}",
+                min.render(),
+                patched(&min).render(),
+                wholesale(&min).render()
+            );
+        }
+    }
+}
+
+#[test]
+fn differential_patch_vs_whole_constant_fold() {
+    use kforge::kir::rewrite::constant_fold;
+    patch_sweep("constant_fold", &constant_fold::fold, &constant_fold::fold_wholesale);
+}
+
+#[test]
+fn differential_patch_vs_whole_algebraic_reduce() {
+    use kforge::kir::rewrite::algebraic;
+    patch_sweep(
+        "algebraic_reduce",
+        &algebraic::reduce_matmul_chains,
+        &algebraic::reduce_matmul_chains_wholesale,
+    );
+}
+
+#[test]
+fn differential_patch_vs_whole_cse() {
+    use kforge::kir::rewrite::cse;
+    patch_sweep("cse", &cse::eliminate, &cse::eliminate_wholesale);
+}
+
+#[test]
+fn differential_patch_vs_whole_dce() {
+    use kforge::kir::rewrite::dce_wholesale;
+    patch_sweep("dce", &dce, &dce_wholesale);
+}
+
+#[test]
+fn differential_patch_vs_whole_fusion_refresh() {
+    // fusion is a schedule decision, not a graph edit, so its
+    // incremental form is plan-level: refreshing the greedy plan across
+    // a patch must equal recomputing it on the patched graph
+    use kforge::kir::rewrite::{cse, fusion};
+    for seed in 0..SEEDS_PER_PASS {
+        let g = fuzz::graph(seed);
+        let prev = fusion::greedy_epilogue(&g);
+        let (g2, dirty) = cse::patch(&g)
+            .apply()
+            .unwrap_or_else(|e| panic!("seed {seed}: cse patch failed to apply: {e}"));
+        let inc = fusion::greedy_refresh(&g2, &prev, &dirty);
+        let full = fusion::greedy_epilogue(&g2);
+        assert_eq!(
+            inc, full,
+            "seed {seed}: plan refresh diverged from full recompute on\n{}",
+            g2.render()
+        );
+    }
 }
 
 #[test]

@@ -359,6 +359,238 @@ fn prop_verification_deterministic_across_runs() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// GraphPatch / incremental-rewrite properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_patch_on_validated_graph_yields_validated_graph() {
+    use kforge::kir::fuzz;
+    use kforge::kir::op::Op;
+    use kforge::kir::patch::GraphPatch;
+    for seed in 0..300u64 {
+        let g = fuzz::graph(seed);
+        validate(&g).unwrap();
+        // every pass's staged patch applies into a validated graph
+        let (a, _) = cse::patch(&g).apply().unwrap_or_else(|e| panic!("seed {seed} cse: {e}"));
+        validate(&a).unwrap_or_else(|e| panic!("seed {seed} cse output: {e}"));
+        let (b, _) =
+            constant_fold::patch(&g).apply().unwrap_or_else(|e| panic!("seed {seed} fold: {e}"));
+        validate(&b).unwrap_or_else(|e| panic!("seed {seed} fold output: {e}"));
+        if let Some(p) = algebraic::next_patch(&g) {
+            let (c, _) = p.apply().unwrap_or_else(|e| panic!("seed {seed} algebraic: {e}"));
+            validate(&c).unwrap_or_else(|e| panic!("seed {seed} algebraic output: {e}"));
+        }
+        // a hand-staged patch too: add a relu over a seeded node and
+        // rewire output 0 at it
+        let mut rng = Pcg::seed(seed ^ 0xA11CE);
+        let target = rng.below(g.nodes.len() as u32) as usize;
+        let mut p = GraphPatch::new(&g);
+        p.prune();
+        let added = p.add(Op::Unary { kind: UnaryKind::Relu, input: target }).unwrap();
+        p.rewire_output(0, added).unwrap();
+        let (d, dirty) = p.apply().unwrap_or_else(|e| panic!("seed {seed} staged: {e}"));
+        validate(&d).unwrap_or_else(|e| panic!("seed {seed} staged output: {e}"));
+        assert!(dirty.count() > 0, "seed {seed}: edit produced an empty dirty set");
+    }
+}
+
+#[test]
+fn prop_empty_patch_is_identity() {
+    use kforge::kir::fuzz;
+    use kforge::kir::patch::GraphPatch;
+    for seed in 0..300u64 {
+        let g = fuzz::graph(seed);
+        let (out, dirty) = GraphPatch::new(&g).apply().unwrap();
+        assert_eq!(out, g, "seed {seed}: empty patch changed the graph");
+        assert_eq!(
+            out.render(),
+            g.render(),
+            "seed {seed}: empty-patch serialization not bit-identical"
+        );
+        assert_eq!(dirty.count(), 0, "seed {seed}: empty patch dirtied nodes");
+        assert_eq!(dirty.len(), g.nodes.len());
+        for (i, m) in dirty.old_to_new.iter().enumerate() {
+            assert_eq!(*m, Some(i), "seed {seed}: id map not identity at {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_conflicting_patch_edits_name_both_node_ids() {
+    use kforge::kir::fuzz;
+    use kforge::kir::op::Op;
+    use kforge::kir::patch::GraphPatch;
+    let mut checked = 0;
+    for seed in 0..150u64 {
+        let g = fuzz::graph(seed);
+        // a non-input node with a same-shaped operand → redirectable
+        let Some((id, o)) = g.nodes.iter().enumerate().find_map(|(id, n)| {
+            if matches!(n.op, Op::Input { .. }) {
+                return None;
+            }
+            n.op
+                .operands()
+                .into_iter()
+                .find(|&o| g.nodes[o].shape == n.shape)
+                .map(|o| (id, o))
+        }) else {
+            continue;
+        };
+        checked += 1;
+        let mut p = GraphPatch::new(&g);
+        p.redirect(id, o).unwrap();
+        let err = p.replace(id, g.nodes[id].op.clone()).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("%{id}")) && err.contains(&format!("%{o}")),
+            "seed {seed}: conflict error must name both ids (%{id}, %{o}): {err}"
+        );
+    }
+    assert!(checked >= 30, "only {checked} conflict cases exercised");
+}
+
+#[test]
+fn prop_reprice_bit_identical_to_full_relowering() {
+    // oracle incrementality: re-pricing a patched schedule from the
+    // dirty region returns the same bits as pricing the patched graph
+    // from scratch — per registered platform, ≥200 fuzz seeds each,
+    // under both the eager (depth 0) and expert (depth MAX) schedules
+    use kforge::kir::fuzz;
+    use kforge::search::{price, reprice, CostOracle};
+    for platform in kforge::platform::registry().platforms() {
+        let spec = platform.spec();
+        let schedules = [Schedule::naive(), Schedule::expert_for(spec)];
+        let mut reused_total = 0usize;
+        for seed in 0..200u64 {
+            let g = fuzz::graph(seed);
+            // alternate patch sources: prune+redirect (cse) and
+            // replace/add-bearing (constant_fold) patches
+            let (g2, dirty) = if seed % 2 == 0 {
+                cse::patch(&g).apply().unwrap()
+            } else {
+                constant_fold::patch(&g).apply().unwrap()
+            };
+            for s in &schedules {
+                let prev = price(spec, &g, s);
+                let inc = reprice(spec, s, &prev, &g2, &dirty);
+                let full = CostOracle::new(spec, &g2).cost(s);
+                assert_eq!(
+                    inc.cost_s.to_bits(),
+                    full.to_bits(),
+                    "{} seed {seed} {}: incremental reprice diverged from full cost",
+                    platform.name(),
+                    s.canon()
+                );
+                reused_total += inc.reused_kernels;
+            }
+        }
+        assert!(
+            reused_total > 0,
+            "{}: dirty-region re-pricing never reused a kernel — incrementality is dead code",
+            platform.name()
+        );
+    }
+}
+
+#[test]
+fn prop_tune_bit_identical_across_workers_and_store_temperature() {
+    use kforge::search::{tune_suite_with, TuneConfig};
+    use kforge::store::Store;
+    let suite = kforge::workloads::Suite::sample(1);
+    let platform = kforge::platform::by_name("cuda").unwrap();
+    let mut per_worker = Vec::new();
+    for workers in [1usize, 4, 16] {
+        let mut cfg = TuneConfig::new(platform.clone());
+        cfg.budget = 64;
+        cfg.workers = workers;
+        let store = Store::memory();
+        let cold = tune_suite_with(&store, &cfg, &suite);
+        let warm = tune_suite_with(&store, &cfg, &suite);
+        assert!(warm.cache.hits > 0, "workers={workers}: warm run never hit the store");
+        for (c, w) in cold.outcomes.iter().zip(&warm.outcomes) {
+            assert_eq!(c.problem_id, w.problem_id);
+            assert_eq!(
+                c.tuned_s.to_bits(),
+                w.tuned_s.to_bits(),
+                "warm/cold drift on {} at workers={workers}",
+                c.problem_id
+            );
+            assert_eq!(c.schedule, w.schedule);
+        }
+        per_worker.push(cold);
+    }
+    for r in &per_worker[1..] {
+        assert_eq!(per_worker[0].outcomes.len(), r.outcomes.len());
+        for (a, b) in per_worker[0].outcomes.iter().zip(&r.outcomes) {
+            assert_eq!(a.problem_id, b.problem_id);
+            assert_eq!(
+                a.tuned_s.to_bits(),
+                b.tuned_s.to_bits(),
+                "worker-count drift on {}",
+                a.problem_id
+            );
+            assert_eq!(a.schedule, b.schedule);
+        }
+    }
+}
+
+#[test]
+fn prop_patch_shrink_matches_wholesale_on_pinned_seeds() {
+    use kforge::kir::fuzz;
+    use kforge::kir::op::Op;
+    let has_matmul =
+        |g: &Graph| g.nodes.iter().any(|n| matches!(n.op, Op::Matmul { .. }));
+    let mut pinned = 0;
+    for seed in 0..120u64 {
+        let g = fuzz::graph(seed);
+        if !has_matmul(&g) {
+            continue;
+        }
+        pinned += 1;
+        let (min_p, stats) = fuzz::shrink_with_stats(&g, &has_matmul);
+        let min_w = fuzz::shrink_wholesale(&g, &has_matmul);
+        assert_eq!(min_p, min_w, "seed {seed}: patch shrink repro differs from wholesale");
+        assert!(min_p.len() <= min_w.len(), "seed {seed}: patch repro larger");
+        assert!(has_matmul(&min_p), "seed {seed}: shrink lost the failure");
+        validate(&min_p).unwrap();
+        assert!(stats.accepted <= stats.attempts, "seed {seed}");
+    }
+    assert!(pinned >= 20, "only {pinned} matmul-bearing seeds in range");
+}
+
+#[test]
+fn prop_shrink_large_dead_chain_stays_near_linear() {
+    use kforge::kir::fuzz;
+    use kforge::kir::op::Op;
+    // a tiny matmul cone plus a 5,000-node unary side chain, both
+    // exported: output narrowing must drop the chain with one accepted
+    // candidate and must never materialize the dead chain into any
+    // candidate (the clone-per-candidate shrinker rebuilt all ~5,004
+    // nodes per attempt)
+    let mut b = GraphBuilder::new("big");
+    let x = b.input(Shape::of(&[4, 5]));
+    let w = b.input(Shape::of(&[5, 6]));
+    let mm = b.matmul(x, w);
+    let t = b.input(Shape::of(&[8]));
+    let mut chain = t;
+    for _ in 0..5000 {
+        chain = b.unary(UnaryKind::Relu, chain);
+    }
+    let g = b.finish(vec![mm, chain]);
+    assert!(g.len() > 5000);
+    let has_matmul =
+        |g: &Graph| g.nodes.iter().any(|n| matches!(n.op, Op::Matmul { .. }));
+    let (min, stats) = fuzz::shrink_with_stats(&g, &has_matmul);
+    assert!(has_matmul(&min), "shrink lost the failure");
+    assert!(min.len() <= 4, "repro not minimal: {} nodes", min.len());
+    assert!(stats.attempts < 100, "shrink needed {} attempts", stats.attempts);
+    assert!(
+        stats.materialized_nodes < 1000,
+        "shrink materialized {} nodes — candidates are re-cloning the dead chain",
+        stats.materialized_nodes
+    );
+}
+
 #[test]
 fn prop_suite_eval_graphs_all_finite() {
     // every problem's reference evaluation yields finite outputs on its
