@@ -17,6 +17,7 @@
 
 use super::job::TaskResult;
 use crate::agents::analysis::AnalysisAgent;
+use crate::obs;
 use crate::agents::{GenerationAgent, Persona, Program};
 use crate::baseline::{autotuned, compilebase, eager};
 use crate::metrics::TaskOutcome;
@@ -145,6 +146,7 @@ pub fn run_task(
     problem: &Problem,
     reference: Option<&Program>,
 ) -> TaskResult {
+    let _task_span = obs::span("task.run");
     // deterministic per-(config, persona, problem) stream
     let mut rng = Pcg::new(
         cfg.seed ^ crate::util::rng::fnv1a(cfg.name.as_bytes()),
@@ -155,10 +157,13 @@ pub fn run_task(
 
     // baseline measurement (compilation context reset per run — fresh RNG)
     let mut brng = rng.fork("baseline");
-    let baseline_sim = match cfg.baseline {
-        BaselineKind::Eager => eager::measure(&problem.perf_graph, spec, &mut brng),
-        BaselineKind::TorchCompile => compilebase::measure(&problem.perf_graph, spec, &mut brng),
-        BaselineKind::Autotuned => autotuned::measure(&problem.perf_graph, spec, &mut brng),
+    let baseline_sim = {
+        let _s = obs::span("task.baseline");
+        match cfg.baseline {
+            BaselineKind::Eager => eager::measure(&problem.perf_graph, spec, &mut brng),
+            BaselineKind::TorchCompile => compilebase::measure(&problem.perf_graph, spec, &mut brng),
+            BaselineKind::Autotuned => autotuned::measure(&problem.perf_graph, spec, &mut brng),
+        }
     };
     let baseline_s = baseline_sim.measured_s;
 
@@ -169,15 +174,21 @@ pub fn run_task(
     let mut last_rec: Option<crate::agents::Recommendation> = None;
 
     for iter in 0..cfg.iterations {
-        let candidate = match (&current, &last_error) {
-            (None, _) => agent.synthesize(problem, reference, &mut rng),
-            (Some(prev), Some(err)) => agent.refine(problem, prev, Some(err), None, &mut rng),
-            (Some(prev), None) => {
-                let rec = if cfg.use_profiling { last_rec.as_ref() } else { None };
-                agent.refine(problem, prev, None, rec, &mut rng)
+        let candidate = {
+            let _s = obs::span("task.synthesize");
+            match (&current, &last_error) {
+                (None, _) => agent.synthesize(problem, reference, &mut rng),
+                (Some(prev), Some(err)) => agent.refine(problem, prev, Some(err), None, &mut rng),
+                (Some(prev), None) => {
+                    let rec = if cfg.use_profiling { last_rec.as_ref() } else { None };
+                    agent.refine(problem, prev, None, rec, &mut rng)
+                }
             }
         };
-        let out = verify::verify(spec, problem, candidate.as_ref(), &mut rng);
+        let out = {
+            let _s = obs::span("task.verify");
+            verify::verify(spec, problem, candidate.as_ref(), &mut rng)
+        };
         state_history.push(out.state.label());
         match out.state {
             ExecState::Correct => {
@@ -192,6 +203,7 @@ pub fn run_task(
                 // and is withheld (no evidence ⇒ no recommendation)
                 if cfg.use_profiling {
                     if let Some(prog) = &candidate {
+                        let _s = obs::span("task.profile");
                         let profile = Profile::from_sim(&problem.id, spec.name, &sim);
                         let advice = analyst.advise(&profile, &prog.schedule);
                         last_rec = if advice.confidence > 0.0 {
@@ -277,11 +289,15 @@ pub fn run_campaign_with(
         })
         .collect();
     let workers = cfg.workers.max(1);
+    let _campaign_span = obs::span("campaign");
     if !store.enabled() {
-        let results =
-            super::worker::run_jobs(workers, &jobs, |(persona, problem, reference)| {
-                run_task(cfg, &spec, persona, problem, *reference)
-            });
+        let indices: Vec<usize> = (0..jobs.len()).collect();
+        let results = super::worker::run_sparse(workers, &indices, |i| {
+            let (persona, problem, reference) = jobs[i];
+            let _lane = obs::job_lane(spec.name, persona.name, &problem.id);
+            run_task(cfg, &spec, persona, problem, reference)
+        });
+        trace_task_results(spec.name, &results);
         return CampaignResult {
             config_name: cfg.name.clone(),
             results,
@@ -289,6 +305,7 @@ pub fn run_campaign_with(
         };
     }
 
+    let consult_span = obs::span("campaign.consult");
     let scope = KeyScope::new(cfg, &spec);
     let keys: Vec<JobKey> = jobs
         .iter()
@@ -317,7 +334,7 @@ pub fn run_campaign_with(
         match opened {
             Ok(j) => Some(j),
             Err(e) => {
-                eprintln!("[store] campaign journal unavailable ({e:#}); continuing without it");
+                crate::kf_warn!("[store] campaign journal unavailable ({e:#}); continuing without it");
                 None
             }
         }
@@ -340,11 +357,12 @@ pub fn run_campaign_with(
     if let Some(j) = &journal {
         for &i in &backfill {
             if let Err(e) = j.append(i, &keys[i], slots[i].as_ref().expect("backfilled slot")) {
-                eprintln!("[store] journal backfill failed ({e:#})");
+                crate::kf_warn!("[store] journal backfill failed ({e:#})");
                 break;
             }
         }
     }
+    drop(consult_span);
 
     // 3. compute what remains, writing back (store + journal) as each
     //    job completes so a kill loses at most the in-flight jobs.
@@ -355,28 +373,59 @@ pub fn run_campaign_with(
         .collect();
     stats.misses = pending.len() as u64;
     let bytes_written = AtomicU64::new(0);
+    let dispatch_span = obs::span("campaign.dispatch");
     let computed = super::worker::run_sparse(workers, &pending, |i| {
         let (persona, problem, reference) = jobs[i];
+        let _lane = obs::job_lane(spec.name, persona.name, &problem.id);
         let r = run_task(cfg, &spec, persona, problem, reference);
-        bytes_written.fetch_add(store.put(&keys[i], &r), Ordering::Relaxed);
-        if let Some(j) = &journal {
-            if let Err(e) = j.append(i, &keys[i], &r) {
-                eprintln!("[store] journal append failed for job {i} ({e:#})");
+        {
+            let _s = obs::span("task.store");
+            bytes_written.fetch_add(store.put(&keys[i], &r), Ordering::Relaxed);
+            if let Some(j) = &journal {
+                if let Err(e) = j.append(i, &keys[i], &r) {
+                    crate::kf_warn!("[store] journal append failed for job {i} ({e:#})");
+                }
             }
         }
         r
     });
+    drop(dispatch_span);
     for (i, r) in pending.into_iter().zip(computed) {
         slots[i] = Some(r);
     }
     stats.bytes_written += bytes_written.into_inner();
+    let results: Vec<TaskResult> = slots
+        .into_iter()
+        .map(|s| s.expect("every job slot filled after dispatch"))
+        .collect();
+    trace_task_results(spec.name, &results);
     CampaignResult {
         config_name: cfg.name.clone(),
-        results: slots
-            .into_iter()
-            .map(|s| s.expect("every job slot filled after dispatch"))
-            .collect(),
+        results,
         cache: stats,
+    }
+}
+
+/// Emit the logical (determinism-digest) view of a campaign: one
+/// job-identity lane per job with the task's pinned result fields as
+/// logical events.  Emitted *post-hoc from the assembled results* —
+/// never from live execution — so the stream is bit-identical whether
+/// a job was computed, cache-answered or journal-restored, which is
+/// exactly the warm-vs-cold guarantee `Snapshot::canon` pins.
+fn trace_task_results(platform: &str, results: &[TaskResult]) {
+    if !obs::enabled() {
+        return;
+    }
+    for r in results {
+        let _lane = obs::job_lane(platform, r.persona, &r.problem_id);
+        let _span = obs::logical_span(&format!("task:{}:{}", r.persona, r.problem_id));
+        obs::logical_instant(if r.outcome.correct { "task.correct" } else { "task.incorrect" });
+        obs::logical_counter("task.iterations", r.state_history.len() as u64);
+        obs::logical_gauge("task.speedup", r.outcome.speedup);
+        obs::logical_gauge("task.baseline_s", r.baseline_s);
+        if let Some(t) = r.best_candidate_s {
+            obs::logical_gauge("task.best_candidate_s", t);
+        }
     }
 }
 

@@ -49,14 +49,23 @@ where
         (0..n).map(|_| Mutex::new(None)).collect();
     let workers = workers.clamp(1, n);
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+        for _w in 0..workers {
+            let (next, results, f) = (&next, &results, &f);
+            // trace attribution: allocated on the caller so a top-level
+            // pool numbers its workers 1..=N in spawn order (tid 0 is
+            // the main thread); nested pools draw fresh ids so no two
+            // live threads share one.  A no-op unless tracing is on.
+            let tid = crate::obs::alloc_tid();
+            scope.spawn(move || {
+                crate::obs::set_tid(tid);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = catch_unwind(AssertUnwindSafe(|| f(&jobs[i])));
+                    *results[i].lock().unwrap() = Some(r);
                 }
-                let r = catch_unwind(AssertUnwindSafe(|| f(&jobs[i])));
-                *results[i].lock().unwrap() = Some(r);
             });
         }
     });

@@ -48,11 +48,23 @@ impl Rewrite {
 
     /// Apply this rewrite, returning the (possibly unchanged) graph.
     pub fn apply(&self, g: &Graph) -> Graph {
-        match self {
+        let out = match self {
             Rewrite::ConstantFold => constant_fold::fold(g),
             Rewrite::AlgebraicReduce => algebraic::reduce_matmul_chains(g),
             Rewrite::Cse => cse::eliminate(g),
+        };
+        if crate::obs::enabled() {
+            crate::obs::counter("rewrite.nodes_visited", g.nodes.len() as u64);
+            crate::obs::counter(
+                &format!("rewrite.{}.applied", self.name()),
+                u64::from(out != *g),
+            );
+            crate::obs::counter(
+                &format!("rewrite.{}.nodes_out", self.name()),
+                out.nodes.len() as u64,
+            );
         }
+        out
     }
 }
 

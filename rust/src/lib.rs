@@ -65,6 +65,11 @@
 //!   seeded bursty load generator, the deterministic virtual-time
 //!   scenario engine behind `kforge serve --synthetic`, and the
 //!   real-time `Service` front end the artifact-replay path runs on.
+//! - [`obs`] — self-profiling: the process-wide structured tracer
+//!   (scoped spans, counters, gauges under a two-clock determinism
+//!   rule), chrome-trace export the rocprof frontend can interpret
+//!   back into `Evidence`, trace summarization, and the `KFORGE_LOG`
+//!   leveled diagnostics macros.
 
 pub mod util;
 pub mod tensor;
@@ -86,6 +91,7 @@ pub mod metrics;
 pub mod harness;
 pub mod conformance;
 pub mod serve;
+pub mod obs;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

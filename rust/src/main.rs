@@ -47,8 +47,17 @@
 //! kforge serve [--artifacts DIR] [--requests N] [--warmup N] [--json PATH]
 //!                                   # PJRT artifact replay through the
 //!                                   # same service front end
+//! kforge trace summarize PATH       # per-phase breakdown + rocprof
+//!                                   # self-profile of an emitted trace
 //! kforge personas                   # the 8 calibrated personas, per platform
 //! ```
+//!
+//! `run`, `tune`, `bench` and `serve` additionally accept
+//! `--trace PATH`: the self-profiling tracer (`kforge::obs`) records
+//! structured spans and counters across the whole run and exports them
+//! as chrome-trace JSON — readable in a trace viewer, by
+//! `kforge trace summarize`, and by KForge's own rocprof frontend.
+//! Traced runs produce bit-identical results to untraced ones.
 //!
 //! `--platform` accepts any name or alias registered in
 //! `kforge::platform::registry()` — adding a platform module makes it
@@ -149,7 +158,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some((c, rest)) => (c.as_str(), rest),
         None => {
             println!("kforge — program synthesis for diverse AI hardware accelerators");
-            println!("commands: suite | personas | platforms | run | model | tune | bench | conformance | cache | serve");
+            println!("commands: suite | personas | platforms | run | model | tune | bench | conformance | cache | serve | trace");
             println!("registered platforms: {}", registry().describe());
             println!(
                 "search strategies: {}",
@@ -173,7 +182,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "run" => FlagSpec {
             value_flags: &[
                 "--problem", "--model", "--platform", "--baseline", "--level", "--sample",
-                "--cache-dir",
+                "--cache-dir", "--trace",
             ],
             bool_flags: &["--resume", "--no-cache"],
             max_positionals: 0,
@@ -186,13 +195,13 @@ fn dispatch(args: &[String]) -> Result<()> {
         "tune" => FlagSpec {
             value_flags: &[
                 "--platform", "--strategy", "--sample", "--synthetic", "--budget", "--seed",
-                "--workers", "--out", "--cache-dir",
+                "--workers", "--out", "--cache-dir", "--trace",
             ],
             bool_flags: &["--no-cache", "--no-evidence"],
             max_positionals: 0,
         },
         "bench" => FlagSpec {
-            value_flags: &["--quick", "--out", "--json", "--cache-dir"],
+            value_flags: &["--quick", "--out", "--json", "--cache-dir", "--trace"],
             bool_flags: &["--resume", "--no-cache"],
             max_positionals: 1,
         },
@@ -211,19 +220,37 @@ fn dispatch(args: &[String]) -> Result<()> {
                 "--artifacts", "--requests", "--warmup", "--workers", "--seed", "--queue-cap",
                 "--shed-depth", "--deadline-ms", "--warm", "--gc-max-bytes", "--json",
                 "--streaming-fraction", "--chunk-rows", "--chunk-budget-ms", "--cache-dir",
+                "--trace",
             ],
             bool_flags: &["--synthetic", "--no-cache"],
             max_positionals: 0,
         },
+        "trace" => FlagSpec {
+            value_flags: &[],
+            bool_flags: &[],
+            max_positionals: 2,
+        },
         other => bail!(
-            "unknown command {other:?}; try: suite, personas, platforms, run, model, tune, bench, conformance, cache, serve"
+            "unknown command {other:?}; try: suite, personas, platforms, run, model, tune, bench, conformance, cache, serve, trace"
         ),
     };
     cliflags::validate(cmd, rest, &spec)?;
     if matches!(cmd, "run" | "tune" | "bench" | "conformance" | "serve") {
         configure_store(args)?;
     }
-    match cmd {
+    // arm the self-profiling tracer before any work runs; the export
+    // happens after the command returns (even a failed budget gate
+    // leaves a trace worth reading)
+    let trace_out = match cmd {
+        "run" | "tune" | "bench" | "serve" => {
+            flag_value(args, "--trace").map(std::path::PathBuf::from)
+        }
+        _ => None,
+    };
+    if trace_out.is_some() {
+        kforge::obs::enable();
+    }
+    let result = match cmd {
         "suite" => cmd_suite(),
         "personas" => cmd_personas(),
         "platforms" => cmd_platforms(args),
@@ -234,7 +261,33 @@ fn dispatch(args: &[String]) -> Result<()> {
         "conformance" => cmd_conformance(args),
         "cache" => cmd_cache(args),
         "serve" => cmd_serve(args),
+        "trace" => cmd_trace(args),
         _ => unreachable!("validated above"),
+    };
+    if let Some(path) = &trace_out {
+        kforge::obs::disable();
+        match kforge::obs::export::write_trace(path, cmd) {
+            Ok(()) => println!("wrote chrome-trace to {}", path.display()),
+            Err(e) => kforge::kf_error!("trace export failed: {e:#}"),
+        }
+    }
+    result
+}
+
+/// `kforge trace summarize PATH` — render the per-phase breakdown and
+/// the rocprof self-profile line for an emitted chrome-trace file.
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let pos: Vec<&str> =
+        args[1..].iter().map(|s| s.as_str()).filter(|a| !a.starts_with("--")).collect();
+    match pos.as_slice() {
+        ["summarize", path] => {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            print!("{}", kforge::obs::summary::summarize(&text)?);
+            Ok(())
+        }
+        ["summarize"] => bail!("trace summarize needs a PATH (a file written by --trace)"),
+        _ => bail!("usage: kforge trace summarize PATH"),
     }
 }
 
@@ -602,12 +655,38 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     if let Some(path) = flag_value(args, "--json") {
         // machine-readable summary for the BENCH_*.json perf trajectory
         // (schema kforge-bench-v1, documented in ROADMAP.md)
-        let json = bench_json(which, scale, &reports, wall_s);
+        let json = bench_json(which, scale, &reports, wall_s, measure_trace_overhead());
         std::fs::write(path, json).with_context(|| format!("writing {path}"))?;
         println!("wrote machine-readable summary to {path}");
     }
     eprintln!("[bench {which} completed in {wall_s:.1}s]");
     Ok(())
+}
+
+/// Wall-clock ratio (traced / untraced) of one seeded serve virtual
+/// scenario — an emission-heavy, store-free, deterministic loop, so the
+/// ratio isolates tracer cost from cache state.  Restores the tracer's
+/// prior enabled state; when `--trace` is active the traced probe's
+/// events stay in the exported buffer (they are part of this bench
+/// run).  Wall-clock noise makes this a trend figure, not a gate — the
+/// trajectory diff skips it like `wall_s`.
+fn measure_trace_overhead() -> f64 {
+    use kforge::obs;
+    let was_tracing = obs::enabled();
+    let run = || {
+        let cfg = kforge::serve::ScenarioConfig::new(0x0B5E, 192, 4);
+        let t = std::time::Instant::now();
+        let _ = kforge::serve::run_virtual(&cfg, false);
+        t.elapsed().as_secs_f64()
+    };
+    obs::disable();
+    let untraced = run();
+    obs::enable();
+    let traced = run();
+    if !was_tracing {
+        obs::disable();
+    }
+    if untraced > 0.0 { traced / untraced } else { 1.0 }
 }
 
 /// The `kforge bench --json` document: per-report sizes, wall time,
@@ -616,7 +695,13 @@ fn cmd_bench(args: &[String]) -> Result<()> {
 /// so repeated emissions accumulate a comparable perf trajectory —
 /// and a `level4` block: per-whole-model geomean speedup plus the
 /// deterministic streaming chunk p99 from the virtual scenario phase.
-fn bench_json(target: &str, scale: Scale, reports: &[(&str, String)], wall_s: f64) -> String {
+fn bench_json(
+    target: &str,
+    scale: Scale,
+    reports: &[(&str, String)],
+    wall_s: f64,
+    trace_overhead: f64,
+) -> String {
     use kforge::util::json::Json;
     use kforge::util::stats;
     // bound the speedup campaigns: Full-scale bench must not imply a
@@ -732,6 +817,7 @@ fn bench_json(target: &str, scale: Scale, reports: &[(&str, String)], wall_s: f6
         .set("scale", format!("{scale:?}"))
         .set("speedup_scale", format!("{speedup_scale:?}"))
         .set("wall_s", wall_s)
+        .set("trace_overhead", trace_overhead)
         .set("reports", Json::Arr(report_list))
         .set("speedups", speedups)
         .set("level4", level4)

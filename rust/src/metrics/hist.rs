@@ -7,6 +7,29 @@
 //! latencies (as the virtual-time scenario guarantees given a seed)
 //! render byte-identical histograms.
 
+/// A quantile read off bucketed data.  A histogram can only bound a
+/// quantile by a bucket edge — and the top bucket is *open*, so a
+/// quantile landing there has no upper bound at all.  Reporting the
+/// last bounded edge in that case would silently understate tail
+/// latency; this type makes the open case explicit instead.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QuantileBound {
+    /// The quantile falls in a bounded bucket: value <= this edge.
+    Le(f64),
+    /// The quantile falls in the open top bucket: all the histogram
+    /// can certify is value >= the last edge.
+    Above(f64),
+}
+
+impl std::fmt::Display for QuantileBound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuantileBound::Le(b) => write!(f, "<={b}"),
+            QuantileBound::Above(b) => write!(f, ">={b}"),
+        }
+    }
+}
+
 /// Histogram over millisecond latencies with fixed upper bounds.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LatencyHistogram {
@@ -61,6 +84,30 @@ impl LatencyHistogram {
                 (b, acc)
             })
             .collect()
+    }
+
+    /// The `q`-quantile (q in [0,1]) as a bucket-edge bound, by the
+    /// nearest-rank method.  `None` on an empty histogram.  A quantile
+    /// whose rank lands among the overflow samples reports
+    /// [`QuantileBound::Above`] the last edge — never `Le(last_edge)`,
+    /// which would claim an upper bound the data does not support.
+    pub fn quantile(&self, q: f64) -> Option<QuantileBound> {
+        let total = self.total();
+        if total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (&b, &c) in self.bounds_ms.iter().zip(&self.counts) {
+            acc += c;
+            if acc >= rank {
+                return Some(QuantileBound::Le(b));
+            }
+        }
+        Some(QuantileBound::Above(
+            *self.bounds_ms.last().expect("bounds are nonempty by construction"),
+        ))
     }
 
     /// One greppable line: `le0.25=0 le0.5=2 … overflow=0`.
@@ -118,5 +165,51 @@ mod tests {
     #[should_panic(expected = "ascending")]
     fn unsorted_bounds_panic() {
         LatencyHistogram::new(vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn quantile_all_samples_above_top_bucket_reports_open_floor() {
+        // regression: every sample past the last bound (8192 ms on the
+        // serve default) must surface as an explicit ">=8192", not a
+        // fabricated "<=8192"
+        let mut h = LatencyHistogram::default_serve();
+        for _ in 0..100 {
+            h.record(10_000.0);
+        }
+        assert_eq!(h.quantile(0.99), Some(QuantileBound::Above(8192.0)));
+        assert_eq!(h.quantile(0.5), Some(QuantileBound::Above(8192.0)));
+        assert_eq!(h.quantile(0.99).unwrap().to_string(), ">=8192");
+    }
+
+    #[test]
+    fn quantile_interior_and_edge_ranks() {
+        let mut h = LatencyHistogram::new(vec![1.0, 2.0, 4.0]);
+        for _ in 0..50 {
+            h.record(0.5); // le1
+        }
+        for _ in 0..49 {
+            h.record(3.0); // le4
+        }
+        h.record(100.0); // overflow
+        // rank(0.5 * 100) = 50 → exactly exhausts the first bucket
+        assert_eq!(h.quantile(0.5), Some(QuantileBound::Le(1.0)));
+        // rank 51 → first sample of the le4 bucket
+        assert_eq!(h.quantile(0.51), Some(QuantileBound::Le(4.0)));
+        // rank 99 → still bounded
+        assert_eq!(h.quantile(0.99), Some(QuantileBound::Le(4.0)));
+        // rank 100 → the overflow sample
+        assert_eq!(h.quantile(1.0), Some(QuantileBound::Above(4.0)));
+        assert_eq!(h.quantile(0.5).unwrap().to_string(), "<=1");
+    }
+
+    #[test]
+    fn quantile_empty_and_clamped() {
+        let h = LatencyHistogram::default_serve();
+        assert_eq!(h.quantile(0.99), None);
+        let mut h = LatencyHistogram::new(vec![1.0]);
+        h.record(0.5);
+        // out-of-range q clamps rather than panicking
+        assert_eq!(h.quantile(-3.0), Some(QuantileBound::Le(1.0)));
+        assert_eq!(h.quantile(7.0), Some(QuantileBound::Le(1.0)));
     }
 }

@@ -1,0 +1,378 @@
+//! Chrome-trace export of a trace [`Snapshot`] — readable by the
+//! `chrome://tracing` / Perfetto UI *and* by KForge's own rocprof
+//! frontend.
+//!
+//! The file carries two views of the same run:
+//!
+//! - the raw event stream as standard `ph: B/E/i/C` records (tid =
+//!   worker index, ts = microseconds since [`super::enable`]), for
+//!   humans with a trace viewer;
+//! - appended `ph: X` **phase-aggregate** rows plus an `otherData`
+//!   header in exactly the rocprof dialect
+//!   ([`crate::profiler::rocprof`]): one row per distinct exec span
+//!   name carrying `BeginNs`/`EndNs`/`DurationNs` (total self-time,
+//!   laid end-to-end on a CPU-time axis behind one leading gap of
+//!   unattributed time) and the rocprof counter vocabulary reused for
+//!   phase shares.  `RocprofFrontend::interpret` skips everything but
+//!   the X rows, so the emitted file round-trips into
+//!   [`Evidence`] unmodified — KForge's analysis agent reading
+//!   KForge's own execution.
+//!
+//! The X-row field mapping (the "self-profile" dialect):
+//!
+//! - `DurationNs` — total self-time of the phase (child spans
+//!   excluded), summed across all occurrences and threads;
+//! - `VALUBusyPct` — the phase's share of all attributed self-time;
+//! - `MemUnitBusyPct` — the phase's share of the span *count*;
+//! - `WaveOccupancyPct` — the share of lanes in which the phase ran;
+//! - `BoundBy` — `MEM` for store/journal phases, `VALU` otherwise;
+//! - `otherData.TotalDurationNs` — attributed + unattributed CPU time;
+//! - `otherData.GpuBusyPct` — the attributed share (so
+//!   `Evidence::launch_fraction` reports untraced time).
+
+use super::{Class, Event, EventPhase, Snapshot, NO_ID};
+use crate::profiler::evidence::Evidence;
+use crate::profiler::frontend::{ArtifactKind, ArtifactPart, ProfileArtifact, ProfilerFrontend};
+use crate::profiler::rocprof::RocprofFrontend;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+fn round1(v: f64) -> f64 {
+    (v * 10.0).round() / 10.0
+}
+
+fn class_str(c: Class) -> &'static str {
+    match c {
+        Class::Logical => "logical",
+        Class::Exec => "exec",
+    }
+}
+
+fn id_i64(id: u64) -> i64 {
+    if id == NO_ID {
+        -1
+    } else {
+        id as i64
+    }
+}
+
+/// Per-phase aggregate over the exec spans of a snapshot.
+#[derive(Debug, Default, Clone)]
+struct PhaseAgg {
+    count: u64,
+    self_ns: u64,
+    lanes: BTreeSet<u32>,
+}
+
+/// Aggregates: (per-name phase stats, attributed ns, unattributed ns,
+/// lanes that ran any exec span).
+fn aggregate_exec_spans(snap: &Snapshot) -> (BTreeMap<String, PhaseAgg>, u64, u64, usize) {
+    // per-tid replay: events reach the buffer in per-thread
+    // chronological order, so a stack walk per tid reconstructs
+    // nesting and self-times exactly.
+    struct Open {
+        name: String,
+        lane: u32,
+        begin_ns: u64,
+        child_ns: u64,
+    }
+    let mut stacks: BTreeMap<u32, Vec<Open>> = BTreeMap::new();
+    // per-tid root-span intervals + observed extent, for coverage
+    let mut roots: BTreeMap<u32, Vec<(u64, u64)>> = BTreeMap::new();
+    let mut extent: BTreeMap<u32, (u64, u64)> = BTreeMap::new();
+    let mut phases: BTreeMap<String, PhaseAgg> = BTreeMap::new();
+    let mut exec_lanes: BTreeSet<u32> = BTreeSet::new();
+
+    for e in snap.events.iter() {
+        if e.class != Class::Exec {
+            continue;
+        }
+        match e.phase {
+            EventPhase::Begin => {
+                let ext = extent.entry(e.tid).or_insert((e.wall_ns, e.wall_ns));
+                ext.0 = ext.0.min(e.wall_ns);
+                ext.1 = ext.1.max(e.wall_ns);
+                exec_lanes.insert(e.lane);
+                stacks.entry(e.tid).or_default().push(Open {
+                    name: e.name.clone(),
+                    lane: e.lane,
+                    begin_ns: e.wall_ns,
+                    child_ns: 0,
+                });
+            }
+            EventPhase::End => {
+                let ext = extent.entry(e.tid).or_insert((e.wall_ns, e.wall_ns));
+                ext.0 = ext.0.min(e.wall_ns);
+                ext.1 = ext.1.max(e.wall_ns);
+                let stack = stacks.entry(e.tid).or_default();
+                // unmatched Ends (disabled mid-span) are dropped
+                let Some(open) = stack.pop() else { continue };
+                let dur = e.wall_ns.saturating_sub(open.begin_ns);
+                let agg = phases.entry(open.name).or_default();
+                agg.count += 1;
+                agg.self_ns += dur.saturating_sub(open.child_ns);
+                agg.lanes.insert(open.lane);
+                if let Some(parent) = stack.last_mut() {
+                    parent.child_ns += dur;
+                } else {
+                    roots.entry(e.tid).or_default().push((open.begin_ns, e.wall_ns));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // attributed = per-tid union of root intervals; unattributed = the
+    // rest of each tid's observed extent (both CPU-time, so threads sum)
+    let mut attributed: u64 = 0;
+    let mut unattributed: u64 = 0;
+    for (tid, mut intervals) in roots {
+        intervals.sort_unstable();
+        let mut covered: u64 = 0;
+        let mut cursor: u64 = 0;
+        let mut first = true;
+        for (b, e) in intervals {
+            if first || b > cursor {
+                covered += e.saturating_sub(b);
+                cursor = e;
+                first = false;
+            } else if e > cursor {
+                covered += e - cursor;
+                cursor = e;
+            }
+        }
+        attributed += covered;
+        if let Some((lo, hi)) = extent.get(&tid) {
+            unattributed += (hi - lo).saturating_sub(covered);
+        }
+    }
+    (phases, attributed, unattributed, exec_lanes.len())
+}
+
+/// Render a snapshot as chrome-trace JSON (see the module docs).
+pub fn chrome_trace(snap: &Snapshot, workload: &str) -> String {
+    let mut events: Vec<Json> = Vec::with_capacity(snap.events.len() + 16);
+    for e in snap.events.iter() {
+        let ts = e.wall_ns as f64 / 1e3;
+        let lane = snap.lane_name(e.lane);
+        let ev = match e.phase {
+            EventPhase::Begin => Json::obj()
+                .set("ph", "B")
+                .set("name", e.name.clone())
+                .set(
+                    "args",
+                    Json::obj()
+                        .set("lane", lane)
+                        .set("class", class_str(e.class))
+                        .set("span", id_i64(e.span))
+                        .set("parent", id_i64(e.parent)),
+                ),
+            EventPhase::End => Json::obj().set("ph", "E").set(
+                "args",
+                Json::obj().set("lane", lane).set("span", id_i64(e.span)),
+            ),
+            EventPhase::Instant => Json::obj()
+                .set("ph", "i")
+                .set("s", "t")
+                .set("name", e.name.clone())
+                .set(
+                    "args",
+                    Json::obj().set("lane", lane).set("class", class_str(e.class)),
+                ),
+            EventPhase::Counter | EventPhase::Gauge => Json::obj()
+                .set("ph", "C")
+                .set("name", e.name.clone())
+                .set(
+                    "args",
+                    Json::obj()
+                        .set("value", e.value)
+                        .set(
+                            "kind",
+                            if e.phase == EventPhase::Gauge { "gauge" } else { "counter" },
+                        )
+                        .set("lane", lane)
+                        .set("class", class_str(e.class)),
+                ),
+        };
+        events.push(ev.set("pid", 0i64).set("tid", i64::from(e.tid)).set("ts", ts));
+    }
+
+    // appended rocprof-dialect X rows: one per exec phase name, laid
+    // end-to-end on a CPU-time axis behind a single leading gap of
+    // unattributed time (which interpret() reads back as launch
+    // overhead, i.e. untraced time)
+    let (phases, attributed, unattributed, n_lanes) = aggregate_exec_spans(snap);
+    let total_self: u64 = phases.values().map(|a| a.self_ns).sum();
+    let total_count: u64 = phases.values().map(|a| a.count).sum();
+    let total_ns = attributed + unattributed;
+    let mut rows: Vec<(&String, &PhaseAgg)> = phases.iter().collect();
+    rows.sort_by(|a, b| b.1.self_ns.cmp(&a.1.self_ns).then_with(|| a.0.cmp(b.0)));
+    let mut cursor = unattributed;
+    for (name, agg) in rows {
+        let begin = cursor;
+        let end = begin + agg.self_ns;
+        cursor = end;
+        let share = |num: u64, den: u64| {
+            if den == 0 {
+                0.0
+            } else {
+                round1(100.0 * num as f64 / den as f64)
+            }
+        };
+        let bound_by = if name.starts_with("store") || name.starts_with("journal") {
+            "MEM"
+        } else {
+            "VALU"
+        };
+        events.push(
+            Json::obj()
+                .set("ph", "X")
+                .set("pid", 0i64)
+                .set("tid", 0i64)
+                .set("name", name.clone())
+                .set(
+                    "args",
+                    Json::obj()
+                        .set("BeginNs", begin as i64)
+                        .set("EndNs", end as i64)
+                        .set("DurationNs", agg.self_ns as i64)
+                        .set("Calls", agg.count as i64)
+                        .set("VALUBusyPct", share(agg.self_ns, total_self))
+                        .set("MemUnitBusyPct", share(agg.count, total_count))
+                        .set("WaveOccupancyPct", share(agg.lanes.len() as u64, n_lanes as u64))
+                        .set("BoundBy", bound_by),
+                ),
+        );
+    }
+
+    let busy_pct = if total_ns == 0 {
+        0.0
+    } else {
+        round1(100.0 * attributed as f64 / total_ns as f64)
+    };
+    let other = Json::obj()
+        .set("Device", "kforge-self")
+        .set("Workload", workload)
+        .set("TotalDurationNs", total_ns as i64)
+        .set("GpuBusyPct", busy_pct);
+    Json::obj()
+        .set("otherData", other)
+        .set("traceEvents", Json::Arr(events))
+        .to_string()
+}
+
+/// Wrap an emitted trace as the rocprof artifact shape — the whole
+/// file *is* the `kernel_trace_json` part (interpret reads only the X
+/// rows and `otherData`).
+pub fn self_artifact(trace_json: String) -> ProfileArtifact {
+    ProfileArtifact {
+        frontend: "rocprof",
+        kind: ArtifactKind::TraceJson,
+        parts: vec![ArtifactPart { name: "kernel_trace_json", content: trace_json }],
+    }
+}
+
+/// Feed a trace through the rocprof frontend: the self-profile
+/// [`Evidence`] the analysis pipeline already knows how to read.
+pub fn self_evidence(trace_json: &str) -> Result<Evidence> {
+    RocprofFrontend.interpret(&self_artifact(trace_json.to_string()))
+}
+
+/// Snapshot the global tracer and write the chrome-trace file.
+pub fn write_trace(path: &Path, workload: &str) -> Result<()> {
+    let snap = super::snapshot();
+    std::fs::write(path, chrome_trace(&snap, workload))
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    /// A deterministic hand-built snapshot: two tids, nested spans,
+    /// one logical instant, one counter.
+    fn sample_snapshot() -> Snapshot {
+        let ev = |phase, class, name: &str, lane, span, parent, tid, wall_ns, value| Event {
+            phase,
+            class,
+            name: name.to_string(),
+            lane,
+            span,
+            parent,
+            tid,
+            wall_ns,
+            value,
+        };
+        use Class::{Exec, Logical};
+        use EventPhase::{Begin, Counter, End, Instant};
+        Snapshot {
+            lanes: vec!["main".into(), "job:0".into()],
+            events: vec![
+                ev(Begin, Exec, "campaign", 0, 0, NO_ID, 0, 0, 0.0),
+                ev(Begin, Exec, "verify", 1, 0, NO_ID, 1, 100, 0.0),
+                ev(Counter, Exec, "store.bytes", 1, NO_ID, 0, 1, 150, 64.0),
+                ev(End, Exec, "", 1, 0, NO_ID, 1, 700, 0.0),
+                ev(Instant, Logical, "task.correct", 1, NO_ID, NO_ID, 0, 800, 0.0),
+                ev(End, Exec, "", 0, 0, NO_ID, 0, 1000, 0.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_matched_begin_end() {
+        let text = chrome_trace(&sample_snapshot(), "unit");
+        let doc = json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let b = events.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("B")).count();
+        let e = events.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("E")).count();
+        assert_eq!(b, 2);
+        assert_eq!(b, e);
+        assert_eq!(
+            doc.get("otherData").unwrap().get("Device").and_then(Json::as_str),
+            Some("kforge-self")
+        );
+    }
+
+    #[test]
+    fn x_rows_report_self_time_and_interpret_roundtrips() {
+        let text = chrome_trace(&sample_snapshot(), "unit");
+        let doc = json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let xs: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("X")).collect();
+        assert_eq!(xs.len(), 2, "one X row per exec phase name");
+        // campaign ran 1000ns total but verify (600ns) is a separate
+        // tid root: campaign self = 1000, verify self = 600
+        let by_name = |n: &str| {
+            xs.iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(n))
+                .unwrap()
+                .get("args")
+                .unwrap()
+                .clone()
+        };
+        assert_eq!(by_name("campaign").get("DurationNs").and_then(Json::as_i64), Some(1000));
+        assert_eq!(by_name("verify").get("DurationNs").and_then(Json::as_i64), Some(600));
+
+        let ev = self_evidence(&text).unwrap();
+        assert_eq!(ev.frontend, "rocprof");
+        assert_eq!(ev.n_kernels(), 2);
+        assert!(ev.fidelity_score() > 0.0, "{}", ev.fidelity_score());
+        // both tids fully covered by roots => no unattributed time
+        assert!((ev.busy_fraction.or(0.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_snapshot_exports_cleanly() {
+        let text = chrome_trace(&Snapshot::default(), "unit");
+        let doc = json::parse(&text).unwrap();
+        assert_eq!(doc.get("traceEvents").and_then(Json::as_arr).unwrap().len(), 0);
+        let ev = self_evidence(&text).unwrap();
+        assert_eq!(ev.n_kernels(), 0);
+        assert_eq!(ev.fidelity_score(), 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Leveled stderr diagnostics gated by `KFORGE_LOG`.
+//!
+//! The repo's scattered `eprintln!` diagnostics route through here so
+//! noisy paths are silenceable (or verbose paths audible) with one env
+//! var instead of another round of call-site edits:
+//!
+//! ```text
+//! KFORGE_LOG=error   only hard failures
+//! KFORGE_LOG=warn    (default) degraded-but-continuing paths
+//! KFORGE_LOG=info    progress lines
+//! KFORGE_LOG=debug   everything
+//! ```
+//!
+//! Use through the crate-root macros:
+//!
+//! ```ignore
+//! crate::kf_warn!("[store] journal append failed for job {i} ({e:#})");
+//! ```
+//!
+//! Output goes to stderr as `kforge[<level>] ...`, never stdout — the
+//! golden-pinned CLI surfaces stay byte-identical.  The filter is read
+//! once per process ([`std::sync::OnceLock`]); the pure
+//! [`Level::from_env_str`] is separated out so tests never race on the
+//! process environment.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Diagnostic severity, ordered most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a `KFORGE_LOG` value.  Unset, empty and unrecognized all
+    /// fall back to the `warn` default — a typo must never silence
+    /// error reporting entirely.
+    pub fn from_env_str(raw: Option<&str>) -> Level {
+        match raw.map(|s| s.trim().to_ascii_lowercase()).as_deref() {
+            Some("error") => Level::Error,
+            Some("info") => Level::Info,
+            Some("debug") => Level::Debug,
+            _ => Level::Warn,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// The process-wide filter: everything at or above this level prints.
+pub fn max_level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| Level::from_env_str(std::env::var("KFORGE_LOG").ok().as_deref()))
+}
+
+/// Macro backend — call through `kf_error!`/`kf_warn!`/`kf_info!`/
+/// `kf_debug!`, which defer the formatting into `fmt::Arguments` so a
+/// filtered-out line never allocates.
+pub fn log(level: Level, args: fmt::Arguments<'_>) {
+    if level <= max_level() {
+        eprintln!("kforge[{}] {}", level.tag(), args);
+    }
+}
+
+/// Log a hard failure (always printed unless someone filters to a
+/// level that does not exist).
+#[macro_export]
+macro_rules! kf_error {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log a degraded-but-continuing condition (printed by default).
+#[macro_export]
+macro_rules! kf_warn {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log a progress line (silent by default).
+#[macro_export]
+macro_rules! kf_info {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log a firehose detail (silent by default).
+#[macro_export]
+macro_rules! kf_debug {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_parse_covers_all_levels_and_defaults_to_warn() {
+        assert_eq!(Level::from_env_str(Some("error")), Level::Error);
+        assert_eq!(Level::from_env_str(Some("WARN")), Level::Warn);
+        assert_eq!(Level::from_env_str(Some(" Info ")), Level::Info);
+        assert_eq!(Level::from_env_str(Some("debug")), Level::Debug);
+        assert_eq!(Level::from_env_str(None), Level::Warn);
+        assert_eq!(Level::from_env_str(Some("")), Level::Warn);
+        assert_eq!(Level::from_env_str(Some("verbose")), Level::Warn);
+    }
+
+    #[test]
+    fn severity_ordering_matches_filtering() {
+        // `level <= max` prints: error always, debug only at debug
+        assert!(Level::Error <= Level::Warn);
+        assert!(Level::Warn <= Level::Warn);
+        assert!(Level::Info > Level::Warn);
+        assert!(Level::Debug > Level::Info);
+    }
+
+    #[test]
+    fn macros_expand_without_panicking() {
+        // smoke: format args with captures, through the crate paths
+        let job = 3;
+        crate::kf_debug!("probe line for job {job} ({})", "detail");
+        crate::kf_info!("probe info");
+    }
+}

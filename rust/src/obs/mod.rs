@@ -1,0 +1,718 @@
+//! Self-profiling: structured spans, counters and leveled logging.
+//!
+//! KForge's thesis is that profiling evidence should drive optimization
+//! — so the repo profiles *itself* with the same machinery it points at
+//! GPU kernels.  This module is a zero-dependency tracer: a process-wide
+//! [`Tracer`] records scoped spans (RAII guards, nested parent ids),
+//! instant events, integer counters and f64 gauges into an in-memory
+//! buffer, and [`export`] renders the buffer as chrome-trace JSON that
+//! [`crate::profiler::rocprof::RocprofFrontend::interpret`] can read
+//! back into [`crate::profiler::evidence::Evidence`] — the
+//! platform-agnostic analysis path applied to KForge's own execution.
+//!
+//! ## The two-clock rule
+//!
+//! Every event carries two kinds of information:
+//!
+//! - **logical identity** — phase, class, name, lane, span id, parent
+//!   id, counter value: a pure function of the work performed;
+//! - **environmental detail** — wall-clock nanoseconds and the worker
+//!   thread id (`tid`): properties of one particular execution.
+//!
+//! The repo's bit-identity guarantees (campaigns, tune runs and serve
+//! scenarios are bit-identical across worker counts and warm vs cold
+//! store) extend to traces through the event **class**:
+//!
+//! - [`Class::Logical`] events are emitted only where the *event stream
+//!   itself* is deterministic — post-hoc from pinned result values, or
+//!   from single-threaded seeded loops (the serve virtual phase).  The
+//!   [`Snapshot::canon`] digest covers exactly these, excluding wall
+//!   and tid by construction, and is compared across worker counts
+//!   *and* warm vs cold store.
+//! - [`Class::Exec`] events mark real execution (phase timings, store
+//!   traffic, oracle evaluations).  They exist only where work actually
+//!   ran, so a warm run legitimately has fewer of them; the
+//!   [`Snapshot::canon_exec`] digest (wall/tid stripped, counters
+//!   summed) is still pinned across worker counts on cold runs.
+//!
+//! ## Lanes, span ids and threads
+//!
+//! Events are grouped into **lanes** — deterministic scope strings
+//! ("main", "job:cuda:expert:gemm_256", "serve") established with
+//! [`lane`] guards at points where a stable domain *identity* is in
+//! hand (the per-job closures, not the worker pool).  Span ids count up
+//! from 0 per (lane, class), assigned under the buffer lock, so they
+//! are deterministic as long as a lane is driven by one thread at a
+//! time — which identity naming guarantees (one job is executed by one
+//! worker; the serve virtual loop is single-threaded).  Worker threads
+//! are numbered by [`alloc_tid`]/[`set_tid`] in
+//! [`crate::coordinator::worker::run_jobs`]; tid 0 is the main thread.
+//!
+//! A disabled tracer (the default — nothing in the library enables it;
+//! only the CLI `--trace` flag does) is a no-op: every entry point
+//! checks one relaxed atomic load and returns before allocating or
+//! formatting anything, and [`recorded_total`] deltas stay zero.
+//!
+//! STORE_SCHEMA deliberately does **not** bump for this subsystem:
+//! tracing is purely observational — it reads results, it never feeds
+//! a fingerprinted input — so cached entries stay valid (pinned in
+//! `rust/tests/trace.rs`).
+
+pub mod export;
+pub mod log;
+pub mod summary;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Lane 0, the default scope for events outside any [`lane`] guard.
+pub const ROOT_LANE: &str = "main";
+
+/// Sentinel parent/span id: "none".
+pub const NO_ID: u64 = u64::MAX;
+
+/// Determinism class of one event — see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    /// Deterministic function of the work; in [`Snapshot::canon`].
+    Logical,
+    /// Real execution detail; in [`Snapshot::canon_exec`] only.
+    Exec,
+}
+
+/// Event shape, mirroring the chrome-trace `ph` vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventPhase {
+    /// Span open (`ph: B`).
+    Begin,
+    /// Span close (`ph: E`).
+    End,
+    /// Point-in-time marker (`ph: i`).
+    Instant,
+    /// Monotonic integer delta, summed per (lane, name) (`ph: C`).
+    Counter,
+    /// Sampled f64 level (`ph: C`).
+    Gauge,
+}
+
+/// One recorded event.  `wall_ns` and `tid` are the environmental
+/// half of the two-clock design; everything else is logical identity.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub phase: EventPhase,
+    pub class: Class,
+    /// Event name; empty on `End` (the span id identifies it).
+    pub name: String,
+    /// Interned lane id — resolve with [`Snapshot::lane_name`].
+    pub lane: u32,
+    /// Span id within the lane (`Begin`/`End`), else [`NO_ID`].
+    pub span: u64,
+    /// Enclosing span id within the lane, or [`NO_ID`] at root.
+    pub parent: u64,
+    /// Worker index (0 = main thread).  Environmental.
+    pub tid: u32,
+    /// Nanoseconds since [`enable`].  Environmental.
+    pub wall_ns: u64,
+    /// Counter delta or gauge level; 0.0 otherwise.
+    pub value: f64,
+}
+
+struct Inner {
+    lanes: Vec<String>,
+    lane_ids: BTreeMap<String, u32>,
+    /// Next span id per (lane, class).  The two classes count
+    /// independently so logical span ids stay warm/cold invariant no
+    /// matter how many exec spans the cold run opened in the lane.
+    next_span: BTreeMap<(u32, u8), u64>,
+    events: Vec<Event>,
+    epoch: Option<Instant>,
+}
+
+fn class_idx(class: Class) -> u8 {
+    match class {
+        Class::Logical => 0,
+        Class::Exec => 1,
+    }
+}
+
+/// The process-wide trace collector.  All access goes through the
+/// module-level free functions; the struct is public only so its
+/// existence is documented.
+pub struct Tracer {
+    enabled: AtomicBool,
+    /// Monotonic count of events ever recorded — the no-op-overhead
+    /// smoke asserts this does not move while disabled.
+    recorded: AtomicU64,
+    /// Next thread id for [`alloc_tid`] (0 is the main thread).
+    next_tid: AtomicU32,
+    inner: Mutex<Inner>,
+}
+
+static TRACER: Tracer = Tracer {
+    enabled: AtomicBool::new(false),
+    recorded: AtomicU64::new(0),
+    next_tid: AtomicU32::new(1),
+    inner: Mutex::new(Inner {
+        lanes: Vec::new(),
+        lane_ids: BTreeMap::new(),
+        next_span: BTreeMap::new(),
+        events: Vec::new(),
+        epoch: None,
+    }),
+};
+
+struct Ctx {
+    tid: u32,
+    lane: u32,
+    /// Open span ids in this thread (innermost last).
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    static CTX: RefCell<Ctx> = const { RefCell::new(Ctx { tid: 0, lane: 0, stack: Vec::new() }) };
+}
+
+/// Survive lock poisoning: a panicking traced job (the worker pool
+/// catches unwinds) must not take the whole tracer down with it.
+fn lock() -> MutexGuard<'static, Inner> {
+    TRACER.inner.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn intern(inner: &mut Inner, name: &str) -> u32 {
+    if inner.lanes.is_empty() {
+        inner.lanes.push(ROOT_LANE.to_string());
+        inner.lane_ids.insert(ROOT_LANE.to_string(), 0);
+    }
+    if let Some(&id) = inner.lane_ids.get(name) {
+        return id;
+    }
+    let id = inner.lanes.len() as u32;
+    inner.lanes.push(name.to_string());
+    inner.lane_ids.insert(name.to_string(), id);
+    id
+}
+
+fn wall_ns(inner: &Inner) -> u64 {
+    inner.epoch.map(|e| e.elapsed().as_nanos() as u64).unwrap_or(0)
+}
+
+/// Is the tracer recording?  One relaxed load — callers building
+/// dynamic event names should gate the formatting on this.
+#[inline]
+pub fn enabled() -> bool {
+    TRACER.enabled.load(Ordering::Relaxed)
+}
+
+/// Start recording.  The wall-clock epoch is set on the first enable
+/// after a [`reset`] and then sticks, so a disable/enable toggle (the
+/// bench overhead probe does this) keeps timestamps monotonic within
+/// one buffer.  Does not clear the buffer (pair with [`reset`] for a
+/// fresh trace).
+pub fn enable() {
+    let mut inner = lock();
+    if inner.epoch.is_none() {
+        inner.epoch = Some(Instant::now());
+    }
+    drop(inner);
+    TRACER.enabled.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording (buffer kept for [`snapshot`]).
+pub fn disable() {
+    TRACER.enabled.store(false, Ordering::Relaxed);
+}
+
+/// Clear the buffer, lanes and span counters.  [`recorded_total`] is
+/// monotonic and deliberately unaffected.
+pub fn reset() {
+    let mut inner = lock();
+    inner.events.clear();
+    inner.lanes.clear();
+    inner.lane_ids.clear();
+    inner.next_span.clear();
+    inner.epoch = None;
+    drop(inner);
+    TRACER.next_tid.store(1, Ordering::Relaxed);
+}
+
+/// Total events ever recorded by this process — a delta of zero across
+/// a region proves the disabled tracer stayed a no-op.
+pub fn recorded_total() -> u64 {
+    TRACER.recorded.load(Ordering::Relaxed)
+}
+
+/// Number this thread for trace attribution (0 = main thread; the
+/// worker pool uses 1-based worker indices).  No-op while disabled.
+pub fn set_tid(tid: u32) {
+    if !enabled() {
+        return;
+    }
+    CTX.with(|c| c.borrow_mut().tid = tid);
+}
+
+/// Allocate a process-unique thread id for a worker about to spawn.
+/// The top-level pool spawns sequentially, so its workers get 1..=N —
+/// exactly the worker index; nested pools (the serve execution fan
+/// runs whole single-job campaigns per worker) draw further ids so no
+/// two live OS threads ever share a tid, which is what keeps per-tid
+/// begin/end matching in the exported chrome trace well-formed.  Tid is
+/// environmental (stripped from both canon digests), so allocation
+/// order racing between concurrent nested pools is harmless.  Returns 0
+/// while disabled.
+pub fn alloc_tid() -> u32 {
+    if !enabled() {
+        return 0;
+    }
+    TRACER.next_tid.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Scope guard restoring the previous lane (and its open-span stack)
+/// on drop.
+pub struct LaneGuard {
+    prev: Option<(u32, Vec<u64>)>,
+}
+
+/// Enter a lane — a named, deterministic event scope ("job:3",
+/// "serve").  Spans opened inside nest under this lane with their own
+/// id sequence; the previous lane's open spans are shelved until drop.
+pub fn lane(name: &str) -> LaneGuard {
+    if !enabled() {
+        return LaneGuard { prev: None };
+    }
+    let id = intern(&mut lock(), name);
+    let prev = CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        let prev = (c.lane, std::mem::take(&mut c.stack));
+        c.lane = id;
+        prev
+    });
+    LaneGuard { prev: Some(prev) }
+}
+
+/// Enter the per-job lane `job:<platform>:<persona>:<problem>` — the
+/// deterministic scope campaign and serve fan-outs attribute work to.
+/// Lanes are named by job *identity* (not dispatch index) so that
+/// concurrent single-job campaigns — the serve execution fan runs one
+/// per worker — land in distinct lanes and per-lane span ids stay
+/// deterministic.  The name is formatted only when the tracer is live.
+pub fn job_lane(platform: &str, persona: &str, problem: &str) -> LaneGuard {
+    if !enabled() {
+        return LaneGuard { prev: None };
+    }
+    lane(&format!("job:{platform}:{persona}:{problem}"))
+}
+
+impl Drop for LaneGuard {
+    fn drop(&mut self) {
+        if let Some((lane, stack)) = self.prev.take() {
+            CTX.with(|c| {
+                let mut c = c.borrow_mut();
+                c.lane = lane;
+                c.stack = stack;
+            });
+        }
+    }
+}
+
+/// Scope guard closing its span on drop.
+pub struct SpanGuard {
+    open: Option<(u32, u64, Class)>,
+}
+
+fn begin_span(name: &str, class: Class) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { open: None };
+    }
+    let (lane, tid, parent) = CTX.with(|c| {
+        let c = c.borrow();
+        (c.lane, c.tid, c.stack.last().copied().unwrap_or(NO_ID))
+    });
+    let id = {
+        let mut inner = lock();
+        if inner.lanes.is_empty() {
+            intern(&mut inner, ROOT_LANE);
+        }
+        let slot = inner.next_span.entry((lane, class_idx(class))).or_insert(0);
+        let id = *slot;
+        *slot += 1;
+        let wall = wall_ns(&inner);
+        inner.events.push(Event {
+            phase: EventPhase::Begin,
+            class,
+            name: name.to_string(),
+            lane,
+            span: id,
+            parent,
+            tid,
+            wall_ns: wall,
+            value: 0.0,
+        });
+        id
+    };
+    TRACER.recorded.fetch_add(1, Ordering::Relaxed);
+    CTX.with(|c| c.borrow_mut().stack.push(id));
+    SpanGuard { open: Some((lane, id, class)) }
+}
+
+/// Open an [`Class::Exec`] span timing real work.
+pub fn span(name: &str) -> SpanGuard {
+    begin_span(name, Class::Exec)
+}
+
+/// Open a [`Class::Logical`] span (structure pinned warm and cold).
+pub fn logical_span(name: &str) -> SpanGuard {
+    begin_span(name, Class::Logical)
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some((lane, id, class)) = self.open.take() else {
+            return;
+        };
+        let tid = CTX.with(|c| {
+            let mut c = c.borrow_mut();
+            if c.stack.last() == Some(&id) {
+                c.stack.pop();
+            }
+            c.tid
+        });
+        if !enabled() {
+            return;
+        }
+        let mut inner = lock();
+        let wall = wall_ns(&inner);
+        inner.events.push(Event {
+            phase: EventPhase::End,
+            class,
+            name: String::new(),
+            lane,
+            span: id,
+            parent: NO_ID,
+            tid,
+            wall_ns: wall,
+            value: 0.0,
+        });
+        drop(inner);
+        TRACER.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+fn point(phase: EventPhase, class: Class, name: &str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    let (lane, tid, parent) = CTX.with(|c| {
+        let c = c.borrow();
+        (c.lane, c.tid, c.stack.last().copied().unwrap_or(NO_ID))
+    });
+    let mut inner = lock();
+    if inner.lanes.is_empty() {
+        intern(&mut inner, ROOT_LANE);
+    }
+    let wall = wall_ns(&inner);
+    inner.events.push(Event {
+        phase,
+        class,
+        name: name.to_string(),
+        lane,
+        span: NO_ID,
+        parent,
+        tid,
+        wall_ns: wall,
+        value,
+    });
+    drop(inner);
+    TRACER.recorded.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Exec instant event (admission decisions, cache hits, ...).
+pub fn instant(name: &str) {
+    point(EventPhase::Instant, Class::Exec, name, 0.0);
+}
+
+/// Logical instant event.
+pub fn logical_instant(name: &str) {
+    point(EventPhase::Instant, Class::Logical, name, 0.0);
+}
+
+/// Bump an exec counter.  Counters are integer-valued so per-(lane,
+/// name) sums are exact and order-independent across threads.
+pub fn counter(name: &str, delta: u64) {
+    point(EventPhase::Counter, Class::Exec, name, delta as f64);
+}
+
+/// Bump a logical counter.
+pub fn logical_counter(name: &str, delta: u64) {
+    point(EventPhase::Counter, Class::Logical, name, delta as f64);
+}
+
+/// Sample an exec gauge level (in-flight requests, queue depth).
+pub fn gauge(name: &str, value: f64) {
+    point(EventPhase::Gauge, Class::Exec, name, value);
+}
+
+/// Sample a logical gauge (bit-exact values only — it lands in the
+/// canon digest verbatim).
+pub fn logical_gauge(name: &str, value: f64) {
+    point(EventPhase::Gauge, Class::Logical, name, value);
+}
+
+/// Copy the current buffer out.
+pub fn snapshot() -> Snapshot {
+    let inner = lock();
+    Snapshot { lanes: inner.lanes.clone(), events: inner.events.clone() }
+}
+
+/// An owned copy of the trace buffer, with the canon digests.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub lanes: Vec<String>,
+    pub events: Vec<Event>,
+}
+
+fn fmt_id(id: u64) -> String {
+    if id == NO_ID {
+        "-".to_string()
+    } else {
+        id.to_string()
+    }
+}
+
+impl Snapshot {
+    pub fn lane_name(&self, id: u32) -> &str {
+        self.lanes.get(id as usize).map(|s| s.as_str()).unwrap_or(ROOT_LANE)
+    }
+
+    /// Events of one class, in record order.
+    pub fn of_class(&self, class: Class) -> impl Iterator<Item = &Event> {
+        self.events.iter().filter(move |e| e.class == class)
+    }
+
+    /// Sum of a counter across all lanes (both classes).
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.phase == EventPhase::Counter && e.name == name)
+            .map(|e| e.value as u64)
+            .sum()
+    }
+
+    /// The logical-determinism digest: every [`Class::Logical`] event's
+    /// identity, grouped per lane (lanes sorted by name, events in
+    /// record order, counters summed).  Wall-clock and tid are excluded
+    /// by construction — this string is compared bit-for-bit across
+    /// worker counts and warm vs cold store.
+    pub fn canon(&self) -> String {
+        self.digest(Class::Logical, "kforge-trace-canon v1 logical")
+    }
+
+    /// The exec-determinism digest: [`Class::Exec`] identities with
+    /// wall/tid stripped and counters summed.  Pinned across worker
+    /// counts for cold runs (warm runs legitimately skip exec work).
+    pub fn canon_exec(&self) -> String {
+        self.digest(Class::Exec, "kforge-trace-canon v1 exec")
+    }
+
+    fn digest(&self, class: Class, header: &str) -> String {
+        // per lane: identity lines in record order + summed counters.
+        // counter sums are exact: values are integers, so addition is
+        // associative and thread interleaving cannot change the total.
+        let mut by_lane: BTreeMap<&str, (Vec<String>, BTreeMap<&str, f64>)> = BTreeMap::new();
+        for e in &self.events {
+            if e.class != class {
+                continue;
+            }
+            let slot = by_lane.entry(self.lane_name(e.lane)).or_default();
+            match e.phase {
+                EventPhase::Counter => {
+                    *slot.1.entry(e.name.as_str()).or_insert(0.0) += e.value;
+                }
+                EventPhase::Begin => slot.0.push(format!(
+                    "begin {} parent={} {}",
+                    e.span,
+                    fmt_id(e.parent),
+                    e.name
+                )),
+                EventPhase::End => slot.0.push(format!("end {}", e.span)),
+                EventPhase::Instant => {
+                    slot.0.push(format!("inst parent={} {}", fmt_id(e.parent), e.name))
+                }
+                EventPhase::Gauge => slot.0.push(format!(
+                    "gauge parent={} {} = {:016x}",
+                    fmt_id(e.parent),
+                    e.name,
+                    e.value.to_bits()
+                )),
+            }
+        }
+        let mut out = String::with_capacity(64 + 32 * self.events.len());
+        out.push_str(header);
+        out.push('\n');
+        for (lane, (lines, counters)) in by_lane {
+            out.push_str("lane ");
+            out.push_str(lane);
+            out.push('\n');
+            for line in lines {
+                out.push_str("  ");
+                out.push_str(&line);
+                out.push('\n');
+            }
+            for (name, total) in counters {
+                out.push_str(&format!("  counter {name} = {}\n", total as u64));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The tracer is process-global and the lib test binary runs tests
+    // concurrently: every test here that enables it takes this lock
+    // and asserts only on its own uniquely-named lanes/counters, so a
+    // concurrently-running instrumented test cannot perturb it.  The
+    // full-system determinism suite lives in rust/tests/trace.rs
+    // (its own process).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let _g = locked();
+        disable();
+        let before = recorded_total();
+        let _lane = lane("obs-test-noop");
+        let _span = span("obs.noop.phase");
+        instant("obs.noop.instant");
+        counter("obs.noop.counter", 7);
+        gauge("obs.noop.gauge", 1.5);
+        drop(_span);
+        assert_eq!(recorded_total(), before, "disabled tracer recorded events");
+    }
+
+    #[test]
+    fn spans_nest_and_ids_count_per_lane() {
+        let _g = locked();
+        reset();
+        enable();
+        {
+            let _l = lane("obs-test-nest");
+            let _outer = span("obs.nest.outer");
+            {
+                let _inner = logical_span("obs.nest.inner");
+                counter("obs.nest.hits", 2);
+            }
+        }
+        disable();
+        let snap = snapshot();
+        let mine: Vec<&Event> = snap
+            .events
+            .iter()
+            .filter(|e| snap.lane_name(e.lane) == "obs-test-nest")
+            .collect();
+        assert_eq!(mine.len(), 5, "{mine:?}");
+        assert_eq!(mine[0].phase, EventPhase::Begin);
+        assert_eq!(mine[0].span, 0);
+        assert_eq!(mine[0].parent, NO_ID);
+        // span ids count per (lane, class): the logical inner span is
+        // logical-id 0 even though exec-id 0 is already taken
+        assert_eq!(mine[1].span, 0);
+        assert_eq!(mine[1].parent, 0, "inner span must parent on outer");
+        assert_eq!(mine[1].class, Class::Logical);
+        assert_eq!(mine[2].phase, EventPhase::Counter);
+        assert_eq!(mine[2].parent, 0, "counter must attach to innermost span");
+        assert_eq!(mine[3].phase, EventPhase::End);
+        assert_eq!(mine[3].class, Class::Logical);
+        assert_eq!(mine[4].class, Class::Exec);
+        assert_eq!(mine[4].span, 0);
+        reset();
+    }
+
+    #[test]
+    fn lane_guard_restores_previous_scope() {
+        let _g = locked();
+        reset();
+        enable();
+        let _outer = lane("obs-test-outer");
+        let _s = span("obs.outer.span");
+        {
+            let _inner = lane("obs-test-inner");
+            // fresh lane: no inherited parent, ids restart at 0
+            let _t = span("obs.inner.span");
+        }
+        instant("obs.outer.after");
+        disable();
+        let snap = snapshot();
+        let inner: Vec<&Event> = snap
+            .events
+            .iter()
+            .filter(|e| snap.lane_name(e.lane) == "obs-test-inner")
+            .collect();
+        assert_eq!(inner[0].span, 0);
+        assert_eq!(inner[0].parent, NO_ID);
+        let after = snap
+            .events
+            .iter()
+            .find(|e| e.name == "obs.outer.after")
+            .expect("instant after lane pop");
+        assert_eq!(snap.lane_name(after.lane), "obs-test-outer");
+        assert_eq!(after.parent, 0, "outer span must be open again");
+        reset();
+    }
+
+    #[test]
+    fn canon_excludes_wall_tid_and_exec_class() {
+        let _g = locked();
+        reset();
+        enable();
+        {
+            let _l = lane("obs-test-canon");
+            let _exec = span("obs.canon.exec");
+            logical_counter("obs.canon.count", 3);
+            logical_counter("obs.canon.count", 4);
+            logical_gauge("obs.canon.level", 2.5);
+        }
+        disable();
+        let snap = snapshot();
+        let canon = snap.canon();
+        assert!(canon.contains("lane obs-test-canon"), "{canon}");
+        assert!(canon.contains("counter obs.canon.count = 7"), "{canon}");
+        // the gauge sits inside the (exec) span, so its parent is that
+        // span's id — identity only, no wall/tid anywhere in the digest
+        assert!(
+            canon.contains(&format!("gauge parent=0 obs.canon.level = {:016x}", 2.5f64.to_bits())),
+            "{canon}"
+        );
+        assert!(!canon.contains("obs.canon.exec"), "exec event leaked into canon: {canon}");
+        let exec = snap.canon_exec();
+        assert!(exec.contains("begin 0 parent=- obs.canon.exec"), "{exec}");
+        assert!(!exec.contains("obs.canon.count"), "logical event leaked into exec: {exec}");
+        reset();
+    }
+
+    #[test]
+    fn counter_total_sums_across_lanes() {
+        let _g = locked();
+        reset();
+        enable();
+        {
+            let _a = lane("obs-test-sum-a");
+            counter("obs.sum.n", 5);
+        }
+        {
+            let _b = lane("obs-test-sum-b");
+            counter("obs.sum.n", 6);
+        }
+        disable();
+        assert_eq!(snapshot().counter_total("obs.sum.n"), 11);
+        reset();
+    }
+}

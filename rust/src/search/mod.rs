@@ -151,6 +151,7 @@ pub(crate) fn sort_frontier(xs: &mut Vec<Scored>) {
             .then_with(|| a.schedule.canon().cmp(&b.schedule.canon()))
     });
     xs.dedup_by(|a, b| a.schedule == b.schedule);
+    crate::obs::counter("search.frontier.points", xs.len() as u64);
 }
 
 /// Evaluate a candidate batch against the budget: charges up to
@@ -167,6 +168,7 @@ pub(crate) fn score_batch(
     if cands.is_empty() {
         return Vec::new();
     }
+    crate::obs::counter("search.evaluated", granted as u64);
     let costs = oracle.cost_many(&cands);
     visited.extend(cands.iter().cloned());
     cands

@@ -17,6 +17,7 @@
 use super::Scored;
 use crate::coordinator::worker;
 use crate::kir::patch::DirtySet;
+use crate::obs;
 use crate::kir::rewrite::fusion::{self, FusionPlan};
 use crate::kir::Graph;
 use crate::perfsim::lower::{self as lower_mod, lower, KernelLaunch, Plan};
@@ -89,6 +90,7 @@ fn finish_price(
 /// Fully price one (graph, schedule), keeping the lowered artifacts
 /// for later incremental re-pricing.
 pub fn price(spec: &PlatformSpec, g: &Graph, s: &Schedule) -> PricedPlan {
+    obs::counter("oracle.price", 1);
     let fplan = fplan_for(g, s);
     let plan = lower_mod::lower_with_plan(g, s, &fplan);
     let bodies: Vec<f64> = plan
@@ -119,6 +121,7 @@ pub fn reprice(
     g: &Graph,
     dirty: &DirtySet,
 ) -> PricedPlan {
+    obs::counter("oracle.reprice", 1);
     if prev.plan.schedule != *s || dirty.len() != g.nodes.len() {
         return price(spec, g, s);
     }
@@ -177,6 +180,7 @@ pub fn reprice(
             }
         }
     }
+    obs::counter("oracle.reused_kernels", reused_kernels as u64);
     finish_price(spec, s, g, fplan, kernels, bodies, reused_kernels)
 }
 
@@ -214,6 +218,10 @@ impl<'a> CostOracle<'a> {
     /// schedules price at infinity (strategies filter them out before
     /// ever reaching here — this is the belt to that suspenders).
     pub fn cost(&self, s: &Schedule) -> f64 {
+        // counted per evaluation wherever it runs (caller thread or
+        // pool); integer counters sum order-independently, so the
+        // total is worker-count invariant like the values themselves
+        obs::counter("oracle.evaluations", 1);
         if legal::check(s, self.spec).is_err() {
             return f64::INFINITY;
         }
@@ -275,6 +283,7 @@ impl<'a> CostOracle<'a> {
         if near < 2 {
             return;
         }
+        obs::counter("oracle.rerank.evidence", near as u64);
         let mut head: Vec<(Scored, f64, f64)> = frontier[..near]
             .iter()
             .map(|s| {

@@ -260,18 +260,47 @@ pub fn tune_suite_with(store: &Store, cfg: &TuneConfig, suite: &Suite) -> TuneRe
             outcomes.push(r);
             continue;
         }
-        let r = tune_problem(cfg, problem);
+        let r = {
+            let _s = crate::obs::span("tune.problem");
+            tune_problem(cfg, problem)
+        };
         if store.enabled() {
             cache.misses += 1;
             cache.bytes_written += store.put_blob(&key, &serialize_tune(&r));
         }
         outcomes.push(r);
     }
+    trace_tune_outcomes(&outcomes);
     TuneReport {
         platform: cfg.platform.name(),
         strategy: cfg.strategy.name(),
         outcomes,
         cache,
+    }
+}
+
+/// Logical trace of a tune run, emitted post-hoc from the outcome
+/// values (which are bit-identical warm vs cold by the store's
+/// serialization contract) — so the `Snapshot::canon` digest is too.
+/// Live exec events (`tune.problem` spans, oracle counters) exist only
+/// where search actually ran; that asymmetry is the two-clock design
+/// working as intended.
+fn trace_tune_outcomes(outcomes: &[TuneOutcome]) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    for o in outcomes {
+        let _lane = crate::obs::lane(&format!("tune:{}", o.problem_id));
+        let _span = crate::obs::logical_span(&format!("tune:{}:{}", o.strategy, o.problem_id));
+        crate::obs::logical_counter("tune.evals", o.evals as u64);
+        crate::obs::logical_gauge("tune.naive_s", o.naive_s);
+        crate::obs::logical_gauge("tune.expert_s", o.expert_s);
+        crate::obs::logical_gauge("tune.tuned_s", o.tuned_s);
+        crate::obs::logical_instant(if o.le_expert() {
+            "tune.le_expert"
+        } else {
+            "tune.gt_expert"
+        });
     }
 }
 

@@ -32,6 +32,7 @@ use super::admission::{deadline_expired, AdmissionPolicy, Decision, Outcome, She
 use super::loadgen::{self, LoadgenConfig, RequestSpec};
 use super::queue::{BoundedQueue, Priority, PushError};
 use crate::coordinator::{run_campaign_with, BaselineKind, ExperimentConfig, TaskResult};
+use crate::obs;
 use crate::store::{CacheStats, Store};
 use crate::util::rng::{fnv1a, Pcg};
 use crate::workloads::{Level, Suite};
@@ -442,6 +443,16 @@ pub fn run_virtual(cfg: &ScenarioConfig, store_enabled: bool) -> VirtualOutcome 
                 }
             },
         }
+        if obs::enabled() {
+            // the virtual loop is single-threaded and seeded, so these
+            // live samples are part of the deterministic (logical) trace
+            let _l = obs::lane("serve");
+            obs::logical_gauge("serve.queue_depth", eng.queue.depth() as f64);
+            obs::logical_gauge(
+                "serve.in_flight",
+                (cfg.workers.max(1) - eng.idle) as f64,
+            );
+        }
         if cfg.progress_every > 0 && (idx + 1) % cfg.progress_every == 0 {
             println!(
                 "[serve] t={:.1}ms arrived={} depth={} in_flight={} completed={} rejected={} expired={}",
@@ -463,14 +474,55 @@ pub fn run_virtual(cfg: &ScenarioConfig, store_enabled: bool) -> VirtualOutcome 
         .map(|r| r.expect("every request resolves to exactly one outcome"))
         .collect();
 
-    VirtualOutcome {
+    let out = VirtualOutcome {
         specs,
         requests,
         pop_order: eng.pop_order,
         max_depth: eng.max_depth,
         makespan_ms: eng.makespan_ms,
         warmed,
+    };
+    trace_virtual(&out);
+    out
+}
+
+/// Emit the logical trace of a virtual run: one admission decision
+/// instant per request (arrival order), queue-wait gauges in the
+/// priority lanes, and the scenario summary.  Everything comes from the
+/// assembled [`VirtualOutcome`], which is a pure function of (seed,
+/// config, store-enabled) — so the stream lands in `Snapshot::canon`
+/// and is compared bit-for-bit across execution worker counts and warm
+/// vs cold store.
+fn trace_virtual(v: &VirtualOutcome) {
+    if !obs::enabled() {
+        return;
     }
+    let _lane = obs::lane("serve");
+    let _span = obs::logical_span("serve.virtual");
+    for r in &v.requests {
+        match &r.outcome {
+            Outcome::Completed { queue_ms, .. } => {
+                obs::logical_instant("serve.admit");
+                let _p = obs::lane(&format!("serve:{}", r.priority.label()));
+                obs::logical_counter("serve.completed", 1);
+                obs::logical_gauge("serve.queue_wait_ms", *queue_ms);
+            }
+            Outcome::Rejected { reason } => {
+                obs::logical_instant(&format!("serve.shed.{}", reason.label()));
+            }
+            Outcome::DeadlineExceeded { waited_ms } => {
+                obs::logical_instant("serve.admit");
+                let _p = obs::lane(&format!("serve:{}", r.priority.label()));
+                obs::logical_counter("serve.expired", 1);
+                obs::logical_gauge("serve.queue_wait_ms", *waited_ms);
+            }
+            Outcome::Failed { .. } => obs::logical_instant("serve.failed"),
+        }
+    }
+    obs::logical_counter("serve.requests", v.requests.len() as u64);
+    obs::logical_counter("serve.warmed", v.warmed.len() as u64);
+    obs::logical_gauge("serve.max_depth", v.max_depth as f64);
+    obs::logical_gauge("serve.makespan_ms", v.makespan_ms);
 }
 
 /// Run the full scenario: the virtual phase, then real execution of
@@ -482,6 +534,7 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
         run_virtual(cfg, store.enabled());
 
     // ---- execution phase -----------------------------------------------
+    let _exec_lane = obs::lane("serve");
     let t0 = std::time::Instant::now();
     let snap0 = store.snapshot();
     let mut first_spec: HashMap<String, usize> = HashMap::new();
@@ -489,13 +542,17 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
         first_spec.entry(s.job_id()).or_insert(i);
     }
     // cache warming: the hottest keys, before any traffic executes
-    for job in &warmed {
-        let _ = execute_job(store, &specs[first_spec[job]]);
+    {
+        let _s = obs::span("serve.warm");
+        for job in &warmed {
+            let _ = execute_job(store, &specs[first_spec[job]]);
+        }
     }
     // optional eviction pressure on the disk tier between warm and serve
     if let Some(max_bytes) = cfg.gc_max_bytes {
+        let _s = obs::span("serve.gc");
         if let Err(e) = store.cache().gc(max_bytes) {
-            eprintln!("[serve] gc failed ({e:#}); continuing");
+            crate::kf_warn!("[serve] gc failed ({e:#}); continuing");
         }
     }
     // distinct jobs that virtually completed, in first-start order,
@@ -515,12 +572,14 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
         .map(|r| (r.job.clone(), first_spec[&r.job]))
         .collect();
     let exec_workers = cfg.exec_workers.unwrap_or(cfg.workers).max(1);
+    let exec_span = obs::span("serve.exec");
     let timed: Vec<(TaskResult, f64)> =
         crate::coordinator::worker::run_jobs(exec_workers, &exec_jobs, |(_, spec_idx)| {
             let t = std::time::Instant::now();
             let r = execute_job(store, &specs[*spec_idx]);
             (r, t.elapsed().as_secs_f64() * 1e3)
         });
+    drop(exec_span);
     let results: Vec<(String, TaskResult)> = exec_jobs
         .iter()
         .zip(&timed)
@@ -532,6 +591,7 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
     // every distinct streaming job that started must deliver the same
     // bits pulsed (chunked) as whole-graph — the serve-tier face of the
     // model-layer determinism property
+    let stream_span = obs::span("serve.stream_verify");
     let mut stream_checked = 0usize;
     let mut stream_mismatches = 0usize;
     let mut stream_seen: HashSet<&str> = HashSet::new();
@@ -568,9 +628,14 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
             stream_checked += 1;
         } else {
             stream_mismatches += 1;
-            eprintln!("[serve] streaming mismatch on job {job}");
+            crate::kf_error!("[serve] streaming mismatch on job {job}");
         }
     }
+    drop(stream_span);
+    // pulsed-vs-whole agreement is a pure function of the specs, so the
+    // counts belong to the logical (determinism-pinned) trace
+    obs::logical_counter("serve.stream_checked", stream_checked as u64);
+    obs::logical_counter("serve.stream_mismatches", stream_mismatches as u64);
 
     ScenarioReport {
         requests,

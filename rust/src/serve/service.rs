@@ -115,6 +115,9 @@ impl<T, R> Service<T, R> {
 
     fn shed(&self, reason: ShedReason) -> Ticket<R> {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+        if crate::obs::enabled() {
+            crate::obs::instant(&format!("serve.shed.{}", reason.label()));
+        }
         let cell = Arc::new(TicketCell { slot: Mutex::new(None), ready: Condvar::new() });
         cell.resolve(Outcome::Rejected { reason }, None);
         Ticket(cell)
@@ -159,14 +162,22 @@ impl<T, R> Service<T, R> {
         let waited_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
         if deadline_expired(req.deadline_ms, waited_ms) {
             self.expired.fetch_add(1, Ordering::Relaxed);
+            crate::obs::instant("serve.expired");
             req.ticket.resolve(Outcome::DeadlineExceeded { waited_ms }, None);
             return true;
         }
-        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        // real-time measurements: exec class only, never in the canon
+        // digests (this front end is wall-clock by nature)
+        crate::obs::gauge("serve.queue_wait_ms", waited_ms);
+        let live = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        crate::obs::gauge("serve.in_flight", live as f64);
+        let request_span = crate::obs::span("serve.request");
         let t = Instant::now();
         let result = handler(&req.payload);
         let service_ms = t.elapsed().as_secs_f64() * 1e3;
-        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        drop(request_span);
+        let live = self.in_flight.fetch_sub(1, Ordering::Relaxed) - 1;
+        crate::obs::gauge("serve.in_flight", live as f64);
         match result {
             Ok(value) => {
                 self.completed.fetch_add(1, Ordering::Relaxed);

@@ -322,7 +322,7 @@ impl Cache {
                         return Some((result, bytes));
                     }
                     Err(e) => {
-                        eprintln!(
+                        crate::kf_warn!(
                             "[store] corrupt cache entry {} ({e:#}); treating as a miss",
                             path.display()
                         );
@@ -330,7 +330,7 @@ impl Cache {
                 },
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
                 Err(e) => {
-                    eprintln!("[store] unreadable cache entry {} ({e}); treating as a miss", path.display());
+                    crate::kf_warn!("[store] unreadable cache entry {} ({e}); treating as a miss", path.display());
                 }
             }
         }
@@ -361,7 +361,7 @@ impl Cache {
                 bytes
             }
             Err(e) => {
-                eprintln!("[store] failed to persist cache entry {} ({e})", path.display());
+                crate::kf_error!("[store] failed to persist cache entry {} ({e})", path.display());
                 let _ = std::fs::remove_file(&tmp);
                 0
             }
@@ -415,7 +415,7 @@ impl Cache {
                             return Some((value, bytes));
                         }
                         Err(e) => {
-                            eprintln!(
+                            crate::kf_warn!(
                                 "[store] corrupt cache entry {} ({e:#}); treating as a miss",
                                 path.display()
                             );
@@ -424,7 +424,7 @@ impl Cache {
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
                 Err(e) => {
-                    eprintln!("[store] unreadable cache entry {} ({e}); treating as a miss", path.display());
+                    crate::kf_warn!("[store] unreadable cache entry {} ({e}); treating as a miss", path.display());
                 }
             }
         }
@@ -454,7 +454,7 @@ impl Cache {
                 bytes
             }
             Err(e) => {
-                eprintln!("[store] failed to persist cache entry {} ({e})", path.display());
+                crate::kf_error!("[store] failed to persist cache entry {} ({e})", path.display());
                 let _ = std::fs::remove_file(&tmp);
                 0
             }

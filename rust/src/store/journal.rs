@@ -128,7 +128,7 @@ impl Journal {
         };
         let expected_header = header(digest, keys.len());
         if !data.starts_with(&expected_header) {
-            eprintln!(
+            crate::kf_warn!(
                 "[store] journal {} belongs to a different campaign; starting fresh",
                 path.display()
             );
@@ -146,7 +146,7 @@ impl Journal {
                 }
                 Ok(_) => {} // duplicate record: first one wins
                 Err(e) => {
-                    eprintln!(
+                    crate::kf_warn!(
                         "[store] journal {} record invalid ({e:#}); resuming from the valid prefix",
                         path.display()
                     );
@@ -180,6 +180,9 @@ impl Journal {
         let mut file = self.file.lock().unwrap();
         file.write_all(line.as_bytes())?;
         file.flush()?;
+        drop(file);
+        crate::obs::instant("journal.append");
+        crate::obs::counter("journal.bytes", line.len() as u64);
         Ok(())
     }
 }

@@ -118,7 +118,17 @@ impl Store {
         if !self.enabled {
             return None;
         }
-        self.cache.get(key)
+        match self.cache.get(key) {
+            Some((r, bytes)) => {
+                crate::obs::instant("store.hit");
+                crate::obs::counter("store.bytes_read", bytes);
+                Some((r, bytes))
+            }
+            None => {
+                crate::obs::instant("store.miss");
+                None
+            }
+        }
     }
 
     /// Store a job result; returns bytes written to disk.
@@ -126,7 +136,10 @@ impl Store {
         if !self.enabled {
             return 0;
         }
-        self.cache.put(key, result)
+        let bytes = self.cache.put(key, result);
+        crate::obs::instant("store.put");
+        crate::obs::counter("store.bytes_written", bytes);
+        bytes
     }
 
     /// Look up a raw-text object (the autotuner's `kforge-tunekey`
@@ -151,7 +164,17 @@ impl Store {
         if !self.enabled {
             return None;
         }
-        self.cache.get_blob_checked(key, parse)
+        match self.cache.get_blob_checked(key, parse) {
+            Some((v, bytes)) => {
+                crate::obs::instant("store.hit");
+                crate::obs::counter("store.bytes_read", bytes);
+                Some((v, bytes))
+            }
+            None => {
+                crate::obs::instant("store.miss");
+                None
+            }
+        }
     }
 
     /// Store a raw-text object; returns bytes written to disk.
@@ -159,13 +182,17 @@ impl Store {
         if !self.enabled {
             return 0;
         }
-        self.cache.put_blob(key, payload)
+        let bytes = self.cache.put_blob(key, payload);
+        crate::obs::instant("store.put");
+        crate::obs::counter("store.bytes_written", bytes);
+        bytes
     }
 
     /// Count a journal-restored job in the process-level counters.
     pub fn record_resumed(&self) {
         if self.enabled {
             self.cache.record_resumed();
+            crate::obs::counter("journal.restored", 1);
         }
     }
 
