@@ -242,6 +242,33 @@ pub fn run_task(
     }
 }
 
+/// The canonical campaign job list: persona × problem over an
+/// already-filtered suite (the caller applies `supported_on`),
+/// references resolved up front (the reference is part of a job's
+/// identity).  This enumeration order IS the job index space — the
+/// journal format, the shard planner (`crate::dist`) and the merge
+/// phase all key records by position in this list, so it must stay
+/// deterministic and shared across every execution mode.
+pub(crate) fn job_list<'a>(
+    cfg: &ExperimentConfig,
+    filtered: &'a Suite,
+    corpus: Option<&'a RefCorpus>,
+) -> Vec<(&'static Persona, &'a Problem, Option<&'a Program>)> {
+    cfg.personas
+        .iter()
+        .flat_map(|p| {
+            filtered.problems.iter().map(move |pr| {
+                let reference = if cfg.use_reference {
+                    corpus.and_then(|c| c.get(&pr.id))
+                } else {
+                    None
+                };
+                (*p, pr, reference)
+            })
+        })
+        .collect()
+}
+
 /// Run a full campaign over a suite, distributing jobs across the
 /// worker pool (one job per simulated device at a time), consulting
 /// the process-wide result store (see [`crate::store::global`] — a
@@ -272,22 +299,7 @@ pub fn run_campaign_with(
 ) -> CampaignResult {
     let spec = cfg.spec();
     let filtered = suite.supported_on(&spec);
-    // build the job list: persona × problem, references resolved up
-    // front (the reference is part of the job's identity)
-    let jobs: Vec<(&'static Persona, &Problem, Option<&Program>)> = cfg
-        .personas
-        .iter()
-        .flat_map(|p| {
-            filtered.problems.iter().map(move |pr| {
-                let reference = if cfg.use_reference {
-                    corpus.and_then(|c| c.get(&pr.id))
-                } else {
-                    None
-                };
-                (*p, pr, reference)
-            })
-        })
-        .collect();
+    let jobs = job_list(cfg, &filtered, corpus);
     let workers = cfg.workers.max(1);
     let _campaign_span = obs::span("campaign");
     if !store.enabled() {

@@ -19,8 +19,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Best-effort panic payload rendering (panics carry `&str` or
-/// `String` in practice; anything else is labeled as such).
-fn payload_text(payload: &(dyn std::any::Any + Send)) -> String {
+/// `String` in practice; anything else is labeled as such).  Shared
+/// with the chunk-claiming pool in `crate::dist`.
+pub(crate) fn payload_text(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {

@@ -1,0 +1,497 @@
+//! Distributed campaigns: multi-shard execution over one shared store.
+//!
+//! The campaign grid (persona × problem) is embarrassingly shardable:
+//! every job is a pure function of its [`crate::store::JobKey`] (the
+//! PR 3 worker-invariance property), so any partition of the job index
+//! space, executed by any set of processes against one shared
+//! `--cache-dir`, folds back into a result bit-identical to the
+//! 1-process run.  This module makes that operational:
+//!
+//! - **shard planner + work-stealing splitter** ([`plan_chunks`],
+//!   [`run_shard`]): the job list is cut into contiguous chunks,
+//!   oversubscribed ~4× the shard count.  Shards claim chunks
+//!   one-at-a-time through persistent claim files under the shared
+//!   cache dir (`store::lease::claim` — the create-new winner owns the
+//!   chunk forever), so fast shards steal work from slow ones and two
+//!   shards can never compute the same chunk.  Each shard appends to
+//!   its own journal, keyed by *global* job index against the full
+//!   campaign key list — crash-resume of any single shard is the plain
+//!   journal-resume path, and re-running a dead shard recomputes
+//!   exactly its missing jobs (its claims persist).
+//! - **merge/verify** ([`merge_shards`], [`assert_bit_identical`]):
+//!   fold every shard journal back into one
+//!   [`CampaignResult`], first-wins by job index, erroring if any job
+//!   is missing.  Because each job result is a pure function of its
+//!   key, the merged result is bit-identical (every `TaskResult`
+//!   field, f64s by bit pattern) to the 1-process run — CI gates this.
+//! - **in-process chunk pool** ([`exec_pool`]): the same
+//!   chunk-claiming discipline as an in-process execution pool
+//!   (atomic chunk cursor instead of claim files), used by the serve
+//!   tier's `--exec-shards` to shard its execution phase.
+//! - **subprocess driver** ([`spawn_shards`]): `kforge dist spawn`
+//!   forks N `kforge run --shards N --shard-id K` workers of the
+//!   current binary and waits for them; the CLI then merges.
+//!
+//! While a shard runs it holds a liveness lease
+//! ([`crate::store::Lease`]), so `kforge cache gc` racing the campaign
+//! never evicts an object a shard journal already references.
+
+use crate::coordinator::experiment::{job_list, run_task, CampaignResult, ExperimentConfig};
+use crate::coordinator::job::TaskResult;
+use crate::coordinator::worker::{self, run_sparse};
+use crate::obs;
+use crate::store::journal::campaign_digest;
+use crate::store::{lease, CacheStats, JobKey, Journal, KeyScope, Lease, Store};
+use crate::workloads::refcorpus::RefCorpus;
+use crate::workloads::Suite;
+use anyhow::{Context, Result};
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Chunk oversubscription factor: more chunks than shards so a fast
+/// shard steals work instead of idling behind a static split.
+const CHUNKS_PER_SHARD: usize = 4;
+
+/// Partition `n_jobs` into contiguous, balanced chunks — about
+/// [`CHUNKS_PER_SHARD`] per shard, never more chunks than jobs, sizes
+/// differing by at most one.  The chunk list is a pure function of
+/// (n_jobs, shards), so every shard of a campaign computes the same
+/// plan independently.
+pub fn plan_chunks(n_jobs: usize, shards: usize) -> Vec<Range<usize>> {
+    if n_jobs == 0 {
+        return Vec::new();
+    }
+    let target = (shards.max(1) * CHUNKS_PER_SHARD).min(n_jobs);
+    let base = n_jobs / target;
+    let extra = n_jobs % target;
+    let mut out = Vec::with_capacity(target);
+    let mut start = 0;
+    for i in 0..target {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// What one shard run did (the CLI prints this; merge does not need it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardReport {
+    pub shard_id: usize,
+    pub shards: usize,
+    /// Total jobs in the campaign (across all shards).
+    pub jobs_total: usize,
+    /// Chunks this run owned (claimed now or reclaimed after a crash).
+    pub chunks_owned: usize,
+    /// Jobs restored from this shard's journal (a prior run's work).
+    pub restored: usize,
+    /// Jobs answered by the shared store inside owned chunks.
+    pub store_hits: usize,
+    /// Jobs actually computed by this run.
+    pub computed: usize,
+    /// Bytes appended to the shared object store.
+    pub bytes_written: u64,
+}
+
+impl ShardReport {
+    /// One-line summary (what `kforge run --shards` prints).
+    pub fn summary(&self) -> String {
+        format!(
+            "shard {}/{}: {} chunk(s) owned, {} restored, {} store hit(s), {} computed of {} total",
+            self.shard_id,
+            self.shards,
+            self.chunks_owned,
+            self.restored,
+            self.store_hits,
+            self.computed,
+            self.jobs_total,
+        )
+    }
+}
+
+fn shard_keys<'a>(
+    cfg: &ExperimentConfig,
+    filtered: &'a Suite,
+    corpus: Option<&'a RefCorpus>,
+) -> (
+    Vec<(&'static crate::agents::Persona, &'a crate::workloads::Problem, Option<&'a crate::agents::Program>)>,
+    Vec<JobKey>,
+) {
+    let spec = cfg.spec();
+    let jobs = job_list(cfg, filtered, corpus);
+    let scope = KeyScope::new(cfg, &spec);
+    let keys = jobs.iter().map(|(p, pr, r)| scope.key(p, pr, *r)).collect();
+    (jobs, keys)
+}
+
+/// Execute shard `shard_id` of an `shards`-way campaign against a
+/// shared disk-backed store.  Claims chunks one at a time (work
+/// stealing), consults the store before computing, and journals every
+/// completion by global job index.  Always resumes its own journal:
+/// chunk claims persist across crashes, so a rerun that started a
+/// fresh journal would skip its claimed chunks and lose their results.
+pub fn run_shard(
+    store: &Store,
+    suite: &Suite,
+    corpus: Option<&RefCorpus>,
+    cfg: &ExperimentConfig,
+    shards: usize,
+    shard_id: usize,
+) -> Result<ShardReport> {
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+    anyhow::ensure!(shard_id < shards, "--shard-id {shard_id} out of range for {shards} shard(s)");
+    let root = store
+        .shared_dir()
+        .context("sharded execution needs a disk-backed store (--cache-dir)")?
+        .to_path_buf();
+    let spec = cfg.spec();
+    let filtered = suite.supported_on(&spec);
+    let (jobs, keys) = shard_keys(cfg, &filtered, corpus);
+    let digest = campaign_digest(&cfg.name, &keys);
+    let owner = format!("shard{shard_id}of{shards}");
+    let _shard_span = obs::span("dist.shard");
+
+    // liveness lease for gc protection, pid-suffixed so a crashed
+    // predecessor's stale file never blocks this run (it only widens
+    // the gc floor, which is the safe direction)
+    let _lease = match Lease::acquire(
+        &root,
+        &format!("{digest:016x}-shard{shard_id}-{}", std::process::id()),
+        &owner,
+    ) {
+        Ok(l) => Some(l),
+        Err(e) => {
+            crate::kf_warn!("[dist] could not take the shard lease ({e:#}); gc protection off");
+            None
+        }
+    };
+
+    let journal_path = store
+        .shard_journal_path(&cfg.name, &keys, shards, shard_id)
+        .context("store has no journal directory")?;
+    let (journal, restored_recs) = Journal::resume(&journal_path, &cfg.name, &keys)?;
+    let mut done = vec![false; jobs.len()];
+    let restored = restored_recs.len();
+    for (i, r) in restored_recs {
+        store.record_resumed();
+        store.put(&keys[i], &r); // backfill objects a gc may have taken
+        done[i] = true;
+    }
+
+    let chunks = plan_chunks(jobs.len(), shards);
+    let workers = cfg.workers.max(1);
+    let mut processed = vec![false; chunks.len()];
+    let mut chunks_owned = 0usize;
+    let mut store_hits = 0usize;
+    let mut computed = 0usize;
+    let bytes_written = AtomicU64::new(0);
+
+    loop {
+        // claim the next chunk that is unclaimed, or was claimed by a
+        // previous (crashed) run of this same shard
+        let mut mine = None;
+        for ci in 0..chunks.len() {
+            if processed[ci] {
+                continue;
+            }
+            let name = format!("{digest:016x}-c{ci:04}");
+            let ours = match lease::claim(&root, &name, &owner) {
+                Ok(true) => true,
+                Ok(false) => lease::claim_owner(&root, &name).as_deref() == Some(owner.as_str()),
+                Err(e) => {
+                    crate::kf_warn!("[dist] chunk claim failed ({e:#}); skipping chunk {ci}");
+                    false
+                }
+            };
+            if ours {
+                mine = Some(ci);
+                break;
+            }
+        }
+        let Some(ci) = mine else { break };
+        processed[ci] = true;
+        chunks_owned += 1;
+        obs::counter("dist.chunks_claimed", 1);
+
+        // store consult first: hits are backfilled into the shard
+        // journal so merge sees a complete record without the store
+        let mut pending = Vec::new();
+        for i in chunks[ci].clone() {
+            if done[i] {
+                continue;
+            }
+            if let Some((r, _bytes)) = store.get(&keys[i]) {
+                store_hits += 1;
+                done[i] = true;
+                if let Err(e) = journal.append(i, &keys[i], &r) {
+                    crate::kf_warn!("[dist] journal backfill failed for job {i} ({e:#})");
+                }
+            } else {
+                pending.push(i);
+            }
+        }
+        let _chunk_span = obs::span("dist.chunk");
+        let results = run_sparse(workers, &pending, |i| {
+            let (persona, problem, reference) = jobs[i];
+            let _lane = obs::job_lane(spec.name, persona.name, &problem.id);
+            let r = run_task(cfg, &spec, persona, problem, reference);
+            bytes_written.fetch_add(store.put(&keys[i], &r), Ordering::Relaxed);
+            if let Err(e) = journal.append(i, &keys[i], &r) {
+                crate::kf_warn!("[dist] journal append failed for job {i} ({e:#})");
+            }
+            r
+        });
+        computed += results.len();
+        for i in pending {
+            done[i] = true;
+        }
+    }
+
+    Ok(ShardReport {
+        shard_id,
+        shards,
+        jobs_total: jobs.len(),
+        chunks_owned,
+        restored,
+        store_hits,
+        computed,
+        bytes_written: bytes_written.into_inner(),
+    })
+}
+
+/// Fold every shard journal of an `shards`-way campaign back into one
+/// [`CampaignResult`], first-wins by global job index.  Errors if no
+/// shard journal exists or any job is missing (a shard died and was
+/// never re-run) — re-running the dead shard completes the set.
+///
+/// The merged `results` are bit-identical to the 1-process run's: each
+/// record was produced by [`run_task`] on the same key, and the fold
+/// only rearranges complete records into index order.  Cache counters
+/// are *not* comparable to a live run's (every job here is restored),
+/// so `cache.resumed` carries the job count and the rest stay zero.
+pub fn merge_shards(
+    store: &Store,
+    suite: &Suite,
+    corpus: Option<&RefCorpus>,
+    cfg: &ExperimentConfig,
+    shards: usize,
+) -> Result<CampaignResult> {
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+    let spec = cfg.spec();
+    let filtered = suite.supported_on(&spec);
+    let (jobs, keys) = shard_keys(cfg, &filtered, corpus);
+    let _merge_span = obs::span("dist.merge");
+    let mut slots: Vec<Option<TaskResult>> = vec![None; jobs.len()];
+    let mut journals_found = 0usize;
+    for shard_id in 0..shards {
+        let path = store
+            .shard_journal_path(&cfg.name, &keys, shards, shard_id)
+            .context("store has no journal directory")?;
+        if !path.exists() {
+            continue;
+        }
+        let (_j, restored) = Journal::resume(&path, &cfg.name, &keys)?;
+        journals_found += 1;
+        for (i, r) in restored {
+            // duplicates across shards are bit-identical by
+            // construction (pure function of the key); first wins
+            if slots[i].is_none() {
+                slots[i] = Some(r);
+            }
+        }
+    }
+    anyhow::ensure!(
+        journals_found > 0,
+        "no shard journals found for campaign {:?} ({} shard(s)); run the shards first",
+        cfg.name,
+        shards
+    );
+    let missing = slots.iter().filter(|s| s.is_none()).count();
+    anyhow::ensure!(
+        missing == 0,
+        "{missing} of {} job(s) missing from {journals_found} shard journal(s); re-run the incomplete shard(s)",
+        jobs.len()
+    );
+    let results: Vec<TaskResult> = slots.into_iter().map(|s| s.expect("checked")).collect();
+    let cache = CacheStats { resumed: results.len() as u64, ..Default::default() };
+    Ok(CampaignResult { config_name: cfg.name.clone(), results, cache })
+}
+
+/// Verify two campaign results are bit-identical: same job order,
+/// every `TaskResult` field equal, f64s compared by bit pattern.  This
+/// is the merge/verify phase's proof obligation (`kforge dist merge
+/// --verify` runs it against a store-answered 1-process run).
+pub fn assert_bit_identical(a: &CampaignResult, b: &CampaignResult) -> Result<()> {
+    anyhow::ensure!(
+        a.results.len() == b.results.len(),
+        "job count mismatch: {} vs {}",
+        a.results.len(),
+        b.results.len()
+    );
+    for (i, (x, y)) in a.results.iter().zip(&b.results).enumerate() {
+        let ok = x.problem_id == y.problem_id
+            && x.level == y.level
+            && x.persona == y.persona
+            && x.state_history == y.state_history
+            && x.outcome.correct == y.outcome.correct
+            && x.outcome.speedup.to_bits() == y.outcome.speedup.to_bits()
+            && x.best_iteration == y.best_iteration
+            && x.baseline_s.to_bits() == y.baseline_s.to_bits()
+            && x.best_candidate_s.map(f64::to_bits) == y.best_candidate_s.map(f64::to_bits);
+        anyhow::ensure!(ok, "job {i} ({}) differs between runs", x.problem_id);
+    }
+    Ok(())
+}
+
+/// In-process chunk-claiming execution pool: the shard discipline with
+/// an atomic cursor standing in for claim files.  Results come back in
+/// job order; a panicking job is re-raised naming the smallest failing
+/// job index, mirroring [`crate::coordinator::worker::run_jobs`].
+/// Pool width never changes results — jobs are independent and order
+/// is restored — which is what lets serve's `--exec-shards` keep the
+/// scenario bit-identity guarantee.
+pub fn exec_pool<J, R, F>(shards: usize, jobs: &[J], f: F) -> Vec<R>
+where
+    J: Sync,
+    R: Send,
+    F: Fn(&J) -> R + Sync,
+{
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let chunks = plan_chunks(jobs.len(), shards);
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<std::thread::Result<R>>>> =
+        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+    let pool = shards.clamp(1, chunks.len());
+    std::thread::scope(|scope| {
+        for _ in 0..pool {
+            let (next, results, f, chunks) = (&next, &results, &f, &chunks);
+            let tid = obs::alloc_tid();
+            scope.spawn(move || {
+                obs::set_tid(tid);
+                loop {
+                    let ci = next.fetch_add(1, Ordering::Relaxed);
+                    if ci >= chunks.len() {
+                        break;
+                    }
+                    for i in chunks[ci].clone() {
+                        let r = catch_unwind(AssertUnwindSafe(|| f(&jobs[i])));
+                        *results[i].lock().unwrap() = Some(r);
+                    }
+                }
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(jobs.len());
+    for (i, slot) in results.into_iter().enumerate() {
+        match slot.into_inner().unwrap() {
+            Some(Ok(r)) => out.push(r),
+            Some(Err(payload)) => {
+                panic!("job {i} panicked: {}", worker::payload_text(&*payload))
+            }
+            None => unreachable!("job {i} slot empty after scope join"),
+        }
+    }
+    out
+}
+
+/// Fork `shards` worker subprocesses of the current binary, each
+/// running `run --shards N --shard-id K` plus `forward`ed flags, and
+/// wait for all of them.  Returns the per-shard exit successes; the
+/// caller (the `dist spawn` CLI verb) merges afterwards.
+pub fn spawn_shards(shards: usize, forward: &[String]) -> Result<Vec<bool>> {
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+    let exe = std::env::current_exe().context("locating the kforge binary")?;
+    let mut children = Vec::with_capacity(shards);
+    for shard_id in 0..shards {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("run")
+            .arg("--shards")
+            .arg(shards.to_string())
+            .arg("--shard-id")
+            .arg(shard_id.to_string())
+            .args(forward);
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning shard {shard_id}/{shards}"))?;
+        children.push(child);
+    }
+    let mut ok = Vec::with_capacity(shards);
+    for (shard_id, mut child) in children.into_iter().enumerate() {
+        let status = child
+            .wait()
+            .with_context(|| format!("waiting for shard {shard_id}/{shards}"))?;
+        if !status.success() {
+            crate::kf_error!("[dist] shard {shard_id}/{shards} exited with {status}");
+        }
+        ok.push(status.success());
+    }
+    Ok(ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_plan_is_balanced_and_covers_exactly() {
+        for (n, shards) in [(0usize, 4usize), (1, 4), (7, 2), (18, 4), (258, 4), (5, 16)] {
+            let chunks = plan_chunks(n, shards);
+            if n == 0 {
+                assert!(chunks.is_empty());
+                continue;
+            }
+            assert!(chunks.len() <= n, "more chunks than jobs for n={n}");
+            assert!(chunks.len() <= shards * CHUNKS_PER_SHARD);
+            // exact, gapless, ordered coverage
+            let mut cursor = 0;
+            for c in &chunks {
+                assert_eq!(c.start, cursor, "gap before chunk in n={n} shards={shards}");
+                assert!(c.end > c.start, "empty chunk");
+                cursor = c.end;
+            }
+            assert_eq!(cursor, n);
+            // balanced: sizes differ by at most one
+            let sizes: Vec<usize> = chunks.iter().map(|c| c.end - c.start).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced plan for n={n} shards={shards}: {sizes:?}");
+            // the plan is shared: every shard computes the same one
+            assert_eq!(chunks, plan_chunks(n, shards));
+        }
+    }
+
+    #[test]
+    fn exec_pool_preserves_order_across_widths() {
+        let jobs: Vec<usize> = (0..97).collect();
+        let serial = exec_pool(1, &jobs, |&j| j * 3 + 1);
+        assert_eq!(serial, (0..97).map(|j| j * 3 + 1).collect::<Vec<_>>());
+        for shards in [2usize, 4, 16] {
+            assert_eq!(exec_pool(shards, &jobs, |&j| j * 3 + 1), serial, "width {shards}");
+        }
+        let empty: Vec<usize> = exec_pool(4, &[] as &[usize], |&j| j);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn exec_pool_runs_every_job_exactly_once() {
+        let count = AtomicUsize::new(0);
+        let jobs: Vec<usize> = (0..200).collect();
+        exec_pool(7, &jobs, |_| count.fetch_add(1, Ordering::Relaxed));
+        assert_eq!(count.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    #[should_panic(expected = "job 5 panicked: boom 5")]
+    fn exec_pool_reraises_naming_the_job() {
+        let jobs: Vec<usize> = (0..8).collect();
+        exec_pool(3, &jobs, |&j| {
+            if j == 5 {
+                panic!("boom {j}");
+            }
+            j
+        });
+    }
+}

@@ -60,6 +60,11 @@
 //!   (bless/check with a cell-level differ), per-platform census
 //!   artifacts, and the entry points the differential KIR fuzzer and
 //!   synthetic workload suites hang off.
+//! - [`dist`] — distributed campaigns: a shard planner with
+//!   work-stealing chunk claims over the shared cache dir, per-shard
+//!   crash-resumable journals, a merge/verify phase provably
+//!   bit-identical to the 1-process run, and cross-problem schedule
+//!   transfer through the store's family index.
 //! - [`serve`] — the production serving tier: bounded two-lane request
 //!   queue, admission control with load-shedding and deadlines, a
 //!   seeded bursty load generator, the deterministic virtual-time
@@ -87,6 +92,7 @@ pub mod runtime;
 pub mod search;
 pub mod coordinator;
 pub mod store;
+pub mod dist;
 pub mod metrics;
 pub mod harness;
 pub mod conformance;

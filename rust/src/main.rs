@@ -5,9 +5,22 @@
 //! kforge run --model <persona> [--problem <id>] [--platform <name>]
 //!            [--baseline <eager|compile|autotuned>] [--level <L1..L4>]
 //!            [--sample N] [--cache-dir DIR] [--resume] [--no-cache]
+//!            [--shards N --shard-id K]
 //!                                   # one verbose job, or (without
 //!                                   # --problem) a resumable campaign,
-//!                                   # optionally filtered to one level
+//!                                   # optionally filtered to one level;
+//!                                   # with --shards, run one shard of
+//!                                   # an N-way campaign over the
+//!                                   # shared --cache-dir
+//! kforge dist <spawn|merge> --shards N --cache-dir DIR
+//!             [--model <persona>] [--platform <name>] [--baseline B]
+//!             [--level <L1..L4>] [--sample N] [--verify]
+//!                                   # spawn: fork N shard worker
+//!                                   # processes, wait, merge their
+//!                                   # journals; merge: fold existing
+//!                                   # shard journals (--verify proves
+//!                                   # the fold bit-identical to a
+//!                                   # 1-process run)
 //! kforge model <import|gen> [--nnef PATH] [--seed S] [--blocks N]
 //!              [--attention] [--global]
 //!                                   # whole-model workloads: import an
@@ -16,7 +29,7 @@
 //!                                   # and verify pulsed == whole-graph
 //! kforge tune [--platform <name>] [--strategy <beam|evolve>]
 //!             [--sample N | --synthetic N] [--budget N] [--seed S]
-//!             [--workers N] [--no-evidence] [--out DIR]
+//!             [--workers N] [--no-evidence] [--no-transfer] [--out DIR]
 //!             [--cache-dir DIR] [--no-cache]
 //!                                   # schedule autotuner: population
 //!                                   # search per problem, store-cached;
@@ -36,7 +49,8 @@
 //!              [--queue-cap N] [--shed-depth N] [--deadline-ms MS]
 //!              [--warm K] [--gc-max-bytes N] [--json PATH]
 //!              [--streaming-fraction F] [--chunk-rows N]
-//!              [--chunk-budget-ms MS] [--cache-dir DIR] [--no-cache]
+//!              [--chunk-budget-ms MS] [--exec-shards N]
+//!              [--cache-dir DIR] [--no-cache]
 //!                                   # deterministic bursty load test:
 //!                                   # admission control, deadlines and
 //!                                   # cache warming over the shared
@@ -158,7 +172,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some((c, rest)) => (c.as_str(), rest),
         None => {
             println!("kforge — program synthesis for diverse AI hardware accelerators");
-            println!("commands: suite | personas | platforms | run | model | tune | bench | conformance | cache | serve | trace");
+            println!("commands: suite | personas | platforms | run | dist | model | tune | bench | conformance | cache | serve | trace");
             println!("registered platforms: {}", registry().describe());
             println!(
                 "search strategies: {}",
@@ -182,10 +196,18 @@ fn dispatch(args: &[String]) -> Result<()> {
         "run" => FlagSpec {
             value_flags: &[
                 "--problem", "--model", "--platform", "--baseline", "--level", "--sample",
-                "--cache-dir", "--trace",
+                "--cache-dir", "--trace", "--shards", "--shard-id",
             ],
             bool_flags: &["--resume", "--no-cache"],
             max_positionals: 0,
+        },
+        "dist" => FlagSpec {
+            value_flags: &[
+                "--shards", "--model", "--platform", "--baseline", "--level", "--sample",
+                "--cache-dir",
+            ],
+            bool_flags: &["--verify", "--resume", "--no-cache"],
+            max_positionals: 1,
         },
         "model" => FlagSpec {
             value_flags: &["--nnef", "--seed", "--blocks"],
@@ -197,7 +219,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 "--platform", "--strategy", "--sample", "--synthetic", "--budget", "--seed",
                 "--workers", "--out", "--cache-dir", "--trace",
             ],
-            bool_flags: &["--no-cache", "--no-evidence"],
+            bool_flags: &["--no-cache", "--no-evidence", "--no-transfer"],
             max_positionals: 0,
         },
         "bench" => FlagSpec {
@@ -219,8 +241,8 @@ fn dispatch(args: &[String]) -> Result<()> {
             value_flags: &[
                 "--artifacts", "--requests", "--warmup", "--workers", "--seed", "--queue-cap",
                 "--shed-depth", "--deadline-ms", "--warm", "--gc-max-bytes", "--json",
-                "--streaming-fraction", "--chunk-rows", "--chunk-budget-ms", "--cache-dir",
-                "--trace",
+                "--streaming-fraction", "--chunk-rows", "--chunk-budget-ms", "--exec-shards",
+                "--cache-dir", "--trace",
             ],
             bool_flags: &["--synthetic", "--no-cache"],
             max_positionals: 0,
@@ -231,11 +253,11 @@ fn dispatch(args: &[String]) -> Result<()> {
             max_positionals: 2,
         },
         other => bail!(
-            "unknown command {other:?}; try: suite, personas, platforms, run, model, tune, bench, conformance, cache, serve, trace"
+            "unknown command {other:?}; try: suite, personas, platforms, run, dist, model, tune, bench, conformance, cache, serve, trace"
         ),
     };
     cliflags::validate(cmd, rest, &spec)?;
-    if matches!(cmd, "run" | "tune" | "bench" | "conformance" | "serve") {
+    if matches!(cmd, "run" | "dist" | "tune" | "bench" | "conformance" | "serve") {
         configure_store(args)?;
     }
     // arm the self-profiling tracer before any work runs; the export
@@ -255,6 +277,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "personas" => cmd_personas(),
         "platforms" => cmd_platforms(args),
         "run" => cmd_run(args),
+        "dist" => cmd_dist(args),
         "model" => cmd_model(args),
         "tune" => cmd_tune(args),
         "bench" => cmd_bench(args),
@@ -396,6 +419,31 @@ fn cmd_run(args: &[String]) -> Result<()> {
                 ),
             };
         }
+        if let Some(n) = flag_value(args, "--shards") {
+            // shard mode: execute one slice of the N-way campaign
+            // against the shared disk store; `kforge dist spawn` forks
+            // one of these per shard and merges afterwards
+            let shards: usize = n.parse().context("--shards N")?;
+            let shard_id: usize = flag_value(args, "--shard-id")
+                .context("--shards needs --shard-id K (or `kforge dist spawn` to drive all K)")?
+                .parse()
+                .context("--shard-id K")?;
+            println!(
+                "campaign {}: shard {shard_id}/{shards}, persona {} on {}",
+                cfg.name,
+                persona.name,
+                platform.name()
+            );
+            let t0 = std::time::Instant::now();
+            let report =
+                kforge::dist::run_shard(store::global(), &suite, None, &cfg, shards, shard_id)?;
+            println!("{}", report.summary());
+            eprintln!("[shard completed in {:.1}s]", t0.elapsed().as_secs_f64());
+            return Ok(());
+        }
+        if has_flag(args, "--shard-id") {
+            bail!("--shard-id needs --shards N");
+        }
         let supported = suite.supported_on(platform.spec()).len();
         println!(
             "campaign {}: persona {} over {supported} of {} problems on {}",
@@ -426,6 +474,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
     }
     if has_flag(args, "--level") {
         bail!("--level only applies to campaign mode; drop --problem to run a filtered campaign");
+    }
+    if has_flag(args, "--shards") || has_flag(args, "--shard-id") {
+        bail!("--shards only applies to campaign mode; drop --problem to shard a campaign");
     }
     let suite = Suite::full();
     let problem = suite
@@ -466,6 +517,121 @@ fn cmd_run(args: &[String]) -> Result<()> {
         None => println!("no correct candidate produced"),
     }
     println!("cache: {}", campaign.cache);
+    Ok(())
+}
+
+/// `kforge dist <spawn|merge>` — the multi-process campaign driver.
+///
+/// `spawn` forks N `kforge run --shards N --shard-id K` workers of
+/// this binary against one shared `--cache-dir` (work-stealing chunk
+/// claims stop any two from computing the same job), waits for all of
+/// them, then folds their shard journals into one campaign result and
+/// prints the same `jobs:` / `iteration states:` summary lines a
+/// 1-process `kforge run` prints — CI's dist-smoke job diffs exactly
+/// those lines between the two paths.  `merge` folds existing shard
+/// journals without running anything (e.g. after re-running a crashed
+/// shard); `--verify` additionally runs the same campaign 1-process
+/// against the same store and proves the merged fold bit-identical.
+fn cmd_dist(args: &[String]) -> Result<()> {
+    use kforge::coordinator::BaselineKind;
+    use kforge::dist;
+    let action = first_positional(
+        args,
+        &["--shards", "--model", "--platform", "--baseline", "--level", "--sample", "--cache-dir"],
+    )
+    .context(
+        "usage: kforge dist <spawn|merge> --shards N --cache-dir DIR [--model P] \
+         [--platform NAME] [--baseline B] [--level L] [--sample N] [--verify]",
+    )?;
+    if !matches!(action, "spawn" | "merge") {
+        bail!("unknown dist action {action:?}; try: spawn, merge");
+    }
+    let shards: usize = flag_value(args, "--shards")
+        .context("dist needs --shards N")?
+        .parse()
+        .context("--shards N")?;
+    if shards == 0 {
+        bail!("--shards must be at least 1");
+    }
+    let store = store::global();
+    if store.shared_dir().is_none() {
+        bail!("dist needs a disk-backed store shared across shard processes; pass --cache-dir DIR");
+    }
+    // build the exact campaign a worker's `run` builds from the same
+    // flags: same config name, key list and job order, so the shard
+    // journals and the merge fold address one index space
+    let model = flag_value(args, "--model").unwrap_or("openai-gpt-5");
+    let platform = platform_arg(args)?;
+    let persona = by_name(model).with_context(|| format!("unknown persona {model}"))?;
+    let mut cfg = ExperimentConfig::iterative(platform.clone(), vec![persona]);
+    cfg.use_profiling = true;
+    cfg.baseline = match flag_value(args, "--baseline").unwrap_or("eager") {
+        "eager" => BaselineKind::Eager,
+        "compile" | "torch-compile" => BaselineKind::TorchCompile,
+        "autotuned" => BaselineKind::Autotuned,
+        other => bail!("unknown baseline {other:?}; try: eager, compile, autotuned"),
+    };
+    let mut suite = match flag_value(args, "--sample") {
+        Some(n) => Suite::sample(n.parse().context("--sample N")?),
+        None => Suite::full(),
+    };
+    if let Some(tag) = flag_value(args, "--level") {
+        let level = kforge::workloads::Level::from_tag(tag)
+            .with_context(|| format!("unknown level {tag:?}; try: L1, L2, L3, L4"))?;
+        suite = Suite {
+            problems: std::sync::Arc::new(suite.by_level(level).into_iter().cloned().collect()),
+        };
+    }
+    if action == "spawn" {
+        // forward every campaign-shaping flag (plus the store
+        // location) to the workers verbatim
+        let mut forward: Vec<String> = Vec::new();
+        for name in ["--model", "--platform", "--baseline", "--level", "--sample", "--cache-dir"] {
+            if let Some(v) = flag_value(args, name) {
+                forward.push(name.to_string());
+                forward.push(v.to_string());
+            }
+        }
+        println!(
+            "dist: spawning {shards} shard(s) of campaign {} (persona {} on {})",
+            cfg.name,
+            persona.name,
+            platform.name()
+        );
+        let t0 = std::time::Instant::now();
+        let ok = dist::spawn_shards(shards, &forward)?;
+        let failed = ok.iter().filter(|s| !**s).count();
+        if failed > 0 {
+            bail!(
+                "{failed} of {shards} shard(s) failed; re-run them, then `kforge dist merge --shards {shards}`"
+            );
+        }
+        eprintln!("[{shards} shard(s) completed in {:.1}s]", t0.elapsed().as_secs_f64());
+    }
+    let campaign = dist::merge_shards(store, &suite, None, &cfg, shards)?;
+    let outcomes: Vec<_> = campaign.results.iter().map(|r| r.outcome).collect();
+    // byte-for-byte the campaign summary `kforge run` prints, so the
+    // two paths diff clean on these lines
+    println!(
+        "jobs: {}  correct: {:.1}%  fast_1: {:.1}%",
+        campaign.results.len(),
+        kforge::metrics::correctness_rate(&outcomes) * 100.0,
+        kforge::metrics::fast_p(&outcomes, 1.0) * 100.0
+    );
+    let census = campaign.state_census();
+    let census: Vec<String> = census.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    println!("iteration states: {}", census.join(" "));
+    println!("cache: {}", campaign.cache);
+    if has_flag(args, "--verify") {
+        // the proof obligation: a store-answered 1-process run of the
+        // same campaign is bit-identical to the merged fold
+        let solo = kforge::coordinator::run_campaign_with(store, &suite, None, &cfg);
+        dist::assert_bit_identical(&campaign, &solo)?;
+        println!(
+            "verify: merged result bit-identical to the 1-process run ({} jobs)",
+            solo.results.len()
+        );
+    }
     Ok(())
 }
 
@@ -568,6 +734,9 @@ fn cmd_tune(args: &[String]) -> Result<()> {
     if has_flag(args, "--no-evidence") {
         cfg.use_evidence = false;
     }
+    if has_flag(args, "--no-transfer") {
+        cfg.use_transfer = false;
+    }
     let suite = match (flag_value(args, "--sample"), flag_value(args, "--synthetic")) {
         (Some(_), Some(_)) => bail!("--sample and --synthetic are mutually exclusive"),
         (Some(n), None) => Suite::sample(n.parse().context("--sample N")?),
@@ -575,13 +744,14 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         (None, None) => Suite::sample(4),
     };
     println!(
-        "tune: strategy {} on {} over {} problems (budget {}/problem, seed {:#x}, evidence {})",
+        "tune: strategy {} on {} over {} problems (budget {}/problem, seed {:#x}, evidence {}, transfer {})",
         cfg.strategy.name(),
         platform.name(),
         suite.supported_on(platform.spec()).len(),
         cfg.budget,
         cfg.seed,
-        cfg.use_evidence
+        cfg.use_evidence,
+        cfg.use_transfer
     );
     let t0 = std::time::Instant::now();
     let report = tune_suite(&cfg, &suite);
@@ -693,8 +863,10 @@ fn measure_trace_overhead() -> f64 {
 /// process cache counters, a geomean-speedup block per (platform,
 /// persona) from a bounded Quick campaign through the shared store —
 /// so repeated emissions accumulate a comparable perf trajectory —
-/// and a `level4` block: per-whole-model geomean speedup plus the
-/// deterministic streaming chunk p99 from the virtual scenario phase.
+/// a `level4` block (per-whole-model geomean speedup plus the
+/// deterministic streaming chunk p99 from the virtual scenario phase),
+/// and a `transfer` block: evaluations-to-frontier on one schedule-
+/// family mate tuned cold vs seeded with its donor's tuned schedule.
 fn bench_json(
     target: &str,
     scale: Scale,
@@ -799,6 +971,57 @@ fn bench_json(
                 .set("chunk_p99_ms", chunk_p99)
                 .set("chunk_budget_ms", l4_scenario.chunk_budget_ms),
         );
+    // cross-problem schedule-transfer block: the first family (see
+    // store::key::family_fingerprint) with two supported members on
+    // the default platform; the second member is tuned cold and then
+    // seeded with the first's tuned schedule.  Store-free and seeded,
+    // so the figures are bit-stable across emissions.
+    let transfer = {
+        use kforge::search::frontier::FRONTIER_BUDGET;
+        use kforge::search::{tune_problem, tune_problem_seeded, TuneConfig};
+        use kforge::store::key::family_fingerprint;
+        let platform = registry().platforms()[0].clone();
+        let spec = platform.spec();
+        let full = Suite::full();
+        let mut first: std::collections::BTreeMap<u64, &kforge::workloads::Problem> =
+            std::collections::BTreeMap::new();
+        let mut pair = None;
+        for p in full.problems.iter().filter(|p| p.supported_on(spec)) {
+            let fam = family_fingerprint(&p.perf_graph);
+            match first.get(&fam) {
+                Some(donor) => {
+                    pair = Some((fam, *donor, p));
+                    break;
+                }
+                None => {
+                    first.insert(fam, p);
+                }
+            }
+        }
+        match pair {
+            None => Json::Null,
+            Some((fam, donor_p, mate)) => {
+                let mut cfg = TuneConfig::new(platform.clone());
+                cfg.budget = FRONTIER_BUDGET;
+                let donor = tune_problem(&cfg, donor_p);
+                let cold = tune_problem(&cfg, mate);
+                let seeded =
+                    tune_problem_seeded(&cfg, mate, std::slice::from_ref(&donor.schedule));
+                Json::obj()
+                    .set("platform", platform.name())
+                    .set("family", format!("{fam:016x}"))
+                    .set("donor", donor_p.id.as_str())
+                    .set("mate", mate.id.as_str())
+                    .set("cold_evals_to_frontier", cold.evals_to_best as i64)
+                    .set("seeded_evals_to_frontier", seeded.evals_to_best as i64)
+                    .set(
+                        "saved",
+                        cold.evals_to_best as i64 - seeded.evals_to_best as i64,
+                    )
+                    .set("seeded_le_naive", seeded.tuned_s <= cold.naive_s)
+            }
+        }
+    };
     let snap = store::global().snapshot();
     let cache = Json::obj()
         .set("hits", snap.hits as i64)
@@ -821,6 +1044,7 @@ fn bench_json(
         .set("reports", Json::Arr(report_list))
         .set("speedups", speedups)
         .set("level4", level4)
+        .set("transfer", transfer)
         .set("cache", cache)
         .to_pretty()
 }
@@ -996,6 +1220,13 @@ fn cmd_serve_synthetic(args: &[String], requests: usize) -> Result<()> {
     }
     if let Some(v) = flag_value(args, "--chunk-budget-ms") {
         cfg.chunk_budget_ms = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--exec-shards") {
+        let shards: usize = v.parse()?;
+        if shards == 0 {
+            bail!("--exec-shards must be at least 1");
+        }
+        cfg.exec_shards = Some(shards);
     }
     if cfg.queue_capacity == 0 {
         bail!("--queue-cap must be at least 1");

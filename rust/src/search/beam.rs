@@ -40,7 +40,7 @@ impl SearchStrategy for BeamStrategy {
         let spec = oracle.spec();
         let width = self.width.max(1);
         let mut visited = Vec::new();
-        let seeds = seed_points(spec);
+        let seeds = seed_points(oracle);
         // membership-only set (order never read), so determinism holds
         let mut seen: BTreeSet<String> = seeds.iter().map(|s| s.canon()).collect();
         let mut beam = score_batch(oracle, budget, seeds, &mut visited);

@@ -51,7 +51,7 @@ impl SearchStrategy for EvolveStrategy {
         let elite = self.elite.clamp(1, population - 1);
         let mut visited = Vec::new();
 
-        let mut init = seed_points(spec);
+        let mut init = seed_points(oracle);
         // global membership set: a schedule scored in any generation is
         // never re-priced, so the whole budget buys new points
         // (membership-only — order never read, determinism holds)

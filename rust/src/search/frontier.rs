@@ -10,11 +10,11 @@
 //! changes the artifact set and fails conformance until the new
 //! frontier is reviewed and blessed, by design.
 
-use super::tune::{tune_suite, TuneConfig, TuneReport};
+use super::tune::{tune_problem, tune_problem_seeded, tune_suite, TuneConfig, TuneReport};
 use super::strategies;
 use crate::harness::{render, Artifact, Scale};
 use crate::platform::PlatformRef;
-use crate::workloads::Suite;
+use crate::workloads::{Problem, Suite};
 
 /// Render one tune report as the fixed-format table plus its summary
 /// lines — the single source both the `kforge tune` CLI and the
@@ -84,7 +84,68 @@ pub fn render_frontier(platform: &PlatformRef, scale: Scale) -> String {
         ));
         out.push('\n');
     }
+    out.push_str(&render_transfer(platform));
     out
+}
+
+/// The cross-problem transfer measurement: for the first schedule
+/// family (see [`crate::store::key::family_fingerprint`]) with at
+/// least two platform-supported members, tune the first member cold
+/// and re-tune each mate twice — once cold, once seeded with the
+/// donor's tuned schedule — reporting evaluations-to-frontier both
+/// ways.  Store-free and pure, so the section is byte-deterministic
+/// like the tables above it; the `<=naive` column pins that seeding
+/// never worsens the tuned frontier.
+fn render_transfer(platform: &PlatformRef) -> String {
+    use crate::store::key::family_fingerprint;
+    let spec = platform.spec();
+    let full = Suite::full();
+    let mut seen: std::collections::BTreeMap<u64, Vec<&Problem>> = std::collections::BTreeMap::new();
+    // suite order decides both the chosen family (first to reach two
+    // members) and the donor (its first member) — fully deterministic
+    let mut chosen: Option<u64> = None;
+    for p in full.problems.iter().filter(|p| p.supported_on(spec)) {
+        let fam = family_fingerprint(&p.perf_graph);
+        let entry = seen.entry(fam).or_default();
+        entry.push(p);
+        if chosen.is_none() && entry.len() == 2 {
+            chosen = Some(fam);
+        }
+    }
+    let Some(fam) = chosen else {
+        return "transfer: no schedule-family mates on this platform\n".to_string();
+    };
+    let members = &seen[&fam];
+    let members = &members[..members.len().min(3)];
+    let mut cfg = TuneConfig::new(platform.clone());
+    cfg.budget = FRONTIER_BUDGET;
+    let donor = tune_problem(&cfg, members[0]);
+    let mut rows = Vec::new();
+    let mut saved_total: i64 = 0;
+    for p in &members[1..] {
+        let cold = tune_problem(&cfg, p);
+        let seeded = tune_problem_seeded(&cfg, p, std::slice::from_ref(&donor.schedule));
+        let saved = cold.evals_to_best as i64 - seeded.evals_to_best as i64;
+        saved_total += saved;
+        rows.push(vec![
+            p.id.clone(),
+            cold.evals_to_best.to_string(),
+            seeded.evals_to_best.to_string(),
+            format!("{saved:+}"),
+            format!("{:.4}", cold.tuned_s * 1e3),
+            format!("{:.4}", seeded.tuned_s * 1e3),
+            if seeded.tuned_s <= cold.naive_s { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    let table = render::table(
+        &format!("transfer: family {fam:016x}, donor {}", members[0].id),
+        &["problem", "cold evals-to-frontier", "seeded", "saved", "cold tuned ms", "seeded tuned ms", "<=naive"],
+        &rows,
+    );
+    format!(
+        "{table}transfer evaluations-to-frontier saved: {saved_total:+} across {} mate(s)\n",
+        rows.len()
+    )
 }
 
 #[cfg(test)]
@@ -104,9 +165,28 @@ mod tests {
         for s in crate::search::strategies() {
             assert!(a.text.contains(&format!("strategy: {}", s.name())), "{}", a.text);
         }
+        // the transfer measurement section rides along
+        assert!(a.text.contains("transfer"), "{}", a.text);
+        assert!(a.text.contains("evaluations-to-frontier saved:"), "{}", a.text);
         // byte determinism (the golden differ's precondition)
         let b = artifact(&platform, Scale::Quick(2));
         assert_eq!(a.text.as_bytes(), b.text.as_bytes());
+    }
+
+    #[test]
+    fn transfer_section_pins_le_naive_on_every_mate() {
+        let text = render_transfer(&by_name("cuda").unwrap());
+        assert!(text.contains("transfer: family"), "{text}");
+        // every mate row's <=naive verdict (last column) must be yes:
+        // transfer seeding is never allowed to worsen the frontier
+        let mut mates = 0;
+        for line in text.lines() {
+            if line.starts_with("l1_") || line.starts_with("l2_") || line.starts_with("l3_") {
+                mates += 1;
+                assert!(line.trim_end().ends_with("yes"), "{line}");
+            }
+        }
+        assert!(mates >= 1, "no mate rows rendered:\n{text}");
     }
 
     #[test]

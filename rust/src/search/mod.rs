@@ -49,9 +49,11 @@ pub use beam::BeamStrategy;
 pub use budget::Budget;
 pub use evolve::EvolveStrategy;
 pub use oracle::{price, reprice, CostOracle, PricedPlan};
-pub use tune::{tune_problem, tune_suite, tune_suite_with, TuneConfig, TuneOutcome, TuneReport};
+pub use tune::{
+    tune_problem, tune_problem_seeded, tune_suite, tune_suite_with, TuneConfig, TuneOutcome,
+    TuneReport,
+};
 
-use crate::platform::PlatformSpec;
 use crate::sched::{legal, Schedule};
 use crate::util::rng::Pcg;
 use anyhow::{bail, Result};
@@ -129,14 +131,25 @@ pub fn strategy_by_name(name: &str) -> Result<StrategyRef> {
 
 /// The starting points every strategy seeds its population with: the
 /// naive schedule (so the search result can never be worse than an
-/// untuned program) and the platform's stock-kernel schedule.  The
-/// expert point is deliberately *not* seeded — whether search reaches
-/// it is exactly what the frontier artifacts report.
-pub(crate) fn seed_points(spec: &PlatformSpec) -> Vec<Schedule> {
+/// untuned program), the platform's stock-kernel schedule, and any
+/// transfer seeds the oracle carries (tuned schedules from
+/// structurally similar graphs — see
+/// [`CostOracle::with_transfer_seeds`]).  Transfer seeds are
+/// legality-filtered and deduplicated, so they can only *add*
+/// candidates; the naive guarantee is untouched.  The expert point is
+/// deliberately *not* seeded — whether search reaches it is exactly
+/// what the frontier artifacts report.
+pub(crate) fn seed_points(oracle: &CostOracle<'_>) -> Vec<Schedule> {
+    let spec = oracle.spec();
     let mut out = vec![Schedule::naive()];
     let stock = crate::baseline::eager::stock_schedule(spec);
     if legal::check(&stock, spec).is_ok() && !out.contains(&stock) {
         out.push(stock);
+    }
+    for s in oracle.transfer_seeds() {
+        if legal::check(s, spec).is_ok() && !out.contains(s) {
+            out.push(s.clone());
+        }
     }
     out
 }
@@ -206,15 +219,40 @@ mod tests {
 
     #[test]
     fn seed_points_are_legal_everywhere_and_include_naive() {
+        let suite = crate::workloads::Suite::sample(1);
+        let graph = &suite.problems[0].perf_graph;
         for platform in crate::platform::registry().platforms() {
             let spec = platform.spec();
-            let seeds = seed_points(spec);
+            let oracle = CostOracle::new(spec, graph);
+            let seeds = seed_points(&oracle);
             assert_eq!(seeds[0], Schedule::naive());
             assert!(seeds.len() >= 2, "{}: stock seed missing", platform.name());
             for s in &seeds {
                 legal::check(s, spec)
                     .unwrap_or_else(|e| panic!("{}: seed illegal: {e}", platform.name()));
             }
+        }
+    }
+
+    #[test]
+    fn transfer_seeds_extend_but_never_displace_or_duplicate() {
+        let suite = crate::workloads::Suite::sample(1);
+        let graph = &suite.problems[0].perf_graph;
+        let spec = crate::platform::cuda::h100();
+        let base = seed_points(&CostOracle::new(&spec, graph));
+        // a distinct legal donor is appended after the built-in seeds
+        let mut donor = Schedule::naive();
+        donor.fast_math = true;
+        legal::check(&donor, &spec).expect("test donor must be legal");
+        assert!(!base.contains(&donor), "donor must not collide with built-ins");
+        let oracle = CostOracle::new(&spec, graph)
+            .with_transfer_seeds(vec![Schedule::naive(), donor.clone(), donor.clone()]);
+        let seeded = seed_points(&oracle);
+        assert_eq!(seeded[0], Schedule::naive(), "naive stays first");
+        assert_eq!(seeded.len(), base.len() + 1, "dup donors fold away");
+        assert_eq!(seeded.last(), Some(&donor));
+        for s in &seeded {
+            legal::check(s, &spec).expect("every seed stays legal");
         }
     }
 

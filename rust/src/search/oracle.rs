@@ -190,11 +190,12 @@ pub struct CostOracle<'a> {
     graph: &'a Graph,
     frontend: Option<ProfilerFrontendRef>,
     workers: usize,
+    transfer_seeds: Vec<Schedule>,
 }
 
 impl<'a> CostOracle<'a> {
     pub fn new(spec: &'a PlatformSpec, graph: &'a Graph) -> CostOracle<'a> {
-        CostOracle { spec, graph, frontend: None, workers: 1 }
+        CostOracle { spec, graph, frontend: None, workers: 1, transfer_seeds: Vec::new() }
     }
 
     /// Fan batch evaluations across `n` worker threads (values are
@@ -208,6 +209,21 @@ impl<'a> CostOracle<'a> {
     pub fn with_evidence(mut self, frontend: ProfilerFrontendRef) -> CostOracle<'a> {
         self.frontend = Some(frontend);
         self
+    }
+
+    /// Extra starting points for the search, transferred from tuned
+    /// schedules of structurally similar graphs (same
+    /// [`crate::store::key::family_fingerprint`]).  Strategies fold
+    /// them into [`super::seed_points`] after legality filtering and
+    /// dedup — an illegal or duplicate donor is silently dropped, so
+    /// transfer can only add candidates, never replace the naive seed.
+    pub fn with_transfer_seeds(mut self, seeds: Vec<Schedule>) -> CostOracle<'a> {
+        self.transfer_seeds = seeds;
+        self
+    }
+
+    pub fn transfer_seeds(&self) -> &[Schedule] {
+        &self.transfer_seeds
     }
 
     pub fn spec(&self) -> &PlatformSpec {

@@ -43,11 +43,18 @@ pub struct TuneConfig {
     /// Re-rank near-tied frontiers with profiler `Evidence` from the
     /// platform's registered frontend.
     pub use_evidence: bool,
+    /// Seed each problem's search population with the tuned schedule
+    /// of a structurally similar problem (same
+    /// [`storekey::family_fingerprint`]) already tuned this run or
+    /// already in the store.  Donors are legality-filtered extra seeds
+    /// only — the naive floor is untouched, so transfer can never make
+    /// `tuned_s` worse than naive.
+    pub use_transfer: bool,
 }
 
 impl TuneConfig {
     /// Defaults: beam strategy, the platform's worker-pool size,
-    /// evidence re-rank on.
+    /// evidence re-rank on, cross-problem transfer on.
     pub fn new(platform: PlatformRef) -> TuneConfig {
         TuneConfig {
             workers: platform.default_workers(),
@@ -57,6 +64,7 @@ impl TuneConfig {
             patience: 3,
             seed: 0x7E5E,
             use_evidence: true,
+            use_transfer: true,
         }
     }
 }
@@ -76,6 +84,14 @@ pub struct TuneOutcome {
     pub schedule: Schedule,
     /// Oracle evaluations spent.
     pub evals: usize,
+    /// 1-based position (in evaluation order) of the first scoring of
+    /// the winning schedule — the evaluations-to-frontier number the
+    /// transfer measurement in `search_frontier_*` reports.
+    pub evals_to_best: usize,
+    /// Transfer seeds actually injected into the search population
+    /// (legal, deduplicated donors; 0 with transfer off or no family
+    /// mate available).
+    pub seeded: usize,
 }
 
 impl TuneOutcome {
@@ -137,7 +153,7 @@ impl TuneReport {
 pub fn tune_key(cfg: &TuneConfig, problem: &Problem) -> JobKey {
     let spec = cfg.platform.spec();
     let text = format!(
-        "{TUNE_MAGIC}\nschema {}\npipeline {:016x}\nplatform {} spec {:016x} frontend {}\nstrategy {} budget {} patience {} seed {:016x} evidence {}\nproblem {} level {:?} perf {:016x}",
+        "{TUNE_MAGIC}\nschema {}\npipeline {:016x}\nplatform {} spec {:016x} frontend {}\nstrategy {} budget {} patience {} seed {:016x} evidence {} transfer {}\nproblem {} level {:?} perf {:016x}",
         STORE_SCHEMA,
         storekey::pipeline_fingerprint(),
         cfg.platform.name(),
@@ -148,9 +164,38 @@ pub fn tune_key(cfg: &TuneConfig, problem: &Problem) -> JobKey {
         cfg.patience,
         cfg.seed,
         cfg.use_evidence,
+        cfg.use_transfer,
         problem.id,
         problem.level,
         storekey::graph_fingerprint(&problem.perf_graph),
+    );
+    JobKey::from_text(text)
+}
+
+/// Magic first line of every family key — the cross-problem transfer
+/// index.  One blob per (tune knobs, schedule family) holds the first
+/// tuned schedule seen for that family, as its canonical line.
+pub const FAMILY_MAGIC: &str = "kforge-famkey v1";
+
+/// The store key under which a family's donor schedule lives.  Covers
+/// the same knobs as [`tune_key`] minus the problem identity (the
+/// family hash replaces it), so donors never leak across strategies,
+/// budgets, seeds or platforms.
+pub fn family_key(cfg: &TuneConfig, family: u64) -> JobKey {
+    let spec = cfg.platform.spec();
+    let text = format!(
+        "{FAMILY_MAGIC}\nschema {}\npipeline {:016x}\nplatform {} spec {:016x} frontend {}\nstrategy {} budget {} patience {} seed {:016x} evidence {}\nfamily {:016x}",
+        STORE_SCHEMA,
+        storekey::pipeline_fingerprint(),
+        cfg.platform.name(),
+        storekey::spec_hash(spec),
+        cfg.platform.profiler_frontend().name(),
+        cfg.strategy.name(),
+        cfg.budget,
+        cfg.patience,
+        cfg.seed,
+        cfg.use_evidence,
+        family,
     );
     JobKey::from_text(text)
 }
@@ -163,13 +208,15 @@ use crate::store::key::bits;
 /// Bit-exact tune-result serialization (the blob payload).
 pub fn serialize_tune(r: &TuneOutcome) -> String {
     format!(
-        "problem_id {}\nstrategy {}\nnaive_s {}\nexpert_s {}\ntuned_s {}\nevals {}\nschedule {}\n{TUNE_RESULT_END}",
+        "problem_id {}\nstrategy {}\nnaive_s {}\nexpert_s {}\ntuned_s {}\nevals {}\nevals_to_best {}\nseeded {}\nschedule {}\n{TUNE_RESULT_END}",
         r.problem_id,
         r.strategy,
         bits(r.naive_s),
         bits(r.expert_s),
         bits(r.tuned_s),
         r.evals,
+        r.evals_to_best,
+        r.seeded,
         r.schedule.canon(),
     )
 }
@@ -194,6 +241,9 @@ pub fn parse_tune(text: &str) -> Result<TuneOutcome> {
     let expert_s = parse_bits(&field("expert_s")?)?;
     let tuned_s = parse_bits(&field("tuned_s")?)?;
     let evals: usize = field("evals")?.parse().context("bad evals count")?;
+    let evals_to_best: usize =
+        field("evals_to_best")?.parse().context("bad evals_to_best count")?;
+    let seeded: usize = field("seeded")?.parse().context("bad seeded count")?;
     let schedule = Schedule::from_canon(&field("schedule")?)?;
     match lines.next() {
         Some(TUNE_RESULT_END) => {}
@@ -202,18 +252,48 @@ pub fn parse_tune(text: &str) -> Result<TuneOutcome> {
     if lines.next().is_some() {
         bail!("trailing data after tune trailer");
     }
-    Ok(TuneOutcome { problem_id, strategy, naive_s, expert_s, tuned_s, schedule, evals })
+    Ok(TuneOutcome {
+        problem_id,
+        strategy,
+        naive_s,
+        expert_s,
+        tuned_s,
+        schedule,
+        evals,
+        evals_to_best,
+        seeded,
+    })
 }
 
 /// Tune one problem (no store involved).  Deterministic in
 /// (config, problem) alone; the worker count only parallelizes the
-/// pure evaluations.
+/// pure evaluations.  Equivalent to [`tune_problem_seeded`] with no
+/// donors.
 pub fn tune_problem(cfg: &TuneConfig, problem: &Problem) -> TuneOutcome {
+    tune_problem_seeded(cfg, problem, &[])
+}
+
+/// Tune one problem with transfer donors: tuned schedules from
+/// structurally similar graphs, injected as extra seed points.
+/// Deterministic in (config, problem, donors); with `use_transfer`
+/// off the donors are ignored and the result is bit-identical to
+/// [`tune_problem`].  Illegal or duplicate donors are dropped by
+/// [`super::seed_points`] — `seeded` reports how many survived.
+pub fn tune_problem_seeded(
+    cfg: &TuneConfig,
+    problem: &Problem,
+    donors: &[Schedule],
+) -> TuneOutcome {
     let spec = cfg.platform.spec();
-    let mut oracle = CostOracle::new(spec, &problem.perf_graph).with_workers(cfg.workers);
+    let donors: Vec<Schedule> = if cfg.use_transfer { donors.to_vec() } else { Vec::new() };
+    let base_seeds = super::seed_points(&CostOracle::new(spec, &problem.perf_graph)).len();
+    let mut oracle = CostOracle::new(spec, &problem.perf_graph)
+        .with_workers(cfg.workers)
+        .with_transfer_seeds(donors);
     if cfg.use_evidence {
         oracle = oracle.with_evidence(cfg.platform.profiler_frontend());
     }
+    let seeded = super::seed_points(&oracle).len() - base_seeds;
     let naive_s = oracle.cost(&Schedule::naive());
     let expert_s = oracle.cost(&cfg.platform.expert_schedule());
     let mut budget = Budget::new(cfg.budget, cfg.patience);
@@ -230,6 +310,11 @@ pub fn tune_problem(cfg: &TuneConfig, problem: &Problem) -> TuneOutcome {
     } else {
         (Schedule::naive(), naive_s)
     };
+    let evals_to_best = out
+        .visited
+        .iter()
+        .position(|s| *s == schedule)
+        .map_or(out.visited.len(), |p| p + 1);
     TuneOutcome {
         problem_id: problem.id.clone(),
         strategy: cfg.strategy.name(),
@@ -238,35 +323,78 @@ pub fn tune_problem(cfg: &TuneConfig, problem: &Problem) -> TuneOutcome {
         tuned_s,
         schedule,
         evals: out.visited.len(),
+        evals_to_best,
+        seeded,
     }
+}
+
+/// A legal donor schedule for `family` from the store's transfer
+/// index, when one was published (by this process or any other
+/// sharing the cache dir).  A malformed blob is silently no donor —
+/// transfer is an accelerant, never a correctness dependency.
+fn family_donor(store: &Store, cfg: &TuneConfig, family: u64) -> Option<Schedule> {
+    let (text, _) = store.get_blob(&family_key(cfg, family))?;
+    Schedule::from_canon(text.trim_end()).ok()
 }
 
 /// Tune a suite against an explicit store: consult before search,
 /// write back after.  Problems the platform cannot run are filtered
 /// exactly like campaigns filter them.
+///
+/// Transfer seeding (when `cfg.use_transfer`): the first tuned
+/// schedule seen per [`storekey::family_fingerprint`] becomes the
+/// donor for later family mates.  The in-run map is consulted first —
+/// so a cold memory store and a disabled store produce bit-identical
+/// outcomes — and the store's family blobs (first-wins, published as
+/// they are computed) extend the same transfer across processes
+/// sharing one cache dir.  Family-blob traffic is deliberately *not*
+/// counted in the report's cache stats: those pin tune-entry hits and
+/// misses only.
 pub fn tune_suite_with(store: &Store, cfg: &TuneConfig, suite: &Suite) -> TuneReport {
     let spec = cfg.platform.spec();
     let filtered = suite.supported_on(spec);
     let mut outcomes = Vec::with_capacity(filtered.len());
     let mut cache = CacheStats::default();
+    let mut families: std::collections::BTreeMap<u64, Schedule> = std::collections::BTreeMap::new();
     for problem in filtered.problems.iter() {
         let key = tune_key(cfg, problem);
+        let fam = storekey::family_fingerprint(&problem.perf_graph);
         // parse inside the lookup so a corrupt payload is a miss at
         // every counting level (process counters included), exactly
         // like a corrupt TaskResult entry
         if let Some((r, bytes)) = store.get_blob_checked(&key, parse_tune) {
             cache.hits += 1;
             cache.bytes_read += bytes;
+            if cfg.use_transfer {
+                families.entry(fam).or_insert_with(|| r.schedule.clone());
+            }
             outcomes.push(r);
             continue;
         }
+        let donors: Vec<Schedule> = if cfg.use_transfer {
+            families
+                .get(&fam)
+                .cloned()
+                .or_else(|| family_donor(store, cfg, fam))
+                .into_iter()
+                .collect()
+        } else {
+            Vec::new()
+        };
         let r = {
             let _s = crate::obs::span("tune.problem");
-            tune_problem(cfg, problem)
+            tune_problem_seeded(cfg, problem, &donors)
         };
         if store.enabled() {
             cache.misses += 1;
             cache.bytes_written += store.put_blob(&key, &serialize_tune(&r));
+        }
+        if cfg.use_transfer {
+            families.entry(fam).or_insert_with(|| r.schedule.clone());
+            // first-wins publish for other processes on this store
+            if store.enabled() && store.get_blob(&family_key(cfg, fam)).is_none() {
+                store.put_blob(&family_key(cfg, fam), &r.schedule.canon());
+            }
         }
         outcomes.push(r);
     }
@@ -293,6 +421,8 @@ fn trace_tune_outcomes(outcomes: &[TuneOutcome]) {
         let _lane = crate::obs::lane(&format!("tune:{}", o.problem_id));
         let _span = crate::obs::logical_span(&format!("tune:{}:{}", o.strategy, o.problem_id));
         crate::obs::logical_counter("tune.evals", o.evals as u64);
+        crate::obs::logical_counter("tune.evals_to_best", o.evals_to_best as u64);
+        crate::obs::logical_counter("tune.seeded", o.seeded as u64);
         crate::obs::logical_gauge("tune.naive_s", o.naive_s);
         crate::obs::logical_gauge("tune.expert_s", o.expert_s);
         crate::obs::logical_gauge("tune.tuned_s", o.tuned_s);
@@ -336,6 +466,8 @@ mod tests {
         assert_eq!(a.tuned_s.to_bits(), b.tuned_s.to_bits());
         assert_eq!(a.schedule, b.schedule);
         assert_eq!(a.evals, b.evals);
+        assert_eq!(a.evals_to_best, b.evals_to_best);
+        assert_eq!(a.seeded, b.seeded);
     }
 
     #[test]
@@ -365,6 +497,7 @@ mod tests {
             Box::new(|c| c.patience += 1),
             Box::new(|c| c.seed ^= 1),
             Box::new(|c| c.use_evidence = false),
+            Box::new(|c| c.use_transfer = false),
             Box::new(|c| c.platform = by_name("rocm").unwrap()),
         ];
         for (i, m) in mutations.iter().enumerate() {
@@ -416,11 +549,79 @@ mod tests {
         let s = warm.summary();
         assert!(s.contains("autotuned<=naive: 3/3 (100.0%)"), "{s}");
         assert!(s.contains("autotuned<=expert:"), "{s}");
-        // disabled store: zero counters, same outcomes
+        // disabled store: zero counters, same outcomes — donor lookup
+        // must stay store-independent within one run
         let off = tune_suite_with(&Store::disabled(), &c, &suite);
         assert_eq!(off.cache, CacheStats::default());
         for (a, b) in cold.outcomes.iter().zip(&off.outcomes) {
             assert_bit_identical(a, b);
         }
+    }
+
+    #[test]
+    fn transfer_donor_never_worsens_and_is_counted() {
+        let suite = Suite::sample(1);
+        let problem = &suite.problems[0];
+        let c = cfg();
+        let plain = tune_problem(&c, problem);
+        assert_eq!(plain.seeded, 0);
+        assert!(plain.evals_to_best >= 1 && plain.evals_to_best <= plain.evals);
+        // donor = the problem's own tuned schedule: it sits in the seed
+        // population, so the seeded search can never end above it
+        let seeded = tune_problem_seeded(&c, problem, &[plain.schedule.clone()]);
+        assert!(
+            seeded.tuned_s <= plain.tuned_s,
+            "seeded {} worse than donor {}",
+            seeded.tuned_s,
+            plain.tuned_s
+        );
+        assert!(seeded.le_naive());
+        assert!(seeded.evals_to_best >= 1 && seeded.evals_to_best <= seeded.evals);
+        // an illegal-or-duplicate-free donor counts once; the naive
+        // duplicate folds away
+        let dup = tune_problem_seeded(
+            &c,
+            problem,
+            &[Schedule::naive(), plain.schedule.clone(), plain.schedule.clone()],
+        );
+        assert!(dup.seeded <= 1, "duplicate donors must fold: {}", dup.seeded);
+        // transfer off: donors ignored, bit-identical to the plain run
+        let mut off = cfg();
+        off.use_transfer = false;
+        let ignored = tune_problem_seeded(&off, problem, &[plain.schedule.clone()]);
+        assert_eq!(ignored.seeded, 0);
+        assert_eq!(ignored.tuned_s.to_bits(), tune_problem(&off, problem).tuned_s.to_bits());
+        // determinism: same donors, same outcome, any worker count
+        let mut wide = cfg();
+        wide.workers = 8;
+        assert_bit_identical(&seeded, &tune_problem_seeded(&wide, problem, &[plain.schedule.clone()]));
+    }
+
+    #[test]
+    fn family_blobs_transfer_across_store_sharing_runs() {
+        let sample = Suite::sample(1);
+        let problem = &sample.problems[0];
+        let one = Suite { problems: std::sync::Arc::new(vec![problem.clone()]) };
+        let c = cfg();
+        let fam = storekey::family_fingerprint(&problem.perf_graph);
+        let store = Store::memory();
+        let first = tune_suite_with(&store, &c, &one);
+        // the run published a donor blob for the problem's family
+        let donor = super::family_donor(&store, &c, fam).expect("family blob published");
+        assert_eq!(donor, first.outcomes[0].schedule);
+        // a second store holding only the family blob (no tune entry):
+        // the suite driver must pick the donor up from the blob index,
+        // agreeing bit-for-bit with the explicit-donor path
+        let store2 = Store::memory();
+        store2.put_blob(&family_key(&c, fam), &donor.canon());
+        let via_blob = tune_suite_with(&store2, &c, &one);
+        assert_eq!(via_blob.cache.misses, 1);
+        assert_bit_identical(&via_blob.outcomes[0], &tune_problem_seeded(&c, problem, &[donor.clone()]));
+        // family keys cover the knobs: a different budget looks up a
+        // different family blob
+        let mut other = cfg();
+        other.budget += 1;
+        assert!(super::family_donor(&store, &other, fam).is_none());
+        assert_ne!(family_key(&c, fam).hex(), family_key(&other, fam).hex());
     }
 }

@@ -65,6 +65,12 @@ pub struct ScenarioConfig {
     /// this knob varies real parallelism without touching it — the
     /// worker-count bit-identity tests pivot on exactly that.
     pub exec_workers: Option<usize>,
+    /// Route the execution phase through the distributed chunk-claiming
+    /// pool ([`crate::dist::exec_pool`]) with this many in-process
+    /// shards instead of the flat worker pool.  Like `exec_workers`
+    /// this varies real parallelism only — results stay bit-identical
+    /// to the unsharded path (pool-shape invariance is test-pinned).
+    pub exec_shards: Option<usize>,
     /// Apply store-eviction pressure after the warm phase: gc the disk
     /// tier down to this many bytes.
     pub gc_max_bytes: Option<u64>,
@@ -90,6 +96,7 @@ impl ScenarioConfig {
             shed_depth: 2 * workers + 8,
             warm_hottest: 4,
             exec_workers: None,
+            exec_shards: None,
             gc_max_bytes: None,
             p99_budget_ms: 250.0,
             shed_budget: 0.5,
@@ -573,12 +580,17 @@ pub fn run_scenario(store: &Store, cfg: &ScenarioConfig) -> ScenarioReport {
         .collect();
     let exec_workers = cfg.exec_workers.unwrap_or(cfg.workers).max(1);
     let exec_span = obs::span("serve.exec");
-    let timed: Vec<(TaskResult, f64)> =
-        crate::coordinator::worker::run_jobs(exec_workers, &exec_jobs, |(_, spec_idx)| {
-            let t = std::time::Instant::now();
-            let r = execute_job(store, &specs[*spec_idx]);
-            (r, t.elapsed().as_secs_f64() * 1e3)
-        });
+    let run_one = |(_, spec_idx): &(String, usize)| {
+        let t = std::time::Instant::now();
+        let r = execute_job(store, &specs[*spec_idx]);
+        (r, t.elapsed().as_secs_f64() * 1e3)
+    };
+    let timed: Vec<(TaskResult, f64)> = match cfg.exec_shards {
+        // shard-backed pool: self-claiming chunks instead of a flat
+        // queue — same results, different scheduling shape
+        Some(shards) => crate::dist::exec_pool(shards.max(1), &exec_jobs, run_one),
+        None => crate::coordinator::worker::run_jobs(exec_workers, &exec_jobs, run_one),
+    };
     drop(exec_span);
     let results: Vec<(String, TaskResult)> = exec_jobs
         .iter()

@@ -19,6 +19,7 @@ use crate::workloads::Level;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 pub const ENTRY_MAGIC: &str = "kforge-cache v1";
@@ -295,6 +296,31 @@ impl Cache {
         self.dir.as_ref().map(|d| d.join("objects").join(hex))
     }
 
+    /// Persist `entry` at `path` via temp-file + atomic rename, so a
+    /// concurrent reader can never observe a torn object and two
+    /// writers (threads *or* processes) can never interleave — the
+    /// loser's rename simply replaces the winner's identical bytes.
+    /// The temp name carries pid + a per-process sequence number:
+    /// pid alone collides when two threads of one process race the
+    /// same key.
+    fn persist_atomic(path: &Path, entry: &str) -> u64 {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let file = path.file_name().map(|f| f.to_string_lossy().into_owned()).unwrap_or_default();
+        let tmp = path.with_file_name(format!("{file}.tmp.{}.{seq}", std::process::id()));
+        let written = std::fs::write(&tmp, entry)
+            .and_then(|()| std::fs::rename(&tmp, path))
+            .map(|()| entry.len() as u64);
+        match written {
+            Ok(bytes) => bytes,
+            Err(e) => {
+                crate::kf_error!("[store] failed to persist cache entry {} ({e})", path.display());
+                let _ = std::fs::remove_file(&tmp);
+                0
+            }
+        }
+    }
+
     /// Look up a key.  Returns the result plus the bytes read from
     /// disk (0 for a memory hit).  Any disk anomaly is a logged miss.
     pub fn get(&self, key: &JobKey) -> Option<(TaskResult, u64)> {
@@ -351,21 +377,11 @@ impl Cache {
             return 0;
         };
         let entry = serialize_entry(key, r);
-        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-        let written = std::fs::write(&tmp, &entry)
-            .and_then(|()| std::fs::rename(&tmp, &path))
-            .map(|()| entry.len() as u64);
-        match written {
-            Ok(bytes) => {
-                self.counters.record_write(bytes);
-                bytes
-            }
-            Err(e) => {
-                crate::kf_error!("[store] failed to persist cache entry {} ({e})", path.display());
-                let _ = std::fs::remove_file(&tmp);
-                0
-            }
+        let bytes = Self::persist_atomic(&path, &entry);
+        if bytes > 0 {
+            self.counters.record_write(bytes);
         }
+        bytes
     }
 
     /// Look up a raw-text blob by key.  Same contract as [`Cache::get`]:
@@ -444,21 +460,11 @@ impl Cache {
             return 0;
         };
         let entry = serialize_blob_entry(key, payload);
-        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-        let written = std::fs::write(&tmp, &entry)
-            .and_then(|()| std::fs::rename(&tmp, &path))
-            .map(|()| entry.len() as u64);
-        match written {
-            Ok(bytes) => {
-                self.counters.record_write(bytes);
-                bytes
-            }
-            Err(e) => {
-                crate::kf_error!("[store] failed to persist cache entry {} ({e})", path.display());
-                let _ = std::fs::remove_file(&tmp);
-                0
-            }
+        let bytes = Self::persist_atomic(&path, &entry);
+        if bytes > 0 {
+            self.counters.record_write(bytes);
         }
+        bytes
     }
 
     /// All on-disk objects as (path, bytes, modified-time).
@@ -469,6 +475,10 @@ impl Cache {
         let mut out = Vec::new();
         for entry in std::fs::read_dir(dir.join("objects"))? {
             let entry = entry?;
+            // in-flight (or crash-orphaned) temp files are not objects
+            if entry.file_name().to_string_lossy().contains(".tmp.") {
+                continue;
+            }
             let meta = entry.metadata()?;
             if meta.is_file() {
                 out.push((
@@ -497,13 +507,28 @@ impl Cache {
 
     /// Evict oldest-first until the on-disk footprint fits
     /// `max_bytes`.  Returns (evicted count, bytes kept).
+    ///
+    /// Eviction honors the lease protocol: while any `.lease` under
+    /// the cache dir is active, objects written at or after the oldest
+    /// acquisition are never removed — a gc racing an in-flight
+    /// campaign cannot delete a just-written object that a shard's
+    /// journal already references.  Entries are walked oldest-first,
+    /// so the first protected entry ends the sweep.
     pub fn gc(&self, max_bytes: u64) -> Result<(usize, u64)> {
         let mut entries = self.disk_entries()?;
         entries.sort_by_key(|(_, _, mtime)| *mtime);
+        let floor = self.dir.as_deref().and_then(super::lease::active_floor);
         let mut total: u64 = entries.iter().map(|(_, b, _)| *b).sum();
         let mut evicted = 0;
-        for (path, bytes, _) in &entries {
+        for (path, bytes, mtime) in &entries {
             if total <= max_bytes {
+                break;
+            }
+            if floor.is_some_and(|f| *mtime >= f) {
+                crate::kf_warn!(
+                    "[store] gc stopping early: {} object(s) protected by an active lease",
+                    entries.len() - evicted as usize
+                );
                 break;
             }
             std::fs::remove_file(path)?;
@@ -775,6 +800,56 @@ mod tests {
         again.put_blob(&key, "back");
         again.clear().unwrap();
         assert!(again.get_blob(&key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_entries_ignore_inflight_temp_files() {
+        let dir = std::env::temp_dir().join(format!("kforge_cache_tmpf_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = Cache::at(&dir).unwrap();
+        let key = sample_key();
+        cache.put(&key, &sample_result());
+        // a crash-orphaned temp file must not count as an object (nor
+        // be evictable garbage that gc trips over)
+        std::fs::write(dir.join("objects").join(format!("{}.tmp.999.0", key.hex())), "partial")
+            .unwrap();
+        let entries = cache.disk_entries().unwrap();
+        assert_eq!(entries.len(), 1, "{entries:?}");
+        assert_eq!(cache.gc(0).unwrap().0, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_never_evicts_objects_written_under_an_active_lease() {
+        use std::time::{Duration, SystemTime};
+        let dir = std::env::temp_dir().join(format!("kforge_cache_lease_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = Cache::at(&dir).unwrap();
+        let set_mtime = |path: &Path, t: SystemTime| {
+            std::fs::File::options().write(true).open(path).unwrap().set_modified(t).unwrap()
+        };
+        // injected ordering: object A written, then a writer takes its
+        // lease, then object B lands — gc to zero must evict A (below
+        // the floor) but keep B (a journal may already reference it)
+        let base = SystemTime::now() - Duration::from_secs(600);
+        let key_a = sample_key();
+        cache.put(&key_a, &sample_result());
+        set_mtime(&dir.join("objects").join(key_a.hex()), base);
+        let lease = crate::store::lease::Lease::acquire(&dir, "writer", "test").unwrap();
+        set_mtime(lease.path(), base + Duration::from_secs(60));
+        let key_b = blob_key("under-lease");
+        cache.put_blob(&key_b, "fresh payload");
+        set_mtime(&dir.join("objects").join(key_b.hex()), base + Duration::from_secs(120));
+        let (evicted, kept) = cache.gc(0).unwrap();
+        assert_eq!(evicted, 1, "only the pre-lease object is evictable");
+        assert!(kept > 0);
+        assert!(!dir.join("objects").join(key_a.hex()).exists());
+        assert!(dir.join("objects").join(key_b.hex()).exists());
+        // release the lease: the survivor becomes evictable
+        lease.release().unwrap();
+        let (evicted, kept) = cache.gc(0).unwrap();
+        assert_eq!((evicted, kept), (1, 0));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

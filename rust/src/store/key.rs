@@ -49,7 +49,14 @@ use std::sync::OnceLock;
 /// synthetic suite's L4 slots) and the serve tier's streaming
 /// semantics change what a cached serve-path result means, and the
 /// model layer sits outside the pipeline fingerprint's source set.
-pub const STORE_SCHEMA: u32 = 3;
+///
+/// v4: the distributed-campaigns PR — cross-problem schedule transfer
+/// seeds the autotuner's population from family-mate schedules (the
+/// [`family_fingerprint`] widening of the structural hash), which
+/// changes what a cached tune entry means (its search trajectory now
+/// depends on the family map), and the dist layer spans process
+/// boundaries outside the pipeline fingerprint's source set.
+pub const STORE_SCHEMA: u32 = 4;
 
 /// Second FNV-1a chain over domain-separated input, so the digest is
 /// 128 bits (two independent 64-bit chains), not one chain reused.
@@ -137,6 +144,61 @@ fn persona_fingerprint(p: &Persona, platform: &dyn Platform) -> u64 {
 /// rendering carries every field).
 pub fn graph_fingerprint(g: &crate::kir::Graph) -> u64 {
     fnv1a(format!("{g:?}").as_bytes())
+}
+
+/// Family hash of a KIR graph: deliberately coarser than
+/// [`graph_fingerprint`].  The graph *name* is excluded, `ConstFill`
+/// values are masked, and every dimension equal to the leading batch
+/// dimension (input 0's first dim) renders as `B` — so two problems
+/// that differ only in constants or batch size land in the same
+/// family.  Structural parameters (op kinds, connectivity, strides,
+/// kernel sizes, reduce axes, non-batch dims) all still distinguish.
+///
+/// Used ONLY to key cross-problem schedule *transfer* (population
+/// seeding in the autotuner): every transferred seed is re-checked for
+/// legality and re-costed, and the tuner keeps its naive fallback, so
+/// an over-wide family can waste evaluations but never corrupt a
+/// result.
+pub fn family_fingerprint(g: &crate::kir::Graph) -> u64 {
+    use crate::kir::Op;
+    let batch = g.input_shapes.first().and_then(|s| s.dims().first()).copied();
+    let dim = |d: usize| match batch {
+        Some(b) if d == b => "B".to_string(),
+        _ => d.to_string(),
+    };
+    let shape = |s: &crate::tensor::Shape| {
+        let dims: Vec<String> = s.dims().iter().map(|&d| dim(d)).collect();
+        format!("[{}]", dims.join(","))
+    };
+    let mut text = String::from("kforge-family v1\ninputs");
+    for s in &g.input_shapes {
+        text.push(' ');
+        text.push_str(&shape(s));
+    }
+    text.push('\n');
+    for (i, n) in g.nodes.iter().enumerate() {
+        let body = match &n.op {
+            Op::ConstFill { value: _, shape: sh } => format!("const * {}", shape(sh)),
+            Op::Reshape { input, shape: sh } => format!("reshape %{input} {}", shape(sh)),
+            other => {
+                let args: Vec<String> = other.operands().iter().map(|o| format!("%{o}")).collect();
+                let params = match other {
+                    Op::Conv2d { stride, padding, .. }
+                    | Op::DepthwiseConv2d { stride, padding, .. } => format!(" s{stride} p{padding}"),
+                    Op::MaxPool2d { k, stride, .. } | Op::AvgPool2d { k, stride, .. } => {
+                        format!(" k{k} s{stride}")
+                    }
+                    Op::Concat { axis, .. } => format!(" axis{axis}"),
+                    _ => String::new(),
+                };
+                format!("{}{params} {}", other.mnemonic(), args.join(","))
+            }
+        };
+        text.push_str(&format!("%{i} {body} -> {}\n", shape(&n.shape)));
+    }
+    let outs: Vec<String> = g.outputs.iter().map(|o| format!("%{o}")).collect();
+    text.push_str(&format!("outputs {}\n", outs.join(",")));
+    fnv1a(text.as_bytes())
 }
 
 fn reference_fingerprint(reference: Option<&Program>) -> String {
@@ -335,6 +397,59 @@ mod tests {
             let with_ref = scope.key(c.personas[0], &suite.problems[0], Some(prog));
             assert_ne!(with_ref.hex(), a.hex());
         }
+    }
+
+    #[test]
+    fn family_hash_ignores_name_batch_and_constants_but_not_structure() {
+        use crate::kir::{GraphBuilder, Op, UnaryKind};
+        use crate::tensor::Shape;
+        let mm = |name: &str, m: usize, k: usize, n: usize, fill: f32| {
+            let mut b = GraphBuilder::new(name);
+            let x = b.input(Shape::of(&[m, k]));
+            let w = b.input(Shape::of(&[k, n]));
+            let p = b.matmul(x, w);
+            let c = b.push(Op::ConstFill { value: fill, shape: Shape::of(&[m, n]) });
+            let s = b.add(p, c);
+            b.finish(vec![s])
+        };
+        let base = mm("a", 16, 4096, 2048, 0.5);
+        // name, batch dim, and constant value are all family-invisible
+        assert_eq!(family_fingerprint(&base), family_fingerprint(&mm("b", 16, 4096, 2048, 0.5)));
+        assert_eq!(family_fingerprint(&base), family_fingerprint(&mm("a", 1, 4096, 2048, 0.5)));
+        assert_eq!(family_fingerprint(&base), family_fingerprint(&mm("a", 64, 4096, 2048, 0.5)));
+        assert_eq!(family_fingerprint(&base), family_fingerprint(&mm("a", 16, 4096, 2048, -3.0)));
+        // but each of these flips the exact structural hash
+        assert_ne!(graph_fingerprint(&base), graph_fingerprint(&mm("a", 1, 4096, 2048, 0.5)));
+        assert_ne!(graph_fingerprint(&base), graph_fingerprint(&mm("a", 16, 4096, 2048, -3.0)));
+        // non-batch dims and op structure still distinguish families
+        assert_ne!(family_fingerprint(&base), family_fingerprint(&mm("a", 16, 4096, 1024, 0.5)));
+        assert_ne!(family_fingerprint(&base), family_fingerprint(&mm("a", 16, 2048, 2048, 0.5)));
+        let mut b = GraphBuilder::new("a");
+        let x = b.input(Shape::of(&[16, 4096]));
+        let w = b.input(Shape::of(&[4096, 2048]));
+        let p = b.matmul(x, w);
+        let r = b.unary(UnaryKind::Relu, p);
+        let relu_tail = b.finish(vec![r]);
+        assert_ne!(family_fingerprint(&base), family_fingerprint(&relu_tail));
+        // square matmuls of any size normalize to one [B,B]x[B,B] family
+        let sq = |n: usize| {
+            let mut b = GraphBuilder::new("sq");
+            let x = b.input(Shape::of(&[n, n]));
+            let w = b.input(Shape::of(&[n, n]));
+            let p = b.matmul(x, w);
+            b.finish(vec![p])
+        };
+        assert_eq!(family_fingerprint(&sq(256)), family_fingerprint(&sq(1024)));
+        assert_ne!(graph_fingerprint(&sq(256)), graph_fingerprint(&sq(1024)));
+        // conv stride is structural: it changes the family
+        let conv = |stride: usize| {
+            let mut b = GraphBuilder::new("c");
+            let x = b.input(Shape::of(&[2, 8, 32, 32]));
+            let w = b.input(Shape::of(&[16, 8, 3, 3]));
+            let c = b.conv2d(x, w, stride, 1);
+            b.finish(vec![c])
+        };
+        assert_ne!(family_fingerprint(&conv(1)), family_fingerprint(&conv(2)));
     }
 
     #[test]

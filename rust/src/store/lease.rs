@@ -1,0 +1,261 @@
+//! Cross-process leases and claims over a shared cache directory.
+//!
+//! Two cooperation primitives, both built on the one atomic filesystem
+//! operation every platform gives us — `O_CREAT|O_EXCL` file creation
+//! (`OpenOptions::create_new`) inside the cache dir:
+//!
+//! - a [`Lease`] is a *liveness* marker: an RAII guard file under
+//!   `<dir>/leases/` held for the duration of some activity (a shard
+//!   executing its slice of a campaign, a writer streaming objects).
+//!   `Cache::gc` consults the active leases and never evicts an object
+//!   written at or after the oldest acquisition — so eviction racing an
+//!   in-flight campaign can never delete a just-written object that a
+//!   journal already references.  Leases are removed on drop; a crashed
+//!   holder leaves a stale file, which `Lease::sweep` ages out.
+//! - a [`claim`] is an *ownership* marker: a persistent `.claim` file
+//!   whose create-new winner owns a work chunk forever (within one
+//!   campaign digest — the digest is part of the claim name).  Claims
+//!   are what make the distributed shard splitter self-coordinating:
+//!   two shards racing for the same chunk resolve through the
+//!   filesystem, and a resumed shard re-reads its own claims.  Claims
+//!   deliberately do NOT pin gc (only `.lease` files do): they outlive
+//!   their writer by design.
+//!
+//! Everything here degrades softly: a cache dir without a `leases/`
+//! subdirectory means no active leases, and lease I/O errors are
+//! surfaced to callers who log and continue — coordination failures
+//! must never lose results, only parallelism.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
+
+/// Subdirectory of the cache dir holding lease and claim files.
+pub const LEASE_DIR: &str = "leases";
+
+fn lease_dir(root: &Path) -> PathBuf {
+    root.join(LEASE_DIR)
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
+        .collect()
+}
+
+/// An acquired liveness lease (RAII): the file exists while the guard
+/// lives and is removed on drop.  While any lease is active, `gc`
+/// refuses to evict objects written at or after the oldest acquisition.
+#[derive(Debug)]
+pub struct Lease {
+    path: PathBuf,
+}
+
+impl Lease {
+    /// Acquire the named lease under `root/leases/`, failing if the
+    /// name is already held.  `owner` is recorded in the file for
+    /// diagnostics (`pid`, shard id, hostname — free-form).
+    pub fn acquire(root: &Path, name: &str, owner: &str) -> Result<Lease> {
+        let dir = lease_dir(root);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating lease dir {}", dir.display()))?;
+        let path = dir.join(format!("{}.lease", sanitize(name)));
+        let mut f = std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("acquiring lease {}", path.display()))?;
+        // content is diagnostic only; acquisition time is the file mtime
+        let _ = writeln!(f, "{owner}");
+        let _ = f.flush();
+        Ok(Lease { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Explicit release (identical to drop, but surfaces the error).
+    pub fn release(self) -> Result<()> {
+        let path = self.path.clone();
+        std::mem::forget(self); // skip the drop-time second removal
+        std::fs::remove_file(&path)
+            .with_context(|| format!("releasing lease {}", path.display()))
+    }
+
+    /// Remove lease files older than `max_age` (crashed holders).
+    /// Returns how many were swept.
+    pub fn sweep(root: &Path, max_age: Duration) -> Result<usize> {
+        let mut swept = 0;
+        for (path, mtime) in list_marker_files(root, ".lease")? {
+            let stale = SystemTime::now()
+                .duration_since(mtime)
+                .map(|age| age > max_age)
+                .unwrap_or(false);
+            if stale && std::fs::remove_file(&path).is_ok() {
+                swept += 1;
+            }
+        }
+        Ok(swept)
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+fn list_marker_files(root: &Path, suffix: &str) -> Result<Vec<(PathBuf, SystemTime)>> {
+    let dir = lease_dir(root);
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("reading lease dir {}", dir.display())),
+    };
+    let mut out = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        if !entry.file_name().to_string_lossy().ends_with(suffix) {
+            continue;
+        }
+        let meta = match entry.metadata() {
+            Ok(m) if m.is_file() => m,
+            _ => continue, // raced with a release: a vanished lease is inactive
+        };
+        out.push((
+            entry.path(),
+            meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH),
+        ));
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// The oldest acquisition time among active leases, or `None` when no
+/// lease is held.  `Cache::gc` treats this as its eviction floor:
+/// objects with mtime at or after it are never removed.
+pub fn active_floor(root: &Path) -> Option<SystemTime> {
+    list_marker_files(root, ".lease")
+        .ok()?
+        .into_iter()
+        .map(|(_, mtime)| mtime)
+        .min()
+}
+
+/// Try to claim persistent ownership of `name` for `owner`.  Returns
+/// `true` exactly once per name across every process sharing `root` —
+/// the create-new winner.  A claim survives its creator (crash-resume
+/// re-reads it via [`claim_owner`]); it never pins gc.
+pub fn claim(root: &Path, name: &str, owner: &str) -> Result<bool> {
+    let dir = lease_dir(root);
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating lease dir {}", dir.display()))?;
+    let path = dir.join(format!("{}.claim", sanitize(name)));
+    match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{owner}");
+            let _ = f.flush();
+            Ok(true)
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+        Err(e) => Err(e).with_context(|| format!("claiming {}", path.display())),
+    }
+}
+
+/// The recorded owner of an existing claim (first line of the file),
+/// or `None` when unclaimed/unreadable.
+pub fn claim_owner(root: &Path, name: &str) -> Option<String> {
+    let path = lease_dir(root).join(format!("{}.claim", sanitize(name)));
+    let data = std::fs::read_to_string(path).ok()?;
+    Some(data.lines().next().unwrap_or("").to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("kforge_lease_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn lease_is_exclusive_and_released_on_drop() {
+        let root = tmp("excl");
+        let a = Lease::acquire(&root, "shard-0", "pid 1").unwrap();
+        assert!(a.path().exists());
+        assert!(Lease::acquire(&root, "shard-0", "pid 2").is_err(), "double acquire");
+        // a different name is independent
+        let b = Lease::acquire(&root, "shard-1", "pid 2").unwrap();
+        drop(a);
+        // released: the same name can be re-acquired
+        let again = Lease::acquire(&root, "shard-0", "pid 3").unwrap();
+        again.release().unwrap();
+        assert!(Lease::acquire(&root, "shard-0", "pid 4").is_ok());
+        drop(b);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn active_floor_tracks_oldest_lease_only() {
+        let root = tmp("floor");
+        assert!(active_floor(&root).is_none(), "no leases yet");
+        let a = Lease::acquire(&root, "a", "x").unwrap();
+        // inject an ordering: make `a` deterministically the oldest
+        let old = SystemTime::UNIX_EPOCH + Duration::from_secs(1_000);
+        std::fs::File::options()
+            .write(true)
+            .open(a.path())
+            .unwrap()
+            .set_modified(old)
+            .unwrap();
+        let b = Lease::acquire(&root, "b", "y").unwrap();
+        assert_eq!(active_floor(&root), Some(old));
+        drop(a);
+        let floor = active_floor(&root).expect("b still active");
+        assert!(floor > old);
+        drop(b);
+        assert!(active_floor(&root).is_none());
+        // claims never contribute to the floor
+        assert!(claim(&root, "chunk-0", "z").unwrap());
+        assert!(active_floor(&root).is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn claims_are_first_winner_and_persistent() {
+        let root = tmp("claim");
+        assert!(claim(&root, "c7", "shard 2").unwrap());
+        assert!(!claim(&root, "c7", "shard 3").unwrap(), "second claimer must lose");
+        assert_eq!(claim_owner(&root, "c7").as_deref(), Some("shard 2"));
+        assert!(claim_owner(&root, "c8").is_none());
+        // odd names sanitize instead of escaping the directory
+        assert!(claim(&root, "../evil/../name", "s").unwrap());
+        assert!(claim_owner(&root, "../evil/../name").is_some());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn sweep_removes_only_stale_leases() {
+        let root = tmp("sweep");
+        let a = Lease::acquire(&root, "old", "x").unwrap();
+        std::fs::File::options()
+            .write(true)
+            .open(a.path())
+            .unwrap()
+            .set_modified(SystemTime::now() - Duration::from_secs(3600))
+            .unwrap();
+        let b = Lease::acquire(&root, "fresh", "y").unwrap();
+        let swept = Lease::sweep(&root, Duration::from_secs(60)).unwrap();
+        assert_eq!(swept, 1);
+        assert!(!a.path().exists());
+        assert!(b.path().exists());
+        std::mem::forget(a); // its file is already gone
+        drop(b);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -33,11 +33,13 @@
 pub mod cache;
 pub mod journal;
 pub mod key;
+pub mod lease;
 pub mod stats;
 
 pub use cache::Cache;
 pub use journal::Journal;
 pub use key::{JobKey, KeyScope, STORE_SCHEMA};
+pub use lease::Lease;
 pub use stats::CacheStats;
 
 use crate::coordinator::job::TaskResult;
@@ -110,6 +112,36 @@ impl Store {
             "{sanitized}-{:016x}.journal",
             journal::campaign_digest(config_name, keys)
         )))
+    }
+
+    /// The journal path for one shard of an N-shard campaign.  Shard
+    /// journals use the same format and the same *global* key list as
+    /// the 1-process journal (records are keyed by global job index),
+    /// so the merge phase can fold any subset of them with the plain
+    /// [`Journal::resume`] reader.
+    pub fn shard_journal_path(
+        &self,
+        config_name: &str,
+        keys: &[JobKey],
+        shards: usize,
+        shard_id: usize,
+    ) -> Option<PathBuf> {
+        let base = self.journal_path(config_name, keys)?;
+        let file = base.file_name()?.to_string_lossy().into_owned();
+        let stem = file.strip_suffix(".journal")?;
+        // the digest suffix stays at the end so dist::merge can glob
+        // every `*-shard*of*-{digest}.journal` for one campaign
+        let (name, digest) = stem.rsplit_once('-')?;
+        Some(base.with_file_name(format!("{name}-shard{shard_id}of{shards}-{digest}.journal")))
+    }
+
+    /// The root directory shared across processes (the `--cache-dir`),
+    /// when this store is disk-backed — where leases and claims live.
+    pub fn shared_dir(&self) -> Option<&Path> {
+        if !self.enabled {
+            return None;
+        }
+        self.cache.dir()
     }
 
     /// Look up a job result; `None` when disabled or absent.  Returns
@@ -257,5 +289,22 @@ mod tests {
         let s = Store::memory();
         assert!(s.enabled());
         assert!(s.journal_path("c", &[]).is_none());
+        assert!(s.shard_journal_path("c", &[], 4, 0).is_none());
+        assert!(s.shared_dir().is_none());
+    }
+
+    #[test]
+    fn shard_journal_path_keeps_digest_suffix() {
+        let dir = std::env::temp_dir().join(format!("kforge_store_sjp_{}", std::process::id()));
+        let s = Store::at_dir(&dir, false).unwrap();
+        assert_eq!(s.shared_dir(), Some(dir.as_path()));
+        let base = s.journal_path("quick-cuda", &[]).unwrap();
+        let shard = s.shard_journal_path("quick-cuda", &[], 4, 2).unwrap();
+        let base_file = base.file_name().unwrap().to_string_lossy().into_owned();
+        let shard_file = shard.file_name().unwrap().to_string_lossy().into_owned();
+        let digest = base_file.strip_suffix(".journal").unwrap().rsplit_once('-').unwrap().1;
+        assert_eq!(shard_file, format!("quick-cuda-shard2of4-{digest}.journal"));
+        assert_eq!(shard.parent(), base.parent());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -90,6 +90,21 @@ fn results_bit_identical_across_exec_worker_counts() {
     }
 }
 
+#[test]
+fn results_bit_identical_under_shard_backed_exec_pool() {
+    // the dist chunk-claiming pool is a drop-in for the flat worker
+    // pool: same virtual scenario, same synthesized bits, any shard
+    // count (including more shards than jobs)
+    let mut cfg = ScenarioConfig::new(0xBEEF, 32, 4);
+    let flat = run_scenario(&Store::memory(), &cfg);
+    for shards in [1usize, 2, 4, 32] {
+        cfg.exec_shards = Some(shards);
+        let sharded = run_scenario(&Store::memory(), &cfg);
+        assert_eq!(virtual_fingerprint(&flat), virtual_fingerprint(&sharded), "shards={shards}");
+        assert_results_bit_identical(&flat, &sharded);
+    }
+}
+
 /// A scenario with guaranteed streaming traffic: a problem pool with
 /// level-4 models and every level-4 request arriving as a stream.
 fn streaming_cfg(exec_workers: Option<usize>) -> ScenarioConfig {

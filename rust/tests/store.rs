@@ -438,6 +438,130 @@ fn level4_campaign_round_trips_the_disk_store() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ---------------------------------------------------------------------------
+// cross-process safety: the ISSUE 10 store-side acceptance properties
+// ---------------------------------------------------------------------------
+
+/// A synthetic, content-stable result for store stress tests: every
+/// writer of key `i` writes these exact bytes, so any interleaving of
+/// racing same-key writers leaves a valid object.
+fn fake_result(i: usize) -> kforge::coordinator::TaskResult {
+    kforge::coordinator::TaskResult {
+        problem_id: format!("stress_{i:02}"),
+        level: kforge::workloads::Level::L1,
+        persona: "openai-gpt-5",
+        state_history: vec!["correct", "correct"],
+        outcome: kforge::metrics::TaskOutcome::correct(1.0 + i as f64 * 0.25),
+        best_iteration: Some(1),
+        baseline_s: 0.5 + i as f64,
+        best_candidate_s: Some(0.125 * (i + 1) as f64),
+    }
+}
+
+#[test]
+fn two_store_instances_on_one_dir_survive_concurrent_writes() {
+    use kforge::store::{Cache, JobKey};
+    // two Cache instances model two shard processes sharing one
+    // --cache-dir; four threads (two per instance) write every key in
+    // skewed orders, so same-key races across instances are guaranteed
+    let dir = tmpdir("two_writers");
+    let a = Cache::at(&dir).unwrap();
+    let b = Cache::at(&dir).unwrap();
+    let n = 24usize;
+    let keys: Vec<JobKey> =
+        (0..n).map(|i| JobKey::from_text(format!("kforge-stress v1\nkey {i}"))).collect();
+    std::thread::scope(|s| {
+        for (w, cache) in [&a, &b, &a, &b].into_iter().enumerate() {
+            let keys = &keys;
+            s.spawn(move || {
+                for i in 0..keys.len() {
+                    let k = (i + w * 7) % keys.len();
+                    let written = cache.put(&keys[k], &fake_result(k));
+                    assert!(written > 0, "atomic persist dropped key {k}");
+                }
+            });
+        }
+    });
+    // a fresh instance (fresh process model, no memory tier) must read
+    // every object back clean and bit-identical to what was written
+    let fresh = Cache::at(&dir).unwrap();
+    for (i, key) in keys.iter().enumerate() {
+        let (got, bytes) = fresh.get(key).unwrap_or_else(|| panic!("key {i} unreadable"));
+        assert!(bytes > 0, "key {i} answered from the wrong tier");
+        let want = fake_result(i);
+        assert_eq!(got.problem_id, want.problem_id);
+        assert_eq!(got.state_history, want.state_history);
+        assert_eq!(got.outcome.speedup.to_bits(), want.outcome.speedup.to_bits());
+        assert_eq!(got.baseline_s.to_bits(), want.baseline_s.to_bits());
+        assert_eq!(
+            got.best_candidate_s.map(f64::to_bits),
+            want.best_candidate_s.map(f64::to_bits)
+        );
+    }
+    // exactly one object per key, and no temp-file litter from the
+    // atomic rename protocol
+    assert_eq!(fresh.disk_entries().unwrap().len(), n);
+    for entry in std::fs::read_dir(dir.join("objects")).unwrap() {
+        let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+        assert!(!name.contains(".tmp."), "orphaned temp file {name}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_racing_a_leased_writer_never_evicts_its_objects() {
+    use kforge::store::{Cache, JobKey, Lease};
+    use std::time::{Duration, SystemTime};
+    // deterministic injected ordering, all through file mtimes: four
+    // "old" objects predate the writer's lease, four "live" ones are
+    // written under it — exactly the state when `kforge cache gc`
+    // races an in-flight shard
+    let dir = tmpdir("gc_race");
+    let cache = Cache::at(&dir).unwrap();
+    let t0 = SystemTime::UNIX_EPOCH + Duration::from_secs(1_000_000);
+    let stamp = |key: &JobKey, t: SystemTime| {
+        let path = dir.join("objects").join(key.hex());
+        std::fs::File::options().write(true).open(path).unwrap().set_modified(t).unwrap();
+    };
+    let old_keys: Vec<JobKey> =
+        (0..4).map(|i| JobKey::from_text(format!("kforge-stress v1\nold {i}"))).collect();
+    for (i, k) in old_keys.iter().enumerate() {
+        cache.put(k, &fake_result(i));
+        stamp(k, t0);
+    }
+    // the writer takes its lease *after* the old objects existed...
+    let lease = Lease::acquire(&dir, "gc-race-writer", "test writer").unwrap();
+    std::fs::File::options()
+        .write(true)
+        .open(lease.path())
+        .unwrap()
+        .set_modified(t0 + Duration::from_secs(100))
+        .unwrap();
+    // ...and streams fresh objects while holding it
+    let live_keys: Vec<JobKey> =
+        (0..4).map(|i| JobKey::from_text(format!("kforge-stress v1\nlive {i}"))).collect();
+    for (i, k) in live_keys.iter().enumerate() {
+        cache.put(k, &fake_result(10 + i));
+        stamp(k, t0 + Duration::from_secs(200));
+    }
+    // gc to zero bytes: only the pre-lease objects may go
+    let (evicted, _kept) = cache.gc(0).unwrap();
+    assert_eq!(evicted, old_keys.len(), "gc crossed the lease floor");
+    let fresh = Cache::at(&dir).unwrap();
+    for (i, k) in live_keys.iter().enumerate() {
+        assert!(fresh.get(k).is_some(), "leased-era object {i} evicted");
+    }
+    for k in &old_keys {
+        assert!(fresh.get(k).is_none(), "pre-lease object survived gc to zero");
+    }
+    // lease released: the same gc now empties the disk tier
+    drop(lease);
+    let (evicted, kept) = Cache::at(&dir).unwrap().gc(0).unwrap();
+    assert_eq!(evicted, live_keys.len());
+    assert_eq!(kept, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn resume_with_untouched_journal_recomputes_nothing() {
     // the no-kill degenerate case: rerunning with --resume after a

@@ -15,8 +15,9 @@
 //! - the exported chrome-trace is well-formed (every `B` matched by an
 //!   `E` on its tid, tids within pool bounds) and round-trips through
 //!   the rocprof frontend into nonzero-fidelity `Evidence`;
-//! - `STORE_SCHEMA` stays at 3: tracing is observational and must not
-//!   invalidate cached results.
+//! - `STORE_SCHEMA` sits at 4 (the v4 tune-key widening for transfer
+//!   seeding); tracing itself is observational and must never be the
+//!   reason the schema moves again.
 
 use kforge::agents::persona::by_name;
 use kforge::coordinator::{
@@ -80,10 +81,14 @@ fn assert_bit_identical(a: &TaskResult, b: &TaskResult) {
 }
 
 #[test]
-fn store_schema_stays_at_3() {
-    // tracing reads results; it never feeds a fingerprinted input, so
-    // cached entries from before this subsystem stay valid
-    assert_eq!(STORE_SCHEMA, 3, "the trace layer must not bump the store schema");
+fn store_schema_stays_at_4() {
+    // tracing reads results; it never feeds a fingerprinted input.
+    // Schema 4 is the tune-key widening (transfer flag + family keys)
+    // that shipped with distributed campaigns — an intentional,
+    // reviewed bump.  If this assertion fires, either revert the
+    // accidental schema change or update this pin alongside a
+    // store-format rationale in ROADMAP.md.
+    assert_eq!(STORE_SCHEMA, 4, "the store schema moved without review");
 }
 
 #[test]
